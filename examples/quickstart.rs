@@ -1,0 +1,49 @@
+//! Quickstart: sample an IRI-like latency matrix, build overlays, and
+//! compare diameters — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use dgro::dgro::construct::{best_of_starts, GreedyScorer};
+use dgro::graph::diameter;
+use dgro::latency::Model;
+use dgro::topology::{chord::Chord, kring, paper_k, rapid::Rapid};
+use dgro::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n = 119; // 7 nodes per FABRIC site
+    let k = paper_k(n);
+    let mut rng = Rng::new(42);
+
+    // 1. A latency matrix from the FABRIC-like 17-site model.
+    let w = Model::Fabric.sample(n, &mut rng);
+    println!("sampled {n}-node FABRIC-like matrix; mean latency {:.1} ms",
+             w.mean_offdiag());
+
+    // 2. What deployed systems give you: latency-oblivious overlays.
+    let chord = Chord::build(n, &mut rng).to_graph(&w);
+    let rapid = Rapid::build(n, &mut rng).to_graph(&w);
+    println!("chord  diameter: {:8.1} ms", diameter::diameter(&chord));
+    println!("rapid  diameter: {:8.1} ms", diameter::diameter(&rapid));
+
+    // 3. DGRO: the §V adaptive loop — gossip-measure ρ, swap rings
+    //    toward the right mix for *this* latency distribution.
+    let dgro = dgro::dgro::select::adaptive_krings(&w, k, &mut rng)
+        .to_graph(&w);
+    println!("dgro   diameter: {:8.1} ms  (adaptive §V, max degree {})",
+             diameter::diameter(&dgro), dgro.max_degree());
+
+    // 4. Under the hood that converges to a mostly-shortest hybrid on
+    //    clustered latencies:
+    let hybrid = kring::hybrid_krings(&w, k, 1, &mut rng).to_graph(&w);
+    println!("hybrid diameter: {:8.1} ms (1 random + {} shortest)",
+             diameter::diameter(&hybrid), k - 1);
+
+    // 5. Algorithm-1 construction through a scorer (GreedyScorer here;
+    //    swap in PjrtQnet::from_default_artifacts() for the learned
+    //    policy executing the AOT Pallas kernels).
+    let mut scorer = GreedyScorer;
+    let (rings, g, d) = best_of_starts(&mut scorer, &w, 2, 10, &mut rng)?;
+    println!("2-ring Algorithm-1 build: diameter {d:8.1} ms \
+              ({} rings, max degree {})", rings.len(), g.max_degree());
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""DGRO compile path (build-time only; never imported at runtime).
+
+L2 model + DQN training + AOT export. See ../../DESIGN.md.
+"""

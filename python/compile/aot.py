@@ -1,0 +1,135 @@
+"""AOT export: lower the DGRO Q-network to HLO text for the Rust runtime.
+
+This is the only bridge between the Python build path and the Rust request
+path. For each size bucket N in BUCKETS it lowers
+
+    qnet(theta1..theta10, W, A, deg, vcur) -> (q,)
+
+with the *Pallas* kernels inlined (interpret=True lowers them to plain HLO
+ops) and writes ``artifacts/qnet_{N}.hlo.txt``. Weights are parameters, not
+constants, so Rust hot-swaps trained thetas from qnet_weights.json without
+re-exporting.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 (the version behind
+the published ``xla`` rust crate) rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Also trains (or reuses) the DQN weights and emits meta.json describing the
+artifact set; ``make artifacts`` is a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+
+BUCKETS = (16, 32, 64, 128, 256)
+
+
+def qnet_for_export(*args):
+    """Positional-arg wrapper so the HLO parameter order is canonical:
+
+    params 0..9   = theta1..theta10 (model.PARAM_ORDER)
+    param 10      = W      (N, N)
+    param 11      = A      (N, N)
+    param 12      = deg    (N,)
+    param 13      = vcur   (N,)
+    param 14      = wscale ()   scalar embedding normalizer N*mean(W)
+    param 15      = wmean  ()   scalar head-feature normalizer mean(W)
+                    (both computed on the *unpadded* matrix by Rust so
+                    bucket padding does not change real nodes' Q-values)
+    result        = 1-tuple of (N,) Q-values
+    """
+    leaves = args[:10]
+    W, A, deg, vcur = args[10], args[11], args[12], args[13]
+    wscale, wmean = args[14], args[15]
+    params = model.unflatten_params(leaves)
+    q = model.qnet_forward(params, W, A, deg, vcur, wscale, wmean,
+                           use_pallas=True)
+    return (q,)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export_bucket(n: int, out_path: str) -> int:
+    """Lower the N-bucket Q-net and write HLO text; returns #chars."""
+    p, h = model.EMBED_DIM, model.HIDDEN_DIM
+    shapes = model.param_shapes(p, h)
+    specs = [jax.ShapeDtypeStruct(shapes[name], jnp.float32)
+             for name in model.PARAM_ORDER]
+    specs += [
+        jax.ShapeDtypeStruct((n, n), jnp.float32),  # W
+        jax.ShapeDtypeStruct((n, n), jnp.float32),  # A
+        jax.ShapeDtypeStruct((n,), jnp.float32),    # deg
+        jax.ShapeDtypeStruct((n,), jnp.float32),    # vcur
+        jax.ShapeDtypeStruct((), jnp.float32),      # wscale
+        jax.ShapeDtypeStruct((), jnp.float32),      # wmean
+    ]
+    lowered = jax.jit(qnet_for_export).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--episodes", type=int,
+                    default=int(os.environ.get("DGRO_TRAIN_EPISODES", "400")))
+    ap.add_argument("--train-n", type=int,
+                    default=int(os.environ.get("DGRO_TRAIN_N", "20")))
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse an existing qnet_weights.json")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    weights_path = os.path.join(args.out_dir, "qnet_weights.json")
+    curve_path = os.path.join(args.out_dir, "training_curve.csv")
+
+    if args.skip_train and os.path.exists(weights_path):
+        print(f"reusing {weights_path}")
+    else:
+        print(f"training DQN: N={args.train_n} episodes={args.episodes}")
+        params, curve = train.train(
+            n=args.train_n, episodes=args.episodes, seed=args.seed)
+        train.save_weights(params, weights_path)
+        train.save_curve(curve, curve_path)
+        print(f"wrote {weights_path}")
+
+    meta = {
+        "format": "dgro-artifacts-v1",
+        "embed_dim": model.EMBED_DIM,
+        "hidden_dim": model.HIDDEN_DIM,
+        "n_iters": model.N_ITERS,
+        "param_order": list(model.PARAM_ORDER),
+        "buckets": list(BUCKETS),
+        "hlo": {},
+    }
+    for n in BUCKETS:
+        out_path = os.path.join(args.out_dir, f"qnet_{n}.hlo.txt")
+        size = export_bucket(n, out_path)
+        meta["hlo"][str(n)] = os.path.basename(out_path)
+        print(f"exported N={n}: {size} chars -> {out_path}")
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

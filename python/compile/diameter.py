@@ -1,0 +1,82 @@
+"""Weighted-graph diameter utilities for the DQN reward (build-time only).
+
+The trainer needs D(G_t) after every edge addition (paper SIV-C: reward
+r = D(G_t) - D(G_{t+1}) - alpha * w). During ring construction G_t is a
+growing path, so full Floyd-Warshall every step would be O(N^3) per step;
+instead we keep the pairwise-distance matrix and apply the standard
+single-edge relaxation update, O(N^2) per added edge.
+
+The paper defines D over the *largest connected component* when G_t is
+disconnected; unreached pairs are +inf in the distance matrix and are
+simply excluded from the max.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INF = np.float64(np.inf)
+
+
+def fresh_dist(n: int) -> np.ndarray:
+    """All-pairs distance matrix of the empty graph: inf off-diag, 0 diag."""
+    d = np.full((n, n), INF, dtype=np.float64)
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def add_edge(dist: np.ndarray, u: int, v: int, w: float) -> None:
+    """Relax every pair through the new undirected edge (u, v, w) in place.
+
+    After the update, dist is again the exact APSP matrix of the graph with
+    the edge added: d'(i,j) = min(d(i,j), d(i,u)+w+d(v,j), d(i,v)+w+d(u,j)).
+    """
+    if w >= dist[u, v]:
+        return
+    du = dist[:, u].copy()
+    dv = dist[:, v].copy()
+    via_uv = du[:, None] + (w + dv[None, :])   # i -> u -> v -> j
+    via_vu = dv[:, None] + (w + du[None, :])   # i -> v -> u -> j
+    np.minimum(dist, via_uv, out=dist)
+    np.minimum(dist, via_vu, out=dist)
+
+
+def largest_cc_diameter(dist: np.ndarray) -> float:
+    """Diameter of the largest connected component given APSP ``dist``.
+
+    Components are the equivalence classes of finite distance. Returns 0.0
+    for an edgeless graph (every component is a singleton).
+    """
+    n = dist.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    best_size = 0
+    best_diam = 0.0
+    for s in range(n):
+        if seen[s]:
+            continue
+        members = np.isfinite(dist[s])
+        seen |= members
+        size = int(members.sum())
+        if size < best_size:
+            continue
+        sub = dist[np.ix_(members, members)]
+        diam = float(sub.max()) if size > 1 else 0.0
+        if size > best_size or (size == best_size and diam > best_diam):
+            best_size = size
+            best_diam = diam
+    return best_diam
+
+
+def floyd_warshall(weights: np.ndarray, adj: np.ndarray) -> np.ndarray:
+    """Reference APSP via Floyd-Warshall (tests only; O(N^3)).
+
+    ``adj`` is a 0/1 mask selecting which entries of ``weights`` are edges.
+    """
+    n = weights.shape[0]
+    d = fresh_dist(n)
+    m = adj > 0
+    d[m] = weights[m]
+    np.fill_diagonal(d, 0.0)
+    for k in range(n):
+        np.minimum(d, d[:, k][:, None] + d[k][None, :], out=d)
+    return d

@@ -1,0 +1,10 @@
+"""DGRO Pallas kernels (L1) and their pure-jnp oracle.
+
+``embed.embed_iter`` / ``qhead.qhead`` are the Pallas implementations;
+``ref`` holds the ground-truth jnp versions pytest checks them against.
+"""
+
+from . import embed, qhead, ref  # noqa: F401
+
+embed_iter = embed.embed_iter
+qhead_all = qhead.qhead

@@ -1,0 +1,151 @@
+"""Pallas kernel: one DGRO graph-embedding iteration (paper Eqn 2 / Fig 4).
+
+The paper's Figure 4 reformulates the structure2vec update as dense matrix
+products so it maps onto a systolic matmul unit:
+
+  row 1:  theta2-term  = (A @ mu) @ theta2^T          -- neighbour aggregate
+  row 2:  theta3-term  = R @ theta3^T,
+          R[v] = sum_u relu(W[v, u] * theta4)         -- latency aggregate
+
+This kernel fuses both rows plus the degree term and the outer relu into a
+single pass so ``mu`` stays resident in VMEM across the whole iteration.
+
+TPU mapping (see DESIGN.md "Hardware adaptation"):
+  * grid over row-tiles of size ``block_n``; each program instance owns a
+    (block_n, N) strip of A and W and produces a (block_n, p) strip of mu'.
+  * ``mu`` (N, p) is broadcast to every instance -- at p = 16 padded to the
+    128-lane MXU tile it is a few KiB and fits VMEM trivially.
+  * A_tile @ mu is the MXU-shaped contraction; the relu-gated latency
+    reduction is VPU work expressed as a broadcast-multiply + row reduce.
+
+On this image Pallas runs with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); interpret mode lowers to plain HLO, which is exactly
+what the AOT path in ``aot.py`` serializes for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _latency_agg_kernel(w_ref, t4_ref, out_ref):
+    """R[v] = sum_u relu(W[v, u] * t4) for one row strip (VPU work:
+    broadcast-multiply + relu + row reduce)."""
+    w = w_ref[...]
+    t4 = t4_ref[...]
+    out_ref[...] = jnp.maximum(
+        w[:, :, None] * t4[None, None, :], 0.0).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def latency_agg(W, theta4, *, block_n=None, interpret=True):
+    """Pallas version of ``ref.latency_term_ref`` — the Eqn-2 latency
+    aggregate. Depends only on (W, theta4), so the L2 model computes it
+    ONCE per forward and feeds it to every embedding iteration instead
+    of recomputing the O(N^2 p) reduction T times (EXPERIMENTS.md §Perf,
+    L2 iteration 1)."""
+    n = W.shape[0]
+    p = theta4.shape[0]
+    if block_n is None:
+        block_n = min(n, 128)
+    if n % block_n != 0:
+        raise ValueError(f"block_n={block_n} must divide N={n}")
+    return pl.pallas_call(
+        _latency_agg_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, n), lambda i: (i, 0)),   # W strip
+            pl.BlockSpec(theta4.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        interpret=interpret,
+    )(W, theta4)
+
+
+def _embed_kernel(a_ref, lat_ref, mu_ref, deg_ref,
+                  t1_ref, t2_ref, t3_ref, out_ref):
+    """One row-strip of Eqn (2). Shapes inside the kernel:
+
+      a_ref   (bn, N)  strip of the partial-solution adjacency
+      lat_ref (bn, p)  strip of the precomputed latency aggregate
+      mu_ref  (N, p)   full current embeddings (VMEM-resident)
+      deg_ref (bn,)    strip of the degree feature
+      t*_ref           embedding parameters theta1..theta3
+      out_ref (bn, p)  strip of the next embeddings
+    """
+    a = a_ref[...]
+    lat = lat_ref[...]
+    mu = mu_ref[...]
+    deg = deg_ref[...]
+    t1 = t1_ref[...]
+    t2 = t2_ref[...]
+    t3 = t3_ref[...]
+
+    # MXU contraction: neighbour aggregate for this row strip.
+    neigh = jnp.dot(a, mu, preferred_element_type=jnp.float32)      # (bn, p)
+    pre = (
+        deg[:, None] * t1[None, :]
+        + jnp.dot(neigh, t2.T, preferred_element_type=jnp.float32)
+        + jnp.dot(lat, t3.T, preferred_element_type=jnp.float32)
+    )
+    out_ref[...] = jnp.maximum(pre, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def embed_iter_pre(A, lat, mu, deg, theta1, theta2, theta3,
+                   *, block_n=None, interpret=True):
+    """Pallas-tiled version of ``ref.embed_iter_pre_ref`` (latency
+    aggregate precomputed by ``latency_agg``).
+
+    Args:
+      A: (N, N) float32 partial-solution adjacency.
+      lat: (N, p) float32 from ``latency_agg(W, theta4)``.
+      mu: (N, p) float32 current embeddings.
+      deg: (N,) float32 degree feature.
+      theta1..theta3: Eqn (2) parameters, shapes (p,), (p,p), (p,p).
+      block_n: row-tile size; must divide N. Defaults to min(N, 128) --
+        128 rows keeps the A-strip at N=256 under 128 KiB of VMEM while
+        filling the MXU sublane dimension.
+      interpret: run in Pallas interpret mode (required on CPU PJRT).
+
+    Returns:
+      (N, p) next embeddings, bit-compatible with the jnp oracle.
+    """
+    n, p = mu.shape
+    if block_n is None:
+        block_n = min(n, 128)
+    if n % block_n != 0:
+        raise ValueError(f"block_n={block_n} must divide N={n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _embed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, n), lambda i: (i, 0)),   # A strip
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),   # lat strip
+            pl.BlockSpec((n, p), lambda i: (0, 0)),         # mu (broadcast)
+            pl.BlockSpec((block_n,), lambda i: (i,)),       # deg strip
+            pl.BlockSpec(theta1.shape, lambda i: (0,)),
+            pl.BlockSpec(theta2.shape, lambda i: (0, 0)),
+            pl.BlockSpec(theta3.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        interpret=interpret,
+    )(A, lat, mu, deg, theta1, theta2, theta3)
+
+
+def embed_iter(A, W, mu, deg, theta1, theta2, theta3, theta4,
+               *, block_n=None, interpret=True):
+    """Self-contained Eqn-2 iteration (latency aggregate included) —
+    kept as the kernel-level unit under test vs ``ref.embed_iter_ref``.
+    The L2 model uses ``latency_agg`` + ``embed_iter_pre`` to hoist the
+    aggregate out of the T-iteration loop."""
+    lat = latency_agg(W, theta4, block_n=block_n, interpret=interpret)
+    return embed_iter_pre(A, lat, mu, deg, theta1, theta2, theta3,
+                          block_n=block_n, interpret=interpret)

@@ -1,0 +1,122 @@
+"""Pallas kernel: DGRO Q-head scoring all candidate edges (paper Eqns 3-4).
+
+Given the final embeddings ``mu`` after T structure2vec iterations, this
+kernel scores every candidate edge (v_t -> u) in one shot:
+
+  x_u = [ w(v_t, u), theta5 @ sum_v mu_v, theta6 @ mu_{v_t}, theta7 @ mu_u ]
+  Q_u = theta10^T relu(theta9 relu(theta8 relu(x_u)))
+
+Batching all N candidates turns the per-edge MLP into three (N, .) matmuls,
+which is what keeps Algorithm 1's inner loop off the scalar unit. The two
+state-global features (theta5 @ sum mu, theta6 @ mu_{v_t}) are computed once
+per program instance and fused into the first MLP layer instead of being
+materialized as broadcast columns:
+
+  relu(x) @ theta8^T
+    = relu(w)     * theta8[:, 0]
+    + relu(gsum)  @ theta8[:, 1:p+1]^T      (candidate-independent)
+    + relu(gcur)  @ theta8[:, p+1:2p+1]^T   (candidate-independent)
+    + relu(mu @ theta7^T) @ theta8[:, 2p+1:]^T
+
+so the candidate-independent pieces are rank-1 updates hoisted out of the
+(N, 3p+1) concat. This saves materializing x entirely -- see DESIGN.md
+S7 (L1 structural optimization).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qhead_kernel(mu_ref, wrow_ref, gsum_ref, gcur_ref,
+                  t7_ref, t8_ref, t9_ref, t10_ref, out_ref, *, p):
+    """One candidate-strip of the Q-head.
+
+      mu_ref   (bn, p)  candidate embeddings strip
+      wrow_ref (bn,)    W[v_t, u] strip
+      gsum_ref (p,)     theta5 @ sum_v mu_v   (precomputed, state-global)
+      gcur_ref (p,)     theta6 @ mu_{v_t}     (precomputed, state-global)
+      t8 (h, 3p+1), t9 (h, h), t10 (h,)
+      out_ref  (bn,)    Q-values strip
+    """
+    mu = mu_ref[...]
+    wrow = wrow_ref[...]
+    gsum = gsum_ref[...]
+    gcur = gcur_ref[...]
+    t7 = t7_ref[...]
+    t8 = t8_ref[...]
+    t9 = t9_ref[...]
+    t10 = t10_ref[...]
+
+    g_cand = jnp.dot(mu, t7.T, preferred_element_type=jnp.float32)  # (bn, p)
+
+    # relu(x) @ t8^T with x = [wrow, gsum, gcur, g_cand], gsum/gcur hoisted.
+    w_col = t8[:, 0]                       # (h,)
+    t8_sum = t8[:, 1:p + 1]                # (h, p)
+    t8_cur = t8[:, p + 1:2 * p + 1]        # (h, p)
+    t8_cand = t8[:, 2 * p + 1:]            # (h, p)
+
+    const = t8_sum @ jnp.maximum(gsum, 0.0) + t8_cur @ jnp.maximum(gcur, 0.0)
+    pre1 = (
+        jnp.maximum(wrow, 0.0)[:, None] * w_col[None, :]
+        + jnp.dot(jnp.maximum(g_cand, 0.0), t8_cand.T,
+                  preferred_element_type=jnp.float32)
+        + const[None, :]
+    )                                       # (bn, h)
+    h1 = jnp.maximum(pre1, 0.0)
+    h2 = jnp.maximum(
+        jnp.dot(h1, t9.T, preferred_element_type=jnp.float32), 0.0)
+    out_ref[...] = h2 @ t10
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def qhead(mu, wrow, vcur, theta5, theta6, theta7, theta8, theta9, theta10,
+          *, block_n=None, interpret=True):
+    """Pallas-tiled version of ``ref.qhead_ref``.
+
+    Args:
+      mu:   (N, p) final embeddings.
+      wrow: (N,)   W[v_t] latency row of the cursor node.
+      vcur: (N,)   one-hot cursor (used for mu_{v_t}).
+      theta5..theta10: head parameters (see ref.py for shapes).
+      block_n: candidate-tile size, must divide N (default min(N, 128)).
+      interpret: Pallas interpret mode (required on CPU PJRT).
+
+    Returns:
+      (N,) Q-values, numerically identical to the oracle.
+    """
+    n, p = mu.shape
+    if block_n is None:
+        block_n = min(n, 128)
+    if n % block_n != 0:
+        raise ValueError(f"block_n={block_n} must divide N={n}")
+
+    # State-global features: one matvec each, shared by every tile.
+    musum = mu.sum(axis=0)
+    muv = vcur @ mu
+    gsum = theta5 @ musum
+    gcur = theta6 @ muv
+
+    grid = (n // block_n,)
+    kernel = functools.partial(_qhead_kernel, p=p)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),   # mu strip
+            pl.BlockSpec((block_n,), lambda i: (i,)),       # wrow strip
+            pl.BlockSpec(gsum.shape, lambda i: (0,)),
+            pl.BlockSpec(gcur.shape, lambda i: (0,)),
+            pl.BlockSpec(theta7.shape, lambda i: (0, 0)),
+            pl.BlockSpec(theta8.shape, lambda i: (0, 0)),
+            pl.BlockSpec(theta9.shape, lambda i: (0, 0)),
+            pl.BlockSpec(theta10.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(mu, wrow, gsum, gcur, theta7, theta8, theta9, theta10)

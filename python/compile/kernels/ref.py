@@ -1,0 +1,145 @@
+"""Pure-jnp reference oracle for the DGRO Q-network kernels.
+
+This module is the correctness ground truth for the Pallas kernels in
+``embed.py`` and ``qhead.py``. Every function here is written in plain
+``jax.numpy`` with no Pallas constructs, mirroring Eqns (2)-(4) of the DGRO
+paper (Wu et al., 2024):
+
+  Eqn (2)  mu_v' = relu( theta1 * x_v
+                       + theta2 @ sum_{u in N(v)} mu_u
+                       + theta3 @ sum_u relu(theta4 * w(v, u)) )
+
+  Eqn (3)  x_u = [ w(v_t, u),
+                   theta5 @ sum_v mu_v,
+                   theta6 @ mu_{v_t},
+                   theta7 @ mu_u ]            in R^{3p+1}
+
+  Eqn (4)  Q(S_t, u) = theta10^T relu(theta9 relu(theta8 relu(x_u)))
+
+Conventions (shared with the Pallas kernels and the Rust-native mirror in
+``rust/src/qnet/native.rs`` -- any change here must be mirrored there):
+
+  * ``A``   -- (N, N) float32 adjacency of the partial solution G_t
+               (symmetric 0/1; weighted variants also work).
+  * ``W``   -- (N, N) float32 latency matrix of the complete graph G.
+  * ``deg`` -- (N,)  float32 degree of each node in G_t (the x_v feature).
+  * ``mu``  -- (N, p) float32 node embeddings.
+  * ``vcur``-- (N,)  float32 one-hot of the construction cursor v_t.
+  * theta1 (p,), theta2 (p, p), theta3 (p, p), theta4 (p,),
+    theta5 (p, p), theta6 (p, p), theta7 (p, p),
+    theta8 (h, 3p+1), theta9 (h, h), theta10 (h,).
+
+All matvecs are expressed as ``X @ theta.T`` so a whole (N, p) batch of
+nodes is one matmul -- exactly the formulation of the paper's Figure 4.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def relu(x):
+    """Elementwise max(x, 0) used throughout Eqns (2)-(4)."""
+    return jnp.maximum(x, 0.0)
+
+
+def latency_term_ref(W, theta4):
+    """R[v] = sum_u relu(W[v, u] * theta4)  -- the Eqn (2) third term.
+
+    Args:
+      W: (N, N) latency matrix.
+      theta4: (p,) per-feature latency scale.
+
+    Returns:
+      (N, p) array; row v is the relu-gated latency aggregate for node v.
+    """
+    # (N, N, 1) * (p,) -> (N, N, p) -> sum over u -> (N, p)
+    return relu(W[:, :, None] * theta4[None, None, :]).sum(axis=1)
+
+
+def embed_iter_pre_ref(A, lat, mu, deg, theta1, theta2, theta3):
+    """One structure2vec iteration of Eqn (2) with the latency aggregate
+    ``lat = latency_term_ref(W, theta4)`` precomputed. ``lat`` depends
+    only on (W, theta4), so callers hoist it out of the T-iteration loop
+    (EXPERIMENTS.md §Perf, L2 iteration 1)."""
+    neigh = A @ mu                       # (N, p): sum of neighbour embeddings
+    pre = (
+        deg[:, None] * theta1[None, :]   # theta1 * x_v
+        + neigh @ theta2.T               # theta2 @ sum mu_u
+        + lat @ theta3.T                 # theta3 @ sum relu(theta4 w)
+    )
+    return relu(pre)
+
+
+def embed_iter_ref(A, W, mu, deg, theta1, theta2, theta3, theta4):
+    """One structure2vec iteration of Eqn (2) over every node at once
+    (self-contained form; recomputes the latency aggregate).
+
+    Returns the next (N, p) embedding matrix.
+    """
+    lat = latency_term_ref(W, theta4)    # (N, p)
+    return embed_iter_pre_ref(A, lat, mu, deg, theta1, theta2, theta3)
+
+
+def qhead_ref(mu, wrow, vcur, theta5, theta6, theta7, theta8, theta9, theta10):
+    """Q-scores of *all* N candidate edges (v_t -> u) at once (Eqns 3-4).
+
+    Args:
+      mu:   (N, p) final embeddings after T iterations.
+      wrow: (N,)   latency from the cursor v_t to each candidate, W[v_t].
+      vcur: (N,)   one-hot of v_t.
+
+    Returns:
+      (N,) Q-values; the caller masks visited nodes before argmax.
+    """
+    musum = mu.sum(axis=0)               # (p,)  sum_v mu_v
+    muv = vcur @ mu                      # (p,)  mu_{v_t}
+    g_sum = theta5 @ musum               # (p,)
+    g_cur = theta6 @ muv                 # (p,)
+    g_cand = mu @ theta7.T               # (N, p)  theta7 @ mu_u for all u
+    n = mu.shape[0]
+    x = jnp.concatenate(
+        [
+            wrow[:, None],                        # (N, 1)
+            jnp.broadcast_to(g_sum, (n, g_sum.shape[0])),
+            jnp.broadcast_to(g_cur, (n, g_cur.shape[0])),
+            g_cand,
+        ],
+        axis=1,
+    )                                    # (N, 3p+1)
+    h1 = relu(relu(x) @ theta8.T)        # (N, h)
+    h2 = relu(h1 @ theta9.T)             # (N, h)
+    return h2 @ theta10                  # (N,)
+
+
+def qnet_forward_ref(params, W, A, deg, vcur, wscale=None, wmean=None,
+                     n_iters=3):
+    """Full Q-network forward: T embedding iterations + head.
+
+    ``params`` is the dict produced by ``model.init_params``. Returns (N,)
+    Q-values. This is the oracle for both the Pallas path and the AOT HLO.
+
+    Includes the same scale normalization as ``model.qnet_forward``
+    (W' = W / (N * mean(W))): positive scaling commutes with the Eqn (2)
+    relu gate, keeps the sum-over-N aggregate O(1) per bucket, and makes
+    the net transferable across latency distributions.
+    """
+    n = W.shape[0]
+    p = params["t1"].shape[0]
+    if wscale is None:
+        wscale = jnp.float32(n) * jnp.mean(W) + jnp.float32(1e-8)
+    if wmean is None:
+        wmean = jnp.mean(W) + jnp.float32(1e-8)
+    wrow = (vcur @ W) / wmean
+    W = W / wscale
+    mu = jnp.zeros((n, p), dtype=W.dtype)
+    for _ in range(n_iters):
+        mu = embed_iter_ref(
+            A, W, mu, deg,
+            params["t1"], params["t2"], params["t3"], params["t4"],
+        )
+    return qhead_ref(
+        mu, wrow, vcur,
+        params["t5"], params["t6"], params["t7"],
+        params["t8"], params["t9"], params["t10"],
+    )

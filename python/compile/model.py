@@ -1,0 +1,204 @@
+"""L2: the DGRO Q-network as a JAX model (paper SIV, Eqns 2-4).
+
+Build-time only. Two interchangeable forward paths:
+
+  * ``qnet_forward(params, ..., use_pallas=True)``  -- composes the L1
+    Pallas kernels (interpret mode). This is the path ``aot.py`` lowers to
+    HLO for the Rust runtime, so the kernels end up inside the artifact.
+  * ``use_pallas=False`` -- composes the jnp oracle from ``kernels.ref``;
+    faster to trace, used by the DQN training loop.
+
+pytest asserts the two paths agree to float32 tolerance for every size
+bucket, which is the core L1 correctness signal.
+
+Parameter pytree (all float32):
+  t1 (p,), t2 (p,p), t3 (p,p), t4 (p,)        -- embedding, Eqn 2
+  t5 (p,p), t6 (p,p), t7 (p,p)                -- head features, Eqn 3
+  t8 (h, 3p+1), t9 (h,h), t10 (h,)            -- head MLP, Eqn 4
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import embed, qhead, ref
+
+EMBED_DIM = 16     # p -- paper SVII-B1 uses feature dimension 16
+HIDDEN_DIM = 32    # h -- head MLP width
+N_ITERS = 3        # T -- structure2vec iterations
+
+PARAM_ORDER = ("t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10")
+
+
+def param_shapes(p: int = EMBED_DIM, h: int = HIDDEN_DIM) -> dict:
+    """Canonical shapes for every theta, keyed by PARAM_ORDER name."""
+    return {
+        "t1": (p,),
+        "t2": (p, p),
+        "t3": (p, p),
+        "t4": (p,),
+        "t5": (p, p),
+        "t6": (p, p),
+        "t7": (p, p),
+        "t8": (h, 3 * p + 1),
+        "t9": (h, h),
+        "t10": (h,),
+    }
+
+
+def init_params(key, p: int = EMBED_DIM, h: int = HIDDEN_DIM) -> dict:
+    """Glorot-ish init scaled for relu stacks; float32 throughout."""
+    shapes = param_shapes(p, h)
+    params = {}
+    for name in PARAM_ORDER:
+        key, sub = jax.random.split(key)
+        shape = shapes[name]
+        fan_in = shape[-1] if len(shape) > 1 else shape[0]
+        scale = jnp.sqrt(2.0 / fan_in)
+        params[name] = scale * jax.random.normal(sub, shape, dtype=jnp.float32)
+    return params
+
+
+def flatten_params(params: dict) -> list:
+    """Deterministic list-of-arrays view, order shared with Rust."""
+    return [params[name] for name in PARAM_ORDER]
+
+
+def unflatten_params(leaves) -> dict:
+    return dict(zip(PARAM_ORDER, leaves))
+
+
+def default_wscale(W):
+    """Canonical latency normalizer: N * mean(W) (so rows of W/scale sum
+    to ~1). Computed on the *unpadded* matrix by the Rust caller."""
+    n = W.shape[0]
+    return jnp.float32(n) * jnp.mean(W) + jnp.float32(1e-8)
+
+
+def default_wmean(W):
+    """Head-feature normalizer: mean(W) (so the Eqn-3 w(v_t, u) feature
+    is O(1) — dividing it by N like the embedding normalizer would drown
+    the per-candidate signal under the O(1) state features)."""
+    return jnp.mean(W) + jnp.float32(1e-8)
+
+
+def qnet_forward(params, W, A, deg, vcur, wscale=None, wmean=None, *,
+                 n_iters: int = N_ITERS, use_pallas: bool = False):
+    """Q-values for all N candidates at state S_t = (W, A_t, deg, v_t).
+
+    Args:
+      params: the theta pytree.
+      W: (N, N) float32 latency matrix of the complete graph.
+      A: (N, N) float32 adjacency of the partial solution G_t.
+      deg: (N,) float32 degrees in G_t.
+      vcur: (N,) float32 one-hot of the cursor node v_t.
+      wscale: scalar latency normalizer; defaults to N * mean(W).
+        Passed explicitly by the Rust runtime so that a graph padded to a
+        size bucket (pad rows of W/A zeroed, pad nodes masked) produces
+        *identical* Q-values for the real nodes as the unpadded graph —
+        padded zeros keep mu_pad = 0 through every iteration, and the
+        explicit scale removes the only other N-dependence.
+      n_iters: number of embedding iterations T (static).
+      use_pallas: choose the Pallas kernels or the jnp oracle.
+
+    Returns:
+      (N,) float32 Q-values. Visited-node masking is the caller's job
+      (Rust masks with -inf before argmax; the trainer does the same).
+
+    Scale invariance: W is normalized by ``wscale`` (W' = W / (N*mean W)).
+    Positive scaling commutes with the relu gate of Eqn (2), so this
+    preserves the paper's functional form while (a) keeping the
+    sum-over-N latency aggregate O(1) for every size bucket and (b)
+    making the trained net transferable across latency distributions
+    (Uniform{1..10} at train time, FABRIC/Bitnode millisecond scales at
+    deployment). The normalization is part of the exported HLO, so the
+    Rust runtime feeds raw latencies plus the scalar.
+    """
+    n = W.shape[0]
+    p = params["t1"].shape[0]
+    if wscale is None:
+        wscale = default_wscale(W)
+    if wmean is None:
+        wmean = default_wmean(W)
+    # Head feature: w(v_t, u) / mean(W) — O(1) per-candidate signal.
+    wrow = (vcur @ W) / wmean
+    # Embedding input: W / (N * mean(W)) — O(1) sum-over-N aggregates.
+    W = W / wscale
+    mu = jnp.zeros((n, p), dtype=jnp.float32)
+    # The Eqn-2 latency aggregate depends only on (W, theta4): compute
+    # once and reuse across the T iterations (§Perf, L2 iteration 1 —
+    # removes (T-1) * O(N^2 p) redundant work from the lowered HLO).
+    if use_pallas:
+        lat = embed.latency_agg(W, params["t4"])
+        for _ in range(n_iters):
+            mu = embed.embed_iter_pre(
+                A, lat, mu, deg,
+                params["t1"], params["t2"], params["t3"])
+        return qhead.qhead(
+            mu, wrow, vcur,
+            params["t5"], params["t6"], params["t7"],
+            params["t8"], params["t9"], params["t10"])
+    lat = ref.latency_term_ref(W, params["t4"])
+    for _ in range(n_iters):
+        mu = ref.embed_iter_pre_ref(
+            A, lat, mu, deg,
+            params["t1"], params["t2"], params["t3"])
+    return ref.qhead_ref(
+        mu, wrow, vcur,
+        params["t5"], params["t6"], params["t7"],
+        params["t8"], params["t9"], params["t10"])
+
+
+# ---------------------------------------------------------------------------
+# DQN loss / SGD step (Algorithm 2).
+# ---------------------------------------------------------------------------
+
+def td_loss(params, target_params, batch, *, gamma: float):
+    """1-step TD squared loss over a replay batch (paper Eqn 5).
+
+    ``batch`` is a dict of stacked arrays:
+      W (B,N,N), A (B,N,N), deg (B,N), vcur (B,N), action (B,) int32,
+      reward (B,), A_next (B,N,N), deg_next (B,N), vcur_next (B,N),
+      mask_next (B,N) in {0,1} (1 = selectable), done (B,) in {0,1}.
+
+    Target: y = r + gamma * max_u' Q_target(S', u') over selectable u'.
+    """
+    def q_all(p_, W, A, deg, vcur):
+        return qnet_forward(p_, W, A, deg, vcur)
+
+    q_batch = jax.vmap(lambda W, A, d, v: q_all(params, W, A, d, v))
+    qt_batch = jax.vmap(lambda W, A, d, v: q_all(target_params, W, A, d, v))
+
+    q_sa = jnp.take_along_axis(
+        q_batch(batch["W"], batch["A"], batch["deg"], batch["vcur"]),
+        batch["action"][:, None], axis=1)[:, 0]
+
+    q_next = qt_batch(batch["W"], batch["A_next"],
+                      batch["deg_next"], batch["vcur_next"])
+    neg = jnp.float32(-1e9)
+    q_next = jnp.where(batch["mask_next"] > 0, q_next, neg)
+    v_next = jnp.max(q_next, axis=1)
+    # If no selectable successor remains, treat the state as terminal.
+    any_next = jnp.any(batch["mask_next"] > 0, axis=1)
+    v_next = jnp.where(any_next, v_next, 0.0)
+    y = batch["reward"] + gamma * (1.0 - batch["done"]) * v_next
+    y = jax.lax.stop_gradient(y)
+    return jnp.mean((y - q_sa) ** 2)
+
+
+GRAD_CLIP_NORM = 10.0
+
+
+def sgd_step(params, target_params, batch, *, lr: float, gamma: float):
+    """One SGD step on the TD loss with global-norm gradient clipping
+    (TD targets are unbounded early in training; clipping keeps the relu
+    stack from diverging). Returns (new_params, loss)."""
+    loss, grads = jax.value_and_grad(td_loss)(
+        params, target_params, batch, gamma=gamma)
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)))
+    clip = jnp.minimum(1.0, GRAD_CLIP_NORM / (gnorm + 1e-8))
+    new_params = jax.tree_util.tree_map(
+        lambda w, g: w - lr * clip * g, params, grads)
+    return new_params, loss

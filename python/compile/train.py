@@ -1,0 +1,353 @@
+"""DQN training for the DGRO Q-network (paper Algorithm 2, SIV-E).
+
+Build-time only: this script runs once under ``make artifacts`` and emits
+
+  artifacts/qnet_weights.json   -- trained thetas (consumed by Rust)
+  artifacts/training_curve.csv  -- Fig-9 reproduction (epoch, train/test D)
+
+Training setup mirrors SVII-B1 scaled to this image's single CPU core:
+graphs are N-node complete graphs with i.i.d. Uniform{1..10} latencies;
+an episode builds one ring by epsilon-greedy node selection; the reward is
+r = D(G_t) - D(G_{t+1}) - alpha * w(a_t, a_{t+1}); replay memory feeds
+1-step TD updates (model.sgd_step). Epsilon decays linearly, exactly the
+paper's max(1 - epoch/decay, 0.05) schedule.
+
+Incremental APSP (diameter.add_edge) keeps the reward at O(N^2)/step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import diameter, model
+
+
+def make_graph(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Symmetric N x N latency matrix, entries Uniform{1..10}, zero diag."""
+    w = rng.integers(1, 11, size=(n, n)).astype(np.float32)
+    w = np.triu(w, 1)
+    w = w + w.T
+    return w
+
+
+class Episode:
+    """State of one ring-construction episode (environment side)."""
+
+    def __init__(self, W: np.ndarray, start: int, alpha: float):
+        self.W = W
+        self.n = W.shape[0]
+        self.alpha = alpha
+        self.A = np.zeros((self.n, self.n), dtype=np.float32)
+        self.deg = np.zeros(self.n, dtype=np.float32)
+        self.visited = np.zeros(self.n, dtype=bool)
+        self.visited[start] = True
+        self.cur = start
+        self.start = start
+        self.dist = diameter.fresh_dist(self.n)
+        self.diam = 0.0
+        self.order = [start]
+
+    def mask(self) -> np.ndarray:
+        """1.0 where a node is still selectable as the next ring hop."""
+        return (~self.visited).astype(np.float32)
+
+    def vcur(self) -> np.ndarray:
+        v = np.zeros(self.n, dtype=np.float32)
+        v[self.cur] = 1.0
+        return v
+
+    def done(self) -> bool:
+        return bool(self.visited.all())
+
+    def step(self, nxt: int) -> float:
+        """Add edge (cur -> nxt); returns the paper's shaped reward,
+        normalized by the graph's mean latency so Q-value scales are
+        comparable across latency distributions (the forward pass is
+        scale-invariant, so rewards must be too)."""
+        w = float(self.W[self.cur, nxt])
+        self._add(self.cur, nxt)
+        reward_edge = w
+        self.visited[nxt] = True
+        self.cur = nxt
+        self.order.append(nxt)
+        if self.done():
+            # Close the ring back to the start node.
+            reward_edge += float(self.W[self.cur, self.start])
+            self._add(self.cur, self.start)
+        new_diam = diameter.largest_cc_diameter(self.dist)
+        r = (self.diam - new_diam) - self.alpha * reward_edge
+        self.diam = new_diam
+        wbar = float(self.W.sum()) / (self.n * (self.n - 1))
+        return r / max(wbar, 1e-6)
+
+    def _add(self, u: int, v: int) -> None:
+        self.A[u, v] = 1.0
+        self.A[v, u] = 1.0
+        self.deg[u] += 1.0
+        self.deg[v] += 1.0
+        diameter.add_edge(self.dist, u, v, float(self.W[u, v]))
+
+
+class Replay:
+    """Fixed-capacity FIFO replay memory of stacked transitions."""
+
+    def __init__(self, capacity: int, n: int):
+        self.capacity = capacity
+        self.n = n
+        self.size = 0
+        self.pos = 0
+        self.W = np.zeros((capacity, n, n), dtype=np.float32)
+        self.A = np.zeros((capacity, n, n), dtype=np.float32)
+        self.deg = np.zeros((capacity, n), dtype=np.float32)
+        self.vcur = np.zeros((capacity, n), dtype=np.float32)
+        self.action = np.zeros(capacity, dtype=np.int32)
+        self.reward = np.zeros(capacity, dtype=np.float32)
+        self.A_next = np.zeros((capacity, n, n), dtype=np.float32)
+        self.deg_next = np.zeros((capacity, n), dtype=np.float32)
+        self.vcur_next = np.zeros((capacity, n), dtype=np.float32)
+        self.mask_next = np.zeros((capacity, n), dtype=np.float32)
+        self.done = np.zeros(capacity, dtype=np.float32)
+
+    def push(self, **kw) -> None:
+        i = self.pos
+        for name, val in kw.items():
+            getattr(self, name)[i] = val
+        self.pos = (self.pos + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, rng: np.random.Generator, batch: int) -> dict:
+        idx = rng.integers(0, self.size, size=batch)
+        return {
+            name: jnp.asarray(getattr(self, name)[idx])
+            for name in ("W", "A", "deg", "vcur", "action", "reward",
+                         "A_next", "deg_next", "vcur_next", "mask_next",
+                         "done")
+        }
+
+
+def greedy_rollout(params, W: np.ndarray, start: int, alpha: float,
+                   q_fn) -> float:
+    """Build one ring greedily with the current Q-net; returns its diameter."""
+    ep = Episode(W, start, alpha)
+    while not ep.done():
+        q = np.array(q_fn(params, jnp.asarray(W), jnp.asarray(ep.A),
+                            jnp.asarray(ep.deg), jnp.asarray(ep.vcur())))
+        q[ep.visited] = -np.inf
+        ep.step(int(np.argmax(q)))
+    return ep.diam
+
+
+def random_partial_state(rng: np.random.Generator, n: int):
+    """A random mid-construction state (W, A, deg, vcur, visited)."""
+    w = make_graph(rng, n)
+    ep = Episode(w, int(rng.integers(n)), 0.0)
+    steps = int(rng.integers(0, n - 1))
+    for _ in range(steps):
+        cand = np.flatnonzero(~ep.visited)
+        ep.step(int(rng.choice(cand)))
+    return w, ep
+
+
+def warmup(params, steps: int = 1500, n: int = 20, batch: int = 16,
+           lr: float = 3e-4, scale: float = 3.0, seed: int = 11,
+           log=print):
+    """Imitation warm-start: regress Q(S, u) toward the nearest-neighbour
+    heuristic's score -scale * w(v_t, u)/mean(W) on random partial
+    states. After this, greedy rollouts reproduce the shortest-ring
+    heuristic; the DQN phase then fine-tunes toward the diameter
+    objective (the paper's hybrid of human heuristics + RL, SI)."""
+    rng = np.random.default_rng(seed)
+
+    def loss_fn(p, Ws, As, degs, vcurs):
+        def one(W, A, deg, vcur):
+            q = model.qnet_forward(p, W, A, deg, vcur)
+            wrow = vcur @ W
+            wbar = jnp.mean(W) * (W.shape[0] ** 2) / \
+                (W.shape[0] * (W.shape[0] - 1))
+            target = -scale * wrow / wbar
+            return jnp.mean((q - target) ** 2)
+        return jnp.mean(jax.vmap(one)(Ws, As, degs, vcurs))
+
+    @jax.jit
+    def step_fn(p, Ws, As, degs, vcurs):
+        loss, grads = jax.value_and_grad(loss_fn)(p, Ws, As, degs, vcurs)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)))
+        clip = jnp.minimum(1.0, model.GRAD_CLIP_NORM / (gnorm + 1e-8))
+        new_p = jax.tree_util.tree_map(
+            lambda w, g: w - lr * clip * g, p, grads)
+        return new_p, loss
+
+    for step in range(steps):
+        Ws, As, degs, vcurs = [], [], [], []
+        for _ in range(batch):
+            w, ep = random_partial_state(rng, n)
+            Ws.append(w)
+            As.append(ep.A.copy())
+            degs.append(ep.deg.copy())
+            vcurs.append(ep.vcur())
+        params, loss = step_fn(
+            params, jnp.asarray(np.stack(Ws)), jnp.asarray(np.stack(As)),
+            jnp.asarray(np.stack(degs)), jnp.asarray(np.stack(vcurs)))
+        if step % 300 == 0:
+            log(f"warmup {step:5d} loss={float(loss):9.4f}")
+    return params
+
+
+def train(n: int = 20, episodes: int = 400, batch: int = 32,
+          lr: float = 5e-4, gamma: float = 0.99, alpha: float = 0.3,
+          eps_decay: int = 1200, replay_cap: int = 20000,
+          target_sync: int = 50, eval_every: int = 25, eval_graphs: int = 4,
+          n_step: int = 5, warmup_steps: int = 1500, seed: int = 7,
+          log=print) -> tuple:
+    """Run Algorithm 2; returns (params, curve) where curve is a list of
+    (episode, epsilon, train_diam, test_diam, loss) rows.
+
+    Uses n-step returns (Algorithm 2's "if t >= n" line, following Khalil
+    et al. 2017): the stored transition is
+    (S_t, a_t, sum_{i<n} gamma^i r_{t+i}, S_{t+n}), bootstrapped with
+    gamma^n — this propagates the end-of-episode diameter signal through
+    the N-step horizon far faster than 1-step TD."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key)
+    if warmup_steps > 0:
+        params = warmup(params, steps=warmup_steps, n=n, seed=seed, log=log)
+    target = params
+
+    boot_gamma = gamma ** n_step
+    q_fn = jax.jit(lambda p, W, A, d, v: model.qnet_forward(p, W, A, d, v))
+    step_fn = jax.jit(
+        lambda p, t, b: model.sgd_step(p, t, b, lr=lr, gamma=boot_gamma))
+
+    replay = Replay(replay_cap, n)
+    eval_set = [make_graph(rng, n) for _ in range(eval_graphs)]
+    curve = []
+    losses = []
+    t0 = time.time()
+    best_params, best_test = params, float("inf")
+    # After an imitation warm-start the policy is already strong; explore
+    # gently so fine-tuning refines rather than destroys it.
+    eps_max = 0.3 if warmup_steps > 0 else 1.0
+
+    for episode in range(1, episodes + 1):
+        eps = max(eps_max * (1.0 - episode / eps_decay), 0.05)
+        W = make_graph(rng, n)
+        ep = Episode(W, int(rng.integers(n)), alpha)
+        # Sliding window of the last n_step (state, action, reward)s.
+        window = []
+        while not ep.done():
+            state = (ep.A.copy(), ep.deg.copy(), ep.vcur())
+            if rng.random() < eps:
+                cand = np.flatnonzero(~ep.visited)
+                action = int(rng.choice(cand))
+            else:
+                q = np.array(q_fn(params, jnp.asarray(W),
+                                  jnp.asarray(ep.A), jnp.asarray(ep.deg),
+                                  jnp.asarray(ep.vcur())))
+                q[ep.visited] = -np.inf
+                action = int(np.argmax(q))
+            r = ep.step(action)
+            window.append((state, action, r))
+            done_now = ep.done()
+            # Emit the n-step transition whose horizon just completed
+            # (and flush the whole window at episode end).
+            flush = [len(window) - n_step] if not done_now else \
+                range(max(0, len(window) - n_step), len(window))
+            for idx in flush:
+                if idx < 0:
+                    continue
+                (s0, a0, _) = window[idx]
+                ret = 0.0
+                for j, (_, _, rj) in enumerate(window[idx:]):
+                    ret += (gamma ** j) * rj
+                replay.push(
+                    W=W, A=s0[0], deg=s0[1], vcur=s0[2],
+                    action=a0, reward=ret,
+                    A_next=ep.A.copy(), deg_next=ep.deg.copy(),
+                    vcur_next=ep.vcur(), mask_next=ep.mask(),
+                    done=1.0 if done_now else 0.0)
+            if replay.size >= batch:
+                b = replay.sample(rng, batch)
+                params, loss = step_fn(params, target, b)
+                losses.append(float(loss))
+        if episode % target_sync == 0:
+            target = params
+        if episode % eval_every == 0 or episode == episodes:
+            test_d = float(np.mean([
+                greedy_rollout(params, Wt, 0, alpha, q_fn)
+                for Wt in eval_set]))
+            if test_d < best_test:
+                best_test = test_d
+                best_params = params
+            mean_loss = float(np.mean(losses[-200:])) if losses else 0.0
+            curve.append((episode, eps, ep.diam, test_d, mean_loss))
+            log(f"ep {episode:5d} eps={eps:.2f} train_D={ep.diam:6.1f} "
+                f"test_D={test_d:6.1f} loss={mean_loss:9.3f} "
+                f"t={time.time() - t0:6.1f}s")
+    # Return the best-eval snapshot (standard DQN model selection; the
+    # curve still records the full trajectory for Fig 9).
+    return best_params, curve
+
+
+def save_weights(params, path: str) -> None:
+    """JSON weight dump shared with rust/src/qnet/params.rs."""
+    payload = {
+        "format": "dgro-qnet-v1",
+        "embed_dim": model.EMBED_DIM,
+        "hidden_dim": model.HIDDEN_DIM,
+        "n_iters": model.N_ITERS,
+        "params": {
+            name: {
+                "shape": list(params[name].shape),
+                "data": [float(x) for x in np.asarray(params[name]).ravel()],
+            }
+            for name in model.PARAM_ORDER
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+
+def load_weights(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["format"] == "dgro-qnet-v1"
+    return {
+        name: jnp.asarray(
+            np.array(entry["data"], dtype=np.float32).reshape(entry["shape"]))
+        for name, entry in payload["params"].items()
+    }
+
+
+def save_curve(curve, path: str) -> None:
+    with open(path, "w", newline="") as f:
+        wr = csv.writer(f)
+        wr.writerow(["episode", "epsilon", "train_diameter",
+                     "test_diameter", "td_loss"])
+        wr.writerows(curve)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=20)
+    ap.add_argument("--episodes", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--weights-out", default="../artifacts/qnet_weights.json")
+    ap.add_argument("--curve-out", default="../artifacts/training_curve.csv")
+    args = ap.parse_args()
+    params, curve = train(n=args.n, episodes=args.episodes, seed=args.seed)
+    save_weights(params, args.weights_out)
+    save_curve(curve, args.curve_out)
+    print(f"wrote {args.weights_out} and {args.curve_out}")
+
+
+if __name__ == "__main__":
+    main()

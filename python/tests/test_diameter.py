@@ -1,0 +1,75 @@
+"""Incremental-APSP reward substrate: add_edge vs Floyd-Warshall oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from compile import diameter
+
+
+def random_edges(rng, n, m):
+    seen = set()
+    edges = []
+    while len(edges) < m:
+        u, v = rng.integers(0, n, 2)
+        if u == v or (min(u, v), max(u, v)) in seen:
+            continue
+        seen.add((min(u, v), max(u, v)))
+        edges.append((int(u), int(v), float(rng.integers(1, 11))))
+    return edges
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(n=st.integers(4, 24), m_frac=st.floats(0.1, 1.0),
+                  seed=st.integers(0, 2**16))
+def test_incremental_apsp_matches_floyd_warshall(n, m_frac, seed):
+    rng = np.random.default_rng(seed)
+    max_m = n * (n - 1) // 2
+    m = max(1, int(m_frac * max_m))
+    edges = random_edges(rng, n, m)
+
+    dist = diameter.fresh_dist(n)
+    weights = np.zeros((n, n))
+    adj = np.zeros((n, n))
+    for u, v, w in edges:
+        diameter.add_edge(dist, u, v, w)
+        # Keep min weight under accidental parallel proposals.
+        if adj[u, v] == 0 or w < weights[u, v]:
+            weights[u, v] = weights[v, u] = w
+        adj[u, v] = adj[v, u] = 1
+
+    want = diameter.floyd_warshall(weights, adj)
+    finite = np.isfinite(want)
+    np.testing.assert_allclose(dist[finite], want[finite], rtol=0, atol=1e-9)
+    assert np.array_equal(np.isfinite(dist), finite)
+
+
+def test_largest_cc_diameter_picks_largest_component():
+    # Two components: a 3-path (sizes 3, diam 2+3=5) and an edge (size 2).
+    dist = diameter.fresh_dist(5)
+    diameter.add_edge(dist, 0, 1, 2.0)
+    diameter.add_edge(dist, 1, 2, 3.0)
+    diameter.add_edge(dist, 3, 4, 100.0)
+    assert diameter.largest_cc_diameter(dist) == 5.0
+
+
+def test_empty_graph_diameter_zero():
+    dist = diameter.fresh_dist(6)
+    assert diameter.largest_cc_diameter(dist) == 0.0
+
+
+def test_add_edge_no_improvement_is_noop():
+    dist = diameter.fresh_dist(3)
+    diameter.add_edge(dist, 0, 1, 1.0)
+    before = dist.copy()
+    diameter.add_edge(dist, 0, 1, 5.0)  # worse parallel edge
+    np.testing.assert_array_equal(dist, before)
+
+
+def test_ring_diameter_exact():
+    """Unit-weight N-ring has diameter floor(N/2)."""
+    n = 8
+    dist = diameter.fresh_dist(n)
+    for i in range(n):
+        diameter.add_edge(dist, i, (i + 1) % n, 1.0)
+    assert diameter.largest_cc_diameter(dist) == n // 2

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+These tests are the core correctness signal for the compute layer: every
+HLO artifact the Rust runtime executes is built from these kernels, so
+`embed_iter == embed_iter_ref` and `qhead == qhead_ref` (to f32 tolerance)
+is what makes the whole stack trustworthy. Hypothesis sweeps sizes, tile
+splits, and value ranges.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import embed, qhead, ref
+from compile import model
+
+P = model.EMBED_DIM
+H = model.HIDDEN_DIM
+
+
+def rand_params(seed: int, p: int = P, h: int = H):
+    key = jax.random.PRNGKey(seed)
+    return model.init_params(key, p, h)
+
+
+def rand_state(seed: int, n: int):
+    """Random (W, A, deg, vcur, mu): symmetric W>0, path-like A."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(1.0, 10.0, size=(n, n)).astype(np.float32)
+    w = np.triu(w, 1)
+    w = w + w.T
+    a = np.zeros((n, n), dtype=np.float32)
+    order = rng.permutation(n)
+    for i in range(n - 1):
+        u, v = order[i], order[i + 1]
+        a[u, v] = a[v, u] = 1.0
+    deg = a.sum(axis=1).astype(np.float32)
+    vcur = np.zeros(n, dtype=np.float32)
+    vcur[order[-1]] = 1.0
+    mu = rng.normal(size=(n, P)).astype(np.float32)
+    return (jnp.asarray(w), jnp.asarray(a), jnp.asarray(deg),
+            jnp.asarray(vcur), jnp.asarray(mu))
+
+
+@pytest.mark.parametrize("n", [16, 32, 64, 128, 256])
+def test_embed_matches_ref(n):
+    params = rand_params(0)
+    W, A, deg, vcur, mu = rand_state(n, n)
+    got = embed.embed_iter(A, W, mu, deg, params["t1"], params["t2"],
+                           params["t3"], params["t4"])
+    want = ref.embed_iter_ref(A, W, mu, deg, params["t1"], params["t2"],
+                              params["t3"], params["t4"])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,block", [(32, 8), (32, 16), (64, 32), (128, 64)])
+def test_embed_tiling_invariance(n, block):
+    """Result must not depend on the BlockSpec row-tile size."""
+    params = rand_params(1)
+    W, A, deg, vcur, mu = rand_state(n + 1, n)
+    full = embed.embed_iter(A, W, mu, deg, params["t1"], params["t2"],
+                            params["t3"], params["t4"], block_n=n)
+    tiled = embed.embed_iter(A, W, mu, deg, params["t1"], params["t2"],
+                             params["t3"], params["t4"], block_n=block)
+    np.testing.assert_allclose(tiled, full, rtol=1e-5, atol=1e-5)
+
+
+def test_embed_rejects_bad_tile():
+    params = rand_params(2)
+    W, A, deg, vcur, mu = rand_state(3, 32)
+    with pytest.raises(ValueError):
+        embed.embed_iter(A, W, mu, deg, params["t1"], params["t2"],
+                         params["t3"], params["t4"], block_n=7)
+
+
+@pytest.mark.parametrize("n", [16, 32, 64, 128, 256])
+def test_qhead_matches_ref(n):
+    params = rand_params(3)
+    W, A, deg, vcur, mu = rand_state(n + 7, n)
+    wrow = vcur @ W
+    got = qhead.qhead(mu, wrow, vcur, params["t5"], params["t6"],
+                      params["t7"], params["t8"], params["t9"],
+                      params["t10"])
+    want = ref.qhead_ref(mu, wrow, vcur, params["t5"], params["t6"],
+                         params["t7"], params["t8"], params["t9"],
+                         params["t10"])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,block", [(32, 8), (64, 16), (128, 32)])
+def test_qhead_tiling_invariance(n, block):
+    params = rand_params(4)
+    W, A, deg, vcur, mu = rand_state(n + 13, n)
+    wrow = vcur @ W
+    full = qhead.qhead(mu, wrow, vcur, params["t5"], params["t6"],
+                       params["t7"], params["t8"], params["t9"],
+                       params["t10"], block_n=n)
+    tiled = qhead.qhead(mu, wrow, vcur, params["t5"], params["t6"],
+                        params["t7"], params["t8"], params["t9"],
+                        params["t10"], block_n=block)
+    np.testing.assert_allclose(tiled, full, rtol=1e-4, atol=1e-4)
+
+
+def test_latency_term_positive_weights_closed_form():
+    """With all-positive W, R[v,k] collapses to relu(t4[k]) * rowsum(W)[v];
+    the kernel must honour that identity (sanity of the relu gating)."""
+    rng = np.random.default_rng(11)
+    n = 32
+    w = jnp.asarray(rng.uniform(0.5, 5.0, size=(n, n)).astype(np.float32))
+    t4 = jnp.asarray(rng.normal(size=(P,)).astype(np.float32))
+    got = ref.latency_term_ref(w, t4)
+    want = jnp.maximum(t4, 0.0)[None, :] * w.sum(axis=1)[:, None]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    n=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(0.1, 50.0),
+)
+def test_embed_hypothesis_sweep(n, seed, scale):
+    """Property: Pallas == oracle across sizes, seeds, and latency scales."""
+    params = rand_params(seed % 97)
+    W, A, deg, vcur, mu = rand_state(seed, n)
+    W = W * jnp.float32(scale)
+    got = embed.embed_iter(A, W, mu, deg, params["t1"], params["t2"],
+                           params["t3"], params["t4"])
+    want = ref.embed_iter_ref(A, W, mu, deg, params["t1"], params["t2"],
+                              params["t3"], params["t4"])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(n=st.sampled_from([16, 32, 64]), seed=st.integers(0, 2**16))
+def test_qhead_hypothesis_sweep(n, seed):
+    params = rand_params((seed + 1) % 89)
+    W, A, deg, vcur, mu = rand_state(seed, n)
+    wrow = vcur @ W
+    got = qhead.qhead(mu, wrow, vcur, params["t5"], params["t6"],
+                      params["t7"], params["t8"], params["t9"],
+                      params["t10"])
+    want = ref.qhead_ref(mu, wrow, vcur, params["t5"], params["t6"],
+                         params["t7"], params["t8"], params["t9"],
+                         params["t10"])
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_embed_all_zero_state():
+    """Empty partial solution: embedding must still be finite and the
+    theta3 latency term must dominate (A@mu == 0, deg == 0)."""
+    params = rand_params(5)
+    n = 16
+    rng = np.random.default_rng(0)
+    w = rng.uniform(1, 10, size=(n, n)).astype(np.float32)
+    w = np.triu(w, 1)
+    w = jnp.asarray(w + w.T)
+    a = jnp.zeros((n, n), jnp.float32)
+    deg = jnp.zeros((n,), jnp.float32)
+    mu = jnp.zeros((n, P), jnp.float32)
+    out = embed.embed_iter(a, w, mu, deg, params["t1"], params["t2"],
+                           params["t3"], params["t4"])
+    want = ref.embed_iter_ref(a, w, mu, deg, params["t1"], params["t2"],
+                              params["t3"], params["t4"])
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(out).sum()) > 0.0

@@ -1,0 +1,102 @@
+"""DQN trainer smoke + environment invariants (kept cheap for CI)."""
+
+import json
+
+import numpy as np
+
+from compile import model, train
+
+
+def test_make_graph_symmetric_zero_diag():
+    rng = np.random.default_rng(0)
+    w = train.make_graph(rng, 12)
+    assert w.shape == (12, 12)
+    np.testing.assert_array_equal(w, w.T)
+    assert np.all(np.diag(w) == 0)
+    off = w[~np.eye(12, dtype=bool)]
+    assert off.min() >= 1 and off.max() <= 10
+
+
+def test_episode_builds_hamiltonian_ring():
+    rng = np.random.default_rng(1)
+    w = train.make_graph(rng, 10)
+    ep = train.Episode(w, start=3, alpha=0.05)
+    order = [3]
+    while not ep.done():
+        cand = np.flatnonzero(~ep.visited)
+        nxt = int(rng.choice(cand))
+        ep.step(nxt)
+        order.append(nxt)
+    assert sorted(order) == list(range(10))
+    # Every node has degree exactly 2 in a closed ring.
+    np.testing.assert_array_equal(ep.deg, np.full(10, 2.0))
+    assert ep.A.sum() == 2 * 10  # N undirected edges
+    assert ep.diam > 0
+
+
+def test_episode_reward_telescopes_to_final_diameter():
+    """sum of diameter deltas == -D(G_T) (paper SIV-C), modulo the alpha
+    term and the scale normalization (rewards are divided by mean(W) so
+    Q-value scales match the scale-invariant forward pass)."""
+    rng = np.random.default_rng(2)
+    w = train.make_graph(rng, 8)
+    alpha = 0.0
+    ep = train.Episode(w, start=0, alpha=alpha)
+    total = 0.0
+    while not ep.done():
+        cand = np.flatnonzero(~ep.visited)
+        total += ep.step(int(cand[0]))
+    wbar = w.sum() / (8 * 7)
+    assert abs(total * wbar - (0.0 - ep.diam)) < 1e-6
+
+
+def test_replay_fifo_and_sample_shapes():
+    rep = train.Replay(capacity=8, n=4)
+    for i in range(10):
+        rep.push(W=np.full((4, 4), i, np.float32),
+                 A=np.zeros((4, 4), np.float32),
+                 deg=np.zeros(4, np.float32), vcur=np.zeros(4, np.float32),
+                 action=i % 4, reward=float(i),
+                 A_next=np.zeros((4, 4), np.float32),
+                 deg_next=np.zeros(4, np.float32),
+                 vcur_next=np.zeros(4, np.float32),
+                 mask_next=np.ones(4, np.float32), done=0.0)
+    assert rep.size == 8
+    rng = np.random.default_rng(0)
+    batch = rep.sample(rng, 5)
+    assert batch["W"].shape == (5, 4, 4)
+    assert batch["action"].shape == (5,)
+    # FIFO: entries 0 and 1 were overwritten by 8 and 9.
+    assert float(rep.W[0, 0, 0]) == 8.0
+
+
+def test_train_smoke_and_weight_roundtrip(tmp_path):
+    """Tiny run must complete, emit a curve, and the weight JSON must
+    round-trip exactly (this file is what Rust parses)."""
+    params, curve = train.train(
+        n=8, episodes=6, batch=8, eval_every=3, eval_graphs=1,
+        eps_decay=4, seed=0, log=lambda *a, **k: None)
+    assert len(curve) >= 2
+    for ep_i, eps, train_d, test_d, loss in curve:
+        assert np.isfinite(test_d) and test_d > 0
+
+    path = tmp_path / "w.json"
+    train.save_weights(params, str(path))
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["format"] == "dgro-qnet-v1"
+    assert payload["embed_dim"] == model.EMBED_DIM
+    loaded = train.load_weights(str(path))
+    for name in model.PARAM_ORDER:
+        np.testing.assert_allclose(loaded[name], params[name],
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_greedy_rollout_valid_ring():
+    import jax
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    w = train.make_graph(rng, 8)
+    q_fn = jax.jit(lambda p, W, A, d, v: model.qnet_forward(p, W, A, d, v))
+    d = train.greedy_rollout(params, w, 0, 0.05, q_fn)
+    assert np.isfinite(d) and d > 0

@@ -1,0 +1,38 @@
+//! `cargo bench --bench figures` — regenerate every paper figure and
+//! write CSVs under reports/. Full mode by default; honor
+//! DGRO_BENCH_QUICK=1 for a fast pass. (No criterion offline: this is a
+//! plain harness=false bench binary; per-figure wall time is reported.)
+
+use dgro::bench_harness::{run_figure, runner, ALL_FIGURES};
+
+fn main() -> anyhow::Result<()> {
+    dgro::util::logging::init_from_env();
+    let quick = std::env::var("DGRO_BENCH_QUICK").ok().as_deref() == Some("1")
+        // `cargo bench -- quick` also works.
+        || std::env::args().any(|a| a == "quick");
+    let only: Option<usize> = std::env::args()
+        .filter_map(|a| a.strip_prefix("--fig=").and_then(|v| v.parse().ok()))
+        .next();
+
+    println!("DGRO figure bench (quick={quick})");
+    let mut total = 0.0;
+    for fig in ALL_FIGURES {
+        if let Some(f) = only {
+            if f != fig {
+                continue;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        match run_figure(fig, quick) {
+            Ok(tables) => {
+                runner::emit(&tables, "reports")?;
+                let dt = t0.elapsed().as_secs_f64();
+                total += dt;
+                println!("figure {fig:>2}: {dt:8.2}s");
+            }
+            Err(e) => println!("figure {fig:>2}: SKIP ({e})"),
+        }
+    }
+    println!("total: {total:.1}s — CSVs in reports/");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! `cargo bench --bench hotpath` — micro/meso benchmarks of the L3 hot
+//! paths feeding EXPERIMENTS.md §Perf:
+//!
+//!   * APSP/diameter (the inner loop of every experiment and of the GA)
+//!   * ring construction (greedy + native Q-net + PJRT Q-net per step)
+//!   * gossip measurement round
+//!   * broadcast simulation
+//!   * GA evaluation throughput
+//!
+//! Statistical harness from util::timer/stats (no criterion offline).
+
+use dgro::dgro::construct::{build_ring, GreedyScorer};
+use dgro::graph::{apsp, diameter};
+use dgro::gossip::measure::{measure, MeasureConfig};
+use dgro::latency::Model;
+use dgro::qnet::native::NativeQnet;
+use dgro::qnet::params::QnetParams;
+use dgro::qnet::state::State;
+use dgro::qnet::QScorer;
+use dgro::runtime::{ArtifactStore, PjrtQnet};
+use dgro::sim::broadcast::broadcast_times;
+use dgro::topology::genetic::{self, GaConfig};
+use dgro::topology::{paper_k, random_ring};
+use dgro::util::rng::Rng;
+use dgro::util::stats::Summary;
+use dgro::util::timer::time_iters;
+
+fn report(name: &str, samples: &[f64], unit_per_iter: Option<(&str, f64)>) {
+    let s = Summary::of(samples);
+    print!(
+        "{name:<44} mean {:>10.4} ms  p50 {:>10.4}  p99 {:>10.4}",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p99 * 1e3
+    );
+    if let Some((unit, count)) = unit_per_iter {
+        print!("  ({:.1} {unit}/s)", count / s.mean);
+    }
+    println!();
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0xBEEF);
+
+    // --- APSP / diameter at the paper's scales. ------------------------
+    for &n in &[100usize, 300, 1000] {
+        let w = Model::Uniform.sample(n, &mut rng);
+        let k = paper_k(n);
+        let g = dgro::topology::kring::random_krings(n, k, &mut rng)
+            .to_graph(&w);
+        let iters = if n >= 1000 { 3 } else { 20 };
+        let samples = time_iters(2, iters, || diameter::diameter(&g));
+        report(&format!("diameter n={n} k={k}"), &samples, None);
+        let samples = time_iters(2, iters, || apsp::dijkstra(&g, 0));
+        report(&format!("single-source dijkstra n={n}"), &samples, None);
+    }
+
+    // --- Ring construction per scorer. ---------------------------------
+    let n = 120;
+    let w = Model::Fabric.sample(n, &mut rng);
+    let samples = time_iters(2, 10, || {
+        build_ring(&mut GreedyScorer, &w, 0).unwrap()
+    });
+    report("ring construction greedy n=120", &samples,
+           Some(("steps", n as f64)));
+
+    let mut native = NativeQnet::new(
+        ArtifactStore::discover(ArtifactStore::default_dir())
+            .and_then(|s| s.load_params())
+            .unwrap_or_else(|_| QnetParams::synthetic(16, 32, 7)),
+    );
+    let samples = time_iters(1, 5, || {
+        build_ring(&mut native, &w, 0).unwrap()
+    });
+    report("ring construction native-qnet n=120", &samples,
+           Some(("steps", n as f64)));
+
+    // Single-step scoring latency (the Algorithm-1 inner loop).
+    let st = State::new(&w, 0);
+    let samples = time_iters(2, 20, || native.score(&st).unwrap());
+    report("qnet score (native) n=120", &samples, None);
+
+    match ArtifactStore::discover(ArtifactStore::default_dir())
+        .and_then(PjrtQnet::new)
+    {
+        Ok(mut pjrt) => {
+            // Warm the executable cache, then measure steady state.
+            let _ = pjrt.score(&st).unwrap();
+            let samples = time_iters(2, 20, || pjrt.score(&st).unwrap());
+            report("qnet score (pjrt AOT HLO) n=120", &samples, None);
+            let samples = time_iters(0, 3, || {
+                build_ring(&mut pjrt, &w, 0).unwrap()
+            });
+            report("ring construction pjrt-qnet n=120", &samples,
+                   Some(("steps", n as f64)));
+        }
+        Err(e) => println!("pjrt benches skipped: {e}"),
+    }
+
+    // --- Gossip + broadcast. -------------------------------------------
+    let g = dgro::topology::kring::random_krings(n, paper_k(n), &mut rng)
+        .to_graph(&w);
+    let mut grng = Rng::new(1);
+    let samples = time_iters(2, 20, || {
+        measure(&w, &g, MeasureConfig::default(), &mut grng)
+    });
+    report("gossip measurement (Alg 3) n=120", &samples, None);
+
+    let proc = vec![1.0; n];
+    let samples = time_iters(2, 50, || broadcast_times(&g, 0, &proc));
+    report("broadcast simulation n=120", &samples, None);
+
+    // --- GA throughput (topology evaluations / s). ----------------------
+    let budget = 300;
+    let mut garng = Rng::new(2);
+    let samples = time_iters(0, 3, || {
+        genetic::search(
+            &w,
+            2,
+            GaConfig {
+                budget,
+                ..Default::default()
+            },
+            &mut garng,
+        )
+    });
+    report("GA search 300 evals n=120 k=2", &samples,
+           Some(("evals", budget as f64)));
+
+    // --- Parallel construction. -----------------------------------------
+    for m in [1usize, 8, 32] {
+        let mut prng = Rng::new(3);
+        let base = random_ring(n, &mut prng);
+        let samples = time_iters(1, 5, || {
+            dgro::dgro::parallel::parallel_ring(
+                &w,
+                &base,
+                dgro::dgro::parallel::ParallelConfig::new(m),
+                |_| Box::new(GreedyScorer),
+            )
+            .unwrap()
+        });
+        report(&format!("parallel ring M={m} n=120"), &samples, None);
+    }
+    Ok(())
+}

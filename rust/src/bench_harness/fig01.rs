@@ -1,0 +1,57 @@
+//! Figure 1 (teaser): "DGRO has low diameter" — state-of-the-art
+//! overlays vs DGRO's adaptive K-ring across network sizes. The paper
+//! shows SOTA diameters up to ~3x DGRO's.
+
+use anyhow::Result;
+
+use crate::latency::Model;
+use crate::metrics::Table;
+use crate::topology::{chord::Chord, perigee, rapid::Rapid, random_ring};
+
+use super::fig_baselines::dgro_adaptive;
+use super::runner::{sweep_diameters, Method, SweepConfig};
+
+pub fn run(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    let methods = vec![
+        Method::new("chord", |w, rng| {
+            Chord::build(w.n(), rng).to_graph(w)
+        }),
+        Method::new("rapid", |w, rng| {
+            Rapid::build(w.n(), rng).to_graph(w)
+        }),
+        Method::new("perigee", |w, rng| {
+            let pg =
+                perigee::build(w, perigee::PerigeeConfig::default(), rng);
+            pg.union(&random_ring(w.n(), rng).to_graph(w))
+        }),
+        Method::new("dgro", |w, rng| dgro_adaptive(w, rng)),
+    ];
+    Ok(vec![sweep_diameters(
+        "Fig 1: SOTA membership overlays vs DGRO (FABRIC latency)",
+        Model::Fabric,
+        &methods,
+        cfg,
+    )?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgro_wins_the_teaser_at_small_scale() {
+        let cfg = SweepConfig {
+            sizes: vec![68],
+            runs: 2,
+            seed: 1,
+            quick: true,
+        };
+        let t = &run(&cfg).unwrap()[0];
+        let row = &t.rows[0];
+        let (chord, rapid, dgro) = (row[1], row[2], row[4]);
+        assert!(
+            dgro <= chord.min(rapid) * 1.05,
+            "dgro {dgro} should beat chord {chord} / rapid {rapid}"
+        );
+    }
+}

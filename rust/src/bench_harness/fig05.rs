@@ -1,0 +1,63 @@
+//! Figure 5: "DGRO helps Chord reduce diameters" — Chord with its
+//! hash-random identifier ring vs the same finger structure over the
+//! shortest ring (10-40% reduction in the paper).
+
+use anyhow::Result;
+
+use crate::latency::Model;
+use crate::metrics::Table;
+use crate::topology::{chord::Chord, shortest_ring};
+
+use super::runner::{sweep_diameters, Method, SweepConfig};
+
+fn methods() -> Vec<Method> {
+    vec![
+        Method::new("chord_random_ring", |w, rng| {
+            Chord::build(w.n(), rng).to_graph(w)
+        }),
+        Method::new("chord_shortest_ring", |w, rng| {
+            let c = Chord::build(w.n(), rng);
+            c.with_base_ring(shortest_ring(w, 0)).to_graph(w)
+        }),
+    ]
+}
+
+pub fn run(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    Ok(vec![
+        sweep_diameters(
+            "Fig 5a: Chord base-ring swap, uniform latency",
+            Model::Uniform,
+            &methods(),
+            cfg,
+        )?,
+        sweep_diameters(
+            "Fig 5b: Chord base-ring swap, FABRIC latency",
+            Model::Fabric,
+            &methods(),
+            cfg,
+        )?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shortest_base_ring_helps_chord_on_fabric() {
+        let cfg = SweepConfig {
+            sizes: vec![85],
+            runs: 3,
+            seed: 9,
+            quick: true,
+        };
+        let t = &run(&cfg).unwrap()[1]; // FABRIC table
+        let row = &t.rows[0];
+        assert!(
+            row[2] < row[1],
+            "chord+shortest {} !< chord {}",
+            row[2],
+            row[1]
+        );
+    }
+}

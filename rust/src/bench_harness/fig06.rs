@@ -1,0 +1,64 @@
+//! Figure 6: "DGRO helps RAPID reduce diameters" — the K-random-ring
+//! expander with one ring swapped to the shortest ring (up to 43-44%
+//! reduction in the paper).
+
+use anyhow::Result;
+
+use crate::latency::Model;
+use crate::metrics::Table;
+use crate::topology::rapid::Rapid;
+
+use super::runner::{sweep_diameters, Method, SweepConfig};
+
+fn methods() -> Vec<Method> {
+    vec![
+        Method::new("rapid_all_random", |w, rng| {
+            Rapid::build(w.n(), rng).to_graph(w)
+        }),
+        Method::new("rapid_one_shortest", |w, rng| {
+            Rapid::build(w.n(), rng)
+                .with_shortest_rings(w, 1)
+                .to_graph(w)
+        }),
+    ]
+}
+
+pub fn run(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    Ok(vec![
+        sweep_diameters(
+            "Fig 6a: RAPID one-shortest swap, uniform latency",
+            Model::Uniform,
+            &methods(),
+            cfg,
+        )?,
+        sweep_diameters(
+            "Fig 6b: RAPID one-shortest swap, FABRIC latency",
+            Model::Fabric,
+            &methods(),
+            cfg,
+        )?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_shortest_ring_helps_rapid_on_fabric() {
+        let cfg = SweepConfig {
+            sizes: vec![85],
+            runs: 3,
+            seed: 13,
+            quick: true,
+        };
+        let t = &run(&cfg).unwrap()[1];
+        let row = &t.rows[0];
+        assert!(
+            row[2] <= row[1],
+            "rapid+shortest {} !<= rapid {}",
+            row[2],
+            row[1]
+        );
+    }
+}

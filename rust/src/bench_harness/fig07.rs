@@ -1,0 +1,70 @@
+//! Figure 7: "DGRO finds better diameters for Perigee" — Perigee's
+//! adaptive NN neighbor sets paired with a random ring vs the shortest
+//! ring. The paper's counter-intuitive result: the *random* ring is the
+//! right companion (the NN-heavy topology needs long-range shortcuts),
+//! with the gap exploding toward N=1000.
+
+use anyhow::Result;
+
+use crate::latency::Model;
+use crate::metrics::Table;
+use crate::topology::{perigee, random_ring, shortest_ring};
+
+use super::runner::{sweep_diameters, Method, SweepConfig};
+
+fn methods() -> Vec<Method> {
+    vec![
+        Method::new("perigee_plus_random", |w, rng| {
+            let pg =
+                perigee::build(w, perigee::PerigeeConfig::default(), rng);
+            pg.union(&random_ring(w.n(), rng).to_graph(w))
+        }),
+        Method::new("perigee_plus_shortest", |w, rng| {
+            let pg =
+                perigee::build(w, perigee::PerigeeConfig::default(), rng);
+            pg.union(&shortest_ring(w, 0).to_graph(w))
+        }),
+    ]
+}
+
+pub fn run(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    Ok(vec![
+        sweep_diameters(
+            "Fig 7a: Perigee ring choice, uniform latency",
+            Model::Uniform,
+            &methods(),
+            cfg,
+        )?,
+        sweep_diameters(
+            "Fig 7b: Perigee ring choice, FABRIC latency",
+            Model::Fabric,
+            &methods(),
+            cfg,
+        )?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_ring_companion_wins_at_scale() {
+        // The crossover may need some size; test at a moderate N where
+        // NN-chains already hurt.
+        let cfg = SweepConfig {
+            sizes: vec![150],
+            runs: 2,
+            seed: 21,
+            quick: true,
+        };
+        let t = &run(&cfg).unwrap()[0]; // uniform
+        let row = &t.rows[0];
+        assert!(
+            row[1] <= row[2] * 1.1,
+            "perigee+random {} should be <= perigee+shortest {}",
+            row[1],
+            row[2]
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! Figures 12 (synthetic) and 16 (FABRIC/Bitnode): ablation on the ring
+//! mix — RAPID's K rings with M random + (K−M) shortest, M swept as a
+//! fraction of K (K = log2 N varies with N, so columns are mix
+//! fractions). The paper's finding: no single M wins everywhere — under
+//! uniform latency all-shortest *blows up* near N=1000, under Gaussian
+//! more shortest monotonically helps — which is exactly why the adaptive
+//! ρ rule exists.
+
+use anyhow::Result;
+
+use crate::latency::Model;
+use crate::metrics::Table;
+use crate::topology::kring::hybrid_krings;
+
+use super::runner::{sweep_diameters, Method, SweepConfig};
+
+/// Mix fractions swept (share of *random* rings among K).
+const FRACTIONS: [(f64, &str); 5] = [
+    (0.0, "random0of_k"),
+    (0.25, "random1q_of_k"),
+    (0.5, "random2q_of_k"),
+    (0.75, "random3q_of_k"),
+    (1.0, "random_all_k"),
+];
+
+fn methods() -> Vec<Method> {
+    FRACTIONS
+        .iter()
+        .map(|&(frac, name)| {
+            Method::new(name, move |w, rng| {
+                let k = crate::topology::paper_k(w.n());
+                let m = ((k as f64) * frac).round() as usize;
+                hybrid_krings(w, k, m.min(k), rng).to_graph(w)
+            })
+        })
+        .collect()
+}
+
+pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    Ok(vec![
+        sweep_diameters(
+            "Fig 12a: M random of K rings, uniform latency",
+            Model::Uniform,
+            &methods(),
+            cfg,
+        )?,
+        sweep_diameters(
+            "Fig 12b: M random of K rings, gaussian latency",
+            Model::Gaussian,
+            &methods(),
+            cfg,
+        )?,
+    ])
+}
+
+pub fn run_realistic(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    Ok(vec![
+        sweep_diameters(
+            "Fig 16a: M random of K rings, FABRIC latency",
+            Model::Fabric,
+            &methods(),
+            cfg,
+        )?,
+        sweep_diameters(
+            "Fig 16b: M random of K rings, Bitnode latency",
+            Model::Bitnode,
+            &methods(),
+            cfg,
+        )?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_columns_cover_mixes() {
+        let cfg = SweepConfig {
+            sizes: vec![32],
+            runs: 1,
+            seed: 5,
+            quick: true,
+        };
+        let tables = run_synthetic(&cfg).unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].header.len(), 6); // n + 5 mixes
+        for t in &tables {
+            for row in &t.rows {
+                assert!(row[1..].iter().all(|&d| d > 0.0));
+            }
+        }
+    }
+}

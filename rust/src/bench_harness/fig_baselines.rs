@@ -1,0 +1,113 @@
+//! Figures 13 (synthetic) and 17 (FABRIC/Bitnode): DGRO's K-ring against
+//! the baseline family. The DGRO line is the ρ-adaptive mix (§V) — the
+//! paper's own scaling argument: beyond ~200 nodes the Q-net hands off
+//! to adaptive heuristic selection (DESIGN.md §5 "scale policy").
+
+use anyhow::Result;
+
+use crate::graph::Graph;
+use crate::latency::{LatencyMatrix, Model};
+use crate::metrics::Table;
+use crate::topology::kring::hybrid_krings;
+use crate::topology::{
+    chord::Chord, paper_k, perigee, rapid::Rapid, random_ring,
+};
+use crate::util::rng::Rng;
+
+use super::runner::{sweep_diameters, Method, SweepConfig};
+
+/// The DGRO line: the §V adaptive loop ([`crate::dgro::select::adaptive_krings`]).
+pub fn dgro_adaptive(w: &LatencyMatrix, rng: &mut Rng) -> Graph {
+    crate::dgro::select::adaptive_krings(w, paper_k(w.n()), rng).to_graph(w)
+}
+
+fn methods() -> Vec<Method> {
+    vec![
+        Method::new("chord", |w, rng| {
+            Chord::build(w.n(), rng).to_graph(w)
+        }),
+        Method::new("rapid", |w, rng| {
+            Rapid::build(w.n(), rng).to_graph(w)
+        }),
+        Method::new("perigee_rand_ring", |w, rng| {
+            let pg =
+                perigee::build(w, perigee::PerigeeConfig::default(), rng);
+            pg.union(&random_ring(w.n(), rng).to_graph(w))
+        }),
+        Method::new("shortest_kring", |w, rng| {
+            hybrid_krings(w, paper_k(w.n()), 0, rng).to_graph(w)
+        }),
+        Method::new("hybrid_half", |w, rng| {
+            let k = paper_k(w.n());
+            hybrid_krings(w, k, k / 2, rng).to_graph(w)
+        }),
+        Method::new("dgro", |w, rng| dgro_adaptive(w, rng)),
+    ]
+}
+
+pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    Ok(vec![
+        sweep_diameters(
+            "Fig 13a: DGRO vs baselines, uniform latency",
+            Model::Uniform,
+            &methods(),
+            cfg,
+        )?,
+        sweep_diameters(
+            "Fig 13b: DGRO vs baselines, gaussian latency",
+            Model::Gaussian,
+            &methods(),
+            cfg,
+        )?,
+    ])
+}
+
+pub fn run_realistic(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    Ok(vec![
+        sweep_diameters(
+            "Fig 17a: DGRO vs baselines, FABRIC latency",
+            Model::Fabric,
+            &methods(),
+            cfg,
+        )?,
+        sweep_diameters(
+            "Fig 17b: DGRO vs baselines, Bitnode latency",
+            Model::Bitnode,
+            &methods(),
+            cfg,
+        )?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgro_adaptive_connected_and_competitive() {
+        let mut rng = Rng::new(11);
+        let w = Model::Fabric.sample(85, &mut rng);
+        let g = dgro_adaptive(&w, &mut rng);
+        assert!(crate::graph::components::is_connected(&g));
+        let d_dgro = crate::graph::diameter::diameter(&g);
+        let d_rapid = crate::graph::diameter::diameter(
+            &Rapid::build(85, &mut rng).to_graph(&w),
+        );
+        assert!(
+            d_dgro <= d_rapid * 1.1,
+            "dgro {d_dgro} vs rapid {d_rapid}"
+        );
+    }
+
+    #[test]
+    fn baseline_table_shape() {
+        let cfg = SweepConfig {
+            sizes: vec![40],
+            runs: 1,
+            seed: 2,
+            quick: true,
+        };
+        let tables = run_synthetic(&cfg).unwrap();
+        assert_eq!(tables[0].header.len(), 7); // n + 6 methods
+    }
+}

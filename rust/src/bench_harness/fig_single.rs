@@ -1,0 +1,176 @@
+//! Figures 11 (synthetic) and 15 (FABRIC/Bitnode): single-heuristic
+//! rings. Solid lines = each protocol with its native (random) ring;
+//! dashed = the ring DGRO's ρ rule selects. The paper's claims: DGRO
+//! moves Chord/RAPID to the shortest ring (big win on clustered
+//! latencies), and keeps/moves Perigee to the *random* ring (the NN-only
+//! topology blows up with size).
+
+use anyhow::Result;
+
+use crate::dgro::select::{decide, RingChoice, SelectConfig};
+use crate::gossip::measure::{measure, MeasureConfig};
+use crate::graph::Graph;
+use crate::latency::{LatencyMatrix, Model};
+use crate::metrics::Table;
+use crate::topology::{
+    chord::Chord, perigee, rapid::Rapid, random_ring, shortest_ring,
+};
+use crate::util::rng::Rng;
+
+use super::runner::{sweep_diameters, Method, SweepConfig};
+
+/// Apply the ρ rule to a built overlay and return the repaired overlay.
+/// `swap` materializes the decision for the given protocol.
+fn dgro_repair(
+    w: &LatencyMatrix,
+    g: Graph,
+    rng: &mut Rng,
+    swap: impl FnOnce(&LatencyMatrix, RingChoice, &mut Rng) -> Graph,
+) -> Graph {
+    let stats = measure(w, &g, MeasureConfig::default(), rng);
+    let choice = decide(&stats, SelectConfig::default());
+    match choice {
+        RingChoice::Keep => g,
+        c => swap(w, c, rng),
+    }
+}
+
+fn chord_method(dgro: bool) -> Method {
+    Method::new(
+        if dgro { "chord_dgro" } else { "chord" },
+        move |w, rng| {
+            let c = Chord::build(w.n(), rng);
+            let g = c.to_graph(w);
+            if !dgro {
+                return g;
+            }
+            dgro_repair(w, g, rng, |w, choice, rng| {
+                let base = match choice {
+                    RingChoice::Shortest => shortest_ring(w, 0),
+                    _ => random_ring(w.n(), rng),
+                };
+                c.with_base_ring(base).to_graph(w)
+            })
+        },
+    )
+}
+
+fn rapid_method(dgro: bool) -> Method {
+    Method::new(
+        if dgro { "rapid_dgro" } else { "rapid" },
+        move |w, rng| {
+            let r = Rapid::build(w.n(), rng);
+            let g = r.to_graph(w);
+            if !dgro {
+                return g;
+            }
+            dgro_repair(w, g, rng, |w, choice, rng| match choice {
+                RingChoice::Shortest => {
+                    r.with_shortest_rings(w, 1).to_graph(w)
+                }
+                _ => Rapid::build(w.n(), rng).to_graph(w),
+            })
+        },
+    )
+}
+
+fn perigee_method(dgro: bool) -> Method {
+    Method::new(
+        if dgro { "perigee_dgro" } else { "perigee" },
+        move |w, rng| {
+            let pg = perigee::build(w, perigee::PerigeeConfig::default(), rng);
+            // Paper: "Perigee is combined with a ring otherwise no
+            // connectivity guarantee." Default companion: shortest ring
+            // (the latency-greedy choice a NN protocol would make).
+            let nn = shortest_ring(w, 0).to_graph(w);
+            let g = pg.union(&nn);
+            if !dgro {
+                return g;
+            }
+            dgro_repair(w, g, rng, |w, choice, rng| {
+                // ρ ≈ 0 for NN-heavy overlays -> DGRO swaps the
+                // companion to a random ring.
+                let companion = match choice {
+                    RingChoice::Random => {
+                        random_ring(w.n(), rng).to_graph(w)
+                    }
+                    _ => shortest_ring(w, 0).to_graph(w),
+                };
+                pg.union(&companion)
+            })
+        },
+    )
+}
+
+fn methods() -> Vec<Method> {
+    vec![
+        chord_method(false),
+        chord_method(true),
+        perigee_method(false),
+        perigee_method(true),
+        rapid_method(false),
+        rapid_method(true),
+    ]
+}
+
+pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    Ok(vec![
+        sweep_diameters(
+            "Fig 11a: single-heuristic rings, uniform latency",
+            Model::Uniform,
+            &methods(),
+            cfg,
+        )?,
+        sweep_diameters(
+            "Fig 11b: single-heuristic rings, gaussian latency",
+            Model::Gaussian,
+            &methods(),
+            cfg,
+        )?,
+    ])
+}
+
+pub fn run_realistic(cfg: &SweepConfig) -> Result<Vec<Table>> {
+    Ok(vec![
+        sweep_diameters(
+            "Fig 15a: single-heuristic rings, FABRIC latency",
+            Model::Fabric,
+            &methods(),
+            cfg,
+        )?,
+        sweep_diameters(
+            "Fig 15b: single-heuristic rings, Bitnode latency",
+            Model::Bitnode,
+            &methods(),
+            cfg,
+        )?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_has_expected_shape() {
+        let cfg = SweepConfig {
+            sizes: vec![40],
+            runs: 1,
+            seed: 3,
+            quick: true,
+        };
+        let tables = run_realistic(&cfg).unwrap();
+        assert_eq!(tables.len(), 2);
+        let t = &tables[0];
+        assert_eq!(t.header.len(), 7);
+        assert_eq!(t.rows.len(), 1);
+        // On FABRIC, DGRO-repaired Chord must not be worse than Chord.
+        let row = &t.rows[0];
+        assert!(
+            row[2] <= row[1] * 1.2,
+            "chord_dgro {} vs chord {}",
+            row[2],
+            row[1]
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Figure-regeneration harness: one module per paper figure (DESIGN.md
+//! §5 maps each to its workload). Every `run_*` returns
+//! [`crate::metrics::Table`]s whose rows mirror the figure's series;
+//! `cargo bench --bench figures` and `dgro figures` drive them and write
+//! CSVs under `reports/`.
+//!
+//! Figures 11/12/13/14 (synthetic) and 15/16/17/18 (FABRIC/Bitnode) are
+//! the same experiment over different latency models, so the sweep logic
+//! lives in [`runner`] and the figure modules bind the models.
+
+pub mod fig01;
+pub mod fig05;
+pub mod fig06;
+pub mod fig07;
+pub mod fig10;
+pub mod fig_ablation; // figs 12 & 16
+pub mod fig_baselines; // figs 13 & 17
+pub mod fig_parallel; // figs 14 & 18
+pub mod fig_single; // figs 11 & 15
+pub mod runner;
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+
+/// Which figures to regenerate.
+pub fn run_figure(fig: usize, quick: bool) -> Result<Vec<Table>> {
+    let sweep = runner::SweepConfig::paper(quick);
+    match fig {
+        1 => fig01::run(&sweep),
+        5 => fig05::run(&sweep),
+        6 => fig06::run(&sweep),
+        7 => fig07::run(&sweep),
+        9 => runner::fig09_passthrough(),
+        10 => fig10::run(quick),
+        11 => fig_single::run_synthetic(&sweep),
+        12 => fig_ablation::run_synthetic(&sweep),
+        13 => fig_baselines::run_synthetic(&sweep),
+        14 => fig_parallel::run_synthetic(&sweep),
+        15 => fig_single::run_realistic(&sweep),
+        16 => fig_ablation::run_realistic(&sweep),
+        17 => fig_baselines::run_realistic(&sweep),
+        18 => fig_parallel::run_realistic(&sweep),
+        other => anyhow::bail!(
+            "no figure {other} in the paper (valid: 1,5,6,7,9,10,11-18)"
+        ),
+    }
+}
+
+/// All figure ids in paper order.
+pub const ALL_FIGURES: [usize; 14] =
+    [1, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18];

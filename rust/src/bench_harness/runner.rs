@@ -1,0 +1,189 @@
+//! Shared sweep machinery for the figure harness.
+//!
+//! Paper protocol (§VII-A3): network sizes [50, 100, ..., 1000], 10
+//! independent runs per size with fresh latency draws, diameter via
+//! exact APSP. `quick` mode (CI / `cargo test`) trims sizes and runs but
+//! keeps every code path.
+
+use anyhow::Result;
+
+use crate::graph::{diameter, Graph};
+use crate::latency::{LatencyMatrix, Model};
+use crate::metrics::Table;
+use crate::util::rng::Rng;
+
+/// Sweep parameters shared by all figures.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub sizes: Vec<usize>,
+    pub runs: usize,
+    pub seed: u64,
+    pub quick: bool,
+}
+
+impl SweepConfig {
+    /// The paper's protocol, or a trimmed version for CI.
+    pub fn paper(quick: bool) -> SweepConfig {
+        if quick {
+            SweepConfig {
+                sizes: vec![50, 100, 200],
+                runs: 2,
+                seed: 20240711,
+                quick,
+            }
+        } else {
+            SweepConfig {
+                sizes: (1..=10).map(|i| i * 100).collect::<Vec<_>>(),
+                runs: 5,
+                seed: 20240711,
+                quick,
+            }
+        }
+    }
+
+    /// Sizes including the 50-node point the paper starts from.
+    pub fn with_small_sizes(mut self) -> SweepConfig {
+        if !self.sizes.contains(&50) {
+            self.sizes.insert(0, 50);
+        }
+        self
+    }
+}
+
+/// A named topology-building method measured by the sweeps: given the
+/// latency matrix and a per-run RNG, produce the overlay graph.
+pub struct Method {
+    pub name: &'static str,
+    pub build: Box<dyn Fn(&LatencyMatrix, &mut Rng) -> Graph + Sync>,
+}
+
+impl Method {
+    pub fn new(
+        name: &'static str,
+        build: impl Fn(&LatencyMatrix, &mut Rng) -> Graph + Sync + 'static,
+    ) -> Method {
+        Method {
+            name,
+            build: Box::new(build),
+        }
+    }
+}
+
+/// Run a sweep: rows = sizes, columns = [n, method0, method1, ...] with
+/// each cell the mean diameter over `runs` fresh latency draws.
+pub fn sweep_diameters(
+    title: &str,
+    model: Model,
+    methods: &[Method],
+    cfg: &SweepConfig,
+) -> Result<Table> {
+    let mut header: Vec<String> = vec!["n".to_string()];
+    header.extend(methods.iter().map(|m| m.name.to_string()));
+    let header_refs: Vec<&str> =
+        header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(title, &header_refs);
+
+    for &n in &cfg.sizes {
+        let mut sums = vec![0.0f64; methods.len()];
+        for run in 0..cfg.runs {
+            let mut rng =
+                Rng::new(cfg.seed ^ (n as u64) << 20 ^ run as u64);
+            let w = model.sample(n, &mut rng);
+            for (mi, m) in methods.iter().enumerate() {
+                let mut mrng = rng.fork(mi as u64);
+                let g = (m.build)(&w, &mut mrng);
+                sums[mi] += diameter::diameter(&g) as f64;
+            }
+        }
+        let mut row = vec![n as f64];
+        row.extend(sums.iter().map(|s| s / cfg.runs as f64));
+        table.row(row);
+    }
+    Ok(table)
+}
+
+/// Fig 9 is produced at build time by the Python trainer; the harness
+/// passes the CSV through so `dgro figures --fig 9` behaves uniformly.
+pub fn fig09_passthrough() -> Result<Vec<Table>> {
+    let path = crate::runtime::ArtifactStore::default_dir()
+        .join("training_curve.csv");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!(
+            "fig 9 curve missing ({e}); run `make artifacts` — the DQN \
+             trainer writes {path:?}"
+        )
+    })?;
+    let mut table = Table::new(
+        "Fig 9: DQN training/test curve (from make artifacts)",
+        &["episode", "epsilon", "train_diameter", "test_diameter",
+          "td_loss"],
+    );
+    for line in text.lines().skip(1) {
+        let cells: Vec<f64> = line
+            .split(',')
+            .map(|c| c.parse().unwrap_or(f64::NAN))
+            .collect();
+        if cells.len() == 5 {
+            table.row(cells);
+        }
+    }
+    Ok(vec![table])
+}
+
+/// Write tables as CSVs under `reports/` and echo markdown to stdout.
+pub fn emit(tables: &[Table], out_dir: &str) -> Result<()> {
+    for t in tables {
+        let slug: String = t
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect::<String>()
+            .to_lowercase();
+        let path = format!("{out_dir}/{}.csv", slug.trim_matches('_'));
+        t.write_csv(&path)?;
+        println!("{}", t.to_markdown());
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::random_ring;
+
+    #[test]
+    fn sweep_produces_full_table() {
+        let cfg = SweepConfig {
+            sizes: vec![20, 30],
+            runs: 2,
+            seed: 1,
+            quick: true,
+        };
+        let methods = [
+            Method::new("random", |w, rng| {
+                random_ring(w.n(), rng).to_graph(w)
+            }),
+            Method::new("shortest", |w, _| {
+                crate::topology::shortest_ring(w, 0).to_graph(w)
+            }),
+        ];
+        let t = sweep_diameters("t", Model::Uniform, &methods, &cfg)
+            .unwrap();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.header, vec!["n", "random", "shortest"]);
+        // Shortest ring beats random ring on average at these sizes.
+        for row in &t.rows {
+            assert!(row[2] < row[1], "NN {} !< random {}", row[2], row[1]);
+        }
+    }
+
+    #[test]
+    fn paper_config_shapes() {
+        let full = SweepConfig::paper(false);
+        assert_eq!(full.sizes.len(), 10);
+        assert_eq!(*full.sizes.last().unwrap(), 1000);
+        let quick = SweepConfig::paper(true);
+        assert!(quick.sizes.len() <= 3);
+    }
+}

@@ -1,0 +1,245 @@
+//! CLI argument parsing substrate (no clap offline — DESIGN.md §3).
+//!
+//! Model: `dgro <subcommand> [--flag value] [--switch]`. Flags are
+//! declared up front so `--help` is generated and unknown flags are
+//! rejected rather than silently ignored.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declaration of one flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None = boolean switch; Some(default) = value flag.
+    pub default: Option<String>,
+}
+
+/// A parsed command line.
+#[derive(Clone, Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'"))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        *self
+            .switches
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not declared"))
+    }
+}
+
+/// A subcommand parser.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    /// Declare a value flag with a default.
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        default: &str,
+        help: &'static str,
+    ) -> Command {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Command {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("dgro {} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            match &f.default {
+                Some(d) => s.push_str(&format!(
+                    "  --{:<18} {} (default: {})\n",
+                    f.name, f.help, d
+                )),
+                None => {
+                    s.push_str(&format!("  --{:<18} {}\n", f.name, f.help))
+                }
+            }
+        }
+        s
+    }
+
+    /// Parse raw args (everything after the subcommand token).
+    pub fn parse(&self, raw: &[String]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut switches = BTreeMap::new();
+        for f in &self.flags {
+            match &f.default {
+                Some(d) => {
+                    values.insert(f.name.to_string(), d.clone());
+                }
+                None => {
+                    switches.insert(f.name.to_string(), false);
+                }
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                // --name=value or --name value or switch.
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                if switches.contains_key(name) {
+                    if inline.is_some() {
+                        bail!("switch --{name} takes no value");
+                    }
+                    switches.insert(name.to_string(), true);
+                } else if values.contains_key(name) {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("--{name} needs a value")
+                                })?
+                                .clone()
+                        }
+                    };
+                    values.insert(name.to_string(), val);
+                } else {
+                    bail!(
+                        "unknown flag --{name} for '{}'\n\n{}",
+                        self.name,
+                        self.usage()
+                    );
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            values,
+            switches,
+            positional,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("build", "build a topology")
+            .flag("nodes", "100", "number of nodes")
+            .flag("model", "uniform", "latency model")
+            .switch("verbose", "chatty output")
+    }
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&s(&[])).unwrap();
+        assert_eq!(a.get("nodes"), "100");
+        assert_eq!(a.get_usize("nodes").unwrap(), 100);
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn values_and_switches() {
+        let a = cmd()
+            .parse(&s(&["--nodes", "50", "--verbose", "--model=fabric"]))
+            .unwrap();
+        assert_eq!(a.get_usize("nodes").unwrap(), 50);
+        assert_eq!(a.get("model"), "fabric");
+        assert!(a.switch("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected_with_usage() {
+        let err = cmd().parse(&s(&["--bogus", "1"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown flag --bogus"));
+        assert!(msg.contains("--nodes"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&s(&["--nodes"])).is_err());
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = cmd().parse(&s(&["out.csv", "--nodes", "10"])).unwrap();
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn bad_number_is_an_error() {
+        let a = cmd().parse(&s(&["--nodes", "ten"])).unwrap();
+        assert!(a.get_usize("nodes").is_err());
+    }
+
+    #[test]
+    fn usage_lists_flags() {
+        let u = cmd().usage();
+        assert!(u.contains("--nodes"));
+        assert!(u.contains("default: 100"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Typed configuration for the coordinator and the figure harness.
+//!
+//! Config files are JSON (parsed by the in-tree [`crate::util::json`]);
+//! every field has a default so an empty object is a valid config, and
+//! unknown keys are rejected (catches typos in experiment scripts).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Full runtime configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    /// Overlay size (number of controller nodes).
+    pub nodes: usize,
+    /// Latency model name (uniform | gaussian | fabric | bitnode).
+    pub model: String,
+    /// Rings per overlay (0 = paper default log2 N).
+    pub k: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// ρ-band half width for adaptive selection.
+    pub epsilon: f64,
+    /// Gossip measurement samples per node (Algorithm 3's K).
+    pub gossip_samples: usize,
+    /// Gossip rounds per measurement period.
+    pub gossip_rounds: usize,
+    /// Partitions for parallel construction (1 = sequential).
+    pub partitions: usize,
+    /// Worker threads.
+    pub threads: usize,
+    /// Artifact directory for the PJRT Q-net.
+    pub artifacts_dir: String,
+    /// Scorer backend: pjrt | native | greedy.
+    pub scorer: String,
+    /// Mean per-node processing delay Δ_v in ms (paper: 1 ms).
+    pub proc_delay_ms: f64,
+    /// Coordinator: re-measure / adapt every this many sim-ms.
+    pub adapt_period_ms: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            nodes: 100,
+            model: "uniform".to_string(),
+            k: 0,
+            seed: 7,
+            epsilon: 0.25,
+            gossip_samples: 4,
+            gossip_rounds: 20,
+            partitions: 1,
+            threads: 1,
+            artifacts_dir: "artifacts".to_string(),
+            scorer: "native".to_string(),
+            proc_delay_ms: 1.0,
+            adapt_period_ms: 500.0,
+        }
+    }
+}
+
+impl Config {
+    /// Parse from JSON text, rejecting unknown keys.
+    pub fn parse(text: &str) -> Result<Config> {
+        let root = json::parse(text).context("parsing config JSON")?;
+        let obj = root.as_obj()?;
+        let mut cfg = Config::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "nodes" => cfg.nodes = val.as_usize()?,
+                "model" => cfg.model = val.as_str()?.to_string(),
+                "k" => cfg.k = val.as_usize()?,
+                "seed" => cfg.seed = val.as_f64()? as u64,
+                "epsilon" => cfg.epsilon = val.as_f64()?,
+                "gossip_samples" => cfg.gossip_samples = val.as_usize()?,
+                "gossip_rounds" => cfg.gossip_rounds = val.as_usize()?,
+                "partitions" => cfg.partitions = val.as_usize()?,
+                "threads" => cfg.threads = val.as_usize()?,
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = val.as_str()?.to_string()
+                }
+                "scorer" => cfg.scorer = val.as_str()?.to_string(),
+                "proc_delay_ms" => cfg.proc_delay_ms = val.as_f64()?,
+                "adapt_period_ms" => cfg.adapt_period_ms = val.as_f64()?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Config::parse(&text)
+    }
+
+    /// Effective K (paper default when k == 0).
+    pub fn effective_k(&self) -> usize {
+        if self.k == 0 {
+            crate::topology::paper_k(self.nodes)
+        } else {
+            self.k
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes < 3 {
+            bail!("nodes must be >= 3, got {}", self.nodes);
+        }
+        if crate::latency::Model::parse(&self.model).is_none() {
+            bail!("unknown latency model '{}'", self.model);
+        }
+        if !(0.0..0.5).contains(&self.epsilon) {
+            bail!("epsilon must be in [0, 0.5), got {}", self.epsilon);
+        }
+        if self.partitions == 0 || self.partitions > self.nodes {
+            bail!(
+                "partitions must be in 1..=nodes, got {}",
+                self.partitions
+            );
+        }
+        if !matches!(self.scorer.as_str(), "pjrt" | "native" | "greedy") {
+            bail!("scorer must be pjrt|native|greedy, got '{}'", self.scorer);
+        }
+        Ok(())
+    }
+
+    /// Serialize (for `dgro config --print` and test round-trips).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::num(self.nodes as f64)),
+            ("model", Json::str(self.model.clone())),
+            ("k", Json::num(self.k as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("epsilon", Json::num(self.epsilon)),
+            ("gossip_samples", Json::num(self.gossip_samples as f64)),
+            ("gossip_rounds", Json::num(self.gossip_rounds as f64)),
+            ("partitions", Json::num(self.partitions as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("scorer", Json::str(self.scorer.clone())),
+            ("proc_delay_ms", Json::num(self.proc_delay_ms)),
+            ("adapt_period_ms", Json::num(self.adapt_period_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_object_is_default() {
+        let cfg = Config::parse("{}").unwrap();
+        assert_eq!(cfg, Config::default());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = Config::parse(
+            r#"{"nodes": 64, "model": "fabric", "scorer": "greedy"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.nodes, 64);
+        assert_eq!(cfg.model, "fabric");
+        assert_eq!(cfg.effective_k(), 6);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = Config::parse(r#"{"nodez": 64}"#).unwrap_err();
+        assert!(err.to_string().contains("nodez"));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(Config::parse(r#"{"nodes": 2}"#).is_err());
+        assert!(Config::parse(r#"{"model": "marsnet"}"#).is_err());
+        assert!(Config::parse(r#"{"epsilon": 0.7}"#).is_err());
+        assert!(Config::parse(r#"{"scorer": "gpt"}"#).is_err());
+        assert!(Config::parse(r#"{"partitions": 0}"#).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = Config::default();
+        cfg.nodes = 42;
+        cfg.model = "bitnode".into();
+        let text = cfg.to_json().to_string();
+        let back = Config::parse(&text).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn effective_k_explicit_wins() {
+        let cfg = Config::parse(r#"{"nodes": 64, "k": 3}"#).unwrap();
+        assert_eq!(cfg.effective_k(), 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! The membership coordinator — the long-running L3 service that ties
+//! DGRO together: it owns the overlay topology, reacts to membership
+//! events (join / leave / crash), runs periodic gossip latency
+//! measurements, and adapts the ring mix per the ρ rule (§V), rebuilding
+//! rings in parallel (§VI) when the overlay drifts.
+
+pub mod service;
+
+pub use service::{Coordinator, CoordinatorReport, ScorerKind};

@@ -1,0 +1,389 @@
+//! Coordinator service: event loop over simulated time.
+//!
+//! The coordinator maintains a K-ring overlay over the alive membership.
+//! Each adaptation period it (1) runs Algorithm 3 gossip measurement,
+//! (2) applies the ρ decision, (3) swaps at most one ring per period
+//! (bounded churn — real systems cannot re-wire everything at once), and
+//! (4) records metrics. Membership events rebuild the node set lazily:
+//! joins/leaves mark the overlay dirty and the next period re-anchors
+//! the rings over the alive set.
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::dgro::select::{decide, materialize, RingChoice, SelectConfig};
+use crate::gossip::measure::{measure, MeasureConfig};
+use crate::graph::{diameter, Graph};
+use crate::latency::{LatencyMatrix, Model};
+use crate::membership::events::{EventTrace, MembershipEvent};
+use crate::membership::list::{MemberState, MembershipList};
+use crate::metrics::Metrics;
+use crate::qnet::native::NativeQnet;
+use crate::qnet::params::QnetParams;
+use crate::qnet::QScorer;
+use crate::runtime::{ArtifactStore, PjrtQnet};
+use crate::topology::kring::KRing;
+use crate::topology::random_ring;
+use crate::util::rng::Rng;
+
+/// Which scorer backend the coordinator constructs rings with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScorerKind {
+    Pjrt,
+    Native,
+    Greedy,
+}
+
+impl ScorerKind {
+    pub fn parse(s: &str) -> Result<ScorerKind> {
+        match s {
+            "pjrt" => Ok(ScorerKind::Pjrt),
+            "native" => Ok(ScorerKind::Native),
+            "greedy" => Ok(ScorerKind::Greedy),
+            other => bail!("unknown scorer '{other}'"),
+        }
+    }
+
+    /// Build a scorer instance. PJRT falls back to Native (with a log
+    /// line) when artifacts are missing so the coordinator can run on a
+    /// fresh checkout.
+    pub fn make(self, cfg: &Config) -> Box<dyn QScorer> {
+        match self {
+            ScorerKind::Greedy => {
+                Box::new(crate::dgro::construct::GreedyScorer)
+            }
+            ScorerKind::Native => {
+                let params = ArtifactStore::discover(&cfg.artifacts_dir)
+                    .and_then(|s| s.load_params())
+                    .unwrap_or_else(|_| {
+                        crate::log_warn!(
+                            "no trained weights; using synthetic params"
+                        );
+                        QnetParams::synthetic(16, 32, cfg.seed)
+                    });
+                Box::new(NativeQnet::new(params))
+            }
+            ScorerKind::Pjrt => {
+                match ArtifactStore::discover(&cfg.artifacts_dir)
+                    .and_then(PjrtQnet::new)
+                {
+                    Ok(q) => Box::new(q),
+                    Err(e) => {
+                        crate::log_warn!(
+                            "pjrt unavailable ({e}); falling back to native"
+                        );
+                        ScorerKind::Native.make(cfg)
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Snapshot returned by [`Coordinator::run`].
+#[derive(Clone, Debug)]
+pub struct CoordinatorReport {
+    /// (sim time, rho, diameter) per adaptation period.
+    pub timeline: Vec<(f64, f64, f32)>,
+    /// Final overlay diameter.
+    pub final_diameter: f32,
+    /// Initial overlay diameter (before any adaptation).
+    pub initial_diameter: f32,
+    /// Ring swaps performed.
+    pub swaps: usize,
+    /// Alive members at the end.
+    pub alive: usize,
+}
+
+/// The coordinator itself.
+pub struct Coordinator {
+    pub cfg: Config,
+    pub w: LatencyMatrix,
+    pub membership: MembershipList,
+    pub krings: KRing,
+    pub metrics: Metrics,
+    rng: Rng,
+    scorer_kind: ScorerKind,
+}
+
+impl Coordinator {
+    /// Bootstrap: sample the latency model, start from the latency-
+    /// oblivious overlay (K random rings — what consistent hashing gives
+    /// every deployed system before DGRO kicks in).
+    pub fn new(cfg: Config) -> Result<Coordinator> {
+        cfg.validate()?;
+        let mut rng = Rng::new(cfg.seed);
+        let model = Model::parse(&cfg.model)
+            .ok_or_else(|| anyhow::anyhow!("bad model {}", cfg.model))?;
+        let w = model.sample(cfg.nodes, &mut rng);
+        let k = cfg.effective_k();
+        let krings = KRing::new(
+            (0..k).map(|_| random_ring(cfg.nodes, &mut rng)).collect(),
+        );
+        let scorer_kind = ScorerKind::parse(&cfg.scorer)?;
+        Ok(Coordinator {
+            membership: MembershipList::full(cfg.nodes),
+            metrics: Metrics::new(),
+            w,
+            krings,
+            rng,
+            scorer_kind,
+            cfg,
+        })
+    }
+
+    /// Current overlay graph over the full node set.
+    pub fn overlay(&self) -> Graph {
+        self.krings.to_graph(&self.w)
+    }
+
+    /// Overlay restricted to alive members (faulty nodes do not relay).
+    pub fn alive_overlay(&self) -> Graph {
+        let mut g = Graph::empty(self.w.n());
+        let alive: std::collections::HashSet<u32> =
+            self.membership.alive().collect();
+        for ring in &self.krings.rings {
+            for (u, v) in ring.edges() {
+                if alive.contains(&u) && alive.contains(&v) {
+                    g.add_edge(
+                        u as usize,
+                        v as usize,
+                        self.w.get(u as usize, v as usize),
+                    );
+                }
+            }
+        }
+        g
+    }
+
+    /// One adaptation period: measure, decide, (maybe) swap one ring.
+    /// Returns (rho, decision).
+    pub fn adapt_once(&mut self) -> Result<(f64, RingChoice)> {
+        let g = self.overlay();
+        let stats = measure(
+            &self.w,
+            &g,
+            MeasureConfig {
+                samples: self.cfg.gossip_samples,
+                rounds: self.cfg.gossip_rounds,
+            },
+            &mut self.rng,
+        );
+        self.metrics.incr("gossip.messages", stats.messages as u64);
+        let choice = decide(
+            &stats,
+            SelectConfig {
+                epsilon: self.cfg.epsilon,
+            },
+        );
+        match choice {
+            RingChoice::Keep => {}
+            choice => {
+                let start = self.rng.index(self.w.n());
+                if let Some(ring) =
+                    materialize(choice, &self.w, start, &mut self.rng)
+                {
+                    let slot = self.pick_swap_slot(choice);
+                    self.krings.replace(slot, ring);
+                    self.metrics.incr("rings.swapped", 1);
+                }
+            }
+        }
+        Ok((stats.rho(), choice))
+    }
+
+    /// Swap policy: when moving toward Shortest, replace a random ring;
+    /// when moving toward Random, replace a shortest-like ring. "Ring
+    /// randomness" is proxied by its circumference (random rings are
+    /// long, NN rings short).
+    fn pick_swap_slot(&mut self, choice: RingChoice) -> usize {
+        let lengths: Vec<f32> = self
+            .krings
+            .rings
+            .iter()
+            .map(|r| r.length(&self.w))
+            .collect();
+        let (mut best, mut best_len) = (0usize, lengths[0]);
+        for (i, &len) in lengths.iter().enumerate() {
+            let better = match choice {
+                RingChoice::Shortest => len > best_len, // replace longest
+                _ => len < best_len,                    // replace shortest
+            };
+            if better {
+                best = i;
+                best_len = len;
+            }
+        }
+        best
+    }
+
+    /// Rebuild one ring with the configured scorer + partitioning (used
+    /// by `dgro build --scorer pjrt` and the examples; the adaptive loop
+    /// itself uses the cheap heuristic rings per §V).
+    pub fn rebuild_ring_dgro(&mut self, slot: usize) -> Result<()> {
+        let base = random_ring(self.w.n(), &mut self.rng);
+        let cfg = crate::dgro::parallel::ParallelConfig {
+            partitions: self.cfg.partitions,
+            threads: self.cfg.threads.max(1),
+        };
+        let kind = self.scorer_kind;
+        let app_cfg = self.cfg.clone();
+        let ring = crate::dgro::parallel::parallel_ring(
+            &self.w,
+            &base,
+            cfg,
+            move |_| kind.make(&app_cfg),
+        )?;
+        self.krings.replace(slot, ring);
+        Ok(())
+    }
+
+    /// Apply one membership event.
+    pub fn apply_event(&mut self, ev: &MembershipEvent) {
+        match *ev {
+            MembershipEvent::Join { time, node } => {
+                let inc = self
+                    .membership
+                    .get(node)
+                    .map(|m| m.incarnation + 1)
+                    .unwrap_or(0);
+                self.membership.apply(node, MemberState::Alive, inc, time);
+                self.metrics.incr("membership.joins", 1);
+            }
+            MembershipEvent::Leave { time, node } => {
+                let inc = self
+                    .membership
+                    .get(node)
+                    .map(|m| m.incarnation)
+                    .unwrap_or(0);
+                self.membership.apply(node, MemberState::Left, inc, time);
+                self.metrics.incr("membership.leaves", 1);
+            }
+            MembershipEvent::Crash { time, node } => {
+                let inc = self
+                    .membership
+                    .get(node)
+                    .map(|m| m.incarnation)
+                    .unwrap_or(0);
+                self.membership.apply(node, MemberState::Faulty, inc, time);
+                self.metrics.incr("membership.crashes", 1);
+            }
+        }
+    }
+
+    /// Run the coordinator over a membership trace for `horizon`
+    /// sim-time, adapting every `cfg.adapt_period_ms`.
+    pub fn run(&mut self, trace: &EventTrace, horizon: f64) -> Result<CoordinatorReport> {
+        let initial_diameter = diameter::diameter(&self.overlay());
+        let mut timeline = Vec::new();
+        let mut swaps0 = self.metrics.counter("rings.swapped");
+        let initial_swaps = swaps0;
+        let mut t = 0.0;
+        let mut ev_idx = 0;
+        while t < horizon {
+            t += self.cfg.adapt_period_ms;
+            while ev_idx < trace.events.len()
+                && trace.events[ev_idx].time() <= t
+            {
+                let ev = trace.events[ev_idx];
+                self.apply_event(&ev);
+                ev_idx += 1;
+            }
+            let (rho, _) = self.adapt_once()?;
+            let d = diameter::diameter(&self.overlay());
+            self.metrics.observe("overlay.diameter", d as f64);
+            self.metrics.observe("overlay.rho", rho);
+            timeline.push((t, rho, d));
+            swaps0 = self.metrics.counter("rings.swapped");
+        }
+        Ok(CoordinatorReport {
+            final_diameter: timeline
+                .last()
+                .map(|&(_, _, d)| d)
+                .unwrap_or(initial_diameter),
+            initial_diameter,
+            swaps: (swaps0 - initial_swaps) as usize,
+            alive: self.membership.count_state(MemberState::Alive),
+            timeline,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::shortest_ring;
+
+    fn cfg(model: &str, nodes: usize) -> Config {
+        let mut c = Config::default();
+        c.model = model.to_string();
+        c.nodes = nodes;
+        c.scorer = "greedy".to_string();
+        c.adapt_period_ms = 100.0;
+        c
+    }
+
+    #[test]
+    fn coordinator_adapts_random_overlay_toward_lower_diameter() {
+        // On FABRIC-like clustered latencies, K random rings have high ρ
+        // -> the coordinator should swap in shortest rings and cut the
+        // diameter (the paper's Fig 5/6 effect at system level).
+        let mut co = Coordinator::new(cfg("fabric", 68)).unwrap();
+        let trace = EventTrace::default();
+        let rep = co.run(&trace, 1000.0).unwrap();
+        assert!(rep.swaps >= 1, "expected at least one swap");
+        assert!(
+            rep.final_diameter < rep.initial_diameter,
+            "diameter {} -> {} should improve",
+            rep.initial_diameter,
+            rep.final_diameter
+        );
+    }
+
+    #[test]
+    fn coordinator_handles_churn() {
+        let mut co = Coordinator::new(cfg("uniform", 40)).unwrap();
+        let mut rng = Rng::new(9);
+        let trace = EventTrace::churn(40, 1000.0, 0.002, &mut rng);
+        let rep = co.run(&trace, 1000.0).unwrap();
+        assert!(rep.alive <= 40);
+        assert!(!rep.timeline.is_empty());
+        // Metrics recorded each period.
+        assert_eq!(
+            co.metrics.series("overlay.diameter").unwrap().values.len(),
+            rep.timeline.len()
+        );
+    }
+
+    #[test]
+    fn alive_overlay_excludes_faulty() {
+        let mut co = Coordinator::new(cfg("uniform", 20)).unwrap();
+        co.apply_event(&MembershipEvent::Crash {
+            time: 1.0,
+            node: 5,
+        });
+        let g = co.alive_overlay();
+        assert_eq!(g.degree(5), 0);
+        assert_eq!(co.membership.count_state(MemberState::Alive), 19);
+    }
+
+    #[test]
+    fn rebuild_ring_dgro_produces_valid_ring() {
+        let mut co = Coordinator::new(cfg("uniform", 24)).unwrap();
+        co.rebuild_ring_dgro(0).unwrap();
+        co.krings.rings[0].validate().unwrap();
+    }
+
+    #[test]
+    fn swap_slot_targets_right_ring() {
+        let mut co = Coordinator::new(cfg("fabric", 34)).unwrap();
+        // Make ring 0 the shortest ring: it must be spared when moving
+        // toward Shortest, and targeted when moving toward Random.
+        let s = shortest_ring(&co.w, 0);
+        co.krings.replace(0, s);
+        let slot_for_shortest = co.pick_swap_slot(RingChoice::Shortest);
+        assert_ne!(slot_for_shortest, 0, "should replace a long ring");
+        let slot_for_random = co.pick_swap_slot(RingChoice::Random);
+        assert_eq!(slot_for_random, 0, "should replace the NN ring");
+    }
+}

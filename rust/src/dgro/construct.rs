@@ -1,0 +1,176 @@
+//! Algorithm 1 — Diameter-Guided Ring Construction.
+//!
+//! From a start node, repeatedly pick the unvisited node with the
+//! highest Q-value (any [`QScorer`] backend: the PJRT artifact, the
+//! native mirror, or the nearest-neighbour [`GreedyScorer`]), then close
+//! the ring. K-ring construction accumulates the adjacency across rings
+//! so later rings see the existing topology (paper §IV-B/§IV-C: the
+//! state is "the latency matrix in conjunction with the topology that
+//! has been constructed up to the current step").
+
+use anyhow::Result;
+
+use crate::graph::ring::Ring;
+use crate::graph::{diameter, Graph};
+use crate::latency::LatencyMatrix;
+use crate::qnet::state::State;
+use crate::qnet::QScorer;
+use crate::util::rng::Rng;
+
+/// Nearest-neighbour scorer through the QScorer interface: score(u) =
+/// −w(v_t, u). Lets the heuristic share every construction/bench path
+/// with the learned scorers.
+pub struct GreedyScorer;
+
+impl QScorer for GreedyScorer {
+    fn score(&mut self, st: &State) -> Result<Vec<f32>> {
+        let row = st.w.row(st.cur);
+        Ok(row.iter().map(|&w| -w).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "greedy-nn"
+    }
+}
+
+/// Build one ring with Algorithm 1 starting at `start`, given an
+/// existing construction state (callers building K rings pass the
+/// accumulated state; fresh callers use [`build_ring`]).
+pub fn build_ring_from_state(
+    scorer: &mut dyn QScorer,
+    st: &mut State,
+    start: usize,
+) -> Result<Ring> {
+    let n = st.n;
+    let mut order = Vec::with_capacity(n);
+    order.push(start as u32);
+    while !st.done() {
+        let q = scorer.score(st)?;
+        let next = st
+            .argmax_unvisited(&q)
+            .expect("unvisited nodes remain");
+        st.step(next);
+        order.push(next as u32);
+    }
+    st.close(start);
+    Ring::new(order)
+}
+
+/// Build a single ring over `w` starting at `start`.
+pub fn build_ring(
+    scorer: &mut dyn QScorer,
+    w: &LatencyMatrix,
+    start: usize,
+) -> Result<Ring> {
+    let mut st = State::new(w, start);
+    build_ring_from_state(scorer, &mut st, start)
+}
+
+/// Build K rings, each seeing the topology accumulated so far. Returns
+/// the rings and the final overlay graph.
+pub fn build_kring(
+    scorer: &mut dyn QScorer,
+    w: &LatencyMatrix,
+    k: usize,
+    starts: &[usize],
+) -> Result<(Vec<Ring>, Graph)> {
+    assert_eq!(starts.len(), k, "one start node per ring");
+    let n = w.n();
+    let mut rings = Vec::with_capacity(k);
+    let mut st = State::new(w, starts[0]);
+    for (i, &start) in starts.iter().enumerate() {
+        if i > 0 {
+            st = st.with_cursor(start);
+        }
+        rings.push(build_ring_from_state(scorer, &mut st, start)?);
+    }
+    let mut g = Graph::empty(n);
+    for ring in &rings {
+        for (u, v) in ring.edges() {
+            g.add_edge(u as usize, v as usize, w.get(u as usize, v as usize));
+        }
+    }
+    Ok((rings, g))
+}
+
+/// §VII-B2: construct `n_starts` K-ring topologies from random distinct
+/// start sets and keep the one with the smallest diameter.
+pub fn best_of_starts(
+    scorer: &mut dyn QScorer,
+    w: &LatencyMatrix,
+    k: usize,
+    n_starts: usize,
+    rng: &mut Rng,
+) -> Result<(Vec<Ring>, Graph, f32)> {
+    assert!(n_starts > 0);
+    let n = w.n();
+    let mut best: Option<(Vec<Ring>, Graph, f32)> = None;
+    for _ in 0..n_starts {
+        let starts: Vec<usize> =
+            (0..k).map(|_| rng.index(n)).collect();
+        let (rings, g) = build_kring(scorer, w, k, &starts)?;
+        let d = diameter::diameter(&g);
+        if best.as_ref().map_or(true, |(_, _, bd)| d < *bd) {
+            best = Some((rings, g, d));
+        }
+    }
+    Ok(best.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components;
+    use crate::latency::synthetic;
+    use crate::qnet::native::NativeQnet;
+    use crate::qnet::params::QnetParams;
+
+    #[test]
+    fn greedy_build_matches_shortest_ring() {
+        let mut rng = Rng::new(1);
+        let w = synthetic::uniform(18, &mut rng);
+        let mut scorer = GreedyScorer;
+        let ring = build_ring(&mut scorer, &w, 4).unwrap();
+        let nn = crate::topology::shortest_ring(&w, 4);
+        assert_eq!(ring.order(), nn.order(),
+            "greedy-through-Algorithm-1 must equal the NN heuristic");
+    }
+
+    #[test]
+    fn build_ring_valid_with_native_qnet() {
+        let mut rng = Rng::new(2);
+        let w = synthetic::uniform(16, &mut rng);
+        let mut scorer = NativeQnet::new(QnetParams::synthetic(16, 32, 7));
+        let ring = build_ring(&mut scorer, &w, 0).unwrap();
+        ring.validate().unwrap();
+        assert_eq!(ring.order()[0], 0);
+    }
+
+    #[test]
+    fn kring_accumulates_and_connects() {
+        let mut rng = Rng::new(3);
+        let w = synthetic::uniform(14, &mut rng);
+        let mut scorer = GreedyScorer;
+        let (rings, g) = build_kring(&mut scorer, &w, 3, &[0, 5, 9]).unwrap();
+        assert_eq!(rings.len(), 3);
+        rings.iter().for_each(|r| r.validate().unwrap());
+        assert!(components::is_connected(&g));
+        assert!(g.max_degree() <= 6);
+        // Second/third rings saw the first ring's adjacency, so they are
+        // typically NOT identical to a fresh greedy ring — just validate
+        // the union's degree/connectivity invariants hold.
+    }
+
+    #[test]
+    fn best_of_starts_is_min_over_runs() {
+        let mut rng = Rng::new(4);
+        let w = synthetic::uniform(15, &mut rng);
+        let mut scorer = GreedyScorer;
+        let (_, _, best_d) =
+            best_of_starts(&mut scorer, &w, 2, 6, &mut rng).unwrap();
+        // Must be at least as good as one specific single-start run.
+        let (_, g1) = build_kring(&mut scorer, &w, 2, &[0, 0]).unwrap();
+        let d1 = diameter::diameter(&g1);
+        assert!(best_d <= d1 + 1e-6, "{best_d} vs single-start {d1}");
+    }
+}

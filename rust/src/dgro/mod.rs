@@ -1,0 +1,18 @@
+//! DGRO proper — the paper's contribution, assembled from three parts:
+//!
+//! * [`construct`] — Algorithm 1: greedy-over-Q ring construction, plus
+//!   multi-start selection (§VII-B2: 10 starts, keep the best diameter)
+//!   and K-ring accumulation (§IV-B).
+//! * [`parallel`]  — Algorithm 4 (§VI): M-partition concurrent
+//!   construction with segment stitching.
+//! * [`select`]    — §V: the ρ-statistic adaptive ring selection driven
+//!   by gossip-measured latencies (Algorithm 3 lives in
+//!   [`crate::gossip`]).
+
+pub mod construct;
+pub mod parallel;
+pub mod select;
+
+pub use construct::{best_of_starts, build_kring, build_ring, GreedyScorer};
+pub use parallel::{parallel_ring, ParallelConfig};
+pub use select::{decide, RingChoice, SelectConfig};

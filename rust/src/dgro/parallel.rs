@@ -1,0 +1,231 @@
+//! Algorithm 4 — Parallel Ring Construction (paper §VI).
+//!
+//! The N nodes are segmented into M partitions by striding a base random
+//! ring (§VII-C4: "a random ring is initially segmented into M
+//! partitions using a same stride, with each partition's starting node
+//! determined by a consistent hash function"). Each partition reorders
+//! its interior concurrently with DGRO (any scorer backend), then the
+//! segments are stitched: the last node of partition i connects to the
+//! first node of partition i+1, closing the global ring. N sequential
+//! steps become N/M per worker.
+
+use anyhow::Result;
+
+use crate::graph::ring::Ring;
+use crate::latency::LatencyMatrix;
+use crate::par::scoped_map;
+use crate::qnet::state::State;
+use crate::qnet::QScorer;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelConfig {
+    /// Number of partitions M.
+    pub partitions: usize,
+    /// OS threads to run partition builds on (≤ M; defaults to M).
+    pub threads: usize,
+}
+
+impl ParallelConfig {
+    pub fn new(partitions: usize) -> ParallelConfig {
+        ParallelConfig {
+            partitions,
+            threads: partitions,
+        }
+    }
+}
+
+/// Split a base permutation into M contiguous segments (sizes differ by
+/// at most 1 — Algorithm 4's "remaining nodes" are folded into the last
+/// partitions rather than appended unordered).
+pub fn partition(base: &[u32], m: usize) -> Vec<Vec<u32>> {
+    let n = base.len();
+    assert!(m >= 1 && m <= n, "need 1 <= M <= N, got M={m}, N={n}");
+    let size = n / m;
+    let extra = n % m;
+    let mut out = Vec::with_capacity(m);
+    let mut pos = 0;
+    for i in 0..m {
+        let len = size + usize::from(i < extra);
+        out.push(base[pos..pos + len].to_vec());
+        pos += len;
+    }
+    debug_assert_eq!(pos, n);
+    out
+}
+
+/// Order one partition's nodes as a path with Algorithm 1 restricted to
+/// the partition (sub-matrix of W), starting from the partition's first
+/// node (its consistent-hash anchor).
+fn order_partition(
+    scorer: &mut dyn QScorer,
+    w: &LatencyMatrix,
+    members: &[u32],
+) -> Result<Vec<u32>> {
+    let k = members.len();
+    if k <= 2 {
+        return Ok(members.to_vec());
+    }
+    // Sub-latency-matrix over the partition members.
+    let sub = LatencyMatrix::from_fn(k, |a, b| {
+        w.get(members[a] as usize, members[b] as usize)
+    });
+    let mut st = State::new(&sub, 0);
+    let mut order = vec![members[0]];
+    while !st.done() {
+        let q = scorer.score(&st)?;
+        let next = st.argmax_unvisited(&q).expect("unvisited remain");
+        st.step(next);
+        order.push(members[next]);
+    }
+    Ok(order)
+}
+
+/// Build a ring over all N nodes with M-way parallel construction.
+///
+/// `base` is the pre-partitioning random ring (consistent-hash order);
+/// `make_scorer` constructs a per-worker scorer (scorers are stateful
+/// and not shareable across threads).
+pub fn parallel_ring<F>(
+    w: &LatencyMatrix,
+    base: &Ring,
+    cfg: ParallelConfig,
+    make_scorer: F,
+) -> Result<Ring>
+where
+    F: Fn(usize) -> Box<dyn QScorer> + Sync,
+{
+    let parts = partition(base.order(), cfg.partitions);
+    let threads = cfg.threads.clamp(1, cfg.partitions);
+    let ordered: Vec<Result<Vec<u32>>> =
+        scoped_map(parts, threads, |idx, members| {
+            let mut scorer = make_scorer(idx);
+            order_partition(scorer.as_mut(), w, &members)
+        });
+    let mut order = Vec::with_capacity(base.n());
+    for seg in ordered {
+        order.extend(seg?);
+    }
+    Ring::new(order)
+}
+
+/// Convenience: random base ring from a seed, greedy scorer per worker.
+pub fn parallel_ring_greedy(
+    w: &LatencyMatrix,
+    cfg: ParallelConfig,
+    rng: &mut Rng,
+) -> Result<Ring> {
+    let base = crate::topology::random_ring(w.n(), rng);
+    parallel_ring(w, &base, cfg, |_| {
+        Box::new(super::construct::GreedyScorer)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dgro::construct::GreedyScorer;
+    use crate::graph::diameter;
+    use crate::latency::{synthetic, LatencyMatrix};
+
+    #[test]
+    fn partition_sizes_balanced() {
+        let base: Vec<u32> = (0..10).collect();
+        let parts = partition(&base, 3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].len(), 4);
+        assert_eq!(parts[1].len(), 3);
+        assert_eq!(parts[2].len(), 3);
+        let flat: Vec<u32> = parts.concat();
+        assert_eq!(flat, base);
+    }
+
+    #[test]
+    fn parallel_ring_is_valid_permutation() {
+        let mut rng = Rng::new(1);
+        let w = synthetic::uniform(40, &mut rng);
+        for m in [1usize, 2, 4, 8] {
+            let ring =
+                parallel_ring_greedy(&w, ParallelConfig::new(m), &mut rng)
+                    .unwrap();
+            ring.validate().unwrap();
+            assert_eq!(ring.n(), 40);
+        }
+    }
+
+    #[test]
+    fn single_partition_equals_sequential() {
+        // Tie-free metric (distinct pairwise latencies) so greedy
+        // tie-breaking cannot differ between index orders.
+        let mut rng = Rng::new(2);
+        let w = LatencyMatrix::from_fn(20, |u, v| {
+            ((u * 31 + v * 17 + u * v) % 97 + 1) as f32
+                + (u + v) as f32 * 0.001
+        });
+        let base = crate::topology::random_ring(20, &mut rng);
+        let par = parallel_ring(
+            &w,
+            &base,
+            ParallelConfig::new(1),
+            |_| Box::new(GreedyScorer),
+        )
+        .unwrap();
+        // M=1: one partition holding the whole base ring, ordered from
+        // base.order()[0] — identical to a sequential greedy build from
+        // that start.
+        let seq = crate::topology::shortest_ring(
+            &w,
+            base.order()[0] as usize,
+        );
+        assert_eq!(par.order(), seq.order());
+    }
+
+    #[test]
+    fn parallel_diameter_stays_close_to_sequential() {
+        // The paper's §VI claim, miniature: partitioned construction
+        // should not blow up the diameter. Allow a generous factor; the
+        // figure harness (fig14/fig18) measures the real curves.
+        let mut rng = Rng::new(3);
+        let w = synthetic::uniform(64, &mut rng);
+        let k = 2;
+        let seq = {
+            let mut scorer = GreedyScorer;
+            let (_, g) = crate::dgro::construct::build_kring(
+                &mut scorer,
+                &w,
+                k,
+                &[0, 32],
+            )
+            .unwrap();
+            diameter::diameter(&g)
+        };
+        let par_d = {
+            let r1 = parallel_ring_greedy(
+                &w,
+                ParallelConfig::new(8),
+                &mut rng,
+            )
+            .unwrap();
+            let r2 = parallel_ring_greedy(
+                &w,
+                ParallelConfig::new(8),
+                &mut rng,
+            )
+            .unwrap();
+            let g = crate::topology::kring::KRing::new(vec![r1, r2])
+                .to_graph(&w);
+            diameter::diameter(&g)
+        };
+        assert!(
+            par_d <= seq * 2.0,
+            "parallel {par_d} vs sequential {seq}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "1 <= M <= N")]
+    fn rejects_more_partitions_than_nodes() {
+        let base: Vec<u32> = (0..4).collect();
+        let _ = partition(&base, 5);
+    }
+}

@@ -1,0 +1,179 @@
+//! §V — Self-adaptive ring topology selection.
+//!
+//! After a gossip measurement period, each node evaluates
+//! ρ = (L̄_local − L̄_min) / (L̄_global − L̄_min):
+//!
+//! * ρ ≤ ε      — neighbors are essentially the nearest nodes: the
+//!                topology is **too clustered** (Perigee-like); add or
+//!                swap in a **random ring** to cut long chains.
+//! * ρ ≥ 1 − ε  — neighbors look like uniform random picks: the
+//!                topology is **too dispersed** (Chord/RAPID-like); add
+//!                or swap in the **shortest ring** to exploit locality.
+//! * otherwise  — keep the current mix.
+//!
+//! (The paper's prose has a typo assigning both conditions to "ρ > ε";
+//! the directions above follow its own examples: "Chord shows a ρ close
+//! to 1. By replacing the random ring with the shortest ring, the
+//! diameter is reduced by 10-40%", and Perigee with ρ ≈ 0 benefits from
+//! the random ring.)
+
+use crate::gossip::measure::GossipStats;
+use crate::graph::ring::Ring;
+use crate::latency::LatencyMatrix;
+use crate::topology::{random_ring, shortest_ring};
+use crate::util::rng::Rng;
+
+/// The adaptive decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RingChoice {
+    /// Topology too clustered — introduce a random ring.
+    Random,
+    /// Topology too dispersed — introduce the shortest ring.
+    Shortest,
+    /// Within the balanced band — leave as is.
+    Keep,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SelectConfig {
+    /// The ε band half-width.
+    pub epsilon: f64,
+}
+
+impl Default for SelectConfig {
+    fn default() -> Self {
+        SelectConfig { epsilon: 0.25 }
+    }
+}
+
+/// Apply the §V decision rule to a measured ρ.
+pub fn decide(stats: &GossipStats, cfg: SelectConfig) -> RingChoice {
+    let rho = stats.rho();
+    if rho <= cfg.epsilon {
+        RingChoice::Random
+    } else if rho >= 1.0 - cfg.epsilon {
+        RingChoice::Shortest
+    } else {
+        RingChoice::Keep
+    }
+}
+
+/// Materialize a decision into a ring (None for Keep). `start` seeds the
+/// shortest ring; the random ring draws from `rng`.
+pub fn materialize(
+    choice: RingChoice,
+    w: &LatencyMatrix,
+    start: usize,
+    rng: &mut Rng,
+) -> Option<Ring> {
+    match choice {
+        RingChoice::Random => Some(random_ring(w.n(), rng)),
+        RingChoice::Shortest => Some(shortest_ring(w, start)),
+        RingChoice::Keep => None,
+    }
+}
+
+/// The full §V loop as a one-shot builder — the "DGRO" line of Figs 1,
+/// 13 and 17: start from the K random rings consistent hashing gives
+/// every deployed system, then repeatedly measure ρ by gossip and swap
+/// one ring toward the decision until the band says Keep (at most K
+/// swaps — bounded churn).
+pub fn adaptive_krings(
+    w: &LatencyMatrix,
+    k: usize,
+    rng: &mut Rng,
+) -> crate::topology::kring::KRing {
+    use crate::gossip::measure::{measure, MeasureConfig};
+    let n = w.n();
+    let mut kr = crate::topology::kring::random_krings(n, k, rng);
+    let mut n_short = 0usize;
+    for _ in 0..k {
+        let g = kr.to_graph(w);
+        let stats = measure(w, &g, MeasureConfig::default(), rng);
+        match decide(&stats, SelectConfig::default()) {
+            RingChoice::Keep => break,
+            RingChoice::Shortest if n_short < k => {
+                // Rings [0..n_short) hold shortest rings, each anchored
+                // at a spread-out start node.
+                let start = (n_short * n) / k.max(1) % n;
+                kr.replace(n_short, shortest_ring(w, start));
+                n_short += 1;
+            }
+            RingChoice::Random if n_short > 0 => {
+                n_short -= 1;
+                kr.replace(n_short, random_ring(n, rng));
+            }
+            _ => break, // saturated in the decision's direction
+        }
+    }
+    kr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gossip::measure::{measure, MeasureConfig};
+    use crate::latency::fabric;
+    use crate::topology::random_ring as rr;
+
+    fn stats(local: f64, global: f64, min: f64) -> GossipStats {
+        GossipStats {
+            local,
+            global,
+            min,
+            messages: 0,
+        }
+    }
+
+    #[test]
+    fn decision_bands() {
+        let cfg = SelectConfig { epsilon: 0.25 };
+        // rho = 0 -> clustered -> Random.
+        assert_eq!(decide(&stats(1.0, 10.0, 1.0), cfg), RingChoice::Random);
+        // rho = 1 -> dispersed -> Shortest.
+        assert_eq!(decide(&stats(10.0, 10.0, 1.0), cfg), RingChoice::Shortest);
+        // rho = 0.5 -> Keep.
+        assert_eq!(decide(&stats(5.5, 10.0, 1.0), cfg), RingChoice::Keep);
+    }
+
+    #[test]
+    fn chord_like_overlay_gets_shortest_ring() {
+        // End-to-end: random ring on clustered latencies -> Shortest.
+        let mut rng = Rng::new(1);
+        let w = fabric::sample(68, &mut rng);
+        let g = rr(68, &mut rng).to_graph(&w);
+        let st = measure(&w, &g, MeasureConfig::default(), &mut rng);
+        assert_eq!(
+            decide(&st, SelectConfig::default()),
+            RingChoice::Shortest,
+            "rho = {}",
+            st.rho()
+        );
+    }
+
+    #[test]
+    fn perigee_like_overlay_gets_random_ring() {
+        let mut rng = Rng::new(2);
+        let w = fabric::sample(68, &mut rng);
+        let g = crate::topology::shortest_ring(&w, 0).to_graph(&w);
+        let st = measure(&w, &g, MeasureConfig::default(), &mut rng);
+        assert_eq!(
+            decide(&st, SelectConfig::default()),
+            RingChoice::Random,
+            "rho = {}",
+            st.rho()
+        );
+    }
+
+    #[test]
+    fn materialize_produces_valid_rings() {
+        let mut rng = Rng::new(3);
+        let w = fabric::sample(30, &mut rng);
+        let r = materialize(RingChoice::Random, &w, 0, &mut rng).unwrap();
+        r.validate().unwrap();
+        let s = materialize(RingChoice::Shortest, &w, 3, &mut rng).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.order()[0], 3);
+        assert!(materialize(RingChoice::Keep, &w, 0, &mut rng).is_none());
+    }
+}

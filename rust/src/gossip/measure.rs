@@ -1,0 +1,287 @@
+//! Algorithm 3 — Gossip-based Latency Measurement (paper §V).
+//!
+//! Each node u samples K of its overlay neighbors (L_local) and K random
+//! nodes from the whole network (L_global, L_min = min of the global
+//! samples), then the per-node triples are averaged across the network
+//! by gossip rounds: every round a node pushes its accumulated triple to
+//! a random neighbor; message counts normalize the sums. After T rounds
+//! each node holds (L̄_local, L̄_global, L̄_min) estimates; we return the
+//! network-wide view (and the exact averages for tests).
+
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MeasureConfig {
+    /// Samples per node (the paper's K).
+    pub samples: usize,
+    /// Gossip rounds before reading the averages (the paper's period T).
+    pub rounds: usize,
+}
+
+impl Default for MeasureConfig {
+    fn default() -> Self {
+        MeasureConfig {
+            samples: 4,
+            rounds: 20,
+        }
+    }
+}
+
+/// Result of Algorithm 3.
+#[derive(Clone, Copy, Debug)]
+pub struct GossipStats {
+    /// Network average of per-node mean latency to sampled *neighbors*.
+    pub local: f64,
+    /// Network average of per-node mean latency to random nodes.
+    pub global: f64,
+    /// Network average of per-node minimum sampled global latency.
+    pub min: f64,
+    /// Gossip messages exchanged (cost accounting).
+    pub messages: usize,
+}
+
+impl GossipStats {
+    /// The §V ratio ρ = (L̄_local − L̄_min) / (L̄_global − L̄_min),
+    /// clamped to [0, 1]. ρ→0: neighbors are as close as the closest
+    /// nodes (clustered); ρ→1: neighbors look like random picks
+    /// (dispersed).
+    pub fn rho(&self) -> f64 {
+        let denom = self.global - self.min;
+        if denom <= 1e-12 {
+            return 0.5; // degenerate metric: treat as balanced
+        }
+        ((self.local - self.min) / denom).clamp(0.0, 1.0)
+    }
+}
+
+/// Run Algorithm 3 over overlay `g` with physical latencies `w`.
+pub fn measure(
+    w: &LatencyMatrix,
+    g: &Graph,
+    cfg: MeasureConfig,
+    rng: &mut Rng,
+) -> GossipStats {
+    let n = g.n();
+    assert_eq!(w.n(), n);
+    assert!(n >= 2);
+    let k = cfg.samples.max(1);
+
+    // Phase 1: per-node sampling (lines 4-10).
+    let mut local = vec![0.0f64; n];
+    let mut global = vec![0.0f64; n];
+    let mut min = vec![0.0f64; n];
+    for u in 0..n {
+        let neigh = g.neighbors(u);
+        if neigh.is_empty() {
+            // Isolated node: local estimate falls back to global draws.
+            local[u] = 0.0;
+        } else {
+            let mut acc = 0.0;
+            for _ in 0..k {
+                let (_, lw) = neigh[rng.index(neigh.len())];
+                acc += lw as f64;
+            }
+            local[u] = acc / k as f64;
+        }
+        let mut acc = 0.0;
+        let mut m = f64::INFINITY;
+        for _ in 0..k {
+            let v = loop {
+                let v = rng.index(n);
+                if v != u {
+                    break v;
+                }
+            };
+            let lw = w.get(u, v) as f64;
+            acc += lw;
+            m = m.min(lw);
+        }
+        global[u] = acc / k as f64;
+        min[u] = m;
+    }
+
+    // Phase 2: gossip aggregation (lines 11-19). Push-based averaging:
+    // each node repeatedly pushes its current (sum, count) accumulator
+    // to a random neighbor; the receiver merges. After T rounds every
+    // accumulator approximates the network average.
+    #[derive(Clone, Copy)]
+    struct Acc {
+        local: f64,
+        global: f64,
+        min: f64,
+        m: f64, // message/weight count
+    }
+    let mut acc: Vec<Acc> = (0..n)
+        .map(|u| Acc {
+            local: local[u],
+            global: global[u],
+            min: min[u],
+            m: 1.0,
+        })
+        .collect();
+    let mut messages = 0usize;
+    for _ in 0..cfg.rounds {
+        for u in 0..n {
+            let neigh = g.neighbors(u);
+            if neigh.is_empty() {
+                continue;
+            }
+            let (v, _) = neigh[rng.index(neigh.len())];
+            let v = v as usize;
+            // Push half of u's mass to v (push-sum style, keeps totals
+            // conserved so the global average is exact in the limit).
+            let half = Acc {
+                local: acc[u].local / 2.0,
+                global: acc[u].global / 2.0,
+                min: acc[u].min / 2.0,
+                m: acc[u].m / 2.0,
+            };
+            acc[u] = half;
+            acc[v].local += half.local;
+            acc[v].global += half.global;
+            acc[v].min += half.min;
+            acc[v].m += half.m;
+            messages += 1;
+        }
+    }
+
+    // Read out: average the per-node ratio estimates (lines 20-24).
+    let mut l = 0.0;
+    let mut gl = 0.0;
+    let mut mn = 0.0;
+    let mut cnt = 0usize;
+    for a in &acc {
+        if a.m > 1e-9 {
+            l += a.local / a.m;
+            gl += a.global / a.m;
+            mn += a.min / a.m;
+            cnt += 1;
+        }
+    }
+    let cnt = cnt.max(1) as f64;
+    GossipStats {
+        local: l / cnt,
+        global: gl / cnt,
+        min: mn / cnt,
+        messages,
+    }
+}
+
+/// Exact (non-gossip) versions of the three statistics, for tests and
+/// for the centralized coordinator path.
+pub fn exact_stats(w: &LatencyMatrix, g: &Graph) -> GossipStats {
+    let n = g.n();
+    let mut local = 0.0;
+    let mut cnt_local = 0usize;
+    for u in 0..n {
+        for &(_, lw) in g.neighbors(u) {
+            local += lw as f64;
+            cnt_local += 1;
+        }
+    }
+    let local = if cnt_local == 0 {
+        0.0
+    } else {
+        local / cnt_local as f64
+    };
+    let global = w.mean_offdiag() as f64;
+    // Expected per-node min over K=4 samples is approximated by the true
+    // row minimum average (the asymptotic target as K grows).
+    let mut min_sum = 0.0;
+    for u in 0..n {
+        let m = (0..n)
+            .filter(|&v| v != u)
+            .map(|v| w.get(u, v))
+            .fold(f32::INFINITY, f32::min);
+        min_sum += m as f64;
+    }
+    GossipStats {
+        local,
+        global,
+        min: min_sum / n as f64,
+        messages: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::{fabric, synthetic};
+    use crate::topology::{random_ring, shortest_ring};
+
+    #[test]
+    fn gossip_estimates_converge_to_exact() {
+        let mut rng = Rng::new(1);
+        let w = synthetic::uniform(60, &mut rng);
+        let ring = random_ring(60, &mut rng);
+        let g = ring.to_graph(&w);
+        let cfg = MeasureConfig {
+            samples: 16,
+            rounds: 60,
+        };
+        let est = measure(&w, &g, cfg, &mut rng);
+        let exact = exact_stats(&w, &g);
+        assert!(
+            (est.global - exact.global).abs() / exact.global < 0.25,
+            "global {} vs {}",
+            est.global,
+            exact.global
+        );
+        assert!(
+            (est.local - exact.local).abs() / exact.local < 0.25,
+            "local {} vs {}",
+            est.local,
+            exact.local
+        );
+        assert!(est.messages > 0);
+    }
+
+    #[test]
+    fn rho_near_one_for_random_ring() {
+        // Random ring neighbors are random picks: local ≈ global, ρ → 1.
+        let mut rng = Rng::new(2);
+        let w = fabric::sample(85, &mut rng);
+        let g = random_ring(85, &mut rng).to_graph(&w);
+        let stats = measure(&w, &g, MeasureConfig::default(), &mut rng);
+        assert!(stats.rho() > 0.6, "rho {} should be high", stats.rho());
+    }
+
+    #[test]
+    fn rho_near_zero_for_shortest_ring() {
+        // NN-ring neighbors are nearly the closest nodes: ρ → 0.
+        let mut rng = Rng::new(3);
+        let w = fabric::sample(85, &mut rng);
+        let g = shortest_ring(&w, 0).to_graph(&w);
+        let stats = measure(&w, &g, MeasureConfig::default(), &mut rng);
+        assert!(stats.rho() < 0.4, "rho {} should be low", stats.rho());
+    }
+
+    #[test]
+    fn rho_orders_topologies() {
+        // The statistic must rank shortest < hybrid < random even when
+        // individual estimates are noisy.
+        let mut rng = Rng::new(4);
+        let w = fabric::sample(51, &mut rng);
+        let g_short = shortest_ring(&w, 0).to_graph(&w);
+        let g_rand = random_ring(51, &mut rng).to_graph(&w);
+        let r_short =
+            measure(&w, &g_short, MeasureConfig::default(), &mut rng).rho();
+        let r_rand =
+            measure(&w, &g_rand, MeasureConfig::default(), &mut rng).rho();
+        assert!(r_short < r_rand, "{r_short} !< {r_rand}");
+    }
+
+    #[test]
+    fn degenerate_uniform_metric_gives_balanced_rho() {
+        let w = LatencyMatrix::from_fn(10, |_, _| 5.0);
+        let mut rng = Rng::new(5);
+        let g = random_ring(10, &mut rng).to_graph(&w);
+        let stats = measure(&w, &g, MeasureConfig::default(), &mut rng);
+        // local == global == min -> denominator ~ 0 -> 0.5 sentinel.
+        assert!((stats.rho() - 0.5).abs() < 0.5);
+    }
+
+    use crate::latency::LatencyMatrix;
+}

@@ -1,0 +1,6 @@
+//! Gossip substrate: Algorithm 3's decentralized latency measurement and
+//! the round-based aggregation it relies on.
+
+pub mod measure;
+
+pub use measure::{measure, GossipStats, MeasureConfig};

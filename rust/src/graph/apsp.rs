@@ -1,0 +1,359 @@
+//! Shortest paths: single-source Dijkstra, all-pairs (APSP), and an
+//! incremental edge-relaxation update mirroring python/compile/diameter.py.
+//!
+//! APSP is the hot loop of every experiment (the genetic baseline alone
+//! evaluates up to 1e5 candidate topologies) — see rust/benches/hotpath.rs
+//! and EXPERIMENTS.md §Perf for the optimization history.
+
+use std::collections::BinaryHeap;
+
+use super::Graph;
+
+pub const INF: f32 = f32::INFINITY;
+
+/// Dense all-pairs distance matrix, row-major. `INF` = unreachable.
+#[derive(Clone, Debug)]
+pub struct DistMatrix {
+    pub n: usize,
+    pub d: Vec<f32>,
+}
+
+impl DistMatrix {
+    pub fn new_empty(n: usize) -> DistMatrix {
+        let mut d = vec![INF; n * n];
+        for i in 0..n {
+            d[i * n + i] = 0.0;
+        }
+        DistMatrix { n, d }
+    }
+
+    #[inline]
+    pub fn get(&self, u: usize, v: usize) -> f32 {
+        self.d[u * self.n + v]
+    }
+
+    #[inline]
+    pub fn set(&mut self, u: usize, v: usize, w: f32) {
+        self.d[u * self.n + v] = w;
+    }
+
+    pub fn row(&self, u: usize) -> &[f32] {
+        &self.d[u * self.n..(u + 1) * self.n]
+    }
+}
+
+/// Heap keys pack (distance bits, node) into one u64: for non-negative
+/// finite f32, `to_bits()` is monotone in the float order, so integer
+/// comparison == float comparison and the hot heap avoids f32
+/// `partial_cmp` entirely (EXPERIMENTS.md §Perf, L3 iteration 3).
+#[inline]
+fn heap_key(dist: f32, node: u32) -> u64 {
+    debug_assert!(dist >= 0.0);
+    ((dist.to_bits() as u64) << 32) | node as u64
+}
+
+/// Single-source shortest paths (non-negative weights). Writes distances
+/// into `dist` (len n); `heap` is a caller-provided scratch so the APSP
+/// loop reuses one allocation across all N sources.
+pub fn dijkstra_scratch(
+    g: &Graph,
+    src: usize,
+    dist: &mut [f32],
+    heap: &mut BinaryHeap<std::cmp::Reverse<u64>>,
+) {
+    let n = g.n();
+    debug_assert_eq!(dist.len(), n);
+    dist.fill(INF);
+    dist[src] = 0.0;
+    heap.clear();
+    heap.push(std::cmp::Reverse(heap_key(0.0, src as u32)));
+    while let Some(std::cmp::Reverse(key)) = heap.pop() {
+        let u = (key & 0xFFFF_FFFF) as usize;
+        let du = f32::from_bits((key >> 32) as u32);
+        if du > dist[u] {
+            continue; // stale entry
+        }
+        for &(v, w) in g.neighbors(u) {
+            let v = v as usize;
+            let alt = du + w;
+            if alt < dist[v] {
+                dist[v] = alt;
+                heap.push(std::cmp::Reverse(heap_key(alt, v as u32)));
+            }
+        }
+    }
+}
+
+/// Single-source shortest paths into a caller buffer.
+pub fn dijkstra_into(g: &Graph, src: usize, dist: &mut [f32]) {
+    let mut heap = BinaryHeap::with_capacity(g.n());
+    dijkstra_scratch(g, src, dist, &mut heap);
+}
+
+/// Single-source shortest paths, allocating the output.
+pub fn dijkstra(g: &Graph, src: usize) -> Vec<f32> {
+    let mut dist = vec![INF; g.n()];
+    dijkstra_into(g, src, &mut dist);
+    dist
+}
+
+/// Flattened CSR adjacency: one contiguous edge array instead of
+/// per-node Vecs, so the N Dijkstra sweeps of APSP stream memory
+/// (EXPERIMENTS.md §Perf, L3 iteration 4).
+pub struct Csr {
+    offsets: Vec<u32>,
+    targets: Vec<u32>,
+    weights: Vec<f32>,
+}
+
+impl Csr {
+    pub fn build(g: &Graph) -> Csr {
+        let n = g.n();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut targets = Vec::with_capacity(2 * g.m());
+        let mut weights = Vec::with_capacity(2 * g.m());
+        offsets.push(0);
+        for u in 0..n {
+            for &(v, w) in g.neighbors(u) {
+                targets.push(v);
+                weights.push(w);
+            }
+            offsets.push(targets.len() as u32);
+        }
+        Csr {
+            offsets,
+            targets,
+            weights,
+        }
+    }
+
+    #[inline]
+    pub fn dijkstra_scratch(
+        &self,
+        src: usize,
+        dist: &mut [f32],
+        heap: &mut BinaryHeap<std::cmp::Reverse<u64>>,
+    ) {
+        dist.fill(INF);
+        dist[src] = 0.0;
+        heap.clear();
+        heap.push(std::cmp::Reverse(heap_key(0.0, src as u32)));
+        while let Some(std::cmp::Reverse(key)) = heap.pop() {
+            let u = (key & 0xFFFF_FFFF) as usize;
+            let du = f32::from_bits((key >> 32) as u32);
+            if du > dist[u] {
+                continue;
+            }
+            let (lo, hi) =
+                (self.offsets[u] as usize, self.offsets[u + 1] as usize);
+            for i in lo..hi {
+                let v = self.targets[i] as usize;
+                let alt = du + self.weights[i];
+                if alt < dist[v] {
+                    dist[v] = alt;
+                    heap.push(std::cmp::Reverse(heap_key(alt, v as u32)));
+                }
+            }
+        }
+    }
+}
+
+/// All-pairs shortest paths: Dijkstra from every source over a CSR
+/// flattening. O(N * (N + E) log N); the `hotpath` bench tracks this.
+pub fn apsp(g: &Graph) -> DistMatrix {
+    let n = g.n();
+    let mut out = DistMatrix {
+        n,
+        d: vec![INF; n * n],
+    };
+    let csr = Csr::build(g);
+    let mut heap = BinaryHeap::with_capacity(n);
+    let mut rows = out.d.chunks_mut(n);
+    for s in 0..n {
+        let row = rows.next().expect("n rows");
+        csr.dijkstra_scratch(s, row, &mut heap);
+    }
+    out
+}
+
+/// Floyd–Warshall APSP (O(N^3)) — the oracle the property tests compare
+/// Dijkstra-APSP against; also used for very dense graphs where it wins.
+pub fn floyd_warshall(g: &Graph) -> DistMatrix {
+    let n = g.n();
+    let mut dm = DistMatrix::new_empty(n);
+    for u in 0..n {
+        for &(v, w) in g.neighbors(u) {
+            let v = v as usize;
+            if w < dm.get(u, v) {
+                dm.set(u, v, w);
+            }
+        }
+    }
+    for k in 0..n {
+        for i in 0..n {
+            let dik = dm.get(i, k);
+            if dik == INF {
+                continue;
+            }
+            // Row-sliced inner loop: d[i][j] = min(d[i][j], d[i][k]+d[k][j])
+            let (krow_start, irow_start) = (k * n, i * n);
+            for j in 0..n {
+                let alt = dik + dm.d[krow_start + j];
+                if alt < dm.d[irow_start + j] {
+                    dm.d[irow_start + j] = alt;
+                }
+            }
+        }
+    }
+    dm
+}
+
+/// Incremental APSP: relax every pair through a new undirected edge
+/// (u, v, w). `dist` must be the exact APSP of the graph without the edge;
+/// afterwards it is exact for the graph with it. O(N^2). Mirror of
+/// python/compile/diameter.py::add_edge (shared semantics with training).
+pub fn relax_edge(dm: &mut DistMatrix, u: usize, v: usize, w: f32) {
+    let n = dm.n;
+    if w >= dm.get(u, v) {
+        return;
+    }
+    let du: Vec<f32> = (0..n).map(|i| dm.get(i, u)).collect();
+    let dv: Vec<f32> = (0..n).map(|i| dm.get(i, v)).collect();
+    for i in 0..n {
+        let base_uv = du[i] + w; // i -> u -> v -> j
+        let base_vu = dv[i] + w; // i -> v -> u -> j
+        if base_uv == INF && base_vu == INF {
+            continue;
+        }
+        let row = &mut dm.d[i * n..(i + 1) * n];
+        for j in 0..n {
+            let a = base_uv + dv[j];
+            if a < row[j] {
+                row[j] = a;
+            }
+            let b = base_vu + du[j];
+            if b < row[j] {
+                row[j] = b;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_graph(rng: &mut Rng, n: usize, m: usize) -> Graph {
+        let mut g = Graph::empty(n);
+        while g.m() < m {
+            let u = rng.index(n);
+            let v = rng.index(n);
+            if u != v {
+                g.add_edge(u, v, rng.range_i64(1, 10) as f32);
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn dijkstra_line_graph() {
+        let g = Graph::from_weighted_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 4.0)],
+        );
+        let d = dijkstra(&g, 0);
+        assert_eq!(d, vec![0.0, 1.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn dijkstra_prefers_shorter_path() {
+        let g = Graph::from_weighted_edges(
+            3,
+            &[(0, 1, 10.0), (0, 2, 1.0), (2, 1, 1.0)],
+        );
+        let d = dijkstra(&g, 0);
+        assert_eq!(d[1], 2.0);
+    }
+
+    #[test]
+    fn dijkstra_unreachable_is_inf() {
+        let g = Graph::from_weighted_edges(4, &[(0, 1, 1.0)]);
+        let d = dijkstra(&g, 0);
+        assert_eq!(d[2], INF);
+        assert_eq!(d[3], INF);
+    }
+
+    #[test]
+    fn apsp_matches_floyd_warshall_random() {
+        let mut rng = Rng::new(2024);
+        for trial in 0..10 {
+            let n = 8 + 4 * (trial % 4);
+            let g = random_graph(&mut rng, n, 2 * n);
+            let a = apsp(&g);
+            let b = floyd_warshall(&g);
+            for i in 0..n {
+                for j in 0..n {
+                    let (x, y) = (a.get(i, j), b.get(i, j));
+                    if x == INF || y == INF {
+                        assert_eq!(x, y, "({i},{j}) trial {trial}");
+                    } else {
+                        assert!((x - y).abs() < 1e-4, "({i},{j}): {x} vs {y}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apsp_symmetric_for_undirected() {
+        let mut rng = Rng::new(7);
+        let g = random_graph(&mut rng, 16, 32);
+        let dm = apsp(&g);
+        for i in 0..16 {
+            for j in 0..16 {
+                let (x, y) = (dm.get(i, j), dm.get(j, i));
+                if x == INF {
+                    assert_eq!(y, INF);
+                } else {
+                    assert!((x - y).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relax_edge_matches_recompute() {
+        let mut rng = Rng::new(99);
+        let mut g = random_graph(&mut rng, 12, 18);
+        let mut dm = apsp(&g);
+        // Add 8 random new edges, relaxing incrementally each time.
+        for _ in 0..8 {
+            let u = rng.index(12);
+            let v = (u + 1 + rng.index(11)) % 12;
+            let w = rng.range_i64(1, 10) as f32;
+            relax_edge(&mut dm, u, v, w);
+            g.add_edge(u, v, w);
+            // add_edge keeps min weight; relax_edge no-ops on worse
+            // parallel edges, matching.
+            let fresh = apsp(&g);
+            for i in 0..12 {
+                for j in 0..12 {
+                    let (x, y) = (dm.get(i, j), fresh.get(i, j));
+                    if x == INF || y == INF {
+                        assert_eq!(x, y);
+                    } else {
+                        assert!((x - y).abs() < 1e-4, "({i},{j}): {x} vs {y}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dist_matrix_empty_has_zero_diag() {
+        let dm = DistMatrix::new_empty(3);
+        assert_eq!(dm.get(0, 0), 0.0);
+        assert_eq!(dm.get(0, 1), INF);
+    }
+}

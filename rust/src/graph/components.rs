@@ -1,0 +1,134 @@
+//! Connected components (BFS over adjacency, or via a distance matrix).
+
+use super::apsp::{DistMatrix, INF};
+use super::Graph;
+
+/// Component label per node (labels are 0..k in first-seen order).
+pub fn components(g: &Graph) -> Vec<u32> {
+    let n = g.n();
+    let mut label = vec![u32::MAX; n];
+    let mut next = 0u32;
+    let mut queue = std::collections::VecDeque::new();
+    for s in 0..n {
+        if label[s] != u32::MAX {
+            continue;
+        }
+        label[s] = next;
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            for &(v, _) in g.neighbors(u) {
+                let v = v as usize;
+                if label[v] == u32::MAX {
+                    label[v] = next;
+                    queue.push_back(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    label
+}
+
+/// Component labels derived from an APSP matrix (finite distance ⇔ same
+/// component).
+pub fn components_from_dist(dm: &DistMatrix) -> Vec<u32> {
+    let n = dm.n;
+    let mut label = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for s in 0..n {
+        if label[s] != u32::MAX {
+            continue;
+        }
+        for v in 0..n {
+            if dm.get(s, v) != INF {
+                label[v] = next;
+            }
+        }
+        next += 1;
+    }
+    label
+}
+
+/// Members of the largest component (ties break toward the lower label).
+pub fn largest(labels: &[u32]) -> Vec<u32> {
+    if labels.is_empty() {
+        return Vec::new();
+    }
+    let k = (*labels.iter().max().unwrap() + 1) as usize;
+    let mut counts = vec![0usize; k];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    let best = counts
+        .iter()
+        .enumerate()
+        .max_by_key(|&(i, &c)| (c, usize::MAX - i))
+        .unwrap()
+        .0 as u32;
+    labels
+        .iter()
+        .enumerate()
+        .filter(|&(_, &l)| l == best)
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+/// True iff the whole graph is one component.
+pub fn is_connected(g: &Graph) -> bool {
+    if g.n() == 0 {
+        return true;
+    }
+    let labels = components(g);
+    labels.iter().all(|&l| l == 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::apsp;
+
+    #[test]
+    fn labels_split_components() {
+        let g = Graph::from_weighted_edges(
+            5,
+            &[(0, 1, 1.0), (1, 2, 1.0), (3, 4, 1.0)],
+        );
+        let l = components(&g);
+        assert_eq!(l[0], l[1]);
+        assert_eq!(l[1], l[2]);
+        assert_eq!(l[3], l[4]);
+        assert_ne!(l[0], l[3]);
+    }
+
+    #[test]
+    fn dist_labels_match_bfs_labels() {
+        let g = Graph::from_weighted_edges(
+            6,
+            &[(0, 1, 1.0), (2, 3, 1.0), (3, 4, 1.0)],
+        );
+        let a = components(&g);
+        let dm = apsp::apsp(&g);
+        let b = components_from_dist(&dm);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(a[i] == a[j], b[i] == b[j], "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn largest_picks_biggest() {
+        let labels = vec![0, 0, 1, 1, 1, 2];
+        assert_eq!(largest(&labels), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn connectivity() {
+        let mut g = Graph::empty(3);
+        g.add_edge(0, 1, 1.0);
+        assert!(!is_connected(&g));
+        g.add_edge(1, 2, 1.0);
+        assert!(is_connected(&g));
+        assert!(is_connected(&Graph::empty(0)));
+    }
+}

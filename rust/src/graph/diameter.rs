@@ -1,0 +1,245 @@
+//! Diameter and eccentricity — the paper's performance metric (Eqn 1):
+//! D(G) = max_{u,v} d(u, v), over the largest connected component when
+//! the graph is disconnected (paper §IV-C convention).
+
+use super::apsp::{self, DistMatrix, INF};
+use super::components;
+use super::Graph;
+
+/// Exact diameter of `g` (largest component).
+///
+/// Uses the Takes–Kosters eccentricity-bounding algorithm
+/// ("BoundingDiameters"): run SSSP from strategically chosen nodes,
+/// maintain per-node eccentricity bounds
+///   eccL[u] = max(eccL[u], ecc(v) − d(v,u), d(v,u))
+///   eccU[u] = min(eccU[u], ecc(v) + d(v,u))
+/// and drop u once eccU[u] ≤ lb (it cannot raise the diameter). On the
+/// small-world K-ring overlays the paper studies this converges in a
+/// handful of SSSPs instead of N — the single biggest L3 speedup
+/// (EXPERIMENTS.md §Perf, L3 iteration 5). Exactness is asserted against
+/// the APSP oracle by unit + property tests.
+pub fn diameter(g: &Graph) -> f32 {
+    let n = g.n();
+    if n == 0 || g.m() == 0 {
+        return 0.0;
+    }
+    let members = components::largest(&components::components(g));
+    if members.len() < 2 {
+        return 0.0;
+    }
+    let csr = apsp::Csr::build(g);
+    let mut dist = vec![apsp::INF; n];
+    let mut heap = std::collections::BinaryHeap::with_capacity(n);
+
+    let mut ecc_lo = vec![0.0f32; n];
+    let mut ecc_hi = vec![f32::INFINITY; n];
+    let mut cand: Vec<u32> = members.clone();
+    let mut lb = 0.0f32;
+    let mut pick_hi = true; // interleave: max-upper / max-lower picks
+
+    while !cand.is_empty() {
+        // Selection heuristic: alternately the candidate with the
+        // largest upper bound (can certify the diameter) and the one
+        // with the largest lower bound (a far-out node tightens bounds
+        // fastest).
+        let (idx, _) = cand
+            .iter()
+            .enumerate()
+            .map(|(i, &u)| {
+                let score = if pick_hi {
+                    ecc_hi[u as usize]
+                } else {
+                    ecc_lo[u as usize]
+                };
+                (i, score)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        pick_hi = !pick_hi;
+        let v = cand.swap_remove(idx) as usize;
+
+        csr.dijkstra_scratch(v, &mut dist, &mut heap);
+        let mut ecc_v = 0.0f32;
+        for &u in &members {
+            let d = dist[u as usize];
+            if d.is_finite() && d > ecc_v {
+                ecc_v = d;
+            }
+        }
+        if ecc_v > lb {
+            lb = ecc_v;
+        }
+        // Tighten bounds and prune.
+        cand.retain(|&u| {
+            let u = u as usize;
+            let d = dist[u];
+            if d.is_finite() {
+                let lo = (ecc_v - d).max(d);
+                if lo > ecc_lo[u] {
+                    ecc_lo[u] = lo;
+                }
+                let hi = ecc_v + d;
+                if hi < ecc_hi[u] {
+                    ecc_hi[u] = hi;
+                }
+            }
+            if ecc_lo[u] > lb {
+                lb = ecc_lo[u];
+            }
+            ecc_hi[u] > lb + 1e-6 // keep only if it could raise the max
+        });
+    }
+    lb
+}
+
+/// Exact diameter via full APSP — the O(N·E·logN) oracle the bounding
+/// algorithm is validated against (and the right call when the caller
+/// needs the distance matrix anyway).
+pub fn diameter_apsp(g: &Graph) -> f32 {
+    let dm = apsp::apsp(g);
+    diameter_of_dist(&dm)
+}
+
+/// Diameter given a precomputed APSP matrix (largest component).
+pub fn diameter_of_dist(dm: &DistMatrix) -> f32 {
+    let comp = components::components_from_dist(dm);
+    let largest = components::largest(&comp);
+    let mut best = 0.0f32;
+    for &u in &largest {
+        for &v in &largest {
+            let d = dm.get(u as usize, v as usize);
+            if d != INF && d > best {
+                best = d;
+            }
+        }
+    }
+    best
+}
+
+/// Eccentricity of every node (max finite distance from it); INF when the
+/// node is isolated relative to the rest of its component.
+pub fn eccentricities(dm: &DistMatrix) -> Vec<f32> {
+    let n = dm.n;
+    (0..n)
+        .map(|u| {
+            let mut e = 0.0f32;
+            for v in 0..n {
+                let d = dm.get(u, v);
+                if d != INF && d > e {
+                    e = d;
+                }
+            }
+            e
+        })
+        .collect()
+}
+
+/// Average pairwise latency over connected pairs (used by the adaptive
+/// ring selection's global statistics and several figure harnesses).
+pub fn mean_pairwise(dm: &DistMatrix) -> f32 {
+    let n = dm.n;
+    let mut sum = 0.0f64;
+    let mut cnt = 0usize;
+    for u in 0..n {
+        for v in 0..n {
+            if u == v {
+                continue;
+            }
+            let d = dm.get(u, v);
+            if d != INF {
+                sum += d as f64;
+                cnt += 1;
+            }
+        }
+    }
+    if cnt == 0 {
+        0.0
+    } else {
+        (sum / cnt as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_diameter() {
+        // Unit-weight 6-ring: diameter 3.
+        let mut g = Graph::empty(6);
+        for i in 0..6 {
+            g.add_edge(i, (i + 1) % 6, 1.0);
+        }
+        assert_eq!(diameter(&g), 3.0);
+    }
+
+    #[test]
+    fn weighted_path_diameter() {
+        let g = Graph::from_weighted_edges(
+            3,
+            &[(0, 1, 2.5), (1, 2, 4.0)],
+        );
+        assert_eq!(diameter(&g), 6.5);
+    }
+
+    #[test]
+    fn disconnected_uses_largest_component() {
+        // Component A: path of 3 nodes (diam 2), component B: edge w=50.
+        let g = Graph::from_weighted_edges(
+            5,
+            &[(0, 1, 1.0), (1, 2, 1.0), (3, 4, 50.0)],
+        );
+        assert_eq!(diameter(&g), 2.0);
+    }
+
+    #[test]
+    fn empty_graph_diameter_zero() {
+        let g = Graph::empty(4);
+        assert_eq!(diameter(&g), 0.0);
+    }
+
+    #[test]
+    fn eccentricities_of_path() {
+        let g = Graph::from_weighted_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
+        let dm = apsp::apsp(&g);
+        assert_eq!(eccentricities(&dm), vec![2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn bounding_diameter_matches_apsp_oracle() {
+        use crate::latency::Model;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xD1A);
+        for trial in 0..20 {
+            let n = 10 + 13 * (trial % 7);
+            let model = Model::ALL[trial % 4];
+            let w = model.sample(n, &mut rng);
+            let k = crate::topology::paper_k(n);
+            let g = crate::topology::kring::random_krings(n, k, &mut rng)
+                .to_graph(&w);
+            let fast = diameter(&g);
+            let slow = diameter_apsp(&g);
+            assert!(
+                (fast - slow).abs() <= 1e-3 * slow.max(1.0),
+                "trial {trial}: bounding {fast} vs apsp {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn bounding_diameter_handles_disconnected() {
+        let g = Graph::from_weighted_edges(
+            6,
+            &[(0, 1, 1.0), (1, 2, 1.0), (3, 4, 9.0)],
+        );
+        assert_eq!(diameter(&g), diameter_apsp(&g));
+    }
+
+    #[test]
+    fn mean_pairwise_simple() {
+        let g = Graph::from_weighted_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
+        let dm = apsp::apsp(&g);
+        // pairs: (0,1)=1, (0,2)=2, (1,2)=1 both directions -> mean 4/3.
+        assert!((mean_pairwise(&dm) - 4.0 / 3.0).abs() < 1e-6);
+    }
+}

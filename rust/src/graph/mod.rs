@@ -1,0 +1,211 @@
+//! Weighted-graph substrate: topology representation, shortest paths,
+//! diameter — the metric every DGRO experiment is scored on (paper §III).
+
+pub mod apsp;
+pub mod components;
+pub mod diameter;
+pub mod ring;
+
+use std::collections::HashSet;
+
+/// An undirected weighted overlay graph in adjacency-list form.
+///
+/// Nodes are `0..n`. Edges are stored once per endpoint (symmetric). The
+/// builders in `topology/` produce graphs via [`Graph::from_edges`] with
+/// weights looked up in a latency matrix.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    adj: Vec<Vec<(u32, f32)>>,
+    m: usize,
+}
+
+impl Graph {
+    /// An edgeless graph on `n` nodes.
+    pub fn empty(n: usize) -> Graph {
+        Graph {
+            n,
+            adj: vec![Vec::new(); n],
+            m: 0,
+        }
+    }
+
+    /// Build from an undirected edge list with explicit weights.
+    /// Duplicate edges keep the smaller weight (parallel links collapse).
+    pub fn from_weighted_edges(
+        n: usize,
+        edges: &[(u32, u32, f32)],
+    ) -> Graph {
+        let mut g = Graph::empty(n);
+        for &(u, v, w) in edges {
+            g.add_edge(u as usize, v as usize, w);
+        }
+        g
+    }
+
+    /// Build from an edge list, weights from a latency matrix accessor.
+    pub fn from_edges(
+        n: usize,
+        edges: &[(u32, u32)],
+        weight: impl Fn(usize, usize) -> f32,
+    ) -> Graph {
+        let mut g = Graph::empty(n);
+        for &(u, v) in edges {
+            g.add_edge(u as usize, v as usize, weight(u as usize, v as usize));
+        }
+        g
+    }
+
+    /// Add an undirected edge; ignores self-loops; duplicate edges keep
+    /// the minimum weight.
+    pub fn add_edge(&mut self, u: usize, v: usize, w: f32) {
+        assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range");
+        if u == v {
+            return;
+        }
+        if let Some(slot) =
+            self.adj[u].iter_mut().find(|(x, _)| *x as usize == v)
+        {
+            if w < slot.1 {
+                slot.1 = w;
+                self.adj[v]
+                    .iter_mut()
+                    .find(|(x, _)| *x as usize == u)
+                    .expect("symmetric edge")
+                    .1 = w;
+            }
+            return;
+        }
+        self.adj[u].push((v as u32, w));
+        self.adj[v].push((u as u32, w));
+        self.m += 1;
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected edges.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn neighbors(&self, u: usize) -> &[(u32, f32)] {
+        &self.adj[u]
+    }
+
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|u| self.degree(u)).max().unwrap_or(0)
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].iter().any(|(x, _)| *x as usize == v)
+    }
+
+    /// Undirected edge list (u < v), for serialization and merging.
+    pub fn edges(&self) -> Vec<(u32, u32, f32)> {
+        let mut out = Vec::with_capacity(self.m);
+        for u in 0..self.n {
+            for &(v, w) in &self.adj[u] {
+                if (u as u32) < v {
+                    out.push((u as u32, v, w));
+                }
+            }
+        }
+        out
+    }
+
+    /// Union of this graph's edges with another's (same node set); keeps
+    /// minimum weight on duplicates. This is how K-ring overlays compose.
+    pub fn union(&self, other: &Graph) -> Graph {
+        assert_eq!(self.n, other.n, "union over different node sets");
+        let mut g = self.clone();
+        for (u, v, w) in other.edges() {
+            g.add_edge(u as usize, v as usize, w);
+        }
+        g
+    }
+
+    /// Structural equality on edge sets (ignores adjacency order).
+    pub fn same_edges(&self, other: &Graph) -> bool {
+        if self.n != other.n || self.m != other.m {
+            return false;
+        }
+        let a: HashSet<(u32, u32)> = self
+            .edges()
+            .iter()
+            .map(|&(u, v, _)| (u, v))
+            .collect();
+        other.edges().iter().all(|&(u, v, _)| a.contains(&(u, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_query() {
+        let g = Graph::from_weighted_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)],
+        );
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 3);
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 2));
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn self_loops_ignored() {
+        let mut g = Graph::empty(3);
+        g.add_edge(1, 1, 5.0);
+        assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn duplicate_edge_keeps_min_weight() {
+        let mut g = Graph::empty(3);
+        g.add_edge(0, 1, 5.0);
+        g.add_edge(1, 0, 2.0);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.neighbors(0)[0].1, 2.0);
+        assert_eq!(g.neighbors(1)[0].1, 2.0);
+    }
+
+    #[test]
+    fn edges_listed_once() {
+        let g = Graph::from_weighted_edges(
+            3,
+            &[(0, 1, 1.0), (1, 2, 1.0), (0, 2, 1.0)],
+        );
+        let es = g.edges();
+        assert_eq!(es.len(), 3);
+        assert!(es.iter().all(|&(u, v, _)| u < v));
+    }
+
+    #[test]
+    fn union_composes_and_keeps_min() {
+        let a = Graph::from_weighted_edges(3, &[(0, 1, 3.0)]);
+        let b = Graph::from_weighted_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)]);
+        let u = a.union(&b);
+        assert_eq!(u.m(), 2);
+        assert_eq!(u.neighbors(0)[0].1, 1.0);
+    }
+
+    #[test]
+    fn same_edges_ignores_order() {
+        let a = Graph::from_weighted_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
+        let b = Graph::from_weighted_edges(3, &[(1, 2, 1.0), (0, 1, 1.0)]);
+        assert!(a.same_edges(&b));
+        let c = Graph::from_weighted_edges(3, &[(0, 2, 1.0), (0, 1, 1.0)]);
+        assert!(!a.same_edges(&c));
+    }
+}

@@ -1,0 +1,166 @@
+//! Ring representation — the unit of topology the whole paper optimizes.
+//!
+//! A [`Ring`] is a Hamiltonian cycle over nodes `0..n`, stored as a visit
+//! order. The invariants (`validate`) are enforced by proptests: a valid
+//! ring is a permutation of 0..n, every node has degree exactly 2 in the
+//! induced graph, and the induced graph is connected.
+
+use anyhow::{bail, Result};
+
+use super::Graph;
+use crate::latency::LatencyMatrix;
+
+/// A ring topology: `order[i]` is connected to `order[i+1]` (wrapping).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Ring {
+    order: Vec<u32>,
+}
+
+impl Ring {
+    /// Construct from a visit order; validates it is a permutation.
+    pub fn new(order: Vec<u32>) -> Result<Ring> {
+        let n = order.len();
+        if n < 3 {
+            bail!("a ring needs >= 3 nodes, got {n}");
+        }
+        let mut seen = vec![false; n];
+        for &v in &order {
+            let v = v as usize;
+            if v >= n {
+                bail!("node {v} out of range (n = {n})");
+            }
+            if seen[v] {
+                bail!("node {v} appears twice");
+            }
+            seen[v] = true;
+        }
+        Ok(Ring { order })
+    }
+
+    /// The identity ring 0 -> 1 -> ... -> n-1 -> 0.
+    pub fn identity(n: usize) -> Ring {
+        Ring {
+            order: (0..n as u32).collect(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn order(&self) -> &[u32] {
+        &self.order
+    }
+
+    /// Ring edges (consecutive pairs + closing edge).
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let n = self.order.len();
+        (0..n)
+            .map(|i| (self.order[i], self.order[(i + 1) % n]))
+            .collect()
+    }
+
+    /// Induced graph with weights from a latency matrix.
+    pub fn to_graph(&self, w: &LatencyMatrix) -> Graph {
+        Graph::from_edges(self.n(), &self.edges(), |u, v| w.get(u, v))
+    }
+
+    /// Total circumference (sum of ring-edge latencies) — the TSP-style
+    /// objective, reported alongside diameter in the ablations.
+    pub fn length(&self, w: &LatencyMatrix) -> f32 {
+        self.edges()
+            .iter()
+            .map(|&(u, v)| w.get(u as usize, v as usize))
+            .sum()
+    }
+
+    /// Check every structural invariant; used by proptests and debug
+    /// assertions in the builders.
+    pub fn validate(&self) -> Result<()> {
+        let _ = Ring::new(self.order.clone())?;
+        Ok(())
+    }
+
+    /// Canonical form: rotated so node 0 is first, direction chosen so the
+    /// second element is the smaller neighbor. Two rings with identical
+    /// edge sets compare equal in canonical form.
+    pub fn canonical(&self) -> Ring {
+        let n = self.order.len();
+        let zero_pos = self
+            .order
+            .iter()
+            .position(|&v| v == 0)
+            .expect("validated ring contains 0");
+        let mut fwd: Vec<u32> = Vec::with_capacity(n);
+        for i in 0..n {
+            fwd.push(self.order[(zero_pos + i) % n]);
+        }
+        let mut bwd: Vec<u32> = Vec::with_capacity(n);
+        for i in 0..n {
+            bwd.push(self.order[(zero_pos + n - i) % n]);
+        }
+        if fwd[1] <= bwd[1] {
+            Ring { order: fwd }
+        } else {
+            Ring { order: bwd }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::LatencyMatrix;
+
+    fn unit_latency(n: usize) -> LatencyMatrix {
+        LatencyMatrix::from_fn(n, |u, v| if u == v { 0.0 } else { 1.0 })
+    }
+
+    #[test]
+    fn identity_ring_edges() {
+        let r = Ring::identity(4);
+        assert_eq!(r.edges(), vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+    }
+
+    #[test]
+    fn rejects_bad_orders() {
+        assert!(Ring::new(vec![0, 1]).is_err());
+        assert!(Ring::new(vec![0, 1, 1]).is_err());
+        assert!(Ring::new(vec![0, 1, 5]).is_err());
+    }
+
+    #[test]
+    fn induced_graph_degree_two() {
+        let r = Ring::new(vec![2, 0, 3, 1]).unwrap();
+        let g = r.to_graph(&unit_latency(4));
+        for u in 0..4 {
+            assert_eq!(g.degree(u), 2);
+        }
+        assert_eq!(g.m(), 4);
+    }
+
+    #[test]
+    fn length_sums_edges() {
+        let w = LatencyMatrix::from_fn(3, |u, v| {
+            if u == v {
+                0.0
+            } else {
+                (u + v) as f32
+            }
+        });
+        let r = Ring::identity(3);
+        // edges (0,1)=1, (1,2)=3, (2,0)=2 -> 6
+        assert_eq!(r.length(&w), 6.0);
+    }
+
+    #[test]
+    fn canonical_identifies_rotations_and_reflections() {
+        let a = Ring::new(vec![0, 1, 2, 3]).unwrap();
+        let b = Ring::new(vec![2, 3, 0, 1]).unwrap(); // rotation
+        let c = Ring::new(vec![0, 3, 2, 1]).unwrap(); // reflection
+        assert_eq!(a.canonical(), b.canonical());
+        assert_eq!(a.canonical(), c.canonical());
+        let d = Ring::new(vec![0, 2, 1, 3]).unwrap(); // different cycle
+        assert_ne!(a.canonical(), d.canonical());
+    }
+}

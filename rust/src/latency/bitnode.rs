@@ -1,0 +1,140 @@
+//! Bitnode-like latency model (paper §VII-A1).
+//!
+//! The paper samples 1000 of 9,408 Bitcoin nodes spread over seven
+//! geographic regions (North America, South America, Europe, Asia,
+//! Africa, China, Oceania) and derives pairwise latency from the iPlane
+//! measurement dataset. Offline substitution (DESIGN.md §3): nodes are
+//! sampled from region population weights matching the public Bitnodes
+//! distribution, placed with intra-region geographic scatter around the
+//! region centroid, and pairwise latency = fiber propagation + per-node
+//! access latency. This reproduces the paper-relevant structure: a
+//! heavy-tailed multi-modal latency distribution with tight intra-region
+//! clusters and 100ms+ inter-continental links.
+
+use super::geo;
+use super::LatencyMatrix;
+use crate::util::rng::Rng;
+
+/// Region: name, centroid (lat, lon), geographic scatter (degrees),
+/// sampling weight (approximate Bitnodes share).
+pub struct Region {
+    pub name: &'static str,
+    pub center: (f64, f64),
+    pub scatter: f64,
+    pub weight: f64,
+}
+
+pub const REGIONS: [Region; 7] = [
+    Region { name: "north_america", center: (39.5, -98.4), scatter: 8.0, weight: 0.30 },
+    Region { name: "europe", center: (50.1, 9.2), scatter: 6.0, weight: 0.38 },
+    Region { name: "asia", center: (28.6, 96.1), scatter: 9.0, weight: 0.12 },
+    Region { name: "china", center: (34.7, 109.0), scatter: 5.0, weight: 0.08 },
+    Region { name: "south_america", center: (-14.2, -55.5), scatter: 7.0, weight: 0.05 },
+    Region { name: "oceania", center: (-31.0, 140.0), scatter: 5.0, weight: 0.04 },
+    Region { name: "africa", center: (2.8, 21.0), scatter: 7.0, weight: 0.03 },
+];
+
+/// Per-node access-network latency (last-mile + peering), ms. Log-normal
+/// flavored: most nodes a few ms, a tail of poorly connected ones.
+fn access_ms(rng: &mut Rng) -> f64 {
+    let z = rng.normal();
+    (2.0 + (0.8 * z).exp()).min(50.0)
+}
+
+/// A sampled node placement.
+pub struct Placement {
+    pub region: usize,
+    pub coords: (f64, f64),
+    pub access: f64,
+}
+
+/// Sample `n` node placements according to region weights.
+pub fn place_nodes(n: usize, rng: &mut Rng) -> Vec<Placement> {
+    let total: f64 = REGIONS.iter().map(|r| r.weight).sum();
+    (0..n)
+        .map(|_| {
+            let mut x = rng.f64() * total;
+            let mut region = REGIONS.len() - 1;
+            for (i, r) in REGIONS.iter().enumerate() {
+                if x < r.weight {
+                    region = i;
+                    break;
+                }
+                x -= r.weight;
+            }
+            let r = &REGIONS[region];
+            let lat = (r.center.0 + rng.normal() * r.scatter).clamp(-65.0, 70.0);
+            let lon = r.center.1 + rng.normal() * r.scatter;
+            Placement {
+                region,
+                coords: (lat, lon),
+                access: access_ms(rng),
+            }
+        })
+        .collect()
+}
+
+/// Sample an n-node Bitnode latency matrix.
+pub fn sample(n: usize, rng: &mut Rng) -> LatencyMatrix {
+    let nodes = place_nodes(n, rng);
+    LatencyMatrix::from_fn(n, |u, v| {
+        let prop = geo::propagation_ms(nodes[u].coords, nodes[v].coords);
+        (prop + nodes[u].access + nodes[v].access).max(0.2) as f32
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_one() {
+        let total: f64 = REGIONS.iter().map(|r| r.weight).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn placement_respects_weights() {
+        let mut rng = Rng::new(1);
+        let nodes = place_nodes(4000, &mut rng);
+        let na = nodes.iter().filter(|p| p.region == 0).count() as f64 / 4000.0;
+        let eu = nodes.iter().filter(|p| p.region == 1).count() as f64 / 4000.0;
+        assert!((na - 0.30).abs() < 0.04, "NA share {na}");
+        assert!((eu - 0.38).abs() < 0.04, "EU share {eu}");
+    }
+
+    #[test]
+    fn sample_valid_and_multimodal() {
+        let mut rng = Rng::new(2);
+        let m = sample(120, &mut rng);
+        m.validate().unwrap();
+        // The latency distribution must be multi-modal: some pairs far
+        // below the mean (intra-region) and some far above
+        // (inter-continental).
+        let mean = m.mean_offdiag();
+        let mut below = 0;
+        let mut above = 0;
+        for u in 0..120 {
+            for v in (u + 1)..120 {
+                let x = m.get(u, v);
+                if x < 0.4 * mean {
+                    below += 1;
+                }
+                if x > 1.8 * mean {
+                    above += 1;
+                }
+            }
+        }
+        assert!(below > 50, "want intra-region cluster, got {below}");
+        assert!(above > 50, "want intercontinental tail, got {above}");
+    }
+
+    #[test]
+    fn access_latency_bounded() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let a = access_ms(&mut rng);
+            assert!(a >= 2.0 && a <= 50.0);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! FABRIC-like latency model (paper §VII-A1, §VII-A3).
+//!
+//! The paper uses measured one-way latencies between 17 FABRIC sites
+//! (14 US + 1 Japan + 2 Europe); each site spawns 1..58 nodes and
+//! `latency(u, v) = latency(site_i, site_j) + latency(u) + latency(v)`
+//! with per-node latencies ~ N(5, 1). The FABRIC measurement feed is not
+//! reachable offline, so inter-site latencies are synthesized from the
+//! real FABRIC site locations with the fiber-propagation model in
+//! `geo.rs` (DESIGN.md §3). Structure preserved: 17 clusters, ~ms-scale
+//! intra-site vs tens-of-ms transcontinental links, one trans-Pacific and
+//! two trans-Atlantic outliers.
+
+use super::geo;
+use super::LatencyMatrix;
+use crate::util::rng::Rng;
+
+/// The 17 FABRIC sites: name, (lat, lon). 14 US + Tokyo + Amsterdam +
+/// Geneva (CERN), matching the paper's description.
+pub const SITES: [(&str, (f64, f64)); 17] = [
+    ("STAR", (41.8960, -87.6190)),   // Chicago StarLight
+    ("WASH", (38.9072, -77.0369)),   // Washington DC
+    ("DALL", (32.7767, -96.7970)),   // Dallas
+    ("SALT", (40.7608, -111.8910)),  // Salt Lake City
+    ("UTAH", (40.7649, -111.8421)),  // University of Utah
+    ("MICH", (42.2808, -83.7430)),   // Ann Arbor
+    ("MASS", (42.3601, -71.0589)),   // Boston
+    ("TACC", (30.2849, -97.7341)),   // Austin TACC
+    ("NCSA", (40.1106, -88.2073)),   // Urbana-Champaign
+    ("MAX",  (39.0840, -77.1528)),   // College Park MAX
+    ("GATECH", (33.7756, -84.3963)), // Atlanta
+    ("CLEM", (34.6834, -82.8374)),   // Clemson
+    ("UCSD", (32.8801, -117.2340)),  // San Diego
+    ("FIU",  (25.7574, -80.3733)),   // Miami FIU
+    ("TOKY", (35.6762, 139.6503)),   // Tokyo
+    ("AMST", (52.3676, 4.9041)),     // Amsterdam
+    ("CERN", (46.2330, 6.0557)),     // Geneva
+];
+
+/// Number of physical sites.
+pub const N_SITES: usize = SITES.len();
+
+/// Per-node processing jitter: N(5, 1) ms, truncated positive (paper's
+/// "individual latencies latency(u) ... normal distribution with a mean
+/// of 5 and a standard deviation of 1").
+fn node_latency(rng: &mut Rng) -> f64 {
+    rng.gaussian(5.0, 1.0).max(0.1)
+}
+
+/// Inter-site one-way latency matrix (ms), synthesized from geography.
+pub fn site_matrix() -> Vec<f64> {
+    let mut m = vec![0.0f64; N_SITES * N_SITES];
+    for i in 0..N_SITES {
+        for j in (i + 1)..N_SITES {
+            let l = geo::propagation_ms(SITES[i].1, SITES[j].1)
+                // Small constant per-hop overhead (router/queueing floor).
+                + 0.5;
+            m[i * N_SITES + j] = l;
+            m[j * N_SITES + i] = l;
+        }
+    }
+    m
+}
+
+/// Assign `n` nodes round-robin over the 17 sites (paper: "each site
+/// generates a varying number of nodes ranging from 1 to 58, resulting in
+/// total node counts from 17 to 986"). Returns site index per node.
+pub fn assign_sites(n: usize) -> Vec<usize> {
+    (0..n).map(|i| i % N_SITES).collect()
+}
+
+/// Sample an n-node FABRIC latency matrix:
+/// latency(u, v) = site(i, j) + nodelat(u) + nodelat(v).
+pub fn sample(n: usize, rng: &mut Rng) -> LatencyMatrix {
+    let sites = assign_sites(n);
+    let sm = site_matrix();
+    let nodelat: Vec<f64> = (0..n).map(|_| node_latency(rng)).collect();
+    LatencyMatrix::from_fn(n, |u, v| {
+        let s = sm[sites[u] * N_SITES + sites[v]];
+        (s + nodelat[u] + nodelat[v]) as f32
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seventeen_sites() {
+        assert_eq!(N_SITES, 17);
+    }
+
+    #[test]
+    fn site_matrix_symmetric_positive() {
+        let sm = site_matrix();
+        for i in 0..N_SITES {
+            assert_eq!(sm[i * N_SITES + i], 0.0);
+            for j in 0..N_SITES {
+                assert!((sm[i * N_SITES + j] - sm[j * N_SITES + i]).abs() < 1e-9);
+                if i != j {
+                    assert!(sm[i * N_SITES + j] > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpacific_dominates_domestic() {
+        let sm = site_matrix();
+        let star = 0; // Chicago
+        let toky = 14; // Tokyo
+        let wash = 1; // DC
+        assert!(
+            sm[star * N_SITES + toky] > 3.0 * sm[star * N_SITES + wash],
+            "trans-Pacific should be much slower than Chicago-DC"
+        );
+    }
+
+    #[test]
+    fn sample_is_valid_and_clustered() {
+        let mut rng = Rng::new(42);
+        let n = 68; // 4 nodes per site
+        let m = sample(n, &mut rng);
+        m.validate().unwrap();
+        // Same-site pairs (sites repeat every 17) should be much cheaper
+        // than Chicago-Tokyo pairs.
+        let same_site = m.get(0, 17); // both at site 0
+        let cross = m.get(0, 14); // site 0 vs Tokyo
+        assert!(
+            same_site < cross / 3.0,
+            "intra-site {same_site} vs trans-Pacific {cross}"
+        );
+    }
+
+    #[test]
+    fn assign_round_robin_counts_balanced() {
+        let s = assign_sites(35); // 35 = 2*17 + 1
+        let count0 = s.iter().filter(|&&x| x == 0).count();
+        let count16 = s.iter().filter(|&&x| x == 16).count();
+        assert_eq!(count0, 3);
+        assert_eq!(count16, 2);
+    }
+}

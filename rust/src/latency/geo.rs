@@ -1,0 +1,64 @@
+//! Geographic latency primitives shared by the FABRIC and Bitnode models.
+//!
+//! One-way network latency between sites is modeled as
+//!   latency = distance / (2/3 c) * route_inflation + per-endpoint access
+//! where 2/3 c is signal speed in fiber and route_inflation ~1.6 accounts
+//! for non-great-circle routing (standard practice in network-geography
+//! literature; see DESIGN.md §3 on why this substitution preserves the
+//! paper-relevant structure: multi-modal clusters of close/far latencies).
+
+/// Degrees -> radians.
+fn rad(deg: f64) -> f64 {
+    deg * std::f64::consts::PI / 180.0
+}
+
+/// Great-circle distance in kilometers between two (lat, lon) points.
+pub fn haversine_km(a: (f64, f64), b: (f64, f64)) -> f64 {
+    const R: f64 = 6371.0; // mean Earth radius, km
+    let (lat1, lon1) = (rad(a.0), rad(a.1));
+    let (lat2, lon2) = (rad(b.0), rad(b.1));
+    let dlat = lat2 - lat1;
+    let dlon = lon2 - lon1;
+    let h = (dlat / 2.0).sin().powi(2)
+        + lat1.cos() * lat2.cos() * (dlon / 2.0).sin().powi(2);
+    2.0 * R * h.sqrt().asin()
+}
+
+/// Speed of light in fiber: ~200,000 km/s -> 0.2 km per microsecond.
+const FIBER_KM_PER_MS: f64 = 200.0;
+
+/// Typical route inflation over great-circle distance.
+pub const ROUTE_INFLATION: f64 = 1.6;
+
+/// One-way propagation latency in milliseconds between two coordinates.
+pub fn propagation_ms(a: (f64, f64), b: (f64, f64)) -> f64 {
+    haversine_km(a, b) / FIBER_KM_PER_MS * ROUTE_INFLATION
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CHICAGO: (f64, f64) = (41.88, -87.63);
+    const NYC: (f64, f64) = (40.71, -74.01);
+    const TOKYO: (f64, f64) = (35.68, 139.69);
+
+    #[test]
+    fn haversine_known_distances() {
+        // Chicago <-> NYC is ~1145 km.
+        let d = haversine_km(CHICAGO, NYC);
+        assert!((d - 1145.0).abs() < 30.0, "got {d}");
+        // Symmetry and identity.
+        assert!((haversine_km(NYC, CHICAGO) - d).abs() < 1e-9);
+        assert_eq!(haversine_km(NYC, NYC), 0.0);
+    }
+
+    #[test]
+    fn propagation_scales_with_distance() {
+        let near = propagation_ms(CHICAGO, NYC);
+        let far = propagation_ms(CHICAGO, TOKYO);
+        assert!(near > 5.0 && near < 15.0, "Chicago-NYC {near} ms");
+        assert!(far > 60.0 && far < 120.0, "Chicago-Tokyo {far} ms");
+        assert!(far > 4.0 * near);
+    }
+}

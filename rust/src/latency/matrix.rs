@@ -1,0 +1,183 @@
+//! Dense symmetric latency matrix — the `W` of the paper's system model:
+//! `delta(u, v)` is a constant non-negative per-pair message latency.
+
+use anyhow::{bail, Result};
+
+/// Row-major symmetric `n x n` matrix with zero diagonal, f32 entries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyMatrix {
+    n: usize,
+    w: Vec<f32>,
+}
+
+impl LatencyMatrix {
+    pub fn zeros(n: usize) -> LatencyMatrix {
+        LatencyMatrix {
+            n,
+            w: vec![0.0; n * n],
+        }
+    }
+
+    /// Build from a function over (u, v); symmetrized by construction
+    /// (f is evaluated once per unordered pair with u < v).
+    pub fn from_fn(n: usize, f: impl Fn(usize, usize) -> f32) -> LatencyMatrix {
+        let mut m = LatencyMatrix::zeros(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                let w = f(u, v);
+                m.w[u * n + v] = w;
+                m.w[v * n + u] = w;
+            }
+        }
+        m
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, u: usize, v: usize) -> f32 {
+        self.w[u * self.n + v]
+    }
+
+    #[inline]
+    pub fn set(&mut self, u: usize, v: usize, w: f32) {
+        self.w[u * self.n + v] = w;
+        self.w[v * self.n + u] = w;
+    }
+
+    pub fn row(&self, u: usize) -> &[f32] {
+        &self.w[u * self.n..(u + 1) * self.n]
+    }
+
+    /// Raw row-major data (fed to the PJRT runtime as the W literal).
+    pub fn data(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Mean over ALL entries incl. the zero diagonal — this is the exact
+    /// normalizer convention the Q-net was trained with
+    /// (python model.default_wscale: N * mean(W)).
+    pub fn wscale(&self) -> f32 {
+        if self.n == 0 {
+            return 1e-8;
+        }
+        let mean =
+            self.w.iter().map(|&x| x as f64).sum::<f64>() / (self.w.len() as f64);
+        (self.n as f64 * mean + 1e-8) as f64 as f32
+    }
+
+    /// Mean off-diagonal latency.
+    pub fn mean_offdiag(&self) -> f32 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let sum: f64 = self.w.iter().map(|&x| x as f64).sum();
+        (sum / (self.n * (self.n - 1)) as f64) as f32
+    }
+
+    /// Minimum off-diagonal latency.
+    pub fn min_offdiag(&self) -> f32 {
+        let mut best = f32::INFINITY;
+        for u in 0..self.n {
+            for v in 0..self.n {
+                if u != v {
+                    best = best.min(self.get(u, v));
+                }
+            }
+        }
+        best
+    }
+
+    /// Check the §III invariants: square, symmetric, zero diagonal,
+    /// non-negative finite entries, strictly positive off-diagonal.
+    pub fn validate(&self) -> Result<()> {
+        if self.w.len() != self.n * self.n {
+            bail!("storage size mismatch");
+        }
+        for u in 0..self.n {
+            if self.get(u, u) != 0.0 {
+                bail!("nonzero diagonal at {u}");
+            }
+            for v in 0..self.n {
+                let x = self.get(u, v);
+                if !x.is_finite() || x < 0.0 {
+                    bail!("invalid latency {x} at ({u},{v})");
+                }
+                if u != v && x <= 0.0 {
+                    bail!("non-positive off-diagonal at ({u},{v})");
+                }
+                if (x - self.get(v, u)).abs() > 1e-6 {
+                    bail!("asymmetric at ({u},{v})");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy into a zero-padded `npad x npad` buffer (bucket padding for
+    /// the PJRT path; pad rows/cols stay zero by construction).
+    pub fn padded_data(&self, npad: usize) -> Vec<f32> {
+        assert!(npad >= self.n);
+        let mut out = vec![0.0f32; npad * npad];
+        for u in 0..self.n {
+            out[u * npad..u * npad + self.n]
+                .copy_from_slice(self.row(u));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_symmetric() {
+        let m = LatencyMatrix::from_fn(4, |u, v| (u + v) as f32);
+        m.validate().unwrap();
+        assert_eq!(m.get(1, 3), 4.0);
+        assert_eq!(m.get(3, 1), 4.0);
+        assert_eq!(m.get(2, 2), 0.0);
+    }
+
+    #[test]
+    fn validate_catches_asymmetry() {
+        let mut m = LatencyMatrix::from_fn(3, |_, _| 1.0);
+        m.w[1] = 9.0; // (0,1) only
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_zero_offdiag() {
+        let m = LatencyMatrix::zeros(3);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn wscale_matches_python_convention() {
+        // N=2, entries [[0, 3], [3, 0]]: mean = 6/4 = 1.5, scale = 3.0.
+        let m = LatencyMatrix::from_fn(2, |_, _| 3.0);
+        assert!((m.wscale() - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn offdiag_stats() {
+        let m = LatencyMatrix::from_fn(3, |u, v| (u + v) as f32);
+        // off-diag entries (unordered): 1, 2, 3 -> mean 2, min 1.
+        assert!((m.mean_offdiag() - 2.0).abs() < 1e-6);
+        assert_eq!(m.min_offdiag(), 1.0);
+    }
+
+    #[test]
+    fn padding_zero_fills() {
+        let m = LatencyMatrix::from_fn(2, |_, _| 2.0);
+        let p = m.padded_data(4);
+        assert_eq!(p.len(), 16);
+        assert_eq!(p[0 * 4 + 1], 2.0);
+        assert_eq!(p[1 * 4 + 0], 2.0);
+        assert_eq!(p[2 * 4 + 2], 0.0);
+        assert_eq!(p[0 * 4 + 3], 0.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Latency models (paper §VII-A "Network settings").
+//!
+//! Four distributions drive every experiment:
+//!   * Uniform{1..10}  — synthetic (paper: X ~ Uniform(1, 10))
+//!   * Gaussian(5, 1)  — synthetic (paper: Y ~ N(5, 1))
+//!   * FABRIC          — 17 research sites (14 US + Japan + 2 EU),
+//!                       inter-site latency from geography, intra-site
+//!                       jitter N(5, 1) per node, exactly §VII-A3
+//!   * Bitnode         — ~global node population over 7 regions
+//!
+//! The realistic datasets are *synthesized* from real site coordinates
+//! because the original measurement feeds (FABRIC monitoring, iPlane) are
+//! not available offline — see DESIGN.md §3 for the substitution argument.
+
+pub mod bitnode;
+pub mod fabric;
+pub mod geo;
+pub mod matrix;
+pub mod synthetic;
+
+pub use matrix::LatencyMatrix;
+
+use crate::util::rng::Rng;
+
+/// Which latency model to draw a matrix from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Model {
+    Uniform,
+    Gaussian,
+    Fabric,
+    Bitnode,
+}
+
+impl Model {
+    pub fn parse(s: &str) -> Option<Model> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Some(Model::Uniform),
+            "gaussian" | "normal" => Some(Model::Gaussian),
+            "fabric" => Some(Model::Fabric),
+            "bitnode" => Some(Model::Bitnode),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Model::Uniform => "uniform",
+            Model::Gaussian => "gaussian",
+            Model::Fabric => "fabric",
+            Model::Bitnode => "bitnode",
+        }
+    }
+
+    /// Sample an `n`-node latency matrix from this model.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> LatencyMatrix {
+        match self {
+            Model::Uniform => synthetic::uniform(n, rng),
+            Model::Gaussian => synthetic::gaussian(n, rng),
+            Model::Fabric => fabric::sample(n, rng),
+            Model::Bitnode => bitnode::sample(n, rng),
+        }
+    }
+
+    pub const ALL: [Model; 4] =
+        [Model::Uniform, Model::Gaussian, Model::Fabric, Model::Bitnode];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        for m in Model::ALL {
+            assert_eq!(Model::parse(m.name()), Some(m));
+        }
+        assert_eq!(Model::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_models_produce_valid_matrices() {
+        let mut rng = Rng::new(5);
+        for m in Model::ALL {
+            let w = m.sample(24, &mut rng);
+            w.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name()));
+        }
+    }
+}

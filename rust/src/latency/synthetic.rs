@@ -1,0 +1,93 @@
+//! Synthetic latency distributions (paper §VII-A1):
+//! X ~ Uniform{1..10} and Y ~ N(5, 1), i.i.d. per unordered pair.
+
+use super::LatencyMatrix;
+use crate::util::rng::Rng;
+
+/// Uniform integer latencies from {1, 2, ..., 10} (the paper's set).
+pub fn uniform(n: usize, rng: &mut Rng) -> LatencyMatrix {
+    let mut m = LatencyMatrix::zeros(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            m.set(u, v, rng.range_i64(1, 10) as f32);
+        }
+    }
+    m
+}
+
+/// Gaussian latencies N(5, 1), truncated below at a small positive floor
+/// (latencies must stay positive; P(X <= 0.1) under N(5,1) is ~1e-6 so the
+/// truncation is statistically invisible but keeps §III's model valid).
+pub fn gaussian(n: usize, rng: &mut Rng) -> LatencyMatrix {
+    gaussian_with(n, rng, 5.0, 1.0)
+}
+
+/// Gaussian with explicit mean/std (used by FABRIC's intra-site jitter).
+pub fn gaussian_with(
+    n: usize,
+    rng: &mut Rng,
+    mean: f64,
+    std: f64,
+) -> LatencyMatrix {
+    let mut m = LatencyMatrix::zeros(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let x = rng.gaussian(mean, std).max(0.1);
+            m.set(u, v, x as f32);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_range_and_validity() {
+        let mut rng = Rng::new(1);
+        let m = uniform(20, &mut rng);
+        m.validate().unwrap();
+        for u in 0..20 {
+            for v in 0..20 {
+                if u != v {
+                    let x = m.get(u, v);
+                    assert!((1.0..=10.0).contains(&x));
+                    assert_eq!(x.fract(), 0.0, "integer latencies");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_covers_support() {
+        let mut rng = Rng::new(2);
+        let m = uniform(40, &mut rng);
+        let mut seen = [false; 11];
+        for u in 0..40 {
+            for v in (u + 1)..40 {
+                seen[m.get(u, v) as usize] = true;
+            }
+        }
+        for x in 1..=10 {
+            assert!(seen[x], "value {x} never sampled");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(3);
+        let m = gaussian(60, &mut rng);
+        m.validate().unwrap();
+        let mean = m.mean_offdiag();
+        assert!((mean - 5.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_strictly_positive() {
+        let mut rng = Rng::new(4);
+        // Aggressive params to stress the floor.
+        let m = gaussian_with(30, &mut rng, 0.5, 2.0);
+        m.validate().unwrap();
+    }
+}

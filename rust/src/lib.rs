@@ -1,0 +1,54 @@
+//! # DGRO — Diameter-Guided Ring Optimization
+//!
+//! Production reproduction of *DGRO: Diameter-Guided Ring Optimization
+//! for Integrated Research Infrastructure Membership* (Wu, Raghavan, Di,
+//! Chen, Cappello — CS.DC 2024) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the membership coordinator: latency models,
+//!   overlay topology builders (Chord / RAPID / Perigee / GA baselines),
+//!   DGRO ring construction + ρ-adaptive ring selection + parallel
+//!   partitioned construction, a discrete-event membership/gossip
+//!   runtime, and the figure-regeneration bench harness.
+//! * **L2 (python/compile/model.py)** — the Q-network (structure2vec
+//!   embedding + Q-head, Eqns 2–4), DQN-trained at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the embedding
+//!   iteration and Q-head, lowered (interpret mode) into the AOT HLO
+//!   artifacts executed here via PJRT ([`runtime`]).
+//!
+//! Python never runs on the request path: `make artifacts` exports
+//! `artifacts/qnet_*.hlo.txt` + trained weights once, and the rust binary
+//! is self-contained afterwards.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dgro::latency::{Model};
+//! use dgro::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(7);
+//! let w = Model::Fabric.sample(170, &mut rng);
+//! let ring = dgro::topology::shortest_ring(&w, 0);
+//! let g = ring.to_graph(&w);
+//! println!("diameter = {}", dgro::graph::diameter::diameter(&g));
+//! ```
+//!
+//! See `examples/` for full scenarios and DESIGN.md for the module map.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dgro;
+pub mod gossip;
+pub mod graph;
+pub mod latency;
+pub mod membership;
+pub mod metrics;
+pub mod par;
+pub mod prop;
+pub mod qnet;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod util;

@@ -1,0 +1,268 @@
+//! `dgro` — the DGRO membership-coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   build     construct one overlay and report diameter vs baselines
+//!   serve     run the coordinator over a churn trace (adaptive loop)
+//!   measure   Algorithm-3 gossip measurement + ρ for a topology
+//!   figures   regenerate paper figures (CSV under reports/)
+//!   config    print the default config JSON
+//!
+//! Examples:
+//!   dgro build --nodes 120 --model fabric --scorer pjrt
+//!   dgro serve --nodes 100 --model bitnode --horizon 5000
+//!   dgro figures --fig 13 --quick
+//!   dgro figures --all
+
+use anyhow::Result;
+
+use dgro::bench_harness::{self, runner};
+use dgro::cli::Command;
+use dgro::config::Config;
+use dgro::coordinator::{Coordinator, ScorerKind};
+use dgro::dgro::construct::best_of_starts;
+use dgro::gossip::measure::{measure, MeasureConfig};
+use dgro::graph::diameter;
+use dgro::latency::Model;
+use dgro::membership::events::EventTrace;
+use dgro::topology::{chord::Chord, paper_k, rapid::Rapid, random_ring, shortest_ring};
+use dgro::util::rng::Rng;
+use dgro::{log_error, log_info};
+
+fn main() {
+    dgro::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            log_error!("{e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "build" => cmd_build(rest),
+        "serve" => cmd_serve(rest),
+        "measure" => cmd_measure(rest),
+        "figures" => cmd_figures(rest),
+        "config" => {
+            println!("{}", Config::default().to_json().to_string());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try: help)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "dgro — Diameter-Guided Ring Optimization membership coordinator\n\
+         \n\
+         subcommands:\n\
+         \x20 build     construct one overlay, report diameter vs baselines\n\
+         \x20 serve     run the adaptive coordinator over a churn trace\n\
+         \x20 measure   gossip latency measurement + rho for a topology\n\
+         \x20 figures   regenerate paper figures (CSV under reports/)\n\
+         \x20 config    print the default config JSON\n\
+         \n\
+         pass any unknown flag to a subcommand to see its usage."
+    );
+}
+
+fn base_flags(cmd: Command) -> Command {
+    cmd.flag("nodes", "100", "overlay size N")
+        .flag("model", "uniform", "latency model: uniform|gaussian|fabric|bitnode")
+        .flag("seed", "7", "rng seed")
+        .flag("k", "0", "rings per overlay (0 = log2 N)")
+}
+
+fn cmd_build(raw: &[String]) -> Result<()> {
+    let cmd = base_flags(Command::new("build", "construct one overlay"))
+        .flag("scorer", "native", "dgro scorer: pjrt|native|greedy")
+        .flag("starts", "10", "construction restarts (keep best)")
+        .flag("partitions", "1", "parallel partitions (Algorithm 4)");
+    let a = cmd.parse(raw)?;
+    let n = a.get_usize("nodes")?;
+    let seed = a.get_u64("seed")?;
+    let model = Model::parse(a.get("model"))
+        .ok_or_else(|| anyhow::anyhow!("bad --model"))?;
+    let k = match a.get_usize("k")? {
+        0 => paper_k(n),
+        k => k,
+    };
+    let mut rng = Rng::new(seed);
+    let w = model.sample(n, &mut rng);
+
+    // Baselines.
+    let d_random = diameter::diameter(
+        &dgro::topology::kring::random_krings(n, k, &mut rng).to_graph(&w),
+    );
+    let d_chord = diameter::diameter(&Chord::build(n, &mut rng).to_graph(&w));
+    let d_rapid = diameter::diameter(&Rapid::build(n, &mut rng).to_graph(&w));
+    let d_nn = diameter::diameter(
+        &dgro::topology::kring::hybrid_krings(&w, k, 0, &mut rng)
+            .to_graph(&w),
+    );
+
+    // DGRO.
+    let mut cfg = Config::default();
+    cfg.nodes = n;
+    cfg.model = model.name().to_string();
+    cfg.scorer = a.get("scorer").to_string();
+    cfg.partitions = a.get_usize("partitions")?;
+    let kind = ScorerKind::parse(&cfg.scorer)?;
+    let t0 = std::time::Instant::now();
+    let d_dgro = if cfg.partitions > 1 {
+        // Parallel construction path (Algorithm 4 per ring).
+        let mut rings = Vec::new();
+        for _ in 0..k {
+            let base = random_ring(n, &mut rng);
+            let pc = dgro::dgro::parallel::ParallelConfig::new(cfg.partitions);
+            let app = cfg.clone();
+            rings.push(dgro::dgro::parallel::parallel_ring(
+                &w,
+                &base,
+                pc,
+                move |_| kind.make(&app),
+            )?);
+        }
+        diameter::diameter(
+            &dgro::topology::kring::KRing::new(rings).to_graph(&w),
+        )
+    } else {
+        let mut scorer = kind.make(&cfg);
+        let (_, _, d) = best_of_starts(
+            scorer.as_mut(),
+            &w,
+            k,
+            a.get_usize("starts")?,
+            &mut rng,
+        )?;
+        d
+    };
+    let dt = t0.elapsed().as_secs_f64() * 1e3;
+
+    println!("n={n} k={k} model={} scorer={}", model.name(), cfg.scorer);
+    println!("random-kring   diameter: {d_random:.2}");
+    println!("chord          diameter: {d_chord:.2}");
+    println!("rapid          diameter: {d_rapid:.2}");
+    println!("shortest-kring diameter: {d_nn:.2}");
+    println!("dgro           diameter: {d_dgro:.2}  ({dt:.0} ms)");
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> Result<()> {
+    let cmd = base_flags(Command::new("serve", "run the adaptive coordinator"))
+        .flag("horizon", "5000", "sim-time horizon (ms)")
+        .flag("churn", "0.0005", "membership churn rate per node-ms")
+        .flag("scorer", "greedy", "ring-rebuild scorer")
+        .flag("epsilon", "0.25", "rho decision band half-width");
+    let a = cmd.parse(raw)?;
+    let mut cfg = Config::default();
+    cfg.nodes = a.get_usize("nodes")?;
+    cfg.model = a.get("model").to_string();
+    cfg.seed = a.get_u64("seed")?;
+    cfg.scorer = a.get("scorer").to_string();
+    cfg.epsilon = a.get_f64("epsilon")?;
+    let horizon = a.get_f64("horizon")?;
+    let churn = a.get_f64("churn")?;
+
+    let mut co = Coordinator::new(cfg.clone())?;
+    let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+    let trace = EventTrace::churn(cfg.nodes, horizon, churn, &mut rng);
+    log_info!(
+        "serving n={} model={} horizon={horizon}ms events={}",
+        cfg.nodes,
+        cfg.model,
+        trace.len()
+    );
+    let rep = co.run(&trace, horizon)?;
+    println!(
+        "initial diameter {:.2} -> final {:.2} ({} swaps, {} alive)",
+        rep.initial_diameter, rep.final_diameter, rep.swaps, rep.alive
+    );
+    for (t, rho, d) in rep.timeline.iter().take(20) {
+        println!("t={t:8.0}ms rho={rho:.3} diameter={d:.2}");
+    }
+    if rep.timeline.len() > 20 {
+        println!("... ({} periods total)", rep.timeline.len());
+    }
+    print!("{}", co.metrics.report());
+    Ok(())
+}
+
+fn cmd_measure(raw: &[String]) -> Result<()> {
+    let cmd = base_flags(Command::new("measure", "gossip measurement"))
+        .flag("topology", "random", "random|shortest|chord|rapid")
+        .flag("samples", "4", "samples per node (Algorithm 3 K)")
+        .flag("rounds", "20", "gossip rounds");
+    let a = cmd.parse(raw)?;
+    let n = a.get_usize("nodes")?;
+    let model = Model::parse(a.get("model"))
+        .ok_or_else(|| anyhow::anyhow!("bad --model"))?;
+    let mut rng = Rng::new(a.get_u64("seed")?);
+    let w = model.sample(n, &mut rng);
+    let g = match a.get("topology") {
+        "random" => random_ring(n, &mut rng).to_graph(&w),
+        "shortest" => shortest_ring(&w, 0).to_graph(&w),
+        "chord" => Chord::build(n, &mut rng).to_graph(&w),
+        "rapid" => Rapid::build(n, &mut rng).to_graph(&w),
+        other => anyhow::bail!("unknown --topology {other}"),
+    };
+    let stats = measure(
+        &w,
+        &g,
+        MeasureConfig {
+            samples: a.get_usize("samples")?,
+            rounds: a.get_usize("rounds")?,
+        },
+        &mut rng,
+    );
+    println!(
+        "L_local={:.3} L_global={:.3} L_min={:.3} rho={:.3} messages={}",
+        stats.local,
+        stats.global,
+        stats.min,
+        stats.rho(),
+        stats.messages
+    );
+    let choice = dgro::dgro::select::decide(
+        &stats,
+        dgro::dgro::select::SelectConfig::default(),
+    );
+    println!("decision: {choice:?}");
+    println!("overlay diameter: {:.2}", diameter::diameter(&g));
+    Ok(())
+}
+
+fn cmd_figures(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("figures", "regenerate paper figures")
+        .flag("fig", "0", "figure number (0 with --all)")
+        .flag("out", "reports", "output directory for CSVs")
+        .switch("all", "run every figure")
+        .switch("quick", "trimmed sizes/runs (CI mode)");
+    let a = cmd.parse(raw)?;
+    let quick = a.switch("quick");
+    let out = a.get("out");
+    let figs: Vec<usize> = if a.switch("all") {
+        bench_harness::ALL_FIGURES.to_vec()
+    } else {
+        vec![a.get_usize("fig")?]
+    };
+    for fig in figs {
+        log_info!("regenerating figure {fig} (quick={quick})");
+        let tables = bench_harness::run_figure(fig, quick)?;
+        runner::emit(&tables, out)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Membership workload traces: timed join / leave / crash events for the
+//! end-to-end driver and the coordinator tests.
+
+use crate::util::rng::Rng;
+
+/// One scheduled membership change.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MembershipEvent {
+    Join { time: f64, node: u32 },
+    Leave { time: f64, node: u32 },
+    Crash { time: f64, node: u32 },
+}
+
+impl MembershipEvent {
+    pub fn time(&self) -> f64 {
+        match *self {
+            MembershipEvent::Join { time, .. }
+            | MembershipEvent::Leave { time, .. }
+            | MembershipEvent::Crash { time, .. } => time,
+        }
+    }
+
+    pub fn node(&self) -> u32 {
+        match *self {
+            MembershipEvent::Join { node, .. }
+            | MembershipEvent::Leave { node, .. }
+            | MembershipEvent::Crash { node, .. } => node,
+        }
+    }
+}
+
+/// A time-sorted trace of events.
+#[derive(Clone, Debug, Default)]
+pub struct EventTrace {
+    pub events: Vec<MembershipEvent>,
+}
+
+impl EventTrace {
+    /// Generate a churn trace over `horizon` time units: `n_alive` nodes
+    /// exist at t=0; crashes and leaves hit random alive nodes at
+    /// exponential-ish spacing; crashed/left nodes may rejoin later.
+    pub fn churn(
+        n_alive: usize,
+        horizon: f64,
+        churn_rate: f64,
+        rng: &mut Rng,
+    ) -> EventTrace {
+        let mut events = Vec::new();
+        let mut alive: Vec<u32> = (0..n_alive as u32).collect();
+        let mut gone: Vec<u32> = Vec::new();
+        let mut t = 0.0;
+        // Mean inter-event gap = 1 / (churn_rate * n).
+        let lambda = churn_rate * n_alive as f64;
+        while t < horizon {
+            // Exponential(λ) via inverse CDF.
+            t += -(1.0 - rng.f64()).ln() / lambda.max(1e-9);
+            if t >= horizon {
+                break;
+            }
+            let rejoin = !gone.is_empty() && rng.chance(0.4);
+            if rejoin {
+                let idx = rng.index(gone.len());
+                let node = gone.swap_remove(idx);
+                alive.push(node);
+                events.push(MembershipEvent::Join { time: t, node });
+            } else if alive.len() > 3 {
+                let idx = rng.index(alive.len());
+                let node = alive.swap_remove(idx);
+                gone.push(node);
+                if rng.chance(0.5) {
+                    events.push(MembershipEvent::Crash { time: t, node });
+                } else {
+                    events.push(MembershipEvent::Leave { time: t, node });
+                }
+            }
+        }
+        EventTrace { events }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_trace_is_time_sorted_and_consistent() {
+        let mut rng = Rng::new(1);
+        let trace = EventTrace::churn(50, 100.0, 0.01, &mut rng);
+        assert!(!trace.is_empty());
+        for w in trace.events.windows(2) {
+            assert!(w[0].time() <= w[1].time());
+        }
+        // A node can only rejoin after leaving.
+        let mut gone = std::collections::HashSet::new();
+        for ev in &trace.events {
+            match ev {
+                MembershipEvent::Join { node, .. } => {
+                    assert!(gone.remove(node), "join of never-left {node}");
+                }
+                MembershipEvent::Leave { node, .. }
+                | MembershipEvent::Crash { node, .. } => {
+                    assert!(gone.insert(*node), "double departure {node}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rate_gives_empty_trace() {
+        let mut rng = Rng::new(2);
+        let trace = EventTrace::churn(10, 10.0, 0.0, &mut rng);
+        assert!(trace.is_empty());
+    }
+}

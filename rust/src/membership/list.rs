@@ -1,0 +1,171 @@
+//! The membership table: per-member state with SWIM-style incarnation
+//! numbers so refutations and stale gossip resolve deterministically.
+
+use std::collections::BTreeMap;
+
+/// Lifecycle state of a member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberState {
+    Alive,
+    Suspect,
+    Faulty,
+    Left,
+}
+
+/// One member's record.
+#[derive(Clone, Debug)]
+pub struct Member {
+    pub state: MemberState,
+    /// SWIM incarnation: higher wins; Alive at incarnation i refutes
+    /// Suspect at incarnation i.
+    pub incarnation: u64,
+    /// Sim-time of the last update (for timeout bookkeeping).
+    pub updated_at: f64,
+}
+
+/// A node-local membership list.
+#[derive(Clone, Debug, Default)]
+pub struct MembershipList {
+    members: BTreeMap<u32, Member>,
+}
+
+impl MembershipList {
+    pub fn new() -> MembershipList {
+        MembershipList::default()
+    }
+
+    /// Bootstrap with `n` alive members at time 0.
+    pub fn full(n: usize) -> MembershipList {
+        let mut list = MembershipList::new();
+        for id in 0..n as u32 {
+            list.members.insert(
+                id,
+                Member {
+                    state: MemberState::Alive,
+                    incarnation: 0,
+                    updated_at: 0.0,
+                },
+            );
+        }
+        list
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn get(&self, id: u32) -> Option<&Member> {
+        self.members.get(&id)
+    }
+
+    pub fn alive(&self) -> impl Iterator<Item = u32> + '_ {
+        self.members
+            .iter()
+            .filter(|(_, m)| m.state == MemberState::Alive)
+            .map(|(&id, _)| id)
+    }
+
+    pub fn count_state(&self, s: MemberState) -> usize {
+        self.members.values().filter(|m| m.state == s).count()
+    }
+
+    /// Apply an update (the SWIM merge rule). Returns true if the record
+    /// changed (i.e. the update is news worth re-gossiping).
+    pub fn apply(
+        &mut self,
+        id: u32,
+        state: MemberState,
+        incarnation: u64,
+        now: f64,
+    ) -> bool {
+        match self.members.get_mut(&id) {
+            None => {
+                self.members.insert(
+                    id,
+                    Member {
+                        state,
+                        incarnation,
+                        updated_at: now,
+                    },
+                );
+                true
+            }
+            Some(m) => {
+                let supersedes = incarnation > m.incarnation
+                    || (incarnation == m.incarnation
+                        && rank(state) > rank(m.state));
+                if supersedes
+                    && (m.state != state || m.incarnation != incarnation)
+                {
+                    m.state = state;
+                    m.incarnation = incarnation;
+                    m.updated_at = now;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+}
+
+/// Precedence at equal incarnation: Alive < Suspect < Faulty/Left
+/// (SWIM's "suspicion overrides alive, confirmation overrides both").
+fn rank(s: MemberState) -> u8 {
+    match s {
+        MemberState::Alive => 0,
+        MemberState::Suspect => 1,
+        MemberState::Faulty => 2,
+        MemberState::Left => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bootstrap_full() {
+        let l = MembershipList::full(5);
+        assert_eq!(l.len(), 5);
+        assert_eq!(l.alive().count(), 5);
+    }
+
+    #[test]
+    fn suspect_overrides_alive_same_incarnation() {
+        let mut l = MembershipList::full(3);
+        assert!(l.apply(1, MemberState::Suspect, 0, 1.0));
+        assert_eq!(l.get(1).unwrap().state, MemberState::Suspect);
+        // Re-applying the same fact is not news.
+        assert!(!l.apply(1, MemberState::Suspect, 0, 2.0));
+    }
+
+    #[test]
+    fn higher_incarnation_refutes_suspicion() {
+        let mut l = MembershipList::full(3);
+        l.apply(1, MemberState::Suspect, 0, 1.0);
+        // Node 1 bumps incarnation to refute.
+        assert!(l.apply(1, MemberState::Alive, 1, 2.0));
+        assert_eq!(l.get(1).unwrap().state, MemberState::Alive);
+    }
+
+    #[test]
+    fn stale_alive_does_not_resurrect_faulty() {
+        let mut l = MembershipList::full(3);
+        l.apply(2, MemberState::Faulty, 0, 1.0);
+        assert!(!l.apply(2, MemberState::Alive, 0, 2.0));
+        assert_eq!(l.get(2).unwrap().state, MemberState::Faulty);
+    }
+
+    #[test]
+    fn join_inserts_new_member() {
+        let mut l = MembershipList::full(2);
+        assert!(l.apply(7, MemberState::Alive, 0, 3.0));
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.count_state(MemberState::Alive), 3);
+    }
+}

@@ -1,0 +1,12 @@
+//! Membership substrate: the list every node maintains (paper §III-A:
+//! "each node also keeps a local database, which is routinely updated
+//! through message exchanges"), SWIM-style failure detection, and
+//! join/leave/fail workload traces for the end-to-end driver.
+
+pub mod events;
+pub mod list;
+pub mod swim;
+
+pub use events::{EventTrace, MembershipEvent};
+pub use list::{MemberState, MembershipList};
+pub use swim::{SwimConfig, SwimSim};

@@ -1,0 +1,194 @@
+//! SWIM-style failure detection over an overlay (Das et al., DSN'02 —
+//! the protocol family the paper's membership layer assumes, §I/§II).
+//!
+//! Simulated on the discrete-event engine: each protocol period every
+//! alive node probes a random overlay neighbor; a missing ack within the
+//! round-trip bound marks the target Suspect, disseminated by gossip
+//! along the overlay; suspicion times out into Faulty. The quantity the
+//! paper cares about — how fast a membership change reaches everyone —
+//! is dominated by the overlay diameter, which is what DGRO minimizes.
+
+use crate::graph::Graph;
+use crate::membership::list::{MemberState, MembershipList};
+use crate::sim::broadcast::broadcast_times;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SwimConfig {
+    /// Protocol period (time between probe rounds).
+    pub period: f64,
+    /// Suspicion timeout in periods.
+    pub suspicion_periods: usize,
+}
+
+impl Default for SwimConfig {
+    fn default() -> Self {
+        SwimConfig {
+            period: 10.0,
+            suspicion_periods: 3,
+        }
+    }
+}
+
+/// Outcome of simulating detection + dissemination of one crash.
+#[derive(Clone, Debug)]
+pub struct DetectionReport {
+    /// Time from crash to first detection (probe miss -> Suspect).
+    pub detect_time: f64,
+    /// Time from crash until every alive node has the Faulty record
+    /// (detection + suspicion timeout + dissemination broadcast).
+    pub everyone_knows: f64,
+    /// Dissemination (broadcast) completion component alone.
+    pub dissemination: f64,
+}
+
+/// SWIM simulator bound to one overlay graph.
+pub struct SwimSim<'a> {
+    pub overlay: &'a Graph,
+    pub cfg: SwimConfig,
+    pub list: MembershipList,
+}
+
+impl<'a> SwimSim<'a> {
+    pub fn new(overlay: &'a Graph, cfg: SwimConfig) -> SwimSim<'a> {
+        SwimSim {
+            overlay,
+            cfg,
+            list: MembershipList::full(overlay.n()),
+        }
+    }
+
+    /// Simulate the detection of a crash of `victim` at t=0 and the
+    /// dissemination of the resulting Faulty record.
+    ///
+    /// Expected first-probe delay: each neighbor of the victim probes a
+    /// uniform neighbor each period, so detection is the minimum of
+    /// geometric waiting times — simulated exactly with the RNG.
+    pub fn crash_and_measure(
+        &mut self,
+        victim: usize,
+        proc: &[f64],
+        rng: &mut Rng,
+    ) -> DetectionReport {
+        let nbrs = self.overlay.neighbors(victim);
+        assert!(
+            !nbrs.is_empty(),
+            "victim must be connected for detection"
+        );
+        // Round in which some neighbor of the victim first probes it.
+        let mut detect_round = usize::MAX;
+        let mut detector = nbrs[0].0 as usize;
+        for &(u, _) in nbrs {
+            let u = u as usize;
+            let deg = self.overlay.degree(u);
+            // Geometric trial: each round u probes victim w.p. 1/deg.
+            let mut round = 1usize;
+            loop {
+                if rng.chance(1.0 / deg as f64) {
+                    break;
+                }
+                round += 1;
+                if round > 64 {
+                    break; // cap the tail; cheap and deterministic
+                }
+            }
+            if round < detect_round {
+                detect_round = round;
+                detector = u;
+            }
+        }
+        let detect_time = detect_round as f64 * self.cfg.period;
+
+        // Suspect immediately, Faulty after the suspicion timeout.
+        self.list.apply(victim as u32, MemberState::Suspect, 0, detect_time);
+        let confirm_time = detect_time
+            + self.cfg.suspicion_periods as f64 * self.cfg.period;
+        self.list.apply(victim as u32, MemberState::Faulty, 0, confirm_time);
+
+        // Dissemination: broadcast the Faulty record from the detector
+        // over the overlay (victim no longer relays).
+        let mut pruned = Graph::empty(self.overlay.n());
+        for (u, v, w) in self.overlay.edges() {
+            if u as usize != victim && v as usize != victim {
+                pruned.add_edge(u as usize, v as usize, w);
+            }
+        }
+        let rep = broadcast_times(&pruned, detector, proc);
+        DetectionReport {
+            detect_time,
+            everyone_knows: confirm_time + rep.completion,
+            dissemination: rep.completion,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::synthetic;
+    use crate::topology::kring::random_krings;
+
+    fn overlay(n: usize, seed: u64) -> (Graph, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let w = synthetic::uniform(n, &mut rng);
+        let kr = random_krings(n, 3, &mut rng);
+        (kr.to_graph(&w), vec![1.0; n])
+    }
+
+    #[test]
+    fn crash_detected_and_disseminated() {
+        let (g, proc) = overlay(30, 1);
+        let mut swim = SwimSim::new(&g, SwimConfig::default());
+        let mut rng = Rng::new(2);
+        let rep = swim.crash_and_measure(7, &proc, &mut rng);
+        assert!(rep.detect_time >= SwimConfig::default().period);
+        assert!(rep.dissemination > 0.0);
+        assert!(rep.everyone_knows >= rep.detect_time + 30.0);
+        assert_eq!(
+            swim.list.get(7).unwrap().state,
+            MemberState::Faulty
+        );
+    }
+
+    #[test]
+    fn lower_diameter_overlay_disseminates_faster() {
+        // The paper's core motivation, as a membership-level property:
+        // the same crash disseminates faster on a lower-diameter overlay.
+        let mut rng = Rng::new(3);
+        let w = crate::latency::fabric::sample(68, &mut rng);
+        let random_g =
+            crate::topology::random_ring(68, &mut rng).to_graph(&w);
+        let nn_g = crate::topology::shortest_ring(&w, 0).to_graph(&w);
+        let chord_like = random_krings(68, 4, &mut rng).to_graph(&w);
+        let proc = vec![1.0; 68];
+
+        let mut avg = |g: &Graph| -> f64 {
+            let mut swim = SwimSim::new(g, SwimConfig::default());
+            let mut total = 0.0;
+            for v in [5usize, 20, 40] {
+                total += swim
+                    .crash_and_measure(v, &proc, &mut rng)
+                    .dissemination;
+            }
+            total / 3.0
+        };
+        let d_kring = avg(&chord_like);
+        let d_random_ring = avg(&random_g);
+        let _d_nn = avg(&nn_g);
+        // A 4-ring expander must beat a single random ring.
+        assert!(
+            d_kring < d_random_ring,
+            "kring {d_kring} vs ring {d_random_ring}"
+        );
+    }
+
+    #[test]
+    fn membership_list_converges_to_faulty() {
+        let (g, proc) = overlay(20, 4);
+        let mut swim = SwimSim::new(&g, SwimConfig::default());
+        let mut rng = Rng::new(5);
+        let _ = swim.crash_and_measure(3, &proc, &mut rng);
+        assert_eq!(swim.list.count_state(MemberState::Faulty), 1);
+        assert_eq!(swim.list.count_state(MemberState::Alive), 19);
+    }
+}

@@ -1,0 +1,173 @@
+//! Metrics: counters, histograms, and the CSV/markdown report writers
+//! the coordinator and the figure harness share.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::stats::Summary;
+
+/// A named scalar time series (one row per observation).
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub values: Vec<f64>,
+}
+
+impl Series {
+    pub fn record(&mut self, x: f64) {
+        self.values.push(x);
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.values)
+    }
+}
+
+/// A metrics registry: counters + series, keyed by name.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    series: BTreeMap<String, Series>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn observe(&mut self, name: &str, x: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_default()
+            .record(x);
+    }
+
+    pub fn series(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// Human-readable dump (INFO logs, example outputs).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "{name:<40} {v}");
+        }
+        for (name, s) in &self.series {
+            let sum = s.summary();
+            let _ = writeln!(
+                out,
+                "{name:<40} n={:<6} mean={:<10.4} p50={:<10.4} p99={:<10.4}",
+                sum.n, sum.mean, sum.p50, sum.p99
+            );
+        }
+        out
+    }
+}
+
+/// A simple CSV table builder used by every figure harness: fixed header,
+/// rows of f64 cells, deterministic formatting.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<f64>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let cells: Vec<String> =
+                row.iter().map(|x| format!("{x}")).collect();
+            let _ = writeln!(out, "{}", cells.join(","));
+        }
+        out
+    }
+
+    /// Markdown rendering for EXPERIMENTS.md and CLI output.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let cells: Vec<String> =
+                row.iter().map(|x| format!("{x:.3}")).collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_series() {
+        let mut m = Metrics::new();
+        m.incr("requests", 2);
+        m.incr("requests", 3);
+        assert_eq!(m.counter("requests"), 5);
+        assert_eq!(m.counter("missing"), 0);
+        m.observe("latency", 1.0);
+        m.observe("latency", 3.0);
+        let s = m.series("latency").unwrap().summary();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!(m.report().contains("requests"));
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("Fig X", &["n", "diameter"]);
+        t.row(vec![50.0, 12.5]);
+        t.row(vec![100.0, 14.0]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("n,diameter\n"));
+        assert!(csv.contains("50,12.5"));
+        let md = t.to_markdown();
+        assert!(md.contains("### Fig X"));
+        assert!(md.contains("| 50.000 | 12.500 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec![1.0]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Thread-pool substrate (no rayon/tokio offline — DESIGN.md §3).
+//!
+//! Two primitives cover everything the coordinator and the parallel ring
+//! builder (paper §VI, Algorithm 4) need:
+//!   * [`ThreadPool`] — long-lived workers consuming boxed jobs.
+//!   * [`scoped_map`] — fork-join: apply a closure to every item of a
+//!     slice on `threads` OS threads and collect results in order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of worker threads executing boxed closures.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        assert!(threads > 0);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&receiver);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // channel closed -> shut down
+                    }
+                })
+            })
+            .collect();
+        ThreadPool {
+            workers,
+            sender: Some(sender),
+        }
+    }
+
+    /// Submit a job; runs as soon as a worker frees up.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.sender
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close the channel
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Fork-join map: apply `f` to every element of `items` using up to
+/// `threads` OS threads; results come back in input order. Panics in `f`
+/// propagate. Items and results cross thread boundaries by value.
+pub fn scoped_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    assert!(threads > 0);
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.min(n);
+    let work: Mutex<Vec<Option<(usize, T)>>> = Mutex::new(
+        items.into_iter().enumerate().map(Some).rev().collect(),
+    );
+    let results: Mutex<Vec<Option<R>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    let fref = &f;
+    let wref = &work;
+    let rref = &results;
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let item = { wref.lock().unwrap().pop() };
+                match item {
+                    Some(Some((idx, item))) => {
+                        let out = fref(idx, item);
+                        rref.lock().unwrap()[idx] = Some(out);
+                    }
+                    _ => break,
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("all work completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scoped_map_preserves_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let out = scoped_map(items, 8, |idx, x| {
+            assert_eq!(idx, x);
+            x * x
+        });
+        assert_eq!(out, (0..97).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_empty() {
+        let out: Vec<u32> = scoped_map(Vec::<u32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_single_thread() {
+        let out = scoped_map(vec![1, 2, 3], 1, |_, x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_map_more_threads_than_items() {
+        let out = scoped_map(vec![5], 16, |_, x| x * 2);
+        assert_eq!(out, vec![10]);
+    }
+}

@@ -1,0 +1,135 @@
+//! Property-testing mini-framework (no proptest crate offline —
+//! DESIGN.md §3).
+//!
+//! Deterministic: every case is derived from a seeded [`Rng`], and a
+//! failing case reports the case index + seed so it can be replayed
+//! exactly. Used by rust/tests/proptests.rs for the coordinator
+//! invariants (ring structure, routing, batching, state management).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath on this image;
+//! // rust/tests/proptests.rs runs this exact pattern for real)
+//! use dgro::prop::{forall, Config};
+//! forall("ring is permutation", Config::default(), |rng| {
+//!     let n = 3 + rng.index(50);
+//!     let ring = dgro::topology::random_ring(n, rng);
+//!     ring.validate().map_err(|e| e.to_string())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Knobs for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0xD62_0_2024, // stable default; override per-property
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` over `config.cases` seeded RNGs; panics with a replayable
+/// report on the first failure. `Ok(())` = pass, `Err(msg)` = fail.
+pub fn forall(
+    name: &str,
+    config: Config,
+    mut prop: impl FnMut(&mut Rng) -> Result<(), String>,
+) {
+    for case in 0..config.cases {
+        let case_seed = config
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} \
+                 (replay seed: {case_seed:#x}): {msg}",
+                config.cases
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality helper for property bodies.
+pub fn ensure_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivially true", Config::default().cases(10), |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_panics_with_seed() {
+        forall("always false", Config::default().cases(3), |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic_across_runs() {
+        let mut first = Vec::new();
+        forall("collect", Config::default().cases(5), |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        forall("collect", Config::default().cases(5), |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn ensure_helpers() {
+        assert!(ensure(true, "x").is_ok());
+        assert!(ensure(false, "x").is_err());
+        assert!(ensure_close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-9).is_err());
+    }
+}

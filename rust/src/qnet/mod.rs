@@ -1,0 +1,28 @@
+//! The DGRO Q-network on the Rust side.
+//!
+//! * [`params`] — loads `artifacts/qnet_weights.json` (the thetas trained
+//!   by python/compile/train.py).
+//! * [`state`]  — the S_t = (W, A_t, deg, v_t) encoding shared by every
+//!   scorer.
+//! * [`native`] — a pure-Rust mirror of the Q-net forward (Eqns 2–4),
+//!   bit-comparable to the JAX oracle; used to cross-validate the PJRT
+//!   path and as a dependency-free fallback scorer.
+//!
+//! The production scorer (PJRT executing the AOT HLO built from the
+//! Pallas kernels) lives in [`crate::runtime`]; both implement
+//! [`QScorer`].
+
+pub mod native;
+pub mod params;
+pub mod state;
+
+/// Anything that can score all candidate next-hops at a construction
+/// state (Algorithm 1's `argmax_v Q(S_t, v)` needs the full vector so the
+/// caller can mask visited nodes).
+pub trait QScorer {
+    /// Q-values for every node as the candidate `u` of edge (v_t -> u).
+    fn score(&mut self, st: &state::State) -> anyhow::Result<Vec<f32>>;
+
+    /// Human-readable backend name (for logs and bench labels).
+    fn name(&self) -> &'static str;
+}

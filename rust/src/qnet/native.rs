@@ -1,0 +1,343 @@
+//! Pure-Rust mirror of the Q-network forward (paper Eqns 2–4).
+//!
+//! Semantics are locked to python/compile/kernels/ref.py — any change
+//! there must be mirrored here. The integration test
+//! rust/tests/runtime_roundtrip.rs asserts this implementation and the
+//! PJRT-executed AOT HLO agree to float tolerance on the same trained
+//! weights, which is what lets it serve as (a) a cross-validation oracle
+//! for the artifact path and (b) a dependency-free fallback scorer.
+
+use anyhow::Result;
+
+use super::params::QnetParams;
+use super::state::State;
+use super::QScorer;
+
+/// Native scorer with preallocated scratch (the Algorithm-1 inner loop
+/// calls `score` N times per ring; no allocation after the first call).
+pub struct NativeQnet {
+    params: QnetParams,
+    // Scratch buffers, sized on first use.
+    wn: Vec<f32>,
+    mu: Vec<f32>,
+    mu_next: Vec<f32>,
+    neigh: Vec<f32>,
+    lat: Vec<f32>,
+    n_cached: usize,
+    // The Eqn-2 latency aggregate depends only on (W, wscale), which are
+    // fixed across a construction episode — cache it keyed by a
+    // fingerprint instead of recomputing the O(N^2 * p) reduction every
+    // step (EXPERIMENTS.md §Perf, L3 iteration 1).
+    lat_key: u64,
+}
+
+impl NativeQnet {
+    pub fn new(params: QnetParams) -> NativeQnet {
+        NativeQnet {
+            params,
+            wn: Vec::new(),
+            mu: Vec::new(),
+            mu_next: Vec::new(),
+            neigh: Vec::new(),
+            lat: Vec::new(),
+            n_cached: usize::MAX,
+            lat_key: 0,
+        }
+    }
+
+    pub fn params(&self) -> &QnetParams {
+        &self.params
+    }
+
+    fn ensure_scratch(&mut self, n: usize) {
+        let p = self.params.embed_dim;
+        if self.n_cached == n {
+            return;
+        }
+        self.wn = vec![0.0; n * n];
+        self.mu = vec![0.0; n * p];
+        self.mu_next = vec![0.0; n * p];
+        self.neigh = vec![0.0; n * p];
+        self.lat = vec![0.0; n * p];
+        self.n_cached = n;
+    }
+
+    /// Full forward; returns Q for every candidate node.
+    pub fn forward(&mut self, st: &State) -> Vec<f32> {
+        let n = st.n;
+        let p = self.params.embed_dim;
+        let h = self.params.hidden_dim;
+        let resized = self.n_cached != n;
+        self.ensure_scratch(n);
+
+        // (W, wscale) fingerprint for the per-episode caches.
+        let key = {
+            let mut h = 0xcbf29ce484222325u64 ^ (n as u64);
+            h ^= st.wscale.to_bits() as u64;
+            h = h.wrapping_mul(0x100000001b3);
+            let data = st.w.data();
+            let stride = (data.len() / 512).max(1);
+            for i in (0..data.len()).step_by(stride) {
+                h ^= data[i].to_bits() as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h
+        };
+        let w_changed = resized || key != self.lat_key;
+        if w_changed {
+            // Normalize W once per episode (wscale fixed per episode).
+            let inv = 1.0 / st.wscale;
+            for (o, &x) in self.wn.iter_mut().zip(st.w.data()) {
+                *o = x * inv;
+            }
+        }
+
+        let t1 = &self.params.thetas[0].data;
+        let t2 = &self.params.thetas[1].data;
+        let t3 = &self.params.thetas[2].data;
+        let t4 = &self.params.thetas[3].data;
+        let t5 = &self.params.thetas[4].data;
+        let t6 = &self.params.thetas[5].data;
+        let t7 = &self.params.thetas[6].data;
+        let t8 = &self.params.thetas[7].data;
+        let t9 = &self.params.thetas[8].data;
+        let t10 = &self.params.thetas[9].data;
+
+        // The latency aggregate lat[v,k] = sum_u relu(wn[v,u] * t4[k]) is
+        // iteration- AND step-independent (depends only on W/wscale):
+        // recompute only when the episode's matrix changes.
+        if w_changed {
+            for v in 0..n {
+                let row = &self.wn[v * n..(v + 1) * n];
+                let out = &mut self.lat[v * p..(v + 1) * p];
+                out.fill(0.0);
+                for &wvu in row {
+                    if wvu == 0.0 {
+                        continue; // diagonal / padding
+                    }
+                    for k in 0..p {
+                        let x = wvu * t4[k];
+                        if x > 0.0 {
+                            out[k] += x;
+                        }
+                    }
+                }
+            }
+            self.lat_key = key;
+        }
+
+        // T embedding iterations.
+        self.mu.fill(0.0);
+        for _ in 0..self.params.n_iters {
+            // neigh = A @ mu  (A is 0/1: sum neighbor embeddings).
+            self.neigh.fill(0.0);
+            for v in 0..n {
+                let arow = &st.a[v * n..(v + 1) * n];
+                let nrow_start = v * p;
+                for (u, &auv) in arow.iter().enumerate() {
+                    if auv != 0.0 {
+                        let murow = &self.mu[u * p..(u + 1) * p];
+                        let nrow =
+                            &mut self.neigh[nrow_start..nrow_start + p];
+                        for k in 0..p {
+                            nrow[k] += auv * murow[k];
+                        }
+                    }
+                }
+            }
+            // mu' = relu(deg*t1 + neigh@t2^T + lat@t3^T)
+            for v in 0..n {
+                let nrow = &self.neigh[v * p..(v + 1) * p];
+                let lrow = &self.lat[v * p..(v + 1) * p];
+                let orow = &mut self.mu_next[v * p..(v + 1) * p];
+                for k in 0..p {
+                    let mut acc = st.deg[v] * t1[k];
+                    let t2row = &t2[k * p..(k + 1) * p];
+                    let t3row = &t3[k * p..(k + 1) * p];
+                    for j in 0..p {
+                        acc += t2row[j] * nrow[j] + t3row[j] * lrow[j];
+                    }
+                    orow[k] = acc.max(0.0);
+                }
+            }
+            std::mem::swap(&mut self.mu, &mut self.mu_next);
+        }
+
+        // Head features.
+        let mut musum = vec![0.0f32; p];
+        for v in 0..n {
+            let murow = &self.mu[v * p..(v + 1) * p];
+            for k in 0..p {
+                musum[k] += murow[k];
+            }
+        }
+        let muv = &self.mu[st.cur * p..(st.cur + 1) * p];
+        let matvec = |m: &[f32], x: &[f32]| -> Vec<f32> {
+            (0..p)
+                .map(|k| {
+                    m[k * p..(k + 1) * p]
+                        .iter()
+                        .zip(x)
+                        .map(|(a, b)| a * b)
+                        .sum()
+                })
+                .collect()
+        };
+        let gsum = matvec(t5, &musum);
+        let gcur = matvec(t6, muv);
+        // Head feature wrow = w(v_t, u) / mean(W). The embedding buffer
+        // holds w / (N * mean) = w / wscale, so scale by N.
+        let wrow: Vec<f32> = self.wn
+            [st.cur * n..(st.cur + 1) * n]
+            .iter()
+            .map(|&x| x * n as f32)
+            .collect();
+
+        // Per-candidate MLP (Eqns 3-4), with the candidate-independent
+        // first-layer contribution hoisted out of the loop — the same
+        // rank-1 factorization the Pallas qhead kernel uses:
+        //   relu(x)@t8^T = relu(w)      * t8[:,0]
+        //               + relu(gsum)    @ t8[:,1..p+1]^T      (hoisted)
+        //               + relu(gcur)    @ t8[:,p+1..2p+1]^T   (hoisted)
+        //               + relu(t7@mu_u) @ t8[:,2p+1..]^T
+        // (EXPERIMENTS.md §Perf, L3 iteration 2.)
+        let d = 3 * p + 1;
+        let mut q = vec![0.0f32; n];
+        let mut gcand = vec![0.0f32; p];
+        let mut h1 = vec![0.0f32; h];
+        let mut h2 = vec![0.0f32; h];
+        // const_h[i] = sum_k t8[i,1+k]*relu(gsum[k]) + t8[i,1+p+k]*relu(gcur[k])
+        let mut const_h = vec![0.0f32; h];
+        for i in 0..h {
+            let row = &t8[i * d..(i + 1) * d];
+            let mut acc = 0.0f32;
+            for k in 0..p {
+                acc += row[1 + k] * gsum[k].max(0.0)
+                    + row[1 + p + k] * gcur[k].max(0.0);
+            }
+            const_h[i] = acc;
+        }
+        for u in 0..n {
+            let muu = &self.mu[u * p..(u + 1) * p];
+            for k in 0..p {
+                // relu(t7 @ mu_u)
+                gcand[k] = t7[k * p..(k + 1) * p]
+                    .iter()
+                    .zip(muu)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+                    .max(0.0);
+            }
+            let wpos = wrow[u].max(0.0);
+            for i in 0..h {
+                let row = &t8[i * d..(i + 1) * d];
+                let mut acc = const_h[i] + row[0] * wpos;
+                let cand_row = &row[1 + 2 * p..d];
+                for k in 0..p {
+                    acc += cand_row[k] * gcand[k];
+                }
+                h1[i] = acc.max(0.0);
+            }
+            // h2 = relu(t9 @ h1)
+            for i in 0..h {
+                let row = &t9[i * h..(i + 1) * h];
+                let mut acc = 0.0f32;
+                for j in 0..h {
+                    acc += row[j] * h1[j];
+                }
+                h2[i] = acc.max(0.0);
+            }
+            q[u] = h2.iter().zip(t10).map(|(a, b)| a * b).sum();
+        }
+        q
+    }
+}
+
+impl QScorer for NativeQnet {
+    fn score(&mut self, st: &State) -> Result<Vec<f32>> {
+        Ok(self.forward(st))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::synthetic;
+    use crate::qnet::params::QnetParams;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize) -> (NativeQnet, State) {
+        let params = QnetParams::synthetic(16, 32, 7);
+        let mut rng = Rng::new(n as u64);
+        let w = synthetic::uniform(n, &mut rng);
+        (NativeQnet::new(params), State::new(&w, 0))
+    }
+
+    #[test]
+    fn forward_shape_and_finite() {
+        let (mut net, st) = setup(20);
+        let q = net.forward(&st);
+        assert_eq!(q.len(), 20);
+        assert!(q.iter().all(|x| x.is_finite()));
+        // Non-degenerate: candidates must not all score identically
+        // (wrow and mu_u differ per candidate).
+        let spread = q.iter().cloned().fold(f32::MIN, f32::max)
+            - q.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread > 0.0);
+    }
+
+    #[test]
+    fn forward_deterministic() {
+        let (mut net, st) = setup(16);
+        let q1 = net.forward(&st);
+        let q2 = net.forward(&st);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn state_changes_change_scores() {
+        let (mut net, mut st) = setup(12);
+        let q0 = net.forward(&st);
+        st.step(5);
+        let q1 = net.forward(&st);
+        assert_ne!(q0, q1);
+    }
+
+    #[test]
+    fn scale_invariance_of_default_wscale() {
+        // Scaling W (and wscale with it) must not change Q at all.
+        let params = QnetParams::synthetic(16, 32, 9);
+        let mut rng = Rng::new(5);
+        let w = synthetic::uniform(14, &mut rng);
+        let mut st1 = State::new(&w, 0);
+        let w10 =
+            crate::latency::LatencyMatrix::from_fn(14, |u, v| w.get(u, v) * 10.0);
+        let mut st2 = State::new(&w10, 0);
+        st1.step(3);
+        st2.step(3);
+        let mut net = NativeQnet::new(params);
+        let q1 = net.forward(&st1);
+        let q2 = net.forward(&st2);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_sizes() {
+        let params = QnetParams::synthetic(16, 32, 3);
+        let mut net = NativeQnet::new(params);
+        for n in [8usize, 16, 8, 24] {
+            let mut rng = Rng::new(n as u64);
+            let w = synthetic::uniform(n, &mut rng);
+            let st = State::new(&w, 0);
+            let q = net.forward(&st);
+            assert_eq!(q.len(), n);
+            assert!(q.iter().all(|x| x.is_finite()));
+        }
+    }
+}

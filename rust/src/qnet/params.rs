@@ -1,0 +1,237 @@
+//! Q-network parameter loading (`artifacts/qnet_weights.json`).
+//!
+//! The JSON layout is written by python/compile/train.py::save_weights
+//! (`format: dgro-qnet-v1`); PARAM_ORDER must match model.PARAM_ORDER.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+
+/// Canonical parameter order — identical to python model.PARAM_ORDER and
+/// to the AOT HLO's leading parameter positions.
+pub const PARAM_ORDER: [&str; 10] =
+    ["t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10"];
+
+/// One theta: shape + row-major f32 data.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The full trained parameter set.
+#[derive(Clone, Debug)]
+pub struct QnetParams {
+    pub embed_dim: usize,
+    pub hidden_dim: usize,
+    pub n_iters: usize,
+    /// Tensors in PARAM_ORDER.
+    pub thetas: Vec<Tensor>,
+}
+
+impl QnetParams {
+    pub fn theta(&self, name: &str) -> &Tensor {
+        let idx = PARAM_ORDER
+            .iter()
+            .position(|&n| n == name)
+            .unwrap_or_else(|| panic!("unknown theta '{name}'"));
+        &self.thetas[idx]
+    }
+
+    /// Load from the artifact JSON.
+    pub fn load(path: impl AsRef<Path>) -> Result<QnetParams> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(|| {
+            format!("reading qnet weights {:?}", path.as_ref())
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<QnetParams> {
+        let root = json::parse(text)?;
+        let format = root.get("format")?.as_str()?;
+        if format != "dgro-qnet-v1" {
+            bail!("unsupported weight format '{format}'");
+        }
+        let embed_dim = root.get("embed_dim")?.as_usize()?;
+        let hidden_dim = root.get("hidden_dim")?.as_usize()?;
+        let n_iters = root.get("n_iters")?.as_usize()?;
+        let params = root.get("params")?;
+        let mut thetas = Vec::with_capacity(PARAM_ORDER.len());
+        for name in PARAM_ORDER {
+            let entry = params
+                .get(name)
+                .with_context(|| format!("theta '{name}'"))?;
+            let shape = entry.get("shape")?.as_usize_vec()?;
+            let data = entry.get("data")?.as_f32_vec()?;
+            let numel: usize = shape.iter().product();
+            if data.len() != numel {
+                bail!(
+                    "theta '{name}': shape {shape:?} wants {numel} values, \
+                     got {}",
+                    data.len()
+                );
+            }
+            thetas.push(Tensor { shape, data });
+        }
+        let qp = QnetParams {
+            embed_dim,
+            hidden_dim,
+            n_iters,
+            thetas,
+        };
+        qp.validate()?;
+        Ok(qp)
+    }
+
+    /// Check the canonical shapes (mirror of model.param_shapes).
+    pub fn validate(&self) -> Result<()> {
+        let p = self.embed_dim;
+        let h = self.hidden_dim;
+        let want: [(&str, Vec<usize>); 10] = [
+            ("t1", vec![p]),
+            ("t2", vec![p, p]),
+            ("t3", vec![p, p]),
+            ("t4", vec![p]),
+            ("t5", vec![p, p]),
+            ("t6", vec![p, p]),
+            ("t7", vec![p, p]),
+            ("t8", vec![h, 3 * p + 1]),
+            ("t9", vec![h, h]),
+            ("t10", vec![h]),
+        ];
+        for (i, (name, shape)) in want.iter().enumerate() {
+            if &self.thetas[i].shape != shape {
+                bail!(
+                    "theta '{name}' has shape {:?}, want {shape:?}",
+                    self.thetas[i].shape
+                );
+            }
+            if !self.thetas[i].data.iter().all(|x| x.is_finite()) {
+                bail!("theta '{name}' contains non-finite values");
+            }
+        }
+        if self.n_iters == 0 || self.n_iters > 16 {
+            bail!("implausible n_iters {}", self.n_iters);
+        }
+        Ok(())
+    }
+
+    /// Deterministic synthetic parameters for tests (no artifact needed).
+    pub fn synthetic(embed_dim: usize, hidden_dim: usize, seed: u64) -> QnetParams {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let p = embed_dim;
+        let h = hidden_dim;
+        let shapes: [Vec<usize>; 10] = [
+            vec![p],
+            vec![p, p],
+            vec![p, p],
+            vec![p],
+            vec![p, p],
+            vec![p, p],
+            vec![p, p],
+            vec![h, 3 * p + 1],
+            vec![h, h],
+            vec![h],
+        ];
+        let thetas = shapes
+            .into_iter()
+            .map(|shape| {
+                let numel: usize = shape.iter().product();
+                let fan_in = *shape.last().unwrap();
+                let scale = (2.0 / fan_in as f64).sqrt();
+                let data = (0..numel)
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect();
+                Tensor { shape, data }
+            })
+            .collect();
+        QnetParams {
+            embed_dim,
+            hidden_dim,
+            n_iters: 3,
+            thetas,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_json() -> String {
+        // p=1, h=1 -> t8 is (1, 4).
+        let t = |vals: &str, shape: &str| {
+            format!("{{\"shape\": {shape}, \"data\": {vals}}}")
+        };
+        format!(
+            "{{\"format\": \"dgro-qnet-v1\", \"embed_dim\": 1, \
+             \"hidden_dim\": 1, \"n_iters\": 2, \"params\": {{\
+             \"t1\": {}, \"t2\": {}, \"t3\": {}, \"t4\": {}, \
+             \"t5\": {}, \"t6\": {}, \"t7\": {}, \"t8\": {}, \
+             \"t9\": {}, \"t10\": {}}}}}",
+            t("[0.1]", "[1]"),
+            t("[0.2]", "[1,1]"),
+            t("[0.3]", "[1,1]"),
+            t("[0.4]", "[1]"),
+            t("[0.5]", "[1,1]"),
+            t("[0.6]", "[1,1]"),
+            t("[0.7]", "[1,1]"),
+            t("[1,2,3,4]", "[1,4]"),
+            t("[0.9]", "[1,1]"),
+            t("[1.0]", "[1]"),
+        )
+    }
+
+    #[test]
+    fn parse_valid_weights() {
+        let qp = QnetParams::parse(&tiny_json()).unwrap();
+        assert_eq!(qp.embed_dim, 1);
+        assert_eq!(qp.n_iters, 2);
+        assert_eq!(qp.theta("t8").data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(qp.theta("t1").shape, vec![1]);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = tiny_json().replace("dgro-qnet-v1", "v999");
+        assert!(QnetParams::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let bad = tiny_json().replace(
+            "{\"shape\": [1], \"data\": [0.1]}",
+            "{\"shape\": [2], \"data\": [0.1]}",
+        );
+        assert!(QnetParams::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn synthetic_params_validate() {
+        let qp = QnetParams::synthetic(16, 32, 7);
+        qp.validate().unwrap();
+        assert_eq!(qp.theta("t8").shape, vec![32, 49]);
+    }
+
+    #[test]
+    fn loads_real_artifact_if_present() {
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/qnet_weights.json"
+        );
+        if std::path::Path::new(path).exists() {
+            let qp = QnetParams::load(path).unwrap();
+            assert_eq!(qp.embed_dim, 16);
+            assert_eq!(qp.hidden_dim, 32);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Construction-state encoding S_t = (W, A_t, deg, v_t) shared by the
+//! native and PJRT scorers, with incremental edge updates so Algorithm
+//! 1's loop never rebuilds the matrices.
+
+use crate::latency::LatencyMatrix;
+
+/// Mutable Q-net input state for one construction episode.
+///
+/// `a` is the row-major adjacency of the partial solution G_t (0/1 f32 —
+/// the exact dtype the HLO expects), `deg` the degree feature, `cur` the
+/// cursor node v_t, `visited` the mask the scorers' caller applies before
+/// argmax. `wscale` is fixed at episode start from the *unpadded* matrix
+/// (see python model.default_wscale).
+#[derive(Clone, Debug)]
+pub struct State {
+    pub n: usize,
+    pub w: LatencyMatrix,
+    pub a: Vec<f32>,
+    pub deg: Vec<f32>,
+    pub cur: usize,
+    pub visited: Vec<bool>,
+    pub wscale: f32,
+}
+
+impl State {
+    /// Fresh state: empty partial solution, cursor at `start`.
+    pub fn new(w: &LatencyMatrix, start: usize) -> State {
+        let n = w.n();
+        assert!(start < n);
+        let mut visited = vec![false; n];
+        visited[start] = true;
+        State {
+            n,
+            w: w.clone(),
+            a: vec![0.0; n * n],
+            deg: vec![0.0; n],
+            cur: start,
+            visited,
+            wscale: w.wscale(),
+        }
+    }
+
+    /// Continue an episode on an existing partial topology (K-ring
+    /// construction accumulates A across rings, paper §IV-B).
+    pub fn with_cursor(mut self, start: usize) -> State {
+        assert!(start < self.n);
+        self.visited.fill(false);
+        self.visited[start] = true;
+        self.cur = start;
+        self
+    }
+
+    /// Record edge (cur -> next) and advance the cursor.
+    pub fn step(&mut self, next: usize) {
+        assert!(!self.visited[next], "node {next} already visited");
+        self.add_edge(self.cur, next);
+        self.visited[next] = true;
+        self.cur = next;
+    }
+
+    /// Close the ring back to `start` (does not move the cursor).
+    pub fn close(&mut self, start: usize) {
+        self.add_edge(self.cur, start);
+    }
+
+    /// Add an undirected edge into A / deg (idempotent).
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        if u == v || self.a[u * self.n + v] != 0.0 {
+            return;
+        }
+        self.a[u * self.n + v] = 1.0;
+        self.a[v * self.n + u] = 1.0;
+        self.deg[u] += 1.0;
+        self.deg[v] += 1.0;
+    }
+
+    /// One-hot cursor vector (allocated; the PJRT scorer builds its own
+    /// padded version instead).
+    pub fn vcur(&self) -> Vec<f32> {
+        let mut v = vec![0.0; self.n];
+        v[self.cur] = 1.0;
+        v
+    }
+
+    /// Indices still selectable.
+    pub fn unvisited(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.n).filter(|&i| !self.visited[i])
+    }
+
+    pub fn done(&self) -> bool {
+        self.visited.iter().all(|&v| v)
+    }
+
+    /// Mask a raw Q vector: visited nodes to -inf, then argmax. Returns
+    /// None when everything is visited.
+    pub fn argmax_unvisited(&self, q: &[f32]) -> Option<usize> {
+        debug_assert!(q.len() >= self.n);
+        let mut best = None;
+        let mut best_q = f32::NEG_INFINITY;
+        for i in 0..self.n {
+            if !self.visited[i] && q[i] > best_q {
+                best_q = q[i];
+                best = Some(i);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::synthetic;
+    use crate::util::rng::Rng;
+
+    fn state() -> State {
+        let mut rng = Rng::new(1);
+        let w = synthetic::uniform(6, &mut rng);
+        State::new(&w, 2)
+    }
+
+    #[test]
+    fn fresh_state_invariants() {
+        let st = state();
+        assert_eq!(st.cur, 2);
+        assert!(st.visited[2]);
+        assert_eq!(st.visited.iter().filter(|&&v| v).count(), 1);
+        assert!(st.a.iter().all(|&x| x == 0.0));
+        assert!(st.wscale > 0.0);
+    }
+
+    #[test]
+    fn step_updates_adjacency_and_cursor() {
+        let mut st = state();
+        st.step(4);
+        assert_eq!(st.cur, 4);
+        assert!(st.visited[4]);
+        assert_eq!(st.a[2 * 6 + 4], 1.0);
+        assert_eq!(st.a[4 * 6 + 2], 1.0);
+        assert_eq!(st.deg[2], 1.0);
+        assert_eq!(st.deg[4], 1.0);
+    }
+
+    #[test]
+    fn close_adds_final_edge() {
+        let mut st = state();
+        for v in [0usize, 1, 3, 4, 5] {
+            st.step(v);
+        }
+        assert!(st.done());
+        st.close(2);
+        assert_eq!(st.a[5 * 6 + 2], 1.0);
+        assert_eq!(st.deg[2], 2.0);
+    }
+
+    #[test]
+    fn argmax_respects_mask() {
+        let mut st = state();
+        st.step(0);
+        let q = vec![100.0, 5.0, 100.0, 7.0, 1.0, 2.0];
+        // 0 and 2 are visited -> best unvisited is 3.
+        assert_eq!(st.argmax_unvisited(&q), Some(3));
+    }
+
+    #[test]
+    fn argmax_none_when_done() {
+        let mut st = state();
+        for v in [0usize, 1, 3, 4, 5] {
+            st.step(v);
+        }
+        assert_eq!(st.argmax_unvisited(&[0.0; 6]), None);
+    }
+
+    #[test]
+    fn with_cursor_keeps_topology_resets_visits() {
+        let mut st = state();
+        st.step(0);
+        st.step(1);
+        let st2 = st.clone().with_cursor(5);
+        assert_eq!(st2.cur, 5);
+        assert_eq!(st2.visited.iter().filter(|&&v| v).count(), 1);
+        // Edges survive into the next ring's episode.
+        assert_eq!(st2.a[2 * 6 + 0], 1.0);
+        assert_eq!(st2.deg[1], 1.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Artifact discovery: `artifacts/meta.json` + size-bucketed HLO files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::qnet::params::QnetParams;
+use crate::util::json;
+
+/// The artifact set produced by `make artifacts`.
+#[derive(Clone, Debug)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    /// Ascending size buckets (node capacity per exported HLO).
+    pub buckets: Vec<usize>,
+    pub embed_dim: usize,
+    pub hidden_dim: usize,
+    pub n_iters: usize,
+}
+
+impl ArtifactStore {
+    /// Discover artifacts in `dir` (reads meta.json and verifies the HLO
+    /// files exist).
+    pub fn discover(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`)"))?;
+        let meta = json::parse(&text)?;
+        if meta.get("format")?.as_str()? != "dgro-artifacts-v1" {
+            bail!("unsupported artifact format");
+        }
+        let mut buckets = meta.get("buckets")?.as_usize_vec()?;
+        buckets.sort_unstable();
+        if buckets.is_empty() {
+            bail!("no HLO buckets in meta.json");
+        }
+        let store = ArtifactStore {
+            embed_dim: meta.get("embed_dim")?.as_usize()?,
+            hidden_dim: meta.get("hidden_dim")?.as_usize()?,
+            n_iters: meta.get("n_iters")?.as_usize()?,
+            dir,
+            buckets,
+        };
+        for &b in &store.buckets {
+            let p = store.hlo_path(b);
+            if !p.exists() {
+                bail!("missing HLO artifact {p:?}");
+            }
+        }
+        Ok(store)
+    }
+
+    /// Default location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    pub fn hlo_path(&self, bucket: usize) -> PathBuf {
+        self.dir.join(format!("qnet_{bucket}.hlo.txt"))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("qnet_weights.json")
+    }
+
+    /// Load the trained thetas and check they match the artifact dims.
+    pub fn load_params(&self) -> Result<QnetParams> {
+        let qp = QnetParams::load(self.weights_path())?;
+        if qp.embed_dim != self.embed_dim
+            || qp.hidden_dim != self.hidden_dim
+            || qp.n_iters != self.n_iters
+        {
+            bail!(
+                "weights dims (p={}, h={}, T={}) do not match artifacts \
+                 (p={}, h={}, T={})",
+                qp.embed_dim,
+                qp.hidden_dim,
+                qp.n_iters,
+                self.embed_dim,
+                self.hidden_dim,
+                self.n_iters
+            );
+        }
+        Ok(qp)
+    }
+
+    /// Smallest bucket that can hold `n` nodes.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "graph size {n} exceeds the largest HLO bucket {} — \
+                     paper §V: the Q-net regime tops out around N=200; use \
+                     the adaptive heuristic path for larger overlays",
+                    self.buckets.last().unwrap()
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn real_store() -> Option<ArtifactStore> {
+        ArtifactStore::discover(ArtifactStore::default_dir()).ok()
+    }
+
+    #[test]
+    fn bucket_selection() {
+        if let Some(store) = real_store() {
+            assert_eq!(store.bucket_for(10).unwrap(), 16);
+            assert_eq!(store.bucket_for(16).unwrap(), 16);
+            assert_eq!(store.bucket_for(17).unwrap(), 32);
+            assert_eq!(store.bucket_for(200).unwrap(), 256);
+            assert!(store.bucket_for(100_000).is_err());
+        }
+    }
+
+    #[test]
+    fn discover_reports_missing_dir() {
+        let err = ArtifactStore::discover("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn params_match_artifacts() {
+        if let Some(store) = real_store() {
+            let qp = store.load_params().unwrap();
+            assert_eq!(qp.embed_dim, store.embed_dim);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts from the L3 hot
+//! path. Python never runs here — `artifacts/qnet_*.hlo.txt` were
+//! lowered once by `make artifacts` (python/compile/aot.py) and this
+//! module replays them on the `xla` crate's CPU PJRT client.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::ArtifactStore;
+pub use pjrt::PjrtQnet;

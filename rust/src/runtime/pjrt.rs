@@ -1,0 +1,229 @@
+//! PJRT-backed Q-net scorer: compiles the AOT HLO once per size bucket
+//! and executes it from Algorithm 1's inner loop.
+//!
+//! Perf notes (EXPERIMENTS.md §Perf):
+//!   * executables are compiled lazily and cached per bucket;
+//!   * the 10 theta tensors are uploaded once per bucket as
+//!     device-resident `PjRtBuffer`s and reused via `execute_b` — only
+//!     the 4 state tensors (W, A, deg, vcur) + the wscale scalar move
+//!     per call, and W only when the graph changes;
+//!   * graphs are zero-padded to the bucket size; the exported model
+//!     takes the *unpadded* wscale so padding does not perturb Q-values
+//!     (see python/tests/test_aot.py::test_padding_to_bucket_preserves_q_values).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::ArtifactStore;
+use crate::qnet::params::QnetParams;
+use crate::qnet::state::State;
+use crate::qnet::QScorer;
+
+struct BucketExe {
+    exe: PjRtLoadedExecutable,
+    /// Device-resident theta buffers (uploaded once).
+    theta_bufs: Vec<PjRtBuffer>,
+    /// Cached device-resident W for the current graph (keyed by a cheap
+    /// fingerprint of the matrix) — ring construction calls score() N
+    /// times on the same W.
+    w_buf: Option<(u64, PjRtBuffer)>,
+}
+
+/// Q-net scorer executing the AOT artifact on the PJRT CPU client.
+pub struct PjrtQnet {
+    client: PjRtClient,
+    store: ArtifactStore,
+    params: QnetParams,
+    exes: HashMap<usize, BucketExe>,
+    // Reusable padded host staging buffers.
+    stage_a: Vec<f32>,
+    stage_deg: Vec<f32>,
+    stage_vcur: Vec<f32>,
+}
+
+impl PjrtQnet {
+    /// Build from an artifact directory (compiles nothing yet).
+    pub fn new(store: ArtifactStore) -> Result<PjrtQnet> {
+        let params = store.load_params()?;
+        let client = PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(PjrtQnet {
+            client,
+            store,
+            params,
+            exes: HashMap::new(),
+            stage_a: Vec::new(),
+            stage_deg: Vec::new(),
+            stage_vcur: Vec::new(),
+        })
+    }
+
+    /// Convenience: discover artifacts in the default location.
+    pub fn from_default_artifacts() -> Result<PjrtQnet> {
+        PjrtQnet::new(ArtifactStore::discover(ArtifactStore::default_dir())?)
+    }
+
+    pub fn params(&self) -> &QnetParams {
+        &self.params
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// Compile (or fetch) the executable for a bucket, with the theta
+    /// buffers already device-resident.
+    fn bucket_exe(&mut self, bucket: usize) -> Result<&mut BucketExe> {
+        if !self.exes.contains_key(&bucket) {
+            let path = self.store.hlo_path(bucket);
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(to_anyhow)
+                .with_context(|| format!("parsing HLO {path:?}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+            let theta_bufs = self
+                .params
+                .thetas
+                .iter()
+                .map(|t| {
+                    self.client
+                        .buffer_from_host_buffer(&t.data, &t.shape, None)
+                        .map_err(to_anyhow)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            self.exes.insert(
+                bucket,
+                BucketExe {
+                    exe,
+                    theta_bufs,
+                    w_buf: None,
+                },
+            );
+        }
+        Ok(self.exes.get_mut(&bucket).unwrap())
+    }
+
+    /// Execute the Q-net for `st`, returning Q for the first `st.n`
+    /// candidates (pad lanes dropped).
+    pub fn forward(&mut self, st: &State) -> Result<Vec<f32>> {
+        let n = st.n;
+        let bucket = self.store.bucket_for(n)?;
+
+        // Stage padded state tensors on the host.
+        self.stage_a.clear();
+        self.stage_a.resize(bucket * bucket, 0.0);
+        for r in 0..n {
+            self.stage_a[r * bucket..r * bucket + n]
+                .copy_from_slice(&st.a[r * n..(r + 1) * n]);
+        }
+        self.stage_deg.clear();
+        self.stage_deg.resize(bucket, 0.0);
+        self.stage_deg[..n].copy_from_slice(&st.deg);
+        self.stage_vcur.clear();
+        self.stage_vcur.resize(bucket, 0.0);
+        self.stage_vcur[st.cur] = 1.0;
+
+        let w_fp = fingerprint(st.w.data(), st.n);
+        let client = self.client.clone();
+
+        // Upload the per-call state tensors before taking the mutable
+        // borrow on the bucket cache (borrow-checker friendly ordering).
+        let a_buf = client
+            .buffer_from_host_buffer(&self.stage_a, &[bucket, bucket], None)
+            .map_err(to_anyhow)?;
+        let deg_buf = client
+            .buffer_from_host_buffer(&self.stage_deg, &[bucket], None)
+            .map_err(to_anyhow)?;
+        let vcur_buf = client
+            .buffer_from_host_buffer(&self.stage_vcur, &[bucket], None)
+            .map_err(to_anyhow)?;
+        let scale_buf = client
+            .buffer_from_host_buffer(&[st.wscale], &[], None)
+            .map_err(to_anyhow)?;
+        // Head-feature normalizer: mean(W) of the *unpadded* matrix
+        // (= wscale / N; see python model.default_wmean).
+        let wmean = st.wscale / st.n as f32;
+        let mean_buf = client
+            .buffer_from_host_buffer(&[wmean], &[], None)
+            .map_err(to_anyhow)?;
+
+        let be = self.bucket_exe(bucket)?;
+
+        // Upload W only when the graph changed since the last call.
+        let need_w = match &be.w_buf {
+            Some((fp, _)) => *fp != w_fp,
+            None => true,
+        };
+        if need_w {
+            let padded = st.w.padded_data(bucket);
+            let buf = client
+                .buffer_from_host_buffer(&padded, &[bucket, bucket], None)
+                .map_err(to_anyhow)?;
+            be.w_buf = Some((w_fp, buf));
+        }
+
+        let mut args: Vec<&PjRtBuffer> = be.theta_bufs.iter().collect();
+        let (_, w_buf) = be.w_buf.as_ref().unwrap();
+        args.push(w_buf);
+        args.push(&a_buf);
+        args.push(&deg_buf);
+        args.push(&vcur_buf);
+        args.push(&scale_buf);
+        args.push(&mean_buf);
+
+        let outs = be.exe.execute_b(&args).map_err(to_anyhow)?;
+        let lit = outs[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let q_lit = lit.to_tuple1().map_err(to_anyhow)?;
+        let mut q = q_lit.to_vec::<f32>().map_err(to_anyhow)?;
+        q.truncate(n);
+        Ok(q)
+    }
+}
+
+impl QScorer for PjrtQnet {
+    fn score(&mut self, st: &State) -> Result<Vec<f32>> {
+        self.forward(st)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Cheap structural fingerprint of a latency matrix (FNV over the bits).
+fn fingerprint(data: &[f32], n: usize) -> u64 {
+    let mut h = 0xcbf29ce484222325u64 ^ (n as u64);
+    // Sample up to 1024 entries + the full first row for speed.
+    let stride = (data.len() / 1024).max(1);
+    for i in (0..data.len()).step_by(stride) {
+        h ^= data[i].to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// xla::Error -> anyhow::Error adapter (xla's error type is not Send-safe
+/// friendly with `?` into anyhow directly because it lacks the blanket
+/// impl on this version).
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    //! The heavier PJRT round-trip tests (vs NativeQnet on trained
+    //! weights, bucket padding equivalence) live in
+    //! rust/tests/runtime_roundtrip.rs since they need artifacts.
+
+    use super::*;
+
+    #[test]
+    fn fingerprint_discriminates() {
+        let a = vec![1.0f32; 64];
+        let mut b = a.clone();
+        b[5] = 2.0;
+        assert_ne!(fingerprint(&a, 8), fingerprint(&b, 8));
+        assert_eq!(fingerprint(&a, 8), fingerprint(&a.clone(), 8));
+    }
+}

@@ -1,0 +1,158 @@
+//! Membership-update broadcast over an overlay (paper §III-A): when a
+//! node initiates or receives an update it relays to all neighbors;
+//! delivery over (u, v) takes δ(u, v) plus the receiver's processing
+//! delay Δ_v. The completion time of a broadcast from the worst-case
+//! source is the *latency realization* of the topology's diameter — the
+//! quantity the whole paper optimizes.
+
+use super::engine::{Engine, EventKind};
+use crate::graph::Graph;
+
+/// Result of one broadcast simulation.
+#[derive(Clone, Debug)]
+pub struct BroadcastReport {
+    /// First-arrival time per node (f64::INFINITY if unreachable).
+    pub arrival: Vec<f64>,
+    /// Time the last reachable node heard the update.
+    pub completion: f64,
+    /// Messages sent (every relay counts — gossip cost accounting).
+    pub messages: u64,
+}
+
+/// Simulate a broadcast from `src` over `g`, with per-node processing
+/// delays `proc` (Δ_v; may be all-zero).
+pub fn broadcast_times(g: &Graph, src: usize, proc: &[f64]) -> BroadcastReport {
+    let n = g.n();
+    assert_eq!(proc.len(), n);
+    let mut engine = Engine::new();
+    let mut arrival = vec![f64::INFINITY; n];
+    let mut messages = 0u64;
+
+    arrival[src] = 0.0;
+    // Source relays immediately to every neighbor.
+    for &(v, w) in g.neighbors(src) {
+        engine.schedule(
+            w as f64 + proc[v as usize],
+            EventKind::Deliver {
+                src: src as u32,
+                dst: v,
+                tag: 0,
+            },
+        );
+        messages += 1;
+    }
+
+    while let Some(ev) = engine.next() {
+        if let EventKind::Deliver { dst, .. } = ev.kind {
+            let u = dst as usize;
+            if arrival[u].is_finite() {
+                continue; // duplicate — already relayed
+            }
+            arrival[u] = ev.time;
+            for &(v, w) in g.neighbors(u) {
+                if arrival[v as usize].is_finite() {
+                    continue;
+                }
+                engine.schedule_in(
+                    w as f64 + proc[v as usize],
+                    EventKind::Deliver {
+                        src: dst,
+                        dst: v,
+                        tag: 0,
+                    },
+                );
+                messages += 1;
+            }
+        }
+    }
+
+    let completion = arrival
+        .iter()
+        .copied()
+        .filter(|t| t.is_finite())
+        .fold(0.0, f64::max);
+    BroadcastReport {
+        arrival,
+        completion,
+        messages,
+    }
+}
+
+/// Worst-case broadcast completion over all sources — the simulated
+/// counterpart of the graph diameter (with Δ_v = 0 and no duplicate
+/// suppression they coincide exactly; the test asserts it).
+pub fn worst_case_completion(g: &Graph, proc: &[f64]) -> f64 {
+    (0..g.n())
+        .map(|s| broadcast_times(g, s, proc).completion)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{apsp, diameter, Graph};
+    use crate::latency::synthetic;
+    use crate::topology::random_ring;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn arrival_equals_shortest_path_when_no_processing() {
+        let mut rng = Rng::new(1);
+        let w = synthetic::uniform(20, &mut rng);
+        let g = random_ring(20, &mut rng).to_graph(&w);
+        let rep = broadcast_times(&g, 0, &vec![0.0; 20]);
+        let d = apsp::dijkstra(&g, 0);
+        for v in 0..20 {
+            assert!(
+                (rep.arrival[v] - d[v] as f64).abs() < 1e-4,
+                "node {v}: sim {} vs dijkstra {}",
+                rep.arrival[v],
+                d[v]
+            );
+        }
+    }
+
+    #[test]
+    fn worst_case_completion_is_diameter() {
+        let mut rng = Rng::new(2);
+        let w = synthetic::uniform(16, &mut rng);
+        let g = random_ring(16, &mut rng).to_graph(&w);
+        let d = diameter::diameter(&g) as f64;
+        let wc = worst_case_completion(&g, &vec![0.0; 16]);
+        assert!((wc - d).abs() < 1e-3, "sim {wc} vs diameter {d}");
+    }
+
+    #[test]
+    fn processing_delay_slows_completion() {
+        let mut rng = Rng::new(3);
+        let w = synthetic::uniform(14, &mut rng);
+        let g = random_ring(14, &mut rng).to_graph(&w);
+        let fast = broadcast_times(&g, 0, &vec![0.0; 14]).completion;
+        let slow = broadcast_times(&g, 0, &vec![1.0; 14]).completion;
+        assert!(slow > fast);
+    }
+
+    #[test]
+    fn unreachable_nodes_are_inf_and_ignored() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1, 2.0);
+        // Nodes 2, 3 isolated.
+        let rep = broadcast_times(&g, 0, &vec![0.0; 4]);
+        assert_eq!(rep.arrival[1], 2.0);
+        assert!(rep.arrival[2].is_infinite());
+        assert_eq!(rep.completion, 2.0);
+    }
+
+    #[test]
+    fn message_count_bounded_by_relays() {
+        let mut rng = Rng::new(4);
+        let w = synthetic::uniform(12, &mut rng);
+        let g = random_ring(12, &mut rng).to_graph(&w);
+        let rep = broadcast_times(&g, 0, &vec![0.0; 12]);
+        // Every node relays to <= deg neighbors once.
+        let max_msgs: u64 =
+            (0..12).map(|u| g.degree(u) as u64).sum();
+        assert!(rep.messages <= max_msgs);
+        assert!(rep.messages >= 11); // at least a spanning relay
+    }
+}

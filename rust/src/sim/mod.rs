@@ -1,0 +1,9 @@
+//! Discrete-event network simulator implementing the paper's §III system
+//! model: per-link constant latency δ(u,v), per-node processing delay
+//! Δ_v, immediate sequential relay of membership messages.
+
+pub mod broadcast;
+pub mod engine;
+
+pub use broadcast::{broadcast_times, BroadcastReport};
+pub use engine::{Engine, Event, EventKind};

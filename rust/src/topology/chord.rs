@@ -1,0 +1,126 @@
+//! Chord overlay (Stoica et al., SIGCOMM'01) — baseline #1 (paper §V-A1).
+//!
+//! Chord hashes nodes onto a logical identifier ring and adds finger
+//! edges at power-of-two identifier distances. The hash is latency-
+//! oblivious, so the logical ring is a *random* ring physically — which
+//! is exactly the inefficiency DGRO's ring selection repairs by swapping
+//! the logical ring for the shortest ring (Fig 5).
+
+use crate::graph::ring::Ring;
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+use crate::util::rng::Rng;
+
+/// A Chord overlay: the successor ring (in hash order) + finger tables.
+#[derive(Clone, Debug)]
+pub struct Chord {
+    /// Nodes in identifier order (successor ring).
+    pub ring: Ring,
+    /// Finger edges (u, v) in node ids, deduplicated.
+    pub fingers: Vec<(u32, u32)>,
+}
+
+impl Chord {
+    /// Build a Chord overlay. The identifier assignment is a random
+    /// permutation (consistent hashing). Fingers connect each node to the
+    /// node 2^i positions ahead on the identifier ring, i = 1..log2(N).
+    pub fn build(n: usize, rng: &mut Rng) -> Chord {
+        let order = rng.permutation(n);
+        Chord::from_order(order)
+    }
+
+    /// Build with an explicit identifier ring (used by the DGRO swap:
+    /// same finger structure, different base ring).
+    pub fn from_order(order: Vec<u32>) -> Chord {
+        let n = order.len();
+        let ring = Ring::new(order).expect("valid identifier ring");
+        let order = ring.order();
+        let mut fingers = Vec::new();
+        let bits = (n as f64).log2().floor() as usize;
+        for pos in 0..n {
+            for i in 1..=bits {
+                let step = 1usize << i;
+                if step >= n {
+                    break;
+                }
+                let tgt = (pos + step) % n;
+                let (u, v) = (order[pos], order[tgt]);
+                if u != v {
+                    fingers.push((u.min(v), u.max(v)));
+                }
+            }
+        }
+        fingers.sort_unstable();
+        fingers.dedup();
+        Chord { ring, fingers }
+    }
+
+    /// The overlay graph: successor ring + fingers, physical weights.
+    pub fn to_graph(&self, w: &LatencyMatrix) -> Graph {
+        let mut g = self.ring.to_graph(w);
+        for &(u, v) in &self.fingers {
+            g.add_edge(u as usize, v as usize, w.get(u as usize, v as usize));
+        }
+        g
+    }
+
+    /// DGRO's repair (Fig 5): keep the finger structure, replace the
+    /// identifier ring with the provided (e.g. shortest) ring.
+    pub fn with_base_ring(&self, ring: Ring) -> Chord {
+        Chord::from_order(ring.order().to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{components, diameter};
+    use crate::latency::synthetic;
+    use crate::topology::shortest_ring;
+
+    #[test]
+    fn chord_structure() {
+        let mut rng = Rng::new(1);
+        let c = Chord::build(32, &mut rng);
+        c.ring.validate().unwrap();
+        // log2(32) = 5 -> finger steps 2,4,8,16 exist.
+        assert!(!c.fingers.is_empty());
+        let w = synthetic::uniform(32, &mut rng);
+        let g = c.to_graph(&w);
+        assert!(components::is_connected(&g));
+        // Degree bounded by 2 (ring) + 2 * fingers-per-node.
+        assert!(g.max_degree() <= 2 + 2 * 5);
+    }
+
+    #[test]
+    fn logical_hop_count_logarithmic() {
+        // Chord's raison d'être: unit-weight overlay has O(log N) diameter.
+        let mut rng = Rng::new(2);
+        let c = Chord::build(64, &mut rng);
+        let unit = LatencyMatrix::from_fn(64, |_, _| 1.0);
+        let g = c.to_graph(&unit);
+        let d = diameter::diameter(&g);
+        assert!(d <= 7.0, "logical diameter {d} too high for N=64");
+    }
+
+    #[test]
+    fn swap_base_ring_keeps_connectivity() {
+        let mut rng = Rng::new(3);
+        let w = synthetic::uniform(40, &mut rng);
+        let c = Chord::build(40, &mut rng);
+        let swapped = c.with_base_ring(shortest_ring(&w, 0));
+        let g = swapped.to_graph(&w);
+        assert!(components::is_connected(&g));
+        assert_eq!(swapped.ring.order()[0], 0);
+    }
+
+    #[test]
+    fn fingers_deduplicated() {
+        let mut rng = Rng::new(4);
+        let c = Chord::build(16, &mut rng);
+        let mut f = c.fingers.clone();
+        f.dedup();
+        assert_eq!(f.len(), c.fingers.len());
+        assert!(c.fingers.iter().all(|&(u, v)| u < v));
+    }
+}

@@ -1,0 +1,239 @@
+//! Genetic-algorithm diameter search — the paper's brute-force benchmark
+//! (§VII-A2: "to establish a benchmark for the lowest possible network
+//! diameter, we utilized a genetic algorithm. For each graph instance,
+//! the genetic algorithm will search 100,000 topologies").
+//!
+//! An individual is a K-ring (K permutations). Fitness = −diameter of the
+//! induced overlay. Selection is tournament; crossover is order crossover
+//! (OX1) per ring; mutation swaps two positions. The budget is counted in
+//! *evaluated topologies* so "GA-100000" in the figures means exactly
+//! what the paper ran.
+
+use crate::graph::diameter;
+use crate::graph::ring::Ring;
+use crate::latency::LatencyMatrix;
+use crate::util::rng::Rng;
+
+use super::kring::KRing;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GaConfig {
+    /// Total topology evaluations (the paper's 1e5; scale down for CI).
+    pub budget: usize,
+    pub population: usize,
+    pub tournament: usize,
+    pub mutation_rate: f64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            budget: 2_000,
+            population: 40,
+            tournament: 4,
+            mutation_rate: 0.3,
+        }
+    }
+}
+
+/// Result of a GA run.
+pub struct GaResult {
+    pub best: KRing,
+    pub best_diameter: f32,
+    pub evaluations: usize,
+}
+
+fn evaluate(w: &LatencyMatrix, ind: &KRing) -> f32 {
+    diameter::diameter(&ind.to_graph(w))
+}
+
+fn random_individual(n: usize, k: usize, rng: &mut Rng) -> KRing {
+    KRing::new(
+        (0..k)
+            .map(|_| Ring::new(rng.permutation(n)).unwrap())
+            .collect(),
+    )
+}
+
+/// Order crossover (OX1): copy a random slice from parent A, fill the
+/// rest in parent-B order. Preserves permutation validity.
+fn ox1(a: &[u32], b: &[u32], rng: &mut Rng) -> Vec<u32> {
+    let n = a.len();
+    let mut i = rng.index(n);
+    let mut j = rng.index(n);
+    if i > j {
+        std::mem::swap(&mut i, &mut j);
+    }
+    let mut child = vec![u32::MAX; n];
+    let mut used = vec![false; n];
+    for pos in i..=j {
+        child[pos] = a[pos];
+        used[a[pos] as usize] = true;
+    }
+    let mut fill = (j + 1) % n;
+    for step in 0..n {
+        let v = b[(j + 1 + step) % n];
+        if !used[v as usize] {
+            child[fill] = v;
+            used[v as usize] = true;
+            fill = (fill + 1) % n;
+        }
+    }
+    debug_assert!(child.iter().all(|&x| x != u32::MAX));
+    child
+}
+
+fn mutate(order: &mut [u32], rng: &mut Rng) {
+    let n = order.len();
+    let i = rng.index(n);
+    let j = rng.index(n);
+    order.swap(i, j);
+}
+
+fn tournament_pick<'a>(
+    pop: &'a [(KRing, f32)],
+    t: usize,
+    rng: &mut Rng,
+) -> &'a KRing {
+    let mut best: Option<&(KRing, f32)> = None;
+    for _ in 0..t {
+        let cand = &pop[rng.index(pop.len())];
+        if best.map_or(true, |b| cand.1 < b.1) {
+            best = Some(cand);
+        }
+    }
+    &best.unwrap().0
+}
+
+/// Run the GA; `k` rings per individual.
+pub fn search(
+    w: &LatencyMatrix,
+    k: usize,
+    cfg: GaConfig,
+    rng: &mut Rng,
+) -> GaResult {
+    let n = w.n();
+    let pop_size = cfg.population.max(4);
+    let mut evals = 0usize;
+
+    let mut pop: Vec<(KRing, f32)> = (0..pop_size.min(cfg.budget.max(1)))
+        .map(|_| {
+            let ind = random_individual(n, k, rng);
+            let fit = evaluate(w, &ind);
+            evals += 1;
+            (ind, fit)
+        })
+        .collect();
+
+    let mut best = pop
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .cloned()
+        .unwrap();
+
+    while evals < cfg.budget {
+        // Offspring generation (steady-state: replace the worst).
+        let pa = tournament_pick(&pop, cfg.tournament, rng).clone();
+        let pb = tournament_pick(&pop, cfg.tournament, rng).clone();
+        let rings: Vec<Ring> = (0..k)
+            .map(|r| {
+                let mut child =
+                    ox1(pa.rings[r].order(), pb.rings[r].order(), rng);
+                if rng.chance(cfg.mutation_rate) {
+                    mutate(&mut child, rng);
+                }
+                Ring::new(child).expect("OX1 preserves permutations")
+            })
+            .collect();
+        let child = KRing::new(rings);
+        let fit = evaluate(w, &child);
+        evals += 1;
+        if fit < best.1 {
+            best = (child.clone(), fit);
+        }
+        // Replace the current worst individual.
+        let worst = pop
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if fit < pop[worst].1 {
+            pop[worst] = (child, fit);
+        }
+    }
+
+    GaResult {
+        best: best.0,
+        best_diameter: best.1,
+        evaluations: evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::synthetic;
+    use crate::topology::kring::random_krings;
+
+    #[test]
+    fn ox1_produces_valid_permutation() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let a = rng.permutation(12);
+            let b = rng.permutation(12);
+            let c = ox1(&a, &b, &mut rng);
+            let mut s = c.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..12).collect::<Vec<u32>>());
+        }
+    }
+
+    #[test]
+    fn ga_beats_random_on_average() {
+        let mut rng = Rng::new(2);
+        let w = synthetic::uniform(24, &mut rng);
+        let k = 2;
+        let res = search(&w, k, GaConfig::default(), &mut rng);
+        assert_eq!(res.evaluations, GaConfig::default().budget);
+        // Compare with the mean of random K-rings.
+        let mut rand_sum = 0.0;
+        for _ in 0..20 {
+            let ind = random_krings(24, k, &mut rng);
+            rand_sum += diameter::diameter(&ind.to_graph(&w));
+        }
+        let rand_mean = rand_sum / 20.0;
+        assert!(
+            res.best_diameter < rand_mean,
+            "GA {} vs random mean {rand_mean}",
+            res.best_diameter
+        );
+        res.best.rings.iter().for_each(|r| r.validate().unwrap());
+    }
+
+    #[test]
+    fn ga_respects_budget_exactly() {
+        let mut rng = Rng::new(3);
+        let w = synthetic::uniform(12, &mut rng);
+        let cfg = GaConfig {
+            budget: 123,
+            ..Default::default()
+        };
+        let res = search(&w, 2, cfg, &mut rng);
+        assert_eq!(res.evaluations, 123);
+    }
+
+    #[test]
+    fn tiny_budget_still_returns_best_seen() {
+        let mut rng = Rng::new(4);
+        let w = synthetic::uniform(10, &mut rng);
+        let cfg = GaConfig {
+            budget: 5,
+            population: 10,
+            ..Default::default()
+        };
+        let res = search(&w, 1, cfg, &mut rng);
+        assert!(res.best_diameter > 0.0);
+        assert_eq!(res.evaluations, 5);
+    }
+}

@@ -1,0 +1,129 @@
+//! K-ring composition: the overlay graph induced by K rings (paper §III:
+//! each node keeps log(N) outgoing connections; RAPID's expander is K
+//! rings from K hash functions).
+
+use crate::graph::ring::Ring;
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+use crate::util::rng::Rng;
+
+use super::{random_ring, shortest_ring};
+
+/// A K-ring overlay: the union of K rings over the same node set.
+#[derive(Clone, Debug)]
+pub struct KRing {
+    pub rings: Vec<Ring>,
+}
+
+impl KRing {
+    pub fn new(rings: Vec<Ring>) -> KRing {
+        assert!(!rings.is_empty());
+        let n = rings[0].n();
+        assert!(rings.iter().all(|r| r.n() == n), "ring sizes differ");
+        KRing { rings }
+    }
+
+    pub fn n(&self) -> usize {
+        self.rings[0].n()
+    }
+
+    pub fn k(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Induced overlay graph (edge union, min weight on duplicates).
+    pub fn to_graph(&self, w: &LatencyMatrix) -> Graph {
+        let mut g = Graph::empty(self.n());
+        for ring in &self.rings {
+            for (u, v) in ring.edges() {
+                g.add_edge(u as usize, v as usize, w.get(u as usize, v as usize));
+            }
+        }
+        g
+    }
+
+    /// Replace ring `idx` with a new one.
+    pub fn replace(&mut self, idx: usize, ring: Ring) {
+        assert_eq!(ring.n(), self.n());
+        self.rings[idx] = ring;
+    }
+}
+
+/// K independent random rings (consistent-hash K-ring, RAPID-style).
+pub fn random_krings(n: usize, k: usize, rng: &mut Rng) -> KRing {
+    KRing::new((0..k).map(|_| random_ring(n, rng)).collect())
+}
+
+/// Hybrid: `m` random rings + `k - m` shortest rings started from
+/// distinct nodes (the paper's Fig 12/16 ablation axis).
+pub fn hybrid_krings(
+    w: &LatencyMatrix,
+    k: usize,
+    m_random: usize,
+    rng: &mut Rng,
+) -> KRing {
+    assert!(m_random <= k);
+    let n = w.n();
+    let mut rings = Vec::with_capacity(k);
+    for _ in 0..m_random {
+        rings.push(random_ring(n, rng));
+    }
+    for i in 0..(k - m_random) {
+        // Distinct deterministic starts spread over the node set so the
+        // shortest rings are not identical copies.
+        let start = (i * n) / (k - m_random).max(1) % n;
+        rings.push(shortest_ring(w, start));
+    }
+    KRing::new(rings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components;
+    use crate::latency::synthetic;
+
+    #[test]
+    fn kring_degree_bound() {
+        let mut rng = Rng::new(1);
+        let w = synthetic::uniform(30, &mut rng);
+        let kr = random_krings(30, 4, &mut rng);
+        let g = kr.to_graph(&w);
+        // Each ring adds exactly 2 to a node's degree, minus collisions.
+        assert!(g.max_degree() <= 8);
+        assert!(components::is_connected(&g));
+    }
+
+    #[test]
+    fn hybrid_mix_counts() {
+        let mut rng = Rng::new(2);
+        let w = synthetic::uniform(24, &mut rng);
+        let kr = hybrid_krings(&w, 4, 1, &mut rng);
+        assert_eq!(kr.k(), 4);
+        kr.rings.iter().for_each(|r| r.validate().unwrap());
+        // All-shortest edge case.
+        let kr0 = hybrid_krings(&w, 3, 0, &mut rng);
+        assert_eq!(kr0.k(), 3);
+        // All-random edge case.
+        let kr3 = hybrid_krings(&w, 3, 3, &mut rng);
+        assert_eq!(kr3.k(), 3);
+    }
+
+    #[test]
+    fn replace_swaps_ring() {
+        let mut rng = Rng::new(3);
+        let w = synthetic::uniform(12, &mut rng);
+        let mut kr = random_krings(12, 2, &mut rng);
+        let s = shortest_ring(&w, 0);
+        kr.replace(1, s.clone());
+        assert_eq!(kr.rings[1], s);
+    }
+
+    #[test]
+    fn union_graph_connected_even_with_one_ring() {
+        let mut rng = Rng::new(4);
+        let w = synthetic::uniform(10, &mut rng);
+        let kr = KRing::new(vec![shortest_ring(&w, 0)]);
+        assert!(components::is_connected(&kr.to_graph(&w)));
+    }
+}

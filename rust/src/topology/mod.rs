@@ -1,0 +1,107 @@
+//! Overlay-topology builders: the two heuristic rings DGRO selects
+//! between, the three state-of-the-art baselines the paper compares
+//! against (Chord, RAPID, Perigee), the genetic-algorithm search
+//! benchmark, and K-ring composition.
+
+pub mod chord;
+pub mod genetic;
+pub mod kring;
+pub mod perigee;
+pub mod rapid;
+
+use crate::graph::ring::Ring;
+use crate::latency::LatencyMatrix;
+use crate::util::rng::Rng;
+
+/// A uniformly random ring — what consistent hashing induces (the paper's
+/// "random ring"; Chord/RAPID's logical rings are latency-oblivious).
+pub fn random_ring(n: usize, rng: &mut Rng) -> Ring {
+    Ring::new(rng.permutation(n)).expect("permutation is a valid ring")
+}
+
+/// The nearest-neighbour ("shortest") ring: from `start`, repeatedly hop
+/// to the closest unvisited node (paper §V: "the shortest ring is
+/// constructed by sequentially selecting the nearest available
+/// neighbor"). O(N^2).
+pub fn shortest_ring(w: &LatencyMatrix, start: usize) -> Ring {
+    let n = w.n();
+    assert!(start < n);
+    let mut order = Vec::with_capacity(n);
+    let mut visited = vec![false; n];
+    let mut cur = start;
+    visited[cur] = true;
+    order.push(cur as u32);
+    for _ in 1..n {
+        let mut best = usize::MAX;
+        let mut best_w = f32::INFINITY;
+        let row = w.row(cur);
+        for (v, &lat) in row.iter().enumerate() {
+            if !visited[v] && lat < best_w {
+                best = v;
+                best_w = lat;
+            }
+        }
+        debug_assert!(best != usize::MAX);
+        visited[best] = true;
+        order.push(best as u32);
+        cur = best;
+    }
+    Ring::new(order).expect("nearest-neighbour order is a valid ring")
+}
+
+/// Degree budget used across the paper: each node keeps log2(N) outgoing
+/// connections (§III-A), i.e. a K-ring overlay with K = max(1, log2 N).
+pub fn paper_k(n: usize) -> usize {
+    ((n as f64).log2().floor() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::synthetic;
+
+    #[test]
+    fn random_ring_is_valid() {
+        let mut rng = Rng::new(3);
+        for n in [3usize, 10, 57] {
+            let r = random_ring(n, &mut rng);
+            r.validate().unwrap();
+            assert_eq!(r.n(), n);
+        }
+    }
+
+    #[test]
+    fn shortest_ring_valid_and_greedy_first_hop() {
+        let mut rng = Rng::new(4);
+        let w = synthetic::uniform(20, &mut rng);
+        let r = shortest_ring(&w, 5);
+        r.validate().unwrap();
+        assert_eq!(r.order()[0], 5);
+        // First hop is the globally nearest neighbor of the start node.
+        let first = r.order()[1] as usize;
+        let row = w.row(5);
+        let min = (0..20)
+            .filter(|&v| v != 5)
+            .map(|v| row[v])
+            .fold(f32::INFINITY, f32::min);
+        assert_eq!(row[first], min);
+    }
+
+    #[test]
+    fn shortest_ring_line_metric() {
+        // Nodes on a line: NN-ring from 0 visits them in order.
+        let w = LatencyMatrix::from_fn(6, |u, v| {
+            (u as f32 - v as f32).abs()
+        });
+        let r = shortest_ring(&w, 0);
+        assert_eq!(r.order(), &[0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn paper_k_values() {
+        assert_eq!(paper_k(2), 1);
+        assert_eq!(paper_k(50), 5);
+        assert_eq!(paper_k(64), 6);
+        assert_eq!(paper_k(1000), 9);
+    }
+}

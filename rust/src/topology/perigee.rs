@@ -1,0 +1,259 @@
+//! Perigee neighbor selection (Mao et al., PODC'20) — baseline #3
+//! (paper §V-A3).
+//!
+//! Perigee adapts each node's neighbor set from *observed broadcast
+//! timestamps*: rounds of random-source broadcasts are simulated over the
+//! current overlay; each node scores its incoming neighbors by how early
+//! they delivered, keeps the best, drops the worst, and explores random
+//! replacements. It is nearest-neighbor-flavored and gives no
+//! connectivity guarantee — the paper therefore always pairs it with a
+//! ring (random or shortest; Fig 7/11/15 show the random ring is the
+//! right companion, which DGRO's ρ statistic discovers automatically).
+
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+use crate::util::rng::Rng;
+
+/// Tunables for the Perigee simulation.
+#[derive(Clone, Copy, Debug)]
+pub struct PerigeeConfig {
+    /// Outgoing-neighbor budget per node (paper: log N).
+    pub degree: usize,
+    /// Adaptation rounds.
+    pub rounds: usize,
+    /// Broadcasts scored per round.
+    pub broadcasts_per_round: usize,
+    /// Fraction of the neighbor set replaced each round (the paper's
+    /// "subset replacement"; 1/degree ≈ one neighbor per round).
+    pub churn: f64,
+}
+
+impl Default for PerigeeConfig {
+    fn default() -> Self {
+        PerigeeConfig {
+            degree: 0, // 0 = auto (log2 N)
+            rounds: 10,
+            broadcasts_per_round: 8,
+            churn: 0.34,
+        }
+    }
+}
+
+/// Run Perigee and return each node's chosen neighbor set as a graph.
+pub fn build(w: &LatencyMatrix, cfg: PerigeeConfig, rng: &mut Rng) -> Graph {
+    let n = w.n();
+    let degree = if cfg.degree == 0 {
+        super::paper_k(n).max(2)
+    } else {
+        cfg.degree
+    };
+
+    // Outgoing neighbor lists, start random.
+    let mut neighbors: Vec<Vec<u32>> = (0..n)
+        .map(|u| {
+            let mut set = Vec::with_capacity(degree);
+            while set.len() < degree.min(n - 1) {
+                let v = rng.index(n) as u32;
+                if v as usize != u && !set.contains(&v) {
+                    set.push(v);
+                }
+            }
+            set
+        })
+        .collect();
+
+    let mut arrival = vec![0.0f64; n];
+    let mut score = vec![0.0f64; n]; // per-neighbor accumulation buffer
+
+    for _ in 0..cfg.rounds {
+        // Score accumulator: per node, per current neighbor, total
+        // delivery delay over this round's broadcasts.
+        let mut delay_sum: Vec<Vec<f64>> = neighbors
+            .iter()
+            .map(|ns| vec![0.0; ns.len()])
+            .collect();
+
+        for _ in 0..cfg.broadcasts_per_round {
+            let src = rng.index(n);
+            simulate_broadcast(w, &neighbors, src, &mut arrival);
+            // Each node credits each incoming/outgoing neighbor with the
+            // neighbor's arrival time + link latency (when the message
+            // would have arrived *via that neighbor*).
+            for u in 0..n {
+                for (slot, &v) in neighbors[u].iter().enumerate() {
+                    let via =
+                        arrival[v as usize] + w.get(v as usize, u) as f64;
+                    delay_sum[u][slot] += via;
+                }
+            }
+        }
+
+        // Adapt: drop the worst `churn` fraction, explore random
+        // replacements.
+        let drop_count =
+            ((degree as f64 * cfg.churn).round() as usize).clamp(1, degree);
+        for u in 0..n {
+            // Rank slots by accumulated delay (ascending = best first).
+            let mut slots: Vec<usize> = (0..neighbors[u].len()).collect();
+            for (i, &s) in delay_sum[u].iter().enumerate() {
+                score[i] = s;
+            }
+            slots.sort_by(|&a, &b| {
+                delay_sum[u][a]
+                    .partial_cmp(&delay_sum[u][b])
+                    .unwrap()
+            });
+            let keep = neighbors[u].len().saturating_sub(drop_count);
+            let kept: Vec<u32> =
+                slots[..keep].iter().map(|&s| neighbors[u][s]).collect();
+            let mut next = kept;
+            while next.len() < degree.min(n - 1) {
+                let v = rng.index(n) as u32;
+                if v as usize != u && !next.contains(&v) {
+                    next.push(v);
+                }
+            }
+            neighbors[u] = next;
+        }
+    }
+
+    let mut g = Graph::empty(n);
+    for (u, ns) in neighbors.iter().enumerate() {
+        for &v in ns {
+            g.add_edge(u, v as usize, w.get(u, v as usize));
+        }
+    }
+    g
+}
+
+/// Weighted-BFS (Dijkstra over the *directed-as-undirected* neighbor
+/// sets) computing per-node first arrival of a broadcast from `src`.
+fn simulate_broadcast(
+    w: &LatencyMatrix,
+    neighbors: &[Vec<u32>],
+    src: usize,
+    arrival: &mut [f64],
+) {
+    let n = neighbors.len();
+    arrival.fill(f64::INFINITY);
+    arrival[src] = 0.0;
+    // Collect undirected adjacency on the fly via a heap walk.
+    let mut heap = std::collections::BinaryHeap::new();
+    heap.push(std::cmp::Reverse((ordf(0.0), src)));
+    // Incoming lists: node u relays to outgoing neighbors AND the nodes
+    // that chose u (TCP links are bidirectional, §III-A).
+    let mut incoming: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (u, ns) in neighbors.iter().enumerate() {
+        for &v in ns {
+            incoming[v as usize].push(u as u32);
+        }
+    }
+    while let Some(std::cmp::Reverse((t, u))) = heap.pop() {
+        let t = f64::from_bits(t);
+        if t > arrival[u] {
+            continue;
+        }
+        let relay = |v: usize,
+                     heap: &mut std::collections::BinaryHeap<
+            std::cmp::Reverse<(u64, usize)>,
+        >,
+                     arrival: &mut [f64]| {
+            let alt = t + w.get(u, v) as f64;
+            if alt < arrival[v] {
+                arrival[v] = alt;
+                heap.push(std::cmp::Reverse((ordf(alt), v)));
+            }
+        };
+        for &v in &neighbors[u] {
+            relay(v as usize, &mut heap, arrival);
+        }
+        for &v in &incoming[u] {
+            relay(v as usize, &mut heap, arrival);
+        }
+    }
+}
+
+/// Order-preserving f64 -> u64 (non-negative floats only).
+#[inline]
+fn ordf(x: f64) -> u64 {
+    debug_assert!(x >= 0.0);
+    x.to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::diameter;
+    use crate::latency::{fabric, synthetic};
+
+    #[test]
+    fn perigee_respects_degree_budget() {
+        let mut rng = Rng::new(1);
+        let w = synthetic::uniform(30, &mut rng);
+        let g = build(&w, PerigeeConfig::default(), &mut rng);
+        // Outgoing budget log2(30)=4; undirected degree can exceed it
+        // (incoming links) but must stay well below N.
+        assert!(g.max_degree() <= 30 - 1);
+        assert!(g.m() >= 30); // at least one out-edge per node
+    }
+
+    #[test]
+    fn perigee_prefers_close_neighbors() {
+        // On a clustered metric, adaptation should pull the average kept
+        // link latency below the global average.
+        let mut rng = Rng::new(2);
+        let w = fabric::sample(51, &mut rng);
+        let g = build(&w, PerigeeConfig::default(), &mut rng);
+        let mean_kept: f64 = g
+            .edges()
+            .iter()
+            .map(|&(_, _, lw)| lw as f64)
+            .sum::<f64>()
+            / g.m() as f64;
+        let mean_all = w.mean_offdiag() as f64;
+        assert!(
+            mean_kept < mean_all * 0.9,
+            "kept {mean_kept:.2} vs global {mean_all:.2}"
+        );
+    }
+
+    #[test]
+    fn broadcast_arrival_times_are_shortest_paths() {
+        let mut rng = Rng::new(3);
+        let w = synthetic::uniform(12, &mut rng);
+        let neighbors: Vec<Vec<u32>> = (0..12)
+            .map(|u| vec![((u + 1) % 12) as u32])
+            .collect();
+        let mut arrival = vec![0.0; 12];
+        simulate_broadcast(&w, &neighbors, 0, &mut arrival);
+        // The induced undirected graph is the ring 0-1-...-11-0; check
+        // against Dijkstra on that ring.
+        let mut g = Graph::empty(12);
+        for u in 0..12 {
+            g.add_edge(u, (u + 1) % 12, w.get(u, (u + 1) % 12));
+        }
+        let d = crate::graph::apsp::dijkstra(&g, 0);
+        for v in 0..12 {
+            assert!(
+                (arrival[v] - d[v] as f64).abs() < 1e-4,
+                "node {v}: {} vs {}",
+                arrival[v],
+                d[v]
+            );
+        }
+    }
+
+    #[test]
+    fn perigee_alone_can_disconnect_adding_ring_fixes() {
+        // The reason the paper pairs Perigee with a ring: pure
+        // nearest-neighbor selection may fragment. Pairing with a random
+        // ring must always restore connectivity.
+        let mut rng = Rng::new(4);
+        let w = fabric::sample(34, &mut rng);
+        let g = build(&w, PerigeeConfig::default(), &mut rng);
+        let ring = crate::topology::random_ring(34, &mut rng);
+        let combined = g.union(&ring.to_graph(&w));
+        assert!(crate::graph::components::is_connected(&combined));
+        assert!(diameter::diameter(&combined) > 0.0);
+    }
+}

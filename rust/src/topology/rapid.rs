@@ -1,0 +1,103 @@
+//! RAPID K-ring overlay (Suresh et al., USENIX ATC'18) — baseline #2
+//! (paper §V-A2).
+//!
+//! RAPID's expander topology is K rings induced by K independent
+//! consistent hash functions; monitoring edges follow the rings. The
+//! hashes ignore latency, so all K rings are physically random — DGRO's
+//! repair (Fig 6) swaps `m` of them for shortest rings.
+
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+use crate::util::rng::Rng;
+
+use super::kring::{KRing, random_krings};
+use super::shortest_ring;
+
+/// A RAPID overlay is exactly a K-ring; this wrapper carries the K
+/// convention (K = log2 N by default) and the DGRO swap operation.
+#[derive(Clone, Debug)]
+pub struct Rapid {
+    pub krings: KRing,
+}
+
+impl Rapid {
+    /// Build with the paper's K = log2(N) rings.
+    pub fn build(n: usize, rng: &mut Rng) -> Rapid {
+        let k = super::paper_k(n);
+        Rapid {
+            krings: random_krings(n, k, rng),
+        }
+    }
+
+    /// Build with explicit K.
+    pub fn build_k(n: usize, k: usize, rng: &mut Rng) -> Rapid {
+        Rapid {
+            krings: random_krings(n, k, rng),
+        }
+    }
+
+    pub fn to_graph(&self, w: &LatencyMatrix) -> Graph {
+        self.krings.to_graph(w)
+    }
+
+    /// DGRO repair (Fig 6): replace `m` of the K random rings with
+    /// shortest rings (distinct deterministic start nodes).
+    pub fn with_shortest_rings(&self, w: &LatencyMatrix, m: usize) -> Rapid {
+        let k = self.krings.k();
+        assert!(m <= k);
+        let n = self.krings.n();
+        let mut out = self.clone();
+        for i in 0..m {
+            let start = (i * n) / m.max(1) % n;
+            out.krings.replace(i, shortest_ring(w, start));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{components, diameter};
+    use crate::latency::synthetic;
+
+    #[test]
+    fn rapid_uses_log_n_rings() {
+        let mut rng = Rng::new(1);
+        let r = Rapid::build(64, &mut rng);
+        assert_eq!(r.krings.k(), 6);
+    }
+
+    #[test]
+    fn rapid_connected_and_degree_bounded() {
+        let mut rng = Rng::new(2);
+        let w = synthetic::uniform(50, &mut rng);
+        let r = Rapid::build(50, &mut rng);
+        let g = r.to_graph(&w);
+        assert!(components::is_connected(&g));
+        assert!(g.max_degree() <= 2 * r.krings.k());
+    }
+
+    #[test]
+    fn swapping_reduces_diameter_on_clustered_latency() {
+        // On a strongly clustered metric (FABRIC-like), one shortest ring
+        // should not hurt and typically helps the diameter.
+        let mut rng = Rng::new(3);
+        let w = crate::latency::fabric::sample(68, &mut rng);
+        let r = Rapid::build(68, &mut rng);
+        let swapped = r.with_shortest_rings(&w, 1);
+        let d0 = diameter::diameter(&r.to_graph(&w));
+        let d1 = diameter::diameter(&swapped.to_graph(&w));
+        assert!(d1 <= d0 * 1.15, "swap should not blow up: {d0} -> {d1}");
+    }
+
+    #[test]
+    fn swap_all_rings() {
+        let mut rng = Rng::new(4);
+        let w = synthetic::uniform(20, &mut rng);
+        let r = Rapid::build_k(20, 3, &mut rng);
+        let all = r.with_shortest_rings(&w, 3);
+        assert_eq!(all.krings.k(), 3);
+        assert!(components::is_connected(&all.to_graph(&w)));
+    }
+}

@@ -1,0 +1,143 @@
+//! Leveled stderr logging (no `log` facade consumers on this image; the
+//! coordinator and CLI want structured-but-simple progress lines).
+//!
+//! Level is process-global, settable from the CLI (`--log-level`) or the
+//! `DGRO_LOG` environment variable (`error|warn|info|debug|trace`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+/// Initialize from the environment; called once from main (idempotent).
+pub fn init_from_env() {
+    if let Ok(val) = std::env::var("DGRO_LOG") {
+        if let Some(level) = Level::parse(&val) {
+            set_level(level);
+        }
+    }
+    let _ = START.set(Instant::now());
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Emit one log line; use through the `log_*!` macros.
+pub fn emit(l: Level, module: &str, msg: std::fmt::Arguments) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+    eprintln!("[{:9.3}s {} {}] {}", t, l.tag(), module, msg);
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering_gates() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

@@ -1,0 +1,8 @@
+//! Infrastructure substrates built in-tree (the offline image carries no
+//! general-purpose crates — see DESIGN.md §3).
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,100 @@
+//! Wall-clock measurement helpers shared by the bench harness and the
+//! coordinator's metrics.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure; returns (result, elapsed).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Repeatedly time a closure: `warmup` unrecorded runs then `iters`
+/// recorded runs. Returns per-iteration seconds.
+pub fn time_iters<T>(
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// A simple stopwatch accumulating named segments (profiling aid).
+#[derive(Default, Debug)]
+pub struct Stopwatch {
+    segments: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.segments.push((name.to_string(), t0.elapsed()));
+        out
+    }
+
+    pub fn segments(&self) -> &[(String, Duration)] {
+        &self.segments
+    }
+
+    pub fn total(&self) -> Duration {
+        self.segments.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut s = String::new();
+        for (name, d) in &self.segments {
+            let secs = d.as_secs_f64();
+            s.push_str(&format!(
+                "{name:<28} {secs:>10.6}s  {:5.1}%\n",
+                100.0 * secs / total
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_something() {
+        let (v, d) = time(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn time_iters_counts() {
+        let xs = time_iters(2, 5, || 1 + 1);
+        assert_eq!(xs.len(), 5);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        let x = sw.measure("a", || 21 * 2);
+        assert_eq!(x, 42);
+        sw.measure("b", || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(sw.segments().len(), 2);
+        assert!(sw.total() >= Duration::from_millis(1));
+        assert!(sw.report().contains("a"));
+    }
+}

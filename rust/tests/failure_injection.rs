@@ -1,0 +1,161 @@
+//! Failure-injection and adversarial-input tests: the coordinator and
+//! substrates must behave sanely under partitions, mass failures,
+//! degenerate metrics, and missing/corrupt artifacts.
+
+use dgro::config::Config;
+use dgro::coordinator::Coordinator;
+use dgro::graph::{components, diameter, Graph};
+use dgro::latency::LatencyMatrix;
+use dgro::membership::events::{EventTrace, MembershipEvent};
+use dgro::membership::list::MemberState;
+use dgro::qnet::params::QnetParams;
+use dgro::sim::broadcast::broadcast_times;
+use dgro::util::rng::Rng;
+
+fn cfg(nodes: usize) -> Config {
+    let mut c = Config::default();
+    c.nodes = nodes;
+    c.model = "fabric".into();
+    c.scorer = "greedy".into();
+    c.adapt_period_ms = 100.0;
+    c
+}
+
+#[test]
+fn mass_crash_half_the_overlay() {
+    // Crash 50% of members mid-run; the coordinator must keep adapting
+    // and its full-id overlay stays connected (rings span all ids; the
+    // alive-restricted overlay may fragment, which is the protocol's
+    // real-world failure mode, not a crash of the coordinator).
+    let mut co = Coordinator::new(cfg(40)).unwrap();
+    let mut trace = EventTrace::default();
+    for (i, node) in (0..20u32).enumerate() {
+        trace.events.push(MembershipEvent::Crash {
+            time: 50.0 + i as f64,
+            node,
+        });
+    }
+    let rep = co.run(&trace, 1000.0).unwrap();
+    assert_eq!(rep.alive, 20);
+    assert!(components::is_connected(&co.overlay()));
+    assert!(rep.final_diameter > 0.0);
+}
+
+#[test]
+fn broadcast_from_partitioned_source_reaches_only_its_side() {
+    // Two cliques joined by nothing: a broadcast covers exactly the
+    // source's side; completion reflects the reachable set only.
+    let mut g = Graph::empty(8);
+    for u in 0..4 {
+        for v in (u + 1)..4 {
+            g.add_edge(u, v, 1.0);
+            g.add_edge(u + 4, v + 4, 1.0);
+        }
+    }
+    let rep = broadcast_times(&g, 0, &vec![0.0; 8]);
+    assert!(rep.arrival[..4].iter().all(|t| t.is_finite()));
+    assert!(rep.arrival[4..].iter().all(|t| t.is_infinite()));
+    assert_eq!(rep.completion, 1.0);
+}
+
+#[test]
+fn degenerate_all_equal_latency_matrix() {
+    // Constant metric: every topology has the same edge weights; the
+    // adaptive rule must land on Keep (rho sentinel 0.5) and never churn
+    // rings pointlessly.
+    let w = LatencyMatrix::from_fn(24, |_, _| 7.0);
+    let mut rng = Rng::new(1);
+    let g = dgro::topology::random_ring(24, &mut rng).to_graph(&w);
+    let stats = dgro::gossip::measure::measure(
+        &w,
+        &g,
+        dgro::gossip::measure::MeasureConfig::default(),
+        &mut rng,
+    );
+    let choice = dgro::dgro::select::decide(
+        &stats,
+        dgro::dgro::select::SelectConfig::default(),
+    );
+    assert_eq!(choice, dgro::dgro::select::RingChoice::Keep);
+}
+
+#[test]
+fn corrupt_weight_artifacts_are_rejected_not_trusted() {
+    // Truncated data, NaNs, and wrong shapes must all fail loudly.
+    let good = QnetParams::synthetic(4, 8, 1);
+    assert!(good.validate().is_ok());
+
+    let mut nan = QnetParams::synthetic(4, 8, 1);
+    nan.thetas[2].data[0] = f32::NAN;
+    assert!(nan.validate().is_err());
+
+    let mut misshapen = QnetParams::synthetic(4, 8, 1);
+    misshapen.thetas[7].shape = vec![8, 99];
+    assert!(misshapen.validate().is_err());
+
+    assert!(QnetParams::parse("{\"format\": \"dgro-qnet-v1\"}").is_err());
+    assert!(QnetParams::parse("not json at all").is_err());
+}
+
+#[test]
+fn leave_then_rejoin_bumps_incarnation() {
+    let mut co = Coordinator::new(cfg(10)).unwrap();
+    co.apply_event(&MembershipEvent::Leave { time: 1.0, node: 3 });
+    assert_eq!(
+        co.membership.get(3).unwrap().state,
+        MemberState::Left
+    );
+    co.apply_event(&MembershipEvent::Join { time: 2.0, node: 3 });
+    let m = co.membership.get(3).unwrap();
+    assert_eq!(m.state, MemberState::Alive);
+    assert!(m.incarnation >= 1, "rejoin must outrank the Left record");
+}
+
+#[test]
+fn zero_churn_long_run_reaches_stable_keep_state() {
+    // With no churn the adaptive loop must converge: after the swaps
+    // settle, diameter stays flat (no oscillation thrash).
+    let mut co = Coordinator::new(cfg(51)).unwrap();
+    let rep = co.run(&EventTrace::default(), 3000.0).unwrap();
+    let tail: Vec<f32> = rep
+        .timeline
+        .iter()
+        .rev()
+        .take(5)
+        .map(|&(_, _, d)| d)
+        .collect();
+    let spread = tail.iter().cloned().fold(f32::MIN, f32::max)
+        - tail.iter().cloned().fold(f32::MAX, f32::min);
+    assert!(
+        spread <= rep.initial_diameter * 0.35,
+        "diameter still oscillating at the end: {tail:?}"
+    );
+}
+
+#[test]
+fn single_node_and_tiny_graphs_do_not_panic() {
+    // Graph substrate edge cases.
+    let g1 = Graph::empty(1);
+    assert_eq!(diameter::diameter(&g1), 0.0);
+    let g0 = Graph::empty(0);
+    assert_eq!(diameter::diameter(&g0), 0.0);
+    let mut g2 = Graph::empty(2);
+    g2.add_edge(0, 1, 3.5);
+    assert_eq!(diameter::diameter(&g2), 3.5);
+}
+
+#[test]
+fn oversized_partition_request_is_rejected() {
+    let w = LatencyMatrix::from_fn(8, |u, v| (u + v) as f32 + 1.0);
+    let mut rng = Rng::new(2);
+    let res = std::panic::catch_unwind(move || {
+        let mut r = Rng::new(3);
+        dgro::dgro::parallel::parallel_ring_greedy(
+            &w,
+            dgro::dgro::parallel::ParallelConfig::new(100),
+            &mut r,
+        )
+    });
+    assert!(res.is_err(), "M > N must be rejected");
+    let _ = rng.next_u64();
+}

@@ -1,0 +1,144 @@
+//! Cross-module integration tests: coordinator + gossip + membership +
+//! simulator working together over realistic latency models.
+
+use dgro::config::Config;
+use dgro::coordinator::Coordinator;
+use dgro::dgro::select::adaptive_krings;
+use dgro::graph::{components, diameter};
+use dgro::latency::Model;
+use dgro::membership::events::EventTrace;
+use dgro::membership::swim::{SwimConfig, SwimSim};
+use dgro::sim::broadcast::broadcast_times;
+use dgro::topology::{chord::Chord, paper_k, rapid::Rapid};
+use dgro::util::rng::Rng;
+
+fn cfg(model: &str, nodes: usize) -> Config {
+    let mut c = Config::default();
+    c.model = model.to_string();
+    c.nodes = nodes;
+    c.scorer = "greedy".to_string();
+    c.adapt_period_ms = 100.0;
+    c
+}
+
+#[test]
+fn adaptive_coordinator_beats_chord_and_rapid_on_fabric() {
+    // The paper's headline at system level: after adaptation, the
+    // coordinator's overlay has a smaller diameter than the latency-
+    // oblivious baselines on the same matrix.
+    let mut co = Coordinator::new(cfg("fabric", 102)).unwrap();
+    let w = co.w.clone();
+    let rep = co.run(&EventTrace::default(), 1500.0).unwrap();
+
+    let mut rng = Rng::new(1);
+    let d_chord =
+        diameter::diameter(&Chord::build(102, &mut rng).to_graph(&w));
+    let d_rapid =
+        diameter::diameter(&Rapid::build(102, &mut rng).to_graph(&w));
+    assert!(
+        rep.final_diameter < d_chord && rep.final_diameter < d_rapid,
+        "dgro {} vs chord {} rapid {}",
+        rep.final_diameter,
+        d_chord,
+        d_rapid
+    );
+}
+
+#[test]
+fn adaptation_converges_rho_into_the_band() {
+    let mut co = Coordinator::new(cfg("fabric", 85)).unwrap();
+    let rep = co.run(&EventTrace::default(), 2000.0).unwrap();
+    let last_rho = rep.timeline.last().unwrap().1;
+    // After swaps the ρ statistic must sit inside (or hug) the Keep band.
+    assert!(
+        last_rho > 0.05 && last_rho < 0.95,
+        "rho {last_rho} should converge toward the band"
+    );
+}
+
+#[test]
+fn coordinator_survives_heavy_churn_and_stays_connected() {
+    let mut co = Coordinator::new(cfg("bitnode", 60)).unwrap();
+    let mut rng = Rng::new(3);
+    let trace = EventTrace::churn(60, 2000.0, 0.004, &mut rng);
+    assert!(trace.len() > 10, "want a heavy trace, got {}", trace.len());
+    let rep = co.run(&trace, 2000.0).unwrap();
+    assert!(rep.alive >= 3);
+    // Full-membership overlay stays connected (rings span all ids).
+    assert!(components::is_connected(&co.overlay()));
+}
+
+#[test]
+fn broadcast_completion_bounded_by_diameter_plus_processing() {
+    let mut rng = Rng::new(5);
+    let w = Model::Fabric.sample(68, &mut rng);
+    let g = adaptive_krings(&w, paper_k(68), &mut rng).to_graph(&w);
+    let d = diameter::diameter(&g) as f64;
+    let proc = vec![1.0; 68];
+    for src in [0usize, 10, 33] {
+        let rep = broadcast_times(&g, src, &proc);
+        assert!(rep.completion > 0.0);
+        assert!(
+            rep.completion <= d + 68.0, // diameter + total proc bound
+            "completion {} vs diameter {d}",
+            rep.completion
+        );
+    }
+}
+
+#[test]
+fn swim_dissemination_faster_on_adapted_overlay() {
+    // Crash dissemination (diameter-bound) must be no slower on the
+    // DGRO overlay than on a single random ring.
+    let mut rng = Rng::new(7);
+    let w = Model::Fabric.sample(68, &mut rng);
+    let dgro_g = adaptive_krings(&w, paper_k(68), &mut rng).to_graph(&w);
+    let ring_g = dgro::topology::random_ring(68, &mut rng).to_graph(&w);
+    let proc = vec![1.0; 68];
+
+    let mut mean_diss = |g: &dgro::graph::Graph| {
+        let mut swim = SwimSim::new(g, SwimConfig::default());
+        let mut total = 0.0;
+        for v in [5usize, 25, 55] {
+            total +=
+                swim.crash_and_measure(v, &proc, &mut rng).dissemination;
+        }
+        total / 3.0
+    };
+    let d_dgro = mean_diss(&dgro_g);
+    let d_ring = mean_diss(&ring_g);
+    assert!(
+        d_dgro < d_ring,
+        "dgro dissemination {d_dgro} vs ring {d_ring}"
+    );
+}
+
+#[test]
+fn config_end_to_end_roundtrip_into_coordinator() {
+    let text = r#"{"nodes": 40, "model": "gaussian", "scorer": "native",
+                   "epsilon": 0.2, "adapt_period_ms": 50}"#;
+    let cfg = Config::parse(text).unwrap();
+    let mut co = Coordinator::new(cfg).unwrap();
+    let rep = co.run(&EventTrace::default(), 200.0).unwrap();
+    assert_eq!(rep.timeline.len(), 4); // 200 / 50
+}
+
+#[test]
+fn all_latency_models_drive_the_full_stack() {
+    for model in Model::ALL {
+        let mut co = Coordinator::new(cfg(model.name(), 51)).unwrap();
+        let rep = co.run(&EventTrace::default(), 300.0).unwrap();
+        assert!(
+            rep.final_diameter > 0.0,
+            "{}: zero diameter",
+            model.name()
+        );
+        assert!(
+            rep.final_diameter <= rep.initial_diameter * 1.3,
+            "{}: adaptation made things much worse ({} -> {})",
+            model.name(),
+            rep.initial_diameter,
+            rep.final_diameter
+        );
+    }
+}

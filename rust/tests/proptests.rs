@@ -1,0 +1,203 @@
+//! Property tests over the coordinator invariants (routing/topology
+//! state, batching of ring swaps, membership-state machine), using the
+//! in-tree prop framework (seeded, replayable).
+
+use dgro::graph::{apsp, components, diameter, ring::Ring};
+use dgro::latency::Model;
+use dgro::membership::list::{MemberState, MembershipList};
+use dgro::prop::{ensure, ensure_close, forall, Config as PropConfig};
+use dgro::topology::{kring, paper_k, random_ring, shortest_ring};
+use dgro::util::rng::Rng;
+
+fn random_model(rng: &mut Rng) -> Model {
+    Model::ALL[rng.index(Model::ALL.len())]
+}
+
+#[test]
+fn prop_rings_are_hamiltonian_cycles() {
+    forall("ring structure", PropConfig::default().cases(64), |rng| {
+        let n = 3 + rng.index(120);
+        let w = random_model(rng).sample(n, rng);
+        let ring = if rng.chance(0.5) {
+            random_ring(n, rng)
+        } else {
+            shortest_ring(&w, rng.index(n))
+        };
+        ring.validate().map_err(|e| e.to_string())?;
+        let g = ring.to_graph(&w);
+        ensure(g.m() == n, format!("{} edges for n={n}", g.m()))?;
+        for u in 0..n {
+            ensure(g.degree(u) == 2, format!("degree {} at {u}", g.degree(u)))?;
+        }
+        ensure(components::is_connected(&g), "ring must be connected")
+    });
+}
+
+#[test]
+fn prop_kring_degree_bounded_and_connected() {
+    forall("kring invariants", PropConfig::default().cases(40), |rng| {
+        let n = 8 + rng.index(100);
+        let k = 1 + rng.index(paper_k(n));
+        let m_random = rng.index(k + 1);
+        let w = random_model(rng).sample(n, rng);
+        let kr = kring::hybrid_krings(&w, k, m_random, rng);
+        let g = kr.to_graph(&w);
+        ensure(
+            g.max_degree() <= 2 * k,
+            format!("degree {} > 2K={}", g.max_degree(), 2 * k),
+        )?;
+        ensure(components::is_connected(&g), "K-ring must be connected")
+    });
+}
+
+#[test]
+fn prop_diameter_monotone_under_edge_addition() {
+    forall("diameter monotonicity", PropConfig::default().cases(40), |rng| {
+        let n = 6 + rng.index(40);
+        let w = Model::Uniform.sample(n, rng);
+        let r = random_ring(n, rng);
+        let g1 = r.to_graph(&w);
+        let d1 = diameter::diameter(&g1);
+        // Add another ring: diameter must not increase.
+        let g2 = g1.union(&random_ring(n, rng).to_graph(&w));
+        let d2 = diameter::diameter(&g2);
+        ensure(d2 <= d1 + 1e-4, format!("{d1} -> {d2} after adding edges"))
+    });
+}
+
+#[test]
+fn prop_apsp_triangle_inequality_and_symmetry() {
+    forall("apsp metric axioms", PropConfig::default().cases(25), |rng| {
+        let n = 5 + rng.index(30);
+        let w = random_model(rng).sample(n, rng);
+        let k = paper_k(n);
+        let g = kring::random_krings(n, k, rng).to_graph(&w);
+        let dm = apsp::apsp(&g);
+        for _ in 0..50 {
+            let (i, j, l) = (rng.index(n), rng.index(n), rng.index(n));
+            let (dij, dji) = (dm.get(i, j), dm.get(j, i));
+            ensure_close(dij as f64, dji as f64, 1e-3)?;
+            let (dil, dlj) = (dm.get(i, l), dm.get(l, j));
+            if dil.is_finite() && dlj.is_finite() {
+                ensure(
+                    dij <= dil + dlj + 1e-3,
+                    format!("triangle violated: d({i},{j})={dij} > {dil}+{dlj}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_partitions_preserve_membership() {
+    forall("partition stitching", PropConfig::default().cases(40), |rng| {
+        let n = 6 + rng.index(200);
+        let m = 1 + rng.index(n.min(64));
+        let base = random_ring(n, rng);
+        let parts = dgro::dgro::parallel::partition(base.order(), m);
+        ensure(parts.len() == m, "exactly M partitions")?;
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let (mn, mx) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        ensure(mx - mn <= 1, format!("unbalanced: {mn}..{mx}"))?;
+        let mut all: Vec<u32> = parts.concat();
+        all.sort_unstable();
+        ensure(
+            all == (0..n as u32).collect::<Vec<_>>(),
+            "partitions must cover every node exactly once",
+        )
+    });
+}
+
+#[test]
+fn prop_parallel_ring_always_valid() {
+    forall("parallel ring validity", PropConfig::default().cases(25), |rng| {
+        let n = 6 + rng.index(80);
+        let m = 1 + rng.index(n / 2);
+        let w = random_model(rng).sample(n, rng);
+        let ring = dgro::dgro::parallel::parallel_ring_greedy(
+            &w,
+            dgro::dgro::parallel::ParallelConfig::new(m),
+            rng,
+        )
+        .map_err(|e| e.to_string())?;
+        ring.validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_membership_merge_is_monotone() {
+    // The SWIM merge rule: records never regress to lower incarnation,
+    // and at equal incarnation precedence only moves Alive->Suspect->
+    // Faulty. Applying a random update stream in any order converges.
+    forall("membership monotonicity", PropConfig::default().cases(40), |rng| {
+        let n = 4 + rng.index(20);
+        let mut list = MembershipList::full(n);
+        let states = [
+            MemberState::Alive,
+            MemberState::Suspect,
+            MemberState::Faulty,
+        ];
+        let mut max_inc = vec![0u64; n];
+        for step in 0..100 {
+            let id = rng.index(n) as u32;
+            let st = states[rng.index(3)];
+            let inc = rng.below(4);
+            list.apply(id, st, inc, step as f64);
+            let rec = list.get(id).unwrap();
+            max_inc[id as usize] = max_inc[id as usize].max(inc);
+            ensure(
+                rec.incarnation >= max_inc[id as usize].min(rec.incarnation),
+                "incarnation regressed",
+            )?;
+        }
+        // A final fresh-incarnation Alive must always win.
+        list.apply(0, MemberState::Alive, 100, 200.0);
+        ensure(
+            list.get(0).unwrap().state == MemberState::Alive,
+            "fresh Alive must refute anything older",
+        )
+    });
+}
+
+#[test]
+fn prop_ring_canonicalization_is_rotation_reflection_invariant() {
+    forall("ring canonical form", PropConfig::default().cases(40), |rng| {
+        let n = 4 + rng.index(30);
+        let ring = random_ring(n, rng);
+        let order = ring.order().to_vec();
+        // Random rotation.
+        let shift = rng.index(n);
+        let rotated: Vec<u32> = (0..n)
+            .map(|i| order[(i + shift) % n])
+            .collect();
+        // Random reflection.
+        let mut reflected = rotated.clone();
+        if rng.chance(0.5) {
+            reflected.reverse();
+        }
+        let a = ring.canonical();
+        let b = Ring::new(reflected).unwrap().canonical();
+        ensure(a == b, "canonical form must kill rotation/reflection")
+    });
+}
+
+#[test]
+fn prop_gossip_rho_in_unit_interval() {
+    forall("rho is a ratio", PropConfig::default().cases(25), |rng| {
+        let n = 6 + rng.index(60);
+        let w = random_model(rng).sample(n, rng);
+        let g = kring::random_krings(n, paper_k(n).max(1), rng).to_graph(&w);
+        let stats = dgro::gossip::measure::measure(
+            &w,
+            &g,
+            dgro::gossip::measure::MeasureConfig::default(),
+            rng,
+        );
+        let rho = stats.rho();
+        ensure((0.0..=1.0).contains(&rho), format!("rho {rho} out of [0,1]"))
+    });
+}

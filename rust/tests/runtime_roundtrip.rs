@@ -1,0 +1,154 @@
+//! PJRT round-trip: the AOT HLO artifact (Pallas kernels lowered by
+//! python/compile/aot.py) must agree with the pure-Rust Q-net mirror on
+//! the *trained* weights for every size bucket, including padded
+//! execution. This is the L1 <-> L3 contract test.
+//!
+//! Requires `make artifacts` to have run (skips gracefully otherwise so
+//! plain `cargo test` works on a fresh checkout).
+
+use dgro::dgro::construct::{self, GreedyScorer};
+use dgro::graph::diameter;
+use dgro::latency::{synthetic, Model};
+use dgro::qnet::native::NativeQnet;
+use dgro::qnet::state::State;
+use dgro::qnet::QScorer;
+use dgro::runtime::{ArtifactStore, PjrtQnet};
+use dgro::util::rng::Rng;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::discover(ArtifactStore::default_dir()) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_on_trained_weights() {
+    let Some(store) = store() else { return };
+    let params = store.load_params().unwrap();
+    let mut native = NativeQnet::new(params);
+    let mut pjrt = PjrtQnet::new(store).unwrap();
+
+    let mut rng = Rng::new(20240711);
+    for n in [16usize, 20, 32, 60, 120] {
+        let w = synthetic::uniform(n, &mut rng);
+        let mut st = State::new(&w, 0);
+        // Walk a few construction steps so A/deg are non-trivial.
+        for step in 0..(n / 3) {
+            let next = (step * 7 + 3) % n;
+            if !st.visited[next] {
+                st.step(next);
+            }
+        }
+        let q_native = native.score(&st).unwrap();
+        let q_pjrt = pjrt.score(&st).unwrap();
+        assert_eq!(q_native.len(), n);
+        assert_eq!(q_pjrt.len(), n);
+        for (i, (a, b)) in q_native.iter().zip(&q_pjrt).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * (1.0 + a.abs().max(b.abs())),
+                "N={n} candidate {i}: native {a} vs pjrt {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_padding_equivalence() {
+    // N=20 pads into the 32-bucket; the padded run's Q-values for real
+    // nodes must match the native (unpadded) forward — the
+    // wscale-as-parameter contract.
+    let Some(store) = store() else { return };
+    let params = store.load_params().unwrap();
+    let mut native = NativeQnet::new(params);
+    let mut pjrt = PjrtQnet::new(store).unwrap();
+
+    let mut rng = Rng::new(7);
+    let w = synthetic::uniform(20, &mut rng);
+    let mut st = State::new(&w, 3);
+    st.step(8);
+    st.step(15);
+    let q_native = native.score(&st).unwrap();
+    let q_pjrt = pjrt.score(&st).unwrap(); // padded to 32 internally
+    for (i, (a, b)) in q_native.iter().zip(&q_pjrt).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-3 * (1.0 + a.abs()),
+            "candidate {i}: native {a} vs padded-pjrt {b}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_ring_construction_end_to_end() {
+    // Full Algorithm 1 through the PJRT scorer: valid ring, and the
+    // same ring the native scorer builds (identical Q ranking).
+    let Some(store) = store() else { return };
+    let params = store.load_params().unwrap();
+    let mut native = NativeQnet::new(params);
+    let mut pjrt = PjrtQnet::new(store).unwrap();
+
+    let mut rng = Rng::new(99);
+    let w = synthetic::uniform(24, &mut rng);
+    let ring_native = construct::build_ring(&mut native, &w, 0).unwrap();
+    let ring_pjrt = construct::build_ring(&mut pjrt, &w, 0).unwrap();
+    ring_pjrt.validate().unwrap();
+    assert_eq!(
+        ring_native.order(),
+        ring_pjrt.order(),
+        "identical weights must produce identical construction"
+    );
+}
+
+#[test]
+fn trained_qnet_beats_or_matches_random_ring() {
+    // Sanity on training quality: the learned constructor (best of 4
+    // starts) should do no worse than the mean random ring on the
+    // training distribution. (Fig 10's full comparison incl. GA lives in
+    // the bench harness.)
+    let Some(store) = store() else { return };
+    let params = store.load_params().unwrap();
+    let mut native = NativeQnet::new(params);
+
+    let mut rng = Rng::new(1234);
+    let mut qnet_sum = 0.0f32;
+    let mut rand_sum = 0.0f32;
+    let trials = 5;
+    for _ in 0..trials {
+        let w = synthetic::uniform(20, &mut rng);
+        let (_, _, d) =
+            construct::best_of_starts(&mut native, &w, 1, 4, &mut rng)
+                .unwrap();
+        qnet_sum += d;
+        let rr = dgro::topology::random_ring(20, &mut rng);
+        rand_sum += diameter::diameter(&rr.to_graph(&w));
+    }
+    assert!(
+        qnet_sum <= rand_sum * 1.05,
+        "qnet mean {} vs random mean {}",
+        qnet_sum / trials as f32,
+        rand_sum / trials as f32
+    );
+}
+
+#[test]
+fn bucket_error_message_for_oversized_graph() {
+    let Some(store) = store() else { return };
+    let mut pjrt = PjrtQnet::new(store).unwrap();
+    let mut rng = Rng::new(5);
+    let w = Model::Uniform.sample(300, &mut rng);
+    let st = State::new(&w, 0);
+    let err = pjrt.score(&st).unwrap_err().to_string();
+    assert!(err.contains("bucket"), "got: {err}");
+}
+
+#[test]
+fn greedy_scorer_unaffected_by_artifacts() {
+    // Control: the non-ML path must work without any artifact.
+    let mut rng = Rng::new(6);
+    let w = synthetic::uniform(12, &mut rng);
+    let ring = construct::build_ring(&mut GreedyScorer, &w, 0).unwrap();
+    ring.validate().unwrap();
+}
