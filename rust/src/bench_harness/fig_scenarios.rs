@@ -1,0 +1,37 @@
+//! Beyond-paper figure (id 19): DGRO vs baselines across the scenario
+//! catalog — mean alive-overlay diameter under churn + dynamic latency,
+//! plus one per-scenario timeline table. `dgro scenario compare` prints
+//! the same tables interactively; this entry wires them into the figure
+//! pipeline so `dgro figures --all` / `cargo bench --bench figures`
+//! regenerate the CSVs under reports/.
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::scenario::compare::compare;
+use crate::scenario::engine::Topology;
+use crate::scenario::spec::catalog;
+
+/// Seed shared with the sweep harness so every figure ships from one
+/// reproducibility key.
+pub const SCENARIO_SEED: u64 = 20240711;
+
+pub fn run(quick: bool) -> Result<Vec<Table>> {
+    // Quick mode trims the baseline panel (Perigee and the random
+    // K-ring are the slowest builders), not the catalog — every scenario
+    // stays covered in CI.
+    let topologies: &[Topology] = if quick {
+        &[Topology::Dgro, Topology::Chord, Topology::Rapid]
+    } else {
+        &Topology::ALL
+    };
+    let rep = compare(
+        &catalog(),
+        topologies,
+        SCENARIO_SEED,
+        crate::scenario::compare::DEFAULT_PERIOD_MS,
+    )?;
+    let mut tables = vec![rep.summary];
+    tables.extend(rep.timelines);
+    Ok(tables)
+}

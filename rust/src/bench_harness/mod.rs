@@ -16,6 +16,7 @@ pub mod fig10;
 pub mod fig_ablation; // figs 12 & 16
 pub mod fig_baselines; // figs 13 & 17
 pub mod fig_parallel; // figs 14 & 18
+pub mod fig_scenarios; // "fig 19": beyond-paper scenario catalog
 pub mod fig_single; // figs 11 & 15
 pub mod runner;
 
@@ -41,12 +42,14 @@ pub fn run_figure(fig: usize, quick: bool) -> Result<Vec<Table>> {
         16 => fig_ablation::run_realistic(&sweep),
         17 => fig_baselines::run_realistic(&sweep),
         18 => fig_parallel::run_realistic(&sweep),
+        19 => fig_scenarios::run(quick),
         other => anyhow::bail!(
-            "no figure {other} in the paper (valid: 1,5,6,7,9,10,11-18)"
+            "no figure {other} (valid: 1,5,6,7,9,10,11-18 from the paper, \
+             19 = scenario catalog)"
         ),
     }
 }
 
-/// All figure ids in paper order.
-pub const ALL_FIGURES: [usize; 14] =
-    [1, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18];
+/// All figure ids: paper order, then the beyond-paper scenario catalog.
+pub const ALL_FIGURES: [usize; 15] =
+    [1, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19];

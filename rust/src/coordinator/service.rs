@@ -116,6 +116,31 @@ impl Coordinator {
         let model = Model::parse(&cfg.model)
             .ok_or_else(|| anyhow::anyhow!("bad model {}", cfg.model))?;
         let w = model.sample(cfg.nodes, &mut rng);
+        Coordinator::from_parts(cfg, w, rng)
+    }
+
+    /// Bootstrap over an externally supplied latency matrix. The
+    /// scenario engine uses this to hand DGRO and every baseline the
+    /// *same* draw (identical conditions), and to seed a time-varying
+    /// latency view at its t = 0 state.
+    pub fn with_latency(cfg: Config, w: LatencyMatrix) -> Result<Coordinator> {
+        cfg.validate()?;
+        if w.n() != cfg.nodes {
+            bail!(
+                "latency matrix has {} nodes but cfg.nodes = {}",
+                w.n(),
+                cfg.nodes
+            );
+        }
+        let rng = Rng::new(cfg.seed);
+        Coordinator::from_parts(cfg, w, rng)
+    }
+
+    fn from_parts(
+        cfg: Config,
+        w: LatencyMatrix,
+        mut rng: Rng,
+    ) -> Result<Coordinator> {
         let k = cfg.effective_k();
         let krings = KRing::new(
             (0..k).map(|_| random_ring(cfg.nodes, &mut rng)).collect(),
@@ -130,6 +155,23 @@ impl Coordinator {
             scorer_kind,
             cfg,
         })
+    }
+
+    /// Swap in an updated latency matrix (dynamic-latency scenarios:
+    /// diurnal drift, link degradation, WAN partitions). The overlay
+    /// structure is kept; subsequent measurements, ring swaps and
+    /// diameter reports all see the new latencies.
+    pub fn set_latency(&mut self, w: LatencyMatrix) -> Result<()> {
+        if w.n() != self.w.n() {
+            bail!(
+                "latency update has {} nodes, overlay has {}",
+                w.n(),
+                self.w.n()
+            );
+        }
+        self.w = w;
+        self.metrics.incr("latency.updates", 1);
+        Ok(())
     }
 
     /// Current overlay graph over the full node set.
@@ -240,61 +282,80 @@ impl Coordinator {
 
     /// Apply one membership event.
     pub fn apply_event(&mut self, ev: &MembershipEvent) {
-        match *ev {
-            MembershipEvent::Join { time, node } => {
-                let inc = self
-                    .membership
-                    .get(node)
-                    .map(|m| m.incarnation + 1)
-                    .unwrap_or(0);
-                self.membership.apply(node, MemberState::Alive, inc, time);
-                self.metrics.incr("membership.joins", 1);
-            }
-            MembershipEvent::Leave { time, node } => {
-                let inc = self
-                    .membership
-                    .get(node)
-                    .map(|m| m.incarnation)
-                    .unwrap_or(0);
-                self.membership.apply(node, MemberState::Left, inc, time);
-                self.metrics.incr("membership.leaves", 1);
-            }
-            MembershipEvent::Crash { time, node } => {
-                let inc = self
-                    .membership
-                    .get(node)
-                    .map(|m| m.incarnation)
-                    .unwrap_or(0);
-                self.membership.apply(node, MemberState::Faulty, inc, time);
-                self.metrics.incr("membership.crashes", 1);
-            }
-        }
+        let counter = match ev {
+            MembershipEvent::Join { .. } => "membership.joins",
+            MembershipEvent::Leave { .. } => "membership.leaves",
+            MembershipEvent::Crash { .. } => "membership.crashes",
+        };
+        self.membership.apply_trace_event(ev);
+        self.metrics.incr(counter, 1);
     }
 
     /// Run the coordinator over a membership trace for `horizon`
     /// sim-time, adapting every `cfg.adapt_period_ms`.
     pub fn run(&mut self, trace: &EventTrace, horizon: f64) -> Result<CoordinatorReport> {
+        self.run_dynamic(trace, horizon, |_| None)
+    }
+
+    /// Run over a membership trace with a *time-varying latency view*:
+    /// before each adaptation period, `latency_at(t)` may hand back an
+    /// updated matrix (None = unchanged since the last period). This is
+    /// the scenario-engine entry point; [`Coordinator::run`] is the
+    /// static special case. Per period the metrics registry records
+    /// `overlay.diameter` / `overlay.rho` (full overlay, as before) plus
+    /// `overlay.alive`, `overlay.alive_diameter` (faulty nodes do not
+    /// relay) and `rings.swaps_per_period`, so scenario runs are
+    /// comparable across topologies.
+    pub fn run_dynamic(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+        mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+    ) -> Result<CoordinatorReport> {
         let initial_diameter = diameter::diameter(&self.overlay());
         let mut timeline = Vec::new();
-        let mut swaps0 = self.metrics.counter("rings.swapped");
-        let initial_swaps = swaps0;
+        let initial_swaps = self.metrics.counter("rings.swapped");
+        let mut swaps0 = initial_swaps;
         let mut t = 0.0;
         let mut ev_idx = 0;
         while t < horizon {
             t += self.cfg.adapt_period_ms;
+            if let Some(w) = latency_at(t) {
+                self.set_latency(w)?;
+            }
+            let mut applied = 0u64;
             while ev_idx < trace.events.len()
                 && trace.events[ev_idx].time() <= t
             {
                 let ev = trace.events[ev_idx];
                 self.apply_event(&ev);
                 ev_idx += 1;
+                applied += 1;
             }
             let (rho, _) = self.adapt_once()?;
             let d = diameter::diameter(&self.overlay());
             self.metrics.observe("overlay.diameter", d as f64);
             self.metrics.observe("overlay.rho", rho);
+            let alive_cnt = self.membership.count_state(MemberState::Alive);
+            // With every member alive the sub-overlay IS the overlay —
+            // skip the second diameter (the dominant per-period cost on
+            // the churn-free `dgro serve` path).
+            let alive_d = if alive_cnt == self.membership.len() {
+                d
+            } else {
+                diameter::diameter(&self.alive_overlay())
+            };
+            self.metrics.observe("overlay.alive", alive_cnt as f64);
+            self.metrics
+                .observe("overlay.alive_diameter", alive_d as f64);
+            let swaps_now = self.metrics.counter("rings.swapped");
+            self.metrics.observe(
+                "rings.swaps_per_period",
+                (swaps_now - swaps0) as f64,
+            );
+            self.metrics.incr("membership.events_applied", applied);
+            swaps0 = swaps_now;
             timeline.push((t, rho, d));
-            swaps0 = self.metrics.counter("rings.swapped");
         }
         Ok(CoordinatorReport {
             final_diameter: timeline
@@ -372,6 +433,52 @@ mod tests {
         let mut co = Coordinator::new(cfg("uniform", 24)).unwrap();
         co.rebuild_ring_dgro(0).unwrap();
         co.krings.rings[0].validate().unwrap();
+    }
+
+    #[test]
+    fn with_latency_injects_matrix_and_checks_size() {
+        let c = cfg("uniform", 20);
+        let w = LatencyMatrix::from_fn(20, |u, v| (u + v) as f32);
+        let co = Coordinator::with_latency(c.clone(), w.clone()).unwrap();
+        assert_eq!(co.w, w);
+        let bad = LatencyMatrix::from_fn(10, |u, v| (u + v) as f32);
+        assert!(Coordinator::with_latency(c, bad).is_err());
+    }
+
+    #[test]
+    fn run_dynamic_applies_latency_updates_and_records_series() {
+        let mut co = Coordinator::new(cfg("uniform", 24)).unwrap();
+        let base = co.w.clone();
+        let rep = co
+            .run_dynamic(&EventTrace::default(), 500.0, |t| {
+                if t >= 300.0 {
+                    Some(LatencyMatrix::from_fn(base.n(), |u, v| {
+                        base.get(u, v) * 3.0
+                    }))
+                } else {
+                    None
+                }
+            })
+            .unwrap();
+        // Periods fire at t = 100..=500; the view updates from t = 300.
+        assert_eq!(co.metrics.counter("latency.updates"), 3);
+        assert!((co.w.get(0, 1) - base.get(0, 1) * 3.0).abs() < 1e-5);
+        let n_periods = rep.timeline.len();
+        assert_eq!(n_periods, 5);
+        for s in [
+            "overlay.alive",
+            "overlay.alive_diameter",
+            "rings.swaps_per_period",
+        ] {
+            assert_eq!(
+                co.metrics.series(s).unwrap().values.len(),
+                n_periods,
+                "series {s}"
+            );
+        }
+        // set_latency rejects a size mismatch.
+        let bad = LatencyMatrix::from_fn(5, |u, v| (u + v) as f32);
+        assert!(co.set_latency(bad).is_err());
     }
 
     #[test]

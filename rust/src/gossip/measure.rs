@@ -72,11 +72,17 @@ pub fn measure(
     let mut local = vec![0.0f64; n];
     let mut global = vec![0.0f64; n];
     let mut min = vec![0.0f64; n];
+    let mut has_local = vec![true; n];
     for u in 0..n {
         let neigh = g.neighbors(u);
         if neigh.is_empty() {
-            // Isolated node: local estimate falls back to global draws.
+            // Isolated node: it has no neighbor latency to sample, so it
+            // contributes nothing to the local average (tracked by a
+            // separate push-sum weight below — without it every isolated
+            // node would drag L̄_local toward 0 and bias ρ low whenever
+            // part of the membership is down).
             local[u] = 0.0;
+            has_local[u] = false;
         } else {
             let mut acc = 0.0;
             for _ in 0..k {
@@ -111,7 +117,8 @@ pub fn measure(
         local: f64,
         global: f64,
         min: f64,
-        m: f64, // message/weight count
+        m: f64,  // node-count weight
+        ml: f64, // weight of nodes that contributed a local sample
     }
     let mut acc: Vec<Acc> = (0..n)
         .map(|u| Acc {
@@ -119,6 +126,7 @@ pub fn measure(
             global: global[u],
             min: min[u],
             m: 1.0,
+            ml: if has_local[u] { 1.0 } else { 0.0 },
         })
         .collect();
     let mut messages = 0usize;
@@ -137,34 +145,42 @@ pub fn measure(
                 global: acc[u].global / 2.0,
                 min: acc[u].min / 2.0,
                 m: acc[u].m / 2.0,
+                ml: acc[u].ml / 2.0,
             };
             acc[u] = half;
             acc[v].local += half.local;
             acc[v].global += half.global;
             acc[v].min += half.min;
             acc[v].m += half.m;
+            acc[v].ml += half.ml;
             messages += 1;
         }
     }
 
-    // Read out: average the per-node ratio estimates (lines 20-24).
+    // Read out: average the per-node ratio estimates (lines 20-24). The
+    // local average uses its own weight (`ml`) so isolated nodes, which
+    // contributed no local sample, do not dilute it; on graphs without
+    // isolated nodes ml == m and the result is bit-identical.
     let mut l = 0.0;
+    let mut cnt_l = 0usize;
     let mut gl = 0.0;
     let mut mn = 0.0;
     let mut cnt = 0usize;
     for a in &acc {
         if a.m > 1e-9 {
-            l += a.local / a.m;
             gl += a.global / a.m;
             mn += a.min / a.m;
             cnt += 1;
         }
+        if a.ml > 1e-9 {
+            l += a.local / a.ml;
+            cnt_l += 1;
+        }
     }
-    let cnt = cnt.max(1) as f64;
     GossipStats {
-        local: l / cnt,
-        global: gl / cnt,
-        min: mn / cnt,
+        local: l / cnt_l.max(1) as f64,
+        global: gl / cnt.max(1) as f64,
+        min: mn / cnt.max(1) as f64,
         messages,
     }
 }
@@ -271,6 +287,38 @@ mod tests {
         let r_rand =
             measure(&w, &g_rand, MeasureConfig::default(), &mut rng).rho();
         assert!(r_short < r_rand, "{r_short} !< {r_rand}");
+    }
+
+    #[test]
+    fn isolated_nodes_do_not_dilute_the_local_average() {
+        // Half the membership is down: the local estimate must reflect
+        // the live ring, not be dragged toward zero by isolated nodes
+        // (the scenario engine measures alive sub-overlays like this).
+        let mut rng = Rng::new(6);
+        let w = synthetic::uniform(40, &mut rng);
+        let mut g = crate::graph::Graph::empty(40);
+        for i in 0..20usize {
+            let j = (i + 1) % 20;
+            g.add_edge(i, j, w.get(i, j));
+        }
+        let stats = measure(
+            &w,
+            &g,
+            MeasureConfig {
+                samples: 8,
+                rounds: 40,
+            },
+            &mut rng,
+        );
+        // exact_stats averages over adjacency entries only, i.e. the
+        // live ring — the gossiped value must track it, not half of it.
+        let exact = exact_stats(&w, &g);
+        assert!(
+            (stats.local - exact.local).abs() / exact.local < 0.35,
+            "local {} vs exact {}",
+            stats.local,
+            exact.local
+        );
     }
 
     #[test]

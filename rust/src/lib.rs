@@ -9,7 +9,9 @@
 //!   overlay topology builders (Chord / RAPID / Perigee / GA baselines),
 //!   DGRO ring construction + ρ-adaptive ring selection + parallel
 //!   partitioned construction, a discrete-event membership/gossip
-//!   runtime, and the figure-regeneration bench harness.
+//!   runtime, the [`scenario`] engine (deterministic churn +
+//!   dynamic-latency workloads — see docs/SCENARIOS.md), and the
+//!   figure-regeneration bench harness.
 //! * **L2 (python/compile/model.py)** — the Q-network (structure2vec
 //!   embedding + Q-head, Eqns 2–4), DQN-trained at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the embedding
@@ -49,6 +51,7 @@ pub mod par;
 pub mod prop;
 pub mod qnet;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod topology;
 pub mod util;

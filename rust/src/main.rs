@@ -4,12 +4,16 @@
 //!   build     construct one overlay and report diameter vs baselines
 //!   serve     run the coordinator over a churn trace (adaptive loop)
 //!   measure   Algorithm-3 gossip measurement + ρ for a topology
+//!   scenario  deterministic churn + dynamic-latency workloads
 //!   figures   regenerate paper figures (CSV under reports/)
 //!   config    print the default config JSON
 //!
 //! Examples:
 //!   dgro build --nodes 120 --model fabric --scorer pjrt
 //!   dgro serve --nodes 100 --model bitnode --horizon 5000
+//!   dgro scenario list
+//!   dgro scenario run --name flash-crowd --topology dgro --seed 7
+//!   dgro scenario compare --out reports
 //!   dgro figures --fig 13 --quick
 //!   dgro figures --all
 
@@ -24,6 +28,7 @@ use dgro::gossip::measure::{measure, MeasureConfig};
 use dgro::graph::diameter;
 use dgro::latency::Model;
 use dgro::membership::events::EventTrace;
+use dgro::scenario;
 use dgro::topology::{chord::Chord, paper_k, rapid::Rapid, random_ring, shortest_ring};
 use dgro::util::rng::Rng;
 use dgro::{log_error, log_info};
@@ -51,6 +56,7 @@ fn run(args: &[String]) -> Result<()> {
         "build" => cmd_build(rest),
         "serve" => cmd_serve(rest),
         "measure" => cmd_measure(rest),
+        "scenario" => cmd_scenario(rest),
         "figures" => cmd_figures(rest),
         "config" => {
             println!("{}", Config::default().to_json().to_string());
@@ -72,6 +78,7 @@ fn print_help() {
          \x20 build     construct one overlay, report diameter vs baselines\n\
          \x20 serve     run the adaptive coordinator over a churn trace\n\
          \x20 measure   gossip latency measurement + rho for a topology\n\
+         \x20 scenario  churn + dynamic-latency workloads (list|run|compare)\n\
          \x20 figures   regenerate paper figures (CSV under reports/)\n\
          \x20 config    print the default config JSON\n\
          \n\
@@ -243,6 +250,94 @@ fn cmd_measure(raw: &[String]) -> Result<()> {
     println!("decision: {choice:?}");
     println!("overlay diameter: {:.2}", diameter::diameter(&g));
     Ok(())
+}
+
+fn cmd_scenario(raw: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "scenario",
+        "churn + dynamic-latency workloads; actions: list | run | compare",
+    )
+    .flag("name", "flash-crowd", "catalog scenario (dgro scenario list)")
+    .flag("spec", "", "path to a JSON ScenarioSpec (overrides --name)")
+    .flag("topology", "dgro", "dgro|chord|rapid|perigee|random")
+    .flag("seed", "7", "rng seed (same seed => byte-identical report)")
+    .flag("period", "250", "adaptation/measurement period (sim-ms)")
+    .flag("out", "", "also write CSV tables under this directory")
+    .switch("quick", "compare against the trimmed baseline panel");
+    let a = cmd.parse(raw)?;
+    let action =
+        a.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    let seed = a.get_u64("seed")?;
+    let period = a.get_f64("period")?;
+    if !(period > 0.0) {
+        anyhow::bail!("--period must be > 0, got {period}");
+    }
+    match action {
+        "list" => {
+            for s in scenario::catalog() {
+                println!(
+                    "{:<18} n={:<4} alive0={:<4} horizon={:<6} \
+                     model={:<8} {}",
+                    s.name,
+                    s.nodes,
+                    s.initial_alive,
+                    s.horizon,
+                    s.model,
+                    s.about
+                );
+            }
+            Ok(())
+        }
+        "run" => {
+            let spec = if a.get("spec").is_empty() {
+                scenario::find(a.get("name"))?
+            } else {
+                scenario::ScenarioSpec::load(a.get("spec"))?
+            };
+            let topology = scenario::Topology::parse(a.get("topology"))?;
+            let mut engine = scenario::ScenarioEngine::new(spec, seed)?;
+            engine.period = period;
+            let report = engine.run(topology)?;
+            print!("{}", report.render());
+            if !a.get("out").is_empty() {
+                runner::emit(&[report.table()], a.get("out"))?;
+            }
+            Ok(())
+        }
+        "compare" => {
+            let topologies: Vec<scenario::Topology> = if a.switch("quick")
+            {
+                vec![
+                    scenario::Topology::Dgro,
+                    scenario::Topology::Chord,
+                    scenario::Topology::Rapid,
+                ]
+            } else {
+                scenario::Topology::ALL.to_vec()
+            };
+            let rep = scenario::compare(
+                &scenario::catalog(),
+                &topologies,
+                seed,
+                period,
+            )?;
+            print!("{}", rep.render());
+            if a.get("out").is_empty() {
+                for t in &rep.timelines {
+                    println!("\n{}", t.to_markdown());
+                }
+            } else {
+                let mut tables = vec![rep.summary.clone()];
+                tables.extend(rep.timelines.iter().cloned());
+                runner::emit(&tables, a.get("out"))?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown scenario action '{other}' (list | run | compare)\n\n{}",
+            cmd.usage()
+        ),
+    }
 }
 
 fn cmd_figures(raw: &[String]) -> Result<()> {

@@ -3,6 +3,8 @@
 
 use std::collections::BTreeMap;
 
+use super::events::MembershipEvent;
+
 /// Lifecycle state of a member.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MemberState {
@@ -111,6 +113,35 @@ impl MembershipList {
             }
         }
     }
+
+    /// Apply a timed workload event ([`MembershipEvent`]) with the
+    /// coordinator's incarnation convention: a Join bumps the node's
+    /// incarnation (so a rejoin supersedes its earlier Leave/Crash at
+    /// the same incarnation), Leave/Crash keep it. Returns whether the
+    /// record changed — re-departing an already-gone node is a no-op,
+    /// which is what makes independently generated churn streams safe
+    /// to merge.
+    pub fn apply_trace_event(&mut self, ev: &MembershipEvent) -> bool {
+        match *ev {
+            MembershipEvent::Join { time, node } => {
+                let inc = self
+                    .get(node)
+                    .map(|m| m.incarnation + 1)
+                    .unwrap_or(0);
+                self.apply(node, MemberState::Alive, inc, time)
+            }
+            MembershipEvent::Leave { time, node } => {
+                let inc =
+                    self.get(node).map(|m| m.incarnation).unwrap_or(0);
+                self.apply(node, MemberState::Left, inc, time)
+            }
+            MembershipEvent::Crash { time, node } => {
+                let inc =
+                    self.get(node).map(|m| m.incarnation).unwrap_or(0);
+                self.apply(node, MemberState::Faulty, inc, time)
+            }
+        }
+    }
 }
 
 /// Precedence at equal incarnation: Alive < Suspect < Faulty/Left
@@ -167,5 +198,29 @@ mod tests {
         assert!(l.apply(7, MemberState::Alive, 0, 3.0));
         assert_eq!(l.len(), 3);
         assert_eq!(l.count_state(MemberState::Alive), 3);
+    }
+
+    #[test]
+    fn trace_events_roundtrip_leave_then_rejoin() {
+        let mut l = MembershipList::full(3);
+        assert!(l.apply_trace_event(&MembershipEvent::Leave {
+            time: 1.0,
+            node: 1,
+        }));
+        assert_eq!(l.get(1).unwrap().state, MemberState::Left);
+        // Rejoin bumps the incarnation and supersedes the departure.
+        assert!(l.apply_trace_event(&MembershipEvent::Join {
+            time: 2.0,
+            node: 1,
+        }));
+        assert_eq!(l.get(1).unwrap().state, MemberState::Alive);
+        assert_eq!(l.get(1).unwrap().incarnation, 1);
+        // Crashing an already-departed node is not news (safe merge of
+        // overlapping churn generators).
+        l.apply_trace_event(&MembershipEvent::Crash { time: 3.0, node: 2 });
+        assert!(!l.apply_trace_event(&MembershipEvent::Leave {
+            time: 4.0,
+            node: 2,
+        }));
     }
 }

@@ -2,9 +2,22 @@
 //! path. Python never runs here — `artifacts/qnet_*.hlo.txt` were
 //! lowered once by `make artifacts` (python/compile/aot.py) and this
 //! module replays them on the `xla` crate's CPU PJRT client.
+//!
+//! The backend is gated behind the `pjrt` cargo feature because the
+//! `xla` crate is not available on the offline registry this repo builds
+//! against. Without the feature, [`pjrt_stub`] provides the identical
+//! public surface: construction fails with an explanatory error and
+//! every caller (coordinator, benches, examples, round-trip tests)
+//! already falls back to the native scorer or skips.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt_stub;
 
 pub use artifacts::ArtifactStore;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtQnet;
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::PjrtQnet;

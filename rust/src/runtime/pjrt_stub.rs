@@ -1,0 +1,64 @@
+//! Stand-in for [`super::pjrt`] when the `pjrt` cargo feature is off.
+//!
+//! Presents the same public surface as the real backend so every call
+//! site compiles unchanged; construction returns an error, which the
+//! existing fallback paths (ScorerKind::make, the benches, the e2e
+//! example, the round-trip tests) treat as "backend unavailable".
+
+use anyhow::{bail, Result};
+
+use super::artifacts::ArtifactStore;
+use crate::qnet::state::State;
+use crate::qnet::QScorer;
+
+/// Disabled PJRT Q-net scorer. Cannot be constructed.
+pub struct PjrtQnet {
+    _private: (),
+}
+
+impl PjrtQnet {
+    /// Always fails: the binary was built without the `pjrt` feature.
+    pub fn new(_store: ArtifactStore) -> Result<PjrtQnet> {
+        bail!(
+            "dgro was built without the `pjrt` feature; use \
+             --scorer native|greedy, or add the `xla` dependency and \
+             rebuild with `--features pjrt` (see Cargo.toml)"
+        )
+    }
+
+    /// Convenience mirror of the real backend's constructor.
+    pub fn from_default_artifacts() -> Result<PjrtQnet> {
+        PjrtQnet::new(ArtifactStore::discover(ArtifactStore::default_dir())?)
+    }
+
+    /// Unreachable in practice (no constructor succeeds).
+    pub fn forward(&mut self, _st: &State) -> Result<Vec<f32>> {
+        bail!("pjrt backend not compiled in")
+    }
+}
+
+impl QScorer for PjrtQnet {
+    fn score(&mut self, st: &State) -> Result<Vec<f32>> {
+        self.forward(st)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-disabled"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_construction_explains_the_feature_gate() {
+        let err = PjrtQnet::from_default_artifacts().unwrap_err().to_string();
+        // Either artifact discovery or the gate itself must point the
+        // user at a fix.
+        assert!(
+            err.contains("pjrt") || err.contains("artifacts"),
+            "unhelpful error: {err}"
+        );
+    }
+}

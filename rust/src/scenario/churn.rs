@@ -1,0 +1,194 @@
+//! Churn generators: deterministic, seeded streams of timed membership
+//! events. Each generator returns a plain `Vec<MembershipEvent>` so the
+//! scenario spec can compose several of them with [`merge`]; overlap
+//! between generators is safe because the SWIM merge rule in
+//! [`crate::membership::list::MembershipList::apply_trace_event`] turns
+//! a re-departure of an already-gone node into a no-op.
+
+use crate::membership::events::{EventTrace, MembershipEvent};
+use crate::util::rng::Rng;
+
+/// Background Poisson join/leave/crash churn over the id range
+/// `0..n_alive` (delegates to [`EventTrace::churn`] — same process,
+/// surfaced here so every generator lives under one roof).
+pub fn poisson(
+    n_alive: usize,
+    horizon: f64,
+    rate: f64,
+    rng: &mut Rng,
+) -> Vec<MembershipEvent> {
+    EventTrace::churn(n_alive, horizon, rate, rng).events
+}
+
+/// Nodes `first..first + count` start the scenario absent: they are
+/// marked Left at t = 0 and only exist once a later generator (a flash
+/// crowd) joins them.
+pub fn absent_at_start(first: u32, count: u32) -> Vec<MembershipEvent> {
+    (first..first + count)
+        .map(|node| MembershipEvent::Leave { time: 0.0, node })
+        .collect()
+}
+
+/// A flash crowd: nodes `first..first + count` join in a burst spread
+/// uniformly over `[at, at + over)` — the "whole collaboration logs on
+/// for the observation window" workload.
+pub fn flash_crowd(
+    first: u32,
+    count: u32,
+    at: f64,
+    over: f64,
+    rng: &mut Rng,
+) -> Vec<MembershipEvent> {
+    let mut evs: Vec<MembershipEvent> = (first..first + count)
+        .map(|node| MembershipEvent::Join {
+            time: at + rng.f64() * over.max(0.0),
+            node,
+        })
+        .collect();
+    sort_by_time(&mut evs);
+    evs
+}
+
+/// A correlated failure: the contiguous id block `first..first + count`
+/// (a rack / site under the block-structured latency models) crashes
+/// within a `spread`-wide window starting at `at` — near-simultaneous,
+/// like a PDU or uplink failure, but not byte-identical times.
+pub fn correlated_crash(
+    first: u32,
+    count: u32,
+    at: f64,
+    spread: f64,
+    rng: &mut Rng,
+) -> Vec<MembershipEvent> {
+    let mut evs: Vec<MembershipEvent> = (first..first + count)
+        .map(|node| MembershipEvent::Crash {
+            time: at + rng.f64() * spread.max(0.0),
+            node,
+        })
+        .collect();
+    sort_by_time(&mut evs);
+    evs
+}
+
+/// A transient partition as the coordinator sees it: the block drops out
+/// (crashes) around `at` and every member rejoins around `heal_at`.
+pub fn partition_rejoin(
+    first: u32,
+    count: u32,
+    at: f64,
+    heal_at: f64,
+    rng: &mut Rng,
+) -> Vec<MembershipEvent> {
+    let jitter = ((heal_at - at) * 0.05).max(0.0);
+    let mut evs = Vec::with_capacity(2 * count as usize);
+    for node in first..first + count {
+        evs.push(MembershipEvent::Crash {
+            time: at + rng.f64() * jitter,
+            node,
+        });
+    }
+    for node in first..first + count {
+        evs.push(MembershipEvent::Join {
+            time: heal_at + rng.f64() * jitter,
+            node,
+        });
+    }
+    sort_by_time(&mut evs);
+    evs
+}
+
+/// Merge generator outputs into one time-sorted trace. The sort is
+/// stable, so equal-time events keep generator order and composition is
+/// deterministic.
+pub fn merge(parts: Vec<Vec<MembershipEvent>>) -> EventTrace {
+    let mut events: Vec<MembershipEvent> =
+        parts.into_iter().flatten().collect();
+    sort_by_time(&mut events);
+    EventTrace { events }
+}
+
+fn sort_by_time(evs: &mut [MembershipEvent]) {
+    evs.sort_by(|a, b| a.time().total_cmp(&b.time()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_sorted(evs: &[MembershipEvent]) -> bool {
+        evs.windows(2).all(|w| w[0].time() <= w[1].time())
+    }
+
+    #[test]
+    fn flash_crowd_joins_inside_window() {
+        let mut rng = Rng::new(1);
+        let evs = flash_crowd(50, 20, 1000.0, 250.0, &mut rng);
+        assert_eq!(evs.len(), 20);
+        assert!(is_sorted(&evs));
+        for ev in &evs {
+            assert!(matches!(ev, MembershipEvent::Join { .. }));
+            assert!(ev.time() >= 1000.0 && ev.time() < 1250.0);
+            assert!((50..70).contains(&ev.node()));
+        }
+    }
+
+    #[test]
+    fn correlated_crash_hits_exactly_the_block() {
+        let mut rng = Rng::new(2);
+        let evs = correlated_crash(10, 5, 500.0, 10.0, &mut rng);
+        let mut nodes: Vec<u32> = evs.iter().map(|e| e.node()).collect();
+        nodes.sort_unstable();
+        assert_eq!(nodes, vec![10, 11, 12, 13, 14]);
+        assert!(evs
+            .iter()
+            .all(|e| matches!(e, MembershipEvent::Crash { .. })));
+        assert!(evs.iter().all(|e| (500.0..510.0).contains(&e.time())));
+    }
+
+    #[test]
+    fn partition_rejoin_crashes_then_rejoins_everyone() {
+        let mut rng = Rng::new(3);
+        let evs = partition_rejoin(4, 6, 100.0, 400.0, &mut rng);
+        assert_eq!(evs.len(), 12);
+        assert!(is_sorted(&evs));
+        let crashes = evs
+            .iter()
+            .filter(|e| matches!(e, MembershipEvent::Crash { .. }))
+            .count();
+        assert_eq!(crashes, 6);
+        // Every crash precedes every rejoin.
+        let last_crash = evs
+            .iter()
+            .filter(|e| matches!(e, MembershipEvent::Crash { .. }))
+            .map(|e| e.time())
+            .fold(0.0f64, f64::max);
+        let first_join = evs
+            .iter()
+            .filter(|e| matches!(e, MembershipEvent::Join { .. }))
+            .map(|e| e.time())
+            .fold(f64::INFINITY, f64::min);
+        assert!(last_crash < first_join);
+    }
+
+    #[test]
+    fn merge_is_sorted_and_deterministic() {
+        let mut rng = Rng::new(4);
+        let a = flash_crowd(30, 10, 0.0, 1000.0, &mut rng);
+        let b = correlated_crash(0, 8, 500.0, 50.0, &mut rng);
+        let trace = merge(vec![a.clone(), b.clone()]);
+        assert_eq!(trace.len(), 18);
+        assert!(is_sorted(&trace.events));
+        let again = merge(vec![a, b]);
+        assert_eq!(trace.events, again.events);
+    }
+
+    #[test]
+    fn absent_at_start_marks_block_left_at_zero() {
+        let evs = absent_at_start(8, 4);
+        assert_eq!(evs.len(), 4);
+        for ev in &evs {
+            assert_eq!(ev.time(), 0.0);
+            assert!(matches!(ev, MembershipEvent::Leave { .. }));
+        }
+    }
+}

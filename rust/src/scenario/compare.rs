@@ -1,0 +1,156 @@
+//! Scenario comparison: run every scenario × topology under identical
+//! conditions (one seed → one base latency draw + one churn trace per
+//! scenario, shared by all topologies) and tabulate diameter-under-churn
+//! — the DGRO-vs-baselines view the paper's static figures cannot show.
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::scenario::engine::{ScenarioEngine, Topology};
+use crate::scenario::spec::ScenarioSpec;
+
+/// Output of [`compare`].
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub scenarios: Vec<String>,
+    pub topologies: Vec<Topology>,
+    /// Rows `[scenario_index, mean alive-overlay diameter per topology…]`
+    /// (Table cells are numeric; [`CompareReport::render`] adds names).
+    pub summary: Table,
+    /// One table per scenario: per-period alive-overlay diameter for
+    /// every topology.
+    pub timelines: Vec<Table>,
+}
+
+impl CompareReport {
+    /// Markdown-ish summary with scenario names attached. Deterministic.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(out, "| scenario          ");
+        for t in &self.topologies {
+            let _ = write!(out, "| {:>8} ", t.name());
+        }
+        let _ = writeln!(out, "|");
+        let _ = write!(out, "|---");
+        for _ in &self.topologies {
+            let _ = write!(out, "|---");
+        }
+        let _ = writeln!(out, "|");
+        for (i, name) in self.scenarios.iter().enumerate() {
+            let _ = write!(out, "| {name:<17} ");
+            for j in 0..self.topologies.len() {
+                let _ =
+                    write!(out, "| {:8.3} ", self.summary.rows[i][j + 1]);
+            }
+            let _ = writeln!(out, "|");
+        }
+        out
+    }
+}
+
+/// Default adaptation/measurement cadence (sim-ms), shared with
+/// [`ScenarioEngine`]'s construction default.
+pub const DEFAULT_PERIOD_MS: f64 = 250.0;
+
+/// Run the cross product and collect mean alive-overlay diameters
+/// (per-period timelines included). `seed` keys everything; re-running
+/// with the same inputs reproduces the tables byte-for-byte. `period`
+/// is the measurement cadence in sim-ms ([`DEFAULT_PERIOD_MS`]).
+pub fn compare(
+    specs: &[ScenarioSpec],
+    topologies: &[Topology],
+    seed: u64,
+    period: f64,
+) -> Result<CompareReport> {
+    assert!(!specs.is_empty() && !topologies.is_empty());
+    let mut header: Vec<String> = vec!["scenario".to_string()];
+    header.extend(topologies.iter().map(|t| t.name().to_string()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut summary = Table::new(
+        "Scenario compare: mean diameter under churn",
+        &header_refs,
+    );
+
+    let mut timelines = Vec::with_capacity(specs.len());
+    let mut names = Vec::with_capacity(specs.len());
+    for (si, spec) in specs.iter().enumerate() {
+        let mut engine = ScenarioEngine::new(spec.clone(), seed)?;
+        engine.period = period;
+        let mut runs = Vec::with_capacity(topologies.len());
+        let mut row = vec![si as f64];
+        for &topo in topologies {
+            let rep = engine.run(topo)?;
+            row.push(rep.mean_diameter());
+            runs.push(rep);
+        }
+        summary.row(row);
+
+        let mut tl_header: Vec<String> = vec!["t_ms".to_string()];
+        tl_header.extend(topologies.iter().map(|t| t.name().to_string()));
+        let tl_refs: Vec<&str> =
+            tl_header.iter().map(|s| s.as_str()).collect();
+        let mut tl = Table::new(
+            &format!("Scenario {}: diameter under churn", spec.name),
+            &tl_refs,
+        );
+        // Every run shares the spec's horizon/period, so rows align.
+        for p in 0..runs[0].rows.len() {
+            let mut cells = vec![runs[0].rows[p].t];
+            for run in &runs {
+                cells.push(
+                    run.rows.get(p).map(|r| r.diameter).unwrap_or(0.0),
+                );
+            }
+            tl.row(cells);
+        }
+        timelines.push(tl);
+        names.push(spec.name.clone());
+    }
+    Ok(CompareReport {
+        scenarios: names,
+        topologies: topologies.to_vec(),
+        summary,
+        timelines,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::{ChurnSpec, ScenarioSpec};
+
+    fn mini(name: &str) -> ScenarioSpec {
+        ScenarioSpec {
+            name: name.into(),
+            about: "compare unit test".into(),
+            nodes: 20,
+            initial_alive: 20,
+            model: "uniform".into(),
+            horizon: 500.0,
+            churn: vec![ChurnSpec::Poisson { rate: 0.001 }],
+            latency: vec![],
+        }
+    }
+
+    #[test]
+    fn compare_shapes_and_determinism() {
+        let specs = vec![mini("a"), mini("b")];
+        let topos = [Topology::Dgro, Topology::Chord];
+        let r1 = compare(&specs, &topos, 3, DEFAULT_PERIOD_MS).unwrap();
+        assert_eq!(r1.summary.rows.len(), 2);
+        assert_eq!(r1.summary.header.len(), 3);
+        assert_eq!(r1.timelines.len(), 2);
+        for t in &r1.timelines {
+            assert_eq!(t.rows.len(), 2); // horizon 500 / period 250
+            for row in &t.rows {
+                assert!(row.iter().all(|x| x.is_finite()));
+            }
+        }
+        let r2 = compare(&specs, &topos, 3, DEFAULT_PERIOD_MS).unwrap();
+        assert_eq!(r1.render(), r2.render());
+        assert_eq!(r1.summary.to_csv(), r2.summary.to_csv());
+        assert!(r1.render().contains("| a"));
+    }
+}

@@ -1,0 +1,412 @@
+//! Dynamic latency models: a time-varying multiplicative overlay on a
+//! base [`LatencyMatrix`]. Effects compose (factors multiply per link),
+//! every materialized matrix keeps the §III invariants (symmetric, zero
+//! diagonal, strictly positive off-diagonal), and everything is a pure
+//! function of (base, effects, t) — no hidden state, so scenario runs
+//! are bit-reproducible.
+
+use anyhow::{bail, Result};
+
+use crate::latency::LatencyMatrix;
+use crate::util::json::Json;
+
+/// One time-varying effect on the latency overlay.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LatencyEffect {
+    /// Diurnal drift: every link scales by
+    /// `1 + amplitude * sin(2π (t − phase) / period)` — WAN RTTs
+    /// breathing with the day/night load cycle. `amplitude` must sit in
+    /// `[0, 1)` so latencies stay positive.
+    Diurnal { period: f64, amplitude: f64, phase: f64 },
+    /// Link degradation: every link incident to `node` scales by
+    /// `factor` during `[start, end)` — a failing NIC or congested
+    /// access uplink.
+    Degrade { node: u32, factor: f64, start: f64, end: f64 },
+    /// Transient WAN partition: links crossing the id boundary
+    /// (`u < boundary <= v`) scale by `factor` during `[start, end)` —
+    /// an inter-site trunk brownout.
+    Partition { boundary: u32, factor: f64, start: f64, end: f64 },
+}
+
+impl LatencyEffect {
+    /// Multiplier this effect applies to link `(u, v)` at time `t`.
+    fn factor(&self, u: usize, v: usize, t: f64) -> f64 {
+        match *self {
+            LatencyEffect::Diurnal {
+                period,
+                amplitude,
+                phase,
+            } => {
+                1.0 + amplitude
+                    * (std::f64::consts::TAU * (t - phase) / period).sin()
+            }
+            LatencyEffect::Degrade {
+                node,
+                factor,
+                start,
+                end,
+            } => {
+                let hit = u == node as usize || v == node as usize;
+                if hit && t >= start && t < end {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+            LatencyEffect::Partition {
+                boundary,
+                factor,
+                start,
+                end,
+            } => {
+                let b = boundary as usize;
+                if (u < b) != (v < b) && t >= start && t < end {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Whether this effect's multiplier can differ anywhere in `(t0, t1]`
+    /// from its `t0` value — drives the engine's "re-materialize this
+    /// period?" decision.
+    fn changes_within(&self, t0: f64, t1: f64) -> bool {
+        match *self {
+            LatencyEffect::Diurnal { .. } => t1 > t0,
+            LatencyEffect::Degrade { start, end, .. }
+            | LatencyEffect::Partition { start, end, .. } => {
+                // An activation or deactivation edge inside the window.
+                (t0 < start && start <= t1) || (t0 < end && end <= t1)
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            LatencyEffect::Diurnal {
+                period, amplitude, ..
+            } => {
+                if period <= 0.0 {
+                    bail!("diurnal period must be > 0, got {period}");
+                }
+                if !(0.0..1.0).contains(&amplitude) {
+                    bail!(
+                        "diurnal amplitude must be in [0, 1), got {amplitude}"
+                    );
+                }
+            }
+            LatencyEffect::Degrade {
+                factor, start, end, ..
+            }
+            | LatencyEffect::Partition {
+                factor, start, end, ..
+            } => {
+                if factor <= 0.0 {
+                    bail!("effect factor must be > 0, got {factor}");
+                }
+                if !(start < end) {
+                    bail!("effect window [{start}, {end}) is empty");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON form (used by the scenario spec files).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            LatencyEffect::Diurnal {
+                period,
+                amplitude,
+                phase,
+            } => Json::obj(vec![
+                ("kind", Json::str("diurnal")),
+                ("period", Json::num(period)),
+                ("amplitude", Json::num(amplitude)),
+                ("phase", Json::num(phase)),
+            ]),
+            LatencyEffect::Degrade {
+                node,
+                factor,
+                start,
+                end,
+            } => Json::obj(vec![
+                ("kind", Json::str("degrade")),
+                ("node", Json::num(node as f64)),
+                ("factor", Json::num(factor)),
+                ("start", Json::num(start)),
+                ("end", Json::num(end)),
+            ]),
+            LatencyEffect::Partition {
+                boundary,
+                factor,
+                start,
+                end,
+            } => Json::obj(vec![
+                ("kind", Json::str("partition")),
+                ("boundary", Json::num(boundary as f64)),
+                ("factor", Json::num(factor)),
+                ("start", Json::num(start)),
+                ("end", Json::num(end)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<LatencyEffect> {
+        let effect = match v.get("kind")?.as_str()? {
+            "diurnal" => LatencyEffect::Diurnal {
+                period: v.get("period")?.as_f64()?,
+                amplitude: v.get("amplitude")?.as_f64()?,
+                phase: v.get("phase")?.as_f64()?,
+            },
+            "degrade" => LatencyEffect::Degrade {
+                node: v.get("node")?.as_usize()? as u32,
+                factor: v.get("factor")?.as_f64()?,
+                start: v.get("start")?.as_f64()?,
+                end: v.get("end")?.as_f64()?,
+            },
+            "partition" => LatencyEffect::Partition {
+                boundary: v.get("boundary")?.as_usize()? as u32,
+                factor: v.get("factor")?.as_f64()?,
+                start: v.get("start")?.as_f64()?,
+                end: v.get("end")?.as_f64()?,
+            },
+            other => bail!("unknown latency effect kind '{other}'"),
+        };
+        effect.validate()?;
+        Ok(effect)
+    }
+}
+
+/// A time-varying latency view: base matrix + composed effects.
+#[derive(Clone, Debug)]
+pub struct DynamicLatency {
+    base: LatencyMatrix,
+    effects: Vec<LatencyEffect>,
+}
+
+impl DynamicLatency {
+    pub fn new(
+        base: LatencyMatrix,
+        effects: Vec<LatencyEffect>,
+    ) -> Result<DynamicLatency> {
+        for e in &effects {
+            e.validate()?;
+        }
+        Ok(DynamicLatency { base, effects })
+    }
+
+    pub fn base(&self) -> &LatencyMatrix {
+        &self.base
+    }
+
+    pub fn is_static(&self) -> bool {
+        self.effects.is_empty()
+    }
+
+    /// Materialize the effective matrix at sim-time `t`
+    /// (O(n² · effects); called once per adaptation period).
+    pub fn at(&self, t: f64) -> LatencyMatrix {
+        if self.effects.is_empty() {
+            return self.base.clone();
+        }
+        LatencyMatrix::from_fn(self.base.n(), |u, v| {
+            let mut w = self.base.get(u, v) as f64;
+            for e in &self.effects {
+                w *= e.factor(u, v, t);
+            }
+            w as f32
+        })
+    }
+
+    /// True when some effect changes the matrix within `(t0, t1]`.
+    pub fn changes_within(&self, t0: f64, t1: f64) -> bool {
+        self.effects.iter().any(|e| e.changes_within(t0, t1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::Model;
+    use crate::util::rng::Rng;
+
+    fn base(n: usize) -> LatencyMatrix {
+        let mut rng = Rng::new(11);
+        Model::Uniform.sample(n, &mut rng)
+    }
+
+    #[test]
+    fn static_view_passes_the_base_through() {
+        let w = base(12);
+        let d = DynamicLatency::new(w.clone(), vec![]).unwrap();
+        assert!(d.is_static());
+        assert_eq!(d.at(0.0), w);
+        assert_eq!(d.at(1e6), w);
+        assert!(!d.changes_within(0.0, 1e9));
+    }
+
+    #[test]
+    fn diurnal_drift_stays_valid_and_oscillates() {
+        let w = base(16);
+        let d = DynamicLatency::new(
+            w.clone(),
+            vec![LatencyEffect::Diurnal {
+                period: 1000.0,
+                amplitude: 0.6,
+                phase: 0.0,
+            }],
+        )
+        .unwrap();
+        // Peak of the sine at t = period/4, trough at 3·period/4.
+        let hi = d.at(250.0);
+        let lo = d.at(750.0);
+        hi.validate().unwrap();
+        lo.validate().unwrap();
+        let f_hi = hi.get(0, 1) / w.get(0, 1);
+        let f_lo = lo.get(0, 1) / w.get(0, 1);
+        assert!((f_hi - 1.6).abs() < 1e-3, "peak factor {f_hi}");
+        assert!((f_lo - 0.4).abs() < 1e-3, "trough factor {f_lo}");
+        assert!(d.changes_within(0.0, 1.0));
+    }
+
+    #[test]
+    fn degrade_touches_only_the_node_and_only_in_window() {
+        let w = base(10);
+        let d = DynamicLatency::new(
+            w.clone(),
+            vec![LatencyEffect::Degrade {
+                node: 3,
+                factor: 5.0,
+                start: 100.0,
+                end: 200.0,
+            }],
+        )
+        .unwrap();
+        let during = d.at(150.0);
+        during.validate().unwrap();
+        assert!((during.get(3, 7) - 5.0 * w.get(3, 7)).abs() < 1e-4);
+        assert!((during.get(1, 7) - w.get(1, 7)).abs() < 1e-6);
+        let before = d.at(50.0);
+        assert_eq!(before, w);
+        let after = d.at(200.0); // end is exclusive
+        assert_eq!(after, w);
+        assert!(d.changes_within(50.0, 150.0)); // activation edge
+        assert!(d.changes_within(150.0, 250.0)); // deactivation edge
+        assert!(!d.changes_within(110.0, 190.0)); // flat inside
+        assert!(!d.changes_within(300.0, 400.0)); // flat after
+    }
+
+    #[test]
+    fn partition_scales_only_cross_boundary_links() {
+        let w = base(8);
+        let d = DynamicLatency::new(
+            w.clone(),
+            vec![LatencyEffect::Partition {
+                boundary: 4,
+                factor: 8.0,
+                start: 0.0,
+                end: 10.0,
+            }],
+        )
+        .unwrap();
+        let m = d.at(5.0);
+        m.validate().unwrap();
+        assert!((m.get(1, 6) - 8.0 * w.get(1, 6)).abs() < 1e-3);
+        assert!((m.get(0, 3) - w.get(0, 3)).abs() < 1e-6);
+        assert!((m.get(5, 7) - w.get(5, 7)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn effects_compose_multiplicatively() {
+        let w = base(6);
+        let d = DynamicLatency::new(
+            w.clone(),
+            vec![
+                LatencyEffect::Degrade {
+                    node: 0,
+                    factor: 2.0,
+                    start: 0.0,
+                    end: 100.0,
+                },
+                LatencyEffect::Partition {
+                    boundary: 3,
+                    factor: 3.0,
+                    start: 0.0,
+                    end: 100.0,
+                },
+            ],
+        )
+        .unwrap();
+        let m = d.at(10.0);
+        // (0, 5) is incident to node 0 AND crosses the boundary: 6x.
+        assert!((m.get(0, 5) - 6.0 * w.get(0, 5)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        assert!(LatencyEffect::Diurnal {
+            period: 0.0,
+            amplitude: 0.5,
+            phase: 0.0
+        }
+        .validate()
+        .is_err());
+        assert!(LatencyEffect::Diurnal {
+            period: 10.0,
+            amplitude: 1.0,
+            phase: 0.0
+        }
+        .validate()
+        .is_err());
+        assert!(LatencyEffect::Degrade {
+            node: 0,
+            factor: 0.0,
+            start: 0.0,
+            end: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(LatencyEffect::Partition {
+            boundary: 2,
+            factor: 2.0,
+            start: 5.0,
+            end: 5.0
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let effects = vec![
+            LatencyEffect::Diurnal {
+                period: 2000.0,
+                amplitude: 0.5,
+                phase: 100.0,
+            },
+            LatencyEffect::Degrade {
+                node: 7,
+                factor: 4.0,
+                start: 10.0,
+                end: 20.0,
+            },
+            LatencyEffect::Partition {
+                boundary: 32,
+                factor: 6.0,
+                start: 1.0,
+                end: 2.0,
+            },
+        ];
+        for e in effects {
+            let text = e.to_json().to_string();
+            let back = LatencyEffect::from_json(
+                &crate::util::json::parse(&text).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back, e);
+        }
+    }
+}

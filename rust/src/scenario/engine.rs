@@ -1,0 +1,453 @@
+//! The scenario engine: runs one [`ScenarioSpec`] against one overlay
+//! topology under a shared seed. The same seed produces the same base
+//! latency draw, the same churn trace and the same dynamic-latency
+//! overlay for every topology, so DGRO and the baselines are compared
+//! under byte-identical conditions.
+//!
+//! * `Topology::Dgro` drives the real coordinator event loop
+//!   ([`Coordinator::run_dynamic`]) — membership events, ρ-adaptive ring
+//!   swaps, time-varying latency view.
+//! * The static baselines (Chord / RAPID / Perigee / random K-ring)
+//!   build their overlay once over the full universe and never re-wire —
+//!   which is exactly the behavior under churn the comparison is about.
+//!
+//! All reported diameters are over the *alive* sub-overlay (faulty
+//! nodes do not relay; largest component when disconnected), measured
+//! identically on both paths.
+
+use std::collections::HashSet;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::coordinator::Coordinator;
+use crate::gossip::measure::{measure, MeasureConfig};
+use crate::graph::{diameter, Graph};
+use crate::latency::Model;
+use crate::membership::list::{MemberState, MembershipList};
+use crate::metrics::{Metrics, Table};
+use crate::scenario::dynamics::DynamicLatency;
+use crate::scenario::spec::ScenarioSpec;
+use crate::topology::{
+    chord::Chord, kring, paper_k, perigee, random_ring, rapid::Rapid,
+};
+use crate::util::rng::Rng;
+
+/// Which overlay a scenario drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// The adaptive DGRO coordinator (ρ-guided ring swaps).
+    Dgro,
+    Chord,
+    Rapid,
+    /// Perigee paired with a random ring (its standard companion — alone
+    /// it gives no connectivity guarantee).
+    Perigee,
+    /// Static K random rings (consistent hashing).
+    RandomKRing,
+}
+
+impl Topology {
+    pub const ALL: [Topology; 5] = [
+        Topology::Dgro,
+        Topology::Chord,
+        Topology::Rapid,
+        Topology::Perigee,
+        Topology::RandomKRing,
+    ];
+
+    pub fn parse(s: &str) -> Result<Topology> {
+        match s.to_ascii_lowercase().as_str() {
+            "dgro" => Ok(Topology::Dgro),
+            "chord" => Ok(Topology::Chord),
+            "rapid" => Ok(Topology::Rapid),
+            "perigee" => Ok(Topology::Perigee),
+            "random" | "kring" => Ok(Topology::RandomKRing),
+            other => bail!(
+                "unknown topology '{other}' \
+                 (dgro|chord|rapid|perigee|random)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Dgro => "dgro",
+            Topology::Chord => "chord",
+            Topology::Rapid => "rapid",
+            Topology::Perigee => "perigee",
+            Topology::RandomKRing => "random",
+        }
+    }
+}
+
+/// One adaptation/measurement period of a scenario run.
+#[derive(Clone, Copy, Debug)]
+pub struct PeriodRow {
+    /// Sim time at the end of the period (ms).
+    pub t: f64,
+    /// ρ statistic from the period's gossip measurement, taken on the
+    /// topology's *full* overlay with current latencies — the system's
+    /// own operational view, crashed nodes included — exactly like the
+    /// coordinator's adapt loop, so the column is comparable across
+    /// topologies.
+    pub rho: f64,
+    /// Diameter of the alive sub-overlay (largest component).
+    pub diameter: f64,
+    /// Alive members.
+    pub alive: usize,
+    /// Ring swaps this period (always 0 for static baselines).
+    pub swaps: u64,
+}
+
+/// Result of one scenario × topology run.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub topology: Topology,
+    pub seed: u64,
+    pub rows: Vec<PeriodRow>,
+    pub metrics: Metrics,
+}
+
+impl ScenarioReport {
+    pub fn mean_diameter(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().map(|r| r.diameter).sum::<f64>()
+            / self.rows.len() as f64
+    }
+
+    pub fn peak_diameter(&self) -> f64 {
+        self.rows.iter().map(|r| r.diameter).fold(0.0, f64::max)
+    }
+
+    pub fn final_diameter(&self) -> f64 {
+        self.rows.last().map(|r| r.diameter).unwrap_or(0.0)
+    }
+
+    pub fn total_swaps(&self) -> u64 {
+        self.rows.iter().map(|r| r.swaps).sum()
+    }
+
+    /// Per-period table (CSV-able via [`Table`]).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Scenario {} on {}",
+                self.scenario,
+                self.topology.name()
+            ),
+            &["t_ms", "rho", "alive_diameter", "alive", "swaps"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.t,
+                r.rho,
+                r.diameter,
+                r.alive as f64,
+                r.swaps as f64,
+            ]);
+        }
+        t
+    }
+
+    /// Deterministic text report: byte-identical across runs of the same
+    /// (spec, topology, seed) — no wall-clock, no map-iteration
+    /// nondeterminism (the metrics registry is BTreeMap-backed).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "scenario {} topology={} seed={} periods={}",
+            self.scenario,
+            self.topology.name(),
+            self.seed,
+            self.rows.len()
+        );
+        let _ = writeln!(
+            out,
+            "{:>8} {:>7} {:>10} {:>6} {:>6}",
+            "t_ms", "rho", "diameter", "alive", "swaps"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{:8.0} {:7.3} {:10.3} {:6} {:6}",
+                r.t, r.rho, r.diameter, r.alive, r.swaps
+            );
+        }
+        let _ = writeln!(
+            out,
+            "mean_diameter {:.3}  peak_diameter {:.3}  \
+             final_diameter {:.3}  swaps {}",
+            self.mean_diameter(),
+            self.peak_diameter(),
+            self.final_diameter(),
+            self.total_swaps()
+        );
+        out.push_str(&self.metrics.report());
+        out
+    }
+}
+
+/// Runs a spec against topologies. Construction validates the spec once;
+/// `period` (default 250 sim-ms) is the adaptation/measurement cadence.
+pub struct ScenarioEngine {
+    spec: ScenarioSpec,
+    seed: u64,
+    pub period: f64,
+}
+
+impl ScenarioEngine {
+    pub fn new(spec: ScenarioSpec, seed: u64) -> Result<ScenarioEngine> {
+        spec.validate()?;
+        Ok(ScenarioEngine {
+            spec,
+            seed,
+            period: 250.0,
+        })
+    }
+
+    pub fn spec(&self) -> &ScenarioSpec {
+        &self.spec
+    }
+
+    /// The shared setting for this seed: base latency draw, dynamic
+    /// view, and the full churn trace. Identical for every topology.
+    fn setting(&self) -> Result<(DynamicLatency, crate::membership::events::EventTrace)> {
+        let mut rng = Rng::new(self.seed);
+        let model = Model::parse(&self.spec.model).ok_or_else(|| {
+            anyhow::anyhow!("bad model {}", self.spec.model)
+        })?;
+        let base = model.sample(self.spec.nodes, &mut rng);
+        let dyn_w = DynamicLatency::new(base, self.spec.latency.clone())?;
+        let trace = self.spec.events(&mut rng);
+        Ok((dyn_w, trace))
+    }
+
+    fn effective_period(&self) -> f64 {
+        self.period.min(self.spec.horizon)
+    }
+
+    pub fn run(&self, topology: Topology) -> Result<ScenarioReport> {
+        match topology {
+            Topology::Dgro => self.run_adaptive(),
+            t => self.run_static(t),
+        }
+    }
+
+    /// DGRO path: the coordinator's own event loop, fed the generated
+    /// trace and the time-varying latency view.
+    fn run_adaptive(&self) -> Result<ScenarioReport> {
+        let (dyn_w, trace) = self.setting()?;
+        let mut cfg = Config::default();
+        cfg.nodes = self.spec.nodes;
+        cfg.model = self.spec.model.clone();
+        cfg.seed = self.seed;
+        cfg.scorer = "greedy".to_string();
+        cfg.adapt_period_ms = self.effective_period();
+        let mut co = Coordinator::with_latency(cfg, dyn_w.at(0.0))?;
+        let mut prev_t = 0.0;
+        let rep = co.run_dynamic(&trace, self.spec.horizon, |t| {
+            let out = if dyn_w.changes_within(prev_t, t) {
+                Some(dyn_w.at(t))
+            } else {
+                None
+            };
+            prev_t = t;
+            out
+        })?;
+        let series = |name: &str| -> Vec<f64> {
+            co.metrics
+                .series(name)
+                .map(|s| s.values.clone())
+                .unwrap_or_default()
+        };
+        let alive = series("overlay.alive");
+        let alive_d = series("overlay.alive_diameter");
+        let swaps = series("rings.swaps_per_period");
+        let rows = rep
+            .timeline
+            .iter()
+            .enumerate()
+            .map(|(i, &(t, rho, _))| PeriodRow {
+                t,
+                rho,
+                diameter: alive_d.get(i).copied().unwrap_or(0.0),
+                alive: alive.get(i).copied().unwrap_or(0.0) as usize,
+                swaps: swaps.get(i).copied().unwrap_or(0.0) as u64,
+            })
+            .collect();
+        Ok(ScenarioReport {
+            scenario: self.spec.name.clone(),
+            topology: Topology::Dgro,
+            seed: self.seed,
+            rows,
+            metrics: co.metrics.clone(),
+        })
+    }
+
+    /// Baseline path: build the overlay once over the full universe,
+    /// then replay the same periods — membership events restrict the
+    /// alive sub-overlay, latency updates re-weight the fixed edges —
+    /// without any re-wiring.
+    fn run_static(&self, topology: Topology) -> Result<ScenarioReport> {
+        let (dyn_w, trace) = self.setting()?;
+        let n = self.spec.nodes;
+        // The t = 0 view, like the adaptive path's with_latency seed —
+        // an effect whose window opens at t = 0 must hit both paths
+        // (changes_within only reports edges strictly inside a period).
+        let w0 = dyn_w.at(0.0);
+        // Per-topology stream, forked off the scenario seed so adding a
+        // topology never perturbs another's draw.
+        let mut rng = Rng::new(self.seed ^ 0xB05E11E5);
+        let g0 = match topology {
+            Topology::Chord => Chord::build(n, &mut rng).to_graph(&w0),
+            Topology::Rapid => Rapid::build(n, &mut rng).to_graph(&w0),
+            Topology::Perigee => perigee::build(
+                &w0,
+                perigee::PerigeeConfig::default(),
+                &mut rng,
+            )
+            .union(&random_ring(n, &mut rng).to_graph(&w0)),
+            Topology::RandomKRing => {
+                kring::random_krings(n, paper_k(n), &mut rng)
+                    .to_graph(&w0)
+            }
+            Topology::Dgro => bail!("dgro runs on the adaptive path"),
+        };
+        let edges: Vec<(u32, u32)> =
+            g0.edges().iter().map(|&(u, v, _)| (u, v)).collect();
+
+        let mut membership = MembershipList::full(n);
+        let mut metrics = Metrics::new();
+        let mut rows = Vec::new();
+        let period = self.effective_period();
+        let mut w = w0;
+        let mut t = 0.0;
+        let mut prev_t = 0.0;
+        let mut ev_idx = 0;
+        while t < self.spec.horizon {
+            t += period;
+            if dyn_w.changes_within(prev_t, t) {
+                w = dyn_w.at(t);
+                metrics.incr("latency.updates", 1);
+            }
+            prev_t = t;
+            let mut applied = 0u64;
+            while ev_idx < trace.events.len()
+                && trace.events[ev_idx].time() <= t
+            {
+                membership.apply_trace_event(&trace.events[ev_idx]);
+                ev_idx += 1;
+                applied += 1;
+            }
+            metrics.incr("membership.events_applied", applied);
+
+            let alive_set: HashSet<u32> = membership.alive().collect();
+            // Two views, mirroring the coordinator exactly: ρ is each
+            // system's internal control signal, measured on its *full*
+            // overlay with current weights (adapt_once uses overlay(),
+            // crashed nodes included) — while the reported diameter is
+            // over the alive sub-overlay (faulty nodes do not relay).
+            let mut g_full = Graph::empty(n);
+            let mut g_alive = Graph::empty(n);
+            for &(u, v) in &edges {
+                let lat = w.get(u as usize, v as usize);
+                g_full.add_edge(u as usize, v as usize, lat);
+                if alive_set.contains(&u) && alive_set.contains(&v) {
+                    g_alive.add_edge(u as usize, v as usize, lat);
+                }
+            }
+            let stats =
+                measure(&w, &g_full, MeasureConfig::default(), &mut rng);
+            metrics.incr("gossip.messages", stats.messages as u64);
+            let d = diameter::diameter(&g_alive) as f64;
+            metrics.observe("overlay.alive_diameter", d);
+            metrics.observe("overlay.rho", stats.rho());
+            metrics.observe("overlay.alive", alive_set.len() as f64);
+            rows.push(PeriodRow {
+                t,
+                rho: stats.rho(),
+                diameter: d,
+                alive: alive_set.len(),
+                swaps: 0,
+            });
+        }
+        Ok(ScenarioReport {
+            scenario: self.spec.name.clone(),
+            topology,
+            seed: self.seed,
+            rows,
+            metrics,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::{catalog, find, ChurnSpec};
+
+    fn tiny_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "tiny".into(),
+            about: "unit-test workload".into(),
+            nodes: 24,
+            initial_alive: 24,
+            model: "uniform".into(),
+            horizon: 1000.0,
+            churn: vec![ChurnSpec::Poisson { rate: 0.001 }],
+            latency: vec![],
+        }
+    }
+
+    #[test]
+    fn adaptive_and_static_paths_produce_aligned_rows() {
+        let engine = ScenarioEngine::new(tiny_spec(), 5).unwrap();
+        let a = engine.run(Topology::Dgro).unwrap();
+        let b = engine.run(Topology::Chord).unwrap();
+        assert_eq!(a.rows.len(), 4); // horizon 1000 / period 250
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(ra.t, rb.t);
+            assert!(ra.diameter.is_finite() && rb.diameter.is_finite());
+            assert!(ra.alive >= 3 && rb.alive >= 3);
+            assert_eq!(rb.swaps, 0, "static baseline must not re-wire");
+        }
+    }
+
+    #[test]
+    fn identical_seeds_are_byte_deterministic() {
+        let spec = find("flash-crowd").unwrap();
+        let r1 = ScenarioEngine::new(spec.clone(), 7)
+            .unwrap()
+            .run(Topology::Dgro)
+            .unwrap();
+        let r2 = ScenarioEngine::new(spec, 7)
+            .unwrap()
+            .run(Topology::Dgro)
+            .unwrap();
+        assert_eq!(r1.render(), r2.render());
+    }
+
+    #[test]
+    fn every_topology_parses_its_own_name() {
+        for t in Topology::ALL {
+            assert_eq!(Topology::parse(t.name()).unwrap(), t);
+        }
+        assert!(Topology::parse("mesh").is_err());
+    }
+
+    #[test]
+    fn catalog_names_resolve_through_the_engine() {
+        // Construction (validation) must succeed for the whole catalog;
+        // full runs live in rust/tests/scenarios.rs.
+        for spec in catalog() {
+            ScenarioEngine::new(spec, 1).unwrap();
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Scenario engine: deterministic churn + dynamic-latency workloads for
+//! the DGRO coordinator (docs/SCENARIOS.md).
+//!
+//! The paper evaluates DGRO on static latency matrices; long-lived
+//! research infrastructure is anything but static. This subsystem
+//! composes seeded **churn generators** ([`churn`]: Poisson join/leave,
+//! flash crowds, correlated rack crashes, rejoin-after-partition) with
+//! **dynamic latency models** ([`dynamics`]: diurnal drift, link
+//! degradation, transient WAN partitions as a time-varying overlay on
+//! [`crate::latency::LatencyMatrix`]) into named, JSON-parsable
+//! [`spec::ScenarioSpec`]s, then drives the coordinator event loop (or a
+//! static baseline) through them ([`engine`]) and tabulates
+//! diameter-under-churn across topologies ([`compare`]).
+//!
+//! Everything is a pure function of (spec, topology, seed): two runs
+//! with the same inputs emit byte-identical reports, which is what lets
+//! `dgro scenario compare` serve as a regression harness for robustness
+//! claims.
+//!
+//! ```no_run
+//! use dgro::scenario::{find, ScenarioEngine, Topology};
+//! let spec = find("flash-crowd").unwrap();
+//! let engine = ScenarioEngine::new(spec, 7).unwrap();
+//! let report = engine.run(Topology::Dgro).unwrap();
+//! println!("{}", report.render());
+//! ```
+
+pub mod churn;
+pub mod compare;
+pub mod dynamics;
+pub mod engine;
+pub mod spec;
+
+pub use compare::{compare, CompareReport};
+pub use dynamics::{DynamicLatency, LatencyEffect};
+pub use engine::{PeriodRow, ScenarioEngine, ScenarioReport, Topology};
+pub use spec::{catalog, find, ChurnSpec, ScenarioSpec};

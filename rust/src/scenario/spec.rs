@@ -1,0 +1,577 @@
+//! The scenario spec: a named, seedable description of a dynamic
+//! workload — which nodes exist, which churn generators run, and which
+//! latency effects overlay the base matrix. Specs are JSON-parsable
+//! (same in-tree parser as [`crate::config`], unknown keys rejected) and
+//! ship with a built-in catalog; see docs/SCENARIOS.md for the format.
+
+use anyhow::{bail, Context, Result};
+
+use crate::latency::Model;
+use crate::membership::events::{EventTrace, MembershipEvent};
+use crate::scenario::churn;
+use crate::scenario::dynamics::LatencyEffect;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// One churn component of a scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChurnSpec {
+    /// Background Poisson join/leave/crash churn at `rate` per node-ms
+    /// over the initially-alive population.
+    Poisson { rate: f64 },
+    /// `count` fresh nodes (`first..first+count`) join in a burst over
+    /// `[at, at + over)`.
+    FlashCrowd { first: u32, count: u32, at: f64, over: f64 },
+    /// The contiguous block `first..first+count` crashes within
+    /// `[at, at + spread)`.
+    CorrelatedCrash { first: u32, count: u32, at: f64, spread: f64 },
+    /// The block drops out at `at` and rejoins at `heal_at`.
+    PartitionRejoin { first: u32, count: u32, at: f64, heal_at: f64 },
+}
+
+impl ChurnSpec {
+    pub fn to_json(&self) -> Json {
+        match *self {
+            ChurnSpec::Poisson { rate } => Json::obj(vec![
+                ("kind", Json::str("poisson")),
+                ("rate", Json::num(rate)),
+            ]),
+            ChurnSpec::FlashCrowd {
+                first,
+                count,
+                at,
+                over,
+            } => Json::obj(vec![
+                ("kind", Json::str("flash-crowd")),
+                ("first", Json::num(first as f64)),
+                ("count", Json::num(count as f64)),
+                ("at", Json::num(at)),
+                ("over", Json::num(over)),
+            ]),
+            ChurnSpec::CorrelatedCrash {
+                first,
+                count,
+                at,
+                spread,
+            } => Json::obj(vec![
+                ("kind", Json::str("correlated-crash")),
+                ("first", Json::num(first as f64)),
+                ("count", Json::num(count as f64)),
+                ("at", Json::num(at)),
+                ("spread", Json::num(spread)),
+            ]),
+            ChurnSpec::PartitionRejoin {
+                first,
+                count,
+                at,
+                heal_at,
+            } => Json::obj(vec![
+                ("kind", Json::str("partition-rejoin")),
+                ("first", Json::num(first as f64)),
+                ("count", Json::num(count as f64)),
+                ("at", Json::num(at)),
+                ("heal_at", Json::num(heal_at)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<ChurnSpec> {
+        Ok(match v.get("kind")?.as_str()? {
+            "poisson" => ChurnSpec::Poisson {
+                rate: v.get("rate")?.as_f64()?,
+            },
+            "flash-crowd" => ChurnSpec::FlashCrowd {
+                first: v.get("first")?.as_usize()? as u32,
+                count: v.get("count")?.as_usize()? as u32,
+                at: v.get("at")?.as_f64()?,
+                over: v.get("over")?.as_f64()?,
+            },
+            "correlated-crash" => ChurnSpec::CorrelatedCrash {
+                first: v.get("first")?.as_usize()? as u32,
+                count: v.get("count")?.as_usize()? as u32,
+                at: v.get("at")?.as_f64()?,
+                spread: v.get("spread")?.as_f64()?,
+            },
+            "partition-rejoin" => ChurnSpec::PartitionRejoin {
+                first: v.get("first")?.as_usize()? as u32,
+                count: v.get("count")?.as_usize()? as u32,
+                at: v.get("at")?.as_f64()?,
+                heal_at: v.get("heal_at")?.as_f64()?,
+            },
+            other => bail!("unknown churn kind '{other}'"),
+        })
+    }
+}
+
+/// A named, reproducible dynamic workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub about: String,
+    /// Node universe (latency matrix size).
+    pub nodes: usize,
+    /// Nodes alive at t = 0 (`initial_alive..nodes` start absent and may
+    /// join later — flash crowds). Must be in `3..=nodes`.
+    pub initial_alive: usize,
+    /// Latency model name (uniform | gaussian | fabric | bitnode).
+    pub model: String,
+    /// Sim-time horizon (ms).
+    pub horizon: f64,
+    pub churn: Vec<ChurnSpec>,
+    pub latency: Vec<LatencyEffect>,
+}
+
+impl ScenarioSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("scenario name must not be empty");
+        }
+        if self.nodes < 3 {
+            bail!("nodes must be >= 3, got {}", self.nodes);
+        }
+        if !(3..=self.nodes).contains(&self.initial_alive) {
+            bail!(
+                "initial_alive must be in 3..=nodes, got {} (nodes {})",
+                self.initial_alive,
+                self.nodes
+            );
+        }
+        if Model::parse(&self.model).is_none() {
+            bail!("unknown latency model '{}'", self.model);
+        }
+        if !(self.horizon > 0.0) {
+            bail!("horizon must be > 0, got {}", self.horizon);
+        }
+        for c in &self.churn {
+            match *c {
+                ChurnSpec::Poisson { rate } => {
+                    if rate < 0.0 {
+                        bail!("poisson rate must be >= 0, got {rate}");
+                    }
+                }
+                ChurnSpec::FlashCrowd { first, count, .. }
+                | ChurnSpec::CorrelatedCrash { first, count, .. }
+                | ChurnSpec::PartitionRejoin { first, count, .. } => {
+                    if count == 0 {
+                        bail!("churn block must be non-empty");
+                    }
+                    if first as usize + count as usize > self.nodes {
+                        bail!(
+                            "churn block {}..{} exceeds nodes {}",
+                            first,
+                            first as usize + count as usize,
+                            self.nodes
+                        );
+                    }
+                    if let ChurnSpec::PartitionRejoin {
+                        at, heal_at, ..
+                    } = *c
+                    {
+                        if !(heal_at > at) {
+                            bail!(
+                                "partition-rejoin heal_at {heal_at} must \
+                                 come after at {at}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        for e in &self.latency {
+            e.validate()?;
+            // Effect targets must exist, mirroring the churn-block
+            // bounds check — a typo'd id would otherwise be a silent
+            // no-op (factor() never matches).
+            match *e {
+                LatencyEffect::Degrade { node, .. } => {
+                    if node as usize >= self.nodes {
+                        bail!(
+                            "degrade node {node} out of range for {} nodes",
+                            self.nodes
+                        );
+                    }
+                }
+                LatencyEffect::Partition { boundary, .. } => {
+                    if boundary == 0 || boundary as usize >= self.nodes {
+                        bail!(
+                            "partition boundary {boundary} splits nothing \
+                             for {} nodes (need 1..nodes)",
+                            self.nodes
+                        );
+                    }
+                }
+                LatencyEffect::Diurnal { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Generate the full deterministic membership trace for this spec
+    /// (merge of every churn component, plus t = 0 departures for the
+    /// initially-absent block).
+    pub fn events(&self, rng: &mut Rng) -> EventTrace {
+        let mut parts: Vec<Vec<MembershipEvent>> = Vec::new();
+        if self.initial_alive < self.nodes {
+            parts.push(churn::absent_at_start(
+                self.initial_alive as u32,
+                (self.nodes - self.initial_alive) as u32,
+            ));
+        }
+        for c in &self.churn {
+            parts.push(match *c {
+                ChurnSpec::Poisson { rate } => churn::poisson(
+                    self.initial_alive,
+                    self.horizon,
+                    rate,
+                    rng,
+                ),
+                ChurnSpec::FlashCrowd {
+                    first,
+                    count,
+                    at,
+                    over,
+                } => churn::flash_crowd(first, count, at, over, rng),
+                ChurnSpec::CorrelatedCrash {
+                    first,
+                    count,
+                    at,
+                    spread,
+                } => churn::correlated_crash(first, count, at, spread, rng),
+                ChurnSpec::PartitionRejoin {
+                    first,
+                    count,
+                    at,
+                    heal_at,
+                } => churn::partition_rejoin(first, count, at, heal_at, rng),
+            });
+        }
+        churn::merge(parts)
+    }
+
+    // -----------------------------------------------------------------
+    // JSON round-trip (spec files).
+    // -----------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("about", Json::str(self.about.clone())),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("initial_alive", Json::num(self.initial_alive as f64)),
+            ("model", Json::str(self.model.clone())),
+            ("horizon", Json::num(self.horizon)),
+            (
+                "churn",
+                Json::arr(self.churn.iter().map(|c| c.to_json()).collect()),
+            ),
+            (
+                "latency",
+                Json::arr(
+                    self.latency.iter().map(|e| e.to_json()).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse from JSON text, rejecting unknown keys.
+    pub fn parse(text: &str) -> Result<ScenarioSpec> {
+        let root = json::parse(text).context("parsing scenario JSON")?;
+        let obj = root.as_obj()?;
+        let mut spec = ScenarioSpec {
+            name: String::new(),
+            about: String::new(),
+            nodes: 0,
+            initial_alive: 0,
+            model: "uniform".to_string(),
+            horizon: 0.0,
+            churn: Vec::new(),
+            latency: Vec::new(),
+        };
+        let mut saw_initial = false;
+        for (key, val) in obj {
+            match key.as_str() {
+                "name" => spec.name = val.as_str()?.to_string(),
+                "about" => spec.about = val.as_str()?.to_string(),
+                "nodes" => spec.nodes = val.as_usize()?,
+                "initial_alive" => {
+                    spec.initial_alive = val.as_usize()?;
+                    saw_initial = true;
+                }
+                "model" => spec.model = val.as_str()?.to_string(),
+                "horizon" => spec.horizon = val.as_f64()?,
+                "churn" => {
+                    spec.churn = val
+                        .as_arr()?
+                        .iter()
+                        .map(ChurnSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                "latency" => {
+                    spec.latency = val
+                        .as_arr()?
+                        .iter()
+                        .map(LatencyEffect::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                other => bail!("unknown scenario key '{other}'"),
+            }
+        }
+        if !saw_initial {
+            spec.initial_alive = spec.nodes;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(
+            || format!("reading scenario {:?}", path.as_ref()),
+        )?;
+        ScenarioSpec::parse(&text)
+    }
+}
+
+/// The built-in catalog: seven named workloads stressing the parts of
+/// DGRO the paper's static figures never touch. Sizes are kept modest so
+/// the whole catalog sweeps in CI; scale `nodes`/`horizon` up via spec
+/// files for real studies.
+pub fn catalog() -> Vec<ScenarioSpec> {
+    vec![
+        ScenarioSpec {
+            name: "steady-state".into(),
+            about: "low background churn, static latency (control)".into(),
+            nodes: 72,
+            initial_alive: 72,
+            model: "fabric".into(),
+            horizon: 4000.0,
+            churn: vec![ChurnSpec::Poisson { rate: 0.0002 }],
+            latency: vec![],
+        },
+        ScenarioSpec {
+            name: "flash-crowd".into(),
+            about: "36 nodes join in a 500 ms burst mid-run".into(),
+            nodes: 96,
+            initial_alive: 60,
+            model: "fabric".into(),
+            horizon: 4000.0,
+            churn: vec![
+                ChurnSpec::Poisson { rate: 0.0002 },
+                ChurnSpec::FlashCrowd {
+                    first: 60,
+                    count: 36,
+                    at: 1500.0,
+                    over: 500.0,
+                },
+            ],
+            latency: vec![],
+        },
+        ScenarioSpec {
+            name: "churn-storm".into(),
+            about: "sustained 5x-baseline Poisson churn with rejoins"
+                .into(),
+            nodes: 80,
+            initial_alive: 80,
+            model: "fabric".into(),
+            horizon: 4000.0,
+            churn: vec![ChurnSpec::Poisson { rate: 0.001 }],
+            latency: vec![],
+        },
+        ScenarioSpec {
+            name: "rack-failure".into(),
+            about: "correlated crash of a 15-node id block at t=2000"
+                .into(),
+            nodes: 85,
+            initial_alive: 85,
+            model: "fabric".into(),
+            horizon: 4000.0,
+            churn: vec![
+                ChurnSpec::Poisson { rate: 0.0002 },
+                ChurnSpec::CorrelatedCrash {
+                    first: 20,
+                    count: 15,
+                    at: 2000.0,
+                    spread: 50.0,
+                },
+            ],
+            latency: vec![],
+        },
+        ScenarioSpec {
+            name: "wan-partition".into(),
+            about: "cross-boundary links 8x slower during [1500, 3000)"
+                .into(),
+            nodes: 80,
+            initial_alive: 80,
+            model: "fabric".into(),
+            horizon: 4500.0,
+            churn: vec![ChurnSpec::Poisson { rate: 0.0002 }],
+            latency: vec![LatencyEffect::Partition {
+                boundary: 40,
+                factor: 8.0,
+                start: 1500.0,
+                end: 3000.0,
+            }],
+        },
+        ScenarioSpec {
+            name: "diurnal-drift".into(),
+            about: "all-link sinusoidal drift (amplitude 0.6)".into(),
+            nodes: 72,
+            initial_alive: 72,
+            model: "fabric".into(),
+            horizon: 4000.0,
+            churn: vec![ChurnSpec::Poisson { rate: 0.0002 }],
+            latency: vec![LatencyEffect::Diurnal {
+                period: 2000.0,
+                amplitude: 0.6,
+                phase: 0.0,
+            }],
+        },
+        ScenarioSpec {
+            name: "link-degradation".into(),
+            about: "two nodes' links degrade 6x in sliding windows".into(),
+            nodes: 76,
+            initial_alive: 76,
+            model: "fabric".into(),
+            horizon: 4000.0,
+            churn: vec![],
+            latency: vec![
+                LatencyEffect::Degrade {
+                    node: 3,
+                    factor: 6.0,
+                    start: 1000.0,
+                    end: 2500.0,
+                },
+                LatencyEffect::Degrade {
+                    node: 41,
+                    factor: 6.0,
+                    start: 1800.0,
+                    end: 3200.0,
+                },
+            ],
+        },
+    ]
+}
+
+/// Look up a catalog scenario by name.
+pub fn find(name: &str) -> Result<ScenarioSpec> {
+    catalog()
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| {
+            let names: Vec<String> =
+                catalog().into_iter().map(|s| s.name).collect();
+            anyhow::anyhow!(
+                "no catalog scenario '{name}' (have: {})",
+                names.join(", ")
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_specs_validate_and_have_unique_names() {
+        let specs = catalog();
+        assert!(specs.len() >= 6, "catalog must cover >= 6 scenarios");
+        let mut names = std::collections::BTreeSet::new();
+        for s in &specs {
+            s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert!(names.insert(s.name.clone()), "dup name {}", s.name);
+        }
+    }
+
+    #[test]
+    fn catalog_json_roundtrip() {
+        for spec in catalog() {
+            let text = spec.to_json().to_string();
+            let back = ScenarioSpec::parse(&text)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_blocks() {
+        assert!(ScenarioSpec::parse(r#"{"bogus": 1}"#).is_err());
+        let over = r#"{"name":"x","nodes":10,"model":"uniform",
+            "horizon":100,
+            "churn":[{"kind":"flash-crowd","first":8,"count":5,
+                      "at":0,"over":10}]}"#;
+        let err = ScenarioSpec::parse(over).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_inverted_heal_window() {
+        let mut s = find("steady-state").unwrap();
+        s.churn.push(ChurnSpec::PartitionRejoin {
+            first: 0,
+            count: 10,
+            at: 4000.0,
+            heal_at: 400.0,
+        });
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("heal_at"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_effect_targets() {
+        let mut s = find("steady-state").unwrap();
+        s.latency.push(LatencyEffect::Degrade {
+            node: s.nodes as u32,
+            factor: 2.0,
+            start: 0.0,
+            end: 100.0,
+        });
+        assert!(s.validate().unwrap_err().to_string().contains("range"));
+        let mut s = find("steady-state").unwrap();
+        s.latency.push(LatencyEffect::Partition {
+            boundary: 0,
+            factor: 2.0,
+            start: 0.0,
+            end: 100.0,
+        });
+        assert!(s
+            .validate()
+            .unwrap_err()
+            .to_string()
+            .contains("boundary"));
+    }
+
+    #[test]
+    fn initial_alive_defaults_to_nodes() {
+        let s = ScenarioSpec::parse(
+            r#"{"name":"x","nodes":12,"model":"uniform","horizon":50}"#,
+        )
+        .unwrap();
+        assert_eq!(s.initial_alive, 12);
+    }
+
+    #[test]
+    fn events_are_sorted_and_respect_initial_population() {
+        let spec = find("flash-crowd").unwrap();
+        let mut rng = Rng::new(9);
+        let trace = spec.events(&mut rng);
+        assert!(!trace.is_empty());
+        for w in trace.events.windows(2) {
+            assert!(w[0].time() <= w[1].time());
+        }
+        // The absent block departs at t = 0 before anything else.
+        let zero_leaves = trace
+            .events
+            .iter()
+            .filter(|e| {
+                e.time() == 0.0
+                    && matches!(e, MembershipEvent::Leave { .. })
+            })
+            .count();
+        assert_eq!(zero_leaves, spec.nodes - spec.initial_alive);
+    }
+
+    #[test]
+    fn find_unknown_scenario_lists_catalog() {
+        let err = find("nope").unwrap_err().to_string();
+        assert!(err.contains("flash-crowd"), "{err}");
+    }
+}

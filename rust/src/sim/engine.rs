@@ -34,10 +34,12 @@ impl Eq for Event {}
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap by (time, seq): reverse the natural comparison.
+        // `schedule` rejects non-finite times, so total_cmp agrees with
+        // the numeric order here (a NaN would otherwise silently corrupt
+        // the heap invariant and deliver events out of order).
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -84,8 +86,14 @@ impl Engine {
         self.queue.len()
     }
 
-    /// Schedule an event at absolute time `time` (>= now).
+    /// Schedule an event at absolute time `time` (>= now, finite).
+    /// Panics on a non-finite time: a NaN would poison the heap ordering
+    /// for every event, so it is rejected at the boundary instead.
     pub fn schedule(&mut self, time: f64, kind: EventKind) {
+        assert!(
+            time.is_finite(),
+            "non-finite event time {time} for {kind:?}"
+        );
         debug_assert!(time >= self.now, "cannot schedule into the past");
         let seq = self.seq;
         self.seq += 1;
@@ -183,6 +191,20 @@ mod tests {
         });
         assert_eq!(count, 4); // tags 0,1,2,3
         assert_eq!(e.now(), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_time_is_rejected_at_schedule() {
+        let mut e = Engine::new();
+        e.schedule(f64::NAN, EventKind::Timer { node: 0, tag: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_time_is_rejected_at_schedule() {
+        let mut e = Engine::new();
+        e.schedule(f64::INFINITY, EventKind::Timer { node: 0, tag: 0 });
     }
 
     #[test]

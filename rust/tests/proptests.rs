@@ -201,3 +201,54 @@ fn prop_gossip_rho_in_unit_interval() {
         ensure((0.0..=1.0).contains(&rho), format!("rho {rho} out of [0,1]"))
     });
 }
+
+#[test]
+fn prop_gossip_measurement_converges_to_exact_averages() {
+    // Algorithm 3's gossiped (local, global, min) triple must approach
+    // the exact network averages once the sample count and round count
+    // are large, across random seeds, latency models and topologies.
+    use dgro::gossip::measure::{exact_stats, measure, MeasureConfig};
+    forall(
+        "gossip convergence",
+        PropConfig::default().cases(12).seed(0x60551),
+        |rng| {
+            let n = 24 + rng.index(60);
+            let w = random_model(rng).sample(n, rng);
+            let g = if rng.chance(0.5) {
+                kring::random_krings(n, paper_k(n), rng).to_graph(&w)
+            } else {
+                shortest_ring(&w, rng.index(n)).to_graph(&w)
+            };
+            let est = measure(
+                &w,
+                &g,
+                MeasureConfig {
+                    samples: 24,
+                    rounds: 80,
+                },
+                rng,
+            );
+            let exact = exact_stats(&w, &g);
+            ensure(
+                est.messages == 80 * n,
+                format!("{} messages for n={n}", est.messages),
+            )?;
+            let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-9);
+            ensure(
+                rel(est.local, exact.local) < 0.3,
+                format!("local {} vs exact {}", est.local, exact.local),
+            )?;
+            ensure(
+                rel(est.global, exact.global) < 0.3,
+                format!("global {} vs exact {}", est.global, exact.global),
+            )?;
+            // Per-node minimums average below per-node means, and gossip
+            // mixing (a convex combination of phase-1 values) preserves
+            // that ordering.
+            ensure(
+                est.min <= est.global + 1e-9,
+                format!("min {} > global {}", est.min, est.global),
+            )
+        },
+    );
+}

@@ -25,12 +25,27 @@ fn store() -> Option<ArtifactStore> {
     }
 }
 
+/// The PJRT backend is feature-gated (`--features pjrt`); without it the
+/// stub constructor fails and these round-trip tests skip. With the
+/// feature compiled in, a constructor failure is a real regression and
+/// must fail loudly, not skip.
+fn pjrt_backend(store: ArtifactStore) -> Option<PjrtQnet> {
+    match PjrtQnet::new(store) {
+        Ok(p) => Some(p),
+        Err(e) if cfg!(not(feature = "pjrt")) => {
+            eprintln!("SKIP (pjrt backend not compiled in): {e}");
+            None
+        }
+        Err(e) => panic!("pjrt backend failed to initialize: {e}"),
+    }
+}
+
 #[test]
 fn pjrt_matches_native_on_trained_weights() {
     let Some(store) = store() else { return };
     let params = store.load_params().unwrap();
     let mut native = NativeQnet::new(params);
-    let mut pjrt = PjrtQnet::new(store).unwrap();
+    let Some(mut pjrt) = pjrt_backend(store) else { return };
 
     let mut rng = Rng::new(20240711);
     for n in [16usize, 20, 32, 60, 120] {
@@ -64,7 +79,7 @@ fn pjrt_padding_equivalence() {
     let Some(store) = store() else { return };
     let params = store.load_params().unwrap();
     let mut native = NativeQnet::new(params);
-    let mut pjrt = PjrtQnet::new(store).unwrap();
+    let Some(mut pjrt) = pjrt_backend(store) else { return };
 
     let mut rng = Rng::new(7);
     let w = synthetic::uniform(20, &mut rng);
@@ -88,7 +103,7 @@ fn pjrt_ring_construction_end_to_end() {
     let Some(store) = store() else { return };
     let params = store.load_params().unwrap();
     let mut native = NativeQnet::new(params);
-    let mut pjrt = PjrtQnet::new(store).unwrap();
+    let Some(mut pjrt) = pjrt_backend(store) else { return };
 
     let mut rng = Rng::new(99);
     let w = synthetic::uniform(24, &mut rng);
@@ -136,7 +151,7 @@ fn trained_qnet_beats_or_matches_random_ring() {
 #[test]
 fn bucket_error_message_for_oversized_graph() {
     let Some(store) = store() else { return };
-    let mut pjrt = PjrtQnet::new(store).unwrap();
+    let Some(mut pjrt) = pjrt_backend(store) else { return };
     let mut rng = Rng::new(5);
     let w = Model::Uniform.sample(300, &mut rng);
     let st = State::new(&w, 0);

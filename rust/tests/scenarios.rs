@@ -1,0 +1,212 @@
+//! Integration tests for the scenario engine: every catalog scenario
+//! runs end-to-end, the acceptance workload is byte-deterministic, and
+//! `compare` produces the DGRO-vs-baselines diameter-under-churn table.
+
+use dgro::scenario::compare::compare;
+use dgro::scenario::engine::{ScenarioEngine, ScenarioReport, Topology};
+use dgro::scenario::spec::{catalog, find};
+
+fn run(name: &str, topology: Topology, seed: u64) -> ScenarioReport {
+    let engine = ScenarioEngine::new(find(name).unwrap(), seed).unwrap();
+    engine.run(topology).unwrap()
+}
+
+/// Shared sanity: full period coverage, finite diameters, a live
+/// population within the universe bounds.
+fn check_invariants(rep: &ScenarioReport, nodes: usize, horizon: f64) {
+    let expect_periods = (horizon / 250.0).ceil() as usize;
+    assert_eq!(
+        rep.rows.len(),
+        expect_periods,
+        "{}: period coverage",
+        rep.scenario
+    );
+    for r in &rep.rows {
+        assert!(
+            r.diameter.is_finite() && r.diameter >= 0.0,
+            "{}: diameter {} at t={}",
+            rep.scenario,
+            r.diameter,
+            r.t
+        );
+        assert!(
+            (3..=nodes).contains(&r.alive),
+            "{}: alive {} at t={}",
+            rep.scenario,
+            r.alive,
+            r.t
+        );
+        assert!((0.0..=1.0).contains(&r.rho));
+    }
+}
+
+#[test]
+fn every_catalog_scenario_runs_on_the_adaptive_coordinator() {
+    for spec in catalog() {
+        let engine = ScenarioEngine::new(spec.clone(), 42).unwrap();
+        let rep = engine.run(Topology::Dgro).unwrap();
+        check_invariants(&rep, spec.nodes, spec.horizon);
+    }
+}
+
+#[test]
+fn every_catalog_scenario_runs_on_a_static_baseline() {
+    for spec in catalog() {
+        let engine = ScenarioEngine::new(spec.clone(), 42).unwrap();
+        let rep = engine.run(Topology::Chord).unwrap();
+        check_invariants(&rep, spec.nodes, spec.horizon);
+        assert_eq!(rep.total_swaps(), 0, "{}: static swap", spec.name);
+    }
+}
+
+#[test]
+fn acceptance_flash_crowd_dgro_seed7_is_byte_deterministic() {
+    // `dgro scenario run --name flash-crowd --topology dgro --seed 7`
+    // must emit byte-identical reports across runs.
+    let a = run("flash-crowd", Topology::Dgro, 7);
+    let b = run("flash-crowd", Topology::Dgro, 7);
+    assert_eq!(a.render(), b.render());
+    assert_eq!(a.table().to_csv(), b.table().to_csv());
+    // A different seed draws different churn.
+    let c = run("flash-crowd", Topology::Dgro, 8);
+    assert_ne!(a.render(), c.render());
+}
+
+#[test]
+fn flash_crowd_grows_the_overlay() {
+    let rep = run("flash-crowd", Topology::Dgro, 7);
+    let first = rep.rows.first().unwrap();
+    let last = rep.rows.last().unwrap();
+    assert!(
+        first.alive <= 60 && first.alive >= 45,
+        "starts near the initial population, got {}",
+        first.alive
+    );
+    assert!(
+        last.alive >= 70,
+        "flash crowd must have joined, got {}",
+        last.alive
+    );
+    // The burst lands inside [1500, 2000): alive jumps across it.
+    let before: usize = rep
+        .rows
+        .iter()
+        .filter(|r| r.t <= 1500.0)
+        .map(|r| r.alive)
+        .max()
+        .unwrap();
+    let after: usize = rep
+        .rows
+        .iter()
+        .filter(|r| r.t >= 2250.0)
+        .map(|r| r.alive)
+        .min()
+        .unwrap();
+    assert!(after > before, "alive {before} -> {after} across the burst");
+}
+
+#[test]
+fn rack_failure_drops_the_block() {
+    let rep = run("rack-failure", Topology::Chord, 7);
+    let early_alive = rep.rows.first().unwrap().alive;
+    assert!(early_alive >= 80, "pre-crash population {early_alive}");
+    let min_alive =
+        rep.rows.iter().map(|r| r.alive).min().unwrap();
+    // 15 nodes crash together around t=2000 (background churn may add
+    // or return a few).
+    assert!(
+        min_alive <= 85 - 12,
+        "correlated crash not visible: min alive {min_alive}"
+    );
+}
+
+#[test]
+fn wan_partition_inflates_diameter_then_recovers() {
+    let rep = run("wan-partition", Topology::Chord, 7);
+    let mean = |lo: f64, hi: f64| -> f64 {
+        let sel: Vec<f64> = rep
+            .rows
+            .iter()
+            .filter(|r| r.t > lo && r.t <= hi)
+            .map(|r| r.diameter)
+            .collect();
+        assert!(!sel.is_empty(), "no rows in ({lo}, {hi}]");
+        sel.iter().sum::<f64>() / sel.len() as f64
+    };
+    let before = mean(0.0, 1250.0);
+    let during = mean(1500.0, 2750.0);
+    let after = mean(3000.0, 4500.0);
+    assert!(
+        during > before * 1.3,
+        "partition must inflate the diameter: {before} -> {during}"
+    );
+    assert!(
+        after < during,
+        "healing must recover: during {during}, after {after}"
+    );
+}
+
+#[test]
+fn diurnal_drift_makes_the_diameter_breathe() {
+    let rep = run("diurnal-drift", Topology::Chord, 7);
+    let max = rep.peak_diameter();
+    let min = rep
+        .rows
+        .iter()
+        .map(|r| r.diameter)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        max > 1.5 * min,
+        "amplitude-0.6 drift must move the diameter: {min}..{max}"
+    );
+}
+
+#[test]
+fn link_degradation_keeps_population_and_stays_finite() {
+    let spec = find("link-degradation").unwrap();
+    let rep = run("link-degradation", Topology::Dgro, 7);
+    // No churn in this scenario: the population never moves.
+    for r in &rep.rows {
+        assert_eq!(r.alive, spec.nodes);
+        assert!(r.diameter.is_finite() && r.diameter > 0.0);
+    }
+    assert_eq!(rep.metrics.counter("membership.joins"), 0);
+}
+
+#[test]
+fn steady_state_adaptive_coordinator_improves_or_holds() {
+    let rep = run("steady-state", Topology::Dgro, 7);
+    let first = rep.rows.first().unwrap().diameter;
+    let last = rep.rows.last().unwrap().diameter;
+    // On clustered FABRIC latencies the ρ rule swaps toward shortest
+    // rings; with only background churn the diameter must not blow up.
+    assert!(
+        last <= first * 1.1,
+        "steady-state regressed: {first} -> {last}"
+    );
+    assert!(rep.total_swaps() >= 1, "expected at least one ring swap");
+}
+
+#[test]
+fn compare_tabulates_dgro_vs_baselines_across_the_catalog() {
+    let specs = catalog();
+    assert!(specs.len() >= 6);
+    let topologies = [Topology::Dgro, Topology::Chord, Topology::Rapid];
+    let rep = compare(&specs, &topologies, 11, 250.0).unwrap();
+    assert_eq!(rep.summary.rows.len(), specs.len());
+    assert_eq!(rep.summary.header.len(), 1 + topologies.len());
+    assert_eq!(rep.timelines.len(), specs.len());
+    for (i, row) in rep.summary.rows.iter().enumerate() {
+        assert_eq!(row[0], i as f64);
+        for cell in &row[1..] {
+            assert!(cell.is_finite() && *cell > 0.0);
+        }
+    }
+    let rendered = rep.render();
+    for spec in &specs {
+        assert!(rendered.contains(&spec.name), "missing {}", spec.name);
+    }
+    // Byte-identical on a re-run (the acceptance determinism bar).
+    let again = compare(&specs, &topologies, 11, 250.0).unwrap();
+    assert_eq!(rendered, again.render());
+}
