@@ -1,16 +1,25 @@
 //! `cargo bench --bench hotpath` — micro/meso benchmarks of the L3 hot
 //! paths feeding EXPERIMENTS.md §Perf:
 //!
-//!   * APSP/diameter (the inner loop of every experiment and of the GA)
+//!   * APSP/diameter, serial vs [`EvalPool`]-parallel, at n ∈
+//!     {128, 512, 1024} (1024 in full mode), plus population batches
 //!   * ring construction (greedy + native Q-net + PJRT Q-net per step)
 //!   * gossip measurement round
 //!   * broadcast simulation
-//!   * GA evaluation throughput
+//!   * GA evaluation throughput, serial vs batched-parallel
+//!   * scenario engine periods/s, from-scratch rebuild vs incremental
 //!
-//! Statistical harness from util::timer/stats (no criterion offline).
+//! Besides the stdout report, the run writes **BENCH_hotpath.json** to
+//! the working directory (repo root under `cargo bench`): the
+//! machine-readable perf trajectory CI uploads per commit. Modes:
+//! `--quick` / DGRO_BENCH_QUICK=1 trims sizes and iterations (the CI
+//! smoke), `--threads=N` / DGRO_THREADS pins the pool width (default:
+//! all cores). Statistical harness from util::timer/stats (no criterion
+//! offline).
 
 use dgro::dgro::construct::{build_ring, GreedyScorer};
-use dgro::graph::{apsp, diameter};
+use dgro::graph::eval::EvalPool;
+use dgro::graph::{apsp, diameter, Graph};
 use dgro::gossip::measure::{measure, MeasureConfig};
 use dgro::latency::Model;
 use dgro::qnet::native::NativeQnet;
@@ -18,9 +27,13 @@ use dgro::qnet::params::QnetParams;
 use dgro::qnet::state::State;
 use dgro::qnet::QScorer;
 use dgro::runtime::{ArtifactStore, PjrtQnet};
+use dgro::scenario::{
+    ChurnSpec, ScenarioEngine, ScenarioReport, ScenarioSpec, Topology,
+};
 use dgro::sim::broadcast::broadcast_times;
 use dgro::topology::genetic::{self, GaConfig};
 use dgro::topology::{paper_k, random_ring};
+use dgro::util::json::Json;
 use dgro::util::rng::Rng;
 use dgro::util::stats::Summary;
 use dgro::util::timer::time_iters;
@@ -39,20 +52,122 @@ fn report(name: &str, samples: &[f64], unit_per_iter: Option<(&str, f64)>) {
     println!();
 }
 
-fn main() -> anyhow::Result<()> {
-    let mut rng = Rng::new(0xBEEF);
+fn mean_s(samples: &[f64]) -> f64 {
+    Summary::of(samples).mean.max(1e-12)
+}
 
-    // --- APSP / diameter at the paper's scales. ------------------------
-    for &n in &[100usize, 300, 1000] {
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = std::env::var("DGRO_BENCH_QUICK").ok().as_deref()
+        == Some("1")
+        || args.iter().any(|a| a == "--quick" || a == "quick");
+    let threads = args
+        .iter()
+        .find_map(|a| {
+            a.strip_prefix("--threads=").and_then(|v| v.parse().ok())
+        })
+        .or_else(|| {
+            std::env::var("DGRO_THREADS").ok().and_then(|v| v.parse().ok())
+        })
+        .unwrap_or_else(EvalPool::default_threads);
+    println!("hotpath bench: quick={quick} threads={threads}");
+
+    let mut rng = Rng::new(0xBEEF);
+    let pool = EvalPool::new(threads);
+    let serial_pool = EvalPool::serial();
+
+    // --- APSP / diameter, serial vs parallel. --------------------------
+    let sizes: &[usize] = if quick { &[128, 512] } else { &[128, 512, 1024] };
+    let mut apsp_rows = Vec::new();
+    let mut diam_rows = Vec::new();
+    for &n in sizes {
         let w = Model::Uniform.sample(n, &mut rng);
         let k = paper_k(n);
         let g = dgro::topology::kring::random_krings(n, k, &mut rng)
             .to_graph(&w);
-        let iters = if n >= 1000 { 3 } else { 20 };
-        let samples = time_iters(2, iters, || diameter::diameter(&g));
-        report(&format!("diameter n={n} k={k}"), &samples, None);
-        let samples = time_iters(2, iters, || apsp::dijkstra(&g, 0));
-        report(&format!("single-source dijkstra n={n}"), &samples, None);
+        let iters = if n >= 1024 {
+            2
+        } else if n >= 512 {
+            3
+        } else {
+            10
+        };
+
+        let s_apsp = time_iters(1, iters, || apsp::apsp(&g));
+        let p_apsp = time_iters(1, iters, || pool.apsp_par(&g));
+        report(&format!("apsp serial n={n}"), &s_apsp, None);
+        report(&format!("apsp parallel n={n} T={threads}"), &p_apsp, None);
+        // Equivalence: the striped rows must match the serial matrix.
+        let a = apsp::apsp(&g);
+        let b = pool.apsp_par(&g);
+        let mut apsp_diff = 0.0f64;
+        for (x, y) in a.d.iter().zip(&b.d) {
+            if x.to_bits() != y.to_bits() {
+                apsp_diff = apsp_diff.max((x - y).abs() as f64);
+            }
+        }
+        let (sm, pm) = (mean_s(&s_apsp), mean_s(&p_apsp));
+        apsp_rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("serial_ms", Json::num(sm * 1e3)),
+            ("par_ms", Json::num(pm * 1e3)),
+            ("speedup", Json::num(sm / pm)),
+            ("max_abs_diff", Json::num(apsp_diff)),
+        ]));
+
+        let s_d = time_iters(1, iters, || diameter::diameter(&g));
+        let p_d = time_iters(1, iters, || pool.diameter_par(&g));
+        report(&format!("diameter serial n={n} k={k}"), &s_d, None);
+        report(
+            &format!("diameter parallel n={n} T={threads}"),
+            &p_d,
+            None,
+        );
+        let d_serial = diameter::diameter(&g);
+        let d_par = pool.diameter_par(&g);
+
+        // Population batch (the GA generation / compare cross-product
+        // shape): one diameter per candidate graph.
+        let bsz = if n >= 1024 { 8 } else { 16 };
+        let cands: Vec<Graph> = (0..bsz)
+            .map(|_| {
+                dgro::topology::kring::random_krings(n, k, &mut rng)
+                    .to_graph(&w)
+            })
+            .collect();
+        let s_b =
+            time_iters(0, iters, || serial_pool.diameter_batch(&cands));
+        let p_b = time_iters(0, iters, || pool.diameter_batch(&cands));
+        report(
+            &format!("diameter_batch {bsz}x serial n={n}"),
+            &s_b,
+            Some(("graphs", bsz as f64)),
+        );
+        report(
+            &format!("diameter_batch {bsz}x T={threads} n={n}"),
+            &p_b,
+            Some(("graphs", bsz as f64)),
+        );
+        let ds = serial_pool.diameter_batch(&cands);
+        let dp = pool.diameter_batch(&cands);
+        let mut batch_diff = 0.0f64;
+        for (x, y) in ds.iter().zip(&dp) {
+            batch_diff = batch_diff.max((x - y).abs() as f64);
+        }
+        let (sdm, pdm) = (mean_s(&s_d), mean_s(&p_d));
+        let (sbm, pbm) = (mean_s(&s_b), mean_s(&p_b));
+        diam_rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("serial_ms", Json::num(sdm * 1e3)),
+            ("par_ms", Json::num(pdm * 1e3)),
+            ("speedup", Json::num(sdm / pdm)),
+            ("diff", Json::num((d_serial - d_par).abs() as f64)),
+            ("batch", Json::num(bsz as f64)),
+            ("batch_serial_ms", Json::num(sbm * 1e3)),
+            ("batch_par_ms", Json::num(pbm * 1e3)),
+            ("batch_speedup", Json::num(sbm / pbm)),
+            ("batch_max_abs_diff", Json::num(batch_diff)),
+        ]));
     }
 
     // --- Ring construction per scorer. ---------------------------------
@@ -110,10 +225,11 @@ fn main() -> anyhow::Result<()> {
     let samples = time_iters(2, 50, || broadcast_times(&g, 0, &proc));
     report("broadcast simulation n=120", &samples, None);
 
-    // --- GA throughput (topology evaluations / s). ----------------------
-    let budget = 300;
+    // --- GA throughput (topology evaluations / s), serial vs pool. -----
+    let budget = if quick { 300 } else { 2_000 };
+    let ga_iters = if quick { 2 } else { 3 };
     let mut garng = Rng::new(2);
-    let samples = time_iters(0, 3, || {
+    let s_ga = time_iters(0, ga_iters, || {
         genetic::search(
             &w,
             2,
@@ -124,8 +240,99 @@ fn main() -> anyhow::Result<()> {
             &mut garng,
         )
     });
-    report("GA search 300 evals n=120 k=2", &samples,
-           Some(("evals", budget as f64)));
+    report(
+        &format!("GA search {budget} evals serial n=120"),
+        &s_ga,
+        Some(("evals", budget as f64)),
+    );
+    let mut garng = Rng::new(2);
+    let p_ga = time_iters(0, ga_iters, || {
+        genetic::search(
+            &w,
+            2,
+            GaConfig {
+                budget,
+                threads,
+                ..Default::default()
+            },
+            &mut garng,
+        )
+    });
+    report(
+        &format!("GA search {budget} evals T={threads} n=120"),
+        &p_ga,
+        Some(("evals", budget as f64)),
+    );
+    let (gsm, gpm) = (mean_s(&s_ga), mean_s(&p_ga));
+    let ga_json = Json::obj(vec![
+        ("n", Json::num(120.0)),
+        ("budget", Json::num(budget as f64)),
+        ("serial_evals_per_s", Json::num(budget as f64 / gsm)),
+        ("par_evals_per_s", Json::num(budget as f64 / gpm)),
+        ("speedup", Json::num(gsm / gpm)),
+    ]);
+
+    // --- Scenario engine periods/s: rebuild vs incremental. ------------
+    let scen_nodes = 512usize;
+    let spec = ScenarioSpec {
+        name: "bench-churn".into(),
+        about: "hotpath bench workload".into(),
+        nodes: scen_nodes,
+        initial_alive: scen_nodes,
+        model: "uniform".into(),
+        horizon: 2000.0,
+        churn: vec![ChurnSpec::Poisson { rate: 0.001 }],
+        latency: vec![],
+    };
+    let mut rebuild = ScenarioEngine::new(spec.clone(), 7)?;
+    rebuild.incremental = false;
+    let mut incremental = ScenarioEngine::new(spec, 7)?;
+    incremental.threads = threads;
+    let scen_iters = if quick { 2 } else { 3 };
+    // Keep the last timed run of each engine for the equivalence diff
+    // instead of paying for an extra untimed run.
+    let mut rep_a: Option<ScenarioReport> = None;
+    let mut rep_b: Option<ScenarioReport> = None;
+    let s_sc = time_iters(0, scen_iters, || {
+        rep_a = Some(
+            rebuild.run(Topology::Chord).expect("rebuild scenario run"),
+        );
+    });
+    let p_sc = time_iters(0, scen_iters, || {
+        rep_b = Some(
+            incremental
+                .run(Topology::Chord)
+                .expect("incremental scenario run"),
+        );
+    });
+    let a = rep_a.expect("timed at least one rebuild run");
+    let b = rep_b.expect("timed at least one incremental run");
+    let periods = a.rows.len() as f64;
+    let mut scen_diff = 0.0f64;
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        scen_diff = scen_diff.max((x.diameter - y.diameter).abs());
+    }
+    report(
+        &format!("scenario rebuild n={scen_nodes}"),
+        &s_sc,
+        Some(("periods", periods)),
+    );
+    report(
+        &format!("scenario incremental n={scen_nodes} T={threads}"),
+        &p_sc,
+        Some(("periods", periods)),
+    );
+    let (ssm, spm) = (mean_s(&s_sc), mean_s(&p_sc));
+    let scenario_json = Json::obj(vec![
+        ("n", Json::num(scen_nodes as f64)),
+        ("periods", Json::num(periods)),
+        ("rebuild_ms", Json::num(ssm * 1e3)),
+        ("incremental_ms", Json::num(spm * 1e3)),
+        ("rebuild_periods_per_s", Json::num(periods / ssm)),
+        ("incremental_periods_per_s", Json::num(periods / spm)),
+        ("speedup", Json::num(ssm / spm)),
+        ("max_abs_diameter_diff", Json::num(scen_diff)),
+    ]);
 
     // --- Parallel construction. -----------------------------------------
     for m in [1usize, 8, 32] {
@@ -142,5 +349,18 @@ fn main() -> anyhow::Result<()> {
         });
         report(&format!("parallel ring M={m} n=120"), &samples, None);
     }
+
+    // --- Machine-readable trajectory (BENCH_hotpath.json). --------------
+    let out = Json::obj(vec![
+        ("bench", Json::str("hotpath")),
+        ("mode", Json::str(if quick { "quick" } else { "full" })),
+        ("threads", Json::num(threads as f64)),
+        ("apsp", Json::arr(apsp_rows)),
+        ("diameter", Json::arr(diam_rows)),
+        ("ga", ga_json),
+        ("scenario", scenario_json),
+    ]);
+    std::fs::write("BENCH_hotpath.json", out.to_string())?;
+    println!("wrote BENCH_hotpath.json (threads={threads} quick={quick})");
     Ok(())
 }

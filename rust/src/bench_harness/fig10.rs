@@ -19,7 +19,10 @@ use crate::topology::kring::random_krings;
 use crate::topology::paper_k;
 use crate::util::rng::Rng;
 
-pub fn ga_budget(quick: bool) -> usize {
+/// GA evaluation budget: `DGRO_GA_BUDGET` overrides; `--full` runs the
+/// paper's 1e5 (tractable now that fitness evaluation is batched across
+/// the pool); the default mid-size budget keeps un-flagged runs fast.
+pub fn ga_budget(quick: bool, full: bool) -> usize {
     if let Ok(v) = std::env::var("DGRO_GA_BUDGET") {
         if let Ok(b) = v.parse() {
             return b;
@@ -27,12 +30,16 @@ pub fn ga_budget(quick: bool) -> usize {
     }
     if quick {
         400
+    } else if full {
+        100_000
     } else {
         20_000
     }
 }
 
-pub fn run(quick: bool) -> Result<Vec<Table>> {
+pub fn run_opts(opts: crate::bench_harness::FigureOpts) -> Result<Vec<Table>> {
+    let quick = opts.quick;
+    let threads = opts.resolve_threads();
     let sizes: Vec<usize> = if quick {
         vec![16, 32]
     } else {
@@ -40,7 +47,7 @@ pub fn run(quick: bool) -> Result<Vec<Table>> {
     };
     let runs = if quick { 1 } else { 3 };
     let starts = 10; // paper: 10 start nodes, keep best
-    let budget = ga_budget(quick);
+    let budget = ga_budget(quick, opts.full);
 
     // The Q-net scorer: trained weights when artifacts exist, synthetic
     // otherwise (CI path); the table notes which.
@@ -69,6 +76,7 @@ pub fn run(quick: bool) -> Result<Vec<Table>> {
             "random_norm",
             "dgro_ms",
             "ga_ms",
+            "ga_evals_per_s",
         ],
     );
 
@@ -102,6 +110,7 @@ pub fn run(quick: bool) -> Result<Vec<Table>> {
                 k,
                 GaConfig {
                     budget,
+                    threads,
                     ..Default::default()
                 },
                 &mut rng,
@@ -111,13 +120,20 @@ pub fn run(quick: bool) -> Result<Vec<Table>> {
             dgro_sum += d_dgro as f64 / rand_d;
             ga_sum += ga.best_diameter as f64 / rand_d;
         }
+        let ga_ms = t_ga / runs as f64;
+        let evals_per_s = budget as f64 / (ga_ms / 1e3).max(1e-9);
+        crate::log_info!(
+            "fig10 n={n}: GA-{budget} at {evals_per_s:.0} evals/s \
+             (threads={threads})"
+        );
         table.row(vec![
             n as f64,
             dgro_sum / runs as f64,
             ga_sum / runs as f64,
             1.0,
             t_dgro / runs as f64,
-            t_ga / runs as f64,
+            ga_ms,
+            evals_per_s,
         ]);
     }
     Ok(vec![table])
@@ -129,7 +145,9 @@ mod tests {
 
     #[test]
     fn fig10_table_shape_and_normalization() {
-        let tables = run(true).unwrap();
+        let tables =
+            run_opts(crate::bench_harness::FigureOpts::quick_mode(true))
+                .unwrap();
         let t = &tables[0];
         assert_eq!(t.rows.len(), 2);
         for row in &t.rows {
@@ -137,6 +155,7 @@ mod tests {
             assert!(row[1] > 0.0 && row[2] > 0.0);
             // Both optimizers should beat the random baseline.
             assert!(row[2] < 1.05, "GA should be under random: {}", row[2]);
+            assert!(row[6] > 0.0, "evals/s must be recorded");
         }
     }
 }

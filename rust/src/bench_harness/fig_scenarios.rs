@@ -16,11 +16,12 @@ use crate::scenario::spec::catalog;
 /// reproducibility key.
 pub const SCENARIO_SEED: u64 = 20240711;
 
-pub fn run(quick: bool) -> Result<Vec<Table>> {
+pub fn run_opts(opts: crate::bench_harness::FigureOpts) -> Result<Vec<Table>> {
     // Quick mode trims the baseline panel (Perigee and the random
     // K-ring are the slowest builders), not the catalog — every scenario
-    // stays covered in CI.
-    let topologies: &[Topology] = if quick {
+    // stays covered in CI. Threads fan the per-scenario topology runs
+    // out; the tables are identical at any thread count.
+    let topologies: &[Topology] = if opts.quick {
         &[Topology::Dgro, Topology::Chord, Topology::Rapid]
     } else {
         &Topology::ALL
@@ -30,6 +31,7 @@ pub fn run(quick: bool) -> Result<Vec<Table>> {
         topologies,
         SCENARIO_SEED,
         crate::scenario::compare::DEFAULT_PERIOD_MS,
+        opts.resolve_threads(),
     )?;
     let mut tables = vec![rep.summary];
     tables.extend(rep.timelines);

@@ -24,8 +24,47 @@ use anyhow::Result;
 
 use crate::metrics::Table;
 
-/// Which figures to regenerate.
+/// Harness-wide knobs threaded from the CLI/bench entry points into the
+/// figure modules that can use them.
+#[derive(Clone, Copy, Debug)]
+pub struct FigureOpts {
+    /// Trimmed sizes/runs (CI mode).
+    pub quick: bool,
+    /// Paper-scale budgets (fig 10's GA runs the full 1e5 evaluations).
+    pub full: bool,
+    /// Evaluation worker threads; 0 = all cores.
+    pub threads: usize,
+}
+
+impl FigureOpts {
+    /// The historical `(fig, quick)` entry point's options: serial,
+    /// default budgets.
+    pub fn quick_mode(quick: bool) -> FigureOpts {
+        FigureOpts {
+            quick,
+            full: false,
+            threads: 1,
+        }
+    }
+
+    pub fn resolve_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::graph::eval::EvalPool::default_threads()
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// Which figures to regenerate (serial, default budgets — the
+/// CI/`cargo test` entry point; [`run_figure_opts`] exposes the knobs).
 pub fn run_figure(fig: usize, quick: bool) -> Result<Vec<Table>> {
+    run_figure_opts(fig, FigureOpts::quick_mode(quick))
+}
+
+/// Which figures to regenerate, with explicit harness options.
+pub fn run_figure_opts(fig: usize, opts: FigureOpts) -> Result<Vec<Table>> {
+    let quick = opts.quick;
     let sweep = runner::SweepConfig::paper(quick);
     match fig {
         1 => fig01::run(&sweep),
@@ -33,7 +72,7 @@ pub fn run_figure(fig: usize, quick: bool) -> Result<Vec<Table>> {
         6 => fig06::run(&sweep),
         7 => fig07::run(&sweep),
         9 => runner::fig09_passthrough(),
-        10 => fig10::run(quick),
+        10 => fig10::run_opts(opts),
         11 => fig_single::run_synthetic(&sweep),
         12 => fig_ablation::run_synthetic(&sweep),
         13 => fig_baselines::run_synthetic(&sweep),
@@ -42,7 +81,7 @@ pub fn run_figure(fig: usize, quick: bool) -> Result<Vec<Table>> {
         16 => fig_ablation::run_realistic(&sweep),
         17 => fig_baselines::run_realistic(&sweep),
         18 => fig_parallel::run_realistic(&sweep),
-        19 => fig_scenarios::run(quick),
+        19 => fig_scenarios::run_opts(opts),
         other => anyhow::bail!(
             "no figure {other} (valid: 1,5,6,7,9,10,11-18 from the paper, \
              19 = scenario catalog)"

@@ -3,7 +3,9 @@
 //!
 //! APSP is the hot loop of every experiment (the genetic baseline alone
 //! evaluates up to 1e5 candidate topologies) — see rust/benches/hotpath.rs
-//! and EXPERIMENTS.md §Perf for the optimization history.
+//! and EXPERIMENTS.md §Perf for the optimization history. The serial
+//! kernels here are source-parallelized by [`super::eval::EvalPool`]
+//! (`apsp_par` stripes sources across threads over one shared CSR).
 
 use std::collections::BinaryHeap;
 

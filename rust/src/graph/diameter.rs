@@ -1,6 +1,11 @@
 //! Diameter and eccentricity — the paper's performance metric (Eqn 1):
 //! D(G) = max_{u,v} d(u, v), over the largest connected component when
 //! the graph is disconnected (paper §IV-C convention).
+//!
+//! Serial algorithms live here; [`super::eval::EvalPool`] provides the
+//! parallel counterparts (`diameter_par`, warm-started
+//! `diameter_with_seeds`, population-wide `diameter_batch`) that return
+//! the same values with the SSSP sweeps spread across threads.
 
 use super::apsp::{self, DistMatrix, INF};
 use super::components;
@@ -116,20 +121,34 @@ pub fn diameter_of_dist(dm: &DistMatrix) -> f32 {
     best
 }
 
-/// Eccentricity of every node (max finite distance from it); INF when the
-/// node is isolated relative to the rest of its component.
+/// Eccentricity of every node: the max finite distance from it. A node
+/// with no finite distance to any *other* node (isolated in a multi-node
+/// graph) gets `INF` — it has no farthest peer, and reporting `0.0`
+/// would make it look central. In a single-node graph the eccentricity
+/// is `0.0` (the node is its whole component).
 pub fn eccentricities(dm: &DistMatrix) -> Vec<f32> {
     let n = dm.n;
     (0..n)
         .map(|u| {
             let mut e = 0.0f32;
+            let mut reaches_any = n == 1;
             for v in 0..n {
+                if v == u {
+                    continue;
+                }
                 let d = dm.get(u, v);
-                if d != INF && d > e {
-                    e = d;
+                if d != INF {
+                    reaches_any = true;
+                    if d > e {
+                        e = d;
+                    }
                 }
             }
-            e
+            if reaches_any {
+                e
+            } else {
+                INF
+            }
         })
         .collect()
 }
@@ -203,6 +222,17 @@ mod tests {
         let g = Graph::from_weighted_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
         let dm = apsp::apsp(&g);
         assert_eq!(eccentricities(&dm), vec![2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn eccentricity_of_isolated_node_is_inf() {
+        // Node 3 has no edges: doc contract says INF, not 0.
+        let g = Graph::from_weighted_edges(4, &[(0, 1, 1.0), (1, 2, 1.0)]);
+        let dm = apsp::apsp(&g);
+        assert_eq!(eccentricities(&dm), vec![2.0, 1.0, 2.0, INF]);
+        // A single-node graph is its own component: eccentricity 0.
+        let dm1 = apsp::apsp(&Graph::empty(1));
+        assert_eq!(eccentricities(&dm1), vec![0.0]);
     }
 
     #[test]

@@ -1,0 +1,435 @@
+//! Parallel, allocation-free topology evaluation — the engine behind
+//! every diameter-scored experiment (GA candidate populations, scenario
+//! periods, `scenario compare` cross products).
+//!
+//! [`EvalPool`] stripes work over `threads` OS threads
+//! (`std::thread::scope`; no rayon offline, DESIGN.md §3) and recycles
+//! per-worker Dijkstra scratch — the bit-packed `(f32 bits, node)` heap
+//! of [`super::apsp`] — through a checkout pool, so the steady-state
+//! SSSP sweep allocates nothing. Distance rows are written straight into
+//! caller-owned buffers (the APSP matrix, the bounding algorithm's
+//! per-round block), never copied.
+//!
+//!   * [`EvalPool::apsp_par`] — all-pairs shortest paths over one shared
+//!     read-only CSR, sources striped across threads in contiguous row
+//!     blocks (each worker owns a disjoint slice of the output matrix).
+//!   * [`EvalPool::diameter_par`] / [`EvalPool::diameter_with_seeds`] —
+//!     the Takes–Kosters bounding algorithm of [`super::diameter`] with
+//!     each round's SSSP sweeps run in parallel, optionally warm-started
+//!     from landmark nodes (the scenario engine feeds the previous
+//!     period's certifying sources back in).
+//!   * [`EvalPool::diameter_batch`] — a whole candidate population
+//!     evaluated concurrently, one graph per task, via
+//!     [`crate::par::scoped_map`].
+//!
+//! Exactness and determinism: `apsp_par` and `diameter_batch` are
+//! bit-identical to their serial counterparts (same per-task algorithm;
+//! threads only partition independent work). The bounding diameter's
+//! sweep *schedule* is fixed at [`ROUND_WIDTH`] sources per round
+//! regardless of pool width, so its certified value is bit-identical
+//! across thread counts and machines — `threads` only bounds how many
+//! of a round's sweeps run concurrently — and agrees with the serial
+//! `diameter()` within the certification tolerance (~1e-6 of the
+//! scale). `rust/tests/proptests.rs` pins all of this across thread
+//! counts {1, 2, 8}, and `rust/benches/hotpath.rs` records the
+//! serial-vs-parallel trajectory in `BENCH_hotpath.json`.
+
+use std::collections::BinaryHeap;
+use std::sync::Mutex;
+
+use super::apsp::{Csr, DistMatrix, INF};
+use super::components;
+use super::diameter;
+use super::Graph;
+
+/// Warm-start landmarks retained per diameter call: the certifying
+/// sources with the largest eccentricities. Enough to re-certify a
+/// barely-changed overlay in one round without bloating the warm-up
+/// cost when the overlay did change.
+const MAX_LANDMARKS: usize = 4;
+
+/// Sources swept per bounding-diameter round. Fixed — deliberately NOT
+/// the pool width — so the sweep schedule (and therefore the certified
+/// value, exact up to the usual 1e-6 certification fudge) is a pure
+/// function of (graph, seeds): reports stay byte-identical across
+/// `--threads` settings and machines. Equal to [`MAX_LANDMARKS`] so a
+/// warm round covers the whole landmark set, and small enough that the
+/// round-granular schedule wastes at most a couple of sweeps over the
+/// serial one-at-a-time heuristic.
+const ROUND_WIDTH: usize = 4;
+
+/// Reusable per-worker Dijkstra state (checked out of [`EvalPool`] for
+/// the duration of one worker's run, returned afterwards).
+#[derive(Default)]
+struct DijkstraScratch {
+    heap: BinaryHeap<std::cmp::Reverse<u64>>,
+}
+
+/// A fixed-width evaluation pool: `threads` workers, recycled scratch.
+///
+/// The pool itself is cheap (no OS threads are parked; workers are
+/// scoped per call) — construct one near the work loop and reuse it so
+/// the scratch heaps stay warm.
+pub struct EvalPool {
+    threads: usize,
+    scratch: Mutex<Vec<DijkstraScratch>>,
+}
+
+impl EvalPool {
+    /// A pool of `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> EvalPool {
+        EvalPool {
+            threads: threads.max(1),
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// One worker: bit-for-bit the serial algorithms, same scratch reuse.
+    pub fn serial() -> EvalPool {
+        EvalPool::new(1)
+    }
+
+    /// The machine's core count (the CLI's `--threads 0` resolution).
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn checkout(&self) -> DijkstraScratch {
+        self.scratch.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn checkin(&self, s: DijkstraScratch) {
+        self.scratch.lock().unwrap().push(s);
+    }
+
+    /// All-pairs shortest paths, sources striped across the pool.
+    /// Identical output to [`super::apsp::apsp`] (same per-row
+    /// algorithm; rows are independent).
+    pub fn apsp_par(&self, g: &Graph) -> DistMatrix {
+        let n = g.n();
+        let mut out = DistMatrix {
+            n,
+            d: vec![INF; n * n],
+        };
+        if n == 0 {
+            return out;
+        }
+        let csr = Csr::build(g);
+        let threads = self.threads.min(n);
+        if threads <= 1 {
+            let mut sc = self.checkout();
+            for (s, row) in out.d.chunks_mut(n).enumerate() {
+                csr.dijkstra_scratch(s, row, &mut sc.heap);
+            }
+            self.checkin(sc);
+            return out;
+        }
+        let rows_per = (n + threads - 1) / threads;
+        let csr_ref = &csr;
+        let this = &*self;
+        std::thread::scope(|scope| {
+            for (ci, block) in out.d.chunks_mut(rows_per * n).enumerate() {
+                scope.spawn(move || {
+                    let mut sc = this.checkout();
+                    for (ri, row) in block.chunks_mut(n).enumerate() {
+                        csr_ref.dijkstra_scratch(
+                            ci * rows_per + ri,
+                            row,
+                            &mut sc.heap,
+                        );
+                    }
+                    this.checkin(sc);
+                });
+            }
+        });
+        out
+    }
+
+    /// Exact diameter (largest component), Takes–Kosters sweeps run in
+    /// fixed-width rounds across the pool. Bit-identical across thread
+    /// counts; agrees with [`super::diameter::diameter`] within the
+    /// certification tolerance.
+    pub fn diameter_par(&self, g: &Graph) -> f32 {
+        self.diameter_with_seeds(g, &[]).0
+    }
+
+    /// Exact diameter with warm-start landmarks: `seeds` are processed
+    /// as the first SSSP sources (non-members are skipped), which lets a
+    /// caller that evaluates a slowly-changing overlay re-certify in a
+    /// round or two. Returns `(diameter, landmarks)` where `landmarks`
+    /// are the up-to-[`MAX_LANDMARKS`] processed sources with the
+    /// largest eccentricities — feed them back in as the next call's
+    /// `seeds`. The value is exact regardless of seeds or thread count.
+    pub fn diameter_with_seeds(
+        &self,
+        g: &Graph,
+        seeds: &[u32],
+    ) -> (f32, Vec<u32>) {
+        let n = g.n();
+        if n == 0 || g.m() == 0 {
+            return (0.0, Vec::new());
+        }
+        let members = components::largest(&components::components(g));
+        if members.len() < 2 {
+            return (0.0, Vec::new());
+        }
+
+        let csr = Csr::build(g);
+        // The schedule width is fixed (see [`ROUND_WIDTH`]); the pool
+        // width only decides how many sweeps run concurrently.
+        let width = ROUND_WIDTH.min(members.len()).max(1);
+        // One distance row per in-flight sweep, reused every round.
+        let mut batch_dist = vec![INF; width * n];
+
+        let mut member_mask = vec![false; n];
+        for &u in &members {
+            member_mask[u as usize] = true;
+        }
+        // Warm-start queue (members only, deduplicated, caller order).
+        let mut seed_queue: Vec<u32> = Vec::new();
+        for &s in seeds {
+            if (s as usize) < n
+                && member_mask[s as usize]
+                && !seed_queue.contains(&s)
+            {
+                seed_queue.push(s);
+            }
+        }
+        seed_queue.reverse(); // consumed by pop() in caller order
+
+        let mut ecc_lo = vec![0.0f32; n];
+        let mut ecc_hi = vec![f32::INFINITY; n];
+        let mut cand: Vec<u32> = members.clone();
+        let mut lb = 0.0f32;
+        let mut pick_hi = true;
+        // (source, exact eccentricity) of every processed sweep.
+        let mut processed: Vec<(u32, f32)> = Vec::new();
+
+        while !cand.is_empty() {
+            // Assemble the round: landmarks first, then the serial
+            // algorithm's alternating max-upper / max-lower picks.
+            let mut batch: Vec<u32> = Vec::with_capacity(width);
+            while batch.len() < width {
+                let src = if let Some(s) = seed_queue.pop() {
+                    match cand.iter().position(|&u| u == s) {
+                        Some(i) => cand.swap_remove(i),
+                        None => continue, // already pruned
+                    }
+                } else if cand.is_empty() {
+                    break;
+                } else {
+                    let (idx, _) = cand
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &u)| {
+                            let score = if pick_hi {
+                                ecc_hi[u as usize]
+                            } else {
+                                ecc_lo[u as usize]
+                            };
+                            (i, score)
+                        })
+                        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                        .unwrap();
+                    pick_hi = !pick_hi;
+                    cand.swap_remove(idx)
+                };
+                batch.push(src);
+            }
+            if batch.is_empty() {
+                break;
+            }
+
+            // The round's SSSPs. Row i of `batch_dist` always belongs
+            // to `batch[i]`, however the sweeps are distributed.
+            let workers = self.threads.min(batch.len());
+            if workers <= 1 {
+                let mut sc = self.checkout();
+                for (row, &src) in
+                    batch_dist.chunks_mut(n).zip(batch.iter())
+                {
+                    csr.dijkstra_scratch(src as usize, row, &mut sc.heap);
+                }
+                self.checkin(sc);
+            } else {
+                let mut bins: Vec<Vec<(u32, &mut [f32])>> =
+                    (0..workers).map(|_| Vec::new()).collect();
+                for (i, (row, &src)) in batch_dist
+                    .chunks_mut(n)
+                    .zip(batch.iter())
+                    .enumerate()
+                {
+                    bins[i % workers].push((src, row));
+                }
+                let csr_ref = &csr;
+                let this = &*self;
+                std::thread::scope(|scope| {
+                    for bin in bins {
+                        scope.spawn(move || {
+                            let mut sc = this.checkout();
+                            for (src, row) in bin {
+                                csr_ref.dijkstra_scratch(
+                                    src as usize,
+                                    row,
+                                    &mut sc.heap,
+                                );
+                            }
+                            this.checkin(sc);
+                        });
+                    }
+                });
+            }
+
+            // Sequential bound tightening, exactly the serial rule,
+            // applied once per completed sweep.
+            for (bi, &v) in batch.iter().enumerate() {
+                let dist = &batch_dist[bi * n..(bi + 1) * n];
+                let mut ecc_v = 0.0f32;
+                for &u in &members {
+                    let d = dist[u as usize];
+                    if d.is_finite() && d > ecc_v {
+                        ecc_v = d;
+                    }
+                }
+                if ecc_v > lb {
+                    lb = ecc_v;
+                }
+                processed.push((v, ecc_v));
+                cand.retain(|&u| {
+                    let u = u as usize;
+                    let d = dist[u];
+                    if d.is_finite() {
+                        let lo = (ecc_v - d).max(d);
+                        if lo > ecc_lo[u] {
+                            ecc_lo[u] = lo;
+                        }
+                        let hi = ecc_v + d;
+                        if hi < ecc_hi[u] {
+                            ecc_hi[u] = hi;
+                        }
+                    }
+                    if ecc_lo[u] > lb {
+                        lb = ecc_lo[u];
+                    }
+                    ecc_hi[u] > lb + 1e-6
+                });
+            }
+        }
+
+        // Keep the far-out sources as next-call landmarks.
+        processed.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        processed.truncate(MAX_LANDMARKS);
+        (lb, processed.into_iter().map(|(v, _)| v).collect())
+    }
+
+    /// Diameter of every graph in a candidate population, one task per
+    /// graph across the pool. Values are identical to calling
+    /// [`super::diameter::diameter`] per graph (each task IS that call).
+    pub fn diameter_batch(&self, gs: &[Graph]) -> Vec<f32> {
+        if self.threads <= 1 || gs.len() <= 1 {
+            return gs.iter().map(diameter::diameter).collect();
+        }
+        let idx: Vec<usize> = (0..gs.len()).collect();
+        crate::par::scoped_map(idx, self.threads, |_, i| {
+            diameter::diameter(&gs[i])
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::apsp;
+    use crate::latency::Model;
+    use crate::topology::{kring, paper_k};
+    use crate::util::rng::Rng;
+
+    fn overlay(n: usize, seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        let w = Model::Uniform.sample(n, &mut rng);
+        kring::random_krings(n, paper_k(n), &mut rng).to_graph(&w)
+    }
+
+    #[test]
+    fn apsp_par_matches_serial_bitwise() {
+        let g = overlay(48, 0xE7A1);
+        let serial = apsp::apsp(&g);
+        for threads in [1, 2, 3, 8] {
+            let pool = EvalPool::new(threads);
+            let par = pool.apsp_par(&g);
+            assert_eq!(serial.n, par.n);
+            for (a, b) in serial.d.iter().zip(&par.d) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn diameter_par_matches_serial() {
+        for trial in 0..6 {
+            let n = 16 + 11 * trial;
+            let g = overlay(n, 0xD1A + trial as u64);
+            let serial = diameter::diameter(&g);
+            for threads in [1, 2, 8] {
+                let pool = EvalPool::new(threads);
+                let par = pool.diameter_par(&g);
+                assert!(
+                    (par - serial).abs() <= 1e-3 * serial.max(1.0),
+                    "n={n} threads={threads}: {par} vs {serial}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_seeds_do_not_change_the_value() {
+        let g = overlay(40, 7);
+        let serial = diameter::diameter(&g);
+        let pool = EvalPool::new(4);
+        let (d0, landmarks) = pool.diameter_with_seeds(&g, &[]);
+        assert!((d0 - serial).abs() <= 1e-3 * serial.max(1.0));
+        assert!(!landmarks.is_empty() && landmarks.len() <= MAX_LANDMARKS);
+        // Re-certify from the landmarks (the scenario engine's pattern),
+        // and from garbage seeds including out-of-range ids.
+        let (d1, _) = pool.diameter_with_seeds(&g, &landmarks);
+        assert!((d1 - serial).abs() <= 1e-3 * serial.max(1.0));
+        let (d2, _) = pool.diameter_with_seeds(&g, &[0, 0, 39, 1000]);
+        assert!((d2 - serial).abs() <= 1e-3 * serial.max(1.0));
+    }
+
+    #[test]
+    fn diameter_batch_matches_per_graph_serial() {
+        let gs: Vec<Graph> =
+            (0..7).map(|i| overlay(20 + i, 100 + i as u64)).collect();
+        let serial: Vec<f32> =
+            gs.iter().map(diameter::diameter).collect();
+        for threads in [1, 2, 8] {
+            let pool = EvalPool::new(threads);
+            assert_eq!(pool.diameter_batch(&gs), serial);
+        }
+    }
+
+    #[test]
+    fn degenerate_graphs() {
+        let pool = EvalPool::new(4);
+        let empty = Graph::empty(0);
+        assert_eq!(pool.apsp_par(&empty).d.len(), 0);
+        assert_eq!(pool.diameter_par(&empty), 0.0);
+        let edgeless = Graph::empty(5);
+        assert_eq!(pool.diameter_par(&edgeless), 0.0);
+        assert_eq!(pool.diameter_with_seeds(&edgeless, &[1, 2]).0, 0.0);
+        assert!(pool.diameter_batch(&[]).is_empty());
+        // Disconnected: largest component rules, same as serial.
+        let g = Graph::from_weighted_edges(
+            6,
+            &[(0, 1, 1.0), (1, 2, 1.0), (3, 4, 9.0)],
+        );
+        assert_eq!(pool.diameter_par(&g), diameter::diameter(&g));
+    }
+}

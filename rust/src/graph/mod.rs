@@ -1,9 +1,13 @@
 //! Weighted-graph substrate: topology representation, shortest paths,
 //! diameter — the metric every DGRO experiment is scored on (paper §III).
+//! [`eval`] parallelizes the whole layer: [`eval::EvalPool`] runs APSP /
+//! diameter / candidate-batch evaluation across threads with recycled
+//! scratch, exactly matching the serial algorithms here.
 
 pub mod apsp;
 pub mod components;
 pub mod diameter;
+pub mod eval;
 pub mod ring;
 
 use std::collections::HashSet;

@@ -262,8 +262,20 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
     .flag("topology", "dgro", "dgro|chord|rapid|perigee|random")
     .flag("seed", "7", "rng seed (same seed => byte-identical report)")
     .flag("period", "250", "adaptation/measurement period (sim-ms)")
+    .flag(
+        "threads",
+        "0",
+        "worker threads for static-baseline evaluation and the compare \
+         cross product (0 = all cores; the dgro coordinator path is \
+         unaffected)",
+    )
     .flag("out", "", "also write CSV tables under this directory")
-    .switch("quick", "compare against the trimmed baseline panel");
+    .switch("quick", "compare against the trimmed baseline panel")
+    .switch(
+        "rebuild",
+        "force the from-scratch per-period rebuild on static-baseline \
+         runs (perf A/B baseline; no effect on the dgro path)",
+    );
     let a = cmd.parse(raw)?;
     let action =
         a.positional.first().map(|s| s.as_str()).unwrap_or("list");
@@ -272,6 +284,10 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
     if !(period > 0.0) {
         anyhow::bail!("--period must be > 0, got {period}");
     }
+    let threads = match a.get_usize("threads")? {
+        0 => dgro::graph::eval::EvalPool::default_threads(),
+        t => t,
+    };
     match action {
         "list" => {
             for s in scenario::catalog() {
@@ -297,6 +313,8 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             let topology = scenario::Topology::parse(a.get("topology"))?;
             let mut engine = scenario::ScenarioEngine::new(spec, seed)?;
             engine.period = period;
+            engine.threads = threads;
+            engine.incremental = !a.switch("rebuild");
             let report = engine.run(topology)?;
             print!("{}", report.render());
             if !a.get("out").is_empty() {
@@ -320,6 +338,7 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                 &topologies,
                 seed,
                 period,
+                threads,
             )?;
             print!("{}", rep.render());
             if a.get("out").is_empty() {
@@ -344,10 +363,16 @@ fn cmd_figures(raw: &[String]) -> Result<()> {
     let cmd = Command::new("figures", "regenerate paper figures")
         .flag("fig", "0", "figure number (0 with --all)")
         .flag("out", "reports", "output directory for CSVs")
+        .flag("threads", "0", "evaluation worker threads (0 = all cores)")
         .switch("all", "run every figure")
-        .switch("quick", "trimmed sizes/runs (CI mode)");
+        .switch("quick", "trimmed sizes/runs (CI mode)")
+        .switch("full", "paper-scale budgets (fig 10 GA: 1e5 evals)");
     let a = cmd.parse(raw)?;
-    let quick = a.switch("quick");
+    let opts = bench_harness::FigureOpts {
+        quick: a.switch("quick"),
+        full: a.switch("full"),
+        threads: a.get_usize("threads")?,
+    };
     let out = a.get("out");
     let figs: Vec<usize> = if a.switch("all") {
         bench_harness::ALL_FIGURES.to_vec()
@@ -355,8 +380,13 @@ fn cmd_figures(raw: &[String]) -> Result<()> {
         vec![a.get_usize("fig")?]
     };
     for fig in figs {
-        log_info!("regenerating figure {fig} (quick={quick})");
-        let tables = bench_harness::run_figure(fig, quick)?;
+        log_info!(
+            "regenerating figure {fig} (quick={} full={} threads={})",
+            opts.quick,
+            opts.full,
+            opts.resolve_threads()
+        );
+        let tables = bench_harness::run_figure_opts(fig, opts)?;
         runner::emit(&tables, out)?;
     }
     Ok(())

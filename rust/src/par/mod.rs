@@ -6,6 +6,7 @@
 //!   * [`scoped_map`] — fork-join: apply a closure to every item of a
 //!     slice on `threads` OS threads and collect results in order.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -63,6 +64,13 @@ impl Drop for ThreadPool {
 /// Fork-join map: apply `f` to every element of `items` using up to
 /// `threads` OS threads; results come back in input order. Panics in `f`
 /// propagate. Items and results cross thread boundaries by value.
+///
+/// Work distribution is an atomic-cursor chunked claim: each worker
+/// grabs a contiguous index range with one `fetch_add` (~4 claims per
+/// worker), instead of the old pop-per-item global `Mutex<Vec<_>>` that
+/// serialized every handoff. The per-slot locks below are claimed
+/// exactly once each and never contended — they exist only to move
+/// items/results across the thread boundary safely.
 pub fn scoped_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -75,33 +83,45 @@ where
         return Vec::new();
     }
     let threads = threads.min(n);
-    let work: Mutex<Vec<Option<(usize, T)>>> = Mutex::new(
-        items.into_iter().enumerate().map(Some).rev().collect(),
-    );
-    let results: Mutex<Vec<Option<R>>> =
-        Mutex::new((0..n).map(|_| None).collect());
+    let work: Vec<Mutex<Option<T>>> = items
+        .into_iter()
+        .map(|t| Mutex::new(Some(t)))
+        .collect();
+    let results: Vec<Mutex<Option<R>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    // ~4 claims per worker balances load skew against cursor traffic.
+    let chunk = (n / (threads * 4)).max(1);
     let fref = &f;
     let wref = &work;
     let rref = &results;
+    let cref = &cursor;
     thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(move || loop {
-                let item = { wref.lock().unwrap().pop() };
-                match item {
-                    Some(Some((idx, item))) => {
-                        let out = fref(idx, item);
-                        rref.lock().unwrap()[idx] = Some(out);
-                    }
-                    _ => break,
+                let start = cref.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for idx in start..(start + chunk).min(n) {
+                    let item = wref[idx]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("each index is claimed exactly once");
+                    let out = fref(idx, item);
+                    *rref[idx].lock().unwrap() = Some(out);
                 }
             });
         }
     });
     results
-        .into_inner()
-        .unwrap()
         .into_iter()
-        .map(|r| r.expect("all work completed"))
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("all work completed")
+        })
         .collect()
 }
 
@@ -150,5 +170,30 @@ mod tests {
     fn scoped_map_more_threads_than_items() {
         let out = scoped_map(vec![5], 16, |_, x| x * 2);
         assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn scoped_map_covers_every_index_under_chunked_claim() {
+        // Uneven per-item work: the chunked cursor must still cover all
+        // indices exactly once and keep results in order.
+        let items: Vec<usize> = (0..1023).collect();
+        let out = scoped_map(items, 7, |idx, x| {
+            if x % 97 == 0 {
+                std::thread::yield_now();
+            }
+            idx * 2 + x
+        });
+        assert_eq!(out, (0..1023).map(|x| 3 * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn scoped_map_propagates_worker_panics() {
+        scoped_map((0..32).collect::<Vec<usize>>(), 4, |_, x| {
+            if x == 17 {
+                panic!("boom");
+            }
+            x
+        });
     }
 }

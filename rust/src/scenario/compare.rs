@@ -8,7 +8,7 @@ use std::fmt::Write as _;
 use anyhow::Result;
 
 use crate::metrics::Table;
-use crate::scenario::engine::{ScenarioEngine, Topology};
+use crate::scenario::engine::{ScenarioEngine, ScenarioReport, Topology};
 use crate::scenario::spec::ScenarioSpec;
 
 /// Output of [`compare`].
@@ -56,13 +56,17 @@ pub const DEFAULT_PERIOD_MS: f64 = 250.0;
 
 /// Run the cross product and collect mean alive-overlay diameters
 /// (per-period timelines included). `seed` keys everything; re-running
-/// with the same inputs reproduces the tables byte-for-byte. `period`
-/// is the measurement cadence in sim-ms ([`DEFAULT_PERIOD_MS`]).
+/// with the same inputs reproduces the tables byte-for-byte — including
+/// across `threads` counts, since every (scenario, topology) run is a
+/// pure function of (spec, topology, seed). `period` is the measurement
+/// cadence in sim-ms ([`DEFAULT_PERIOD_MS`]); `threads > 1` fans the
+/// per-scenario topology runs out across the evaluation pool.
 pub fn compare(
     specs: &[ScenarioSpec],
     topologies: &[Topology],
     seed: u64,
     period: f64,
+    threads: usize,
 ) -> Result<CompareReport> {
     assert!(!specs.is_empty() && !topologies.is_empty());
     let mut header: Vec<String> = vec!["scenario".to_string()];
@@ -76,14 +80,38 @@ pub fn compare(
     let mut timelines = Vec::with_capacity(specs.len());
     let mut names = Vec::with_capacity(specs.len());
     for (si, spec) in specs.iter().enumerate() {
-        let mut engine = ScenarioEngine::new(spec.clone(), seed)?;
-        engine.period = period;
-        let mut runs = Vec::with_capacity(topologies.len());
+        // One engine per (spec, topology) run so the cross product can
+        // fan out; each run re-derives everything from (spec, seed) and
+        // the diameter sweep schedule is thread-invariant, so results
+        // are identical to the serial order. Threads beyond the
+        // topology fan-out go to each engine's own evaluation pool.
+        let inner_threads = (threads / topologies.len()).max(1);
+        let runs: Vec<ScenarioReport> = if threads > 1 {
+            crate::par::scoped_map(
+                topologies.to_vec(),
+                threads,
+                |_, topo| -> Result<ScenarioReport> {
+                    let mut engine =
+                        ScenarioEngine::new(spec.clone(), seed)?;
+                    engine.period = period;
+                    engine.threads = inner_threads;
+                    engine.run(topo)
+                },
+            )
+            .into_iter()
+            .collect::<Result<Vec<_>>>()?
+        } else {
+            let mut engine = ScenarioEngine::new(spec.clone(), seed)?;
+            engine.period = period;
+            let mut v = Vec::with_capacity(topologies.len());
+            for &topo in topologies {
+                v.push(engine.run(topo)?);
+            }
+            v
+        };
         let mut row = vec![si as f64];
-        for &topo in topologies {
-            let rep = engine.run(topo)?;
+        for rep in &runs {
             row.push(rep.mean_diameter());
-            runs.push(rep);
         }
         summary.row(row);
 
@@ -138,7 +166,8 @@ mod tests {
     fn compare_shapes_and_determinism() {
         let specs = vec![mini("a"), mini("b")];
         let topos = [Topology::Dgro, Topology::Chord];
-        let r1 = compare(&specs, &topos, 3, DEFAULT_PERIOD_MS).unwrap();
+        let r1 =
+            compare(&specs, &topos, 3, DEFAULT_PERIOD_MS, 1).unwrap();
         assert_eq!(r1.summary.rows.len(), 2);
         assert_eq!(r1.summary.header.len(), 3);
         assert_eq!(r1.timelines.len(), 2);
@@ -148,9 +177,25 @@ mod tests {
                 assert!(row.iter().all(|x| x.is_finite()));
             }
         }
-        let r2 = compare(&specs, &topos, 3, DEFAULT_PERIOD_MS).unwrap();
+        let r2 =
+            compare(&specs, &topos, 3, DEFAULT_PERIOD_MS, 1).unwrap();
         assert_eq!(r1.render(), r2.render());
         assert_eq!(r1.summary.to_csv(), r2.summary.to_csv());
         assert!(r1.render().contains("| a"));
+    }
+
+    #[test]
+    fn parallel_cross_product_matches_serial() {
+        let specs = vec![mini("a"), mini("b")];
+        let topos = [Topology::Dgro, Topology::Chord, Topology::Rapid];
+        let serial =
+            compare(&specs, &topos, 9, DEFAULT_PERIOD_MS, 1).unwrap();
+        let par =
+            compare(&specs, &topos, 9, DEFAULT_PERIOD_MS, 4).unwrap();
+        assert_eq!(serial.render(), par.render());
+        assert_eq!(serial.summary.to_csv(), par.summary.to_csv());
+        for (a, b) in serial.timelines.iter().zip(&par.timelines) {
+            assert_eq!(a.to_csv(), b.to_csv());
+        }
     }
 }

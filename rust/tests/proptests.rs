@@ -2,7 +2,7 @@
 //! state, batching of ring swaps, membership-state machine), using the
 //! in-tree prop framework (seeded, replayable).
 
-use dgro::graph::{apsp, components, diameter, ring::Ring};
+use dgro::graph::{apsp, components, diameter, eval::EvalPool, ring::Ring, Graph};
 use dgro::latency::Model;
 use dgro::membership::list::{MemberState, MembershipList};
 use dgro::prop::{ensure, ensure_close, forall, Config as PropConfig};
@@ -63,6 +63,77 @@ fn prop_diameter_monotone_under_edge_addition() {
         let d2 = diameter::diameter(&g2);
         ensure(d2 <= d1 + 1e-4, format!("{d1} -> {d2} after adding edges"))
     });
+}
+
+#[test]
+fn prop_parallel_eval_matches_serial_across_thread_counts() {
+    // The EvalPool entry points (apsp_par / diameter_par /
+    // diameter_with_seeds / diameter_batch) must return the serial
+    // values on random K-ring overlays for every pool width —
+    // parallelism changes the schedule, never the result.
+    forall(
+        "parallel eval equivalence",
+        PropConfig::default().cases(10),
+        |rng| {
+            let n = 8 + rng.index(56);
+            let w = random_model(rng).sample(n, rng);
+            let k = paper_k(n);
+            let g = kring::random_krings(n, k, rng).to_graph(&w);
+            let dm = apsp::apsp(&g);
+            let d_serial = diameter::diameter(&g) as f64;
+            let cands: Vec<Graph> = (0..3)
+                .map(|_| kring::random_krings(n, k, rng).to_graph(&w))
+                .collect();
+            let serial_batch: Vec<f32> =
+                cands.iter().map(diameter::diameter).collect();
+            let seeds: Vec<u32> =
+                (0..3).map(|_| rng.index(n) as u32).collect();
+            // The fixed sweep schedule makes the bounding diameter a
+            // pure function of (graph, seeds): one-worker reference
+            // values, which wider pools must reproduce bit-for-bit.
+            let d_ref = EvalPool::new(1).diameter_par(&g);
+            let ds_ref = EvalPool::new(1).diameter_with_seeds(&g, &seeds);
+            for &threads in &[1usize, 2, 8] {
+                let pool = EvalPool::new(threads);
+                let pm = pool.apsp_par(&g);
+                for i in 0..n * n {
+                    let (x, y) = (dm.d[i], pm.d[i]);
+                    ensure(
+                        x.to_bits() == y.to_bits(),
+                        format!("apsp[{i}]: {x} vs {y} T={threads}"),
+                    )?;
+                }
+                let tol = 1e-3 * d_serial.max(1.0);
+                let dp = pool.diameter_par(&g);
+                ensure_close(dp as f64, d_serial, tol)?;
+                ensure(
+                    dp.to_bits() == d_ref.to_bits(),
+                    format!("diameter_par {dp} vs {d_ref} T={threads}"),
+                )?;
+                let (ds, landmarks) = pool.diameter_with_seeds(&g, &seeds);
+                ensure_close(ds as f64, d_serial, tol)?;
+                ensure(
+                    ds.to_bits() == ds_ref.0.to_bits()
+                        && landmarks == ds_ref.1,
+                    format!("warm certification drifted at T={threads}"),
+                )?;
+                ensure(
+                    !landmarks.is_empty(),
+                    "connected overlay must yield landmarks",
+                )?;
+                let (dw, _) = pool.diameter_with_seeds(&g, &landmarks);
+                ensure_close(dw as f64, d_serial, tol)?;
+                let pb = pool.diameter_batch(&cands);
+                for (a, b) in serial_batch.iter().zip(&pb) {
+                    ensure(
+                        a.to_bits() == b.to_bits(),
+                        format!("batch: {a} vs {b} T={threads}"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

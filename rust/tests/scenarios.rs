@@ -3,8 +3,9 @@
 //! `compare` produces the DGRO-vs-baselines diameter-under-churn table.
 
 use dgro::scenario::compare::compare;
+use dgro::scenario::dynamics::LatencyEffect;
 use dgro::scenario::engine::{ScenarioEngine, ScenarioReport, Topology};
-use dgro::scenario::spec::{catalog, find};
+use dgro::scenario::spec::{catalog, find, ChurnSpec, ScenarioSpec};
 
 fn run(name: &str, topology: Topology, seed: u64) -> ScenarioReport {
     let engine = ScenarioEngine::new(find(name).unwrap(), seed).unwrap();
@@ -192,7 +193,7 @@ fn compare_tabulates_dgro_vs_baselines_across_the_catalog() {
     let specs = catalog();
     assert!(specs.len() >= 6);
     let topologies = [Topology::Dgro, Topology::Chord, Topology::Rapid];
-    let rep = compare(&specs, &topologies, 11, 250.0).unwrap();
+    let rep = compare(&specs, &topologies, 11, 250.0, 1).unwrap();
     assert_eq!(rep.summary.rows.len(), specs.len());
     assert_eq!(rep.summary.header.len(), 1 + topologies.len());
     assert_eq!(rep.timelines.len(), specs.len());
@@ -206,7 +207,64 @@ fn compare_tabulates_dgro_vs_baselines_across_the_catalog() {
     for spec in &specs {
         assert!(rendered.contains(&spec.name), "missing {}", spec.name);
     }
-    // Byte-identical on a re-run (the acceptance determinism bar).
-    let again = compare(&specs, &topologies, 11, 250.0).unwrap();
+    // Byte-identical on a re-run (the acceptance determinism bar) —
+    // including when the cross product fans out across threads.
+    let again = compare(&specs, &topologies, 11, 250.0, 4).unwrap();
     assert_eq!(rendered, again.render());
+}
+
+#[test]
+fn incremental_static_engine_matches_from_scratch_rebuild() {
+    // Churn-heavy: membership moves nearly every period, a flash crowd
+    // lands mid-run, and a degrade window forces latency rebuilds — the
+    // worst case for the incremental path's change tracking.
+    let spec = ScenarioSpec {
+        name: "churn-heavy-equality".into(),
+        about: "incremental vs rebuild regression".into(),
+        nodes: 40,
+        initial_alive: 36,
+        model: "uniform".into(),
+        horizon: 2000.0,
+        churn: vec![
+            ChurnSpec::Poisson { rate: 0.004 },
+            ChurnSpec::FlashCrowd {
+                first: 36,
+                count: 4,
+                at: 600.0,
+                over: 200.0,
+            },
+        ],
+        latency: vec![LatencyEffect::Degrade {
+            node: 3,
+            factor: 4.0,
+            start: 500.0,
+            end: 1200.0,
+        }],
+    };
+    for &threads in &[1usize, 4] {
+        let mut inc = ScenarioEngine::new(spec.clone(), 13).unwrap();
+        inc.threads = threads;
+        let mut scratch = ScenarioEngine::new(spec.clone(), 13).unwrap();
+        scratch.incremental = false;
+        for topo in [Topology::Chord, Topology::RandomKRing] {
+            let a = inc.run(topo).unwrap();
+            let b = scratch.run(topo).unwrap();
+            assert_eq!(a.rows.len(), b.rows.len());
+            for (x, y) in a.rows.iter().zip(&b.rows) {
+                assert_eq!(x.t, y.t);
+                assert_eq!(x.alive, y.alive, "t={}", x.t);
+                // Bit-equal ρ proves the rng stream did not drift.
+                assert_eq!(x.rho, y.rho, "t={}", x.t);
+                assert!(
+                    (x.diameter - y.diameter).abs()
+                        <= 1e-3 * y.diameter.max(1.0),
+                    "t={} threads={threads}: incremental {} vs \
+                     rebuild {}",
+                    x.t,
+                    x.diameter,
+                    y.diameter
+                );
+            }
+        }
+    }
 }
