@@ -8,6 +8,7 @@
 //!   * broadcast simulation
 //!   * GA evaluation throughput, serial vs batched-parallel
 //!   * scenario engine periods/s, from-scratch rebuild vs incremental
+//!   * coordinator periods/s, centralized vs sharded (K=8)
 //!
 //! Besides the stdout report, the run writes **BENCH_hotpath.json** to
 //! the working directory (repo root under `cargo bench`): the
@@ -334,6 +335,71 @@ fn main() -> anyhow::Result<()> {
         ("max_abs_diameter_diff", Json::num(scen_diff)),
     ]);
 
+    // --- Sharded vs centralized coordinator periods/s. ------------------
+    let sh_nodes = 512usize;
+    let shard_k = 8usize;
+    let sh_spec = ScenarioSpec {
+        name: "bench-sharded".into(),
+        about: "sharded-coordinator hotpath workload".into(),
+        nodes: sh_nodes,
+        initial_alive: sh_nodes,
+        model: "fabric".into(),
+        horizon: if quick { 1000.0 } else { 2000.0 },
+        churn: vec![ChurnSpec::Poisson { rate: 0.0005 }],
+        latency: vec![],
+    };
+    let mut central = ScenarioEngine::new(sh_spec.clone(), 7)?;
+    central.threads = threads;
+    let mut shard_eng = ScenarioEngine::new(sh_spec, 7)?;
+    shard_eng.threads = threads;
+    shard_eng.shards = shard_k;
+    let sh_iters = if quick { 1 } else { 2 };
+    let mut rep_c: Option<ScenarioReport> = None;
+    let mut rep_s: Option<ScenarioReport> = None;
+    let c_t = time_iters(0, sh_iters, || {
+        rep_c = Some(
+            central.run(Topology::Dgro).expect("centralized run"),
+        );
+    });
+    let s_t = time_iters(0, sh_iters, || {
+        rep_s = Some(
+            shard_eng
+                .run(Topology::DgroSharded)
+                .expect("sharded run"),
+        );
+    });
+    let rc = rep_c.expect("timed at least one centralized run");
+    let rs = rep_s.expect("timed at least one sharded run");
+    assert_eq!(
+        rc.rows.len(),
+        rs.rows.len(),
+        "centralized and sharded runs must cover the same periods"
+    );
+    let sh_periods = rc.rows.len() as f64;
+    report(
+        &format!("coordinator centralized n={sh_nodes}"),
+        &c_t,
+        Some(("periods", sh_periods)),
+    );
+    report(
+        &format!("coordinator sharded K={shard_k} n={sh_nodes} T={threads}"),
+        &s_t,
+        Some(("periods", sh_periods)),
+    );
+    let (ctm, stm) = (mean_s(&c_t), mean_s(&s_t));
+    let sharded_json = Json::obj(vec![
+        ("n", Json::num(sh_nodes as f64)),
+        ("shards", Json::num(shard_k as f64)),
+        ("periods", Json::num(sh_periods)),
+        ("centralized_ms", Json::num(ctm * 1e3)),
+        ("sharded_ms", Json::num(stm * 1e3)),
+        ("centralized_periods_per_s", Json::num(sh_periods / ctm)),
+        ("sharded_periods_per_s", Json::num(sh_periods / stm)),
+        ("speedup", Json::num(ctm / stm)),
+        ("mean_diameter_centralized", Json::num(rc.mean_diameter())),
+        ("mean_diameter_sharded", Json::num(rs.mean_diameter())),
+    ]);
+
     // --- Parallel construction. -----------------------------------------
     for m in [1usize, 8, 32] {
         let mut prng = Rng::new(3);
@@ -359,6 +425,7 @@ fn main() -> anyhow::Result<()> {
         ("diameter", Json::arr(diam_rows)),
         ("ga", ga_json),
         ("scenario", scenario_json),
+        ("sharded", sharded_json),
     ]);
     std::fs::write("BENCH_hotpath.json", out.to_string())?;
     println!("wrote BENCH_hotpath.json (threads={threads} quick={quick})");

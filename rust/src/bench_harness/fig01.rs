@@ -11,6 +11,7 @@ use crate::topology::{chord::Chord, perigee, rapid::Rapid, random_ring};
 use super::fig_baselines::dgro_adaptive;
 use super::runner::{sweep_diameters, Method, SweepConfig};
 
+/// Regenerate the figure: diameter vs network size for the base-ring comparison.
 pub fn run(cfg: &SweepConfig) -> Result<Vec<Table>> {
     let methods = vec![
         Method::new("chord", |w, rng| {

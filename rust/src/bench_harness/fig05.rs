@@ -22,6 +22,7 @@ fn methods() -> Vec<Method> {
     ]
 }
 
+/// Regenerate the figure under the given sweep configuration.
 pub fn run(cfg: &SweepConfig) -> Result<Vec<Table>> {
     Ok(vec![
         sweep_diameters(

@@ -37,6 +37,7 @@ pub fn ga_budget(quick: bool, full: bool) -> usize {
     }
 }
 
+/// Regenerate the GA-vs-DGRO comparison (`--full` restores the paper budget).
 pub fn run_opts(opts: crate::bench_harness::FigureOpts) -> Result<Vec<Table>> {
     let quick = opts.quick;
     let threads = opts.resolve_threads();

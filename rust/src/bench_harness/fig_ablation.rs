@@ -36,6 +36,7 @@ fn methods() -> Vec<Method> {
         .collect()
 }
 
+/// The synthetic-model instance (figure 12).
 pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     Ok(vec![
         sweep_diameters(
@@ -53,6 +54,7 @@ pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     ])
 }
 
+/// The FABRIC/Bitnode instance (figure 16).
 pub fn run_realistic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     Ok(vec![
         sweep_diameters(

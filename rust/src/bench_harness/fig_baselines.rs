@@ -45,6 +45,7 @@ fn methods() -> Vec<Method> {
     ]
 }
 
+/// The synthetic-model instance (figure 13).
 pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     Ok(vec![
         sweep_diameters(
@@ -62,6 +63,7 @@ pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     ])
 }
 
+/// The FABRIC/Bitnode instance (figure 17).
 pub fn run_realistic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     Ok(vec![
         sweep_diameters(

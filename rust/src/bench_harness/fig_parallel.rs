@@ -80,6 +80,7 @@ fn run_model(title: &str, model: Model, cfg: &SweepConfig) -> Result<Table> {
     Ok(table)
 }
 
+/// The synthetic-model instance (figure 14).
 pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     Ok(vec![
         run_model(
@@ -95,6 +96,7 @@ pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     ])
 }
 
+/// The FABRIC/Bitnode instance (figure 18).
 pub fn run_realistic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     Ok(vec![
         run_model(

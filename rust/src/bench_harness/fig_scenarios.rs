@@ -16,6 +16,7 @@ use crate::scenario::spec::catalog;
 /// reproducibility key.
 pub const SCENARIO_SEED: u64 = 20240711;
 
+/// Regenerate the scenario-catalog comparison ("figure 19").
 pub fn run_opts(opts: crate::bench_harness::FigureOpts) -> Result<Vec<Table>> {
     // Quick mode trims the baseline panel (Perigee and the random
     // K-ring are the slowest builders), not the catalog — every scenario

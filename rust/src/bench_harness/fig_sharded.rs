@@ -1,0 +1,116 @@
+//! "Figure 20" (beyond the paper): partition scaling of the sharded
+//! coordinator. The paper's §VI claim — partitioned ring construction
+//! matches the sequential diameter up to ~32 partitions — lifted to
+//! system level: the whole *coordinator* (membership, measurement,
+//! ρ-selection, re-anchoring) runs partition-local, and the table
+//! tracks the certified diameter and the adaptation throughput
+//! (periods/s) as the shard count K grows. Row K = 1 is the centralized
+//! coordinator, the parity reference; `diameter_vs_centralized` is the
+//! ratio the paper claims stays ≈ 1.
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::scenario::{ChurnSpec, ScenarioEngine, ScenarioSpec, Topology};
+
+use super::FigureOpts;
+
+/// The sweep workload: FABRIC-like clustered latencies and background
+/// Poisson churn, sized so even the largest shard count keeps ≥ 3
+/// members per shard.
+fn sweep_spec(n: usize, horizon: f64) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "sharded-scaling".into(),
+        about: "partition scaling sweep for fig 20".into(),
+        nodes: n,
+        initial_alive: n,
+        model: "fabric".into(),
+        horizon,
+        churn: vec![ChurnSpec::Poisson { rate: 0.0005 }],
+        latency: vec![],
+    }
+}
+
+/// Shard counts swept (K = 1 is the centralized reference).
+const SHARD_COUNTS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Regenerate the partition-scaling table.
+pub fn run_opts(opts: FigureOpts) -> Result<Vec<Table>> {
+    let n = if opts.quick { 96 } else { 256 };
+    let horizon = if opts.quick { 1000.0 } else { 3000.0 };
+    let spec = sweep_spec(n, horizon);
+    let mut table = Table::new(
+        "Fig 20: sharded coordinator partition scaling (fabric)",
+        &[
+            "shards",
+            "mean_diameter",
+            "final_diameter",
+            "swaps",
+            "periods_per_s",
+            "diameter_vs_centralized",
+        ],
+    );
+    let mut centralized_mean = 0.0f64;
+    for &k in &SHARD_COUNTS {
+        if n / k < 3 {
+            continue; // shard below the 3-member ring minimum
+        }
+        let mut engine = ScenarioEngine::new(spec.clone(), 7)?;
+        engine.threads = opts.resolve_threads();
+        engine.shards = k;
+        let topology = if k == 1 {
+            Topology::Dgro
+        } else {
+            Topology::DgroSharded
+        };
+        let t0 = std::time::Instant::now();
+        let rep = engine.run(topology)?;
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let mean_d = rep.mean_diameter();
+        if k == 1 {
+            centralized_mean = mean_d;
+        }
+        table.row(vec![
+            k as f64,
+            mean_d,
+            rep.final_diameter(),
+            rep.total_swaps() as f64,
+            rep.rows.len() as f64 / dt,
+            mean_d / centralized_mean.max(1e-9),
+        ]);
+    }
+    Ok(vec![table])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharded_scaling_table_shows_diameter_parity() {
+        let tables = run_opts(FigureOpts::quick_mode(true)).unwrap();
+        let t = &tables[0];
+        assert!(t.rows.len() >= 5, "sweep too short: {}", t.rows.len());
+        assert_eq!(t.rows[0][0], 1.0, "row 0 must be centralized");
+        for row in &t.rows {
+            assert!(
+                row.iter().all(|x| x.is_finite()),
+                "non-finite cell at K={}",
+                row[0]
+            );
+            assert!(row[1] > 0.0, "zero diameter at K={}", row[0]);
+            // The §VI parity claim, system level: sharding must stay in
+            // the centralized diameter ballpark through K=8 (the quick
+            // sweep runs tiny shards; the full sweep measures the real
+            // curve at n=256).
+            if row[0] <= 8.0 {
+                assert!(
+                    row[5] <= 2.5,
+                    "K={}: diameter ratio {} vs centralized",
+                    row[0],
+                    row[5]
+                );
+            }
+        }
+    }
+}

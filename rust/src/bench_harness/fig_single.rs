@@ -113,6 +113,7 @@ fn methods() -> Vec<Method> {
     ]
 }
 
+/// The synthetic-model instance (figure 11).
 pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     Ok(vec![
         sweep_diameters(
@@ -130,6 +131,7 @@ pub fn run_synthetic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     ])
 }
 
+/// The FABRIC/Bitnode instance (figure 15).
 pub fn run_realistic(cfg: &SweepConfig) -> Result<Vec<Table>> {
     Ok(vec![
         sweep_diameters(

@@ -17,6 +17,7 @@ pub mod fig_ablation; // figs 12 & 16
 pub mod fig_baselines; // figs 13 & 17
 pub mod fig_parallel; // figs 14 & 18
 pub mod fig_scenarios; // "fig 19": beyond-paper scenario catalog
+pub mod fig_sharded; // "fig 20": sharded-coordinator partition scaling
 pub mod fig_single; // figs 11 & 15
 pub mod runner;
 
@@ -47,6 +48,7 @@ impl FigureOpts {
         }
     }
 
+    /// `threads` with 0 resolved to the machine core count.
     pub fn resolve_threads(&self) -> usize {
         if self.threads == 0 {
             crate::graph::eval::EvalPool::default_threads()
@@ -82,13 +84,15 @@ pub fn run_figure_opts(fig: usize, opts: FigureOpts) -> Result<Vec<Table>> {
         17 => fig_baselines::run_realistic(&sweep),
         18 => fig_parallel::run_realistic(&sweep),
         19 => fig_scenarios::run_opts(opts),
+        20 => fig_sharded::run_opts(opts),
         other => anyhow::bail!(
             "no figure {other} (valid: 1,5,6,7,9,10,11-18 from the paper, \
-             19 = scenario catalog)"
+             19 = scenario catalog, 20 = sharded partition scaling)"
         ),
     }
 }
 
-/// All figure ids: paper order, then the beyond-paper scenario catalog.
-pub const ALL_FIGURES: [usize; 15] =
-    [1, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19];
+/// All figure ids: paper order, then the beyond-paper scenario catalog
+/// (19) and the sharded-coordinator partition scaling (20).
+pub const ALL_FIGURES: [usize; 16] =
+    [1, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20];

@@ -15,9 +15,13 @@ use crate::util::rng::Rng;
 /// Sweep parameters shared by all figures.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
+    /// Network sizes N swept.
     pub sizes: Vec<usize>,
+    /// Independent runs per size (averaged).
     pub runs: usize,
+    /// Base RNG seed; each (size, run) forks its own stream.
     pub seed: u64,
+    /// Trimmed CI mode (smaller sizes, fewer runs).
     pub quick: bool,
 }
 
@@ -53,11 +57,14 @@ impl SweepConfig {
 /// A named topology-building method measured by the sweeps: given the
 /// latency matrix and a per-run RNG, produce the overlay graph.
 pub struct Method {
+    /// Series label (becomes the table column).
     pub name: &'static str,
+    /// Overlay builder: latency matrix + per-run RNG -> graph.
     pub build: Box<dyn Fn(&LatencyMatrix, &mut Rng) -> Graph + Sync>,
 }
 
 impl Method {
+    /// Wrap a builder closure with its series label.
     pub fn new(
         name: &'static str,
         build: impl Fn(&LatencyMatrix, &mut Rng) -> Graph + Sync + 'static,

@@ -11,7 +11,9 @@ use anyhow::{bail, Result};
 /// Declaration of one flag.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {
+    /// Flag name (without the leading `--`).
     pub name: &'static str,
+    /// One-line help shown in usage.
     pub help: &'static str,
     /// None = boolean switch; Some(default) = value flag.
     pub default: Option<String>,
@@ -27,30 +29,36 @@ pub struct Args {
 }
 
 impl Args {
+    /// Value of a declared value flag (panics on undeclared names - a
+    /// programming error, not user input).
     pub fn get(&self, name: &str) -> &str {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("flag --{name} not declared"))
     }
 
+    /// [`Args::get`] parsed as usize, with a friendly error.
     pub fn get_usize(&self, name: &str) -> Result<usize> {
         let v = self.get(name);
         v.parse()
             .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'"))
     }
 
+    /// [`Args::get`] parsed as f64, with a friendly error.
     pub fn get_f64(&self, name: &str) -> Result<f64> {
         let v = self.get(name);
         v.parse()
             .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'"))
     }
 
+    /// [`Args::get`] parsed as u64, with a friendly error.
     pub fn get_u64(&self, name: &str) -> Result<u64> {
         let v = self.get(name);
         v.parse()
             .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'"))
     }
 
+    /// Whether a declared boolean switch was passed.
     pub fn switch(&self, name: &str) -> bool {
         *self
             .switches
@@ -61,12 +69,15 @@ impl Args {
 
 /// A subcommand parser.
 pub struct Command {
+    /// Subcommand name (after the binary name).
     pub name: &'static str,
+    /// One-line description for usage output.
     pub about: &'static str,
     flags: Vec<FlagSpec>,
 }
 
 impl Command {
+    /// Start declaring a subcommand.
     pub fn new(name: &'static str, about: &'static str) -> Command {
         Command {
             name,
@@ -100,6 +111,7 @@ impl Command {
         self
     }
 
+    /// Render the flag table for `--help`/unknown-flag errors.
     pub fn usage(&self) -> String {
         let mut s = format!("dgro {} — {}\n\nflags:\n", self.name, self.about);
         for f in &self.flags {

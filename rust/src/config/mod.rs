@@ -89,6 +89,7 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Load a config from a JSON file (unknown keys rejected).
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Config> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading config {:?}", path.as_ref()))?;
@@ -104,6 +105,7 @@ impl Config {
         }
     }
 
+    /// Check cross-field invariants (sizes, rates, known names).
     pub fn validate(&self) -> Result<()> {
         if self.nodes < 3 {
             bail!("nodes must be >= 3, got {}", self.nodes);

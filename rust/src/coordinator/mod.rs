@@ -3,7 +3,21 @@
 //! events (join / leave / crash), runs periodic gossip latency
 //! measurements, and adapts the ring mix per the ρ rule (§V), rebuilding
 //! rings in parallel (§VI) when the overlay drifts.
+//!
+//! Two implementations share the same event-loop interface
+//! ([`CoordinatorReport`], [`MembershipEvent`](crate::membership::MembershipEvent)
+//! routing, `run`/`run_dynamic`):
+//!
+//! * [`Coordinator`] — the centralized service: one membership table,
+//!   one K-ring overlay over the whole universe.
+//! * [`ShardedCoordinator`] — partition-local membership: the universe
+//!   is split into K latency-aware shards, each running DGRO ring
+//!   construction and ρ-selection on its own sub-overlay, stitched by
+//!   inter-shard anchor links chosen to minimize the certified global
+//!   diameter (see [`sharded`]).
 
 pub mod service;
+pub mod sharded;
 
 pub use service::{Coordinator, CoordinatorReport, ScorerKind};
+pub use sharded::{Shard, ShardedConfig, ShardedCoordinator};

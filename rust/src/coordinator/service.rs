@@ -29,12 +29,17 @@ use crate::util::rng::Rng;
 /// Which scorer backend the coordinator constructs rings with.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScorerKind {
+    /// AOT HLO artifacts executed via PJRT (feature-gated; falls back
+    /// to Native when artifacts are missing).
     Pjrt,
+    /// In-tree forward pass of the trained Q-net.
     Native,
+    /// Latency-greedy scoring (no learned model).
     Greedy,
 }
 
 impl ScorerKind {
+    /// Parse a CLI scorer name.
     pub fn parse(s: &str) -> Result<ScorerKind> {
         match s {
             "pjrt" => Ok(ScorerKind::Pjrt),
@@ -80,6 +85,33 @@ impl ScorerKind {
     }
 }
 
+/// The ring-swap policy shared by the centralized [`Coordinator`] and
+/// the sharded one ([`super::sharded::ShardedCoordinator`]): when moving
+/// toward Shortest, replace the longest ring (the most random-looking
+/// one); when moving toward Random, replace the shortest ring. "Ring
+/// randomness" is proxied by circumference — random rings are long,
+/// nearest-neighbour rings short.
+pub(crate) fn swap_slot(
+    krings: &KRing,
+    w: &LatencyMatrix,
+    choice: RingChoice,
+) -> usize {
+    let lengths: Vec<f32> =
+        krings.rings.iter().map(|r| r.length(w)).collect();
+    let (mut best, mut best_len) = (0usize, lengths[0]);
+    for (i, &len) in lengths.iter().enumerate() {
+        let better = match choice {
+            RingChoice::Shortest => len > best_len, // replace longest
+            _ => len < best_len,                    // replace shortest
+        };
+        if better {
+            best = i;
+            best_len = len;
+        }
+    }
+    best
+}
+
 /// Snapshot returned by [`Coordinator::run`].
 #[derive(Clone, Debug)]
 pub struct CoordinatorReport {
@@ -97,10 +129,15 @@ pub struct CoordinatorReport {
 
 /// The coordinator itself.
 pub struct Coordinator {
+    /// Shared runtime configuration.
     pub cfg: Config,
+    /// Physical latency matrix the overlay is scored against.
     pub w: LatencyMatrix,
+    /// The global membership table.
     pub membership: MembershipList,
+    /// The current K-ring overlay.
     pub krings: KRing,
+    /// Counters and per-period series for this run.
     pub metrics: Metrics,
     rng: Rng,
     scorer_kind: ScorerKind,
@@ -239,24 +276,7 @@ impl Coordinator {
     /// randomness" is proxied by its circumference (random rings are
     /// long, NN rings short).
     fn pick_swap_slot(&mut self, choice: RingChoice) -> usize {
-        let lengths: Vec<f32> = self
-            .krings
-            .rings
-            .iter()
-            .map(|r| r.length(&self.w))
-            .collect();
-        let (mut best, mut best_len) = (0usize, lengths[0]);
-        for (i, &len) in lengths.iter().enumerate() {
-            let better = match choice {
-                RingChoice::Shortest => len > best_len, // replace longest
-                _ => len < best_len,                    // replace shortest
-            };
-            if better {
-                best = i;
-                best_len = len;
-            }
-        }
-        best
+        swap_slot(&self.krings, &self.w, choice)
     }
 
     /// Rebuild one ring with the configured scorer + partitioning (used

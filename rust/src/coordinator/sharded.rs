@@ -1,0 +1,918 @@
+//! Sharded coordinator: partition-local membership + ring re-anchoring.
+//!
+//! The centralized [`Coordinator`](super::Coordinator) owns the whole
+//! overlay in one membership table — fine for hundreds of controllers,
+//! the single biggest blocker on the millions-of-members target. The
+//! paper's Algorithm 4 (§VI) already shows ring *construction* splits
+//! across partitions with no diameter loss up to ~32 of them; this
+//! module extends the split to the *ownership* of the overlay:
+//!
+//! * **Latency-aware partitioning** — the node universe is ordered by a
+//!   nearest-neighbour ring and cut into K contiguous segments with
+//!   [`crate::dgro::parallel::partition`] (Algorithm 4's splitter), so
+//!   each shard owns a latency-close neighbourhood.
+//! * **Partition-local membership** — every shard keeps its own
+//!   [`MembershipList`] over its members; membership events are routed
+//!   to the owning shard and never touch the others.
+//! * **Per-shard DGRO** — each shard runs Algorithm 3 gossip
+//!   measurement, the ρ decision (§V) and at-most-one ring swap per
+//!   period over its own sub-latency-matrix, concurrently across
+//!   [`crate::par::scoped_map`] workers. Per-shard RNG streams are
+//!   forked from the seed, so results are bit-identical across thread
+//!   counts.
+//! * **Ring re-anchoring** — shards are stitched into one overlay by
+//!   inter-shard anchor links: a cycle over the shards (consecutive
+//!   shards are latency-close by construction) plus halving chords,
+//!   each anchor chosen among the lowest-latency alive cross pairs and
+//!   refined to minimize the *certified* global diameter
+//!   ([`EvalPool::diameter_with_seeds`], warm-started from the previous
+//!   round's landmarks). Membership churn, latency updates and ring
+//!   swaps mark the stitching dirty; clean periods reuse it outright.
+//!
+//! The sharded coordinator speaks the same
+//! [`MembershipEvent`]/[`CoordinatorReport`] interfaces as the
+//! centralized one, so the scenario engine drives both unchanged
+//! (`dgro scenario run|compare --shards K`) and
+//! `rust/tests/sharded.rs` pins diameter parity at K ∈ {1, 4, 8}.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::coordinator::service::swap_slot;
+use crate::coordinator::CoordinatorReport;
+use crate::dgro::parallel::partition;
+use crate::dgro::select::{decide, materialize, RingChoice, SelectConfig};
+use crate::gossip::measure::{measure, MeasureConfig};
+use crate::graph::eval::EvalPool;
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+use crate::membership::events::{EventTrace, MembershipEvent};
+use crate::membership::list::{MemberState, MembershipList};
+use crate::metrics::Metrics;
+use crate::topology::kring::KRing;
+use crate::topology::{random_ring, shortest_ring};
+use crate::util::rng::Rng;
+
+/// Knobs of the sharded coordinator (everything else comes from the
+/// shared [`Config`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedConfig {
+    /// Number of partitions K (each must end up with ≥ 3 members).
+    pub shards: usize,
+    /// Worker threads for the per-period shard adaptation fan-out and
+    /// the certified-diameter pool (1 = serial; never changes results).
+    pub threads: usize,
+    /// Candidate anchor pairs examined per shard boundary when
+    /// re-anchoring (1 = pure lowest-latency stitching, no
+    /// certified-diameter refinement).
+    pub anchor_candidates: usize,
+}
+
+impl ShardedConfig {
+    /// K shards, serial, with the default refinement budget.
+    pub fn new(shards: usize) -> ShardedConfig {
+        ShardedConfig {
+            shards,
+            threads: 1,
+            anchor_candidates: 3,
+        }
+    }
+}
+
+/// One partition: a latency-close slice of the universe with its own
+/// membership table, its own K-ring overlay and its own RNG stream.
+pub struct Shard {
+    /// Global node ids owned by this shard, in latency-aware ring order.
+    pub members: Vec<u32>,
+    /// Partition-local membership table (keys are global node ids).
+    pub membership: MembershipList,
+    /// The shard's ring mix, over *local* indices `0..members.len()`.
+    pub krings: KRing,
+    /// Shard-local latency view (sub-matrix of the global one).
+    sub_w: LatencyMatrix,
+    /// Per-shard RNG stream, forked off the coordinator seed.
+    rng: Rng,
+    /// ρ from the last adaptation period.
+    rho: f64,
+    /// Gossip messages spent in the last period.
+    messages: usize,
+    /// Whether the last period swapped a ring.
+    swapped: bool,
+}
+
+impl Shard {
+    fn new(
+        members: Vec<u32>,
+        w: &LatencyMatrix,
+        k: usize,
+        mut rng: Rng,
+    ) -> Shard {
+        let s = members.len();
+        debug_assert!(s >= 3, "shard needs >= 3 members");
+        let mut membership = MembershipList::new();
+        for &m in &members {
+            membership.apply(m, MemberState::Alive, 0, 0.0);
+        }
+        let sub_w = LatencyMatrix::from_fn(s, |a, b| {
+            w.get(members[a] as usize, members[b] as usize)
+        });
+        let krings = KRing::new(
+            (0..k).map(|_| random_ring(s, &mut rng)).collect(),
+        );
+        Shard {
+            members,
+            membership,
+            krings,
+            sub_w,
+            rng,
+            rho: 0.5,
+            messages: 0,
+            swapped: false,
+        }
+    }
+
+    /// Rebuild the shard-local latency view from an updated global
+    /// matrix.
+    fn refresh_latency(&mut self, w: &LatencyMatrix) {
+        let members = &self.members;
+        self.sub_w = LatencyMatrix::from_fn(members.len(), |a, b| {
+            w.get(members[a] as usize, members[b] as usize)
+        });
+    }
+
+    /// Alive members (global ids, ascending — the membership table is
+    /// BTreeMap-backed, so this is deterministic).
+    fn alive(&self) -> Vec<u32> {
+        self.membership.alive().collect()
+    }
+
+    /// One adaptation period on this shard alone: Algorithm 3 gossip
+    /// measurement on the shard sub-overlay, the ρ decision, at most one
+    /// ring swap (the same bounded-churn policy as the centralized
+    /// coordinator, via [`swap_slot`]).
+    fn adapt_once(&mut self, select: SelectConfig, mcfg: MeasureConfig) {
+        let g = self.krings.to_graph(&self.sub_w);
+        let stats = measure(&self.sub_w, &g, mcfg, &mut self.rng);
+        self.rho = stats.rho();
+        self.messages = stats.messages;
+        self.swapped = false;
+        let choice = decide(&stats, select);
+        match choice {
+            RingChoice::Keep => {}
+            choice => {
+                let start = self.rng.index(self.sub_w.n());
+                if let Some(ring) =
+                    materialize(choice, &self.sub_w, start, &mut self.rng)
+                {
+                    let slot = swap_slot(&self.krings, &self.sub_w, choice);
+                    self.krings.replace(slot, ring);
+                    self.swapped = true;
+                }
+            }
+        }
+    }
+}
+
+/// The sharded coordinator: K [`Shard`]s plus the anchor links that
+/// stitch them into one overlay. Same event-loop interface as the
+/// centralized [`Coordinator`](super::Coordinator).
+pub struct ShardedCoordinator {
+    /// Shared runtime configuration (seed, ε, gossip budget, cadence).
+    pub cfg: Config,
+    /// Sharding knobs.
+    pub opts: ShardedConfig,
+    /// Global latency matrix (shards hold sub-views of it).
+    pub w: LatencyMatrix,
+    /// The partitions.
+    pub shards: Vec<Shard>,
+    /// Metrics registry (same series names as the centralized
+    /// coordinator, plus `shard.*`).
+    pub metrics: Metrics,
+    /// node id -> owning shard index.
+    owner: Vec<usize>,
+    /// Current inter-shard anchor links (global ids).
+    anchors: Vec<(u32, u32)>,
+    /// Certified-diameter pool for stitching refinement and reporting.
+    pool: EvalPool,
+    /// Warm-start landmarks for the alive-overlay diameter.
+    alive_landmarks: Vec<u32>,
+    /// Warm-start landmarks for the full-overlay diameter.
+    full_landmarks: Vec<u32>,
+    /// Set when membership, latency or a ring swap invalidated the
+    /// current stitching.
+    dirty: bool,
+    /// Per-shard staleness: shard `i` saw a membership change or ring
+    /// swap since the last re-stitch, so only boundaries incident to a
+    /// stale shard need re-picking.
+    shard_dirty: Vec<bool>,
+    /// Redo every boundary: set at construction and on latency updates
+    /// (which re-weight every candidate pair at once).
+    stitch_all: bool,
+}
+
+impl ShardedCoordinator {
+    /// Bootstrap: sample the configured latency model, partition, and
+    /// stitch the initial overlay.
+    pub fn new(cfg: Config, opts: ShardedConfig) -> Result<ShardedCoordinator> {
+        cfg.validate()?;
+        let mut rng = Rng::new(cfg.seed);
+        let model = crate::latency::Model::parse(&cfg.model)
+            .ok_or_else(|| anyhow::anyhow!("bad model {}", cfg.model))?;
+        let w = model.sample(cfg.nodes, &mut rng);
+        ShardedCoordinator::with_latency(cfg, w, opts)
+    }
+
+    /// Bootstrap over an externally supplied latency matrix (the
+    /// scenario engine's entry point, mirroring
+    /// [`Coordinator::with_latency`](super::Coordinator::with_latency)).
+    pub fn with_latency(
+        cfg: Config,
+        w: LatencyMatrix,
+        opts: ShardedConfig,
+    ) -> Result<ShardedCoordinator> {
+        cfg.validate()?;
+        if w.n() != cfg.nodes {
+            bail!(
+                "latency matrix has {} nodes but cfg.nodes = {}",
+                w.n(),
+                cfg.nodes
+            );
+        }
+        if opts.shards == 0 {
+            bail!("shards must be >= 1");
+        }
+        if cfg.nodes / opts.shards < 3 {
+            bail!(
+                "{} nodes across {} shards leaves a shard below 3 \
+                 members (rings need >= 3)",
+                cfg.nodes,
+                opts.shards
+            );
+        }
+        let mut rng = Rng::new(cfg.seed);
+        // Latency-aware partitioning: order the universe by a
+        // nearest-neighbour ring, then cut it into K contiguous
+        // segments with Algorithm 4's splitter — each shard owns a
+        // latency-close neighbourhood, and consecutive shards are
+        // adjacent along the NN tour (which is what makes the cyclic
+        // stitching below cheap).
+        let base = shortest_ring(&w, rng.index(cfg.nodes));
+        let parts = partition(base.order(), opts.shards);
+        let k = cfg.effective_k();
+        let shards: Vec<Shard> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, members)| {
+                let srng = rng.fork(0x5AAD + i as u64);
+                Shard::new(members, &w, k, srng)
+            })
+            .collect();
+        let mut owner = vec![0usize; cfg.nodes];
+        for (i, shard) in shards.iter().enumerate() {
+            for &m in &shard.members {
+                owner[m as usize] = i;
+            }
+        }
+        let pool = EvalPool::new(opts.threads.max(1));
+        let shard_dirty = vec![false; opts.shards];
+        let mut co = ShardedCoordinator {
+            cfg,
+            opts,
+            w,
+            shards,
+            metrics: Metrics::new(),
+            owner,
+            anchors: Vec::new(),
+            pool,
+            alive_landmarks: Vec::new(),
+            full_landmarks: Vec::new(),
+            dirty: false,
+            shard_dirty,
+            stitch_all: true,
+        };
+        co.re_anchor();
+        Ok(co)
+    }
+
+    /// Number of partitions.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning `node` (None if the id is outside the universe).
+    pub fn shard_of(&self, node: u32) -> Option<usize> {
+        self.owner.get(node as usize).copied()
+    }
+
+    /// Current inter-shard anchor links (global node ids).
+    pub fn anchors(&self) -> &[(u32, u32)] {
+        &self.anchors
+    }
+
+    /// Total members across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.membership.len()).sum()
+    }
+
+    /// True when the universe is empty (it never is after construction).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Alive members across all shards.
+    pub fn alive_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.membership.count_state(MemberState::Alive))
+            .sum()
+    }
+
+    /// Swap in an updated latency matrix; every shard refreshes its
+    /// sub-view and the stitching is marked dirty.
+    pub fn set_latency(&mut self, w: LatencyMatrix) -> Result<()> {
+        if w.n() != self.w.n() {
+            bail!(
+                "latency update has {} nodes, overlay has {}",
+                w.n(),
+                self.w.n()
+            );
+        }
+        for shard in &mut self.shards {
+            shard.refresh_latency(&w);
+        }
+        self.w = w;
+        self.dirty = true;
+        self.stitch_all = true;
+        self.metrics.incr("latency.updates", 1);
+        Ok(())
+    }
+
+    /// Route one membership event to its owning shard's table.
+    pub fn apply_event(&mut self, ev: &MembershipEvent) {
+        let (node, counter) = match ev {
+            MembershipEvent::Join { node, .. } => (*node, "membership.joins"),
+            MembershipEvent::Leave { node, .. } => {
+                (*node, "membership.leaves")
+            }
+            MembershipEvent::Crash { node, .. } => {
+                (*node, "membership.crashes")
+            }
+        };
+        let Some(&shard) = self.owner.get(node as usize) else {
+            return; // outside the universe: drop, like a stale packet
+        };
+        if self.shards[shard].membership.apply_trace_event(ev) {
+            self.dirty = true;
+            self.shard_dirty[shard] = true;
+        }
+        self.metrics.incr(counter, 1);
+    }
+
+    /// The full stitched overlay: every shard's rings (all members,
+    /// crashed included — same view as the centralized coordinator's
+    /// `overlay()`) plus the anchor links.
+    pub fn overlay(&self) -> Graph {
+        let n = self.w.n();
+        let mut g = Graph::empty(n);
+        for shard in &self.shards {
+            for ring in &shard.krings.rings {
+                for (lu, lv) in ring.edges() {
+                    let u = shard.members[lu as usize] as usize;
+                    let v = shard.members[lv as usize] as usize;
+                    g.add_edge(u, v, self.w.get(u, v));
+                }
+            }
+        }
+        for &(u, v) in &self.anchors {
+            g.add_edge(u as usize, v as usize, self.w.get(u as usize, v as usize));
+        }
+        g
+    }
+
+    /// The stitched overlay restricted to alive members (faulty nodes do
+    /// not relay).
+    pub fn alive_overlay(&self) -> Graph {
+        let alive = self.alive_set();
+        self.alive_overlay_with(&self.anchors, &alive)
+    }
+
+    fn alive_set(&self) -> HashSet<u32> {
+        let mut set = HashSet::new();
+        for shard in &self.shards {
+            set.extend(shard.membership.alive());
+        }
+        set
+    }
+
+    /// The shard-ring edges restricted to alive members, with no anchor
+    /// links — the invariant part of every trial overlay the
+    /// re-anchoring refinement evaluates (built once per re-stitch,
+    /// cloned per candidate).
+    fn alive_ring_graph(&self, alive: &HashSet<u32>) -> Graph {
+        let n = self.w.n();
+        let mut g = Graph::empty(n);
+        for shard in &self.shards {
+            for ring in &shard.krings.rings {
+                for (lu, lv) in ring.edges() {
+                    let u = shard.members[lu as usize];
+                    let v = shard.members[lv as usize];
+                    if alive.contains(&u) && alive.contains(&v) {
+                        g.add_edge(
+                            u as usize,
+                            v as usize,
+                            self.w.get(u as usize, v as usize),
+                        );
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    /// Add the anchor links whose endpoints are alive to `g`.
+    fn add_alive_anchors(
+        &self,
+        g: &mut Graph,
+        anchors: &[(u32, u32)],
+        alive: &HashSet<u32>,
+    ) {
+        for &(u, v) in anchors {
+            if alive.contains(&u) && alive.contains(&v) {
+                g.add_edge(
+                    u as usize,
+                    v as usize,
+                    self.w.get(u as usize, v as usize),
+                );
+            }
+        }
+    }
+
+    /// Alive sub-overlay under a *trial* anchor set.
+    fn alive_overlay_with(
+        &self,
+        anchors: &[(u32, u32)],
+        alive: &HashSet<u32>,
+    ) -> Graph {
+        let mut g = self.alive_ring_graph(alive);
+        self.add_alive_anchors(&mut g, anchors, alive);
+        g
+    }
+
+    /// The `count` lowest-latency cross pairs between two member sets
+    /// (deterministic: ties break on node ids).
+    fn top_pairs(
+        &self,
+        from: &[u32],
+        to: &[u32],
+        count: usize,
+    ) -> Vec<(u32, u32)> {
+        let mut pairs: Vec<(f32, u32, u32)> =
+            Vec::with_capacity(from.len() * to.len());
+        for &u in from {
+            for &v in to {
+                pairs.push((self.w.get(u as usize, v as usize), u, v));
+            }
+        }
+        pairs.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .expect("finite latency")
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        pairs.truncate(count.max(1));
+        pairs.into_iter().map(|(_, u, v)| (u, v)).collect()
+    }
+
+    /// Recompute the inter-shard anchor links over the current alive
+    /// set. Called automatically whenever a period found the stitching
+    /// dirty (membership event, latency update or ring swap); public so
+    /// tests and tools can force a re-stitch.
+    ///
+    /// Structure: a cycle over all K shards in partition order
+    /// (latency-adjacent by construction) plus halving chords when
+    /// K ≥ 5, which bounds the shard-graph diameter at ~K/4 hops. Every
+    /// anchor starts as the lowest-latency cross pair — alive×alive when
+    /// both sides have alive members, any×any otherwise, so the *full*
+    /// overlay never strands a partition. When
+    /// [`ShardedConfig::anchor_candidates`] > 1, one coordinate-descent
+    /// pass then re-picks each anchor among its candidates to minimize
+    /// the certified alive-overlay diameter
+    /// ([`EvalPool::diameter_with_seeds`], warm-started from the
+    /// previous evaluation's landmarks).
+    ///
+    /// Staleness is per shard: only boundaries incident to a shard that
+    /// saw a membership change or ring swap since the last stitch are
+    /// re-picked (a kept boundary's endpoints are provably still alive —
+    /// both its shards are unchanged). Latency updates and the first
+    /// stitch refresh every boundary.
+    pub fn re_anchor(&mut self) {
+        let ks = self.shards.len();
+        self.dirty = false;
+        if ks <= 1 {
+            self.anchors = Vec::new();
+            self.stitch_all = false;
+            return;
+        }
+        // Per-shard anchorable sets: alive members, falling back to the
+        // full member list for all-dead shards (the full overlay must
+        // stay stitched; the alive view filters those links out).
+        let sets: Vec<Vec<u32>> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let alive = s.alive();
+                if alive.is_empty() {
+                    s.members.clone()
+                } else {
+                    alive
+                }
+            })
+            .collect();
+        // Shard-graph boundaries: the cycle, then halving chords.
+        let mut bounds: Vec<(usize, usize)> = Vec::new();
+        if ks == 2 {
+            bounds.push((0, 1));
+        } else {
+            for i in 0..ks {
+                bounds.push((i, (i + 1) % ks));
+            }
+            if ks >= 5 {
+                let h = ks / 2;
+                for i in 0..h {
+                    bounds.push((i, (i + h) % ks));
+                }
+            }
+        }
+        // Which boundaries need re-picking: all of them on the first
+        // stitch / after a latency update, else only those incident to
+        // a stale shard.
+        let full = self.stitch_all || self.anchors.len() != bounds.len();
+        let refresh: Vec<bool> = bounds
+            .iter()
+            .map(|&(a, b)| {
+                full || self.shard_dirty[a] || self.shard_dirty[b]
+            })
+            .collect();
+        let cands: Vec<Vec<(u32, u32)>> = bounds
+            .iter()
+            .enumerate()
+            .map(|(i, &(a, b))| {
+                if refresh[i] {
+                    self.top_pairs(
+                        &sets[a],
+                        &sets[b],
+                        self.opts.anchor_candidates,
+                    )
+                } else {
+                    vec![self.anchors[i]] // kept as is
+                }
+            })
+            .collect();
+        // Seed: lowest-latency pick on refreshed boundaries, the
+        // previous anchor elsewhere.
+        let mut anchors: Vec<(u32, u32)> =
+            cands.iter().map(|c| c[0]).collect();
+        // Refinement: one coordinate-descent pass over the refreshed
+        // boundaries minimizing the certified alive diameter,
+        // warm-started across evaluations. The ring-only alive graph is
+        // invariant across trials, so it is built once and cloned.
+        if self.opts.anchor_candidates > 1 {
+            let alive = self.alive_set();
+            let base = self.alive_ring_graph(&alive);
+            for (bi, c) in cands.iter().enumerate() {
+                if !refresh[bi] || c.len() < 2 {
+                    continue;
+                }
+                let mut best = (f32::INFINITY, c[0]);
+                for &cand in c {
+                    anchors[bi] = cand;
+                    let mut g = base.clone();
+                    self.add_alive_anchors(&mut g, &anchors, &alive);
+                    let (d, lm) = self
+                        .pool
+                        .diameter_with_seeds(&g, &self.alive_landmarks);
+                    self.alive_landmarks = lm;
+                    if d < best.0 {
+                        best = (d, cand);
+                    }
+                }
+                anchors[bi] = best.1;
+            }
+        }
+        self.anchors = anchors;
+        for d in &mut self.shard_dirty {
+            *d = false;
+        }
+        self.stitch_all = false;
+        self.metrics.incr("shard.reanchors", 1);
+    }
+
+    /// One adaptation period across all shards, fanned out over
+    /// [`ShardedConfig::threads`] workers. Returns (mean ρ across
+    /// shards, ring swaps this period). Results are identical for every
+    /// thread count: each shard's RNG stream is its own.
+    pub fn adapt_once(&mut self) -> (f64, u64) {
+        let select = SelectConfig {
+            epsilon: self.cfg.epsilon,
+        };
+        let mcfg = MeasureConfig {
+            samples: self.cfg.gossip_samples,
+            rounds: self.cfg.gossip_rounds,
+        };
+        let shards = std::mem::take(&mut self.shards);
+        let threads = self.opts.threads.max(1).min(shards.len());
+        self.shards = if threads > 1 {
+            crate::par::scoped_map(shards, threads, move |_, mut s: Shard| {
+                s.adapt_once(select, mcfg);
+                s
+            })
+        } else {
+            shards
+                .into_iter()
+                .map(|mut s| {
+                    s.adapt_once(select, mcfg);
+                    s
+                })
+                .collect()
+        };
+        let mut rho_sum = 0.0f64;
+        let mut swaps = 0u64;
+        let mut messages = 0u64;
+        for (i, s) in self.shards.iter().enumerate() {
+            rho_sum += s.rho;
+            swaps += u64::from(s.swapped);
+            messages += s.messages as u64;
+            if s.swapped {
+                self.shard_dirty[i] = true;
+            }
+        }
+        if swaps > 0 {
+            self.dirty = true;
+            self.metrics.incr("rings.swapped", swaps);
+        }
+        self.metrics.incr("gossip.messages", messages);
+        (rho_sum / self.shards.len() as f64, swaps)
+    }
+
+    /// Run over a membership trace for `horizon` sim-time (static
+    /// latency), adapting every `cfg.adapt_period_ms`.
+    pub fn run(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+    ) -> Result<CoordinatorReport> {
+        self.run_dynamic(trace, horizon, |_| None)
+    }
+
+    /// Run with a time-varying latency view — the scenario-engine entry
+    /// point, interface-compatible with
+    /// [`Coordinator::run_dynamic`](super::Coordinator::run_dynamic):
+    /// per period the metrics registry records `overlay.diameter`,
+    /// `overlay.rho` (mean of the partition-local ρ's), `overlay.alive`,
+    /// `overlay.alive_diameter`, `rings.swaps_per_period` and
+    /// `shard.anchor_links`. Reported diameters are *certified* — the
+    /// warm-started bounding algorithm of
+    /// [`EvalPool::diameter_with_seeds`], exact within its ~1e-6
+    /// certification tolerance.
+    pub fn run_dynamic(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+        mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+    ) -> Result<CoordinatorReport> {
+        let (d0, lm0) =
+            self.pool.diameter_with_seeds(&self.overlay(), &[]);
+        self.full_landmarks = lm0;
+        let initial_diameter = d0;
+        let mut timeline = Vec::new();
+        let mut total_swaps = 0u64;
+        let mut t = 0.0;
+        let mut ev_idx = 0;
+        let mut alive_d = 0.0f64;
+        let mut alive_d_fresh = false;
+        while t < horizon {
+            t += self.cfg.adapt_period_ms;
+            if let Some(w) = latency_at(t) {
+                self.set_latency(w)?;
+                alive_d_fresh = false;
+            }
+            let mut applied = 0u64;
+            while ev_idx < trace.events.len()
+                && trace.events[ev_idx].time() <= t
+            {
+                let ev = trace.events[ev_idx];
+                self.apply_event(&ev);
+                ev_idx += 1;
+                applied += 1;
+            }
+            let (rho, swaps) = self.adapt_once();
+            total_swaps += swaps;
+            if self.dirty {
+                self.re_anchor();
+                alive_d_fresh = false;
+            }
+            let (d, lm) = self
+                .pool
+                .diameter_with_seeds(&self.overlay(), &self.full_landmarks);
+            self.full_landmarks = lm;
+            self.metrics.observe("overlay.diameter", d as f64);
+            self.metrics.observe("overlay.rho", rho);
+            let alive_cnt = self.alive_count();
+            // Same shortcut as the centralized loop: with everyone
+            // alive, the alive sub-overlay IS the overlay.
+            if alive_cnt == self.len() {
+                alive_d = d as f64;
+            } else if !alive_d_fresh {
+                let (ad, alm) = self.pool.diameter_with_seeds(
+                    &self.alive_overlay(),
+                    &self.alive_landmarks,
+                );
+                self.alive_landmarks = alm;
+                alive_d = ad as f64;
+            }
+            alive_d_fresh = true;
+            self.metrics.observe("overlay.alive", alive_cnt as f64);
+            self.metrics.observe("overlay.alive_diameter", alive_d);
+            self.metrics
+                .observe("rings.swaps_per_period", swaps as f64);
+            self.metrics
+                .observe("shard.anchor_links", self.anchors.len() as f64);
+            self.metrics.incr("membership.events_applied", applied);
+            timeline.push((t, rho, d));
+        }
+        Ok(CoordinatorReport {
+            final_diameter: timeline
+                .last()
+                .map(|&(_, _, d)| d)
+                .unwrap_or(initial_diameter),
+            initial_diameter,
+            swaps: total_swaps as usize,
+            alive: self.alive_count(),
+            timeline,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components;
+
+    fn cfg(model: &str, nodes: usize) -> Config {
+        let mut c = Config::default();
+        c.model = model.to_string();
+        c.nodes = nodes;
+        c.scorer = "greedy".to_string();
+        c.adapt_period_ms = 250.0;
+        c
+    }
+
+    #[test]
+    fn partitions_cover_the_universe_disjointly() {
+        let co = ShardedCoordinator::new(
+            cfg("fabric", 64),
+            ShardedConfig::new(8),
+        )
+        .unwrap();
+        assert_eq!(co.shard_count(), 8);
+        let mut seen = std::collections::BTreeSet::new();
+        for shard in &co.shards {
+            assert!(shard.members.len() >= 3);
+            for &m in &shard.members {
+                assert!(seen.insert(m), "node {m} owned twice");
+            }
+        }
+        assert_eq!(seen.len(), 64);
+        for node in 0..64u32 {
+            let s = co.shard_of(node).unwrap();
+            assert!(co.shards[s].members.contains(&node));
+        }
+    }
+
+    #[test]
+    fn stitched_overlay_is_connected() {
+        for shards in [1usize, 2, 4, 8] {
+            let co = ShardedCoordinator::new(
+                cfg("uniform", 48),
+                ShardedConfig::new(shards),
+            )
+            .unwrap();
+            let g = co.overlay();
+            assert!(
+                components::is_connected(&g),
+                "K={shards}: stitched overlay disconnected"
+            );
+            if shards == 1 {
+                assert!(co.anchors().is_empty());
+            } else {
+                assert!(!co.anchors().is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_too_many_shards() {
+        let err = ShardedCoordinator::new(
+            cfg("uniform", 10),
+            ShardedConfig::new(4),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("below 3"), "{err}");
+    }
+
+    #[test]
+    fn events_route_to_the_owning_shard_only() {
+        let mut co = ShardedCoordinator::new(
+            cfg("uniform", 24),
+            ShardedConfig::new(4),
+        )
+        .unwrap();
+        let victim = 7u32;
+        let s = co.shard_of(victim).unwrap();
+        let before: Vec<usize> = co
+            .shards
+            .iter()
+            .map(|sh| sh.membership.count_state(MemberState::Alive))
+            .collect();
+        co.apply_event(&MembershipEvent::Crash {
+            time: 1.0,
+            node: victim,
+        });
+        for (i, sh) in co.shards.iter().enumerate() {
+            let alive = sh.membership.count_state(MemberState::Alive);
+            if i == s {
+                assert_eq!(alive, before[i] - 1);
+            } else {
+                assert_eq!(alive, before[i], "shard {i} perturbed");
+            }
+        }
+        assert_eq!(co.alive_count(), 23);
+        // The crashed node relays nothing in the alive view.
+        assert_eq!(co.alive_overlay().degree(victim as usize), 0);
+    }
+
+    #[test]
+    fn run_produces_aligned_timeline_and_metrics() {
+        let mut co = ShardedCoordinator::new(
+            cfg("fabric", 60),
+            ShardedConfig::new(4),
+        )
+        .unwrap();
+        let mut rng = Rng::new(5);
+        let trace = EventTrace::churn(60, 1000.0, 0.001, &mut rng);
+        let rep = co.run(&trace, 1000.0).unwrap();
+        assert_eq!(rep.timeline.len(), 4);
+        for s in [
+            "overlay.diameter",
+            "overlay.rho",
+            "overlay.alive",
+            "overlay.alive_diameter",
+            "rings.swaps_per_period",
+            "shard.anchor_links",
+        ] {
+            assert_eq!(
+                co.metrics.series(s).unwrap().values.len(),
+                4,
+                "series {s}"
+            );
+        }
+        assert!(rep.final_diameter.is_finite());
+        assert!(rep.alive <= 60);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_run() {
+        let trace = EventTrace::default();
+        let mut reports = Vec::new();
+        for threads in [1usize, 4] {
+            let mut opts = ShardedConfig::new(4);
+            opts.threads = threads;
+            let mut co =
+                ShardedCoordinator::new(cfg("fabric", 48), opts).unwrap();
+            let rep = co.run(&trace, 1000.0).unwrap();
+            reports.push((rep.timeline, co.metrics.report()));
+        }
+        assert_eq!(reports[0].0, reports[1].0, "timelines differ");
+        assert_eq!(reports[0].1, reports[1].1, "metrics differ");
+    }
+
+    #[test]
+    fn re_anchor_falls_back_to_dead_shards_for_the_full_view() {
+        let mut co = ShardedCoordinator::new(
+            cfg("uniform", 24),
+            ShardedConfig::new(4),
+        )
+        .unwrap();
+        // Kill every member of shard 2: the alive view loses it, but the
+        // full overlay must stay stitched through the fallback anchors.
+        let victims = co.shards[2].members.clone();
+        for &v in &victims {
+            co.apply_event(&MembershipEvent::Crash { time: 1.0, node: v });
+        }
+        co.re_anchor();
+        assert!(components::is_connected(&co.overlay()));
+    }
+}

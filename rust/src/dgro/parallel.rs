@@ -19,6 +19,7 @@ use crate::qnet::QScorer;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug)]
+/// Knobs of Algorithm 4.
 pub struct ParallelConfig {
     /// Number of partitions M.
     pub partitions: usize,
@@ -27,6 +28,7 @@ pub struct ParallelConfig {
 }
 
 impl ParallelConfig {
+    /// M partitions, one thread each.
     pub fn new(partitions: usize) -> ParallelConfig {
         ParallelConfig {
             partitions,

@@ -35,6 +35,7 @@ pub enum RingChoice {
 }
 
 #[derive(Clone, Copy, Debug)]
+/// Knobs of the SS-V decision rule.
 pub struct SelectConfig {
     /// The ε band half-width.
     pub epsilon: f64,

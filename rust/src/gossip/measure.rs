@@ -13,6 +13,7 @@ use crate::latency::LatencyMatrix;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug)]
+/// Knobs of Algorithm 3.
 pub struct MeasureConfig {
     /// Samples per node (the paper's K).
     pub samples: usize,

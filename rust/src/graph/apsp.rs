@@ -11,16 +11,20 @@ use std::collections::BinaryHeap;
 
 use super::Graph;
 
+/// Unreachable-pair distance marker.
 pub const INF: f32 = f32::INFINITY;
 
 /// Dense all-pairs distance matrix, row-major. `INF` = unreachable.
 #[derive(Clone, Debug)]
 pub struct DistMatrix {
+    /// Number of nodes (the matrix is n x n).
     pub n: usize,
+    /// Row-major distances; `d[u * n + v]` = dist(u, v).
     pub d: Vec<f32>,
 }
 
 impl DistMatrix {
+    /// An all-[`INF`] matrix with a zero diagonal (SSSP fills the rest).
     pub fn new_empty(n: usize) -> DistMatrix {
         let mut d = vec![INF; n * n];
         for i in 0..n {
@@ -30,15 +34,18 @@ impl DistMatrix {
     }
 
     #[inline]
+    /// Distance from `u` to `v`.
     pub fn get(&self, u: usize, v: usize) -> f32 {
         self.d[u * self.n + v]
     }
 
     #[inline]
+    /// Set the distance from `u` to `v` (directed cell).
     pub fn set(&mut self, u: usize, v: usize, w: f32) {
         self.d[u * self.n + v] = w;
     }
 
+    /// The full distance row of source `u`.
     pub fn row(&self, u: usize) -> &[f32] {
         &self.d[u * self.n..(u + 1) * self.n]
     }
@@ -109,6 +116,7 @@ pub struct Csr {
 }
 
 impl Csr {
+    /// Build the CSR from an adjacency-list graph.
     pub fn build(g: &Graph) -> Csr {
         let n = g.n();
         let mut offsets = Vec::with_capacity(n + 1);
@@ -130,6 +138,8 @@ impl Csr {
     }
 
     #[inline]
+    /// Dijkstra from `src` into `dist`, reusing a caller-owned heap
+    /// so steady-state sweeps allocate nothing.
     pub fn dijkstra_scratch(
         &self,
         src: usize,

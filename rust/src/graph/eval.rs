@@ -46,7 +46,7 @@ use super::Graph;
 /// sources with the largest eccentricities. Enough to re-certify a
 /// barely-changed overlay in one round without bloating the warm-up
 /// cost when the overlay did change.
-const MAX_LANDMARKS: usize = 4;
+pub const MAX_LANDMARKS: usize = 4;
 
 /// Sources swept per bounding-diameter round. Fixed — deliberately NOT
 /// the pool width — so the sweep schedule (and therefore the certified
@@ -56,7 +56,7 @@ const MAX_LANDMARKS: usize = 4;
 /// warm round covers the whole landmark set, and small enough that the
 /// round-granular schedule wastes at most a couple of sweeps over the
 /// serial one-at-a-time heuristic.
-const ROUND_WIDTH: usize = 4;
+pub const ROUND_WIDTH: usize = 4;
 
 /// Reusable per-worker Dijkstra state (checked out of [`EvalPool`] for
 /// the duration of one worker's run, returned afterwards).
@@ -96,6 +96,7 @@ impl EvalPool {
             .unwrap_or(1)
     }
 
+    /// The pool width this instance was built with.
     pub fn threads(&self) -> usize {
         self.threads
     }

@@ -85,6 +85,7 @@ impl Graph {
         self.m += 1;
     }
 
+    /// Number of nodes.
     pub fn n(&self) -> usize {
         self.n
     }
@@ -94,18 +95,22 @@ impl Graph {
         self.m
     }
 
+    /// Adjacency list of `u` as (neighbor, weight) pairs.
     pub fn neighbors(&self, u: usize) -> &[(u32, f32)] {
         &self.adj[u]
     }
 
+    /// Number of incident edges of `u`.
     pub fn degree(&self, u: usize) -> usize {
         self.adj[u].len()
     }
 
+    /// Largest degree over all nodes.
     pub fn max_degree(&self) -> usize {
         (0..self.n).map(|u| self.degree(u)).max().unwrap_or(0)
     }
 
+    /// Whether the undirected edge (u, v) exists.
     pub fn has_edge(&self, u: usize, v: usize) -> bool {
         self.adj[u].iter().any(|(x, _)| *x as usize == v)
     }

@@ -44,10 +44,12 @@ impl Ring {
         }
     }
 
+    /// Number of nodes on the ring.
     pub fn n(&self) -> usize {
         self.order.len()
     }
 
+    /// The visit order (a permutation of 0..n).
     pub fn order(&self) -> &[u32] {
         &self.order
     }

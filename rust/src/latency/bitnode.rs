@@ -18,12 +18,17 @@ use crate::util::rng::Rng;
 /// Region: name, centroid (lat, lon), geographic scatter (degrees),
 /// sampling weight (approximate Bitnodes share).
 pub struct Region {
+    /// Region label (continent-scale cluster).
     pub name: &'static str,
+    /// Cluster center in abstract latency-space coordinates.
     pub center: (f64, f64),
+    /// Intra-region scatter (spread of node placements).
     pub scatter: f64,
+    /// Sampling weight (share of nodes placed here).
     pub weight: f64,
 }
 
+/// The Bitnodes-derived region mix.
 pub const REGIONS: [Region; 7] = [
     Region { name: "north_america", center: (39.5, -98.4), scatter: 8.0, weight: 0.30 },
     Region { name: "europe", center: (50.1, 9.2), scatter: 6.0, weight: 0.38 },
@@ -43,8 +48,11 @@ fn access_ms(rng: &mut Rng) -> f64 {
 
 /// A sampled node placement.
 pub struct Placement {
+    /// Index into [`REGIONS`].
     pub region: usize,
+    /// Sampled position in latency space.
     pub coords: (f64, f64),
+    /// Last-mile access latency added to every link of this node.
     pub access: f64,
 }
 

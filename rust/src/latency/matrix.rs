@@ -11,6 +11,7 @@ pub struct LatencyMatrix {
 }
 
 impl LatencyMatrix {
+    /// An all-zero n x n matrix.
     pub fn zeros(n: usize) -> LatencyMatrix {
         LatencyMatrix {
             n,
@@ -32,21 +33,25 @@ impl LatencyMatrix {
         m
     }
 
+    /// Number of nodes.
     pub fn n(&self) -> usize {
         self.n
     }
 
     #[inline]
+    /// Latency between `u` and `v` (0 on the diagonal).
     pub fn get(&self, u: usize, v: usize) -> f32 {
         self.w[u * self.n + v]
     }
 
     #[inline]
+    /// Set the symmetric latency between `u` and `v`.
     pub fn set(&mut self, u: usize, v: usize, w: f32) {
         self.w[u * self.n + v] = w;
         self.w[v * self.n + u] = w;
     }
 
+    /// Row `u`: latencies from `u` to every node.
     pub fn row(&self, u: usize) -> &[f32] {
         &self.w[u * self.n..(u + 1) * self.n]
     }

@@ -25,13 +25,18 @@ use crate::util::rng::Rng;
 /// Which latency model to draw a matrix from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Model {
+    /// I.i.d. uniform link latencies (paper SS-VII synthetic).
     Uniform,
+    /// Gaussian link latencies, clipped positive.
     Gaussian,
+    /// FABRIC-testbed-like clustered latencies.
     Fabric,
+    /// Bitnodes-derived geographic latencies.
     Bitnode,
 }
 
 impl Model {
+    /// Parse a CLI model name.
     pub fn parse(s: &str) -> Option<Model> {
         match s.to_ascii_lowercase().as_str() {
             "uniform" => Some(Model::Uniform),
@@ -42,6 +47,7 @@ impl Model {
         }
     }
 
+    /// Stable CLI/display name.
     pub fn name(&self) -> &'static str {
         match self {
             Model::Uniform => "uniform",
@@ -61,6 +67,7 @@ impl Model {
         }
     }
 
+    /// Every model, in CLI order.
     pub const ALL: [Model; 4] =
         [Model::Uniform, Model::Gaussian, Model::Fabric, Model::Bitnode];
 }

@@ -10,8 +10,10 @@
 //!   DGRO ring construction + ρ-adaptive ring selection + parallel
 //!   partitioned construction, a discrete-event membership/gossip
 //!   runtime, the [`scenario`] engine (deterministic churn +
-//!   dynamic-latency workloads — see docs/SCENARIOS.md), and the
-//!   figure-regeneration bench harness.
+//!   dynamic-latency workloads — see docs/SCENARIOS.md), the
+//!   [`coordinator`] services (centralized and sharded — the latter
+//!   with partition-local membership and certified-diameter ring
+//!   re-anchoring), and the figure-regeneration bench harness.
 //! * **L2 (python/compile/model.py)** — the Q-network (structure2vec
 //!   embedding + Q-head, Eqns 2–4), DQN-trained at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the embedding
@@ -35,7 +37,10 @@
 //! println!("diameter = {}", dgro::graph::diameter::diameter(&g));
 //! ```
 //!
-//! See `examples/` for full scenarios and DESIGN.md for the module map.
+//! See `examples/` for full scenarios, docs/ARCHITECTURE.md for the
+//! module map and data flow, and docs/CLI.md for the `dgro` binary.
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod cli;

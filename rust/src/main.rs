@@ -8,12 +8,13 @@
 //!   figures   regenerate paper figures (CSV under reports/)
 //!   config    print the default config JSON
 //!
-//! Examples:
+//! Examples (docs/CLI.md documents every flag):
 //!   dgro build --nodes 120 --model fabric --scorer pjrt
 //!   dgro serve --nodes 100 --model bitnode --horizon 5000
 //!   dgro scenario list
 //!   dgro scenario run --name flash-crowd --topology dgro --seed 7
-//!   dgro scenario compare --out reports
+//!   dgro scenario run --name churn-storm --topology sharded --shards 8
+//!   dgro scenario compare --shards 8 --out reports
 //!   dgro figures --fig 13 --quick
 //!   dgro figures --all
 
@@ -259,9 +260,16 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
     )
     .flag("name", "flash-crowd", "catalog scenario (dgro scenario list)")
     .flag("spec", "", "path to a JSON ScenarioSpec (overrides --name)")
-    .flag("topology", "dgro", "dgro|chord|rapid|perigee|random")
+    .flag("topology", "dgro", "dgro|sharded|chord|rapid|perigee|random")
     .flag("seed", "7", "rng seed (same seed => byte-identical report)")
     .flag("period", "250", "adaptation/measurement period (sim-ms)")
+    .flag(
+        "shards",
+        "0",
+        "partition count for the sharded coordinator: run --topology \
+         sharded uses it (0 = engine default), compare > 1 appends a \
+         'sharded' column to the panel",
+    )
     .flag(
         "threads",
         "0",
@@ -288,6 +296,7 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
         0 => dgro::graph::eval::EvalPool::default_threads(),
         t => t,
     };
+    let shards = a.get_usize("shards")?;
     match action {
         "list" => {
             for s in scenario::catalog() {
@@ -315,6 +324,7 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             engine.period = period;
             engine.threads = threads;
             engine.incremental = !a.switch("rebuild");
+            engine.shards = shards;
             let report = engine.run(topology)?;
             print!("{}", report.render());
             if !a.get("out").is_empty() {
@@ -323,22 +333,30 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             Ok(())
         }
         "compare" => {
-            let topologies: Vec<scenario::Topology> = if a.switch("quick")
-            {
-                vec![
-                    scenario::Topology::Dgro,
-                    scenario::Topology::Chord,
-                    scenario::Topology::Rapid,
-                ]
-            } else {
-                scenario::Topology::ALL.to_vec()
-            };
-            let rep = scenario::compare(
+            let mut topologies: Vec<scenario::Topology> =
+                if a.switch("quick") {
+                    vec![
+                        scenario::Topology::Dgro,
+                        scenario::Topology::Chord,
+                        scenario::Topology::Rapid,
+                    ]
+                } else {
+                    scenario::Topology::ALL.to_vec()
+                };
+            if shards > 1 {
+                // Sharded-vs-centralized under identical conditions:
+                // the extra column shares every seed/trace/latency draw.
+                topologies.push(scenario::Topology::DgroSharded);
+            }
+            let rep = scenario::compare_opts(
                 &scenario::catalog(),
                 &topologies,
                 seed,
-                period,
-                threads,
+                scenario::CompareOpts {
+                    period,
+                    threads,
+                    shards,
+                },
             )?;
             print!("{}", rep.render());
             if a.get("out").is_empty() {

@@ -6,12 +6,16 @@ use crate::util::rng::Rng;
 /// One scheduled membership change.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum MembershipEvent {
+    /// Node (re)joins the overlay.
     Join { time: f64, node: u32 },
+    /// Node departs gracefully.
     Leave { time: f64, node: u32 },
+    /// Node fails without notice (still in the table as Faulty).
     Crash { time: f64, node: u32 },
 }
 
 impl MembershipEvent {
+    /// Sim-time the event fires.
     pub fn time(&self) -> f64 {
         match *self {
             MembershipEvent::Join { time, .. }
@@ -20,6 +24,7 @@ impl MembershipEvent {
         }
     }
 
+    /// The node the event is about.
     pub fn node(&self) -> u32 {
         match *self {
             MembershipEvent::Join { node, .. }
@@ -32,6 +37,7 @@ impl MembershipEvent {
 /// A time-sorted trace of events.
 #[derive(Clone, Debug, Default)]
 pub struct EventTrace {
+    /// Events in nondecreasing time order.
     pub events: Vec<MembershipEvent>,
 }
 
@@ -77,10 +83,12 @@ impl EventTrace {
         EventTrace { events }
     }
 
+    /// Number of events.
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
+    /// Whether the trace has no events.
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }

@@ -8,15 +8,20 @@ use super::events::MembershipEvent;
 /// Lifecycle state of a member.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MemberState {
+    /// Healthy and relaying.
     Alive,
+    /// Suspected faulty (SWIM: awaiting refutation or confirmation).
     Suspect,
+    /// Confirmed failed.
     Faulty,
+    /// Departed gracefully.
     Left,
 }
 
 /// One member's record.
 #[derive(Clone, Debug)]
 pub struct Member {
+    /// Current lifecycle state.
     pub state: MemberState,
     /// SWIM incarnation: higher wins; Alive at incarnation i refutes
     /// Suspect at incarnation i.
@@ -32,6 +37,7 @@ pub struct MembershipList {
 }
 
 impl MembershipList {
+    /// An empty table (use [`MembershipList::full`] to bootstrap).
     pub fn new() -> MembershipList {
         MembershipList::default()
     }
@@ -52,18 +58,22 @@ impl MembershipList {
         list
     }
 
+    /// Number of known members (any state).
     pub fn len(&self) -> usize {
         self.members.len()
     }
 
+    /// Whether the table is empty.
     pub fn is_empty(&self) -> bool {
         self.members.is_empty()
     }
 
+    /// Member `id`'s record, if known.
     pub fn get(&self, id: u32) -> Option<&Member> {
         self.members.get(&id)
     }
 
+    /// Ids of alive members, ascending.
     pub fn alive(&self) -> impl Iterator<Item = u32> + '_ {
         self.members
             .iter()
@@ -71,6 +81,7 @@ impl MembershipList {
             .map(|(&id, _)| id)
     }
 
+    /// Number of members currently in state `s`.
     pub fn count_state(&self, s: MemberState) -> usize {
         self.members.values().filter(|m| m.state == s).count()
     }

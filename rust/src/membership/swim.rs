@@ -14,6 +14,7 @@ use crate::sim::broadcast::broadcast_times;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug)]
+/// Knobs of the SWIM failure-detection simulation.
 pub struct SwimConfig {
     /// Protocol period (time between probe rounds).
     pub period: f64,
@@ -44,12 +45,16 @@ pub struct DetectionReport {
 
 /// SWIM simulator bound to one overlay graph.
 pub struct SwimSim<'a> {
+    /// The overlay probes travel on.
     pub overlay: &'a Graph,
+    /// Protocol knobs.
     pub cfg: SwimConfig,
+    /// The simulated observer's membership table.
     pub list: MembershipList,
 }
 
 impl<'a> SwimSim<'a> {
+    /// A simulation over `overlay` with everyone initially alive.
     pub fn new(overlay: &'a Graph, cfg: SwimConfig) -> SwimSim<'a> {
         SwimSim {
             overlay,

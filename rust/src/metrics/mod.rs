@@ -9,14 +9,17 @@ use crate::util::stats::Summary;
 /// A named scalar time series (one row per observation).
 #[derive(Clone, Debug, Default)]
 pub struct Series {
+    /// Observations in record order.
     pub values: Vec<f64>,
 }
 
 impl Series {
+    /// Append one observation.
     pub fn record(&mut self, x: f64) {
         self.values.push(x);
     }
 
+    /// Summary statistics over the recorded values.
     pub fn summary(&self) -> Summary {
         Summary::of(&self.values)
     }
@@ -30,18 +33,22 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// An empty registry.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Add `by` to counter `name` (created at 0).
     pub fn incr(&mut self, name: &str, by: u64) {
         *self.counters.entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Current value of counter `name` (0 if never incremented).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Append `x` to series `name` (created empty).
     pub fn observe(&mut self, name: &str, x: f64) {
         self.series
             .entry(name.to_string())
@@ -49,6 +56,7 @@ impl Metrics {
             .record(x);
     }
 
+    /// The series recorded under `name`, if any.
     pub fn series(&self, name: &str) -> Option<&Series> {
         self.series.get(name)
     }
@@ -75,12 +83,16 @@ impl Metrics {
 /// rows of f64 cells, deterministic formatting.
 #[derive(Clone, Debug)]
 pub struct Table {
+    /// Table title (becomes the CSV filename slug).
     pub title: String,
+    /// Column names.
     pub header: Vec<String>,
+    /// Numeric rows, one Vec per row.
     pub rows: Vec<Vec<f64>>,
 }
 
 impl Table {
+    /// An empty table with the given title and columns.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -89,11 +101,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<f64>) {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Render as CSV (header + rows).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "{}", self.header.join(","));
@@ -123,6 +137,7 @@ impl Table {
         out
     }
 
+    /// Write the CSV to `path`, creating parent directories.
     pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;

@@ -20,6 +20,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// A pool of `threads` workers (panics on 0).
     pub fn new(threads: usize) -> ThreadPool {
         assert!(threads > 0);
         let (sender, receiver) = mpsc::channel::<Job>();

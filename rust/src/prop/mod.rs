@@ -22,7 +22,9 @@ use crate::util::rng::Rng;
 /// Knobs for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {
+    /// Cases generated per property.
     pub cases: usize,
+    /// Base seed; each case forks a deterministic stream.
     pub seed: u64,
 }
 
@@ -36,11 +38,13 @@ impl Default for Config {
 }
 
 impl Config {
+    /// Builder: set the case count.
     pub fn cases(mut self, n: usize) -> Self {
         self.cases = n;
         self
     }
 
+    /// Builder: set the base seed.
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
         self

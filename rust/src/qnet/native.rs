@@ -32,6 +32,7 @@ pub struct NativeQnet {
 }
 
 impl NativeQnet {
+    /// A scorer over the given (trained or synthetic) parameters.
     pub fn new(params: QnetParams) -> NativeQnet {
         NativeQnet {
             params,
@@ -45,6 +46,7 @@ impl NativeQnet {
         }
     }
 
+    /// The parameters this scorer runs.
     pub fn params(&self) -> &QnetParams {
         &self.params
     }

@@ -17,11 +17,14 @@ pub const PARAM_ORDER: [&str; 10] =
 /// One theta: shape + row-major f32 data.
 #[derive(Clone, Debug)]
 pub struct Tensor {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major values.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Total number of elements.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -30,14 +33,19 @@ impl Tensor {
 /// The full trained parameter set.
 #[derive(Clone, Debug)]
 pub struct QnetParams {
+    /// Embedding width p (Eqn 2).
     pub embed_dim: usize,
+    /// Hidden width of the Q-head MLP.
     pub hidden_dim: usize,
+    /// structure2vec iterations T.
     pub n_iters: usize,
     /// Tensors in PARAM_ORDER.
     pub thetas: Vec<Tensor>,
 }
 
 impl QnetParams {
+    /// Parameter tensor by name (panics on unknown names - the
+    /// artifact format is fixed at export time).
     pub fn theta(&self, name: &str) -> &Tensor {
         let idx = PARAM_ORDER
             .iter()
@@ -54,6 +62,7 @@ impl QnetParams {
         Self::parse(&text)
     }
 
+    /// Parse the exported weights text format.
     pub fn parse(text: &str) -> Result<QnetParams> {
         let root = json::parse(text)?;
         let format = root.get("format")?.as_str()?;

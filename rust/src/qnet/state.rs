@@ -13,12 +13,19 @@ use crate::latency::LatencyMatrix;
 /// (see python model.default_wscale).
 #[derive(Clone, Debug)]
 pub struct State {
+    /// Number of nodes.
     pub n: usize,
+    /// The latency matrix construction runs against.
     pub w: LatencyMatrix,
+    /// Dense adjacency of the partial tour (row-major n x n).
     pub a: Vec<f32>,
+    /// Per-node degree in the partial tour.
     pub deg: Vec<f32>,
+    /// The tour head (last node added).
     pub cur: usize,
+    /// Whether each node is already on the tour.
     pub visited: Vec<bool>,
+    /// Latency normalization scale (keeps Q inputs O(1)).
     pub wscale: f32,
 }
 
@@ -87,6 +94,7 @@ impl State {
         (0..self.n).filter(|&i| !self.visited[i])
     }
 
+    /// Whether every node has been added.
     pub fn done(&self) -> bool {
         self.visited.iter().all(|&v| v)
     }

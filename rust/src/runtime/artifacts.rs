@@ -10,11 +10,15 @@ use crate::util::json;
 /// The artifact set produced by `make artifacts`.
 #[derive(Clone, Debug)]
 pub struct ArtifactStore {
+    /// Directory the artifacts live in.
     pub dir: PathBuf,
     /// Ascending size buckets (node capacity per exported HLO).
     pub buckets: Vec<usize>,
+    /// Embedding width baked into the HLO.
     pub embed_dim: usize,
+    /// Q-head hidden width baked into the HLO.
     pub hidden_dim: usize,
+    /// structure2vec iterations baked into the HLO.
     pub n_iters: usize,
 }
 
@@ -56,10 +60,12 @@ impl ArtifactStore {
         PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
     }
 
+    /// Path of the AOT HLO for the given size bucket.
     pub fn hlo_path(&self, bucket: usize) -> PathBuf {
         self.dir.join(format!("qnet_{bucket}.hlo.txt"))
     }
 
+    /// Path of the exported weights file.
     pub fn weights_path(&self) -> PathBuf {
         self.dir.join("qnet_weights.json")
     }

@@ -64,10 +64,12 @@ impl PjrtQnet {
         PjrtQnet::new(ArtifactStore::discover(ArtifactStore::default_dir())?)
     }
 
+    /// The loaded weights.
     pub fn params(&self) -> &QnetParams {
         &self.params
     }
 
+    /// The artifact store this executor was built from.
     pub fn store(&self) -> &ArtifactStore {
         &self.store
     }

@@ -1,4 +1,4 @@
-//! Stand-in for [`super::pjrt`] when the `pjrt` cargo feature is off.
+//! Stand-in for `runtime::pjrt` when the `pjrt` cargo feature is off.
 //!
 //! Presents the same public surface as the real backend so every call
 //! site compiles unchanged; construction returns an error, which the

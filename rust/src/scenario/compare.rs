@@ -14,7 +14,9 @@ use crate::scenario::spec::ScenarioSpec;
 /// Output of [`compare`].
 #[derive(Clone, Debug)]
 pub struct CompareReport {
+    /// Scenario names, in run order (row labels).
     pub scenarios: Vec<String>,
+    /// Topology panel, in column order.
     pub topologies: Vec<Topology>,
     /// Rows `[scenario_index, mean alive-overlay diameter per topology…]`
     /// (Table cells are numeric; [`CompareReport::render`] adds names).
@@ -54,13 +56,38 @@ impl CompareReport {
 /// [`ScenarioEngine`]'s construction default.
 pub const DEFAULT_PERIOD_MS: f64 = 250.0;
 
+/// Knobs threaded from the CLI into every engine the cross product
+/// constructs.
+#[derive(Clone, Copy, Debug)]
+pub struct CompareOpts {
+    /// Measurement cadence in sim-ms ([`DEFAULT_PERIOD_MS`]).
+    pub period: f64,
+    /// Worker threads for the topology fan-out + per-engine evaluation.
+    pub threads: usize,
+    /// Partition count for [`Topology::DgroSharded`] columns (ignored
+    /// by every other topology; 0 resolves to the engine default).
+    pub shards: usize,
+}
+
+impl Default for CompareOpts {
+    fn default() -> Self {
+        CompareOpts {
+            period: DEFAULT_PERIOD_MS,
+            threads: 1,
+            shards: 0,
+        }
+    }
+}
+
 /// Run the cross product and collect mean alive-overlay diameters
 /// (per-period timelines included). `seed` keys everything; re-running
 /// with the same inputs reproduces the tables byte-for-byte — including
 /// across `threads` counts, since every (scenario, topology) run is a
 /// pure function of (spec, topology, seed). `period` is the measurement
 /// cadence in sim-ms ([`DEFAULT_PERIOD_MS`]); `threads > 1` fans the
-/// per-scenario topology runs out across the evaluation pool.
+/// per-scenario topology runs out across the evaluation pool. The
+/// sharded-coordinator column (if requested) uses the engine-default
+/// shard count; use [`compare_opts`] to set it explicitly.
 pub fn compare(
     specs: &[ScenarioSpec],
     topologies: &[Topology],
@@ -68,6 +95,32 @@ pub fn compare(
     period: f64,
     threads: usize,
 ) -> Result<CompareReport> {
+    compare_opts(
+        specs,
+        topologies,
+        seed,
+        CompareOpts {
+            period,
+            threads,
+            shards: 0,
+        },
+    )
+}
+
+/// [`compare`] with the full option set — the `dgro scenario compare
+/// --shards K` entry point, which appends a [`Topology::DgroSharded`]
+/// column so sharded and centralized DGRO face identical conditions.
+pub fn compare_opts(
+    specs: &[ScenarioSpec],
+    topologies: &[Topology],
+    seed: u64,
+    opts: CompareOpts,
+) -> Result<CompareReport> {
+    let CompareOpts {
+        period,
+        threads,
+        shards,
+    } = opts;
     assert!(!specs.is_empty() && !topologies.is_empty());
     let mut header: Vec<String> = vec!["scenario".to_string()];
     header.extend(topologies.iter().map(|t| t.name().to_string()));
@@ -95,6 +148,7 @@ pub fn compare(
                         ScenarioEngine::new(spec.clone(), seed)?;
                     engine.period = period;
                     engine.threads = inner_threads;
+                    engine.shards = shards;
                     engine.run(topo)
                 },
             )
@@ -103,6 +157,7 @@ pub fn compare(
         } else {
             let mut engine = ScenarioEngine::new(spec.clone(), seed)?;
             engine.period = period;
+            engine.shards = shards;
             let mut v = Vec::with_capacity(topologies.len());
             for &topo in topologies {
                 v.push(engine.run(topo)?);
@@ -182,6 +237,27 @@ mod tests {
         assert_eq!(r1.render(), r2.render());
         assert_eq!(r1.summary.to_csv(), r2.summary.to_csv());
         assert!(r1.render().contains("| a"));
+    }
+
+    #[test]
+    fn sharded_column_rides_the_cross_product() {
+        let specs = vec![mini("a")];
+        let topos = [Topology::Dgro, Topology::DgroSharded];
+        let opts = CompareOpts {
+            shards: 4,
+            ..CompareOpts::default()
+        };
+        let r1 = compare_opts(&specs, &topos, 5, opts).unwrap();
+        assert_eq!(r1.summary.header.len(), 3);
+        for row in &r1.summary.rows {
+            for cell in &row[1..] {
+                assert!(cell.is_finite() && *cell > 0.0);
+            }
+        }
+        assert!(r1.render().contains("sharded"));
+        // Deterministic like every other column.
+        let r2 = compare_opts(&specs, &topos, 5, opts).unwrap();
+        assert_eq!(r1.render(), r2.render());
     }
 
     #[test]

@@ -83,6 +83,7 @@ impl LatencyEffect {
         }
     }
 
+    /// Check ranges (factors >= 1, windows ordered, amplitude < 1).
     pub fn validate(&self) -> Result<()> {
         match *self {
             LatencyEffect::Diurnal {
@@ -154,6 +155,7 @@ impl LatencyEffect {
         }
     }
 
+    /// Parse one effect object (see docs/SCENARIOS.md).
     pub fn from_json(v: &Json) -> Result<LatencyEffect> {
         let effect = match v.get("kind")?.as_str()? {
             "diurnal" => LatencyEffect::Diurnal {
@@ -188,6 +190,7 @@ pub struct DynamicLatency {
 }
 
 impl DynamicLatency {
+    /// A view over `base` with the given effects (validated).
     pub fn new(
         base: LatencyMatrix,
         effects: Vec<LatencyEffect>,
@@ -198,10 +201,12 @@ impl DynamicLatency {
         Ok(DynamicLatency { base, effects })
     }
 
+    /// The t = 0 base matrix the effects overlay.
     pub fn base(&self) -> &LatencyMatrix {
         &self.base
     }
 
+    /// Whether no effect ever changes the matrix.
     pub fn is_static(&self) -> bool {
         self.effects.is_empty()
     }

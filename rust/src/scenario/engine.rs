@@ -33,7 +33,7 @@ use std::fmt::Write as _;
 use anyhow::{bail, Result};
 
 use crate::config::Config;
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, ShardedConfig, ShardedCoordinator};
 use crate::gossip::measure::{measure, MeasureConfig};
 use crate::graph::eval::EvalPool;
 use crate::graph::{diameter, Graph};
@@ -52,7 +52,13 @@ use crate::util::rng::Rng;
 pub enum Topology {
     /// The adaptive DGRO coordinator (ρ-guided ring swaps).
     Dgro,
+    /// The sharded DGRO coordinator: partition-local membership +
+    /// anchor-stitched shards ([`ShardedCoordinator`]); shard count
+    /// comes from [`ScenarioEngine::shards`].
+    DgroSharded,
+    /// Chord's finger-table overlay (latency-oblivious baseline).
     Chord,
+    /// RAPID's expander overlay (K rings from K hash functions).
     Rapid,
     /// Perigee paired with a random ring (its standard companion — alone
     /// it gives no connectivity guarantee).
@@ -62,6 +68,8 @@ pub enum Topology {
 }
 
 impl Topology {
+    /// The default comparison panel (the sharded coordinator is opt-in
+    /// via `--shards`, so it is not part of the panel).
     pub const ALL: [Topology; 5] = [
         Topology::Dgro,
         Topology::Chord,
@@ -70,23 +78,27 @@ impl Topology {
         Topology::RandomKRing,
     ];
 
+    /// Parse a CLI topology name.
     pub fn parse(s: &str) -> Result<Topology> {
         match s.to_ascii_lowercase().as_str() {
             "dgro" => Ok(Topology::Dgro),
+            "sharded" | "dgro-sharded" => Ok(Topology::DgroSharded),
             "chord" => Ok(Topology::Chord),
             "rapid" => Ok(Topology::Rapid),
             "perigee" => Ok(Topology::Perigee),
             "random" | "kring" => Ok(Topology::RandomKRing),
             other => bail!(
                 "unknown topology '{other}' \
-                 (dgro|chord|rapid|perigee|random)"
+                 (dgro|sharded|chord|rapid|perigee|random)"
             ),
         }
     }
 
+    /// Stable display/CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             Topology::Dgro => "dgro",
+            Topology::DgroSharded => "sharded",
             Topology::Chord => "chord",
             Topology::Rapid => "rapid",
             Topology::Perigee => "perigee",
@@ -117,14 +129,20 @@ pub struct PeriodRow {
 /// Result of one scenario × topology run.
 #[derive(Clone, Debug)]
 pub struct ScenarioReport {
+    /// Scenario name (from the spec).
     pub scenario: String,
+    /// Which overlay ran.
     pub topology: Topology,
+    /// The seed everything was derived from.
     pub seed: u64,
+    /// One row per adaptation/measurement period.
     pub rows: Vec<PeriodRow>,
+    /// Counters + per-period series recorded during the run.
     pub metrics: Metrics,
 }
 
 impl ScenarioReport {
+    /// Mean alive-overlay diameter across periods.
     pub fn mean_diameter(&self) -> f64 {
         if self.rows.is_empty() {
             return 0.0;
@@ -133,14 +151,17 @@ impl ScenarioReport {
             / self.rows.len() as f64
     }
 
+    /// Worst per-period alive-overlay diameter.
     pub fn peak_diameter(&self) -> f64 {
         self.rows.iter().map(|r| r.diameter).fold(0.0, f64::max)
     }
 
+    /// The last period's alive-overlay diameter.
     pub fn final_diameter(&self) -> f64 {
         self.rows.last().map(|r| r.diameter).unwrap_or(0.0)
     }
 
+    /// Total ring swaps across the run (0 for static baselines).
     pub fn total_swaps(&self) -> u64 {
         self.rows.iter().map(|r| r.swaps).sum()
     }
@@ -211,6 +232,7 @@ impl ScenarioReport {
 pub struct ScenarioEngine {
     spec: ScenarioSpec,
     seed: u64,
+    /// Adaptation/measurement cadence in sim-ms.
     pub period: f64,
     /// Worker threads for per-period diameter evaluation on the static
     /// path (1 = serial). Never changes reported values, only the wall
@@ -224,9 +246,21 @@ pub struct ScenarioEngine {
     /// from-scratch rebuild every period — kept as the A/B baseline for
     /// `rust/benches/hotpath.rs` and the equivalence tests.
     pub incremental: bool,
+    /// Partition count for [`Topology::DgroSharded`] runs. 0 (the
+    /// default) resolves to [`DEFAULT_SHARDS`]; 1 is a valid degenerate
+    /// sharding (one partition, no anchors — the parity baseline);
+    /// other topologies ignore it entirely.
+    pub shards: usize,
 }
 
+/// Shard count a [`Topology::DgroSharded`] run falls back to when
+/// [`ScenarioEngine::shards`] was never set (`dgro scenario run
+/// --topology sharded` without `--shards`).
+pub const DEFAULT_SHARDS: usize = 4;
+
 impl ScenarioEngine {
+    /// Validate the spec and wrap it with default knobs (250 ms period,
+    /// serial evaluation, incremental static path, centralized DGRO).
     pub fn new(spec: ScenarioSpec, seed: u64) -> Result<ScenarioEngine> {
         spec.validate()?;
         Ok(ScenarioEngine {
@@ -235,11 +269,22 @@ impl ScenarioEngine {
             period: 250.0,
             threads: 1,
             incremental: true,
+            shards: 0,
         })
     }
 
+    /// The validated workload description this engine runs.
     pub fn spec(&self) -> &ScenarioSpec {
         &self.spec
+    }
+
+    /// The partition count a [`Topology::DgroSharded`] run will use.
+    pub fn effective_shards(&self) -> usize {
+        if self.shards >= 1 {
+            self.shards
+        } else {
+            DEFAULT_SHARDS
+        }
     }
 
     /// The shared setting for this seed: base latency draw, dynamic
@@ -259,16 +304,23 @@ impl ScenarioEngine {
         self.period.min(self.spec.horizon)
     }
 
+    /// Run the spec against one topology. [`Topology::Dgro`] and
+    /// [`Topology::DgroSharded`] drive the real coordinator event loops;
+    /// everything else replays the periods over a statically built
+    /// overlay.
     pub fn run(&self, topology: Topology) -> Result<ScenarioReport> {
         match topology {
-            Topology::Dgro => self.run_adaptive(),
+            Topology::Dgro | Topology::DgroSharded => {
+                self.run_adaptive(topology)
+            }
             t => self.run_static(t),
         }
     }
 
-    /// DGRO path: the coordinator's own event loop, fed the generated
-    /// trace and the time-varying latency view.
-    fn run_adaptive(&self) -> Result<ScenarioReport> {
+    /// DGRO path: the coordinator's own event loop (centralized or
+    /// sharded, per `topology`), fed the generated trace and the
+    /// time-varying latency view.
+    fn run_adaptive(&self, topology: Topology) -> Result<ScenarioReport> {
         let (dyn_w, trace) = self.setting()?;
         let mut cfg = Config::default();
         cfg.nodes = self.spec.nodes;
@@ -276,9 +328,8 @@ impl ScenarioEngine {
         cfg.seed = self.seed;
         cfg.scorer = "greedy".to_string();
         cfg.adapt_period_ms = self.effective_period();
-        let mut co = Coordinator::with_latency(cfg, dyn_w.at(0.0))?;
         let mut prev_t = 0.0;
-        let rep = co.run_dynamic(&trace, self.spec.horizon, |t| {
+        let mut latency_at = |t: f64| {
             let out = if dyn_w.changes_within(prev_t, t) {
                 Some(dyn_w.at(t))
             } else {
@@ -286,9 +337,23 @@ impl ScenarioEngine {
             };
             prev_t = t;
             out
-        })?;
+        };
+        let (rep, metrics) = if topology == Topology::DgroSharded {
+            let mut opts = ShardedConfig::new(self.effective_shards());
+            opts.threads = self.threads.max(1);
+            let mut co =
+                ShardedCoordinator::with_latency(cfg, dyn_w.at(0.0), opts)?;
+            let rep =
+                co.run_dynamic(&trace, self.spec.horizon, &mut latency_at)?;
+            (rep, co.metrics)
+        } else {
+            let mut co = Coordinator::with_latency(cfg, dyn_w.at(0.0))?;
+            let rep =
+                co.run_dynamic(&trace, self.spec.horizon, &mut latency_at)?;
+            (rep, co.metrics)
+        };
         let series = |name: &str| -> Vec<f64> {
-            co.metrics
+            metrics
                 .series(name)
                 .map(|s| s.values.clone())
                 .unwrap_or_default()
@@ -310,10 +375,10 @@ impl ScenarioEngine {
             .collect();
         Ok(ScenarioReport {
             scenario: self.spec.name.clone(),
-            topology: Topology::Dgro,
+            topology,
             seed: self.seed,
             rows,
-            metrics: co.metrics.clone(),
+            metrics,
         })
     }
 
@@ -344,7 +409,9 @@ impl ScenarioEngine {
                 kring::random_krings(n, paper_k(n), &mut rng)
                     .to_graph(&w0)
             }
-            Topology::Dgro => bail!("dgro runs on the adaptive path"),
+            Topology::Dgro | Topology::DgroSharded => {
+                bail!("dgro runs on the adaptive path")
+            }
         };
         let edges: Vec<(u32, u32)> =
             g0.edges().iter().map(|&(u, v, _)| (u, v)).collect();
@@ -517,7 +584,35 @@ mod tests {
         for t in Topology::ALL {
             assert_eq!(Topology::parse(t.name()).unwrap(), t);
         }
+        // The sharded coordinator is opt-in (not in ALL) but must still
+        // round-trip through the CLI name.
+        assert_eq!(
+            Topology::parse(Topology::DgroSharded.name()).unwrap(),
+            Topology::DgroSharded
+        );
         assert!(Topology::parse("mesh").is_err());
+    }
+
+    #[test]
+    fn sharded_topology_runs_and_aligns_with_centralized() {
+        let mut engine = ScenarioEngine::new(tiny_spec(), 5).unwrap();
+        engine.shards = 4;
+        assert_eq!(engine.effective_shards(), 4);
+        let s = engine.run(Topology::DgroSharded).unwrap();
+        let c = engine.run(Topology::Dgro).unwrap();
+        assert_eq!(s.rows.len(), c.rows.len());
+        for (rs, rc) in s.rows.iter().zip(&c.rows) {
+            assert_eq!(rs.t, rc.t);
+            assert!(rs.diameter.is_finite() && rs.diameter > 0.0);
+            assert!(rs.alive >= 3);
+        }
+        assert_eq!(s.topology.name(), "sharded");
+        // Default resolution: only 0 falls back (1 is the valid
+        // degenerate single-shard parity baseline).
+        engine.shards = 0;
+        assert_eq!(engine.effective_shards(), DEFAULT_SHARDS);
+        engine.shards = 1;
+        assert_eq!(engine.effective_shards(), 1);
     }
 
     #[test]

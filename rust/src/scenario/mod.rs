@@ -10,7 +10,7 @@
 //! [`crate::latency::LatencyMatrix`]) into named, JSON-parsable
 //! [`spec::ScenarioSpec`]s, then drives the coordinator event loop (or a
 //! static baseline) through them ([`engine`]) and tabulates
-//! diameter-under-churn across topologies ([`compare`]).
+//! diameter-under-churn across topologies ([`compare`](mod@compare)).
 //!
 //! Everything is a pure function of (spec, topology, seed): two runs
 //! with the same inputs emit byte-identical reports, which is what lets
@@ -31,7 +31,7 @@ pub mod dynamics;
 pub mod engine;
 pub mod spec;
 
-pub use compare::{compare, CompareReport};
+pub use compare::{compare, compare_opts, CompareOpts, CompareReport};
 pub use dynamics::{DynamicLatency, LatencyEffect};
 pub use engine::{PeriodRow, ScenarioEngine, ScenarioReport, Topology};
 pub use spec::{catalog, find, ChurnSpec, ScenarioSpec};

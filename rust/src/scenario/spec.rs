@@ -30,6 +30,7 @@ pub enum ChurnSpec {
 }
 
 impl ChurnSpec {
+    /// Serialize for spec files (round-trips through `from_json`).
     pub fn to_json(&self) -> Json {
         match *self {
             ChurnSpec::Poisson { rate } => Json::obj(vec![
@@ -75,6 +76,7 @@ impl ChurnSpec {
         }
     }
 
+    /// Parse one churn object (see docs/SCENARIOS.md).
     pub fn from_json(v: &Json) -> Result<ChurnSpec> {
         Ok(match v.get("kind")?.as_str()? {
             "poisson" => ChurnSpec::Poisson {
@@ -106,7 +108,9 @@ impl ChurnSpec {
 /// A named, reproducible dynamic workload.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScenarioSpec {
+    /// Unique workload name (catalog key, report label).
     pub name: String,
+    /// One-line description shown by `dgro scenario list`.
     pub about: String,
     /// Node universe (latency matrix size).
     pub nodes: usize,
@@ -117,11 +121,14 @@ pub struct ScenarioSpec {
     pub model: String,
     /// Sim-time horizon (ms).
     pub horizon: f64,
+    /// Churn components, merged into one trace.
     pub churn: Vec<ChurnSpec>,
+    /// Dynamic-latency effects overlaying the base matrix.
     pub latency: Vec<LatencyEffect>,
 }
 
 impl ScenarioSpec {
+    /// Check every cross-field invariant (ranges, block bounds).
     pub fn validate(&self) -> Result<()> {
         if self.name.is_empty() {
             bail!("scenario name must not be empty");
@@ -252,6 +259,7 @@ impl ScenarioSpec {
     // JSON round-trip (spec files).
     // -----------------------------------------------------------------
 
+    /// Serialize to the JSON spec format.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -323,6 +331,7 @@ impl ScenarioSpec {
         Ok(spec)
     }
 
+    /// Load and validate a spec file.
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<ScenarioSpec> {
         let text = std::fs::read_to_string(path.as_ref()).with_context(
             || format!("reading scenario {:?}", path.as_ref()),

@@ -18,8 +18,11 @@ pub enum EventKind {
 /// A scheduled event.
 #[derive(Clone, Debug)]
 pub struct Event {
+    /// Delivery time (must be finite; `schedule` rejects NaN/inf).
     pub time: f64,
-    pub seq: u64, // tie-break so equal-time events are FIFO-deterministic
+    /// Tie-break so equal-time events are FIFO-deterministic.
+    pub seq: u64,
+    /// What to deliver.
     pub kind: EventKind,
 }
 
@@ -65,6 +68,7 @@ impl Default for Engine {
 }
 
 impl Engine {
+    /// An empty engine at t = 0.
     pub fn new() -> Engine {
         Engine {
             queue: BinaryHeap::new(),
@@ -74,14 +78,17 @@ impl Engine {
         }
     }
 
+    /// Current sim-time (last delivered event).
     pub fn now(&self) -> f64 {
         self.now
     }
 
+    /// Events delivered so far.
     pub fn delivered(&self) -> u64 {
         self.delivered
     }
 
+    /// Events still queued.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

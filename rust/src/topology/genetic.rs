@@ -29,11 +29,15 @@ use crate::util::rng::Rng;
 use super::kring::KRing;
 
 #[derive(Clone, Copy, Debug)]
+/// Knobs of the GA baseline (paper SS-VII-B3).
 pub struct GaConfig {
     /// Total topology evaluations (the paper's 1e5; scale down for CI).
     pub budget: usize,
+    /// Individuals per generation.
     pub population: usize,
+    /// Tournament size for parent selection.
     pub tournament: usize,
+    /// Per-gene mutation probability.
     pub mutation_rate: f64,
     /// Worker threads for fitness evaluation (1 = serial). Thread count
     /// never changes the result, only the wall clock.
@@ -54,8 +58,11 @@ impl Default for GaConfig {
 
 /// Result of a GA run.
 pub struct GaResult {
+    /// Best K-ring found.
     pub best: KRing,
+    /// Its overlay diameter.
     pub best_diameter: f32,
+    /// Topology evaluations spent (the comparison budget axis).
     pub evaluations: usize,
 }
 

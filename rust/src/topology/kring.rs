@@ -12,10 +12,12 @@ use super::{random_ring, shortest_ring};
 /// A K-ring overlay: the union of K rings over the same node set.
 #[derive(Clone, Debug)]
 pub struct KRing {
+    /// The K rings (same node set).
     pub rings: Vec<Ring>,
 }
 
 impl KRing {
+    /// Compose rings into an overlay (panics if sizes differ).
     pub fn new(rings: Vec<Ring>) -> KRing {
         assert!(!rings.is_empty());
         let n = rings[0].n();
@@ -23,10 +25,12 @@ impl KRing {
         KRing { rings }
     }
 
+    /// Number of nodes.
     pub fn n(&self) -> usize {
         self.rings[0].n()
     }
 
+    /// Number of rings.
     pub fn k(&self) -> usize {
         self.rings.len()
     }

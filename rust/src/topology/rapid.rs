@@ -17,6 +17,7 @@ use super::shortest_ring;
 /// convention (K = log2 N by default) and the DGRO swap operation.
 #[derive(Clone, Debug)]
 pub struct Rapid {
+    /// The K random rings RAPID composes.
     pub krings: KRing,
 }
 
@@ -36,6 +37,7 @@ impl Rapid {
         }
     }
 
+    /// The induced overlay graph.
     pub fn to_graph(&self, w: &LatencyMatrix) -> Graph {
         self.krings.to_graph(w)
     }

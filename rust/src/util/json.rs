@@ -15,11 +15,17 @@ use anyhow::{anyhow, bail, Result};
 /// deterministic — golden tests and hermetic rebuilds rely on it.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any number (always stored as f64).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (BTreeMap: deterministic serialization order).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -28,6 +34,7 @@ impl Json {
     // Accessors (all return Result so call sites read like a schema).
     // ---------------------------------------------------------------
 
+    /// Object field `key`, as an error if absent.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m
@@ -37,6 +44,7 @@ impl Json {
         }
     }
 
+    /// Object field `key`, None if absent.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -44,6 +52,7 @@ impl Json {
         }
     }
 
+    /// This value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -51,6 +60,7 @@ impl Json {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -59,6 +69,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// This value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -66,6 +77,7 @@ impl Json {
         }
     }
 
+    /// This value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -73,6 +85,7 @@ impl Json {
         }
     }
 
+    /// This value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -80,6 +93,7 @@ impl Json {
         }
     }
 
+    /// This value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -95,6 +109,7 @@ impl Json {
             .collect()
     }
 
+    /// This value as a vector of usize.
     pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
@@ -103,6 +118,7 @@ impl Json {
     // Constructors for report writing.
     // ---------------------------------------------------------------
 
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(
             pairs
@@ -112,18 +128,22 @@ impl Json {
         )
     }
 
+    /// Build a number.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build an array.
     pub fn arr(v: Vec<Json>) -> Json {
         Json::Arr(v)
     }
 
+    /// Build a number array.
     pub fn f64s(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }

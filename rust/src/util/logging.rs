@@ -9,15 +9,22 @@ use std::time::Instant;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
+/// Log severity, ordered.
 pub enum Level {
+    /// Unrecoverable failures.
     Error = 0,
+    /// Degraded-but-continuing conditions.
     Warn = 1,
+    /// Operational milestones (default level).
     Info = 2,
+    /// Per-period detail.
     Debug = 3,
+    /// Everything.
     Trace = 4,
 }
 
 impl Level {
+    /// Parse a `DGRO_LOG` level name.
     pub fn parse(s: &str) -> Option<Level> {
         match s.to_ascii_lowercase().as_str() {
             "error" => Some(Level::Error),
@@ -29,6 +36,7 @@ impl Level {
         }
     }
 
+    /// Fixed-width display tag.
     pub fn tag(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -54,10 +62,12 @@ pub fn init_from_env() {
     let _ = START.set(Instant::now());
 }
 
+/// Set the process-wide level.
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// The process-wide level.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
@@ -68,6 +78,7 @@ pub fn level() -> Level {
     }
 }
 
+/// Whether messages at level `l` are emitted.
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }
@@ -81,6 +92,7 @@ pub fn emit(l: Level, module: &str, msg: std::fmt::Arguments) {
     eprintln!("[{:9.3}s {} {}] {}", t, l.tag(), module, msg);
 }
 
+/// Log at [`util::logging::Level::Error`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)*) => {
@@ -91,6 +103,7 @@ macro_rules! log_error {
     };
 }
 
+/// Log at [`util::logging::Level::Warn`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => {
@@ -101,6 +114,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at [`util::logging::Level::Info`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -111,6 +125,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at [`util::logging::Level::Debug`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => {

@@ -15,11 +15,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the mixer (any value, including 0).
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -53,6 +55,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

@@ -36,10 +36,12 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// An empty timer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Run `f`, recording its wall time under `name`.
     pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
@@ -47,14 +49,17 @@ impl Stopwatch {
         out
     }
 
+    /// Recorded (name, duration) segments, in order.
     pub fn segments(&self) -> &[(String, Duration)] {
         &self.segments
     }
 
+    /// Sum of all segment durations.
     pub fn total(&self) -> Duration {
         self.segments.iter().map(|(_, d)| *d).sum()
     }
 
+    /// Human-readable per-segment breakdown.
     pub fn report(&self) -> String {
         let total = self.total().as_secs_f64().max(1e-12);
         let mut s = String::new();

@@ -1,0 +1,170 @@
+//! Sharded-coordinator integration: diameter parity against the
+//! centralized coordinator at K ∈ {1, 4, 8} on a seeded scenario,
+//! thread-count determinism, and the stitching property — re-anchoring
+//! never strands a partition (the global overlay stays connected).
+
+use dgro::config::Config;
+use dgro::coordinator::{ShardedConfig, ShardedCoordinator};
+use dgro::graph::{components, Graph};
+use dgro::membership::events::MembershipEvent;
+use dgro::prop::{ensure, forall, Config as PropConfig};
+use dgro::scenario::{
+    ChurnSpec, ScenarioEngine, ScenarioReport, ScenarioSpec, Topology,
+};
+
+/// The seeded parity workload: clustered FABRIC latencies (where ring
+/// choice actually matters) plus background churn.
+fn parity_spec() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "sharded-parity".into(),
+        about: "sharded-vs-centralized diameter parity".into(),
+        nodes: 80,
+        initial_alive: 80,
+        model: "fabric".into(),
+        horizon: 2000.0,
+        churn: vec![ChurnSpec::Poisson { rate: 0.0005 }],
+        latency: vec![],
+    }
+}
+
+fn run_sharded(shards: usize, seed: u64, threads: usize) -> ScenarioReport {
+    let mut engine = ScenarioEngine::new(parity_spec(), seed).unwrap();
+    engine.shards = shards;
+    engine.threads = threads;
+    engine.run(Topology::DgroSharded).unwrap()
+}
+
+#[test]
+fn sharded_diameter_parity_at_k_1_4_8() {
+    let engine = ScenarioEngine::new(parity_spec(), 11).unwrap();
+    let central = engine.run(Topology::Dgro).unwrap();
+    let central_mean = central.mean_diameter();
+    assert!(central_mean > 0.0);
+    for k in [1usize, 4, 8] {
+        let rep = run_sharded(k, 11, 1);
+        assert_eq!(
+            rep.rows.len(),
+            central.rows.len(),
+            "K={k}: period coverage"
+        );
+        for r in &rep.rows {
+            assert!(
+                r.diameter.is_finite() && r.diameter > 0.0,
+                "K={k}: diameter {} at t={}",
+                r.diameter,
+                r.t
+            );
+            assert!(r.alive >= 3 && r.alive <= 80);
+        }
+        // The paper's §VI parity claim at system level: partition-local
+        // ownership must stay in the centralized diameter ballpark
+        // (fig 20 measures the exact curve; this is the regression
+        // floor).
+        let ratio = rep.mean_diameter() / central_mean;
+        assert!(
+            ratio <= 2.5,
+            "K={k}: sharded mean diameter {} vs centralized {} \
+             (ratio {ratio})",
+            rep.mean_diameter(),
+            central_mean
+        );
+    }
+}
+
+#[test]
+fn sharded_runs_are_deterministic_and_thread_invariant() {
+    let a = run_sharded(4, 7, 1);
+    let b = run_sharded(4, 7, 1);
+    assert_eq!(a.render(), b.render(), "same-seed runs differ");
+    let c = run_sharded(4, 7, 4);
+    assert_eq!(a.render(), c.render(), "thread count changed the run");
+    // A different seed draws different churn.
+    let d = run_sharded(4, 8, 1);
+    assert_ne!(a.render(), d.render());
+}
+
+#[test]
+fn prop_stitching_never_strands_a_partition() {
+    forall(
+        "shard stitching connectivity",
+        PropConfig::default().cases(24),
+        |rng| {
+            let n = 24 + rng.index(73); // 24..=96
+            let max_k = (n / 3).min(8);
+            let k = 2 + rng.index(max_k - 1); // 2..=max_k
+            let mut cfg = Config::default();
+            cfg.nodes = n;
+            cfg.model = "uniform".to_string();
+            cfg.scorer = "greedy".to_string();
+            cfg.seed = rng.next_u64();
+            let mut co =
+                ShardedCoordinator::new(cfg, ShardedConfig::new(k))
+                    .map_err(|e| e.to_string())?;
+            // Kill a random subset (up to half the universe), then
+            // re-stitch.
+            let kills = rng.index(n / 2 + 1);
+            for _ in 0..kills {
+                let node = rng.index(n) as u32;
+                co.apply_event(&MembershipEvent::Crash {
+                    time: 1.0,
+                    node,
+                });
+            }
+            co.re_anchor();
+            // 1) No stranded partition: the full stitched overlay is
+            //    one component whatever died.
+            ensure(
+                components::is_connected(&co.overlay()),
+                format!("full overlay disconnected (n={n} K={k})"),
+            )?;
+            // 2) The anchor links alone connect every shard.
+            let mut sg = Graph::empty(k);
+            for &(u, v) in co.anchors() {
+                let su = co.shard_of(u).expect("anchor in universe");
+                let sv = co.shard_of(v).expect("anchor in universe");
+                ensure(su != sv, "anchor within one shard")?;
+                sg.add_edge(su, sv, 1.0);
+            }
+            ensure(
+                components::is_connected(&sg),
+                format!("shard graph disconnected (n={n} K={k})"),
+            )
+        },
+    );
+}
+
+#[test]
+fn compare_with_sharded_column_runs_end_to_end() {
+    // The acceptance path behind `dgro scenario compare --shards 8`,
+    // shrunk to one scenario so it stays CI-sized.
+    let specs = vec![parity_spec()];
+    let topologies = [
+        Topology::Dgro,
+        Topology::Chord,
+        Topology::DgroSharded,
+    ];
+    let rep = dgro::scenario::compare_opts(
+        &specs,
+        &topologies,
+        11,
+        dgro::scenario::CompareOpts {
+            period: 250.0,
+            threads: 1,
+            shards: 8,
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.summary.rows.len(), 1);
+    assert_eq!(rep.summary.header.len(), 4);
+    let row = &rep.summary.rows[0];
+    for cell in &row[1..] {
+        assert!(cell.is_finite() && *cell > 0.0);
+    }
+    // Parity in the compare table itself: sharded vs centralized DGRO.
+    let (dgro_mean, sharded_mean) = (row[1], row[3]);
+    assert!(
+        sharded_mean <= dgro_mean * 2.5,
+        "compare table: sharded {sharded_mean} vs dgro {dgro_mean}"
+    );
+    assert!(rep.render().contains("sharded"));
+}
