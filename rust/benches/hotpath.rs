@@ -9,6 +9,8 @@
 //!   * GA evaluation throughput, serial vs batched-parallel
 //!   * scenario engine periods/s, from-scratch rebuild vs incremental
 //!   * coordinator periods/s, centralized vs sharded (K=8)
+//!   * net coordinator frames/s over the sim and udp loopback
+//!     transports, plus probe-RTT overhead and sim-vs-udp diameter drift
 //!
 //! Besides the stdout report, the run writes **BENCH_hotpath.json** to
 //! the working directory (repo root under `cargo bench`): the
@@ -400,6 +402,85 @@ fn main() -> anyhow::Result<()> {
         ("mean_diameter_sharded", Json::num(rs.mean_diameter())),
     ]);
 
+    // --- Real-socket transport: frames/s + probe RTT overhead. ----------
+    let net_nodes = if quick { 24 } else { 48 };
+    let net_horizon = if quick { 500.0 } else { 1000.0 };
+    let mut ncfg = dgro::config::Config::default();
+    ncfg.nodes = net_nodes;
+    ncfg.model = "fabric".to_string();
+    ncfg.scorer = "greedy".to_string();
+    ncfg.adapt_period_ms = 250.0;
+    ncfg.seed = 7;
+    let mut nrng = Rng::new(7);
+    let nw = Model::Fabric.sample(net_nodes, &mut nrng);
+    let mut trng = Rng::new(0xC0FFEE);
+    let net_trace = dgro::membership::events::EventTrace::churn(
+        net_nodes,
+        net_horizon,
+        0.001,
+        &mut trng,
+    );
+    let t0 = std::time::Instant::now();
+    let mut sim_co = dgro::net::NetCoordinator::new(
+        ncfg.clone(),
+        nw.clone(),
+        dgro::net::SimTransport::new(nw.clone()),
+    )?;
+    let rep_sim = sim_co.run(&net_trace, net_horizon)?;
+    let sim_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let sim_frames = sim_co.frames_sent();
+    report(
+        &format!("net coordinator sim n={net_nodes}"),
+        &[sim_wall],
+        Some(("frames", sim_frames as f64)),
+    );
+    let t0 = std::time::Instant::now();
+    let mut udp_co = dgro::net::NetCoordinator::new(
+        ncfg.clone(),
+        nw.clone(),
+        dgro::net::UdpTransport::bind(
+            nw.clone(),
+            dgro::net::UdpTransport::DEFAULT_TIME_SCALE,
+        )?,
+    )?;
+    let rep_udp = udp_co.run(&net_trace, net_horizon)?;
+    let udp_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let udp_frames = udp_co.frames_sent();
+    report(
+        &format!("net coordinator udp n={net_nodes}"),
+        &[udp_wall],
+        Some(("frames", udp_frames as f64)),
+    );
+    // Probe overhead: how far measured one-way RTT/2 strays from the
+    // shaped matrix latency (0 on sim by construction).
+    let rtt_overhead = udp_co
+        .metrics
+        .series("net.rtt_abs_error_ms")
+        .map(|s| s.summary().mean)
+        .unwrap_or(0.0);
+    let mut parity_diff = 0.0f64;
+    for (a, b) in rep_sim.timeline.iter().zip(&rep_udp.timeline) {
+        parity_diff = parity_diff.max((a.2 - b.2).abs() as f64);
+    }
+    println!(
+        "net probe rtt overhead {rtt_overhead:.3} ms; \
+         sim-vs-udp max diameter diff {parity_diff:.3}"
+    );
+    let net_json = Json::obj(vec![
+        ("n", Json::num(net_nodes as f64)),
+        ("periods", Json::num(rep_sim.timeline.len() as f64)),
+        ("sim_frames", Json::num(sim_frames as f64)),
+        ("sim_frames_per_s", Json::num(sim_frames as f64 / sim_wall)),
+        ("udp_frames", Json::num(udp_frames as f64)),
+        ("udp_frames_per_s", Json::num(udp_frames as f64 / udp_wall)),
+        (
+            "udp_frames_lost",
+            Json::num(udp_co.metrics.counter("net.frames_lost") as f64),
+        ),
+        ("probe_rtt_overhead_ms", Json::num(rtt_overhead)),
+        ("max_diameter_diff", Json::num(parity_diff)),
+    ]);
+
     // --- Parallel construction. -----------------------------------------
     for m in [1usize, 8, 32] {
         let mut prng = Rng::new(3);
@@ -426,6 +507,7 @@ fn main() -> anyhow::Result<()> {
         ("ga", ga_json),
         ("scenario", scenario_json),
         ("sharded", sharded_json),
+        ("net", net_json),
     ]);
     std::fs::write("BENCH_hotpath.json", out.to_string())?;
     println!("wrote BENCH_hotpath.json (threads={threads} quick={quick})");

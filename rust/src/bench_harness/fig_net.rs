@@ -1,0 +1,77 @@
+//! "Figure 21" (beyond the paper): trace-replay parity across
+//! transports. One scenario spec, one seed, replayed twice through the
+//! message-level [`NetCoordinator`](crate::net::NetCoordinator) — once
+//! over the discrete-event [`SimTransport`](crate::net::SimTransport)
+//! (exact RTTs) and once over [`UdpTransport`](crate::net::UdpTransport)
+//! loopback (real sockets, shim-shaped delays, real scheduler jitter).
+//! The table tracks the per-period alive diameter side by side; the
+//! paper's deployment claim is that ρ-guided adaptation survives a real
+//! network stack, so `abs_diff` staying inside the tolerance pinned by
+//! rust/tests/net.rs is the headline.
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::net::TransportKind;
+use crate::scenario::{
+    ChurnSpec, ScenarioEngine, ScenarioReport, ScenarioSpec, Topology,
+};
+
+use super::FigureOpts;
+
+/// The replayed workload: fabric latencies + background churn, sized so
+/// the UDP replay stays in CI budgets.
+fn parity_spec(n: usize, horizon: f64) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "net-parity".into(),
+        about: "transport parity replay for fig 21".into(),
+        nodes: n,
+        initial_alive: n,
+        model: "fabric".into(),
+        horizon,
+        churn: vec![ChurnSpec::Poisson { rate: 0.001 }],
+        latency: vec![],
+    }
+}
+
+/// Regenerate the transport-parity table.
+pub fn run_opts(opts: FigureOpts) -> Result<Vec<Table>> {
+    let n = if opts.quick { 24 } else { 48 };
+    let horizon = if opts.quick { 1000.0 } else { 2000.0 };
+    let spec = parity_spec(n, horizon);
+    let run = |kind: TransportKind| -> Result<ScenarioReport> {
+        let mut engine = ScenarioEngine::new(spec.clone(), 0)?;
+        engine.transport = Some(kind);
+        engine.run(Topology::Dgro)
+    };
+    let sim = run(TransportKind::Sim)?;
+    let udp = run(TransportKind::Udp)?;
+    let mut table = Table::new(
+        "Fig 21: transport parity sim vs udp (fabric)",
+        &[
+            "t_ms",
+            "alive",
+            "diameter_sim",
+            "diameter_udp",
+            "abs_diff",
+            "rho_sim",
+            "rho_udp",
+            "swaps_sim",
+            "swaps_udp",
+        ],
+    );
+    for (a, b) in sim.rows.iter().zip(&udp.rows) {
+        table.row(vec![
+            a.t,
+            a.alive as f64,
+            a.diameter,
+            b.diameter,
+            (a.diameter - b.diameter).abs(),
+            a.rho,
+            b.rho,
+            a.swaps as f64,
+            b.swaps as f64,
+        ]);
+    }
+    Ok(vec![table])
+}

@@ -15,6 +15,7 @@ pub mod fig07;
 pub mod fig10;
 pub mod fig_ablation; // figs 12 & 16
 pub mod fig_baselines; // figs 13 & 17
+pub mod fig_net; // "fig 21": transport parity (sim vs udp replay)
 pub mod fig_parallel; // figs 14 & 18
 pub mod fig_scenarios; // "fig 19": beyond-paper scenario catalog
 pub mod fig_sharded; // "fig 20": sharded-coordinator partition scaling
@@ -85,14 +86,17 @@ pub fn run_figure_opts(fig: usize, opts: FigureOpts) -> Result<Vec<Table>> {
         18 => fig_parallel::run_realistic(&sweep),
         19 => fig_scenarios::run_opts(opts),
         20 => fig_sharded::run_opts(opts),
+        21 => fig_net::run_opts(opts),
         other => anyhow::bail!(
             "no figure {other} (valid: 1,5,6,7,9,10,11-18 from the paper, \
-             19 = scenario catalog, 20 = sharded partition scaling)"
+             19 = scenario catalog, 20 = sharded partition scaling, \
+             21 = transport parity)"
         ),
     }
 }
 
 /// All figure ids: paper order, then the beyond-paper scenario catalog
-/// (19) and the sharded-coordinator partition scaling (20).
-pub const ALL_FIGURES: [usize; 16] =
-    [1, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20];
+/// (19), the sharded-coordinator partition scaling (20) and the
+/// sim-vs-udp transport parity replay (21).
+pub const ALL_FIGURES: [usize; 17] =
+    [1, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21];

@@ -37,6 +37,11 @@ pub struct Config {
     pub proc_delay_ms: f64,
     /// Coordinator: re-measure / adapt every this many sim-ms.
     pub adapt_period_ms: f64,
+    /// Churn-aware ρ guard: when more than this many membership events
+    /// land in one adaptation period, the coordinator skips the ring
+    /// swap for that period (re-anchoring during a storm it cannot win
+    /// just burns churn). 0 disables the guard.
+    pub churn_guard: u64,
 }
 
 impl Default for Config {
@@ -55,6 +60,7 @@ impl Default for Config {
             scorer: "native".to_string(),
             proc_delay_ms: 1.0,
             adapt_period_ms: 500.0,
+            churn_guard: 0,
         }
     }
 }
@@ -82,6 +88,9 @@ impl Config {
                 "scorer" => cfg.scorer = val.as_str()?.to_string(),
                 "proc_delay_ms" => cfg.proc_delay_ms = val.as_f64()?,
                 "adapt_period_ms" => cfg.adapt_period_ms = val.as_f64()?,
+                "churn_guard" => {
+                    cfg.churn_guard = val.as_f64()? as u64
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -144,6 +153,7 @@ impl Config {
             ("scorer", Json::str(self.scorer.clone())),
             ("proc_delay_ms", Json::num(self.proc_delay_ms)),
             ("adapt_period_ms", Json::num(self.adapt_period_ms)),
+            ("churn_guard", Json::num(self.churn_guard as f64)),
         ])
     }
 }

@@ -112,6 +112,71 @@ pub(crate) fn swap_slot(
     best
 }
 
+/// The overlay restricted to alive members (faulty nodes do not relay)
+/// — shared by the centralized coordinator and the transport-backed
+/// [`NetCoordinator`](crate::net::NetCoordinator) so the alive filter
+/// can never drift between them.
+pub(crate) fn alive_overlay_graph(
+    krings: &KRing,
+    w: &LatencyMatrix,
+    membership: &MembershipList,
+) -> Graph {
+    let alive: std::collections::HashSet<u32> =
+        membership.alive().collect();
+    let mut g = Graph::empty(w.n());
+    for ring in &krings.rings {
+        for (u, v) in ring.edges() {
+            if alive.contains(&u) && alive.contains(&v) {
+                g.add_edge(
+                    u as usize,
+                    v as usize,
+                    w.get(u as usize, v as usize),
+                );
+            }
+        }
+    }
+    g
+}
+
+/// Execute a non-Keep ρ decision: materialize the ring (consuming the
+/// same RNG draws as ever — start index, then the ring itself), pick
+/// the slot via [`swap_slot`] and replace it. Returns the slot and the
+/// new visit order (for wire announcement) when a swap happened; the
+/// caller records metrics. Shared by both coordinator event loops.
+pub(crate) fn execute_swap(
+    krings: &mut KRing,
+    w: &LatencyMatrix,
+    choice: RingChoice,
+    rng: &mut Rng,
+) -> Option<(usize, Vec<u32>)> {
+    let start = rng.index(w.n());
+    let ring = materialize(choice, w, start, rng)?;
+    let slot = swap_slot(krings, w, choice);
+    let order = ring.order().to_vec();
+    krings.replace(slot, ring);
+    Some((slot, order))
+}
+
+/// Record the per-period series both coordinator event loops emit —
+/// one place to add a column, so scenario reports stay comparable
+/// across the in-process and transport-backed paths.
+pub(crate) fn record_period(
+    metrics: &mut Metrics,
+    d: f32,
+    rho: f64,
+    alive_cnt: usize,
+    alive_d: f32,
+    swap_delta: u64,
+    applied: u64,
+) {
+    metrics.observe("overlay.diameter", d as f64);
+    metrics.observe("overlay.rho", rho);
+    metrics.observe("overlay.alive", alive_cnt as f64);
+    metrics.observe("overlay.alive_diameter", alive_d as f64);
+    metrics.observe("rings.swaps_per_period", swap_delta as f64);
+    metrics.incr("membership.events_applied", applied);
+}
+
 /// Snapshot returned by [`Coordinator::run`].
 #[derive(Clone, Debug)]
 pub struct CoordinatorReport {
@@ -218,26 +283,26 @@ impl Coordinator {
 
     /// Overlay restricted to alive members (faulty nodes do not relay).
     pub fn alive_overlay(&self) -> Graph {
-        let mut g = Graph::empty(self.w.n());
-        let alive: std::collections::HashSet<u32> =
-            self.membership.alive().collect();
-        for ring in &self.krings.rings {
-            for (u, v) in ring.edges() {
-                if alive.contains(&u) && alive.contains(&v) {
-                    g.add_edge(
-                        u as usize,
-                        v as usize,
-                        self.w.get(u as usize, v as usize),
-                    );
-                }
-            }
-        }
-        g
+        alive_overlay_graph(&self.krings, &self.w, &self.membership)
     }
 
     /// One adaptation period: measure, decide, (maybe) swap one ring.
     /// Returns (rho, decision).
     pub fn adapt_once(&mut self) -> Result<(f64, RingChoice)> {
+        self.adapt_once_guarded(false)
+    }
+
+    /// [`Coordinator::adapt_once`] with the churn guard applied: when
+    /// `guard` is true the period still measures (ρ keeps tracking the
+    /// overlay) but the ring swap is suppressed — re-anchoring in the
+    /// middle of a churn storm replaces rings that the next burst of
+    /// events immediately invalidates. `run_dynamic` raises the guard
+    /// whenever a period applied more than [`Config::churn_guard`]
+    /// membership events.
+    pub fn adapt_once_guarded(
+        &mut self,
+        guard: bool,
+    ) -> Result<(f64, RingChoice)> {
         let g = self.overlay();
         let stats = measure(
             &self.w,
@@ -257,26 +322,23 @@ impl Coordinator {
         );
         match choice {
             RingChoice::Keep => {}
+            _ if guard => {
+                self.metrics.incr("rings.guard_skips", 1);
+            }
             choice => {
-                let start = self.rng.index(self.w.n());
-                if let Some(ring) =
-                    materialize(choice, &self.w, start, &mut self.rng)
+                if execute_swap(
+                    &mut self.krings,
+                    &self.w,
+                    choice,
+                    &mut self.rng,
+                )
+                .is_some()
                 {
-                    let slot = self.pick_swap_slot(choice);
-                    self.krings.replace(slot, ring);
                     self.metrics.incr("rings.swapped", 1);
                 }
             }
         }
         Ok((stats.rho(), choice))
-    }
-
-    /// Swap policy: when moving toward Shortest, replace a random ring;
-    /// when moving toward Random, replace a shortest-like ring. "Ring
-    /// randomness" is proxied by its circumference (random rings are
-    /// long, NN rings short).
-    fn pick_swap_slot(&mut self, choice: RingChoice) -> usize {
-        swap_slot(&self.krings, &self.w, choice)
     }
 
     /// Rebuild one ring with the configured scorer + partitioning (used
@@ -352,10 +414,10 @@ impl Coordinator {
                 ev_idx += 1;
                 applied += 1;
             }
-            let (rho, _) = self.adapt_once()?;
+            let guard =
+                self.cfg.churn_guard > 0 && applied > self.cfg.churn_guard;
+            let (rho, _) = self.adapt_once_guarded(guard)?;
             let d = diameter::diameter(&self.overlay());
-            self.metrics.observe("overlay.diameter", d as f64);
-            self.metrics.observe("overlay.rho", rho);
             let alive_cnt = self.membership.count_state(MemberState::Alive);
             // With every member alive the sub-overlay IS the overlay —
             // skip the second diameter (the dominant per-period cost on
@@ -365,15 +427,16 @@ impl Coordinator {
             } else {
                 diameter::diameter(&self.alive_overlay())
             };
-            self.metrics.observe("overlay.alive", alive_cnt as f64);
-            self.metrics
-                .observe("overlay.alive_diameter", alive_d as f64);
             let swaps_now = self.metrics.counter("rings.swapped");
-            self.metrics.observe(
-                "rings.swaps_per_period",
-                (swaps_now - swaps0) as f64,
+            record_period(
+                &mut self.metrics,
+                d,
+                rho,
+                alive_cnt,
+                alive_d,
+                swaps_now - swaps0,
+                applied,
             );
-            self.metrics.incr("membership.events_applied", applied);
             swaps0 = swaps_now;
             timeline.push((t, rho, d));
         }
@@ -502,15 +565,48 @@ mod tests {
     }
 
     #[test]
+    fn churn_guard_skips_swaps_during_storms() {
+        // Heavy churn (~40 events per 100 ms period) with a nearly
+        // degenerate Keep band, so every period reaches a swap decision:
+        // the guard, not indecision, must be what stops re-anchoring.
+        let mut free_cfg = cfg("fabric", 40);
+        free_cfg.epsilon = 0.45;
+        let mut guard_cfg = free_cfg.clone();
+        guard_cfg.churn_guard = 2;
+        let mut rng = Rng::new(11);
+        let trace = EventTrace::churn(40, 1000.0, 0.01, &mut rng);
+
+        let mut free = Coordinator::new(free_cfg).unwrap();
+        let rep_free = free.run(&trace, 1000.0).unwrap();
+        let mut guarded = Coordinator::new(guard_cfg).unwrap();
+        let rep_guard = guarded.run(&trace, 1000.0).unwrap();
+
+        assert!(rep_free.swaps >= 1, "unguarded run must swap");
+        assert!(
+            guarded.metrics.counter("rings.guard_skips") >= 1,
+            "guard never fired under storm churn"
+        );
+        assert!(
+            rep_guard.swaps <= rep_free.swaps,
+            "guard must not increase swaps: {} vs {}",
+            rep_guard.swaps,
+            rep_free.swaps
+        );
+        assert_eq!(free.metrics.counter("rings.guard_skips"), 0);
+    }
+
+    #[test]
     fn swap_slot_targets_right_ring() {
         let mut co = Coordinator::new(cfg("fabric", 34)).unwrap();
         // Make ring 0 the shortest ring: it must be spared when moving
         // toward Shortest, and targeted when moving toward Random.
         let s = shortest_ring(&co.w, 0);
         co.krings.replace(0, s);
-        let slot_for_shortest = co.pick_swap_slot(RingChoice::Shortest);
+        let slot_for_shortest =
+            swap_slot(&co.krings, &co.w, RingChoice::Shortest);
         assert_ne!(slot_for_shortest, 0, "should replace a long ring");
-        let slot_for_random = co.pick_swap_slot(RingChoice::Random);
+        let slot_for_random =
+            swap_slot(&co.krings, &co.w, RingChoice::Random);
         assert_eq!(slot_for_random, 0, "should replace the NN ring");
     }
 }

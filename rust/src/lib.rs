@@ -52,6 +52,7 @@ pub mod graph;
 pub mod latency;
 pub mod membership;
 pub mod metrics;
+pub mod net;
 pub mod par;
 pub mod prop;
 pub mod qnet;

@@ -5,6 +5,7 @@
 //!   serve     run the coordinator over a churn trace (adaptive loop)
 //!   measure   Algorithm-3 gossip measurement + ρ for a topology
 //!   scenario  deterministic churn + dynamic-latency workloads
+//!   net       run the coordinator over a real transport (UDP loopback)
 //!   figures   regenerate paper figures (CSV under reports/)
 //!   config    print the default config JSON
 //!
@@ -14,8 +15,10 @@
 //!   dgro scenario list
 //!   dgro scenario run --name flash-crowd --topology dgro --seed 7
 //!   dgro scenario run --name churn-storm --topology sharded --shards 8
+//!   dgro scenario run --name anchor-storm --transport udp --seed 0
 //!   dgro scenario compare --shards 8 --out reports
-//!   dgro figures --fig 13 --quick
+//!   dgro net demo --nodes 16 --transport udp
+//!   dgro figures --fig 21 --quick
 //!   dgro figures --all
 
 use anyhow::Result;
@@ -58,6 +61,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "measure" => cmd_measure(rest),
         "scenario" => cmd_scenario(rest),
+        "net" => cmd_net(rest),
         "figures" => cmd_figures(rest),
         "config" => {
             println!("{}", Config::default().to_json().to_string());
@@ -80,6 +84,7 @@ fn print_help() {
          \x20 serve     run the adaptive coordinator over a churn trace\n\
          \x20 measure   gossip latency measurement + rho for a topology\n\
          \x20 scenario  churn + dynamic-latency workloads (list|run|compare)\n\
+         \x20 net       coordinator over a real transport (demo)\n\
          \x20 figures   regenerate paper figures (CSV under reports/)\n\
          \x20 config    print the default config JSON\n\
          \n\
@@ -174,7 +179,13 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         .flag("horizon", "5000", "sim-time horizon (ms)")
         .flag("churn", "0.0005", "membership churn rate per node-ms")
         .flag("scorer", "greedy", "ring-rebuild scorer")
-        .flag("epsilon", "0.25", "rho decision band half-width");
+        .flag("epsilon", "0.25", "rho decision band half-width")
+        .flag(
+            "churn-guard",
+            "0",
+            "skip ring swaps in periods with more than this many \
+             membership events (0 = off)",
+        );
     let a = cmd.parse(raw)?;
     let mut cfg = Config::default();
     cfg.nodes = a.get_usize("nodes")?;
@@ -182,6 +193,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     cfg.seed = a.get_u64("seed")?;
     cfg.scorer = a.get("scorer").to_string();
     cfg.epsilon = a.get_f64("epsilon")?;
+    cfg.churn_guard = a.get_u64("churn-guard")?;
     let horizon = a.get_f64("horizon")?;
     let churn = a.get_f64("churn")?;
 
@@ -277,6 +289,23 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
          cross product (0 = all cores; the dgro coordinator path is \
          unaffected)",
     )
+    .flag(
+        "transport",
+        "",
+        "run the dgro topology over a message-level transport: sim|udp \
+         (empty = in-process coordinator; see docs/TRANSPORT.md)",
+    )
+    .flag(
+        "time-scale",
+        "0.05",
+        "udp transport only: real-ms of shaped delay per sim-ms",
+    )
+    .flag(
+        "churn-guard",
+        "0",
+        "skip ring swaps in periods with more than this many membership \
+         events (0 = off; centralized dgro paths only)",
+    )
     .flag("out", "", "also write CSV tables under this directory")
     .switch("quick", "compare against the trimmed baseline panel")
     .switch(
@@ -325,6 +354,12 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             engine.threads = threads;
             engine.incremental = !a.switch("rebuild");
             engine.shards = shards;
+            if !a.get("transport").is_empty() {
+                engine.transport =
+                    Some(dgro::net::TransportKind::parse(a.get("transport"))?);
+            }
+            engine.time_scale = a.get_f64("time-scale")?;
+            engine.churn_guard = a.get_u64("churn-guard")?;
             let report = engine.run(topology)?;
             print!("{}", report.render());
             if !a.get("out").is_empty() {
@@ -333,6 +368,18 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             Ok(())
         }
         "compare" => {
+            if !a.get("transport").is_empty() {
+                anyhow::bail!(
+                    "--transport applies to 'scenario run' only; \
+                     compare always uses the in-process coordinators"
+                );
+            }
+            if a.get_u64("churn-guard")? != 0 {
+                anyhow::bail!(
+                    "--churn-guard applies to 'scenario run' only; \
+                     compare runs every topology unguarded"
+                );
+            }
             let mut topologies: Vec<scenario::Topology> =
                 if a.switch("quick") {
                     vec![
@@ -375,6 +422,123 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             cmd.usage()
         ),
     }
+}
+
+fn cmd_net(raw: &[String]) -> Result<()> {
+    let cmd = base_flags(Command::new(
+        "net",
+        "run the coordinator over a real transport; actions: demo",
+    ))
+    .flag("transport", "udp", "message transport: sim|udp")
+    .flag("horizon", "1000", "sim-time horizon (ms)")
+    .flag("period", "250", "adaptation/measurement period (sim-ms)")
+    .flag("churn", "0.001", "membership churn rate per node-ms")
+    .flag(
+        "time-scale",
+        "0.05",
+        "udp only: real-ms of shaped delay per sim-ms",
+    )
+    .flag(
+        "churn-guard",
+        "0",
+        "skip ring swaps in periods with more than this many membership \
+         events (0 = off)",
+    );
+    let a = cmd.parse(raw)?;
+    let action =
+        a.positional.first().map(|s| s.as_str()).unwrap_or("demo");
+    if action != "demo" {
+        anyhow::bail!(
+            "unknown net action '{action}' (demo)\n\n{}",
+            cmd.usage()
+        );
+    }
+    let mut cfg = Config::default();
+    cfg.nodes = a.get_usize("nodes")?;
+    cfg.model = a.get("model").to_string();
+    cfg.seed = a.get_u64("seed")?;
+    cfg.k = a.get_usize("k")?;
+    cfg.scorer = "greedy".to_string();
+    cfg.adapt_period_ms = a.get_f64("period")?;
+    if !(cfg.adapt_period_ms > 0.0) {
+        anyhow::bail!("--period must be > 0");
+    }
+    cfg.churn_guard = a.get_u64("churn-guard")?;
+    let horizon = a.get_f64("horizon")?;
+    let churn = a.get_f64("churn")?;
+    let kind = dgro::net::TransportKind::parse(a.get("transport"))?;
+    let model = Model::parse(&cfg.model)
+        .ok_or_else(|| anyhow::anyhow!("bad --model"))?;
+    let mut rng = Rng::new(cfg.seed);
+    let w = model.sample(cfg.nodes, &mut rng);
+    let mut trng = Rng::new(cfg.seed ^ 0xC0FFEE);
+    let trace = EventTrace::churn(cfg.nodes, horizon, churn, &mut trng);
+    log_info!(
+        "net demo: transport={} n={} model={} horizon={horizon}ms \
+         events={}",
+        kind.name(),
+        cfg.nodes,
+        cfg.model,
+        trace.len()
+    );
+    match kind {
+        dgro::net::TransportKind::Sim => {
+            let t = dgro::net::SimTransport::new(w.clone());
+            net_demo_run(cfg, w, t, &trace, horizon)
+        }
+        dgro::net::TransportKind::Udp => {
+            let t = dgro::net::UdpTransport::bind(
+                w.clone(),
+                a.get_f64("time-scale")?,
+            )?;
+            net_demo_run(cfg, w, t, &trace, horizon)
+        }
+    }
+}
+
+fn net_demo_run<T: dgro::net::Transport>(
+    cfg: Config,
+    w: dgro::latency::LatencyMatrix,
+    transport: T,
+    trace: &EventTrace,
+    horizon: f64,
+) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut co = dgro::net::NetCoordinator::new(cfg, w, transport)?;
+    let show = co.cfg.nodes.min(3);
+    for node in 0..show {
+        println!("node {node} @ {}", co.addr(node as u32));
+    }
+    if co.cfg.nodes > 3 {
+        println!("... ({} nodes total)", co.cfg.nodes);
+    }
+    let rep = co.run(trace, horizon)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "initial diameter {:.2} -> final {:.2} ({} swaps, {} alive)",
+        rep.initial_diameter, rep.final_diameter, rep.swaps, rep.alive
+    );
+    for (t, rho, d) in rep.timeline.iter().take(20) {
+        println!("t={t:8.0}ms rho={rho:.3} diameter={d:.2}");
+    }
+    if rep.timeline.len() > 20 {
+        println!("... ({} periods total)", rep.timeline.len());
+    }
+    let frames = co.frames_sent();
+    let rtt_err = co
+        .metrics
+        .series("net.rtt_abs_error_ms")
+        .map(|s| s.summary().mean)
+        .unwrap_or(0.0);
+    println!(
+        "transport={} frames={frames} ({:.0} frames/s wall) \
+         probe_rtt_abs_error={rtt_err:.3}ms lost={}",
+        co.transport_name(),
+        frames as f64 / wall.max(1e-9),
+        co.metrics.counter("net.frames_lost")
+    );
+    print!("{}", co.metrics.report());
+    Ok(())
 }
 
 fn cmd_figures(raw: &[String]) -> Result<()> {

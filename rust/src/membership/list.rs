@@ -81,6 +81,16 @@ impl MembershipList {
             .map(|(&id, _)| id)
     }
 
+    /// Every known member as `(id, state, incarnation)`, ascending by
+    /// id — the comparable snapshot the transport-convergence tests
+    /// diff between node-local views.
+    pub fn snapshot(&self) -> Vec<(u32, MemberState, u64)> {
+        self.members
+            .iter()
+            .map(|(&id, m)| (id, m.state, m.incarnation))
+            .collect()
+    }
+
     /// Number of members currently in state `s`.
     pub fn count_state(&self, s: MemberState) -> usize {
         self.members.values().filter(|m| m.state == s).count()

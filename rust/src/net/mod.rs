@@ -1,0 +1,75 @@
+//! Real-socket transport subsystem: run the DGRO coordinator over
+//! message-level transports (docs/TRANSPORT.md).
+//!
+//! Three layers:
+//!
+//! * [`transport`] — the [`Transport`](transport::Transport) trait
+//!   (framed datagrams, peer addressing, clock, per-link delay shaping)
+//!   with [`SimTransport`](transport::SimTransport) over the
+//!   discrete-event engine and [`UdpTransport`](transport::UdpTransport)
+//!   over `std::net::UdpSocket` loopback with a deterministic
+//!   delay-injection shim driven by the same
+//!   [`LatencyMatrix`](crate::latency::LatencyMatrix) the simulator
+//!   uses.
+//! * [`wire`] — the versioned binary wire protocol: gossip probes,
+//!   membership events, ring-swap announcements, coordinator reports.
+//! * [`runner`] — the [`NetCoordinator`](runner::NetCoordinator): N
+//!   in-process node actors over the chosen transport, Algorithm-3
+//!   measurement from real message RTTs, ρ-guided ring swaps, the same
+//!   [`CoordinatorReport`](crate::coordinator::CoordinatorReport)
+//!   stream as the in-process coordinator.
+//!
+//! `dgro scenario run --transport sim|udp` replays any scenario trace
+//! over either transport; `rust/tests/net.rs` pins the sim-vs-udp
+//! per-period alive-diameter parity and figure 21 records it.
+
+pub mod runner;
+pub mod transport;
+pub mod wire;
+
+use anyhow::{bail, Result};
+
+pub use runner::NetCoordinator;
+pub use transport::{Delivery, SimTransport, Transport, UdpTransport};
+pub use wire::{Message, WIRE_VERSION};
+
+/// Which transport backs a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// [`SimTransport`]: discrete-event engine, exact delays.
+    Sim,
+    /// [`UdpTransport`]: UDP loopback processes with the delay shim.
+    Udp,
+}
+
+impl TransportKind {
+    /// Parse a CLI transport name.
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" => Ok(TransportKind::Sim),
+            "udp" => Ok(TransportKind::Udp),
+            other => bail!("unknown transport '{other}' (sim|udp)"),
+        }
+    }
+
+    /// Stable display/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Sim => "sim",
+            TransportKind::Udp => "udp",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_round_trips() {
+        for k in [TransportKind::Sim, TransportKind::Udp] {
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(TransportKind::parse("tcp").is_err());
+    }
+}

@@ -1,0 +1,842 @@
+//! The [`NetCoordinator`]: the DGRO adaptation loop driven over a real
+//! message-level [`Transport`] instead of matrix lookups.
+//!
+//! It spawns one in-process **node actor** per member. Each actor owns a
+//! deterministic RNG stream, its own membership view and its own copy of
+//! the K-ring overlay (updated by [`Message::RingSwap`] announcements,
+//! never read from the coordinator's state). Per adaptation period the
+//! coordinator:
+//!
+//! 1. disseminates the period's membership events to every node
+//!    ([`Message::Membership`], barriered on delivery),
+//! 2. runs the message-level Algorithm-3 measurement: every alive node
+//!    probes sampled neighbors and random alive peers with
+//!    [`Message::Ping`]/[`Message::Pong`] pairs — latency estimates come
+//!    from **measured RTTs on the transport clock**, not from the
+//!    matrix — then aggregates the per-node triples through
+//!    [`Message::GossipPush`] push-sum rounds over the overlay,
+//! 3. applies the §V ρ decision (with the churn guard of
+//!    [`Config::churn_guard`]) and, on a swap, broadcasts the new ring
+//!    as a [`Message::RingSwap`],
+//! 4. records the same metric series as the in-process
+//!    [`Coordinator`](crate::coordinator::Coordinator) and broadcasts a
+//!    [`Message::Report`] so every member sees the period summary.
+//!
+//! Reported diameters are evaluated against the coordinator's oracle
+//! latency view (exactly like the sim path) so transports are comparable
+//! — what the transport changes is the *measured* inputs to ρ and hence
+//! the adaptation decisions. With
+//! [`SimTransport`](crate::net::transport::SimTransport) RTTs are exact
+//! (2·δ(u,v)); with [`UdpTransport`](crate::net::transport::UdpTransport)
+//! they carry real scheduler jitter, and the parity test in
+//! rust/tests/net.rs pins how far that is allowed to push the per-period
+//! alive diameter.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::coordinator::service::{
+    alive_overlay_graph, execute_swap, record_period,
+};
+use crate::coordinator::CoordinatorReport;
+use crate::dgro::select::{decide, RingChoice, SelectConfig};
+use crate::gossip::measure::GossipStats;
+use crate::graph::{diameter, Graph};
+use crate::latency::LatencyMatrix;
+use crate::membership::events::{EventTrace, MembershipEvent};
+use crate::membership::list::{MemberState, MembershipList};
+use crate::metrics::Metrics;
+use crate::net::transport::{Delivery, Transport};
+use crate::net::wire::Message;
+use crate::topology::kring::KRing;
+use crate::topology::random_ring;
+use crate::util::rng::Rng;
+
+/// Receive-poll granularity (sim-ms). Each empty poll advances the
+/// transport clock by this much; small enough to keep UDP wall time low,
+/// large enough that the sim path converges in few sweeps.
+const POLL_MS: f64 = 10.0;
+
+/// Consecutive all-idle sweeps before a collection phase declares the
+/// outstanding frames lost (UDP drops; never reached on sim).
+const MAX_IDLE_SWEEPS: usize = 50;
+
+/// An in-flight RTT probe awaiting its pong.
+struct PendingProbe {
+    target: u32,
+    sent_at_ms: f64,
+    global: bool,
+}
+
+/// Per-measurement accumulator of one node's probe samples.
+#[derive(Default)]
+struct ProbeAccum {
+    local_sum: f64,
+    local_cnt: usize,
+    global_sum: f64,
+    global_cnt: usize,
+    min: f64,
+}
+
+/// One node's protocol state: everything it knows, it learned from its
+/// boot configuration or from frames on the transport.
+struct NodeActor {
+    id: u32,
+    rng: Rng,
+    membership: MembershipList,
+    /// Local copy of the K ring visit orders.
+    rings: Vec<Vec<u32>>,
+    next_seq: u32,
+    pending: HashMap<u32, PendingProbe>,
+    probe: ProbeAccum,
+    /// Push-sum accumulator: local, global, min, m, ml.
+    acc: [f64; 5],
+    /// Incoming pushes for the current gossip round, keyed by sender.
+    gossip_in: Vec<(u32, [f64; 5])>,
+    /// The last coordinator report this node received.
+    last_report: Option<(u32, f64, f64, f64)>,
+}
+
+impl NodeActor {
+    /// This node's overlay neighbors per its own ring view (sorted,
+    /// deduplicated — deterministic across transports).
+    fn neighbors(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            let n = ring.len();
+            for (i, &v) in ring.iter().enumerate() {
+                if v == self.id {
+                    out.push(ring[(i + n - 1) % n]);
+                    out.push(ring[(i + 1) % n]);
+                    break;
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn fresh_seq(&mut self) -> u32 {
+        let s = self.next_seq;
+        self.next_seq = self.next_seq.wrapping_add(1);
+        s
+    }
+}
+
+/// The coordinator event loop over a [`Transport`]. Mirrors
+/// [`Coordinator`](crate::coordinator::Coordinator)'s interface:
+/// construct, then [`NetCoordinator::run_dynamic`] over a trace, read
+/// the [`CoordinatorReport`] and [`Metrics`].
+pub struct NetCoordinator<T: Transport> {
+    /// Shared runtime configuration (nodes, ε, gossip knobs,
+    /// churn guard, adaptation period).
+    pub cfg: Config,
+    /// Oracle latency view: shapes the transport's per-link delays and
+    /// evaluates reported diameters. Never consulted for ρ.
+    pub w: LatencyMatrix,
+    /// The coordinator's copy of the K-ring overlay.
+    pub krings: KRing,
+    /// The coordinator's global membership table (fed by the trace).
+    pub membership: MembershipList,
+    /// Counters + per-period series (same names as the sim coordinator).
+    pub metrics: Metrics,
+    rng: Rng,
+    nodes: Vec<NodeActor>,
+    transport: T,
+    in_flight: usize,
+    alive_cache: HashSet<u32>,
+}
+
+impl<T: Transport> NetCoordinator<T> {
+    /// Spawn `cfg.nodes` node actors over `transport`. The transport
+    /// must already be shaped by `w` (same node count); ring state boots
+    /// identically on every node, like a deployment config.
+    pub fn new(cfg: Config, w: LatencyMatrix, transport: T) -> Result<Self> {
+        cfg.validate()?;
+        if w.n() != cfg.nodes {
+            bail!(
+                "latency matrix has {} nodes but cfg.nodes = {}",
+                w.n(),
+                cfg.nodes
+            );
+        }
+        if transport.n() != cfg.nodes {
+            bail!(
+                "transport has {} endpoints but cfg.nodes = {}",
+                transport.n(),
+                cfg.nodes
+            );
+        }
+        let k = cfg.effective_k();
+        let mut rng = Rng::new(cfg.seed);
+        let krings = KRing::new(
+            (0..k).map(|_| random_ring(cfg.nodes, &mut rng)).collect(),
+        );
+        let boot_rings: Vec<Vec<u32>> = krings
+            .rings
+            .iter()
+            .map(|r| r.order().to_vec())
+            .collect();
+        let nodes = (0..cfg.nodes as u32)
+            .map(|id| NodeActor {
+                id,
+                rng: rng.fork(0x4E0D_E000 + id as u64),
+                membership: MembershipList::full(cfg.nodes),
+                rings: boot_rings.clone(),
+                next_seq: 0,
+                pending: HashMap::new(),
+                probe: ProbeAccum::default(),
+                acc: [0.0; 5],
+                gossip_in: Vec::new(),
+                last_report: None,
+            })
+            .collect();
+        Ok(NetCoordinator {
+            membership: MembershipList::full(cfg.nodes),
+            metrics: Metrics::new(),
+            alive_cache: (0..cfg.nodes as u32).collect(),
+            nodes,
+            transport,
+            in_flight: 0,
+            rng,
+            krings,
+            w,
+            cfg,
+        })
+    }
+
+    /// The underlying transport's name ("sim" / "udp").
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Peer address of `node` on the underlying transport.
+    pub fn addr(&self, node: u32) -> String {
+        self.transport.addr(node)
+    }
+
+    /// Total frames the transport carried so far.
+    pub fn frames_sent(&self) -> u64 {
+        self.transport.frames_sent()
+    }
+
+    /// Per-node membership snapshots (`(id, state, incarnation)` rows,
+    /// ascending) — what each actor *believes*, for convergence tests.
+    pub fn node_views(&self) -> Vec<Vec<(u32, MemberState, u64)>> {
+        self.nodes.iter().map(|a| a.membership.snapshot()).collect()
+    }
+
+    /// The last [`Message::Report`] each node received, as
+    /// `(period, t_ms, rho, diameter)`.
+    pub fn node_reports(&self) -> Vec<Option<(u32, f64, f64, f64)>> {
+        self.nodes.iter().map(|a| a.last_report).collect()
+    }
+
+    fn send(&mut self, src: u32, dst: u32, msg: &Message) -> Result<()> {
+        self.transport.send(src, dst, &msg.encode())?;
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    /// Broadcast a control message from the coordinator seat (node 0):
+    /// sent on the wire to every other node, applied locally on node 0.
+    fn broadcast(&mut self, msg: &Message) -> Result<()> {
+        self.apply_control(0, msg);
+        for dst in 1..self.cfg.nodes as u32 {
+            self.send(0, dst, msg)?;
+        }
+        Ok(())
+    }
+
+    /// Apply a control message to one actor's state.
+    fn apply_control(&mut self, node: u32, msg: &Message) {
+        let actor = &mut self.nodes[node as usize];
+        match msg {
+            Message::Membership { event } => {
+                actor.membership.apply_trace_event(event);
+            }
+            Message::RingSwap { slot, order } => {
+                let slot = *slot as usize;
+                if slot < actor.rings.len()
+                    && order.len() == actor.rings[slot].len()
+                {
+                    actor.rings[slot] = order.clone();
+                }
+            }
+            Message::Report {
+                period,
+                t_ms,
+                rho,
+                diameter,
+                ..
+            } => {
+                actor.last_report =
+                    Some((*period, *t_ms, *rho, *diameter));
+            }
+            _ => {}
+        }
+    }
+
+    /// Handle one delivered frame at `node`. Decodes, dispatches, and
+    /// answers pings. Undecodable frames (corrupt or stray datagrams on
+    /// the real-socket path) are counted and dropped rather than
+    /// aborting the run.
+    fn on_delivery(&mut self, node: u32, d: Delivery) -> Result<()> {
+        self.in_flight = self.in_flight.saturating_sub(1);
+        // The src field came off the wire: validate it before using it
+        // as a reply address or an actor index — a stray datagram must
+        // be dropped, not abort the run (self-sends are transport
+        // errors, so a src equal to the receiver is equally bogus).
+        if d.src as usize >= self.cfg.nodes || d.src == node {
+            self.metrics.incr("net.decode_errors", 1);
+            return Ok(());
+        }
+        let msg = match Message::decode(&d.frame) {
+            Ok(msg) => msg,
+            Err(_) => {
+                self.metrics.incr("net.decode_errors", 1);
+                return Ok(());
+            }
+        };
+        match msg {
+            Message::Ping { seq } => {
+                if self.alive_cache.contains(&node) {
+                    // NTP-style: report how long this ping sat between
+                    // its delivery and our reply, so the prober can
+                    // subtract receiver-side scheduling slop from the
+                    // measured round trip.
+                    let hold_ms =
+                        (self.transport.now_ms() - d.at_ms).max(0.0);
+                    self.send(
+                        node,
+                        d.src,
+                        &Message::Pong { seq, hold_ms },
+                    )?;
+                }
+            }
+            Message::Pong { seq, hold_ms } => {
+                let at_ms = d.at_ms;
+                let actor = &mut self.nodes[node as usize];
+                if let Some(p) = actor.pending.remove(&seq) {
+                    let one_way =
+                        ((at_ms - p.sent_at_ms - hold_ms) / 2.0).max(0.0);
+                    let truth =
+                        self.w.get(node as usize, p.target as usize) as f64;
+                    self.metrics.observe(
+                        "net.rtt_abs_error_ms",
+                        (one_way - truth).abs(),
+                    );
+                    if p.global {
+                        actor.probe.global_sum += one_way;
+                        actor.probe.global_cnt += 1;
+                        if actor.probe.global_cnt == 1
+                            || one_way < actor.probe.min
+                        {
+                            actor.probe.min = one_way;
+                        }
+                    } else {
+                        actor.probe.local_sum += one_way;
+                        actor.probe.local_cnt += 1;
+                    }
+                }
+            }
+            Message::GossipPush {
+                local,
+                global,
+                min,
+                m,
+                ml,
+            } => {
+                self.nodes[node as usize]
+                    .gossip_in
+                    .push((d.src, [local, global, min, m, ml]));
+            }
+            control => self.apply_control(node, &control),
+        }
+        Ok(())
+    }
+
+    /// Pump deliveries round-robin until every in-flight frame landed or
+    /// the idle cap fires (UDP loss). Returns frames written off.
+    fn collect(&mut self) -> Result<u64> {
+        let n = self.cfg.nodes as u32;
+        let mut idle = 0usize;
+        while self.in_flight > 0 && idle < MAX_IDLE_SWEEPS {
+            let mut any = false;
+            for node in 0..n {
+                while let Some(d) = self.transport.recv(node, POLL_MS) {
+                    any = true;
+                    self.on_delivery(node, d)?;
+                }
+            }
+            if any {
+                idle = 0;
+            } else {
+                idle += 1;
+            }
+        }
+        let lost = self.in_flight as u64;
+        if lost > 0 {
+            self.metrics.incr("net.frames_lost", lost);
+            self.in_flight = 0;
+        }
+        Ok(lost)
+    }
+
+    /// Message-level Algorithm 3: probe RTTs, then push-sum gossip
+    /// aggregation, all over the transport. Returns the network stats
+    /// the ρ rule consumes.
+    fn measure_net(&mut self) -> Result<GossipStats> {
+        let alive: Vec<u32> = self.membership.alive().collect();
+        self.alive_cache = alive.iter().copied().collect();
+        let frames0 = self.transport.frames_sent();
+        let k = self.cfg.gossip_samples.max(1);
+        let n = self.cfg.nodes;
+        if alive.len() < 2 {
+            return Ok(GossipStats {
+                local: 0.0,
+                global: 0.0,
+                min: 0.0,
+                messages: 0,
+            });
+        }
+
+        // Rings and membership are frozen for the whole measurement, so
+        // each alive node's alive-filtered neighbor list is computed
+        // once here and reused by the probe phase and every gossip
+        // round (it would otherwise be recomputed rounds × alive
+        // times).
+        let neigh_alive: Vec<Vec<u32>> = (0..n as u32)
+            .map(|u| {
+                if !self.alive_cache.contains(&u) {
+                    return Vec::new();
+                }
+                self.nodes[u as usize]
+                    .neighbors()
+                    .into_iter()
+                    .filter(|v| self.alive_cache.contains(v))
+                    .collect()
+            })
+            .collect();
+
+        // Phase 1 — RTT probes. Sampling draws come from each node's own
+        // RNG stream in a fixed order, so the probe plan is identical on
+        // every transport; only the measured RTTs differ.
+        for &u in &alive {
+            self.nodes[u as usize].probe = ProbeAccum::default();
+            self.nodes[u as usize].pending.clear();
+            let neigh = &neigh_alive[u as usize];
+            let mut plan: Vec<(u32, u32, bool)> = Vec::with_capacity(2 * k);
+            {
+                let actor = &mut self.nodes[u as usize];
+                for _ in 0..k {
+                    if neigh.is_empty() {
+                        break;
+                    }
+                    let tgt = neigh[actor.rng.index(neigh.len())];
+                    plan.push((actor.fresh_seq(), tgt, false));
+                }
+                for _ in 0..k {
+                    let tgt = loop {
+                        let v = actor.rng.index(n) as u32;
+                        if v != u {
+                            break v;
+                        }
+                    };
+                    if !self.alive_cache.contains(&tgt) {
+                        continue; // dead peers cannot answer probes
+                    }
+                    plan.push((actor.fresh_seq(), tgt, true));
+                }
+            }
+            for (seq, tgt, global) in plan {
+                let sent_at_ms = self.transport.now_ms();
+                self.nodes[u as usize].pending.insert(
+                    seq,
+                    PendingProbe {
+                        target: tgt,
+                        sent_at_ms,
+                        global,
+                    },
+                );
+                self.send(u, tgt, &Message::Ping { seq })?;
+            }
+        }
+        self.collect()?;
+
+        // Seed the push-sum accumulators from the probe results. Both
+        // weights follow the same rule: a node that contributed no
+        // sample of a kind carries zero mass for that kind (`m` for
+        // global/min, `ml` for local), so nodes whose probes all hit
+        // dead peers or got lost cannot drag the network averages
+        // toward zero during storms.
+        for &u in &alive {
+            let actor = &mut self.nodes[u as usize];
+            let p = &actor.probe;
+            let has_local = p.local_cnt > 0;
+            let has_global = p.global_cnt > 0;
+            actor.acc = [
+                if has_local {
+                    p.local_sum / p.local_cnt as f64
+                } else {
+                    0.0
+                },
+                if has_global {
+                    p.global_sum / p.global_cnt as f64
+                } else {
+                    0.0
+                },
+                if has_global { p.min } else { 0.0 },
+                if has_global { 1.0 } else { 0.0 },
+                if has_local { 1.0 } else { 0.0 },
+            ];
+        }
+
+        // Phase 2 — push-sum rounds. Each round is barriered and every
+        // node merges its incoming pushes in ascending sender order, so
+        // the float arithmetic is order-identical across transports.
+        for _ in 0..self.cfg.gossip_rounds {
+            for &u in &alive {
+                let neigh = &neigh_alive[u as usize];
+                if neigh.is_empty() {
+                    continue;
+                }
+                let actor = &mut self.nodes[u as usize];
+                let v = neigh[actor.rng.index(neigh.len())];
+                let mut half = [0.0; 5];
+                for (h, a) in half.iter_mut().zip(actor.acc.iter_mut()) {
+                    *a /= 2.0;
+                    *h = *a;
+                }
+                self.send(
+                    u,
+                    v,
+                    &Message::GossipPush {
+                        local: half[0],
+                        global: half[1],
+                        min: half[2],
+                        m: half[3],
+                        ml: half[4],
+                    },
+                )?;
+            }
+            self.collect()?;
+            for &u in &alive {
+                let actor = &mut self.nodes[u as usize];
+                let mut incoming = std::mem::take(&mut actor.gossip_in);
+                incoming.sort_by_key(|&(src, _)| src);
+                for (_, vals) in incoming {
+                    for (a, x) in actor.acc.iter_mut().zip(vals.iter()) {
+                        *a += x;
+                    }
+                }
+            }
+        }
+
+        // Readout — same weighted averaging as the in-process
+        // Algorithm 3 (isolated nodes do not dilute the local average).
+        let mut l = 0.0;
+        let mut cnt_l = 0usize;
+        let mut gl = 0.0;
+        let mut mn = 0.0;
+        let mut cnt = 0usize;
+        for &u in &alive {
+            let a = &self.nodes[u as usize].acc;
+            if a[3] > 1e-9 {
+                gl += a[1] / a[3];
+                mn += a[2] / a[3];
+                cnt += 1;
+            }
+            if a[4] > 1e-9 {
+                l += a[0] / a[4];
+                cnt_l += 1;
+            }
+        }
+        let messages =
+            (self.transport.frames_sent() - frames0) as usize;
+        Ok(GossipStats {
+            local: l / cnt_l.max(1) as f64,
+            global: gl / cnt.max(1) as f64,
+            min: mn / cnt.max(1) as f64,
+            messages,
+        })
+    }
+
+    /// Overlay graph over the full node set (oracle weights).
+    pub fn overlay(&self) -> Graph {
+        self.krings.to_graph(&self.w)
+    }
+
+    /// Overlay restricted to alive members (the same alive filter the
+    /// in-process coordinator applies).
+    pub fn alive_overlay(&self) -> Graph {
+        alive_overlay_graph(&self.krings, &self.w, &self.membership)
+    }
+
+    /// Run over a membership trace with a time-varying latency view —
+    /// the transport-backed counterpart of
+    /// [`Coordinator::run_dynamic`](crate::coordinator::Coordinator::run_dynamic),
+    /// recording the same per-period series.
+    pub fn run_dynamic(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+        mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+    ) -> Result<CoordinatorReport> {
+        let initial_diameter = diameter::diameter(&self.overlay());
+        let mut timeline = Vec::new();
+        let frames_start = self.transport.frames_sent();
+        let initial_swaps = self.metrics.counter("rings.swapped");
+        let mut swaps0 = initial_swaps;
+        let mut t = 0.0;
+        let mut ev_idx = 0;
+        let mut period = 0u32;
+        while t < horizon {
+            t += self.cfg.adapt_period_ms;
+            period += 1;
+            if let Some(w) = latency_at(t) {
+                if w.n() != self.w.n() {
+                    bail!(
+                        "latency update has {} nodes, overlay has {}",
+                        w.n(),
+                        self.w.n()
+                    );
+                }
+                self.transport.set_latency(&w)?;
+                self.w = w;
+                self.metrics.incr("latency.updates", 1);
+            }
+            // Disseminate this period's membership events, barriered so
+            // every node's view is current before it measures.
+            let mut applied = 0u64;
+            while ev_idx < trace.events.len()
+                && trace.events[ev_idx].time() <= t
+            {
+                let ev = trace.events[ev_idx];
+                let counter = match ev {
+                    MembershipEvent::Join { .. } => "membership.joins",
+                    MembershipEvent::Leave { .. } => "membership.leaves",
+                    MembershipEvent::Crash { .. } => "membership.crashes",
+                };
+                self.membership.apply_trace_event(&ev);
+                self.metrics.incr(counter, 1);
+                self.broadcast(&Message::Membership { event: ev })?;
+                ev_idx += 1;
+                applied += 1;
+            }
+            self.collect()?;
+
+            // Measure over the wire, decide, maybe swap.
+            let stats = self.measure_net()?;
+            self.metrics
+                .incr("gossip.messages", stats.messages as u64);
+            let rho = stats.rho();
+            let choice = decide(
+                &stats,
+                SelectConfig {
+                    epsilon: self.cfg.epsilon,
+                },
+            );
+            let guard = self.cfg.churn_guard > 0
+                && applied > self.cfg.churn_guard;
+            match choice {
+                RingChoice::Keep => {}
+                _ if guard => {
+                    self.metrics.incr("rings.guard_skips", 1);
+                }
+                choice => {
+                    if let Some((slot, order)) = execute_swap(
+                        &mut self.krings,
+                        &self.w,
+                        choice,
+                        &mut self.rng,
+                    ) {
+                        self.metrics.incr("rings.swapped", 1);
+                        self.broadcast(&Message::RingSwap {
+                            slot: slot as u32,
+                            order,
+                        })?;
+                        self.collect()?;
+                    }
+                }
+            }
+
+            // Record the period — same series as the sim coordinator.
+            let d = diameter::diameter(&self.overlay());
+            let alive_cnt = self.membership.count_state(MemberState::Alive);
+            let alive_d = if alive_cnt == self.membership.len() {
+                d
+            } else {
+                diameter::diameter(&self.alive_overlay())
+            };
+            let swaps_now = self.metrics.counter("rings.swapped");
+            record_period(
+                &mut self.metrics,
+                d,
+                rho,
+                alive_cnt,
+                alive_d,
+                swaps_now - swaps0,
+                applied,
+            );
+            swaps0 = swaps_now;
+            timeline.push((t, rho, d));
+
+            // Close the loop: every member hears the period summary.
+            self.broadcast(&Message::Report {
+                period,
+                t_ms: t,
+                rho,
+                diameter: d as f64,
+                alive: alive_cnt as u32,
+                swaps: (swaps_now - initial_swaps) as u32,
+            })?;
+            self.collect()?;
+        }
+        self.metrics.incr(
+            "net.frames_sent",
+            self.transport.frames_sent() - frames_start,
+        );
+        Ok(CoordinatorReport {
+            final_diameter: timeline
+                .last()
+                .map(|&(_, _, d)| d)
+                .unwrap_or(initial_diameter),
+            initial_diameter,
+            swaps: (swaps0 - initial_swaps) as usize,
+            alive: self.membership.count_state(MemberState::Alive),
+            timeline,
+        })
+    }
+
+    /// Run over a static latency view (no dynamic effects).
+    pub fn run(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+    ) -> Result<CoordinatorReport> {
+        self.run_dynamic(trace, horizon, |_| None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::Model;
+    use crate::net::transport::SimTransport;
+
+    fn cfg(nodes: usize) -> Config {
+        let mut c = Config::default();
+        c.nodes = nodes;
+        c.model = "fabric".to_string();
+        c.scorer = "greedy".to_string();
+        c.adapt_period_ms = 250.0;
+        c.seed = 7;
+        c
+    }
+
+    fn sample(nodes: usize, seed: u64) -> LatencyMatrix {
+        let mut rng = Rng::new(seed);
+        Model::Fabric.sample(nodes, &mut rng)
+    }
+
+    #[test]
+    fn net_coordinator_adapts_over_sim_transport() {
+        let w = sample(34, 7);
+        let mut co = NetCoordinator::new(
+            cfg(34),
+            w.clone(),
+            SimTransport::new(w),
+        )
+        .unwrap();
+        let rep = co.run(&EventTrace::default(), 1000.0).unwrap();
+        assert_eq!(rep.timeline.len(), 4);
+        // Clustered fabric latencies + random boot rings: ρ is high, the
+        // coordinator must swap toward shortest rings and improve.
+        assert!(rep.swaps >= 1, "expected at least one swap");
+        assert!(
+            rep.final_diameter <= rep.initial_diameter,
+            "diameter {} -> {}",
+            rep.initial_diameter,
+            rep.final_diameter
+        );
+        // Every period's ρ flowed from measured RTTs; on sim they are
+        // exact, so the probe error series must be ~0.
+        let err = co.metrics.series("net.rtt_abs_error_ms").unwrap();
+        let max_err =
+            err.values.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max_err < 1e-6, "sim RTTs must be exact, got {max_err}");
+        assert_eq!(co.metrics.counter("net.frames_lost"), 0);
+        // Ring-swap announcements kept every actor's view in sync with
+        // the coordinator's rings.
+        for actor in &co.nodes {
+            for (slot, ring) in co.krings.rings.iter().enumerate() {
+                assert_eq!(actor.rings[slot].as_slice(), ring.order());
+            }
+        }
+    }
+
+    #[test]
+    fn membership_events_reach_every_actor() {
+        let w = sample(12, 3);
+        let mut co = NetCoordinator::new(
+            cfg(12),
+            w.clone(),
+            SimTransport::new(w),
+        )
+        .unwrap();
+        let trace = EventTrace {
+            events: vec![
+                MembershipEvent::Crash {
+                    time: 100.0,
+                    node: 3,
+                },
+                MembershipEvent::Leave {
+                    time: 300.0,
+                    node: 5,
+                },
+            ],
+        };
+        co.run(&trace, 500.0).unwrap();
+        let global = co.membership.snapshot();
+        for (i, view) in co.node_views().iter().enumerate() {
+            assert_eq!(view, &global, "node {i} diverged");
+        }
+        // And every node heard the final report.
+        for rep in co.node_reports() {
+            let (period, ..) = rep.expect("report received");
+            assert_eq!(period, 2);
+        }
+    }
+
+    #[test]
+    fn churn_guard_suppresses_swaps_on_net_path() {
+        let w = sample(20, 5);
+        let mut c = cfg(20);
+        c.churn_guard = 1;
+        // A nearly-degenerate Keep band so the period reaches a swap
+        // decision for sure — the guard, not indecision, must stop it.
+        c.epsilon = 0.45;
+        let mut co = NetCoordinator::new(
+            c,
+            w.clone(),
+            SimTransport::new(w),
+        )
+        .unwrap();
+        // 4 crashes in period 1 exceed the guard threshold of 1.
+        let trace = EventTrace {
+            events: (0..4)
+                .map(|i| MembershipEvent::Crash {
+                    time: 10.0 * (i + 1) as f64,
+                    node: i,
+                })
+                .collect(),
+        };
+        let rep = co.run(&trace, 250.0).unwrap();
+        assert_eq!(rep.swaps, 0, "guarded period must not swap");
+        assert_eq!(co.metrics.counter("rings.guard_skips"), 1);
+    }
+}

@@ -1,0 +1,409 @@
+//! Wire protocol for the message-level transport: compact binary
+//! framing for gossip probes, membership events, ring-swap announcements
+//! and coordinator reports (docs/TRANSPORT.md has the byte-level table).
+//!
+//! Every frame starts with a version byte ([`WIRE_VERSION`]) and a tag
+//! byte; integers are little-endian, floats are IEEE-754 bit patterns.
+//! Decoding is strict: unknown versions, unknown tags, truncated frames
+//! and trailing bytes are all hard errors — a membership protocol that
+//! silently mis-parses a frame corrupts views on every node downstream,
+//! so the boundary rejects instead.
+
+use anyhow::{bail, Result};
+
+use crate::membership::events::MembershipEvent;
+
+/// Current wire version. Bump on any incompatible layout change; peers
+/// reject frames whose version byte differs.
+pub const WIRE_VERSION: u8 = 1;
+
+/// One protocol message. The transport moves opaque frames; this enum is
+/// the typed layer on top.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// RTT probe request (Algorithm-3 sampling). `seq` matches the
+    /// probe to its [`Message::Pong`].
+    Ping {
+        /// Prober-local sequence number echoed by the reply.
+        seq: u32,
+    },
+    /// RTT probe reply: echoes the ping's `seq`, carrying the
+    /// responder's processing delay (NTP-style) so the prober can
+    /// subtract it — without this, receiver-side scheduling slop would
+    /// systematically inflate every RTT measured over real sockets.
+    Pong {
+        /// The echoed [`Message::Ping`] sequence number.
+        seq: u32,
+        /// Time the responder held the ping before replying
+        /// (transport-clock ms); the prober subtracts it from the
+        /// measured round trip.
+        hold_ms: f64,
+    },
+    /// One push-sum gossip step: half of the sender's accumulated
+    /// (local, global, min) latency triple plus the push-sum weights
+    /// (`m` = node-count mass, `ml` = mass of nodes that contributed a
+    /// local sample).
+    GossipPush {
+        /// Accumulated mean-neighbor-latency mass.
+        local: f64,
+        /// Accumulated mean-random-latency mass.
+        global: f64,
+        /// Accumulated min-sampled-latency mass.
+        min: f64,
+        /// Push-sum node-count weight.
+        m: f64,
+        /// Push-sum weight of local-sample contributors.
+        ml: f64,
+    },
+    /// A membership change disseminated to every node (join / leave /
+    /// crash with its trace timestamp).
+    Membership {
+        /// The event being disseminated.
+        event: MembershipEvent,
+    },
+    /// Ring-swap announcement: ring `slot` of the K-ring overlay is
+    /// replaced by the given visit order.
+    RingSwap {
+        /// Which ring slot is replaced.
+        slot: u32,
+        /// The new ring's visit order (a permutation of `0..n`).
+        order: Vec<u32>,
+    },
+    /// Per-period coordinator report broadcast to the membership — the
+    /// same numbers the in-process
+    /// [`CoordinatorReport`](crate::coordinator::CoordinatorReport)
+    /// timeline carries.
+    Report {
+        /// Adaptation period index.
+        period: u32,
+        /// Sim-time at the end of the period (ms).
+        t_ms: f64,
+        /// ρ statistic for the period.
+        rho: f64,
+        /// Full-overlay diameter.
+        diameter: f64,
+        /// Alive members.
+        alive: u32,
+        /// Cumulative ring swaps.
+        swaps: u32,
+    },
+}
+
+const TAG_PING: u8 = 0;
+const TAG_PONG: u8 = 1;
+const TAG_GOSSIP: u8 = 2;
+const TAG_MEMBERSHIP: u8 = 3;
+const TAG_RINGSWAP: u8 = 4;
+const TAG_REPORT: u8 = 5;
+
+const EV_JOIN: u8 = 0;
+const EV_LEAVE: u8 = 1;
+const EV_CRASH: u8 = 2;
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Strict little-endian reader over a frame body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated frame: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "trailing garbage: {} bytes past the message end",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Message {
+    /// Encode into a framed byte vector (version + tag + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.push(WIRE_VERSION);
+        match self {
+            Message::Ping { seq } => {
+                out.push(TAG_PING);
+                put_u32(&mut out, *seq);
+            }
+            Message::Pong { seq, hold_ms } => {
+                out.push(TAG_PONG);
+                put_u32(&mut out, *seq);
+                put_f64(&mut out, *hold_ms);
+            }
+            Message::GossipPush {
+                local,
+                global,
+                min,
+                m,
+                ml,
+            } => {
+                out.push(TAG_GOSSIP);
+                for x in [local, global, min, m, ml] {
+                    put_f64(&mut out, *x);
+                }
+            }
+            Message::Membership { event } => {
+                out.push(TAG_MEMBERSHIP);
+                let (kind, time, node) = match *event {
+                    MembershipEvent::Join { time, node } => {
+                        (EV_JOIN, time, node)
+                    }
+                    MembershipEvent::Leave { time, node } => {
+                        (EV_LEAVE, time, node)
+                    }
+                    MembershipEvent::Crash { time, node } => {
+                        (EV_CRASH, time, node)
+                    }
+                };
+                out.push(kind);
+                put_f64(&mut out, time);
+                put_u32(&mut out, node);
+            }
+            Message::RingSwap { slot, order } => {
+                out.push(TAG_RINGSWAP);
+                put_u32(&mut out, *slot);
+                put_u32(&mut out, order.len() as u32);
+                for &v in order {
+                    put_u32(&mut out, v);
+                }
+            }
+            Message::Report {
+                period,
+                t_ms,
+                rho,
+                diameter,
+                alive,
+                swaps,
+            } => {
+                out.push(TAG_REPORT);
+                put_u32(&mut out, *period);
+                put_f64(&mut out, *t_ms);
+                put_f64(&mut out, *rho);
+                put_f64(&mut out, *diameter);
+                put_u32(&mut out, *alive);
+                put_u32(&mut out, *swaps);
+            }
+        }
+        out
+    }
+
+    /// Decode a framed byte vector. Rejects unknown versions and tags,
+    /// truncated frames and trailing bytes.
+    pub fn decode(frame: &[u8]) -> Result<Message> {
+        if frame.len() < 2 {
+            bail!("frame too short ({} bytes)", frame.len());
+        }
+        if frame[0] != WIRE_VERSION {
+            bail!(
+                "unknown wire version {} (speaking {})",
+                frame[0],
+                WIRE_VERSION
+            );
+        }
+        let tag = frame[1];
+        let mut r = Reader {
+            buf: &frame[2..],
+            pos: 0,
+        };
+        let msg = match tag {
+            TAG_PING => Message::Ping { seq: r.u32()? },
+            TAG_PONG => Message::Pong {
+                seq: r.u32()?,
+                hold_ms: r.f64()?,
+            },
+            TAG_GOSSIP => Message::GossipPush {
+                local: r.f64()?,
+                global: r.f64()?,
+                min: r.f64()?,
+                m: r.f64()?,
+                ml: r.f64()?,
+            },
+            TAG_MEMBERSHIP => {
+                let kind = r.u8()?;
+                let time = r.f64()?;
+                let node = r.u32()?;
+                let event = match kind {
+                    EV_JOIN => MembershipEvent::Join { time, node },
+                    EV_LEAVE => MembershipEvent::Leave { time, node },
+                    EV_CRASH => MembershipEvent::Crash { time, node },
+                    other => bail!("unknown membership kind {other}"),
+                };
+                Message::Membership { event }
+            }
+            TAG_RINGSWAP => {
+                let slot = r.u32()?;
+                let len = r.u32()? as usize;
+                // Bound before allocating: a corrupt length must not
+                // drive an OOM allocation; the body can hold at most
+                // len u32s anyway.
+                if len > r.buf.len() / 4 + 1 {
+                    bail!("ring-swap length {len} exceeds frame");
+                }
+                let mut order = Vec::with_capacity(len);
+                for _ in 0..len {
+                    order.push(r.u32()?);
+                }
+                Message::RingSwap { slot, order }
+            }
+            TAG_REPORT => Message::Report {
+                period: r.u32()?,
+                t_ms: r.f64()?,
+                rho: r.f64()?,
+                diameter: r.f64()?,
+                alive: r.u32()?,
+                swaps: r.u32()?,
+            },
+            other => bail!("unknown message tag {other}"),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<Message> {
+        vec![
+            Message::Ping { seq: 0 },
+            Message::Ping { seq: u32::MAX },
+            Message::Pong {
+                seq: 7,
+                hold_ms: 1.5,
+            },
+            Message::GossipPush {
+                local: 1.25,
+                global: -0.5,
+                min: f64::MIN_POSITIVE,
+                m: 0.5,
+                ml: 0.0,
+            },
+            Message::Membership {
+                event: MembershipEvent::Join {
+                    time: 125.5,
+                    node: 3,
+                },
+            },
+            Message::Membership {
+                event: MembershipEvent::Crash {
+                    time: 0.0,
+                    node: u32::MAX,
+                },
+            },
+            Message::RingSwap {
+                slot: 2,
+                order: vec![0, 3, 1, 2],
+            },
+            Message::RingSwap {
+                slot: 0,
+                order: vec![],
+            },
+            Message::Report {
+                period: 4,
+                t_ms: 1000.0,
+                rho: 0.75,
+                diameter: 88.25,
+                alive: 96,
+                swaps: 3,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        for msg in samples() {
+            let bytes = msg.encode();
+            assert_eq!(bytes[0], WIRE_VERSION);
+            let back = Message::decode(&bytes)
+                .unwrap_or_else(|e| panic!("{msg:?}: {e}"));
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_rejected() {
+        let mut bytes = Message::Ping { seq: 1 }.encode();
+        bytes[0] = WIRE_VERSION + 1;
+        let err = Message::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        let bytes = vec![WIRE_VERSION, 200, 0, 0, 0, 0];
+        let err = Message::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("tag"), "{err}");
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_are_rejected() {
+        let bytes = Message::Report {
+            period: 1,
+            t_ms: 2.0,
+            rho: 0.5,
+            diameter: 3.0,
+            alive: 4,
+            swaps: 5,
+        }
+        .encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                Message::decode(&bytes[..cut]).is_err(),
+                "accepted a {cut}-byte prefix"
+            );
+        }
+        let mut extended = bytes;
+        extended.push(0);
+        let err = Message::decode(&extended).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_ring_length_does_not_allocate() {
+        let mut bytes = Message::RingSwap {
+            slot: 1,
+            order: vec![5, 6],
+        }
+        .encode();
+        // Overwrite the length field with a huge value.
+        bytes[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Message::decode(&bytes).is_err());
+    }
+}

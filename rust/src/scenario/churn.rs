@@ -5,6 +5,9 @@
 //! [`crate::membership::list::MembershipList::apply_trace_event`] turns
 //! a re-departure of an already-gone node into a no-op.
 
+use std::collections::HashMap;
+
+use crate::latency::LatencyMatrix;
 use crate::membership::events::{EventTrace, MembershipEvent};
 use crate::util::rng::Rng;
 
@@ -97,6 +100,71 @@ pub fn partition_rejoin(
     evs
 }
 
+/// Adversarial anchor storm: every `interval` ms (starting at `at`,
+/// `waves` times) the `count` currently-up nodes with the **lowest
+/// latency eccentricity** crash, then rejoin `down` ms later. Low
+/// eccentricity = most central in latency space — exactly the nodes
+/// DGRO's shortest rings anchor their locality on, so each wave knocks
+/// out the overlay's best hubs right after the coordinator has adapted
+/// onto them. With `down < interval` the same anchors are hit wave
+/// after wave ("kill whatever the ring is currently built around");
+/// with `down > interval` the storm walks down the centrality ranking.
+/// Targets are restricted to `0..population` so the storm never
+/// resurrects nodes a flash-crowd block holds in reserve.
+pub fn anchor_storm(
+    w: &LatencyMatrix,
+    population: usize,
+    count: u32,
+    at: f64,
+    interval: f64,
+    waves: u32,
+    down: f64,
+    rng: &mut Rng,
+) -> Vec<MembershipEvent> {
+    let pop = population.min(w.n());
+    // Centrality ranking: eccentricity ecc(u) = max_v w(u, v), ties
+    // broken by id so the ranking is total and deterministic.
+    let mut ranked: Vec<(f32, u32)> = (0..pop)
+        .map(|u| {
+            let ecc = (0..w.n())
+                .filter(|&v| v != u)
+                .map(|v| w.get(u, v))
+                .fold(0.0f32, f32::max);
+            (ecc, u as u32)
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let jitter = (interval * 0.05).max(0.0);
+    let mut down_until: HashMap<u32, f64> = HashMap::new();
+    let mut evs = Vec::new();
+    for wave in 0..waves {
+        let t = at + wave as f64 * interval;
+        let mut killed = 0u32;
+        for &(_, node) in &ranked {
+            if killed >= count {
+                break;
+            }
+            if down_until.get(&node).copied().unwrap_or(f64::MIN) > t {
+                continue; // still down from an earlier wave
+            }
+            let kill_t = t + rng.f64() * jitter;
+            let back_t = kill_t + down;
+            evs.push(MembershipEvent::Crash {
+                time: kill_t,
+                node,
+            });
+            evs.push(MembershipEvent::Join {
+                time: back_t,
+                node,
+            });
+            down_until.insert(node, back_t);
+            killed += 1;
+        }
+    }
+    sort_by_time(&mut evs);
+    evs
+}
+
 /// Merge generator outputs into one time-sorted trace. The sort is
 /// stable, so equal-time events keep generator order and composition is
 /// deterministic.
@@ -180,6 +248,61 @@ mod tests {
         assert!(is_sorted(&trace.events));
         let again = merge(vec![a, b]);
         assert_eq!(trace.events, again.events);
+    }
+
+    #[test]
+    fn anchor_storm_targets_the_most_central_nodes() {
+        let mut rng = Rng::new(7);
+        // Node 0 is near everyone (lowest eccentricity), node ids grow
+        // more peripheral: ecc(u) = 1 + u + max_v v is increasing in u.
+        let w = LatencyMatrix::from_fn(12, |u, v| 1.0 + (u + v) as f32);
+        let evs = anchor_storm(&w, 12, 3, 100.0, 200.0, 2, 50.0, &mut rng);
+        // 2 waves x 3 targets x (crash + rejoin).
+        assert_eq!(evs.len(), 12);
+        assert!(is_sorted(&evs));
+        let crashed: std::collections::BTreeSet<u32> = evs
+            .iter()
+            .filter(|e| matches!(e, MembershipEvent::Crash { .. }))
+            .map(|e| e.node())
+            .collect();
+        // down < interval: both waves hit the same three most-central
+        // nodes (the current anchors), nothing else.
+        assert_eq!(
+            crashed.into_iter().collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        // Every crash is followed by its rejoin ~50 ms later.
+        let mut down = std::collections::HashMap::new();
+        for ev in &evs {
+            match ev {
+                MembershipEvent::Crash { time, node } => {
+                    down.insert(*node, *time);
+                }
+                MembershipEvent::Join { time, node } => {
+                    let t0 = down.remove(node).expect("crash first");
+                    assert!((time - t0 - 50.0).abs() < 1e-9);
+                }
+                _ => panic!("unexpected event {ev:?}"),
+            }
+        }
+        assert!(down.is_empty(), "every wave heals");
+    }
+
+    #[test]
+    fn anchor_storm_walks_the_ranking_when_down_exceeds_interval() {
+        let mut rng = Rng::new(8);
+        let w = LatencyMatrix::from_fn(10, |u, v| 1.0 + (u + v) as f32);
+        // Wave 2 fires while wave 1's victims are still down, so it
+        // must pick the next-most-central nodes instead.
+        let evs =
+            anchor_storm(&w, 10, 2, 0.0, 100.0, 2, 1000.0, &mut rng);
+        let mut crashed: Vec<u32> = evs
+            .iter()
+            .filter(|e| matches!(e, MembershipEvent::Crash { .. }))
+            .map(|e| e.node())
+            .collect();
+        crashed.sort_unstable();
+        assert_eq!(crashed, vec![0, 1, 2, 3]);
     }
 
     #[test]

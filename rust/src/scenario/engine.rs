@@ -39,6 +39,9 @@ use crate::graph::eval::EvalPool;
 use crate::graph::{diameter, Graph};
 use crate::latency::Model;
 use crate::membership::list::{MemberState, MembershipList};
+use crate::net::{
+    NetCoordinator, SimTransport, TransportKind, UdpTransport,
+};
 use crate::metrics::{Metrics, Table};
 use crate::scenario::dynamics::DynamicLatency;
 use crate::scenario::spec::ScenarioSpec;
@@ -251,12 +254,46 @@ pub struct ScenarioEngine {
     /// sharding (one partition, no anchors — the parity baseline);
     /// other topologies ignore it entirely.
     pub shards: usize,
+    /// Transport backing [`Topology::Dgro`] runs. `None` (the default)
+    /// keeps the in-process coordinator — ρ inputs come straight from
+    /// latency-matrix lookups. `Some(kind)` replays the *same* trace
+    /// through the message-level [`NetCoordinator`]: Algorithm-3
+    /// measurements are driven by real framed messages and measured
+    /// RTTs over the chosen transport (`dgro scenario run --transport
+    /// sim|udp`). Only the centralized DGRO topology supports it.
+    pub transport: Option<TransportKind>,
+    /// Wall-time compression for [`TransportKind::Udp`] runs: real
+    /// milliseconds of shaped delay per sim-ms of latency
+    /// ([`UdpTransport::DEFAULT_TIME_SCALE`] by default).
+    pub time_scale: f64,
+    /// Churn-aware ρ guard forwarded to the coordinator: skip the
+    /// period's ring swap when more than this many membership events
+    /// landed in it (0 = off; `--churn-guard`). Applies to the
+    /// centralized adaptive paths (in-process and transport-backed).
+    pub churn_guard: u64,
 }
 
 /// Shard count a [`Topology::DgroSharded`] run falls back to when
 /// [`ScenarioEngine::shards`] was never set (`dgro scenario run
 /// --topology sharded` without `--shards`).
 pub const DEFAULT_SHARDS: usize = 4;
+
+/// Drive one transport-backed coordinator replay: construct the
+/// [`NetCoordinator`] over `transport` and run the trace — shared by
+/// the sim and udp arms of the adaptive path so the replay call can
+/// never diverge between them.
+fn replay_over<T: crate::net::Transport>(
+    cfg: Config,
+    w0: crate::latency::LatencyMatrix,
+    transport: T,
+    trace: &crate::membership::events::EventTrace,
+    horizon: f64,
+    latency_at: &mut dyn FnMut(f64) -> Option<crate::latency::LatencyMatrix>,
+) -> Result<(crate::coordinator::CoordinatorReport, Metrics)> {
+    let mut co = NetCoordinator::new(cfg, w0, transport)?;
+    let rep = co.run_dynamic(trace, horizon, latency_at)?;
+    Ok((rep, co.metrics))
+}
 
 impl ScenarioEngine {
     /// Validate the spec and wrap it with default knobs (250 ms period,
@@ -270,6 +307,9 @@ impl ScenarioEngine {
             threads: 1,
             incremental: true,
             shards: 0,
+            transport: None,
+            time_scale: UdpTransport::DEFAULT_TIME_SCALE,
+            churn_guard: 0,
         })
     }
 
@@ -295,8 +335,11 @@ impl ScenarioEngine {
             anyhow::anyhow!("bad model {}", self.spec.model)
         })?;
         let base = model.sample(self.spec.nodes, &mut rng);
+        // Same RNG order as ever (sample, then events) — the matrix is
+        // only consulted by latency-aware generators, so traces of
+        // pre-existing specs are byte-identical.
+        let trace = self.spec.events(&base, &mut rng);
         let dyn_w = DynamicLatency::new(base, self.spec.latency.clone())?;
-        let trace = self.spec.events(&mut rng);
         Ok((dyn_w, trace))
     }
 
@@ -309,6 +352,13 @@ impl ScenarioEngine {
     /// everything else replays the periods over a statically built
     /// overlay.
     pub fn run(&self, topology: Topology) -> Result<ScenarioReport> {
+        if self.transport.is_some() && topology != Topology::Dgro {
+            bail!(
+                "--transport runs support --topology dgro only \
+                 (got {})",
+                topology.name()
+            );
+        }
         match topology {
             Topology::Dgro | Topology::DgroSharded => {
                 self.run_adaptive(topology)
@@ -328,6 +378,7 @@ impl ScenarioEngine {
         cfg.seed = self.seed;
         cfg.scorer = "greedy".to_string();
         cfg.adapt_period_ms = self.effective_period();
+        cfg.churn_guard = self.churn_guard;
         let mut prev_t = 0.0;
         let mut latency_at = |t: f64| {
             let out = if dyn_w.changes_within(prev_t, t) {
@@ -346,6 +397,27 @@ impl ScenarioEngine {
             let rep =
                 co.run_dynamic(&trace, self.spec.horizon, &mut latency_at)?;
             (rep, co.metrics)
+        } else if let Some(kind) = self.transport {
+            // Transport-backed replay: same spec, same seed-derived
+            // trace and latency view, but ρ comes from measured message
+            // RTTs on the chosen transport (rust/tests/net.rs pins
+            // sim-vs-udp parity on this path).
+            let w0 = dyn_w.at(0.0);
+            let horizon = self.spec.horizon;
+            match kind {
+                TransportKind::Sim => replay_over(
+                    cfg,
+                    w0.clone(),
+                    SimTransport::new(w0),
+                    &trace,
+                    horizon,
+                    &mut latency_at,
+                )?,
+                TransportKind::Udp => {
+                    let t = UdpTransport::bind(w0.clone(), self.time_scale)?;
+                    replay_over(cfg, w0, t, &trace, horizon, &mut latency_at)?
+                }
+            }
         } else {
             let mut co = Coordinator::with_latency(cfg, dyn_w.at(0.0))?;
             let rep =
@@ -613,6 +685,23 @@ mod tests {
         assert_eq!(engine.effective_shards(), DEFAULT_SHARDS);
         engine.shards = 1;
         assert_eq!(engine.effective_shards(), 1);
+    }
+
+    #[test]
+    fn transport_backed_run_covers_periods_and_rejects_baselines() {
+        let mut engine = ScenarioEngine::new(tiny_spec(), 5).unwrap();
+        engine.transport = Some(TransportKind::Sim);
+        let rep = engine.run(Topology::Dgro).unwrap();
+        assert_eq!(rep.rows.len(), 4);
+        for r in &rep.rows {
+            assert!(r.diameter.is_finite() && r.diameter > 0.0);
+            assert!((0.0..=1.0).contains(&r.rho));
+            assert!(r.alive >= 3);
+        }
+        // Transports wrap the centralized coordinator only.
+        assert!(engine.run(Topology::Chord).is_err());
+        engine.shards = 2;
+        assert!(engine.run(Topology::DgroSharded).is_err());
     }
 
     #[test]

@@ -27,6 +27,12 @@ pub enum ChurnSpec {
     CorrelatedCrash { first: u32, count: u32, at: f64, spread: f64 },
     /// The block drops out at `at` and rejoins at `heal_at`.
     PartitionRejoin { first: u32, count: u32, at: f64, heal_at: f64 },
+    /// Adversarial anchor storm: `waves` waves, `interval` ms apart
+    /// starting at `at`, each crashing the `count` currently-up nodes
+    /// with the lowest latency eccentricity (the ring-anchor hubs);
+    /// victims rejoin `down` ms after their crash. See
+    /// [`churn::anchor_storm`].
+    AnchorStorm { count: u32, at: f64, interval: f64, waves: u32, down: f64 },
 }
 
 impl ChurnSpec {
@@ -73,6 +79,20 @@ impl ChurnSpec {
                 ("at", Json::num(at)),
                 ("heal_at", Json::num(heal_at)),
             ]),
+            ChurnSpec::AnchorStorm {
+                count,
+                at,
+                interval,
+                waves,
+                down,
+            } => Json::obj(vec![
+                ("kind", Json::str("anchor-storm")),
+                ("count", Json::num(count as f64)),
+                ("at", Json::num(at)),
+                ("interval", Json::num(interval)),
+                ("waves", Json::num(waves as f64)),
+                ("down", Json::num(down)),
+            ]),
         }
     }
 
@@ -99,6 +119,13 @@ impl ChurnSpec {
                 count: v.get("count")?.as_usize()? as u32,
                 at: v.get("at")?.as_f64()?,
                 heal_at: v.get("heal_at")?.as_f64()?,
+            },
+            "anchor-storm" => ChurnSpec::AnchorStorm {
+                count: v.get("count")?.as_usize()? as u32,
+                at: v.get("at")?.as_f64()?,
+                interval: v.get("interval")?.as_f64()?,
+                waves: v.get("waves")?.as_usize()? as u32,
+                down: v.get("down")?.as_f64()?,
             },
             other => bail!("unknown churn kind '{other}'"),
         })
@@ -154,6 +181,44 @@ impl ScenarioSpec {
                 ChurnSpec::Poisson { rate } => {
                     if rate < 0.0 {
                         bail!("poisson rate must be >= 0, got {rate}");
+                    }
+                }
+                ChurnSpec::AnchorStorm {
+                    count,
+                    interval,
+                    waves,
+                    down,
+                    ..
+                } => {
+                    if count == 0 || waves == 0 {
+                        bail!("anchor storm needs count and waves >= 1");
+                    }
+                    if !(interval > 0.0) {
+                        bail!(
+                            "anchor storm interval must be > 0, got \
+                             {interval}"
+                        );
+                    }
+                    if !(down > 0.0) {
+                        bail!(
+                            "anchor storm down time must be > 0, got {down}"
+                        );
+                    }
+                    // With down > interval, consecutive waves overlap
+                    // and each walks further down the centrality
+                    // ranking — bound the worst-case *concurrently*
+                    // down population, not just one wave.
+                    let overlap =
+                        ((down / interval).ceil() as u32).max(1).min(waves);
+                    let concurrent = count as usize * overlap as usize;
+                    if concurrent + 3 > self.initial_alive {
+                        bail!(
+                            "anchor storm can take down {concurrent} \
+                             nodes at once ({count} x {overlap} \
+                             overlapping waves), leaving fewer than 3 \
+                             of {} initially-alive nodes",
+                            self.initial_alive
+                        );
                     }
                 }
                 ChurnSpec::FlashCrowd { first, count, .. }
@@ -215,8 +280,10 @@ impl ScenarioSpec {
 
     /// Generate the full deterministic membership trace for this spec
     /// (merge of every churn component, plus t = 0 departures for the
-    /// initially-absent block).
-    pub fn events(&self, rng: &mut Rng) -> EventTrace {
+    /// initially-absent block). Takes the base latency matrix because
+    /// latency-aware generators ([`ChurnSpec::AnchorStorm`]) rank their
+    /// targets by centrality in `w`.
+    pub fn events(&self, w: &crate::latency::LatencyMatrix, rng: &mut Rng) -> EventTrace {
         let mut parts: Vec<Vec<MembershipEvent>> = Vec::new();
         if self.initial_alive < self.nodes {
             parts.push(churn::absent_at_start(
@@ -230,6 +297,22 @@ impl ScenarioSpec {
                     self.initial_alive,
                     self.horizon,
                     rate,
+                    rng,
+                ),
+                ChurnSpec::AnchorStorm {
+                    count,
+                    at,
+                    interval,
+                    waves,
+                    down,
+                } => churn::anchor_storm(
+                    w,
+                    self.initial_alive,
+                    count,
+                    at,
+                    interval,
+                    waves,
+                    down,
                     rng,
                 ),
                 ChurnSpec::FlashCrowd {
@@ -340,7 +423,7 @@ impl ScenarioSpec {
     }
 }
 
-/// The built-in catalog: seven named workloads stressing the parts of
+/// The built-in catalog: eight named workloads stressing the parts of
 /// DGRO the paper's static figures never touch. Sizes are kept modest so
 /// the whole catalog sweeps in CI; scale `nodes`/`horizon` up via spec
 /// files for real studies.
@@ -400,6 +483,27 @@ pub fn catalog() -> Vec<ScenarioSpec> {
                     count: 15,
                     at: 2000.0,
                     spread: 50.0,
+                },
+            ],
+            latency: vec![],
+        },
+        ScenarioSpec {
+            name: "anchor-storm".into(),
+            about: "waves of crashes hit the lowest-eccentricity \
+                    (anchor) nodes"
+                .into(),
+            nodes: 76,
+            initial_alive: 76,
+            model: "fabric".into(),
+            horizon: 4000.0,
+            churn: vec![
+                ChurnSpec::Poisson { rate: 0.0002 },
+                ChurnSpec::AnchorStorm {
+                    count: 6,
+                    at: 1000.0,
+                    interval: 750.0,
+                    waves: 4,
+                    down: 500.0,
                 },
             ],
             latency: vec![],
@@ -549,6 +653,63 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_oversized_anchor_storm() {
+        let mut s = find("steady-state").unwrap();
+        s.churn.push(ChurnSpec::AnchorStorm {
+            count: s.initial_alive as u32, // would leave nobody alive
+            at: 0.0,
+            interval: 100.0,
+            waves: 1,
+            down: 50.0,
+        });
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("anchor storm"), "{err}");
+        let mut s = find("steady-state").unwrap();
+        s.churn.push(ChurnSpec::AnchorStorm {
+            count: 2,
+            at: 0.0,
+            interval: 0.0,
+            waves: 1,
+            down: 50.0,
+        });
+        assert!(s.validate().is_err(), "zero interval must be rejected");
+        // Overlapping waves stack: down >> interval means each wave
+        // walks further down the ranking while earlier victims are
+        // still out, so the *concurrent* down population is bounded.
+        let mut s = find("steady-state").unwrap();
+        let n = s.initial_alive as u32;
+        s.churn.push(ChurnSpec::AnchorStorm {
+            count: n / 2, // fine alone, fatal once two waves overlap
+            at: 0.0,
+            interval: 100.0,
+            waves: 2,
+            down: 1000.0,
+        });
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("overlapping"), "{err}");
+    }
+
+    #[test]
+    fn anchor_storm_catalog_entry_generates_central_crashes() {
+        let spec = find("anchor-storm").unwrap();
+        let mut rng = Rng::new(3);
+        let model = Model::parse(&spec.model).unwrap();
+        let w = model.sample(spec.nodes, &mut rng);
+        let trace = spec.events(&w, &mut rng);
+        // 4 waves x 6 anchors, crash + rejoin each, plus background
+        // Poisson churn.
+        let storm_crashes = trace
+            .events
+            .iter()
+            .filter(|e| {
+                matches!(e, MembershipEvent::Crash { time, .. }
+                         if *time >= 1000.0)
+            })
+            .count();
+        assert!(storm_crashes >= 24, "got {storm_crashes} storm crashes");
+    }
+
+    #[test]
     fn initial_alive_defaults_to_nodes() {
         let s = ScenarioSpec::parse(
             r#"{"name":"x","nodes":12,"model":"uniform","horizon":50}"#,
@@ -561,7 +722,11 @@ mod tests {
     fn events_are_sorted_and_respect_initial_population() {
         let spec = find("flash-crowd").unwrap();
         let mut rng = Rng::new(9);
-        let trace = spec.events(&mut rng);
+        let w = crate::latency::LatencyMatrix::from_fn(
+            spec.nodes,
+            |u, v| 1.0 + (u + v) as f32,
+        );
+        let trace = spec.events(&w, &mut rng);
         assert!(!trace.is_empty());
         for w in trace.events.windows(2) {
             assert!(w[0].time() <= w[1].time());

@@ -112,6 +112,26 @@ impl Engine {
         self.schedule(self.now + delay.max(0.0), kind);
     }
 
+    /// Time of the earliest queued event without delivering it. The
+    /// transport layer uses this to honor receive deadlines: it only
+    /// consumes events whose time is within the caller's timeout window.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.queue.peek().map(|e| e.time)
+    }
+
+    /// Advance the clock to `t` without delivering anything — the
+    /// "nothing arrived before the timeout" case of a blocking receive.
+    /// Clamped to the next queued event's time so no event is ever
+    /// skipped past or delivered late.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t.is_finite(), "non-finite advance target {t}");
+        let bound = match self.peek_time() {
+            Some(next) => t.min(next),
+            None => t,
+        };
+        self.now = self.now.max(bound);
+    }
+
     /// Pop the next event, advancing the clock.
     pub fn next(&mut self) -> Option<Event> {
         let ev = self.queue.pop()?;
