@@ -20,6 +20,8 @@
 //! all cores). Statistical harness from util::timer/stats (no criterion
 //! offline).
 
+#![allow(clippy::field_reassign_with_default)] // config-mutation idiom
+
 use dgro::dgro::construct::{build_ring, GreedyScorer};
 use dgro::graph::eval::EvalPool;
 use dgro::graph::{apsp, diameter, Graph};
@@ -451,6 +453,23 @@ fn main() -> anyhow::Result<()> {
         &[udp_wall],
         Some(("frames", udp_frames as f64)),
     );
+    let t0 = std::time::Instant::now();
+    let mut tcp_co = dgro::net::NetCoordinator::new(
+        ncfg.clone(),
+        nw.clone(),
+        dgro::net::TcpTransport::bind(
+            nw.clone(),
+            dgro::net::UdpTransport::DEFAULT_TIME_SCALE,
+        )?,
+    )?;
+    let rep_tcp = tcp_co.run(&net_trace, net_horizon)?;
+    let tcp_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let tcp_frames = tcp_co.frames_sent();
+    report(
+        &format!("net coordinator tcp n={net_nodes}"),
+        &[tcp_wall],
+        Some(("frames", tcp_frames as f64)),
+    );
     // Probe overhead: how far measured one-way RTT/2 strays from the
     // shaped matrix latency (0 on sim by construction).
     let rtt_overhead = udp_co
@@ -462,9 +481,14 @@ fn main() -> anyhow::Result<()> {
     for (a, b) in rep_sim.timeline.iter().zip(&rep_udp.timeline) {
         parity_diff = parity_diff.max((a.2 - b.2).abs() as f64);
     }
+    let mut parity_tcp = 0.0f64;
+    for (a, b) in rep_sim.timeline.iter().zip(&rep_tcp.timeline) {
+        parity_tcp = parity_tcp.max((a.2 - b.2).abs() as f64);
+    }
     println!(
         "net probe rtt overhead {rtt_overhead:.3} ms; \
-         sim-vs-udp max diameter diff {parity_diff:.3}"
+         sim-vs-udp max diameter diff {parity_diff:.3}; \
+         sim-vs-tcp {parity_tcp:.3}"
     );
     let net_json = Json::obj(vec![
         ("n", Json::num(net_nodes as f64)),
@@ -477,8 +501,15 @@ fn main() -> anyhow::Result<()> {
             "udp_frames_lost",
             Json::num(udp_co.metrics.counter("net.frames_lost") as f64),
         ),
+        ("tcp_frames", Json::num(tcp_frames as f64)),
+        ("tcp_frames_per_s", Json::num(tcp_frames as f64 / tcp_wall)),
+        (
+            "tcp_stale_frames",
+            Json::num(tcp_co.metrics.counter("net.stale_frames") as f64),
+        ),
         ("probe_rtt_overhead_ms", Json::num(rtt_overhead)),
         ("max_diameter_diff", Json::num(parity_diff)),
+        ("max_diameter_diff_tcp", Json::num(parity_tcp)),
     ]);
 
     // --- Parallel construction. -----------------------------------------

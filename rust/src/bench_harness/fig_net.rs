@@ -1,13 +1,22 @@
 //! "Figure 21" (beyond the paper): trace-replay parity across
-//! transports. One scenario spec, one seed, replayed twice through the
-//! message-level [`NetCoordinator`](crate::net::NetCoordinator) — once
-//! over the discrete-event [`SimTransport`](crate::net::SimTransport)
-//! (exact RTTs) and once over [`UdpTransport`](crate::net::UdpTransport)
-//! loopback (real sockets, shim-shaped delays, real scheduler jitter).
-//! The table tracks the per-period alive diameter side by side; the
-//! paper's deployment claim is that ρ-guided adaptation survives a real
-//! network stack, so `abs_diff` staying inside the tolerance pinned by
+//! transports, plus the loss sweep. One scenario spec, one seed,
+//! replayed through the message-level
+//! [`NetCoordinator`](crate::net::NetCoordinator) — over the
+//! discrete-event [`SimTransport`](crate::net::SimTransport) (exact
+//! RTTs), [`UdpTransport`](crate::net::UdpTransport) loopback and
+//! [`TcpTransport`](crate::net::TcpTransport) streams (real sockets,
+//! shim-shaped delays, real scheduler jitter). The parity table tracks
+//! the per-period alive diameter side by side; the paper's deployment
+//! claim is that ρ-guided adaptation survives a real network stack, so
+//! `abs_diff_*` staying inside the tolerance pinned by
 //! rust/tests/net.rs is the headline.
+//!
+//! The second table sweeps injected frame loss
+//! ([`LossyTransport`](crate::net::LossyTransport) over the sim
+//! backend, so the sweep is byte-deterministic): mean/final alive
+//! diameter, drift vs the lossless replay, and the loss-protocol
+//! counters (frames written off, probe retransmissions, stale frames
+//! rejected at the epoch boundary).
 
 use anyhow::Result;
 
@@ -19,8 +28,12 @@ use crate::scenario::{
 
 use super::FigureOpts;
 
+/// Injected drop rates of the loss-sweep table (row 0 is the lossless
+/// reference).
+pub const LOSS_SWEEP: [f64; 4] = [0.0, 0.02, 0.05, 0.10];
+
 /// The replayed workload: fabric latencies + background churn, sized so
-/// the UDP replay stays in CI budgets.
+/// the real-socket replays stay in CI budgets.
 fn parity_spec(n: usize, horizon: f64) -> ScenarioSpec {
     ScenarioSpec {
         name: "net-parity".into(),
@@ -34,44 +47,89 @@ fn parity_spec(n: usize, horizon: f64) -> ScenarioSpec {
     }
 }
 
-/// Regenerate the transport-parity table.
+/// Regenerate the transport-parity and loss-sweep tables.
 pub fn run_opts(opts: FigureOpts) -> Result<Vec<Table>> {
     let n = if opts.quick { 24 } else { 48 };
     let horizon = if opts.quick { 1000.0 } else { 2000.0 };
     let spec = parity_spec(n, horizon);
-    let run = |kind: TransportKind| -> Result<ScenarioReport> {
+    let run = |kind: TransportKind, loss: f64| -> Result<ScenarioReport> {
         let mut engine = ScenarioEngine::new(spec.clone(), 0)?;
         engine.transport = Some(kind);
+        engine.loss_rate = loss;
+        // Compress wall time harder than the interactive default so
+        // three real-socket replays plus the sweep fit CI budgets.
+        engine.time_scale = 0.02;
         engine.run(Topology::Dgro)
     };
-    let sim = run(TransportKind::Sim)?;
-    let udp = run(TransportKind::Udp)?;
-    let mut table = Table::new(
-        "Fig 21: transport parity sim vs udp (fabric)",
+
+    // --- Parity table: sim vs udp vs tcp at 0% loss. -------------------
+    let sim = run(TransportKind::Sim, 0.0)?;
+    let udp = run(TransportKind::Udp, 0.0)?;
+    let tcp = run(TransportKind::Tcp, 0.0)?;
+    let mut parity = Table::new(
+        "Fig 21: transport parity sim vs udp vs tcp (fabric)",
         &[
             "t_ms",
             "alive",
             "diameter_sim",
             "diameter_udp",
-            "abs_diff",
+            "diameter_tcp",
+            "abs_diff_udp",
+            "abs_diff_tcp",
             "rho_sim",
-            "rho_udp",
             "swaps_sim",
-            "swaps_udp",
         ],
     );
-    for (a, b) in sim.rows.iter().zip(&udp.rows) {
-        table.row(vec![
+    for ((a, b), c) in sim.rows.iter().zip(&udp.rows).zip(&tcp.rows) {
+        parity.row(vec![
             a.t,
             a.alive as f64,
             a.diameter,
             b.diameter,
+            c.diameter,
             (a.diameter - b.diameter).abs(),
+            (a.diameter - c.diameter).abs(),
             a.rho,
-            b.rho,
             a.swaps as f64,
-            b.swaps as f64,
         ]);
     }
-    Ok(vec![table])
+
+    // --- Loss sweep: seeded drops over the sim backend. ----------------
+    let mut sweep = Table::new(
+        "Fig 21b: diameter drift under injected frame loss (sim)",
+        &[
+            "loss_rate",
+            "mean_diameter",
+            "final_diameter",
+            "mean_abs_drift",
+            "swaps",
+            "frames_lost",
+            "probe_retx",
+            "stale_frames",
+        ],
+    );
+    let baseline = &sim;
+    for &loss in &LOSS_SWEEP {
+        let rep = if loss == 0.0 {
+            sim.clone()
+        } else {
+            run(TransportKind::Sim, loss)?
+        };
+        let mut drift = 0.0;
+        for (a, b) in baseline.rows.iter().zip(&rep.rows) {
+            drift += (a.diameter - b.diameter).abs();
+        }
+        drift /= baseline.rows.len().max(1) as f64;
+        sweep.row(vec![
+            loss,
+            rep.mean_diameter(),
+            rep.final_diameter(),
+            drift,
+            rep.total_swaps() as f64,
+            rep.metrics.counter("net.frames_lost") as f64,
+            rep.metrics.counter("net.probe_retx") as f64,
+            rep.metrics.counter("net.stale_frames") as f64,
+        ]);
+    }
+    Ok(vec![parity, sweep])
 }

@@ -1,0 +1,278 @@
+//! The perf-regression gate: compare a fresh `BENCH_hotpath.json`
+//! against the committed `BENCH_baseline.json` and fail when a gated
+//! throughput metric regressed more than the tolerance.
+//!
+//! CI has uploaded the per-commit perf trajectory since PR 2 — but an
+//! artifact nobody diffs gates nothing. The `bench-gate` step runs the
+//! quick hotpath bench and then `cargo run --bin bench_gate`, which
+//! exits non-zero when periods/s or diameter-eval throughput dropped
+//! >20% below the baseline, turning the trajectory into an enforced
+//! floor. Refresh the floor deliberately with
+//! `bench_gate --update` after a justified perf change.
+//!
+//! The gated metrics are *throughputs* (higher is better), chosen for
+//! stability in quick mode: scenario-engine periods/s (both evaluation
+//! strategies), batched diameter-eval throughput, GA evaluations/s and
+//! the sim-transport frame rate.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Multiplicative slack a metric may fall below its baseline before
+/// the gate fails (0.20 = fail under 80% of baseline).
+pub const DEFAULT_TOLERANCE: f64 = 0.20;
+
+/// One gated metric: its flat name in `BENCH_baseline.json` and how to
+/// read the current value out of `BENCH_hotpath.json`.
+struct MetricDef {
+    name: &'static str,
+    read: fn(&Json) -> Result<f64>,
+}
+
+fn scenario_incremental(root: &Json) -> Result<f64> {
+    root.get("scenario")?
+        .get("incremental_periods_per_s")?
+        .as_f64()
+}
+
+fn scenario_rebuild(root: &Json) -> Result<f64> {
+    root.get("scenario")?.get("rebuild_periods_per_s")?.as_f64()
+}
+
+fn diameter_batch_throughput(root: &Json) -> Result<f64> {
+    // Smallest size's batch row: batch graphs per second on the pool.
+    let rows = root.get("diameter")?.as_arr()?;
+    let row = rows
+        .first()
+        .context("diameter table is empty in the bench report")?;
+    let batch = row.get("batch")?.as_f64()?;
+    let ms = row.get("batch_par_ms")?.as_f64()?;
+    Ok(batch / (ms / 1e3).max(1e-12))
+}
+
+fn ga_throughput(root: &Json) -> Result<f64> {
+    root.get("ga")?.get("par_evals_per_s")?.as_f64()
+}
+
+fn net_sim_frames(root: &Json) -> Result<f64> {
+    root.get("net")?.get("sim_frames_per_s")?.as_f64()
+}
+
+const METRICS: [MetricDef; 5] = [
+    MetricDef {
+        name: "scenario_incremental_periods_per_s",
+        read: scenario_incremental,
+    },
+    MetricDef {
+        name: "scenario_rebuild_periods_per_s",
+        read: scenario_rebuild,
+    },
+    MetricDef {
+        name: "diameter_batch_graphs_per_s",
+        read: diameter_batch_throughput,
+    },
+    MetricDef {
+        name: "ga_par_evals_per_s",
+        read: ga_throughput,
+    },
+    MetricDef {
+        name: "net_sim_frames_per_s",
+        read: net_sim_frames,
+    },
+];
+
+/// One gated metric's verdict.
+#[derive(Clone, Debug)]
+pub struct GateRow {
+    /// Flat metric name (baseline key).
+    pub name: &'static str,
+    /// Committed floor value.
+    pub baseline: f64,
+    /// Value from the fresh bench report.
+    pub current: f64,
+    /// `current / baseline` (1.0 = parity, < 1 - tolerance = fail).
+    pub ratio: f64,
+    /// Whether this metric clears the gate.
+    pub ok: bool,
+}
+
+/// Result of a gate run: every row plus the overall verdict.
+#[derive(Clone, Debug)]
+pub struct GateOutcome {
+    /// Per-metric verdicts, in [`extract`] order.
+    pub rows: Vec<GateRow>,
+    /// Tolerance the rows were judged with.
+    pub tolerance: f64,
+}
+
+impl GateOutcome {
+    /// Whether every gated metric cleared the regression floor.
+    pub fn passed(&self) -> bool {
+        self.rows.iter().all(|r| r.ok)
+    }
+
+    /// Human-readable verdict table (one line per metric).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "bench-gate (fail below {:.0}% of baseline):",
+            (1.0 - self.tolerance) * 100.0
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "  {:<36} baseline {:>12.1}  current {:>12.1}  \
+                 ({:>6.1}%) {}",
+                r.name,
+                r.baseline,
+                r.current,
+                r.ratio * 100.0,
+                if r.ok { "ok" } else { "REGRESSED" }
+            );
+        }
+        out
+    }
+}
+
+/// Pull the gated metric values out of a `BENCH_hotpath.json` report.
+pub fn extract(report: &Json) -> Result<Vec<(&'static str, f64)>> {
+    METRICS
+        .iter()
+        .map(|m| {
+            (m.read)(report)
+                .map(|v| (m.name, v))
+                .with_context(|| format!("reading metric {}", m.name))
+        })
+        .collect()
+}
+
+/// Compare a fresh bench report against a committed baseline.
+/// `baseline` is the `BENCH_baseline.json` document, `report` the
+/// `BENCH_hotpath.json` one.
+pub fn compare(
+    baseline: &Json,
+    report: &Json,
+    tolerance: f64,
+) -> Result<GateOutcome> {
+    let floors = baseline.get("metrics")?;
+    let mut rows = Vec::new();
+    for (name, current) in extract(report)? {
+        let floor = floors
+            .get(name)
+            .with_context(|| format!("baseline missing metric {name}"))?
+            .as_f64()?;
+        let ratio = if floor > 0.0 { current / floor } else { 1.0 };
+        rows.push(GateRow {
+            name,
+            baseline: floor,
+            current,
+            ratio,
+            ok: ratio >= 1.0 - tolerance,
+        });
+    }
+    Ok(GateOutcome { rows, tolerance })
+}
+
+/// Build a fresh `BENCH_baseline.json` document from a bench report
+/// (the `bench_gate --update` path).
+pub fn baseline_from(report: &Json) -> Result<Json> {
+    let metrics = extract(report)?
+        .into_iter()
+        .map(|(name, v)| (name, Json::num(v)))
+        .collect::<Vec<_>>();
+    Ok(Json::obj(vec![
+        ("bench", Json::str("hotpath-baseline")),
+        ("metrics", Json::obj(metrics)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn report(scale: f64) -> Json {
+        Json::obj(vec![
+            (
+                "scenario",
+                Json::obj(vec![
+                    (
+                        "incremental_periods_per_s",
+                        Json::num(40.0 * scale),
+                    ),
+                    ("rebuild_periods_per_s", Json::num(10.0 * scale)),
+                ]),
+            ),
+            (
+                "diameter",
+                Json::arr(vec![Json::obj(vec![
+                    ("batch", Json::num(16.0)),
+                    ("batch_par_ms", Json::num(8.0 / scale)),
+                ])]),
+            ),
+            (
+                "ga",
+                Json::obj(vec![(
+                    "par_evals_per_s",
+                    Json::num(2000.0 * scale),
+                )]),
+            ),
+            (
+                "net",
+                Json::obj(vec![(
+                    "sim_frames_per_s",
+                    Json::num(50_000.0 * scale),
+                )]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn parity_passes_and_injected_regression_fails() {
+        let baseline = baseline_from(&report(1.0)).unwrap();
+        // Parity and small noise pass.
+        assert!(compare(&baseline, &report(1.0), DEFAULT_TOLERANCE)
+            .unwrap()
+            .passed());
+        assert!(compare(&baseline, &report(0.85), DEFAULT_TOLERANCE)
+            .unwrap()
+            .passed());
+        // An injected 25% regression fails the 20% gate.
+        let out = compare(&baseline, &report(0.75), DEFAULT_TOLERANCE)
+            .unwrap();
+        assert!(!out.passed());
+        assert!(out.rows.iter().all(|r| !r.ok), "all throughputs fell");
+        assert!(out.render().contains("REGRESSED"));
+        // Improvements always pass.
+        assert!(compare(&baseline, &report(1.4), DEFAULT_TOLERANCE)
+            .unwrap()
+            .passed());
+    }
+
+    #[test]
+    fn baseline_round_trips_through_json_text() {
+        let baseline = baseline_from(&report(1.0)).unwrap();
+        let parsed = json::parse(&baseline.to_string()).unwrap();
+        let out =
+            compare(&parsed, &report(1.0), DEFAULT_TOLERANCE).unwrap();
+        assert!(out.passed());
+        assert_eq!(out.rows.len(), 5);
+        for r in out.rows {
+            assert!((r.ratio - 1.0).abs() < 1e-9, "{}: {}", r.name, r.ratio);
+        }
+    }
+
+    #[test]
+    fn missing_metric_is_a_hard_error() {
+        let baseline = Json::obj(vec![(
+            "metrics",
+            Json::obj(vec![("nope", Json::num(1.0))]),
+        )]);
+        assert!(
+            compare(&baseline, &report(1.0), DEFAULT_TOLERANCE).is_err()
+        );
+    }
+}

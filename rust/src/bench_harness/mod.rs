@@ -13,6 +13,7 @@ pub mod fig05;
 pub mod fig06;
 pub mod fig07;
 pub mod fig10;
+pub mod gate; // CI perf-regression gate over BENCH_hotpath.json
 pub mod fig_ablation; // figs 12 & 16
 pub mod fig_baselines; // figs 13 & 17
 pub mod fig_net; // "fig 21": transport parity (sim vs udp replay)

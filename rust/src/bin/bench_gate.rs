@@ -1,0 +1,96 @@
+//! `bench_gate` — the CI perf-regression gate.
+//!
+//! Reads the fresh `BENCH_hotpath.json` (written by
+//! `cargo bench --bench hotpath -- --quick`) and the committed
+//! `BENCH_baseline.json`, compares the gated throughput metrics, and
+//! exits non-zero when any of them regressed more than the tolerance
+//! (default 20%). `--update` rewrites the baseline from the current
+//! report instead — run it deliberately after a justified perf change
+//! and commit the result.
+//!
+//! ```console
+//! $ cargo bench --bench hotpath -- --quick
+//! $ cargo run --release --bin bench_gate
+//! bench-gate (fail below 80% of baseline):
+//!   scenario_incremental_periods_per_s   baseline ... current ... ok
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use dgro::bench_harness::gate;
+use dgro::util::json;
+
+fn load(path: &str) -> Result<json::Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    json::parse(&text).with_context(|| format!("parsing {path}"))
+}
+
+fn run() -> Result<bool> {
+    let mut baseline = "BENCH_baseline.json".to_string();
+    let mut current = "BENCH_hotpath.json".to_string();
+    let mut tolerance = gate::DEFAULT_TOLERANCE;
+    let mut update = false;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let (flag, value) = match args[i].split_once('=') {
+            Some((f, v)) => (f.to_string(), Some(v.to_string())),
+            None => (args[i].clone(), None),
+        };
+        let take = |i: &mut usize| -> Result<String> {
+            if let Some(v) = &value {
+                return Ok(v.clone());
+            }
+            *i += 1;
+            args.get(*i)
+                .cloned()
+                .with_context(|| format!("{flag} needs a value"))
+        };
+        match flag.as_str() {
+            "--baseline" => baseline = take(&mut i)?,
+            "--current" => current = take(&mut i)?,
+            "--tolerance" => {
+                tolerance = take(&mut i)?
+                    .parse()
+                    .context("--tolerance must be a number")?;
+                if !(0.0..1.0).contains(&tolerance) {
+                    bail!("--tolerance must be in [0, 1)");
+                }
+            }
+            "--update" => update = true,
+            other => bail!(
+                "unknown flag '{other}' (--baseline P | --current P | \
+                 --tolerance F | --update)"
+            ),
+        }
+        i += 1;
+    }
+
+    let report = load(&current)?;
+    if update {
+        let doc = gate::baseline_from(&report)?;
+        std::fs::write(&baseline, doc.to_string())
+            .with_context(|| format!("writing {baseline}"))?;
+        println!("wrote {baseline} from {current}");
+        return Ok(true);
+    }
+    let floors = load(&baseline)?;
+    let outcome = gate::compare(&floors, &report, tolerance)?;
+    print!("{}", outcome.render());
+    Ok(outcome.passed())
+}
+
+fn main() {
+    match run() {
+        Ok(true) => {}
+        Ok(false) => {
+            eprintln!("bench-gate: perf regression past tolerance");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("bench-gate: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

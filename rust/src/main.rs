@@ -16,10 +16,13 @@
 //!   dgro scenario run --name flash-crowd --topology dgro --seed 7
 //!   dgro scenario run --name churn-storm --topology sharded --shards 8
 //!   dgro scenario run --name anchor-storm --transport udp --seed 0
+//!   dgro scenario run --name anchor-storm --transport tcp --loss-rate 0.05
 //!   dgro scenario compare --shards 8 --out reports
-//!   dgro net demo --nodes 16 --transport udp
+//!   dgro net demo --nodes 16 --transport tcp
 //!   dgro figures --fig 21 --quick
 //!   dgro figures --all
+
+#![allow(clippy::field_reassign_with_default)] // config-mutation idiom
 
 use anyhow::Result;
 
@@ -292,13 +295,32 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
     .flag(
         "transport",
         "",
-        "run the dgro topology over a message-level transport: sim|udp \
-         (empty = in-process coordinator; see docs/TRANSPORT.md)",
+        "run the dgro topology over a message-level transport: \
+         sim|udp|tcp (empty = in-process coordinator; see \
+         docs/TRANSPORT.md)",
     )
     .flag(
         "time-scale",
         "0.05",
-        "udp transport only: real-ms of shaped delay per sim-ms",
+        "udp/tcp transports: real-ms of shaped delay per sim-ms",
+    )
+    .flag(
+        "loss-rate",
+        "0",
+        "transport runs: seeded per-frame drop probability in [0, 1) \
+         (deterministic for a fixed --seed)",
+    )
+    .flag(
+        "dup-rate",
+        "0",
+        "transport runs: seeded per-frame duplication probability in \
+         [0, 1)",
+    )
+    .flag(
+        "reorder-rate",
+        "0",
+        "transport runs: seeded per-frame reorder probability in \
+         [0, 1) (a hit frame swaps wire order with the next one)",
     )
     .flag(
         "churn-guard",
@@ -359,6 +381,9 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                     Some(dgro::net::TransportKind::parse(a.get("transport"))?);
             }
             engine.time_scale = a.get_f64("time-scale")?;
+            engine.loss_rate = a.get_f64("loss-rate")?;
+            engine.dup_rate = a.get_f64("dup-rate")?;
+            engine.reorder_rate = a.get_f64("reorder-rate")?;
             engine.churn_guard = a.get_u64("churn-guard")?;
             let report = engine.run(topology)?;
             print!("{}", report.render());
@@ -372,6 +397,15 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                 anyhow::bail!(
                     "--transport applies to 'scenario run' only; \
                      compare always uses the in-process coordinators"
+                );
+            }
+            if a.get_f64("loss-rate")? != 0.0
+                || a.get_f64("dup-rate")? != 0.0
+                || a.get_f64("reorder-rate")? != 0.0
+            {
+                anyhow::bail!(
+                    "--loss-rate/--dup-rate/--reorder-rate apply to \
+                     transport-backed 'scenario run' only"
                 );
             }
             if a.get_u64("churn-guard")? != 0 {
@@ -429,14 +463,29 @@ fn cmd_net(raw: &[String]) -> Result<()> {
         "net",
         "run the coordinator over a real transport; actions: demo",
     ))
-    .flag("transport", "udp", "message transport: sim|udp")
+    .flag("transport", "udp", "message transport: sim|udp|tcp")
     .flag("horizon", "1000", "sim-time horizon (ms)")
     .flag("period", "250", "adaptation/measurement period (sim-ms)")
     .flag("churn", "0.001", "membership churn rate per node-ms")
     .flag(
         "time-scale",
         "0.05",
-        "udp only: real-ms of shaped delay per sim-ms",
+        "udp/tcp: real-ms of shaped delay per sim-ms",
+    )
+    .flag(
+        "loss-rate",
+        "0",
+        "seeded per-frame drop probability in [0, 1)",
+    )
+    .flag(
+        "dup-rate",
+        "0",
+        "seeded per-frame duplication probability in [0, 1)",
+    )
+    .flag(
+        "reorder-rate",
+        "0",
+        "seeded per-frame reorder probability in [0, 1)",
     )
     .flag(
         "churn-guard",
@@ -481,18 +530,44 @@ fn cmd_net(raw: &[String]) -> Result<()> {
         cfg.model,
         trace.len()
     );
-    match kind {
+    let scale = a.get_f64("time-scale")?;
+    let base: Box<dyn dgro::net::Transport> = match kind {
         dgro::net::TransportKind::Sim => {
-            let t = dgro::net::SimTransport::new(w.clone());
-            net_demo_run(cfg, w, t, &trace, horizon)
+            Box::new(dgro::net::SimTransport::new(w.clone()))
         }
         dgro::net::TransportKind::Udp => {
-            let t = dgro::net::UdpTransport::bind(
-                w.clone(),
-                a.get_f64("time-scale")?,
-            )?;
-            net_demo_run(cfg, w, t, &trace, horizon)
+            Box::new(dgro::net::UdpTransport::bind(w.clone(), scale)?)
         }
+        dgro::net::TransportKind::Tcp => {
+            Box::new(dgro::net::TcpTransport::bind(w.clone(), scale)?)
+        }
+    };
+    let loss = a.get_f64("loss-rate")?;
+    let dup = a.get_f64("dup-rate")?;
+    let reorder = a.get_f64("reorder-rate")?;
+    for (name, rate) in
+        [("loss", loss), ("dup", dup), ("reorder", reorder)]
+    {
+        if !(0.0..1.0).contains(&rate) {
+            anyhow::bail!("--{name}-rate must be in [0, 1), got {rate}");
+        }
+    }
+    let fault = dgro::net::LossyConfig {
+        drop_rate: loss,
+        dup_rate: dup,
+        reorder_rate: reorder,
+        seed: cfg.seed,
+    };
+    if fault.active() {
+        net_demo_run(
+            cfg,
+            w,
+            dgro::net::LossyTransport::new(base, fault),
+            &trace,
+            horizon,
+        )
+    } else {
+        net_demo_run(cfg, w, base, &trace, horizon)
     }
 }
 
@@ -532,10 +607,12 @@ fn net_demo_run<T: dgro::net::Transport>(
         .unwrap_or(0.0);
     println!(
         "transport={} frames={frames} ({:.0} frames/s wall) \
-         probe_rtt_abs_error={rtt_err:.3}ms lost={}",
+         probe_rtt_abs_error={rtt_err:.3}ms lost={} stale={} retx={}",
         co.transport_name(),
         frames as f64 / wall.max(1e-9),
-        co.metrics.counter("net.frames_lost")
+        co.metrics.counter("net.frames_lost"),
+        co.metrics.counter("net.stale_frames"),
+        co.metrics.counter("net.probe_retx")
     );
     print!("{}", co.metrics.report());
     Ok(())

@@ -1,0 +1,317 @@
+//! [`LossyTransport`]: a deterministic loss-injection decorator over
+//! any [`Transport`] backend.
+//!
+//! Real networks drop and duplicate datagrams; scheduler jitter makes
+//! those events unreproducible on real sockets. This wrapper moves the
+//! fault injection to the *sender* side, driven by a seeded RNG, so a
+//! loss scenario replays byte-identically over the sim transport (and
+//! statistically identically over UDP/TCP): frame `i` of a run is
+//! dropped, duplicated or reordered purely as a function of
+//! `(seed, i)`.
+//!
+//! `dgro scenario run --transport sim|udp|tcp --loss-rate R
+//! --dup-rate D --reorder-rate Q` wraps the chosen backend in this
+//! decorator;
+//! `rust/tests/net.rs` pins that two runs with the same seed produce
+//! byte-identical coordinator reports and that measurement drift under
+//! 5–10% injected loss stays inside the documented bound.
+
+use anyhow::Result;
+
+use crate::latency::LatencyMatrix;
+use crate::net::transport::{Delivery, Transport};
+use crate::util::rng::Rng;
+
+/// Fault model of a [`LossyTransport`]: per-frame drop, duplicate and
+/// reorder probabilities plus the RNG seed the injection stream
+/// derives from.
+#[derive(Clone, Copy, Debug)]
+pub struct LossyConfig {
+    /// Probability a sent frame is silently dropped.
+    pub drop_rate: f64,
+    /// Probability a delivered frame is sent twice (duplicate
+    /// delivery at the receiver).
+    pub dup_rate: f64,
+    /// Probability a sent frame is held back and released *after* the
+    /// sender's next frame, swapping their wire order (a held frame is
+    /// flushed at the next receive, so it can never outlive its
+    /// collection phase).
+    pub reorder_rate: f64,
+    /// Seed of the injection stream (same seed ⇒ same fault pattern).
+    pub seed: u64,
+}
+
+impl LossyConfig {
+    /// A fault model with the given drop rate only.
+    pub fn drops(drop_rate: f64, seed: u64) -> LossyConfig {
+        LossyConfig {
+            drop_rate,
+            dup_rate: 0.0,
+            reorder_rate: 0.0,
+            seed,
+        }
+    }
+
+    /// Whether this configuration injects any fault at all.
+    pub fn active(&self) -> bool {
+        self.drop_rate > 0.0
+            || self.dup_rate > 0.0
+            || self.reorder_rate > 0.0
+    }
+}
+
+/// Seeded drop/duplicate/reorder decorator over any transport backend
+/// (see the module docs). The logical frame count
+/// ([`Transport::frames_sent`]) counts every *attempted* send — a
+/// dropped frame still cost its sender a transmission — while
+/// [`LossyTransport::frames_dropped`],
+/// [`LossyTransport::frames_duplicated`] and
+/// [`LossyTransport::frames_reordered`] expose the injected faults.
+pub struct LossyTransport<T: Transport> {
+    inner: T,
+    rng: Rng,
+    cfg: LossyConfig,
+    /// A frame held back for reordering: released after the next send
+    /// (or flushed at the next receive).
+    held: Option<(u32, u32, Vec<u8>)>,
+    sent: u64,
+    dropped: u64,
+    duplicated: u64,
+    reordered: u64,
+}
+
+impl<T: Transport> LossyTransport<T> {
+    /// Wrap `inner` with the given fault model.
+    pub fn new(inner: T, cfg: LossyConfig) -> LossyTransport<T> {
+        LossyTransport {
+            inner,
+            rng: Rng::new(cfg.seed ^ 0x1055_EEDF_0017_1CEE),
+            cfg,
+            held: None,
+            sent: 0,
+            dropped: 0,
+            duplicated: 0,
+            reordered: 0,
+        }
+    }
+
+    /// Frames the decorator silently dropped so far.
+    pub fn frames_dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Frames the decorator sent twice so far.
+    pub fn frames_duplicated(&self) -> u64 {
+        self.duplicated
+    }
+
+    /// Frames the decorator held back to swap wire order so far.
+    pub fn frames_reordered(&self) -> u64 {
+        self.reordered
+    }
+
+    /// The wrapped backend (e.g. to read backend-specific counters).
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    /// Transmit on the backend, drawing the duplicate coin at actual
+    /// transmission time.
+    fn transmit(&mut self, src: u32, dst: u32, frame: &[u8]) -> Result<()> {
+        self.inner.send(src, dst, frame)?;
+        if self.cfg.dup_rate > 0.0 && self.rng.chance(self.cfg.dup_rate)
+        {
+            self.duplicated += 1;
+            self.inner.send(src, dst, frame)?;
+        }
+        Ok(())
+    }
+
+    /// Release a held (reordered) frame, if any.
+    fn flush_held(&mut self) -> Result<()> {
+        if let Some((src, dst, frame)) = self.held.take() {
+            self.transmit(src, dst, &frame)?;
+        }
+        Ok(())
+    }
+}
+
+impl<T: Transport> Transport for LossyTransport<T> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.inner.now_ms()
+    }
+
+    fn send(&mut self, src: u32, dst: u32, frame: &[u8]) -> Result<()> {
+        if src == dst || dst as usize >= self.inner.n() {
+            // Delegate the error path so diagnostics stay uniform.
+            return self.inner.send(src, dst, frame);
+        }
+        self.sent += 1;
+        // The coins are drawn in a fixed order (drop, then reorder,
+        // then — at actual transmission — duplicate), each only when
+        // its rate is non-zero, so the fault pattern is a pure
+        // function of (seed, send/recv call sequence).
+        if self.cfg.drop_rate > 0.0 && self.rng.chance(self.cfg.drop_rate)
+        {
+            self.dropped += 1;
+            return Ok(());
+        }
+        if self.cfg.reorder_rate > 0.0
+            && self.held.is_none()
+            && self.rng.chance(self.cfg.reorder_rate)
+        {
+            // Hold this frame back; it goes out right after the next
+            // transmitted frame, swapping their wire order.
+            self.held = Some((src, dst, frame.to_vec()));
+            self.reordered += 1;
+            return Ok(());
+        }
+        self.transmit(src, dst, frame)?;
+        self.flush_held()
+    }
+
+    fn recv(&mut self, dst: u32, timeout_ms: f64) -> Option<Delivery> {
+        // A held frame must not outlive its collection phase: release
+        // it before the receiver starts draining.
+        if self.flush_held().is_err() {
+            return None;
+        }
+        self.inner.recv(dst, timeout_ms)
+    }
+
+    fn set_latency(&mut self, w: &LatencyMatrix) -> Result<()> {
+        self.inner.set_latency(w)
+    }
+
+    fn addr(&self, node: u32) -> String {
+        self.inner.addr(node)
+    }
+
+    fn frames_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn name(&self) -> &'static str {
+        "lossy"
+    }
+
+    fn loss_hint(&self) -> f64 {
+        // Duplication also perturbs barrier accounting, so any active
+        // fault model opts the protocol into deadline-based write-off.
+        if self.cfg.active() {
+            self.cfg.drop_rate.max(0.01)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::SimTransport;
+
+    fn w4() -> LatencyMatrix {
+        LatencyMatrix::from_fn(4, |u, v| 5.0 + (u + v) as f32)
+    }
+
+    #[test]
+    fn zero_rates_are_transparent() {
+        let mut t = LossyTransport::new(
+            SimTransport::new(w4()),
+            LossyConfig {
+                drop_rate: 0.0,
+                dup_rate: 0.0,
+                reorder_rate: 0.0,
+                seed: 1,
+            },
+        );
+        for _ in 0..16 {
+            t.send(0, 1, b"x").unwrap();
+        }
+        assert_eq!(t.frames_sent(), 16);
+        assert_eq!(t.frames_dropped(), 0);
+        assert_eq!(t.frames_duplicated(), 0);
+        let mut got = 0;
+        while t.recv(1, 50.0).is_some() {
+            got += 1;
+        }
+        assert_eq!(got, 16);
+        assert_eq!(t.loss_hint(), 0.0);
+    }
+
+    #[test]
+    fn drops_are_seed_deterministic() {
+        let run = |seed: u64| -> (u64, Vec<bool>) {
+            let mut t = LossyTransport::new(
+                SimTransport::new(w4()),
+                LossyConfig::drops(0.3, seed),
+            );
+            let mut pattern = Vec::new();
+            for _ in 0..64 {
+                let before = t.inner().frames_sent();
+                t.send(0, 1, b"p").unwrap();
+                pattern.push(t.inner().frames_sent() == before);
+            }
+            (t.frames_dropped(), pattern)
+        };
+        let (d1, p1) = run(7);
+        let (d2, p2) = run(7);
+        let (d3, p3) = run(8);
+        assert_eq!(d1, d2);
+        assert_eq!(p1, p2, "same seed must drop the same frames");
+        assert!(d1 > 0, "0.3 over 64 sends must drop something");
+        assert!(p1 != p3 || d1 != d3, "different seed, different fate");
+    }
+
+    #[test]
+    fn duplicates_deliver_twice() {
+        let mut t = LossyTransport::new(
+            SimTransport::new(w4()),
+            LossyConfig {
+                drop_rate: 0.0,
+                dup_rate: 1.0,
+                reorder_rate: 0.0,
+                seed: 3,
+            },
+        );
+        t.send(0, 1, b"d").unwrap();
+        assert_eq!(t.frames_sent(), 1, "logical count ignores the dup");
+        assert_eq!(t.frames_duplicated(), 1);
+        assert!(t.recv(1, 50.0).is_some());
+        assert!(t.recv(1, 50.0).is_some(), "duplicate must also land");
+        assert!(t.recv(1, 50.0).is_none());
+        assert!(t.loss_hint() > 0.0);
+    }
+
+    #[test]
+    fn reorder_swaps_consecutive_frames() {
+        let mut t = LossyTransport::new(
+            SimTransport::new(w4()),
+            LossyConfig {
+                drop_rate: 0.0,
+                dup_rate: 0.0,
+                reorder_rate: 1.0,
+                seed: 5,
+            },
+        );
+        t.send(0, 1, b"a").unwrap(); // held back
+        t.send(0, 1, b"b").unwrap(); // transmitted, then "a" released
+        // Same link, same delay: sim delivery follows inner send
+        // order, so the wire order is swapped.
+        let first = t.recv(1, 50.0).expect("first delivery");
+        let second = t.recv(1, 50.0).expect("second delivery");
+        assert_eq!(first.frame, b"b");
+        assert_eq!(second.frame, b"a");
+        assert_eq!(t.frames_reordered(), 1);
+        // A held frame with no follow-up send flushes on receive.
+        t.send(0, 2, b"tail").unwrap(); // held
+        assert_eq!(t.frames_reordered(), 2);
+        let d = t.recv(2, 50.0).expect("flushed on receive");
+        assert_eq!(d.frame, b"tail");
+    }
+}

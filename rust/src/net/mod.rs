@@ -1,7 +1,7 @@
 //! Real-socket transport subsystem: run the DGRO coordinator over
 //! message-level transports (docs/TRANSPORT.md).
 //!
-//! Three layers:
+//! Five layers:
 //!
 //! * [`transport`] — the [`Transport`](transport::Transport) trait
 //!   (framed datagrams, peer addressing, clock, per-link delay shaping)
@@ -11,25 +11,40 @@
 //!   delay-injection shim driven by the same
 //!   [`LatencyMatrix`](crate::latency::LatencyMatrix) the simulator
 //!   uses.
-//! * [`wire`] — the versioned binary wire protocol: gossip probes,
-//!   membership events, ring-swap announcements, coordinator reports.
+//! * [`tcp`] — [`TcpTransport`](tcp::TcpTransport): length-prefixed
+//!   framed streams over per-peer loopback TCP connections with
+//!   on-demand dialing and reconnect/backoff, sharing the delay shim.
+//! * [`lossy`] — [`LossyTransport`](lossy::LossyTransport): a seeded
+//!   drop/duplicate/reorder decorator over any backend, so loss
+//!   scenarios replay deterministically (`--loss-rate`, `--dup-rate`,
+//!   `--reorder-rate`).
+//! * [`wire`] — the versioned, **epoch-tagged** binary wire protocol:
+//!   gossip probes, membership events, ring-swap announcements,
+//!   coordinator reports. Since wire v2 every frame carries the
+//!   collection-phase epoch so cross-phase stragglers are rejected.
 //! * [`runner`] — the [`NetCoordinator`](runner::NetCoordinator): N
 //!   in-process node actors over the chosen transport, Algorithm-3
-//!   measurement from real message RTTs, ρ-guided ring swaps, the same
-//!   [`CoordinatorReport`](crate::coordinator::CoordinatorReport)
+//!   measurement from real message RTTs with bounded probe retransmit
+//!   and loss-weighted push-sum aggregation, ρ-guided ring swaps, the
+//!   same [`CoordinatorReport`](crate::coordinator::CoordinatorReport)
 //!   stream as the in-process coordinator.
 //!
-//! `dgro scenario run --transport sim|udp` replays any scenario trace
-//! over either transport; `rust/tests/net.rs` pins the sim-vs-udp
-//! per-period alive-diameter parity and figure 21 records it.
+//! `dgro scenario run --transport sim|udp|tcp [--loss-rate R]` replays
+//! any scenario trace over any transport; `rust/tests/net.rs` pins the
+//! cross-transport per-period alive-diameter parity (exact trace
+//! parity, bounded drift under injected loss) and figure 21 records it.
 
+pub mod lossy;
 pub mod runner;
+pub mod tcp;
 pub mod transport;
 pub mod wire;
 
 use anyhow::{bail, Result};
 
+pub use lossy::{LossyConfig, LossyTransport};
 pub use runner::NetCoordinator;
+pub use tcp::TcpTransport;
 pub use transport::{Delivery, SimTransport, Transport, UdpTransport};
 pub use wire::{Message, WIRE_VERSION};
 
@@ -40,6 +55,9 @@ pub enum TransportKind {
     Sim,
     /// [`UdpTransport`]: UDP loopback processes with the delay shim.
     Udp,
+    /// [`TcpTransport`]: framed loopback streams with reconnect and
+    /// the same delay shim.
+    Tcp,
 }
 
 impl TransportKind {
@@ -48,7 +66,8 @@ impl TransportKind {
         match s.to_ascii_lowercase().as_str() {
             "sim" => Ok(TransportKind::Sim),
             "udp" => Ok(TransportKind::Udp),
-            other => bail!("unknown transport '{other}' (sim|udp)"),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => bail!("unknown transport '{other}' (sim|udp|tcp)"),
         }
     }
 
@@ -57,6 +76,7 @@ impl TransportKind {
         match self {
             TransportKind::Sim => "sim",
             TransportKind::Udp => "udp",
+            TransportKind::Tcp => "tcp",
         }
     }
 }
@@ -67,9 +87,11 @@ mod tests {
 
     #[test]
     fn transport_kind_round_trips() {
-        for k in [TransportKind::Sim, TransportKind::Udp] {
+        for k in
+            [TransportKind::Sim, TransportKind::Udp, TransportKind::Tcp]
+        {
             assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
         }
-        assert!(TransportKind::parse("tcp").is_err());
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
     }
 }

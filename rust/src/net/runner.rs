@@ -22,6 +22,24 @@
 //!    [`Coordinator`](crate::coordinator::Coordinator) and broadcasts a
 //!    [`Message::Report`] so every member sees the period summary.
 //!
+//! **Loss hardening (wire v2).** Every collection phase above runs
+//! under its own frame **epoch**: frames are stamped at send, and a
+//! frame whose epoch is not the current one — a straggler from a phase
+//! that was already written off — is dropped and counted
+//! (`net.stale_frames`) instead of perturbing a later phase's barrier.
+//! Duplicate deliveries are de-duplicated per phase (`net.dup_frames`).
+//! Lost RTT probes are retransmitted with fresh sequence numbers for up
+//! to [`PROBE_RETX`] extra rounds (`net.probe_retx`), so ping/pong
+//! samples are never ambiguous (a reply always names the transmission
+//! it answers). Lost push-sum frames need no retransmit: each node's
+//! estimate is read out as a mass-weighted ratio, so dropped mass
+//! widens the variance but never biases the weighted average — nodes
+//! whose mass was lost entirely are excluded from the readout. On a
+//! transport that declares an expected loss rate
+//! ([`Transport::loss_hint`]), write-off switches from the
+//! conservative idle cap to a deadline two shaped link delays past the
+//! phase start, keeping lossy runs fast.
+//!
 //! Reported diameters are evaluated against the coordinator's oracle
 //! latency view (exactly like the sim path) so transports are comparable
 //! — what the transport changes is the *measured* inputs to ρ and hence
@@ -60,14 +78,47 @@ use crate::util::rng::Rng;
 const POLL_MS: f64 = 10.0;
 
 /// Consecutive all-idle sweeps before a collection phase declares the
-/// outstanding frames lost (UDP drops; never reached on sim).
+/// outstanding frames lost on a *faithful* transport (spurious UDP
+/// drops; never reached on sim). Transports with a declared loss rate
+/// use the deadline-based write-off instead (see [`NetCoordinator`]).
 const MAX_IDLE_SWEEPS: usize = 50;
+
+/// Extra transmission rounds granted to unanswered RTT probes before
+/// the sample is abandoned (each round is its own frame epoch, so a
+/// late reply to an earlier transmission can never be mistaken for the
+/// retry's answer).
+pub const PROBE_RETX: usize = 2;
 
 /// An in-flight RTT probe awaiting its pong.
 struct PendingProbe {
     target: u32,
     sent_at_ms: f64,
     global: bool,
+}
+
+/// FNV-1a over (src, dst, frame bytes): the per-phase key duplicate
+/// deliveries are detected by. Within one epoch the protocol never
+/// legitimately sends two byte-identical frames on the same link
+/// (probes carry fresh sequence numbers, push-sum sends one frame per
+/// round per link, control frames are distinct events).
+fn frame_key(src: u32, dst: u32, frame: &[u8]) -> u64 {
+    const PRIME: u64 = 0x100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in src
+        .to_le_bytes()
+        .into_iter()
+        .chain(dst.to_le_bytes())
+        .chain(frame.iter().copied())
+    {
+        h = (h ^ b as u64).wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Largest per-link shaped delay of `w` (sim-ms) — the unit the lossy
+/// write-off deadline is measured in.
+fn max_delay_ms(w: &LatencyMatrix) -> f64 {
+    w.data().iter().fold(0.0f32, |a, &x| a.max(x)) as f64
 }
 
 /// Per-measurement accumulator of one node's probe samples.
@@ -148,6 +199,14 @@ pub struct NetCoordinator<T: Transport> {
     transport: T,
     in_flight: usize,
     alive_cache: HashSet<u32>,
+    /// Current collection-phase epoch: every frame sent is stamped with
+    /// it, every frame received is checked against it.
+    epoch: u32,
+    /// Per-phase duplicate-delivery filter ([`frame_key`] values).
+    seen: HashSet<u64>,
+    /// Largest shaped link delay of the current latency view (sim-ms),
+    /// the unit of the lossy write-off deadline.
+    max_w_ms: f64,
 }
 
 impl<T: Transport> NetCoordinator<T> {
@@ -201,11 +260,24 @@ impl<T: Transport> NetCoordinator<T> {
             nodes,
             transport,
             in_flight: 0,
+            epoch: 0,
+            seen: HashSet::new(),
+            max_w_ms: max_delay_ms(&w),
             rng,
             krings,
             w,
             cfg,
         })
+    }
+
+    /// Open a new collection phase: bump the frame epoch and reset the
+    /// per-phase duplicate filter. Any frame still in flight from the
+    /// previous phase becomes a straggler that [`Self::on_delivery`]
+    /// will reject by its stale epoch tag.
+    fn begin_phase(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        self.seen.clear();
+        self.in_flight = 0;
     }
 
     /// The underlying transport's name ("sim" / "udp").
@@ -236,7 +308,7 @@ impl<T: Transport> NetCoordinator<T> {
     }
 
     fn send(&mut self, src: u32, dst: u32, msg: &Message) -> Result<()> {
-        self.transport.send(src, dst, &msg.encode())?;
+        self.transport.send(src, dst, &msg.encode(self.epoch))?;
         self.in_flight += 1;
         Ok(())
     }
@@ -280,12 +352,13 @@ impl<T: Transport> NetCoordinator<T> {
         }
     }
 
-    /// Handle one delivered frame at `node`. Decodes, dispatches, and
-    /// answers pings. Undecodable frames (corrupt or stray datagrams on
-    /// the real-socket path) are counted and dropped rather than
-    /// aborting the run.
+    /// Handle one delivered frame at `node`. Decodes, checks the frame
+    /// epoch, filters duplicates, dispatches, and answers pings.
+    /// Undecodable frames (corrupt or stray datagrams on the
+    /// real-socket path) are counted and dropped rather than aborting
+    /// the run; so are cross-epoch stragglers and duplicate deliveries
+    /// — none of them may consume a barrier slot or mutate actor state.
     fn on_delivery(&mut self, node: u32, d: Delivery) -> Result<()> {
-        self.in_flight = self.in_flight.saturating_sub(1);
         // The src field came off the wire: validate it before using it
         // as a reply address or an actor index — a stray datagram must
         // be dropped, not abort the run (self-sends are transport
@@ -294,13 +367,27 @@ impl<T: Transport> NetCoordinator<T> {
             self.metrics.incr("net.decode_errors", 1);
             return Ok(());
         }
-        let msg = match Message::decode(&d.frame) {
-            Ok(msg) => msg,
+        let (epoch, msg) = match Message::decode(&d.frame) {
+            Ok(x) => x,
             Err(_) => {
                 self.metrics.incr("net.decode_errors", 1);
                 return Ok(());
             }
         };
+        if epoch != self.epoch {
+            // A straggler from a phase that was already written off:
+            // reject it whole instead of folding it into this phase's
+            // barrier (the cascade wire v1 was vulnerable to).
+            self.metrics.incr("net.stale_frames", 1);
+            return Ok(());
+        }
+        if !self.seen.insert(frame_key(d.src, node, &d.frame)) {
+            // Duplicate delivery: the first copy already consumed the
+            // barrier slot and mutated state.
+            self.metrics.incr("net.dup_frames", 1);
+            return Ok(());
+        }
+        self.in_flight = self.in_flight.saturating_sub(1);
         match msg {
             Message::Ping { seq } => {
                 if self.alive_cache.contains(&node) {
@@ -359,12 +446,24 @@ impl<T: Transport> NetCoordinator<T> {
         Ok(())
     }
 
-    /// Pump deliveries round-robin until every in-flight frame landed or
-    /// the idle cap fires (UDP loss). Returns frames written off.
+    /// Pump deliveries round-robin until every in-flight frame landed
+    /// or the write-off policy fires. Returns frames written off.
+    ///
+    /// Two write-off policies: a faithful transport uses the
+    /// conservative [`MAX_IDLE_SWEEPS`] idle cap (a spurious loopback
+    /// drop is rare, so waiting long is cheap in expectation); a
+    /// transport that *declares* loss ([`Transport::loss_hint`]) uses a
+    /// deadline two shaped link delays past the phase start — with
+    /// epoch tagging, writing a frame off early is safe (a late
+    /// arrival is rejected as stale, never mis-barriered), so lossy
+    /// runs don't stall on every dropped frame.
     fn collect(&mut self) -> Result<u64> {
         let n = self.cfg.nodes as u32;
+        let lossy = self.transport.loss_hint() > 0.0;
+        let start_ms = self.transport.now_ms();
+        let budget_ms = 2.0 * self.max_w_ms + 8.0 * POLL_MS;
         let mut idle = 0usize;
-        while self.in_flight > 0 && idle < MAX_IDLE_SWEEPS {
+        while self.in_flight > 0 {
             let mut any = false;
             for node in 0..n {
                 while let Some(d) = self.transport.recv(node, POLL_MS) {
@@ -374,8 +473,15 @@ impl<T: Transport> NetCoordinator<T> {
             }
             if any {
                 idle = 0;
-            } else {
-                idle += 1;
+                continue;
+            }
+            idle += 1;
+            if lossy {
+                if self.transport.now_ms() - start_ms > budget_ms {
+                    break;
+                }
+            } else if idle >= MAX_IDLE_SWEEPS {
+                break;
             }
         }
         let lost = self.in_flight as u64;
@@ -423,49 +529,87 @@ impl<T: Transport> NetCoordinator<T> {
             .collect();
 
         // Phase 1 — RTT probes. Sampling draws come from each node's own
-        // RNG stream in a fixed order, so the probe plan is identical on
-        // every transport; only the measured RTTs differ.
+        // RNG stream in a fixed order, so the initial probe plan is
+        // identical on every transport; only the measured RTTs (and any
+        // loss-driven retransmits) differ.
+        let mut plans: Vec<Vec<(u32, bool)>> = vec![Vec::new(); n];
         for &u in &alive {
             self.nodes[u as usize].probe = ProbeAccum::default();
             self.nodes[u as usize].pending.clear();
             let neigh = &neigh_alive[u as usize];
-            let mut plan: Vec<(u32, u32, bool)> = Vec::with_capacity(2 * k);
-            {
-                let actor = &mut self.nodes[u as usize];
-                for _ in 0..k {
-                    if neigh.is_empty() {
-                        break;
-                    }
-                    let tgt = neigh[actor.rng.index(neigh.len())];
-                    plan.push((actor.fresh_seq(), tgt, false));
+            let actor = &mut self.nodes[u as usize];
+            let mut plan: Vec<(u32, bool)> = Vec::with_capacity(2 * k);
+            for _ in 0..k {
+                if neigh.is_empty() {
+                    break;
                 }
-                for _ in 0..k {
-                    let tgt = loop {
-                        let v = actor.rng.index(n) as u32;
-                        if v != u {
-                            break v;
-                        }
-                    };
-                    if !self.alive_cache.contains(&tgt) {
-                        continue; // dead peers cannot answer probes
+                plan.push((neigh[actor.rng.index(neigh.len())], false));
+            }
+            for _ in 0..k {
+                let tgt = loop {
+                    let v = actor.rng.index(n) as u32;
+                    if v != u {
+                        break v;
                     }
-                    plan.push((actor.fresh_seq(), tgt, true));
+                };
+                if !self.alive_cache.contains(&tgt) {
+                    continue; // dead peers cannot answer probes
+                }
+                plan.push((tgt, true));
+            }
+            plans[u as usize] = plan;
+        }
+        // Each transmission round is its own epoch, and a retried probe
+        // gets a fresh sequence number — so a pong always names the
+        // exact transmission it answers and retransmitted samples stay
+        // as unbiased as first-try ones (no Karn ambiguity).
+        for attempt in 0..=PROBE_RETX {
+            if plans.iter().all(|p| p.is_empty()) {
+                break;
+            }
+            if attempt > 0 {
+                let outstanding: u64 =
+                    plans.iter().map(|p| p.len() as u64).sum();
+                self.metrics.incr("net.probe_retx", outstanding);
+            }
+            self.begin_phase();
+            for &u in &alive {
+                let plan = std::mem::take(&mut plans[u as usize]);
+                for (tgt, global) in plan {
+                    let seq = self.nodes[u as usize].fresh_seq();
+                    let sent_at_ms = self.transport.now_ms();
+                    self.nodes[u as usize].pending.insert(
+                        seq,
+                        PendingProbe {
+                            target: tgt,
+                            sent_at_ms,
+                            global,
+                        },
+                    );
+                    self.send(u, tgt, &Message::Ping { seq })?;
                 }
             }
-            for (seq, tgt, global) in plan {
-                let sent_at_ms = self.transport.now_ms();
-                self.nodes[u as usize].pending.insert(
-                    seq,
-                    PendingProbe {
-                        target: tgt,
-                        sent_at_ms,
-                        global,
-                    },
-                );
-                self.send(u, tgt, &Message::Ping { seq })?;
+            self.collect()?;
+            // Whatever is still pending lost its ping or its pong:
+            // queue it for the next transmission round (the drain order
+            // is keyed by sequence number so retries are deterministic
+            // for a deterministic fault pattern).
+            for &u in &alive {
+                let actor = &mut self.nodes[u as usize];
+                if actor.pending.is_empty() {
+                    continue;
+                }
+                let mut retry: Vec<(u32, PendingProbe)> =
+                    actor.pending.drain().collect();
+                retry.sort_by_key(|&(seq, _)| seq);
+                plans[u as usize] = retry
+                    .into_iter()
+                    .map(|(_, p)| (p.target, p.global))
+                    .collect();
             }
         }
-        self.collect()?;
+        // Probes still unanswered after the budget are abandoned: their
+        // node simply contributes less (or zero) mass below.
 
         // Seed the push-sum accumulators from the probe results. Both
         // weights follow the same rule: a node that contributed no
@@ -495,10 +639,15 @@ impl<T: Transport> NetCoordinator<T> {
             ];
         }
 
-        // Phase 2 — push-sum rounds. Each round is barriered and every
-        // node merges its incoming pushes in ascending sender order, so
-        // the float arithmetic is order-identical across transports.
+        // Phase 2 — push-sum rounds. Each round is barriered under its
+        // own epoch and every node merges its incoming pushes in
+        // ascending sender order, so the float arithmetic is
+        // order-identical across transports. Lost pushes are *not*
+        // retransmitted: push-sum reads out as the mass-weighted ratio
+        // below, so lost mass widens variance without biasing the
+        // weighted average (loss-weighted merging).
         for _ in 0..self.cfg.gossip_rounds {
+            self.begin_phase();
             for &u in &alive {
                 let neigh = &neigh_alive[u as usize];
                 if neigh.is_empty() {
@@ -606,11 +755,15 @@ impl<T: Transport> NetCoordinator<T> {
                     );
                 }
                 self.transport.set_latency(&w)?;
+                self.max_w_ms = max_delay_ms(&w);
                 self.w = w;
                 self.metrics.incr("latency.updates", 1);
             }
             // Disseminate this period's membership events, barriered so
-            // every node's view is current before it measures.
+            // every node's view is current before it measures (its own
+            // collection phase: stragglers must not leak into the
+            // measurement barrier).
+            self.begin_phase();
             let mut applied = 0u64;
             while ev_idx < trace.events.len()
                 && trace.events[ev_idx].time() <= t
@@ -655,6 +808,7 @@ impl<T: Transport> NetCoordinator<T> {
                         &mut self.rng,
                     ) {
                         self.metrics.incr("rings.swapped", 1);
+                        self.begin_phase();
                         self.broadcast(&Message::RingSwap {
                             slot: slot as u32,
                             order,
@@ -686,6 +840,7 @@ impl<T: Transport> NetCoordinator<T> {
             timeline.push((t, rho, d));
 
             // Close the loop: every member hears the period summary.
+            self.begin_phase();
             self.broadcast(&Message::Report {
                 period,
                 t_ms: t,
@@ -809,6 +964,92 @@ mod tests {
         for rep in co.node_reports() {
             let (period, ..) = rep.expect("report received");
             assert_eq!(period, 2);
+        }
+    }
+
+    #[test]
+    fn stale_and_duplicate_frames_never_mutate_state() {
+        let w = sample(8, 1);
+        let mut co = NetCoordinator::new(
+            cfg(8),
+            w.clone(),
+            SimTransport::new(w),
+        )
+        .unwrap();
+        co.begin_phase(); // epoch 1 (the "written-off" phase)
+        co.begin_phase(); // epoch 2 (current)
+        let before = co.node_views();
+
+        // A membership straggler stamped with the written-off epoch:
+        // rejected whole, views untouched.
+        let stale = Message::Membership {
+            event: MembershipEvent::Crash {
+                time: 5.0,
+                node: 1,
+            },
+        }
+        .encode(1);
+        co.transport.send(0, 2, &stale).unwrap();
+        let d = co.transport.recv(2, 100.0).expect("delivered");
+        co.on_delivery(2, d).unwrap();
+        assert_eq!(co.node_views(), before, "stale frame mutated a view");
+        assert_eq!(co.metrics.counter("net.stale_frames"), 1);
+
+        // A current-epoch Join delivered twice: Join is *not*
+        // idempotent (it bumps the incarnation), so the duplicate
+        // filter is what keeps the view correct.
+        let join = Message::Membership {
+            event: MembershipEvent::Join {
+                time: 6.0,
+                node: 3,
+            },
+        }
+        .encode(2);
+        co.transport.send(0, 2, &join).unwrap();
+        co.transport.send(0, 2, &join).unwrap();
+        for _ in 0..2 {
+            let d = co.transport.recv(2, 100.0).expect("delivered");
+            co.on_delivery(2, d).unwrap();
+        }
+        assert_eq!(co.metrics.counter("net.dup_frames"), 1);
+        let inc = co.nodes[2]
+            .membership
+            .snapshot()
+            .into_iter()
+            .find(|&(id, ..)| id == 3)
+            .map(|(_, _, inc)| inc)
+            .expect("node 3 in view");
+        assert_eq!(inc, 1, "duplicate Join must apply exactly once");
+
+        // Truncated garbage is a decode error, not a state change.
+        let ping = Message::Ping { seq: 1 }.encode(2);
+        co.transport.send(0, 2, &ping[..3]).unwrap();
+        let d = co.transport.recv(2, 100.0).expect("delivered");
+        co.on_delivery(2, d).unwrap();
+        assert_eq!(co.metrics.counter("net.decode_errors"), 1);
+    }
+
+    #[test]
+    fn lossy_sim_run_retransmits_probes_and_completes() {
+        use crate::net::lossy::{LossyConfig, LossyTransport};
+        let w = sample(24, 9);
+        let transport = LossyTransport::new(
+            SimTransport::new(w.clone()),
+            LossyConfig::drops(0.15, 42),
+        );
+        let mut co = NetCoordinator::new(cfg(24), w, transport).unwrap();
+        let rep = co.run(&EventTrace::default(), 1000.0).unwrap();
+        assert_eq!(rep.timeline.len(), 4, "lossy run must still cover \
+                    every period");
+        assert!(rep.final_diameter.is_finite());
+        // 15% injected loss over thousands of frames: probes were
+        // retransmitted and some frames written off.
+        assert!(co.metrics.counter("net.probe_retx") > 0);
+        assert!(co.metrics.counter("net.frames_lost") > 0);
+        // The loss-weighted readout kept ρ inputs sane: every period
+        // still produced a finite ρ in [0, 1].
+        for &(_, rho, _) in &rep.timeline {
+            assert!((0.0..=1.0).contains(&rho), "rho {rho}");
         }
     }
 

@@ -1,0 +1,448 @@
+//! [`TcpTransport`]: the stream-based real-socket transport —
+//! length-prefixed frames over per-peer loopback TCP connections with
+//! on-demand dialing, reconnect with exponential backoff, and the same
+//! receiver-side delay shim as the UDP path (docs/TRANSPORT.md).
+//!
+//! Topology: one `TcpListener` per node endpoint. The first frame
+//! toward a destination dials its listener and the stream is cached
+//! **per destination** — the sender id travels in every frame header,
+//! so the in-process senders share one stream per peer and the
+//! steady-state footprint is at most `n` outbound connections (plus a
+//! `CONN_CAP` FIFO bound as a defensive ceiling for huge overlays). A
+//! broken or evicted connection is re-dialed on the next send, with
+//! `CONNECT_RETRIES` backoff rounds before the send is given up as a
+//! transport error.
+//!
+//! Stream framing: `[len u32][deliver_at_us u64][src u32][frame]`,
+//! little-endian. TCP gives in-order reliable delivery per connection;
+//! the shim header still carries the delivery deadline so per-link
+//! latency is shaped from the same [`LatencyMatrix`] the simulator
+//! uses, exactly like the UDP datagram header.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::latency::LatencyMatrix;
+use crate::net::transport::{Delivery, HeldMsg, ShimRx, Transport};
+
+/// Stream-frame header carried inside the length prefix: delivery
+/// deadline (µs since the transport epoch) + sender id.
+const STREAM_HEADER: usize = 8 + 4;
+
+/// Largest frame a reader accepts; a corrupt length prefix must not
+/// drive an OOM allocation.
+const MAX_FRAME: usize = 1 << 20;
+
+/// Defensive ceiling on cached outbound connections (each cached
+/// stream also pins one accepted socket and one reader thread on the
+/// receiving side, so the file-descriptor footprint is ~2× this plus
+/// one listener per node). With the per-destination cache the working
+/// set is exactly the peer count, so eviction only ever fires on
+/// overlays larger than this.
+const CONN_CAP: usize = 192;
+
+/// Dial attempts per send before the connection is declared down.
+const CONNECT_RETRIES: u32 = 3;
+
+/// Backoff before dial attempt `k` (k = 1 is the first retry).
+fn backoff(attempt: u32) -> Duration {
+    Duration::from_millis(1u64 << (2 * attempt.min(3)))
+}
+
+/// Stream transport over per-node loopback `TcpListener`s with the
+/// delay-injection shim (see the module docs). `time_scale` compresses
+/// sim-ms into real-ms like [`crate::net::UdpTransport`].
+pub struct TcpTransport {
+    addrs: Vec<SocketAddr>,
+    shims: Vec<ShimRx>,
+    /// Cached outbound streams, keyed by destination (the sender id is
+    /// in the frame header); `order` tracks insertion for FIFO
+    /// eviction at the defensive `CONN_CAP` ceiling.
+    conns: HashMap<u32, TcpStream>,
+    order: Vec<u32>,
+    epoch: Instant,
+    scale: f64,
+    w: LatencyMatrix,
+    stop: Arc<AtomicBool>,
+    acceptors: Vec<std::thread::JoinHandle<()>>,
+    readers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    sent: u64,
+    reconnects: u64,
+}
+
+impl TcpTransport {
+    /// Bind `w.n()` loopback listeners and start their acceptor
+    /// threads. Outbound connections are dialed lazily on first send.
+    pub fn bind(w: LatencyMatrix, time_scale: f64) -> Result<TcpTransport> {
+        if !(time_scale > 0.0) {
+            bail!("time_scale must be > 0, got {time_scale}");
+        }
+        let n = w.n();
+        let stop = Arc::new(AtomicBool::new(false));
+        let epoch = Instant::now();
+        let readers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let mut addrs = Vec::with_capacity(n);
+        let mut shims = Vec::with_capacity(n);
+        let mut acceptors = Vec::with_capacity(n);
+        for node in 0..n {
+            let listener = TcpListener::bind("127.0.0.1:0")
+                .with_context(|| format!("binding node {node}"))?;
+            listener.set_nonblocking(true)?;
+            addrs.push(listener.local_addr()?);
+            let (tx, rxq) = std::sync::mpsc::channel();
+            acceptors.push(spawn_acceptor(
+                listener,
+                tx,
+                epoch,
+                Arc::clone(&stop),
+                Arc::clone(&readers),
+            ));
+            shims.push(ShimRx::new(rxq));
+        }
+        Ok(TcpTransport {
+            addrs,
+            shims,
+            conns: HashMap::new(),
+            order: Vec::new(),
+            epoch,
+            scale: time_scale,
+            w,
+            stop,
+            acceptors,
+            readers,
+            sent: 0,
+            reconnects: 0,
+        })
+    }
+
+    /// Connections re-dialed after a broken or evicted stream (the
+    /// reconnect/backoff path's activity counter).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Dial `dst` with bounded backoff.
+    fn dial(&self, dst: u32) -> Result<TcpStream> {
+        let addr = self.addrs[dst as usize];
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..CONNECT_RETRIES {
+            if attempt > 0 {
+                std::thread::sleep(backoff(attempt));
+            }
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    s.set_nodelay(true)?;
+                    return Ok(s);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        bail!(
+            "dialing node {dst} at {addr} failed after \
+             {CONNECT_RETRIES} attempts: {}",
+            last.expect("at least one attempt ran")
+        );
+    }
+
+    /// Evict the oldest cached connection once the cache is full; the
+    /// closed stream EOFs its reader on the receiving side, freeing
+    /// both descriptors.
+    fn make_room(&mut self) {
+        while self.conns.len() >= CONN_CAP && !self.order.is_empty() {
+            let key = self.order.remove(0);
+            self.conns.remove(&key);
+        }
+    }
+
+    /// Write one framed message on the cached (or freshly dialed)
+    /// stream to `dst`, reconnecting once if the cached stream broke.
+    fn write_frame(
+        &mut self,
+        src: u32,
+        dst: u32,
+        buf: &[u8],
+    ) -> Result<()> {
+        if !self.conns.contains_key(&dst) {
+            self.make_room();
+            let s = self.dial(dst)?;
+            self.conns.insert(dst, s);
+            self.order.push(dst);
+        }
+        let broken = {
+            let s = self.conns.get_mut(&dst).expect("just inserted");
+            s.write_all(buf).is_err()
+        };
+        if !broken {
+            return Ok(());
+        }
+        // The peer (or an eviction race) closed the stream under us:
+        // re-dial with backoff and retry the write once.
+        self.conns.remove(&dst);
+        self.order.retain(|k| *k != dst);
+        self.reconnects += 1;
+        let mut s = self.dial(dst)?;
+        s.write_all(buf)
+            .with_context(|| format!("tcp resend {src} -> {dst}"))?;
+        self.make_room();
+        self.conns.insert(dst, s);
+        self.order.push(dst);
+        Ok(())
+    }
+}
+
+/// Join reader threads that already hit EOF (their sender was evicted
+/// or closed), so a long run's connection churn cannot accumulate
+/// unbounded zombie threads.
+fn reap_finished(
+    readers: &Mutex<Vec<std::thread::JoinHandle<()>>>,
+) {
+    let mut done = Vec::new();
+    {
+        let mut reg = readers.lock().expect("reader registry");
+        let mut i = 0;
+        while i < reg.len() {
+            if reg[i].is_finished() {
+                done.push(reg.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+    }
+    for h in done {
+        let _ = h.join();
+    }
+}
+
+fn spawn_acceptor(
+    listener: TcpListener,
+    tx: Sender<HeldMsg>,
+    epoch: Instant,
+    stop: Arc<AtomicBool>,
+    readers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let seq = Arc::new(AtomicU64::new(0));
+        while !stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let handle = spawn_stream_reader(
+                        stream,
+                        tx.clone(),
+                        epoch,
+                        Arc::clone(&seq),
+                    );
+                    readers.lock().expect("reader registry").push(handle);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    reap_finished(&readers);
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => {
+                    // Transient accept errors (ECONNABORTED, EMFILE
+                    // under descriptor pressure, ...) must not kill
+                    // the acceptor — a deaf node would silently turn
+                    // every frame toward it into a write-off. Reap,
+                    // back off briefly, retry; shutdown still exits
+                    // via the stop flag.
+                    reap_finished(&readers);
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    })
+}
+
+fn spawn_stream_reader(
+    mut stream: TcpStream,
+    tx: Sender<HeldMsg>,
+    epoch: Instant,
+    seq: Arc<AtomicU64>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut len_buf = [0u8; 4];
+        loop {
+            // Blocking reads; the sender closing its end (drop, evict,
+            // transport shutdown) EOFs us out of the loop.
+            if stream.read_exact(&mut len_buf).is_err() {
+                break;
+            }
+            let len = u32::from_le_bytes(len_buf) as usize;
+            if len < STREAM_HEADER || len > MAX_FRAME {
+                break; // framing lost: abandon the connection
+            }
+            let mut payload = vec![0u8; len];
+            if stream.read_exact(&mut payload).is_err() {
+                break;
+            }
+            let deliver_at_us =
+                u64::from_le_bytes(payload[..8].try_into().unwrap());
+            let src =
+                u32::from_le_bytes(payload[8..12].try_into().unwrap());
+            let msg = HeldMsg {
+                deliver_at_us,
+                arrival_us: epoch.elapsed().as_micros() as u64,
+                seq: seq.fetch_add(1, Ordering::Relaxed),
+                src,
+                frame: payload[STREAM_HEADER..].to_vec(),
+            };
+            if tx.send(msg).is_err() {
+                break; // transport dropped
+            }
+        }
+    })
+}
+
+impl Transport for TcpTransport {
+    fn n(&self) -> usize {
+        self.w.n()
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.now_us() as f64 / 1e3 / self.scale
+    }
+
+    fn send(&mut self, src: u32, dst: u32, frame: &[u8]) -> Result<()> {
+        if src == dst {
+            bail!("self-send {src} -> {dst}");
+        }
+        if dst as usize >= self.w.n() {
+            bail!("destination {dst} out of range");
+        }
+        let delay_us = (self.w.get(src as usize, dst as usize) as f64
+            * self.scale
+            * 1e3) as u64;
+        let deliver_at = self.now_us() + delay_us;
+        let len = (STREAM_HEADER + frame.len()) as u32;
+        let mut buf = Vec::with_capacity(4 + len as usize);
+        buf.extend_from_slice(&len.to_le_bytes());
+        buf.extend_from_slice(&deliver_at.to_le_bytes());
+        buf.extend_from_slice(&src.to_le_bytes());
+        buf.extend_from_slice(frame);
+        self.write_frame(src, dst, &buf)
+            .with_context(|| format!("tcp send {src} -> {dst}"))?;
+        self.sent += 1;
+        Ok(())
+    }
+
+    fn recv(&mut self, dst: u32, timeout_ms: f64) -> Option<Delivery> {
+        self.shims[dst as usize].recv(self.epoch, self.scale, timeout_ms)
+    }
+
+    fn set_latency(&mut self, w: &LatencyMatrix) -> Result<()> {
+        if w.n() != self.w.n() {
+            bail!("latency update size {} != {}", w.n(), self.w.n());
+        }
+        self.w = w.clone();
+        Ok(())
+    }
+
+    fn addr(&self, node: u32) -> String {
+        format!("tcp://{}", self.addrs[node as usize])
+    }
+
+    fn frames_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Closing every outbound stream EOFs the corresponding reader
+        // threads; the acceptors exit on the stop flag.
+        self.conns.clear();
+        for a in self.acceptors.drain(..) {
+            let _ = a.join();
+        }
+        let handles: Vec<_> = self
+            .readers
+            .lock()
+            .expect("reader registry")
+            .drain(..)
+            .collect();
+        for r in handles {
+            let _ = r.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w3() -> LatencyMatrix {
+        LatencyMatrix::from_fn(3, |u, v| 10.0 * (u + v) as f32)
+    }
+
+    #[test]
+    fn tcp_transport_round_trips_and_shapes_delay() {
+        // Generous scale so the shaped delay dominates scheduler noise.
+        let mut t = TcpTransport::bind(w3(), 0.5).unwrap();
+        let t0 = t.now_ms();
+        t.send(0, 1, b"hello").unwrap();
+        let d = t.recv(1, 1000.0).expect("loopback delivery");
+        assert_eq!(d.frame, b"hello");
+        assert_eq!(d.src, 0);
+        // Link 0-1 is 10 sim-ms: the shim must hold it at least that
+        // long on the transport clock.
+        assert!(
+            d.at_ms - t0 >= 9.0,
+            "shim held {} sim-ms, expected ~10",
+            d.at_ms - t0
+        );
+        assert!(t.addr(1).starts_with("tcp://127.0.0.1:"));
+        assert_eq!(t.name(), "tcp");
+        assert_eq!(t.frames_sent(), 1);
+    }
+
+    #[test]
+    fn tcp_transport_reuses_and_reorders_by_deadline() {
+        let mut t = TcpTransport::bind(w3(), 0.2).unwrap();
+        // Two frames on the same stream: both land, in deadline order.
+        t.send(0, 2, b"first").unwrap(); // link 0-2: 20 sim-ms
+        t.send(0, 2, b"second").unwrap();
+        let a = t.recv(2, 1000.0).expect("first delivery");
+        let b = t.recv(2, 1000.0).expect("second delivery");
+        assert_eq!(a.frame, b"first");
+        assert_eq!(b.frame, b"second");
+        assert!(b.at_ms >= a.at_ms);
+        assert_eq!(t.reconnects(), 0, "cached stream must be reused");
+    }
+
+    #[test]
+    fn tcp_transport_rejects_self_send_and_size_mismatch() {
+        let mut t = TcpTransport::bind(w3(), 0.05).unwrap();
+        assert!(t.send(1, 1, b"loop").is_err());
+        assert!(t.send(0, 9, b"oob").is_err());
+        let bad = LatencyMatrix::from_fn(5, |_, _| 1.0);
+        assert!(t.set_latency(&bad).is_err());
+        assert!(t.set_latency(&w3()).is_ok());
+    }
+
+    #[test]
+    fn tcp_recv_times_out_when_idle() {
+        let mut t = TcpTransport::bind(w3(), 0.05).unwrap();
+        let start = Instant::now();
+        assert!(t.recv(0, 50.0).is_none());
+        assert!(start.elapsed() < Duration::from_secs(5));
+    }
+}

@@ -2,7 +2,7 @@
 //! N node endpoints of one overlay, with per-link latency shaping and a
 //! transport clock.
 //!
-//! Two implementations:
+//! Implementations:
 //!
 //! * [`SimTransport`] — wraps the existing discrete-event engine
 //!   ([`crate::sim::Engine`]): a send schedules a `Deliver` event at
@@ -18,13 +18,20 @@
 //!   `time_scale` real-ms per sim-ms). Clock and delivery timestamps are
 //!   reported in sim-ms units (wall / scale), so measurement code is
 //!   transport-agnostic.
+//! * [`TcpTransport`](crate::net::tcp::TcpTransport) — length-prefixed
+//!   framed streams with per-peer reconnect/backoff, sharing the same
+//!   delay shim (its receive side is the crate-private `ShimRx` defined
+//!   here).
+//! * [`LossyTransport`](crate::net::lossy::LossyTransport) — a seeded
+//!   drop/duplicate/reorder decorator over any of the above, for
+//!   replayable loss-injection scenarios.
 //!
 //! Determinism caveats for the real-socket path live in
 //! docs/TRANSPORT.md: delivery *order* can differ by scheduler jitter
-//! and datagrams can in principle be dropped, so protocol layers above
-//! must either barrier on expected message counts (what
-//! [`NetCoordinator`](crate::net::runner::NetCoordinator) does) or
-//! tolerate loss.
+//! and datagrams can be dropped, so protocol layers above must either
+//! barrier on expected message counts or tolerate loss — since wire v2,
+//! [`NetCoordinator`](crate::net::runner::NetCoordinator) does both
+//! (epoch-tagged phases, probe retransmit, loss-weighted push-sum).
 
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::net::{SocketAddr, UdpSocket};
@@ -81,8 +88,56 @@ pub trait Transport {
     /// Frames sent so far (cost accounting).
     fn frames_sent(&self) -> u64;
 
-    /// Short transport name for reports ("sim" / "udp").
+    /// Short transport name for reports ("sim" / "udp" / "tcp").
     fn name(&self) -> &'static str;
+
+    /// Expected frame-loss probability, if the transport is known to
+    /// lose frames on purpose (the
+    /// [`LossyTransport`](crate::net::lossy::LossyTransport) decorator
+    /// overrides this with its drop rate). Protocol layers use it to
+    /// pick the aggressive, deadline-based write-off policy instead of
+    /// the conservative idle cap. 0.0 for faithful transports.
+    fn loss_hint(&self) -> f64 {
+        0.0
+    }
+}
+
+impl Transport for Box<dyn Transport> {
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+
+    fn now_ms(&self) -> f64 {
+        (**self).now_ms()
+    }
+
+    fn send(&mut self, src: u32, dst: u32, frame: &[u8]) -> Result<()> {
+        (**self).send(src, dst, frame)
+    }
+
+    fn recv(&mut self, dst: u32, timeout_ms: f64) -> Option<Delivery> {
+        (**self).recv(dst, timeout_ms)
+    }
+
+    fn set_latency(&mut self, w: &LatencyMatrix) -> Result<()> {
+        (**self).set_latency(w)
+    }
+
+    fn addr(&self, node: u32) -> String {
+        (**self).addr(node)
+    }
+
+    fn frames_sent(&self) -> u64 {
+        (**self).frames_sent()
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn loss_hint(&self) -> f64 {
+        (**self).loss_hint()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -211,12 +266,14 @@ impl Transport for SimTransport {
 /// then the sender id, then the frame.
 const UDP_HEADER: usize = 8 + 4;
 
-struct HeldMsg {
-    deliver_at_us: u64,
-    arrival_us: u64,
-    seq: u64,
-    src: u32,
-    frame: Vec<u8>,
+/// One shim-held message on the receive side of a real-socket
+/// transport (UDP and TCP share this representation).
+pub(crate) struct HeldMsg {
+    pub(crate) deliver_at_us: u64,
+    pub(crate) arrival_us: u64,
+    pub(crate) seq: u64,
+    pub(crate) src: u32,
+    pub(crate) frame: Vec<u8>,
 }
 
 impl PartialEq for HeldMsg {
@@ -240,6 +297,99 @@ impl PartialOrd for HeldMsg {
     }
 }
 
+/// Receive side of the delay-injection shim, shared by the real-socket
+/// transports: a channel fed by reader threads plus the deadline-ordered
+/// hold buffer. [`ShimRx::recv`] is the blocking receive-with-hold loop
+/// both [`UdpTransport`] and
+/// [`TcpTransport`](crate::net::tcp::TcpTransport) delegate to.
+pub(crate) struct ShimRx {
+    rx: Receiver<HeldMsg>,
+    held: BinaryHeap<HeldMsg>,
+}
+
+impl ShimRx {
+    /// Wrap the reader-thread channel of one node endpoint.
+    pub(crate) fn new(rx: Receiver<HeldMsg>) -> ShimRx {
+        ShimRx {
+            rx,
+            held: BinaryHeap::new(),
+        }
+    }
+
+    /// Drain everything the reader threads have queued into the
+    /// deadline-ordered hold buffer.
+    fn drain(&mut self) {
+        while let Ok(msg) = self.rx.try_recv() {
+            self.held.push(msg);
+        }
+    }
+
+    /// Blocking receive against the shim: release the earliest held
+    /// message whose deadline has passed, waiting at most `timeout_ms`
+    /// (sim-ms units) of scaled wall time. `epoch` is the transport's
+    /// shared clock origin, `scale` its real-ms-per-sim-ms compression.
+    pub(crate) fn recv(
+        &mut self,
+        epoch: Instant,
+        scale: f64,
+        timeout_ms: f64,
+    ) -> Option<Delivery> {
+        let now_us = || epoch.elapsed().as_micros() as u64;
+        let deadline_us = now_us() + (timeout_ms * scale * 1e3) as u64;
+        loop {
+            self.drain();
+            let now = now_us();
+            match self.held.peek().map(|m| m.deliver_at_us) {
+                Some(at) if at <= now => {
+                    let msg = self.held.pop().expect("peeked");
+                    // Report the shim deadline, not the (jittery) wall
+                    // arrival, unless the message genuinely arrived
+                    // late — keeps RTT measurements tight.
+                    let at_us = msg.deliver_at_us.max(msg.arrival_us);
+                    return Some(Delivery {
+                        src: msg.src,
+                        at_ms: at_us as f64 / 1e3 / scale,
+                        frame: msg.frame,
+                    });
+                }
+                Some(at) => {
+                    if now >= deadline_us && at > deadline_us {
+                        return None; // held mail matures past the timeout
+                    }
+                    // Sleep until the earliest hold deadline (or the
+                    // timeout, whichever comes first); fresh arrivals
+                    // wake the channel early.
+                    let wake = at.min(deadline_us).max(now + 1);
+                    match self
+                        .rx
+                        .recv_timeout(Duration::from_micros(wake - now))
+                    {
+                        Ok(m) => self.held.push(m),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => {
+                            return None;
+                        }
+                    }
+                }
+                None => {
+                    if now >= deadline_us {
+                        return None;
+                    }
+                    match self.rx.recv_timeout(Duration::from_micros(
+                        deadline_us - now,
+                    )) {
+                        Ok(m) => self.held.push(m),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => {
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Real-socket transport: N UDP sockets on 127.0.0.1 with one reader
 /// thread per node and receiver-side delay shaping (see the module
 /// docs). `time_scale` compresses sim-ms into real-ms so multi-second
@@ -247,8 +397,7 @@ impl PartialOrd for HeldMsg {
 pub struct UdpTransport {
     sockets: Vec<UdpSocket>,
     addrs: Vec<SocketAddr>,
-    rx: Vec<Receiver<HeldMsg>>,
-    held: Vec<BinaryHeap<HeldMsg>>,
+    shims: Vec<ShimRx>,
     epoch: Instant,
     scale: f64,
     w: LatencyMatrix,
@@ -276,7 +425,7 @@ impl UdpTransport {
         let epoch = Instant::now();
         let mut sockets = Vec::with_capacity(n);
         let mut addrs = Vec::with_capacity(n);
-        let mut rx = Vec::with_capacity(n);
+        let mut shims = Vec::with_capacity(n);
         let mut readers = Vec::with_capacity(n);
         for node in 0..n {
             let sock = UdpSocket::bind("127.0.0.1:0")
@@ -288,14 +437,13 @@ impl UdpTransport {
                 .with_context(|| format!("cloning node {node} socket"))?;
             let (tx, rxq) = std::sync::mpsc::channel();
             readers.push(spawn_reader(reader, tx, epoch, Arc::clone(&stop)));
-            rx.push(rxq);
+            shims.push(ShimRx::new(rxq));
             sockets.push(sock);
         }
         Ok(UdpTransport {
             sockets,
             addrs,
-            rx,
-            held: (0..n).map(|_| BinaryHeap::new()).collect(),
+            shims,
             epoch,
             scale: time_scale,
             w,
@@ -307,14 +455,6 @@ impl UdpTransport {
 
     fn now_us(&self) -> u64 {
         self.epoch.elapsed().as_micros() as u64
-    }
-
-    /// Drain everything the reader thread has queued for `dst` into the
-    /// deadline-ordered hold buffer.
-    fn drain(&mut self, dst: usize) {
-        while let Ok(msg) = self.rx[dst].try_recv() {
-            self.held[dst].push(msg);
-        }
     }
 }
 
@@ -388,59 +528,7 @@ impl Transport for UdpTransport {
     }
 
     fn recv(&mut self, dst: u32, timeout_ms: f64) -> Option<Delivery> {
-        let dsti = dst as usize;
-        let deadline_us =
-            self.now_us() + (timeout_ms * self.scale * 1e3) as u64;
-        loop {
-            self.drain(dsti);
-            let now = self.now_us();
-            match self.held[dsti].peek().map(|m| m.deliver_at_us) {
-                Some(at) if at <= now => {
-                    let msg = self.held[dsti].pop().expect("peeked");
-                    // Report the shim deadline, not the (jittery) wall
-                    // arrival, unless the datagram genuinely arrived
-                    // late — keeps RTT measurements tight.
-                    let at_us = msg.deliver_at_us.max(msg.arrival_us);
-                    return Some(Delivery {
-                        src: msg.src,
-                        at_ms: at_us as f64 / 1e3 / self.scale,
-                        frame: msg.frame,
-                    });
-                }
-                Some(at) => {
-                    if now >= deadline_us && at > deadline_us {
-                        return None; // held mail matures past the timeout
-                    }
-                    // Sleep until the earliest hold deadline (or the
-                    // timeout, whichever comes first); fresh arrivals
-                    // wake the channel early.
-                    let wake = at.min(deadline_us).max(now + 1);
-                    match self.rx[dsti].recv_timeout(
-                        Duration::from_micros(wake - now),
-                    ) {
-                        Ok(m) => self.held[dsti].push(m),
-                        Err(RecvTimeoutError::Timeout) => {}
-                        Err(RecvTimeoutError::Disconnected) => {
-                            return None;
-                        }
-                    }
-                }
-                None => {
-                    if now >= deadline_us {
-                        return None;
-                    }
-                    match self.rx[dsti].recv_timeout(
-                        Duration::from_micros(deadline_us - now),
-                    ) {
-                        Ok(m) => self.held[dsti].push(m),
-                        Err(RecvTimeoutError::Timeout) => {}
-                        Err(RecvTimeoutError::Disconnected) => {
-                            return None;
-                        }
-                    }
-                }
-            }
-        }
+        self.shims[dst as usize].recv(self.epoch, self.scale, timeout_ms)
     }
 
     fn set_latency(&mut self, w: &LatencyMatrix) -> Result<()> {

@@ -2,20 +2,33 @@
 //! framing for gossip probes, membership events, ring-swap announcements
 //! and coordinator reports (docs/TRANSPORT.md has the byte-level table).
 //!
-//! Every frame starts with a version byte ([`WIRE_VERSION`]) and a tag
-//! byte; integers are little-endian, floats are IEEE-754 bit patterns.
-//! Decoding is strict: unknown versions, unknown tags, truncated frames
-//! and trailing bytes are all hard errors — a membership protocol that
-//! silently mis-parses a frame corrupts views on every node downstream,
-//! so the boundary rejects instead.
+//! Every frame starts with a version byte ([`WIRE_VERSION`]), a 32-bit
+//! **epoch tag** and a tag byte; integers are little-endian, floats are
+//! IEEE-754 bit patterns. Decoding is strict: unknown versions, unknown
+//! tags, truncated frames and trailing bytes are all hard errors — a
+//! membership protocol that silently mis-parses a frame corrupts views
+//! on every node downstream, so the boundary rejects instead.
+//!
+//! The epoch is the loss-hardening half of the contract (wire v2): the
+//! coordinator stamps every frame with the collection phase it belongs
+//! to, and a receiver that has moved on to a later phase drops the
+//! straggler outright ([`Message::decode_expect`]) instead of folding it
+//! into the next barrier. Without it, a datagram written off as lost and
+//! then delivered late would perturb a *later* phase's delivery count —
+//! the cascade documented (and previously only documented) in
+//! docs/TRANSPORT.md.
 
 use anyhow::{bail, Result};
 
 use crate::membership::events::MembershipEvent;
 
 /// Current wire version. Bump on any incompatible layout change; peers
-/// reject frames whose version byte differs.
-pub const WIRE_VERSION: u8 = 1;
+/// reject frames whose version byte differs. v2 added the 32-bit epoch
+/// tag between the version and tag bytes.
+pub const WIRE_VERSION: u8 = 2;
+
+/// Byte length of the frame header: version, epoch, tag.
+pub const HEADER_LEN: usize = 1 + 4 + 1;
 
 /// One protocol message. The transport moves opaque frames; this enum is
 /// the typed layer on top.
@@ -152,10 +165,12 @@ impl<'a> Reader<'a> {
 }
 
 impl Message {
-    /// Encode into a framed byte vector (version + tag + payload).
-    pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(16);
+    /// Encode into a framed byte vector
+    /// (version + epoch + tag + payload).
+    pub fn encode(&self, epoch: u32) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24);
         out.push(WIRE_VERSION);
+        out.extend_from_slice(&epoch.to_le_bytes());
         match self {
             Message::Ping { seq } => {
                 out.push(TAG_PING);
@@ -223,10 +238,12 @@ impl Message {
         out
     }
 
-    /// Decode a framed byte vector. Rejects unknown versions and tags,
-    /// truncated frames and trailing bytes.
-    pub fn decode(frame: &[u8]) -> Result<Message> {
-        if frame.len() < 2 {
+    /// Decode a framed byte vector into `(epoch, message)`. Rejects
+    /// unknown versions and tags, truncated frames and trailing bytes;
+    /// the caller decides what to do with the epoch (the coordinator
+    /// drops cross-epoch stragglers — see [`Message::decode_expect`]).
+    pub fn decode(frame: &[u8]) -> Result<(u32, Message)> {
+        if frame.len() < HEADER_LEN {
             bail!("frame too short ({} bytes)", frame.len());
         }
         if frame[0] != WIRE_VERSION {
@@ -236,9 +253,10 @@ impl Message {
                 WIRE_VERSION
             );
         }
-        let tag = frame[1];
+        let epoch = u32::from_le_bytes(frame[1..5].try_into().unwrap());
+        let tag = frame[5];
         let mut r = Reader {
-            buf: &frame[2..],
+            buf: &frame[HEADER_LEN..],
             pos: 0,
         };
         let msg = match tag {
@@ -292,6 +310,18 @@ impl Message {
             other => bail!("unknown message tag {other}"),
         };
         r.done()?;
+        Ok((epoch, msg))
+    }
+
+    /// Strict epoch-checked decode: like [`Message::decode`], but a
+    /// frame whose epoch differs from `expect` is a hard error — the
+    /// loss-tolerant protocol's rule that a straggler from a written-off
+    /// collection phase must never mutate state in a later one.
+    pub fn decode_expect(frame: &[u8], expect: u32) -> Result<Message> {
+        let (epoch, msg) = Message::decode(frame)?;
+        if epoch != expect {
+            bail!("stale frame epoch {epoch} (current epoch {expect})");
+        }
         Ok(msg)
     }
 }
@@ -349,17 +379,20 @@ mod tests {
     #[test]
     fn every_variant_round_trips() {
         for msg in samples() {
-            let bytes = msg.encode();
-            assert_eq!(bytes[0], WIRE_VERSION);
-            let back = Message::decode(&bytes)
-                .unwrap_or_else(|e| panic!("{msg:?}: {e}"));
-            assert_eq!(back, msg);
+            for epoch in [0u32, 7, u32::MAX] {
+                let bytes = msg.encode(epoch);
+                assert_eq!(bytes[0], WIRE_VERSION);
+                let (e, back) = Message::decode(&bytes)
+                    .unwrap_or_else(|e| panic!("{msg:?}: {e}"));
+                assert_eq!(e, epoch);
+                assert_eq!(back, msg);
+            }
         }
     }
 
     #[test]
     fn unknown_version_is_rejected() {
-        let mut bytes = Message::Ping { seq: 1 }.encode();
+        let mut bytes = Message::Ping { seq: 1 }.encode(0);
         bytes[0] = WIRE_VERSION + 1;
         let err = Message::decode(&bytes).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
@@ -367,9 +400,21 @@ mod tests {
 
     #[test]
     fn unknown_tag_is_rejected() {
-        let bytes = vec![WIRE_VERSION, 200, 0, 0, 0, 0];
+        let bytes = vec![WIRE_VERSION, 0, 0, 0, 0, 200, 0, 0, 0, 0];
         let err = Message::decode(&bytes).unwrap_err().to_string();
         assert!(err.contains("tag"), "{err}");
+    }
+
+    #[test]
+    fn cross_epoch_frames_are_rejected_by_strict_decode() {
+        let bytes = Message::Ping { seq: 9 }.encode(4);
+        assert_eq!(
+            Message::decode_expect(&bytes, 4).unwrap(),
+            Message::Ping { seq: 9 }
+        );
+        let err =
+            Message::decode_expect(&bytes, 5).unwrap_err().to_string();
+        assert!(err.contains("epoch"), "{err}");
     }
 
     #[test]
@@ -382,7 +427,7 @@ mod tests {
             alive: 4,
             swaps: 5,
         }
-        .encode();
+        .encode(3);
         for cut in 0..bytes.len() {
             assert!(
                 Message::decode(&bytes[..cut]).is_err(),
@@ -401,9 +446,11 @@ mod tests {
             slot: 1,
             order: vec![5, 6],
         }
-        .encode();
-        // Overwrite the length field with a huge value.
-        bytes[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        .encode(0);
+        // Overwrite the length field (header, then the u32 slot) with a
+        // huge value.
+        let at = HEADER_LEN + 4;
+        bytes[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(Message::decode(&bytes).is_err());
     }
 }

@@ -40,7 +40,8 @@ use crate::graph::{diameter, Graph};
 use crate::latency::Model;
 use crate::membership::list::{MemberState, MembershipList};
 use crate::net::{
-    NetCoordinator, SimTransport, TransportKind, UdpTransport,
+    LossyConfig, LossyTransport, NetCoordinator, SimTransport,
+    TcpTransport, Transport, TransportKind, UdpTransport,
 };
 use crate::metrics::{Metrics, Table};
 use crate::scenario::dynamics::DynamicLatency;
@@ -260,12 +261,26 @@ pub struct ScenarioEngine {
     /// through the message-level [`NetCoordinator`]: Algorithm-3
     /// measurements are driven by real framed messages and measured
     /// RTTs over the chosen transport (`dgro scenario run --transport
-    /// sim|udp`). Only the centralized DGRO topology supports it.
+    /// sim|udp|tcp`). Only the centralized DGRO topology supports it.
     pub transport: Option<TransportKind>,
-    /// Wall-time compression for [`TransportKind::Udp`] runs: real
+    /// Wall-time compression for the real-socket transports
+    /// ([`TransportKind::Udp`] / [`TransportKind::Tcp`]): real
     /// milliseconds of shaped delay per sim-ms of latency
     /// ([`UdpTransport::DEFAULT_TIME_SCALE`] by default).
     pub time_scale: f64,
+    /// Injected per-frame drop probability for transport-backed runs
+    /// (`--loss-rate`). When this or [`ScenarioEngine::dup_rate`] is
+    /// non-zero the chosen backend is wrapped in a seeded
+    /// [`LossyTransport`], so the fault pattern replays
+    /// deterministically for a fixed scenario seed.
+    pub loss_rate: f64,
+    /// Injected per-frame duplication probability for transport-backed
+    /// runs (`--dup-rate`).
+    pub dup_rate: f64,
+    /// Injected per-frame reorder probability for transport-backed
+    /// runs (`--reorder-rate`): a hit frame is held back and released
+    /// after the sender's next frame, swapping their wire order.
+    pub reorder_rate: f64,
     /// Churn-aware ρ guard forwarded to the coordinator: skip the
     /// period's ring swap when more than this many membership events
     /// landed in it (0 = off; `--churn-guard`). Applies to the
@@ -309,6 +324,9 @@ impl ScenarioEngine {
             shards: 0,
             transport: None,
             time_scale: UdpTransport::DEFAULT_TIME_SCALE,
+            loss_rate: 0.0,
+            dup_rate: 0.0,
+            reorder_rate: 0.0,
             churn_guard: 0,
         })
     }
@@ -359,6 +377,21 @@ impl ScenarioEngine {
                 topology.name()
             );
         }
+        for (name, rate) in [
+            ("loss", self.loss_rate),
+            ("dup", self.dup_rate),
+            ("reorder", self.reorder_rate),
+        ] {
+            if !(0.0..1.0).contains(&rate) {
+                bail!("--{name}-rate must be in [0, 1), got {rate}");
+            }
+            if rate > 0.0 && self.transport.is_none() {
+                bail!(
+                    "--{name}-rate requires a transport-backed run \
+                     (--transport sim|udp|tcp)"
+                );
+            }
+        }
         match topology {
             Topology::Dgro | Topology::DgroSharded => {
                 self.run_adaptive(topology)
@@ -401,22 +434,34 @@ impl ScenarioEngine {
             // Transport-backed replay: same spec, same seed-derived
             // trace and latency view, but ρ comes from measured message
             // RTTs on the chosen transport (rust/tests/net.rs pins
-            // sim-vs-udp parity on this path).
+            // cross-transport parity on this path). Non-zero fault
+            // rates wrap the backend in the seeded loss decorator.
             let w0 = dyn_w.at(0.0);
             let horizon = self.spec.horizon;
-            match kind {
-                TransportKind::Sim => replay_over(
-                    cfg,
-                    w0.clone(),
-                    SimTransport::new(w0),
-                    &trace,
-                    horizon,
-                    &mut latency_at,
-                )?,
-                TransportKind::Udp => {
-                    let t = UdpTransport::bind(w0.clone(), self.time_scale)?;
-                    replay_over(cfg, w0, t, &trace, horizon, &mut latency_at)?
+            let base: Box<dyn Transport> = match kind {
+                TransportKind::Sim => {
+                    Box::new(SimTransport::new(w0.clone()))
                 }
+                TransportKind::Udp => Box::new(UdpTransport::bind(
+                    w0.clone(),
+                    self.time_scale,
+                )?),
+                TransportKind::Tcp => Box::new(TcpTransport::bind(
+                    w0.clone(),
+                    self.time_scale,
+                )?),
+            };
+            let fault = LossyConfig {
+                drop_rate: self.loss_rate,
+                dup_rate: self.dup_rate,
+                reorder_rate: self.reorder_rate,
+                seed: self.seed,
+            };
+            if fault.active() {
+                let lossy = LossyTransport::new(base, fault);
+                replay_over(cfg, w0, lossy, &trace, horizon, &mut latency_at)?
+            } else {
+                replay_over(cfg, w0, base, &trace, horizon, &mut latency_at)?
             }
         } else {
             let mut co = Coordinator::with_latency(cfg, dyn_w.at(0.0))?;
@@ -702,6 +747,29 @@ mod tests {
         assert!(engine.run(Topology::Chord).is_err());
         engine.shards = 2;
         assert!(engine.run(Topology::DgroSharded).is_err());
+    }
+
+    #[test]
+    fn lossy_rates_validate_and_replay_deterministically() {
+        let mut engine = ScenarioEngine::new(tiny_spec(), 5).unwrap();
+        engine.transport = Some(TransportKind::Sim);
+        engine.loss_rate = 0.1;
+        let a = engine.run(Topology::Dgro).unwrap();
+        let b = engine.run(Topology::Dgro).unwrap();
+        assert_eq!(
+            a.render(),
+            b.render(),
+            "seeded loss must replay byte-identically"
+        );
+        // Fault rates without a transport-backed run are rejected.
+        let mut bad = ScenarioEngine::new(tiny_spec(), 5).unwrap();
+        bad.loss_rate = 0.1;
+        assert!(bad.run(Topology::Dgro).is_err());
+        // Out-of-range rates are rejected.
+        let mut oob = ScenarioEngine::new(tiny_spec(), 5).unwrap();
+        oob.transport = Some(TransportKind::Sim);
+        oob.dup_rate = 1.5;
+        assert!(oob.run(Topology::Dgro).is_err());
     }
 
     #[test]

@@ -2,6 +2,8 @@
 //! substrates must behave sanely under partitions, mass failures,
 //! degenerate metrics, and missing/corrupt artifacts.
 
+#![allow(clippy::field_reassign_with_default)] // config-mutation idiom
+
 use dgro::config::Config;
 use dgro::coordinator::Coordinator;
 use dgro::graph::{components, diameter, Graph};

@@ -1,6 +1,8 @@
 //! Cross-module integration tests: coordinator + gossip + membership +
 //! simulator working together over realistic latency models.
 
+#![allow(clippy::field_reassign_with_default)] // config-mutation idiom
+
 use dgro::config::Config;
 use dgro::coordinator::Coordinator;
 use dgro::dgro::select::adaptive_krings;

@@ -3,6 +3,8 @@
 //! thread-count determinism, and the stitching property — re-anchoring
 //! never strands a partition (the global overlay stays connected).
 
+#![allow(clippy::field_reassign_with_default)] // config-mutation idiom
+
 use dgro::config::Config;
 use dgro::coordinator::{ShardedConfig, ShardedCoordinator};
 use dgro::graph::{components, Graph};
