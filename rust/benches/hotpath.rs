@@ -472,11 +472,8 @@ fn main() -> anyhow::Result<()> {
     );
     // Probe overhead: how far measured one-way RTT/2 strays from the
     // shaped matrix latency (0 on sim by construction).
-    let rtt_overhead = udp_co
-        .metrics
-        .series("net.rtt_abs_error_ms")
-        .map(|s| s.summary().mean)
-        .unwrap_or(0.0);
+    let rtt_overhead =
+        udp_co.obs.reg.histogram("net.rtt_abs_error_ms").mean();
     let mut parity_diff = 0.0f64;
     for (a, b) in rep_sim.timeline.iter().zip(&rep_udp.timeline) {
         parity_diff = parity_diff.max((a.2 - b.2).abs() as f64);
@@ -512,6 +509,49 @@ fn main() -> anyhow::Result<()> {
         ("max_diameter_diff_tcp", Json::num(parity_tcp)),
     ]);
 
+    // --- Observability overhead: span recording on vs off. --------------
+    // Same adaptive workload twice; the only difference is whether the
+    // flight recorder captures period/measure/decide/swap spans.
+    // bench_gate floors the throughput ratio so instrumentation creep
+    // on the hot loop fails CI.
+    let obs_nodes = 256usize;
+    let obs_spec = ScenarioSpec {
+        name: "bench-obs".into(),
+        about: "observability-overhead workload".into(),
+        nodes: obs_nodes,
+        initial_alive: obs_nodes,
+        model: "uniform".into(),
+        horizon: if quick { 1000.0 } else { 2000.0 },
+        churn: vec![ChurnSpec::Poisson { rate: 0.001 }],
+        latency: vec![],
+    };
+    let mut obs_off = ScenarioEngine::new(obs_spec.clone(), 7)?;
+    obs_off.threads = threads;
+    let mut obs_on = ScenarioEngine::new(obs_spec, 7)?;
+    obs_on.threads = threads;
+    obs_on.obs_record = true;
+    let obs_iters = if quick { 2 } else { 3 };
+    let off_t = time_iters(0, obs_iters, || {
+        obs_off.run(Topology::Dgro).expect("obs-off run");
+    });
+    let on_t = time_iters(0, obs_iters, || {
+        obs_on.run(Topology::Dgro).expect("obs-on run");
+    });
+    let (offm, onm) = (mean_s(&off_t), mean_s(&on_t));
+    let obs_ratio = offm / onm;
+    println!(
+        "obs recording off {:.2} ms, on {:.2} ms \
+         (enabled/disabled throughput {obs_ratio:.3})",
+        offm * 1e3,
+        onm * 1e3
+    );
+    let obs_json = Json::obj(vec![
+        ("n", Json::num(obs_nodes as f64)),
+        ("disabled_ms", Json::num(offm * 1e3)),
+        ("enabled_ms", Json::num(onm * 1e3)),
+        ("enabled_over_disabled_ratio", Json::num(obs_ratio)),
+    ]);
+
     // --- Parallel construction. -----------------------------------------
     for m in [1usize, 8, 32] {
         let mut prng = Rng::new(3);
@@ -539,6 +579,7 @@ fn main() -> anyhow::Result<()> {
         ("scenario", scenario_json),
         ("sharded", sharded_json),
         ("net", net_json),
+        ("obs", obs_json),
     ]);
     std::fs::write("BENCH_hotpath.json", out.to_string())?;
     println!("wrote BENCH_hotpath.json (threads={threads} quick={quick})");

@@ -59,7 +59,14 @@ fn net_sim_frames(root: &Json) -> Result<f64> {
     root.get("net")?.get("sim_frames_per_s")?.as_f64()
 }
 
-const METRICS: [MetricDef; 5] = [
+fn obs_overhead_ratio(root: &Json) -> Result<f64> {
+    // Throughput with span recording enabled over disabled (1.0 = free
+    // instrumentation). Floored like every other metric, so recording
+    // creep on the adaptive hot loop fails the gate.
+    root.get("obs")?.get("enabled_over_disabled_ratio")?.as_f64()
+}
+
+const METRICS: [MetricDef; 6] = [
     MetricDef {
         name: "scenario_incremental_periods_per_s",
         read: scenario_incremental,
@@ -79,6 +86,10 @@ const METRICS: [MetricDef; 5] = [
     MetricDef {
         name: "net_sim_frames_per_s",
         read: net_sim_frames,
+    },
+    MetricDef {
+        name: "obs_enabled_over_disabled",
+        read: obs_overhead_ratio,
     },
 ];
 
@@ -227,6 +238,13 @@ mod tests {
                     Json::num(50_000.0 * scale),
                 )]),
             ),
+            (
+                "obs",
+                Json::obj(vec![(
+                    "enabled_over_disabled_ratio",
+                    Json::num(scale),
+                )]),
+            ),
         ])
     }
 
@@ -259,7 +277,7 @@ mod tests {
         let out =
             compare(&parsed, &report(1.0), DEFAULT_TOLERANCE).unwrap();
         assert!(out.passed());
-        assert_eq!(out.rows.len(), 5);
+        assert_eq!(out.rows.len(), 6);
         for r in out.rows {
             assert!((r.ratio - 1.0).abs() < 1e-9, "{}: {}", r.name, r.ratio);
         }

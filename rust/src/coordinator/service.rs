@@ -18,6 +18,7 @@ use crate::latency::{LatencyMatrix, Model};
 use crate::membership::events::{EventTrace, MembershipEvent};
 use crate::membership::list::{MemberState, MembershipList};
 use crate::metrics::Metrics;
+use crate::obs::Obs;
 use crate::qnet::native::NativeQnet;
 use crate::qnet::params::QnetParams;
 use crate::qnet::QScorer;
@@ -202,8 +203,13 @@ pub struct Coordinator {
     pub membership: MembershipList,
     /// The current K-ring overlay.
     pub krings: KRing,
-    /// Counters and per-period series for this run.
+    /// Counters and per-period series for this run. Event counters
+    /// accumulate in [`Coordinator::obs`] and are folded back in here
+    /// at the end of every [`Coordinator::adapt_once_guarded`].
     pub metrics: Metrics,
+    /// This run's observability surface: lock-free counters +
+    /// histograms and the span flight recorder (disabled by default).
+    pub obs: Obs,
     rng: Rng,
     scorer_kind: ScorerKind,
 }
@@ -251,6 +257,7 @@ impl Coordinator {
         Ok(Coordinator {
             membership: MembershipList::full(cfg.nodes),
             metrics: Metrics::new(),
+            obs: Obs::new(),
             w,
             krings,
             rng,
@@ -313,7 +320,7 @@ impl Coordinator {
             },
             &mut self.rng,
         );
-        self.metrics.incr("gossip.messages", stats.messages as u64);
+        self.obs.reg.incr("gossip.messages", stats.messages as u64);
         let choice = decide(
             &stats,
             SelectConfig {
@@ -323,7 +330,7 @@ impl Coordinator {
         match choice {
             RingChoice::Keep => {}
             _ if guard => {
-                self.metrics.incr("rings.guard_skips", 1);
+                self.obs.reg.incr("rings.guard_skips", 1);
             }
             choice => {
                 if execute_swap(
@@ -334,10 +341,14 @@ impl Coordinator {
                 )
                 .is_some()
                 {
-                    self.metrics.incr("rings.swapped", 1);
+                    self.obs.reg.incr("rings.swapped", 1);
                 }
             }
         }
+        // Fold the registry's event counters back into the owned
+        // [`Metrics`] right away: `adapt_once` is a public entry point,
+        // so callers must see counters current after every period.
+        crate::obs::sync_counters(&self.obs.reg, &mut self.metrics);
         Ok((stats.rho(), choice))
     }
 
@@ -400,8 +411,16 @@ impl Coordinator {
         let mut swaps0 = initial_swaps;
         let mut t = 0.0;
         let mut ev_idx = 0;
+        let period_wall =
+            self.obs.reg.histogram("coordinator.period_wall_ms");
         while t < horizon {
             t += self.cfg.adapt_period_ms;
+            let period_wall0 = std::time::Instant::now();
+            let p_span = self.obs.rec.start(
+                "period",
+                timeline.len() as u64 + 1,
+                t,
+            );
             if let Some(w) = latency_at(t) {
                 self.set_latency(w)?;
             }
@@ -439,6 +458,9 @@ impl Coordinator {
             );
             swaps0 = swaps_now;
             timeline.push((t, rho, d));
+            period_wall
+                .observe(period_wall0.elapsed().as_secs_f64() * 1e3);
+            p_span.finish(&self.obs.rec, t);
         }
         Ok(CoordinatorReport {
             final_diameter: timeline

@@ -51,6 +51,7 @@ use crate::latency::LatencyMatrix;
 use crate::membership::events::{EventTrace, MembershipEvent};
 use crate::membership::list::{MemberState, MembershipList};
 use crate::metrics::Metrics;
+use crate::obs::Obs;
 use crate::topology::kring::KRing;
 use crate::topology::{random_ring, shortest_ring};
 use crate::util::rng::Rng;
@@ -190,6 +191,12 @@ pub struct ShardedCoordinator {
     /// Metrics registry (same series names as the centralized
     /// coordinator, plus `shard.*`).
     pub metrics: Metrics,
+    /// This run's observability surface: per-shard `shard.{i}.period_ms`
+    /// wall-time histograms, re-anchor counters/spans and the flight
+    /// recorder (disabled by default). Wall-time instruments live here
+    /// and never feed [`ShardedCoordinator::metrics`], which stays
+    /// thread-count-invariant.
+    pub obs: Obs,
     /// node id -> owning shard index.
     owner: Vec<usize>,
     /// Current inter-shard anchor links (global ids).
@@ -275,7 +282,9 @@ impl ShardedCoordinator {
                 owner[m as usize] = i;
             }
         }
-        let pool = EvalPool::new(opts.threads.max(1));
+        let obs = Obs::new();
+        let mut pool = EvalPool::new(opts.threads.max(1));
+        pool.attach_obs(&obs);
         let shard_dirty = vec![false; opts.shards];
         let mut co = ShardedCoordinator {
             cfg,
@@ -283,6 +292,7 @@ impl ShardedCoordinator {
             w,
             shards,
             metrics: Metrics::new(),
+            obs,
             owner,
             anchors: Vec::new(),
             pool,
@@ -508,11 +518,14 @@ impl ShardedCoordinator {
     /// both its shards are unchanged). Latency updates and the first
     /// stitch refresh every boundary.
     pub fn re_anchor(&mut self) {
+        let ord = self.obs.reg.get("shard.reanchors");
+        let span = self.obs.rec.start("reanchor", ord, 0.0);
         let ks = self.shards.len();
         self.dirty = false;
         if ks <= 1 {
             self.anchors = Vec::new();
             self.stitch_all = false;
+            span.finish(&self.obs.rec, 0.0);
             return;
         }
         // Per-shard anchorable sets: alive members, falling back to the
@@ -606,6 +619,8 @@ impl ShardedCoordinator {
             *d = false;
         }
         self.stitch_all = false;
+        span.finish(&self.obs.rec, 0.0);
+        self.obs.reg.incr("shard.reanchors", 1);
         self.metrics.incr("shard.reanchors", 1);
     }
 
@@ -623,16 +638,29 @@ impl ShardedCoordinator {
         };
         let shards = std::mem::take(&mut self.shards);
         let threads = self.opts.threads.max(1).min(shards.len());
+        // Per-shard wall-time histograms: atomic observes, so the
+        // workers record without any `&mut` threading back to the
+        // owner (and without perturbing the deterministic metrics).
+        let timings: Vec<_> = (0..shards.len())
+            .map(|i| {
+                self.obs.reg.histogram(&format!("shard.{i}.period_ms"))
+            })
+            .collect();
         self.shards = if threads > 1 {
-            crate::par::scoped_map(shards, threads, move |_, mut s: Shard| {
+            crate::par::scoped_map(shards, threads, move |i, mut s: Shard| {
+                let t0 = std::time::Instant::now();
                 s.adapt_once(select, mcfg);
+                timings[i].observe(t0.elapsed().as_secs_f64() * 1e3);
                 s
             })
         } else {
             shards
                 .into_iter()
-                .map(|mut s| {
+                .enumerate()
+                .map(|(i, mut s)| {
+                    let t0 = std::time::Instant::now();
                     s.adapt_once(select, mcfg);
+                    timings[i].observe(t0.elapsed().as_secs_f64() * 1e3);
                     s
                 })
                 .collect()

@@ -35,7 +35,8 @@
 //! serial-vs-parallel trajectory in `BENCH_hotpath.json`.
 
 use std::collections::BinaryHeap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::apsp::{Csr, DistMatrix, INF};
 use super::components;
@@ -73,6 +74,13 @@ struct DijkstraScratch {
 pub struct EvalPool {
     threads: usize,
     scratch: Mutex<Vec<DijkstraScratch>>,
+    /// `eval.sweeps` registry counter (None until
+    /// [`EvalPool::attach_obs`]): SSSP sources processed by the
+    /// bounding algorithm.
+    obs_sweeps: Option<Arc<AtomicU64>>,
+    /// `eval.warm_hits` registry counter: warm-start landmarks that
+    /// were still live candidates when their round started.
+    obs_warm_hits: Option<Arc<AtomicU64>>,
 }
 
 impl EvalPool {
@@ -81,7 +89,19 @@ impl EvalPool {
         EvalPool {
             threads: threads.max(1),
             scratch: Mutex::new(Vec::new()),
+            obs_sweeps: None,
+            obs_warm_hits: None,
         }
+    }
+
+    /// Route sweep accounting into `obs`: `eval.sweeps` counts every
+    /// SSSP source the bounding algorithm processes,
+    /// `eval.warm_hits` counts warm-start landmarks that paid off
+    /// (their hit rate is the warm-start efficiency). Counters are
+    /// atomic, so attached pools stay shareable across workers.
+    pub fn attach_obs(&mut self, obs: &crate::obs::Obs) {
+        self.obs_sweeps = Some(obs.reg.counter("eval.sweeps"));
+        self.obs_warm_hits = Some(obs.reg.counter("eval.warm_hits"));
     }
 
     /// One worker: bit-for-bit the serial algorithms, same scratch reuse.
@@ -219,7 +239,12 @@ impl EvalPool {
             while batch.len() < width {
                 let src = if let Some(s) = seed_queue.pop() {
                     match cand.iter().position(|&u| u == s) {
-                        Some(i) => cand.swap_remove(i),
+                        Some(i) => {
+                            if let Some(c) = &self.obs_warm_hits {
+                                c.fetch_add(1, Ordering::Relaxed);
+                            }
+                            cand.swap_remove(i)
+                        }
                         None => continue, // already pruned
                     }
                 } else if cand.is_empty() {
@@ -245,6 +270,9 @@ impl EvalPool {
             }
             if batch.is_empty() {
                 break;
+            }
+            if let Some(c) = &self.obs_sweeps {
+                c.fetch_add(batch.len() as u64, Ordering::Relaxed);
             }
 
             // The round's SSSPs. Row i of `batch_dist` always belongs

@@ -60,6 +60,7 @@ pub mod latency;
 pub mod membership;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod par;
 pub mod prop;
 pub mod qnet;

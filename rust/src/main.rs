@@ -6,6 +6,7 @@
 //!   measure   Algorithm-3 gossip measurement + ρ for a topology
 //!   scenario  deterministic churn + dynamic-latency workloads
 //!   net       run the coordinator over a real transport (UDP loopback)
+//!   obs       inspect --obs-out artifacts (dump | diff | top)
 //!   figures   regenerate paper figures (CSV under reports/)
 //!   config    print the default config JSON
 //!
@@ -18,11 +19,15 @@
 //!   dgro scenario run --name anchor-storm --transport udp --seed 0
 //!   dgro scenario run --name anchor-storm --transport tcp --loss-rate 0.05
 //!   dgro scenario compare --shards 8 --out reports
+//!   dgro scenario run --name flash-crowd --obs-out obs/a
 //!   dgro net demo --nodes 16 --transport tcp
+//!   dgro obs top obs/a --slowest 10
 //!   dgro figures --fig 21 --quick
 //!   dgro figures --all
 
 #![allow(clippy::field_reassign_with_default)] // config-mutation idiom
+
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
@@ -65,6 +70,7 @@ fn run(args: &[String]) -> Result<()> {
         "measure" => cmd_measure(rest),
         "scenario" => cmd_scenario(rest),
         "net" => cmd_net(rest),
+        "obs" => cmd_obs(rest),
         "figures" => cmd_figures(rest),
         "config" => {
             println!("{}", Config::default().to_json().to_string());
@@ -88,6 +94,7 @@ fn print_help() {
          \x20 measure   gossip latency measurement + rho for a topology\n\
          \x20 scenario  churn + dynamic-latency workloads (list|run|compare)\n\
          \x20 net       coordinator over a real transport (demo)\n\
+         \x20 obs       inspect --obs-out artifacts (dump|diff|top)\n\
          \x20 figures   regenerate paper figures (CSV under reports/)\n\
          \x20 config    print the default config JSON\n\
          \n\
@@ -100,6 +107,31 @@ fn base_flags(cmd: Command) -> Command {
         .flag("model", "uniform", "latency model: uniform|gaussian|fabric|bitnode")
         .flag("seed", "7", "rng seed")
         .flag("k", "0", "rings per overlay (0 = log2 N)")
+}
+
+/// `--log-level` shared by serve/scenario/net/figures: an explicit
+/// level overrides the `DGRO_LOG` environment default for this
+/// invocation; an empty value leaves the environment's choice alone.
+fn log_level_flag(cmd: Command) -> Command {
+    cmd.flag(
+        "log-level",
+        "",
+        "override log verbosity: error|warn|info|debug|trace \
+         (empty = honor DGRO_LOG)",
+    )
+}
+
+fn apply_log_level(spec: &str) -> Result<()> {
+    if spec.is_empty() {
+        return Ok(());
+    }
+    let level = dgro::util::logging::Level::parse(spec).ok_or_else(|| {
+        anyhow::anyhow!(
+            "bad --log-level '{spec}' (error|warn|info|debug|trace)"
+        )
+    })?;
+    dgro::util::logging::set_level(level);
+    Ok(())
 }
 
 fn cmd_build(raw: &[String]) -> Result<()> {
@@ -178,8 +210,11 @@ fn cmd_build(raw: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(raw: &[String]) -> Result<()> {
-    let cmd = base_flags(Command::new("serve", "run the adaptive coordinator"))
-        .flag("horizon", "5000", "sim-time horizon (ms)")
+    let cmd = log_level_flag(base_flags(Command::new(
+        "serve",
+        "run the adaptive coordinator",
+    )))
+    .flag("horizon", "5000", "sim-time horizon (ms)")
         .flag("churn", "0.0005", "membership churn rate per node-ms")
         .flag("scorer", "greedy", "ring-rebuild scorer")
         .flag("epsilon", "0.25", "rho decision band half-width")
@@ -190,6 +225,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
              membership events (0 = off)",
         );
     let a = cmd.parse(raw)?;
+    apply_log_level(a.get("log-level"))?;
     let mut cfg = Config::default();
     cfg.nodes = a.get_usize("nodes")?;
     cfg.model = a.get("model").to_string();
@@ -329,6 +365,18 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
          events (0 = off; centralized dgro paths only)",
     )
     .flag("out", "", "also write CSV tables under this directory")
+    .flag(
+        "obs-out",
+        "",
+        "run: write snapshot.json, metrics.prom and timeline.jsonl \
+         under this directory (enables span recording)",
+    )
+    .flag(
+        "log-level",
+        "",
+        "override log verbosity: error|warn|info|debug|trace \
+         (empty = honor DGRO_LOG)",
+    )
     .switch("quick", "compare against the trimmed baseline panel")
     .switch(
         "rebuild",
@@ -336,6 +384,7 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
          runs (perf A/B baseline; no effect on the dgro path)",
     );
     let a = cmd.parse(raw)?;
+    apply_log_level(a.get("log-level"))?;
     let action =
         a.positional.first().map(|s| s.as_str()).unwrap_or("list");
     let seed = a.get_u64("seed")?;
@@ -385,10 +434,25 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             engine.dup_rate = a.get_f64("dup-rate")?;
             engine.reorder_rate = a.get_f64("reorder-rate")?;
             engine.churn_guard = a.get_u64("churn-guard")?;
+            let obs_out = a.get("obs-out");
+            engine.obs_record = !obs_out.is_empty();
             let report = engine.run(topology)?;
             print!("{}", report.render());
             if !a.get("out").is_empty() {
                 runner::emit(&[report.table()], a.get("out"))?;
+            }
+            if !obs_out.is_empty() {
+                // Wall-clock fields are only meaningful when a real
+                // transport ran; sim / in-process runs export the
+                // byte-deterministic timeline.
+                let sim_only = matches!(
+                    engine.transport,
+                    None | Some(dgro::net::TransportKind::Sim)
+                );
+                if let Some(obs) = &report.obs {
+                    obs.write_dir(Path::new(obs_out), sim_only)?;
+                    log_info!("obs artifacts written to {obs_out}");
+                }
             }
             Ok(())
         }
@@ -412,6 +476,11 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                 anyhow::bail!(
                     "--churn-guard applies to 'scenario run' only; \
                      compare runs every topology unguarded"
+                );
+            }
+            if !a.get("obs-out").is_empty() {
+                anyhow::bail!(
+                    "--obs-out applies to 'scenario run' only"
                 );
             }
             let mut topologies: Vec<scenario::Topology> =
@@ -459,10 +528,16 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
 }
 
 fn cmd_net(raw: &[String]) -> Result<()> {
-    let cmd = base_flags(Command::new(
+    let cmd = log_level_flag(base_flags(Command::new(
         "net",
         "run the coordinator over a real transport; actions: demo",
-    ))
+    )))
+    .flag(
+        "obs-out",
+        "",
+        "write snapshot.json, metrics.prom and timeline.jsonl under \
+         this directory (enables span recording)",
+    )
     .flag("transport", "udp", "message transport: sim|udp|tcp")
     .flag("horizon", "1000", "sim-time horizon (ms)")
     .flag("period", "250", "adaptation/measurement period (sim-ms)")
@@ -494,6 +569,7 @@ fn cmd_net(raw: &[String]) -> Result<()> {
          events (0 = off)",
     );
     let a = cmd.parse(raw)?;
+    apply_log_level(a.get("log-level"))?;
     let action =
         a.positional.first().map(|s| s.as_str()).unwrap_or("demo");
     if action != "demo" {
@@ -558,6 +634,8 @@ fn cmd_net(raw: &[String]) -> Result<()> {
         reorder_rate: reorder,
         seed: cfg.seed,
     };
+    let obs_out = a.get("obs-out");
+    let sim_only = kind == dgro::net::TransportKind::Sim;
     if fault.active() {
         net_demo_run(
             cfg,
@@ -565,9 +643,11 @@ fn cmd_net(raw: &[String]) -> Result<()> {
             dgro::net::LossyTransport::new(base, fault),
             &trace,
             horizon,
+            obs_out,
+            sim_only,
         )
     } else {
-        net_demo_run(cfg, w, base, &trace, horizon)
+        net_demo_run(cfg, w, base, &trace, horizon, obs_out, sim_only)
     }
 }
 
@@ -577,9 +657,14 @@ fn net_demo_run<T: dgro::net::Transport>(
     transport: T,
     trace: &EventTrace,
     horizon: f64,
+    obs_out: &str,
+    sim_only: bool,
 ) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut co = dgro::net::NetCoordinator::new(cfg, w, transport)?;
+    if !obs_out.is_empty() {
+        co.obs.rec.set_enabled(true);
+    }
     let show = co.cfg.nodes.min(3);
     for node in 0..show {
         println!("node {node} @ {}", co.addr(node as u32));
@@ -600,11 +685,7 @@ fn net_demo_run<T: dgro::net::Transport>(
         println!("... ({} periods total)", rep.timeline.len());
     }
     let frames = co.frames_sent();
-    let rtt_err = co
-        .metrics
-        .series("net.rtt_abs_error_ms")
-        .map(|s| s.summary().mean)
-        .unwrap_or(0.0);
+    let rtt_err = co.obs.reg.histogram("net.rtt_abs_error_ms").mean();
     println!(
         "transport={} frames={frames} ({:.0} frames/s wall) \
          probe_rtt_abs_error={rtt_err:.3}ms lost={} stale={} retx={}",
@@ -615,18 +696,81 @@ fn net_demo_run<T: dgro::net::Transport>(
         co.metrics.counter("net.probe_retx")
     );
     print!("{}", co.metrics.report());
+    if !obs_out.is_empty() {
+        co.obs.write_dir(Path::new(obs_out), sim_only)?;
+        log_info!("obs artifacts written to {obs_out}");
+    }
     Ok(())
 }
 
+/// Accept either an artifact directory (as given to `--obs-out`) or a
+/// direct file path; directories resolve to the named file inside.
+fn obs_path(arg: &str, file: &str) -> PathBuf {
+    let p = PathBuf::from(arg);
+    if p.is_dir() {
+        p.join(file)
+    } else {
+        p
+    }
+}
+
+fn cmd_obs(raw: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "obs",
+        "inspect --obs-out artifacts; actions: dump <dir> | \
+         diff <a> <b> | top <dir>",
+    )
+    .flag("slowest", "10", "top: how many spans to list");
+    let a = cmd.parse(raw)?;
+    let action = a.positional.first().map(|s| s.as_str());
+    let arg = |i: usize, what: &str| -> Result<&str> {
+        a.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .ok_or_else(|| {
+                anyhow::anyhow!("obs {}: missing {what}\n\n{}",
+                    action.unwrap_or(""), cmd.usage())
+            })
+    };
+    match action {
+        Some("dump") => {
+            let p = obs_path(arg(1, "snapshot path")?, "snapshot.json");
+            print!("{}", dgro::obs::dump_snapshot(&p)?);
+            Ok(())
+        }
+        Some("diff") => {
+            let pa = obs_path(arg(1, "first snapshot")?, "snapshot.json");
+            let pb = obs_path(arg(2, "second snapshot")?, "snapshot.json");
+            print!("{}", dgro::obs::diff_snapshots(&pa, &pb)?);
+            Ok(())
+        }
+        Some("top") => {
+            let p = obs_path(arg(1, "timeline path")?, "timeline.jsonl");
+            let n = a.get_usize("slowest")?;
+            print!("{}", dgro::obs::top_slowest(&p, n)?);
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown obs action '{}' (dump | diff | top)\n\n{}",
+            other.unwrap_or(""),
+            cmd.usage()
+        ),
+    }
+}
+
 fn cmd_figures(raw: &[String]) -> Result<()> {
-    let cmd = Command::new("figures", "regenerate paper figures")
-        .flag("fig", "0", "figure number (0 with --all)")
+    let cmd = log_level_flag(Command::new(
+        "figures",
+        "regenerate paper figures",
+    ))
+    .flag("fig", "0", "figure number (0 with --all)")
         .flag("out", "reports", "output directory for CSVs")
         .flag("threads", "0", "evaluation worker threads (0 = all cores)")
         .switch("all", "run every figure")
         .switch("quick", "trimmed sizes/runs (CI mode)")
         .switch("full", "paper-scale budgets (fig 10 GA: 1e5 evals)");
     let a = cmd.parse(raw)?;
+    apply_log_level(a.get("log-level"))?;
     let opts = bench_harness::FigureOpts {
         quick: a.switch("quick"),
         full: a.switch("full"),

@@ -6,22 +6,89 @@ use std::fmt::Write as _;
 
 use crate::util::stats::Summary;
 
-/// A named scalar time series (one row per observation).
-#[derive(Clone, Debug, Default)]
+/// Retained sample cap per [`Series`]: below this every observation
+/// is kept in record order (exact percentiles); beyond it the buffer
+/// becomes a uniform reservoir so unbounded runs stay bounded.
+pub const SERIES_CAP: usize = 4096;
+
+/// A named scalar time series with bounded memory.
+///
+/// Count, sum, min and max are tracked exactly for the whole stream;
+/// `values` holds every observation until [`SERIES_CAP`], then a
+/// uniform reservoir (Algorithm R with a deterministic seeded LCG, so
+/// identical streams keep identical reservoirs).
+#[derive(Clone, Debug)]
 pub struct Series {
-    /// Observations in record order.
+    /// Retained observations: exact and in record order while the
+    /// stream fits [`SERIES_CAP`], a uniform sample afterwards.
     pub values: Vec<f64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    rng: u64,
+}
+
+impl Default for Series {
+    fn default() -> Series {
+        Series {
+            values: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
 }
 
 impl Series {
     /// Append one observation.
     pub fn record(&mut self, x: f64) {
-        self.values.push(x);
+        self.count += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if self.values.len() < SERIES_CAP {
+            self.values.push(x);
+        } else {
+            self.rng = self
+                .rng
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let j = ((self.rng >> 11) % self.count) as usize;
+            if j < SERIES_CAP {
+                self.values[j] = x;
+            }
+        }
     }
 
-    /// Summary statistics over the recorded values.
+    /// Total observations recorded (exact, beyond the reservoir).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact running sum over the whole stream.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Summary statistics: n, mean, min and max are exact for the
+    /// whole stream; percentiles are exact until [`SERIES_CAP`] and
+    /// reservoir estimates afterwards.
     pub fn summary(&self) -> Summary {
-        Summary::of(&self.values)
+        let mut s = Summary::of(&self.values);
+        if self.count as usize > self.values.len() {
+            s.n = self.count as usize;
+            s.mean = self.sum / self.count as f64;
+            s.min = self.min;
+            s.max = self.max;
+        }
+        s
     }
 }
 
@@ -164,6 +231,43 @@ mod tests {
         assert_eq!(s.n, 2);
         assert!((s.mean - 2.0).abs() < 1e-12);
         assert!(m.report().contains("requests"));
+    }
+
+    #[test]
+    fn series_memory_is_bounded_with_exact_small_n() {
+        // Small n: exact record-order behavior, as before.
+        let mut s = Series::default();
+        for i in 0..5 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.values, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count(), 5);
+        let sm = s.summary();
+        assert_eq!(sm.n, 5);
+        assert!((sm.mean - 2.0).abs() < 1e-12);
+
+        // Large n: the buffer stays capped while count/sum/min/max
+        // remain exact, and identical streams keep identical
+        // reservoirs (deterministic replacement).
+        let stream = |seed: u64| {
+            let mut s = Series::default();
+            let mut x = seed;
+            for _ in 0..50_000u64 {
+                x = x.wrapping_mul(2862933555777941757)
+                    .wrapping_add(3037000493);
+                s.record((x >> 40) as f64);
+            }
+            s
+        };
+        let a = stream(7);
+        let b = stream(7);
+        assert_eq!(a.values.len(), SERIES_CAP);
+        assert_eq!(a.count(), 50_000);
+        assert_eq!(a.values, b.values, "reservoir must be deterministic");
+        let sa = a.summary();
+        assert_eq!(sa.n, 50_000);
+        assert!((sa.mean - a.sum() / 50_000.0).abs() < 1e-9);
+        assert!(sa.min <= sa.p50 && sa.p50 <= sa.max);
     }
 
     #[test]

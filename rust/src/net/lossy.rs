@@ -78,6 +78,7 @@ pub struct LossyTransport<T: Transport> {
     dropped: u64,
     duplicated: u64,
     reordered: u64,
+    obs_drop: Option<std::sync::Arc<crate::obs::CounterVec>>,
 }
 
 impl<T: Transport> LossyTransport<T> {
@@ -92,6 +93,7 @@ impl<T: Transport> LossyTransport<T> {
             dropped: 0,
             duplicated: 0,
             reordered: 0,
+            obs_drop: None,
         }
     }
 
@@ -158,6 +160,9 @@ impl<T: Transport> Transport for LossyTransport<T> {
         if self.cfg.drop_rate > 0.0 && self.rng.chance(self.cfg.drop_rate)
         {
             self.dropped += 1;
+            if let Some(v) = &self.obs_drop {
+                v.incr(src as usize, 1);
+            }
             return Ok(());
         }
         if self.cfg.reorder_rate > 0.0
@@ -207,6 +212,15 @@ impl<T: Transport> Transport for LossyTransport<T> {
         } else {
             0.0
         }
+    }
+
+    fn attach_obs(&mut self, obs: &crate::obs::Obs) {
+        // Per-sender drop accounting on the decorator, everything
+        // else (tx/rx vectors, dial spans) on the wrapped backend.
+        let n = self.inner.n();
+        self.obs_drop =
+            Some(obs.reg.counter_vec("net.peer.injected_drops", n));
+        self.inner.attach_obs(obs);
     }
 }
 

@@ -51,6 +51,8 @@
 //! alive diameter.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -68,6 +70,7 @@ use crate::membership::list::{MemberState, MembershipList};
 use crate::metrics::Metrics;
 use crate::net::transport::{Delivery, Transport};
 use crate::net::wire::Message;
+use crate::obs::{Histogram, Obs, Registry};
 use crate::topology::kring::KRing;
 use crate::topology::random_ring;
 use crate::util::rng::Rng;
@@ -88,6 +91,37 @@ const MAX_IDLE_SWEEPS: usize = 50;
 /// late reply to an earlier transmission can never be mistaken for the
 /// retry's answer).
 pub const PROBE_RETX: usize = 2;
+
+/// Pre-resolved [`Registry`] handles for the runner's hot-path
+/// instruments: the delivery loop must not take the registry's
+/// name-map lock per frame.
+struct ObsHandles {
+    decode_errors: Arc<AtomicU64>,
+    stale_frames: Arc<AtomicU64>,
+    dup_frames: Arc<AtomicU64>,
+    probe_retx: Arc<AtomicU64>,
+    frames_lost: Arc<AtomicU64>,
+    rings_swapped: Arc<AtomicU64>,
+    rtt_err: Arc<Histogram>,
+    period_wall: Arc<Histogram>,
+    decode_us: Arc<Histogram>,
+}
+
+impl ObsHandles {
+    fn new(reg: &Registry) -> ObsHandles {
+        ObsHandles {
+            decode_errors: reg.counter("net.decode_errors"),
+            stale_frames: reg.counter("net.stale_frames"),
+            dup_frames: reg.counter("net.dup_frames"),
+            probe_retx: reg.counter("net.probe_retx"),
+            frames_lost: reg.counter("net.frames_lost"),
+            rings_swapped: reg.counter("rings.swapped"),
+            rtt_err: reg.histogram("net.rtt_abs_error_ms"),
+            period_wall: reg.histogram("net.period_wall_ms"),
+            decode_us: reg.histogram("net.frame_decode_us"),
+        }
+    }
+}
 
 /// An in-flight RTT probe awaiting its pong.
 struct PendingProbe {
@@ -193,7 +227,14 @@ pub struct NetCoordinator<T: Transport> {
     /// The coordinator's global membership table (fed by the trace).
     pub membership: MembershipList,
     /// Counters + per-period series (same names as the sim coordinator).
+    /// Event counters accumulate in [`NetCoordinator::obs`] during the
+    /// run and are folded back in here at the end of
+    /// [`NetCoordinator::run_dynamic`].
     pub metrics: Metrics,
+    /// This run's observability surface: lock-free counters +
+    /// histograms and the span flight recorder (disabled by default).
+    pub obs: Obs,
+    hot: ObsHandles,
     rng: Rng,
     nodes: Vec<NodeActor>,
     transport: T,
@@ -214,6 +255,7 @@ impl<T: Transport> NetCoordinator<T> {
     /// must already be shaped by `w` (same node count); ring state boots
     /// identically on every node, like a deployment config.
     pub fn new(cfg: Config, w: LatencyMatrix, transport: T) -> Result<Self> {
+        let mut transport = transport;
         cfg.validate()?;
         if w.n() != cfg.nodes {
             bail!(
@@ -253,9 +295,14 @@ impl<T: Transport> NetCoordinator<T> {
                 last_report: None,
             })
             .collect();
+        let obs = Obs::new();
+        transport.attach_obs(&obs);
+        let hot = ObsHandles::new(&obs.reg);
         Ok(NetCoordinator {
             membership: MembershipList::full(cfg.nodes),
             metrics: Metrics::new(),
+            obs,
+            hot,
             alive_cache: (0..cfg.nodes as u32).collect(),
             nodes,
             transport,
@@ -364,13 +411,27 @@ impl<T: Transport> NetCoordinator<T> {
         // be dropped, not abort the run (self-sends are transport
         // errors, so a src equal to the receiver is equally bogus).
         if d.src as usize >= self.cfg.nodes || d.src == node {
-            self.metrics.incr("net.decode_errors", 1);
+            self.hot.decode_errors.fetch_add(1, Ordering::Relaxed);
             return Ok(());
         }
-        let (epoch, msg) = match Message::decode(&d.frame) {
+        // Decode wall time is a wall-clock quantity, so it is only
+        // sampled while the flight recorder is on — the always-on
+        // counter path must stay free of clock reads.
+        let decode_t0 = self
+            .obs
+            .rec
+            .is_enabled()
+            .then(std::time::Instant::now);
+        let decoded = Message::decode(&d.frame);
+        if let Some(t0) = decode_t0 {
+            self.hot
+                .decode_us
+                .observe(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let (epoch, msg) = match decoded {
             Ok(x) => x,
             Err(_) => {
-                self.metrics.incr("net.decode_errors", 1);
+                self.hot.decode_errors.fetch_add(1, Ordering::Relaxed);
                 return Ok(());
             }
         };
@@ -378,13 +439,13 @@ impl<T: Transport> NetCoordinator<T> {
             // A straggler from a phase that was already written off:
             // reject it whole instead of folding it into this phase's
             // barrier (the cascade wire v1 was vulnerable to).
-            self.metrics.incr("net.stale_frames", 1);
+            self.hot.stale_frames.fetch_add(1, Ordering::Relaxed);
             return Ok(());
         }
         if !self.seen.insert(frame_key(d.src, node, &d.frame)) {
             // Duplicate delivery: the first copy already consumed the
             // barrier slot and mutated state.
-            self.metrics.incr("net.dup_frames", 1);
+            self.hot.dup_frames.fetch_add(1, Ordering::Relaxed);
             return Ok(());
         }
         self.in_flight = self.in_flight.saturating_sub(1);
@@ -412,10 +473,7 @@ impl<T: Transport> NetCoordinator<T> {
                         ((at_ms - p.sent_at_ms - hold_ms) / 2.0).max(0.0);
                     let truth =
                         self.w.get(node as usize, p.target as usize) as f64;
-                    self.metrics.observe(
-                        "net.rtt_abs_error_ms",
-                        (one_way - truth).abs(),
-                    );
+                    self.hot.rtt_err.observe((one_way - truth).abs());
                     if p.global {
                         actor.probe.global_sum += one_way;
                         actor.probe.global_cnt += 1;
@@ -486,7 +544,7 @@ impl<T: Transport> NetCoordinator<T> {
         }
         let lost = self.in_flight as u64;
         if lost > 0 {
-            self.metrics.incr("net.frames_lost", lost);
+            self.hot.frames_lost.fetch_add(lost, Ordering::Relaxed);
             self.in_flight = 0;
         }
         Ok(lost)
@@ -570,7 +628,9 @@ impl<T: Transport> NetCoordinator<T> {
             if attempt > 0 {
                 let outstanding: u64 =
                     plans.iter().map(|p| p.len() as u64).sum();
-                self.metrics.incr("net.probe_retx", outstanding);
+                self.hot
+                    .probe_retx
+                    .fetch_add(outstanding, Ordering::Relaxed);
             }
             self.begin_phase();
             for &u in &alive {
@@ -646,6 +706,10 @@ impl<T: Transport> NetCoordinator<T> {
         // retransmitted: push-sum reads out as the mass-weighted ratio
         // below, so lost mass widens variance without biasing the
         // weighted average (loss-weighted merging).
+        let g_span = self
+            .obs
+            .rec
+            .start("gossip", self.epoch as u64, self.transport.now_ms());
         for _ in 0..self.cfg.gossip_rounds {
             self.begin_phase();
             for &u in &alive {
@@ -684,6 +748,7 @@ impl<T: Transport> NetCoordinator<T> {
                 }
             }
         }
+        g_span.finish(&self.obs.rec, self.transport.now_ms());
 
         // Readout — same weighted averaging as the in-process
         // Algorithm 3 (isolated nodes do not dilute the local average).
@@ -738,7 +803,7 @@ impl<T: Transport> NetCoordinator<T> {
         let initial_diameter = diameter::diameter(&self.overlay());
         let mut timeline = Vec::new();
         let frames_start = self.transport.frames_sent();
-        let initial_swaps = self.metrics.counter("rings.swapped");
+        let initial_swaps = self.hot.rings_swapped.load(Ordering::Relaxed);
         let mut swaps0 = initial_swaps;
         let mut t = 0.0;
         let mut ev_idx = 0;
@@ -746,6 +811,12 @@ impl<T: Transport> NetCoordinator<T> {
         while t < horizon {
             t += self.cfg.adapt_period_ms;
             period += 1;
+            let period_wall0 = std::time::Instant::now();
+            let p_span = self.obs.rec.start(
+                "period",
+                period as u64,
+                self.transport.now_ms(),
+            );
             if let Some(w) = latency_at(t) {
                 if w.n() != self.w.n() {
                     bail!(
@@ -757,7 +828,7 @@ impl<T: Transport> NetCoordinator<T> {
                 self.transport.set_latency(&w)?;
                 self.max_w_ms = max_delay_ms(&w);
                 self.w = w;
-                self.metrics.incr("latency.updates", 1);
+                self.obs.reg.incr("latency.updates", 1);
             }
             // Disseminate this period's membership events, barriered so
             // every node's view is current before it measures (its own
@@ -775,7 +846,7 @@ impl<T: Transport> NetCoordinator<T> {
                     MembershipEvent::Crash { .. } => "membership.crashes",
                 };
                 self.membership.apply_trace_event(&ev);
-                self.metrics.incr(counter, 1);
+                self.obs.reg.incr(counter, 1);
                 self.broadcast(&Message::Membership { event: ev })?;
                 ev_idx += 1;
                 applied += 1;
@@ -783,10 +854,22 @@ impl<T: Transport> NetCoordinator<T> {
             self.collect()?;
 
             // Measure over the wire, decide, maybe swap.
+            let m_span = self.obs.rec.start(
+                "measure",
+                period as u64,
+                self.transport.now_ms(),
+            );
             let stats = self.measure_net()?;
-            self.metrics
+            m_span.finish(&self.obs.rec, self.transport.now_ms());
+            self.obs
+                .reg
                 .incr("gossip.messages", stats.messages as u64);
             let rho = stats.rho();
+            let d_span = self.obs.rec.start(
+                "decide",
+                period as u64,
+                self.transport.now_ms(),
+            );
             let choice = decide(
                 &stats,
                 SelectConfig {
@@ -795,10 +878,11 @@ impl<T: Transport> NetCoordinator<T> {
             );
             let guard = self.cfg.churn_guard > 0
                 && applied > self.cfg.churn_guard;
+            d_span.finish(&self.obs.rec, self.transport.now_ms());
             match choice {
                 RingChoice::Keep => {}
                 _ if guard => {
-                    self.metrics.incr("rings.guard_skips", 1);
+                    self.obs.reg.incr("rings.guard_skips", 1);
                 }
                 choice => {
                     if let Some((slot, order)) = execute_swap(
@@ -807,13 +891,22 @@ impl<T: Transport> NetCoordinator<T> {
                         choice,
                         &mut self.rng,
                     ) {
-                        self.metrics.incr("rings.swapped", 1);
+                        let s_span = self.obs.rec.start(
+                            "swap",
+                            period as u64,
+                            self.transport.now_ms(),
+                        );
+                        self.hot
+                            .rings_swapped
+                            .fetch_add(1, Ordering::Relaxed);
                         self.begin_phase();
                         self.broadcast(&Message::RingSwap {
                             slot: slot as u32,
                             order,
                         })?;
                         self.collect()?;
+                        s_span
+                            .finish(&self.obs.rec, self.transport.now_ms());
                     }
                 }
             }
@@ -826,7 +919,8 @@ impl<T: Transport> NetCoordinator<T> {
             } else {
                 diameter::diameter(&self.alive_overlay())
             };
-            let swaps_now = self.metrics.counter("rings.swapped");
+            let swaps_now =
+                self.hot.rings_swapped.load(Ordering::Relaxed);
             record_period(
                 &mut self.metrics,
                 d,
@@ -850,11 +944,19 @@ impl<T: Transport> NetCoordinator<T> {
                 swaps: (swaps_now - initial_swaps) as u32,
             })?;
             self.collect()?;
+            self.hot
+                .period_wall
+                .observe(period_wall0.elapsed().as_secs_f64() * 1e3);
+            p_span.finish(&self.obs.rec, self.transport.now_ms());
         }
-        self.metrics.incr(
+        self.obs.reg.incr(
             "net.frames_sent",
             self.transport.frames_sent() - frames_start,
         );
+        // Fold the registry's event counters back into the owned
+        // [`Metrics`] so reports and their byte-determinism pins keep
+        // reading the names they always did.
+        crate::obs::sync_counters(&self.obs.reg, &mut self.metrics);
         Ok(CoordinatorReport {
             final_diameter: timeline
                 .last()
@@ -919,10 +1021,10 @@ mod tests {
             rep.final_diameter
         );
         // Every period's ρ flowed from measured RTTs; on sim they are
-        // exact, so the probe error series must be ~0.
-        let err = co.metrics.series("net.rtt_abs_error_ms").unwrap();
-        let max_err =
-            err.values.iter().cloned().fold(0.0f64, f64::max);
+        // exact, so the probe error histogram must be ~0.
+        let err = co.obs.reg.histogram("net.rtt_abs_error_ms");
+        assert!(err.count() > 0, "probes must have been measured");
+        let max_err = err.max();
         assert!(max_err < 1e-6, "sim RTTs must be exact, got {max_err}");
         assert_eq!(co.metrics.counter("net.frames_lost"), 0);
         // Ring-swap announcements kept every actor's view in sync with
@@ -993,7 +1095,7 @@ mod tests {
         let d = co.transport.recv(2, 100.0).expect("delivered");
         co.on_delivery(2, d).unwrap();
         assert_eq!(co.node_views(), before, "stale frame mutated a view");
-        assert_eq!(co.metrics.counter("net.stale_frames"), 1);
+        assert_eq!(co.obs.reg.get("net.stale_frames"), 1);
 
         // A current-epoch Join delivered twice: Join is *not*
         // idempotent (it bumps the incarnation), so the duplicate
@@ -1011,7 +1113,7 @@ mod tests {
             let d = co.transport.recv(2, 100.0).expect("delivered");
             co.on_delivery(2, d).unwrap();
         }
-        assert_eq!(co.metrics.counter("net.dup_frames"), 1);
+        assert_eq!(co.obs.reg.get("net.dup_frames"), 1);
         let inc = co.nodes[2]
             .membership
             .snapshot()
@@ -1026,7 +1128,7 @@ mod tests {
         co.transport.send(0, 2, &ping[..3]).unwrap();
         let d = co.transport.recv(2, 100.0).expect("delivered");
         co.on_delivery(2, d).unwrap();
-        assert_eq!(co.metrics.counter("net.decode_errors"), 1);
+        assert_eq!(co.obs.reg.get("net.decode_errors"), 1);
     }
 
     #[test]

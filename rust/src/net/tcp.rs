@@ -75,6 +75,9 @@ pub struct TcpTransport {
     readers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
     sent: u64,
     reconnects: u64,
+    obs: Option<crate::obs::Obs>,
+    obs_tx: Option<Arc<crate::obs::CounterVec>>,
+    obs_rx: Option<Arc<crate::obs::CounterVec>>,
 }
 
 impl TcpTransport {
@@ -120,6 +123,9 @@ impl TcpTransport {
             readers,
             sent: 0,
             reconnects: 0,
+            obs: None,
+            obs_tx: None,
+            obs_rx: None,
         })
     }
 
@@ -133,9 +139,14 @@ impl TcpTransport {
         self.epoch.elapsed().as_micros() as u64
     }
 
-    /// Dial `dst` with bounded backoff.
+    /// Dial `dst` with bounded backoff, recording a `dial` span and a
+    /// `net.tcp.dials` count when observability is attached.
     fn dial(&self, dst: u32) -> Result<TcpStream> {
         let addr = self.addrs[dst as usize];
+        let timer = self
+            .obs
+            .as_ref()
+            .map(|o| (o, o.rec.start("dial", dst as u64, self.now_ms())));
         let mut last: Option<std::io::Error> = None;
         for attempt in 0..CONNECT_RETRIES {
             if attempt > 0 {
@@ -144,10 +155,17 @@ impl TcpTransport {
             match TcpStream::connect(addr) {
                 Ok(s) => {
                     s.set_nodelay(true)?;
+                    if let Some((o, t)) = timer {
+                        o.reg.incr("net.tcp.dials", 1);
+                        t.finish(&o.rec, self.now_ms());
+                    }
                     return Ok(s);
                 }
                 Err(e) => last = Some(e),
             }
+        }
+        if let Some(o) = &self.obs {
+            o.reg.incr("net.tcp.dial_failures", 1);
         }
         bail!(
             "dialing node {dst} at {addr} failed after \
@@ -192,6 +210,9 @@ impl TcpTransport {
         self.conns.remove(&dst);
         self.order.retain(|k| *k != dst);
         self.reconnects += 1;
+        if let Some(o) = &self.obs {
+            o.reg.incr("net.tcp.reconnects", 1);
+        }
         let mut s = self.dial(dst)?;
         s.write_all(buf)
             .with_context(|| format!("tcp resend {src} -> {dst}"))?;
@@ -336,11 +357,21 @@ impl Transport for TcpTransport {
         self.write_frame(src, dst, &buf)
             .with_context(|| format!("tcp send {src} -> {dst}"))?;
         self.sent += 1;
+        if let Some(tx) = &self.obs_tx {
+            tx.incr(src as usize, 1);
+        }
         Ok(())
     }
 
     fn recv(&mut self, dst: u32, timeout_ms: f64) -> Option<Delivery> {
-        self.shims[dst as usize].recv(self.epoch, self.scale, timeout_ms)
+        let d =
+            self.shims[dst as usize].recv(self.epoch, self.scale, timeout_ms);
+        if d.is_some() {
+            if let Some(rx) = &self.obs_rx {
+                rx.incr(dst as usize, 1);
+            }
+        }
+        d
     }
 
     fn set_latency(&mut self, w: &LatencyMatrix) -> Result<()> {
@@ -361,6 +392,13 @@ impl Transport for TcpTransport {
 
     fn name(&self) -> &'static str {
         "tcp"
+    }
+
+    fn attach_obs(&mut self, obs: &crate::obs::Obs) {
+        let n = self.w.n();
+        self.obs_tx = Some(obs.reg.counter_vec("net.peer.tx", n));
+        self.obs_rx = Some(obs.reg.counter_vec("net.peer.rx", n));
+        self.obs = Some(obs.clone());
     }
 }
 

@@ -100,6 +100,16 @@ pub trait Transport {
     fn loss_hint(&self) -> f64 {
         0.0
     }
+
+    /// Attach a run's observability sinks. Transports that implement
+    /// this record per-peer tx/rx counters (and, for TCP, dial spans
+    /// and reconnect counts) into the registry; the default is a
+    /// no-op so synthetic test transports need not care. Called by
+    /// [`NetCoordinator`](crate::net::runner::NetCoordinator) before
+    /// the first send.
+    fn attach_obs(&mut self, obs: &crate::obs::Obs) {
+        let _ = obs;
+    }
 }
 
 impl Transport for Box<dyn Transport> {
@@ -138,6 +148,10 @@ impl Transport for Box<dyn Transport> {
     fn loss_hint(&self) -> f64 {
         (**self).loss_hint()
     }
+
+    fn attach_obs(&mut self, obs: &crate::obs::Obs) {
+        (**self).attach_obs(obs)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -154,6 +168,8 @@ pub struct SimTransport {
     store: HashMap<u64, Vec<u8>>,
     next_tag: u64,
     sent: u64,
+    obs_tx: Option<Arc<crate::obs::CounterVec>>,
+    obs_rx: Option<Arc<crate::obs::CounterVec>>,
 }
 
 impl SimTransport {
@@ -167,6 +183,8 @@ impl SimTransport {
             store: HashMap::new(),
             next_tag: 0,
             sent: 0,
+            obs_tx: None,
+            obs_rx: None,
         }
     }
 
@@ -217,6 +235,9 @@ impl Transport for SimTransport {
         self.engine
             .schedule_in(delay, EventKind::Deliver { src, dst, tag });
         self.sent += 1;
+        if let Some(tx) = &self.obs_tx {
+            tx.incr(src as usize, 1);
+        }
         Ok(())
     }
 
@@ -224,6 +245,9 @@ impl Transport for SimTransport {
         let deadline = self.engine.now() + timeout_ms;
         loop {
             if let Some(d) = self.inbox[dst as usize].pop_front() {
+                if let Some(rx) = &self.obs_rx {
+                    rx.incr(dst as usize, 1);
+                }
                 return Some(d);
             }
             if !self.pump_one(deadline) {
@@ -255,6 +279,12 @@ impl Transport for SimTransport {
 
     fn name(&self) -> &'static str {
         "sim"
+    }
+
+    fn attach_obs(&mut self, obs: &crate::obs::Obs) {
+        let n = self.w.n();
+        self.obs_tx = Some(obs.reg.counter_vec("net.peer.tx", n));
+        self.obs_rx = Some(obs.reg.counter_vec("net.peer.rx", n));
     }
 }
 
@@ -404,6 +434,8 @@ pub struct UdpTransport {
     stop: Arc<AtomicBool>,
     readers: Vec<std::thread::JoinHandle<()>>,
     sent: u64,
+    obs_tx: Option<Arc<crate::obs::CounterVec>>,
+    obs_rx: Option<Arc<crate::obs::CounterVec>>,
 }
 
 impl UdpTransport {
@@ -450,6 +482,8 @@ impl UdpTransport {
             stop,
             readers,
             sent: 0,
+            obs_tx: None,
+            obs_rx: None,
         })
     }
 
@@ -524,11 +558,21 @@ impl Transport for UdpTransport {
             .send_to(&buf, self.addrs[dst as usize])
             .with_context(|| format!("udp send {src} -> {dst}"))?;
         self.sent += 1;
+        if let Some(tx) = &self.obs_tx {
+            tx.incr(src as usize, 1);
+        }
         Ok(())
     }
 
     fn recv(&mut self, dst: u32, timeout_ms: f64) -> Option<Delivery> {
-        self.shims[dst as usize].recv(self.epoch, self.scale, timeout_ms)
+        let d =
+            self.shims[dst as usize].recv(self.epoch, self.scale, timeout_ms);
+        if d.is_some() {
+            if let Some(rx) = &self.obs_rx {
+                rx.incr(dst as usize, 1);
+            }
+        }
+        d
     }
 
     fn set_latency(&mut self, w: &LatencyMatrix) -> Result<()> {
@@ -549,6 +593,12 @@ impl Transport for UdpTransport {
 
     fn name(&self) -> &'static str {
         "udp"
+    }
+
+    fn attach_obs(&mut self, obs: &crate::obs::Obs) {
+        let n = self.w.n();
+        self.obs_tx = Some(obs.reg.counter_vec("net.peer.tx", n));
+        self.obs_rx = Some(obs.reg.counter_vec("net.peer.rx", n));
     }
 }
 

@@ -1,0 +1,333 @@
+//! Observability substrate: the shared atomic metrics [`Registry`]
+//! and the span-based flight [`Recorder`], bundled per run as [`Obs`].
+//!
+//! Every coordinator ([`crate::net::NetCoordinator`],
+//! [`crate::coordinator::Coordinator`],
+//! [`crate::coordinator::sharded::ShardedCoordinator`]) owns an `Obs`
+//! and hands clones to whatever records on its behalf — transports
+//! via [`crate::net::Transport::attach_obs`], shards inside the
+//! `scoped_map` fan-out, the [`crate::graph::eval::EvalPool`] — so
+//! hot paths record through atomics instead of threading `&mut
+//! metrics::Metrics` through every call.
+//!
+//! Counters are always on (an atomic add per event); span recording
+//! is opt-in per run. At the end of a run the coordinator folds the
+//! registry's *counters* back into its [`crate::metrics::Metrics`]
+//! (see [`sync_counters`]) so rendered reports keep their
+//! byte-determinism pins; wall-time histograms stay registry-only.
+//!
+//! Artifacts: [`Obs::write_dir`] emits `snapshot.json`,
+//! `metrics.prom` and `timeline.jsonl` into `--obs-out DIR`; the
+//! `dgro obs` subcommand (`dump`, `diff`, `top`) reads them back.
+//! Formats are documented in `docs/OBSERVABILITY.md`.
+
+pub mod recorder;
+pub mod registry;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+pub use recorder::{Recorder, Span, SpanTimer, DEFAULT_CAPACITY};
+pub use registry::{bucket_bound, CounterVec, Histogram, Registry};
+
+use crate::metrics::Metrics;
+use crate::util::json::{self, Json};
+
+/// One run's observability sinks: a registry plus a flight recorder.
+/// Cloning shares both (they are `Arc`s), which is how shards, node
+/// actors and transports all record into the same run.
+#[derive(Clone)]
+pub struct Obs {
+    /// The metrics registry (counters always on).
+    pub reg: Arc<Registry>,
+    /// The span flight recorder (disabled until
+    /// [`Recorder::set_enabled`]).
+    pub rec: Arc<Recorder>,
+}
+
+impl Default for Obs {
+    fn default() -> Obs {
+        Obs::new()
+    }
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs")
+            .field("counters", &self.reg.counters_snapshot().len())
+            .field("spans", &self.rec.len())
+            .field("recording", &self.rec.is_enabled())
+            .finish()
+    }
+}
+
+impl Obs {
+    /// Fresh sinks with the default recorder capacity; spans are
+    /// disabled until requested.
+    pub fn new() -> Obs {
+        Obs {
+            reg: Arc::new(Registry::new()),
+            rec: Arc::new(Recorder::new(DEFAULT_CAPACITY)),
+        }
+    }
+
+    /// Fresh sinks with span recording already enabled.
+    pub fn recording() -> Obs {
+        let obs = Obs::new();
+        obs.rec.set_enabled(true);
+        obs
+    }
+
+    /// Full JSON snapshot (registry plus recorder occupancy).
+    pub fn snapshot_json(&self) -> Json {
+        let mut root = match self.reg.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("registry snapshot is an object"),
+        };
+        root.insert(
+            "spans".to_string(),
+            Json::obj(vec![
+                ("buffered", Json::num(self.rec.len() as f64)),
+                ("dropped", Json::num(self.rec.dropped() as f64)),
+            ]),
+        );
+        Json::Obj(root)
+    }
+
+    /// Write the artifact triple into `dir` (created if missing):
+    /// `snapshot.json`, `metrics.prom`, `timeline.jsonl`. With
+    /// `sim_only` the timeline omits wall-clock fields and is
+    /// byte-deterministic for seeded sim runs.
+    pub fn write_dir(&self, dir: &Path, sim_only: bool) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        std::fs::write(
+            dir.join("snapshot.json"),
+            self.snapshot_json().to_string(),
+        )?;
+        std::fs::write(dir.join("metrics.prom"), self.reg.prometheus())?;
+        std::fs::write(
+            dir.join("timeline.jsonl"),
+            self.rec.export_jsonl(sim_only),
+        )?;
+        Ok(())
+    }
+}
+
+/// Fold the registry's plain counters into a [`Metrics`] sink by
+/// raising each metrics counter to the registry value (idempotent;
+/// never decreases). Counter vectors and histograms are deliberately
+/// excluded — they carry per-index or wall-clock detail that the
+/// deterministic rendered reports must not depend on.
+pub fn sync_counters(reg: &Registry, metrics: &mut Metrics) {
+    for (name, v) in reg.counters_snapshot() {
+        let have = metrics.counter(&name);
+        if v > have {
+            metrics.incr(&name, v - have);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// `dgro obs` tooling: file-level dump / diff / top.
+// ---------------------------------------------------------------------
+
+/// Render a `snapshot.json` file as an aligned text table.
+pub fn dump_snapshot(path: &Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let root = json::parse(&text)?;
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "counters:");
+    for (name, v) in root.get("counters")?.as_obj()? {
+        let _ = writeln!(out, "  {name:<40} {}", v.as_f64()? as u64);
+    }
+    if let Some(vecs) = root.opt("counter_vecs") {
+        for (name, slots) in vecs.as_obj()? {
+            let total: f64 = slots
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_f64().unwrap_or(0.0))
+                .sum();
+            let _ = writeln!(
+                out,
+                "  {name:<40} {} (over {} slots)",
+                total as u64,
+                slots.as_arr()?.len()
+            );
+        }
+    }
+    let _ = writeln!(out, "histograms:");
+    for (name, h) in root.get("histograms")?.as_obj()? {
+        let count = h.get("count")?.as_f64()?;
+        let sum = h.get("sum")?.as_f64()?;
+        let mean = if count > 0.0 { sum / count } else { 0.0 };
+        let _ = writeln!(
+            out,
+            "  {name:<40} n={:<8} mean={:<12.4} min={:<12.4} \
+             max={:<12.4} p99<={:.4}",
+            count as u64,
+            mean,
+            h.get("min")?.as_f64()?,
+            h.get("max")?.as_f64()?,
+            h.get("p99")?.as_f64()?,
+        );
+    }
+    Ok(out)
+}
+
+/// Diff two `snapshot.json` files: one line per counter or histogram
+/// whose value differs, `a -> b` with the delta. Returns an empty
+/// diff section text when the snapshots agree.
+pub fn diff_snapshots(a: &Path, b: &Path) -> Result<String> {
+    let ja = json::parse(&std::fs::read_to_string(a)?)?;
+    let jb = json::parse(&std::fs::read_to_string(b)?)?;
+    use std::collections::BTreeSet;
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let ca = ja.get("counters")?.as_obj()?;
+    let cb = jb.get("counters")?.as_obj()?;
+    let names: BTreeSet<&String> = ca.keys().chain(cb.keys()).collect();
+    let mut differing = 0usize;
+    for name in names {
+        let va = ca.get(name).map(|v| v.as_f64()).transpose()?.unwrap_or(0.0);
+        let vb = cb.get(name).map(|v| v.as_f64()).transpose()?.unwrap_or(0.0);
+        if va != vb {
+            differing += 1;
+            let _ = writeln!(
+                out,
+                "counter   {name:<40} {va} -> {vb} ({:+})",
+                vb - va
+            );
+        }
+    }
+    let ha = ja.get("histograms")?.as_obj()?;
+    let hb = jb.get("histograms")?.as_obj()?;
+    let names: BTreeSet<&String> = ha.keys().chain(hb.keys()).collect();
+    for name in names {
+        let count = |m: &std::collections::BTreeMap<String, Json>| {
+            m.get(name)
+                .and_then(|h| h.opt("count"))
+                .and_then(|c| c.as_f64().ok())
+                .unwrap_or(0.0)
+        };
+        let (na, nb) = (count(ha), count(hb));
+        if na != nb {
+            differing += 1;
+            let _ = writeln!(
+                out,
+                "histogram {name:<40} n {na} -> {nb} ({:+})",
+                nb - na
+            );
+        }
+    }
+    if differing == 0 {
+        out.push_str("snapshots agree\n");
+    }
+    Ok(out)
+}
+
+/// The `N` slowest spans of a `timeline.jsonl` file, slowest first.
+/// Ranks by wall time when present (full exports), sim duration
+/// otherwise (deterministic exports).
+pub fn top_slowest(path: &Path, n: usize) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut rows: Vec<(f64, f64, f64, String, u64)> = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let js = json::parse(line)?;
+        let dur = js.get("dur_ms")?.as_f64()?;
+        let wall = js
+            .opt("wall_ms")
+            .map(|w| w.as_f64())
+            .transpose()?
+            .unwrap_or(dur);
+        rows.push((
+            wall,
+            dur,
+            js.get("t_ms")?.as_f64()?,
+            js.get("kind")?.as_str()?.to_string(),
+            js.get("id")?.as_f64()? as u64,
+        ));
+    }
+    rows.sort_by(|a, b| {
+        b.0.total_cmp(&a.0)
+            .then_with(|| a.2.total_cmp(&b.2))
+            .then_with(|| a.3.cmp(&b.3))
+    });
+    rows.truncate(n);
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<10} {:>6} {:>12} {:>12} {:>12}",
+        "kind", "id", "t_ms", "dur_ms", "wall_ms"
+    );
+    for (wall, dur, t, kind, id) in rows {
+        let _ = writeln!(
+            out,
+            "{kind:<10} {id:>6} {t:>12.3} {dur:>12.3} {wall:>12.3}"
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_counters_is_idempotent_and_monotone() {
+        let obs = Obs::new();
+        obs.reg.incr("net.stale_frames", 3);
+        let mut m = Metrics::default();
+        m.incr("pre.existing", 1);
+        sync_counters(&obs.reg, &mut m);
+        sync_counters(&obs.reg, &mut m);
+        assert_eq!(m.counter("net.stale_frames"), 3);
+        assert_eq!(m.counter("pre.existing"), 1);
+        obs.reg.incr("net.stale_frames", 2);
+        sync_counters(&obs.reg, &mut m);
+        assert_eq!(m.counter("net.stale_frames"), 5);
+    }
+
+    #[test]
+    fn artifact_triple_round_trips_through_tooling() {
+        let obs = Obs::recording();
+        obs.reg.incr("gossip.messages", 12);
+        obs.reg.histogram("period.wall_ms").observe(2.5);
+        obs.rec.record("period", 0, 0.0, 250.0, 4.0);
+        obs.rec.record("measure", 0, 0.0, 60.0, 2.0);
+        let dir = std::env::temp_dir().join(format!(
+            "dgro-obs-test-{}",
+            std::process::id()
+        ));
+        obs.write_dir(&dir, true).unwrap();
+        let dump = dump_snapshot(&dir.join("snapshot.json")).unwrap();
+        assert!(dump.contains("gossip.messages"));
+        assert!(dump.contains("period.wall_ms"));
+        let top = top_slowest(&dir.join("timeline.jsonl"), 1).unwrap();
+        assert!(top.contains("period"), "slowest span wins: {top}");
+        // A second identical run diffs clean against itself...
+        let snap = dir.join("snapshot.json");
+        let same = diff_snapshots(&snap, &snap).unwrap();
+        assert!(same.contains("snapshots agree"));
+        // ...and a mutated run shows the counter delta.
+        let obs2 = Obs::new();
+        obs2.reg.incr("gossip.messages", 15);
+        obs2.reg.histogram("period.wall_ms").observe(2.5);
+        let dir2 = dir.join("b");
+        obs2.write_dir(&dir2, true).unwrap();
+        let diff = diff_snapshots(
+            &dir.join("snapshot.json"),
+            &dir2.join("snapshot.json"),
+        )
+        .unwrap();
+        assert!(diff.contains("gossip.messages"));
+        assert!(diff.contains("12 -> 15"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,256 @@
+//! The span-based flight recorder: scoped spans (`period`, `measure`,
+//! `gossip`, `decide`, `swap`, `reanchor`, `dial`) carrying sim-time
+//! and wall-time into a bounded ring buffer, exported as JSONL.
+//!
+//! Determinism contract: the sim-only export (`export_jsonl(true)`)
+//! contains only sim-clock fields and is sorted by a total order on
+//! `(t_ms, kind, id, dur_ms)`, so two seeded runs over the sim
+//! transport — at any thread count — export byte-identical timelines
+//! as long as the buffer never overflows. Overflow evicts the oldest
+//! span in *arrival* order (which is scheduling-dependent), so
+//! `dropped() > 0` voids the determinism guarantee; size the capacity
+//! for the run instead.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default ring capacity: comfortably above any scenario in the
+/// catalog (16 periods × 10 shards × a handful of span kinds).
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// One recorded span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// Span kind (`period`, `measure`, `gossip`, `decide`, `swap`,
+    /// `reanchor`, `dial`).
+    pub kind: &'static str,
+    /// Discriminator within a kind: period index, shard index, peer
+    /// index — whatever the recording site counts by.
+    pub id: u64,
+    /// Sim-time start (ms).
+    pub t_ms: f64,
+    /// Sim-time duration (ms); 0 for in-process work with no sim
+    /// clock.
+    pub dur_ms: f64,
+    /// Wall-clock duration (ms); excluded from deterministic exports.
+    pub wall_ms: f64,
+}
+
+struct Inner {
+    spans: Vec<Span>,
+    /// Next write slot once the ring is full.
+    head: usize,
+}
+
+/// Bounded, thread-safe span sink. Disabled by default — a disabled
+/// recorder's `record` is a single atomic load.
+pub struct Recorder {
+    enabled: AtomicBool,
+    cap: usize,
+    dropped: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    /// A disabled recorder with `cap` span slots.
+    pub fn new(cap: usize) -> Recorder {
+        Recorder {
+            enabled: AtomicBool::new(false),
+            cap: cap.max(1),
+            dropped: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                spans: Vec::new(),
+                head: 0,
+            }),
+        }
+    }
+
+    /// Turn span recording on or off (counters are unaffected).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether spans are currently recorded.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record one finished span (no-op while disabled).
+    pub fn record(
+        &self,
+        kind: &'static str,
+        id: u64,
+        t_ms: f64,
+        dur_ms: f64,
+        wall_ms: f64,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let span = Span {
+            kind,
+            id,
+            t_ms,
+            dur_ms,
+            wall_ms,
+        };
+        let mut inner = self.inner.lock().unwrap();
+        if inner.spans.len() < self.cap {
+            inner.spans.push(span);
+        } else {
+            let head = inner.head;
+            inner.spans[head] = span;
+            inner.head = (head + 1) % self.cap;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Start a span at sim-time `t_ms`; finish it with
+    /// [`SpanTimer::finish`] once the end sim-time is known.
+    pub fn start(
+        &self,
+        kind: &'static str,
+        id: u64,
+        t_ms: f64,
+    ) -> SpanTimer {
+        SpanTimer {
+            kind,
+            id,
+            t_ms,
+            wall0: Instant::now(),
+        }
+    }
+
+    /// Number of spans currently buffered.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().spans.len()
+    }
+
+    /// Whether no spans are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans evicted by ring overflow (non-zero voids determinism).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Sorted copy of the buffered spans.
+    pub fn spans(&self) -> Vec<Span> {
+        let mut spans = self.inner.lock().unwrap().spans.clone();
+        spans.sort_by(|a, b| {
+            a.t_ms
+                .total_cmp(&b.t_ms)
+                .then_with(|| a.kind.cmp(b.kind))
+                .then_with(|| a.id.cmp(&b.id))
+                .then_with(|| a.dur_ms.total_cmp(&b.dur_ms))
+        });
+        spans
+    }
+
+    /// JSONL timeline export, one span per line, sorted. With
+    /// `sim_only` the wall field is omitted and the output is
+    /// byte-deterministic for seeded sim runs (see module docs).
+    pub fn export_jsonl(&self, sim_only: bool) -> String {
+        let mut out = String::new();
+        for s in self.spans() {
+            let mut fields = vec![
+                ("dur_ms", Json::num(s.dur_ms)),
+                ("id", Json::num(s.id as f64)),
+                ("kind", Json::str(s.kind)),
+                ("t_ms", Json::num(s.t_ms)),
+            ];
+            if !sim_only {
+                fields.push(("wall_ms", Json::num(s.wall_ms)));
+            }
+            out.push_str(&Json::obj(fields).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// An in-flight span started by [`Recorder::start`]: wall time runs
+/// from construction; the caller supplies the end sim-time.
+pub struct SpanTimer {
+    kind: &'static str,
+    id: u64,
+    t_ms: f64,
+    wall0: Instant,
+}
+
+impl SpanTimer {
+    /// Close the span at sim-time `end_ms` and record it.
+    pub fn finish(self, rec: &Recorder, end_ms: f64) {
+        rec.record(
+            self.kind,
+            self.id,
+            self.t_ms,
+            (end_ms - self.t_ms).max(0.0),
+            self.wall0.elapsed().as_secs_f64() * 1e3,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = Recorder::new(8);
+        rec.record("period", 0, 0.0, 1.0, 1.0);
+        assert!(rec.is_empty());
+        rec.set_enabled(true);
+        rec.record("period", 0, 0.0, 1.0, 1.0);
+        assert_eq!(rec.len(), 1);
+    }
+
+    #[test]
+    fn ring_bounds_memory_and_counts_drops() {
+        let rec = Recorder::new(4);
+        rec.set_enabled(true);
+        for i in 0..10 {
+            rec.record("measure", i, i as f64, 1.0, 0.5);
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 6);
+        // Oldest spans were evicted: the survivors are the last four.
+        let ids: Vec<u64> = rec.spans().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn export_is_sorted_and_sim_only_omits_wall() {
+        let rec = Recorder::new(16);
+        rec.set_enabled(true);
+        rec.record("swap", 2, 500.0, 0.0, 3.0);
+        rec.record("measure", 0, 250.0, 40.0, 9.0);
+        rec.record("decide", 1, 250.0, 0.0, 1.0);
+        let sim = rec.export_jsonl(true);
+        let lines: Vec<&str> = sim.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"kind\": \"decide\""));
+        assert!(lines[1].contains("\"kind\": \"measure\""));
+        assert!(lines[2].contains("\"kind\": \"swap\""));
+        assert!(!sim.contains("wall_ms"));
+        assert!(rec.export_jsonl(false).contains("wall_ms"));
+    }
+
+    #[test]
+    fn span_timer_measures_wall_and_sim() {
+        let rec = Recorder::new(8);
+        rec.set_enabled(true);
+        let t = rec.start("gossip", 3, 100.0);
+        t.finish(&rec, 140.0);
+        let spans = rec.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].kind, "gossip");
+        assert_eq!(spans[0].dur_ms, 40.0);
+        assert!(spans[0].wall_ms >= 0.0);
+    }
+}

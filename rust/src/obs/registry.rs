@@ -1,0 +1,518 @@
+//! The shared atomic metrics registry: counters, per-index counter
+//! vectors and fixed-bucket log-scale histograms that many threads
+//! record into without `&mut` threading.
+//!
+//! Everything here is lock-free on the hot path: callers resolve a
+//! handle (an `Arc` to the atomic cell) once, then record with plain
+//! atomic adds. The registry's own maps are only locked on handle
+//! resolution and on snapshot/exposition, never per event.
+//!
+//! Determinism contract: counters hold logical event counts, so a
+//! seeded run over the sim transport produces identical snapshots
+//! regardless of thread count or wall-clock speed. Histogram *bucket
+//! counts* share that property when fed sim-time values; wall-time
+//! histograms (period wall ms, decode µs) are diagnostic only and are
+//! never merged into deterministic reports.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Number of finite log-scale buckets (plus one overflow slot).
+pub const NBUCKETS: usize = 40;
+
+/// Fixed-point scale for histogram sums: 1/1000 of the recorded unit
+/// (µs when observing ms). Integer sums make addition associative, so
+/// the total is identical whatever order threads record in.
+const SUM_SCALE: f64 = 1e3;
+
+/// Upper bound of finite bucket `i`: `0.001 * 2^i` (ms when observing
+/// ms), covering 1 µs up to ~6.4 days. Values above the last bound
+/// land in the overflow slot.
+pub fn bucket_bound(i: usize) -> f64 {
+    1e-3 * (i as f64).exp2()
+}
+
+/// A fixed-bucket log-scale histogram with atomic cells.
+///
+/// `observe` is wait-free per bucket; min/max are maintained with
+/// compare-and-swap on the value's bit pattern (valid for the
+/// non-negative durations recorded here), so the final min/max is
+/// order-independent.
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_fp: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            counts: (0..=NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_fp: AtomicU64::new(0),
+            min_bits: AtomicU64::new(u64::MAX),
+            max_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// Which bucket a value lands in (`NBUCKETS` = overflow).
+    /// A value exactly on a bucket's upper bound belongs to that
+    /// bucket (`le` semantics, as in Prometheus).
+    pub fn bucket_index(v: f64) -> usize {
+        if !(v > 0.0) {
+            return 0;
+        }
+        (0..NBUCKETS)
+            .position(|i| v <= bucket_bound(i))
+            .unwrap_or(NBUCKETS)
+    }
+
+    /// Record one value (non-finite and negative values clamp to 0).
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.counts[Self::bucket_index(v)]
+            .fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_fp
+            .fetch_add((v * SUM_SCALE).round() as u64, Ordering::Relaxed);
+        let bits = v.to_bits();
+        let _ = self.min_bits.fetch_min(bits, Ordering::Relaxed);
+        let _ = self.max_bits.fetch_max(bits, Ordering::Relaxed);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded values (fixed-point, 1e-3 resolution).
+    pub fn sum(&self) -> f64 {
+        self.sum_fp.load(Ordering::Relaxed) as f64 / SUM_SCALE
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> f64 {
+        let bits = self.min_bits.load(Ordering::Relaxed);
+        if bits == u64::MAX {
+            0.0
+        } else {
+            f64::from_bits(bits)
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Per-bucket counts (finite buckets then the overflow slot).
+    pub fn buckets(&self) -> Vec<u64> {
+        self.counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Bucket-resolution quantile: the upper bound of the bucket
+    /// holding the `q`-th ranked value (`max()` for the overflow
+    /// slot, 0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.buckets().iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if i == NBUCKETS {
+                    self.max()
+                } else {
+                    bucket_bound(i)
+                };
+            }
+        }
+        self.max()
+    }
+}
+
+/// A fixed-length vector of atomic counters, indexed by a small id
+/// (peer index, shard index). Out-of-range indices are ignored.
+pub struct CounterVec {
+    slots: Vec<AtomicU64>,
+}
+
+impl CounterVec {
+    fn new(len: usize) -> CounterVec {
+        CounterVec {
+            slots: (0..len).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether the vector has no slots.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Add `by` to slot `i` (no-op when out of range).
+    pub fn incr(&self, i: usize, by: u64) {
+        if let Some(s) = self.slots.get(i) {
+            s.fetch_add(by, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value of slot `i` (0 when out of range).
+    pub fn get(&self, i: usize) -> u64 {
+        self.slots
+            .get(i)
+            .map(|s| s.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Sum over all slots.
+    pub fn total(&self) -> u64 {
+        self.slots.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// The process-shareable registry. One instance per run (wrapped in an
+/// [`Arc`] by [`crate::obs::Obs`]) keeps repeated in-process runs
+/// independent — a hard requirement of the byte-determinism pins.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    vecs: Mutex<BTreeMap<String, Arc<CounterVec>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Resolve (creating if absent) the counter handle for `name`.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .clone()
+    }
+
+    /// Convenience: add `by` to counter `name` (resolves the handle).
+    pub fn incr(&self, name: &str, by: u64) {
+        self.counter(name).fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Current value of counter `name` (0 when never touched).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Resolve (creating if absent) a counter vector of at least
+    /// `len` slots. An existing shorter vector is replaced by a wider
+    /// one carrying the old slot values over.
+    pub fn counter_vec(&self, name: &str, len: usize) -> Arc<CounterVec> {
+        let mut map = self.vecs.lock().unwrap();
+        if let Some(v) = map.get(name) {
+            if v.len() >= len {
+                return v.clone();
+            }
+            let wide = Arc::new(CounterVec::new(len));
+            for i in 0..v.len() {
+                wide.incr(i, v.get(i));
+            }
+            map.insert(name.to_string(), wide.clone());
+            return wide;
+        }
+        let v = Arc::new(CounterVec::new(len));
+        map.insert(name.to_string(), v.clone());
+        v
+    }
+
+    /// Resolve (creating if absent) the histogram handle for `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.hists.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Sorted snapshot of every plain counter.
+    pub fn counters_snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Prometheus text exposition of the full registry (names have
+    /// `.` mapped to `_`; vector slots become an `idx` label).
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        fn prom(name: &str) -> String {
+            name.replace(['.', '-'], "_")
+        }
+        let mut out = String::new();
+        for (name, v) in self.counters_snapshot() {
+            let n = prom(&name);
+            let _ = writeln!(out, "# TYPE {n} counter");
+            let _ = writeln!(out, "{n} {v}");
+        }
+        for (name, vec) in self.vecs.lock().unwrap().iter() {
+            let n = prom(name);
+            let _ = writeln!(out, "# TYPE {n} counter");
+            for i in 0..vec.len() {
+                let _ =
+                    writeln!(out, "{n}{{idx=\"{i}\"}} {}", vec.get(i));
+            }
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let n = prom(name);
+            let _ = writeln!(out, "# TYPE {n} histogram");
+            let buckets = h.buckets();
+            let mut cum = 0u64;
+            for (i, c) in buckets.iter().enumerate() {
+                cum += c;
+                if i == NBUCKETS {
+                    let _ = writeln!(
+                        out,
+                        "{n}_bucket{{le=\"+Inf\"}} {cum}"
+                    );
+                } else {
+                    let _ = writeln!(
+                        out,
+                        "{n}_bucket{{le=\"{}\"}} {cum}",
+                        bucket_bound(i)
+                    );
+                }
+            }
+            let _ = writeln!(out, "{n}_sum {}", h.sum());
+            let _ = writeln!(out, "{n}_count {}", h.count());
+        }
+        out
+    }
+
+    /// JSON snapshot (`counters`, `counter_vecs`, `histograms`) in the
+    /// shape `dgro obs dump|diff` consumes.
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters_snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, Json::num(v as f64)))
+            .collect::<Vec<_>>();
+        let vecs = self
+            .vecs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| {
+                let slots = (0..v.len())
+                    .map(|i| Json::num(v.get(i) as f64))
+                    .collect();
+                (k.clone(), Json::arr(slots))
+            })
+            .collect::<Vec<_>>();
+        let hists = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                let buckets = h
+                    .buckets()
+                    .into_iter()
+                    .map(|c| Json::num(c as f64))
+                    .collect();
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("sum", Json::num(h.sum())),
+                        ("min", Json::num(h.min())),
+                        ("max", Json::num(h.max())),
+                        ("p99", Json::num(h.quantile(0.99))),
+                        ("buckets", Json::arr(buckets)),
+                    ]),
+                )
+            })
+            .collect::<Vec<_>>();
+        Json::Obj(
+            [
+                (
+                    "counters".to_string(),
+                    Json::Obj(counters.into_iter().collect()),
+                ),
+                (
+                    "counter_vecs".to_string(),
+                    Json::Obj(vecs.into_iter().collect()),
+                ),
+                (
+                    "histograms".to_string(),
+                    Json::Obj(hists.into_iter().collect()),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_vectors_accumulate() {
+        let reg = Registry::new();
+        reg.incr("a.b", 2);
+        reg.incr("a.b", 3);
+        assert_eq!(reg.get("a.b"), 5);
+        assert_eq!(reg.get("never"), 0);
+        let v = reg.counter_vec("peer.tx", 4);
+        v.incr(1, 7);
+        v.incr(3, 1);
+        v.incr(99, 1); // out of range: ignored
+        assert_eq!(v.get(1), 7);
+        assert_eq!(v.total(), 8);
+        // Widening keeps old slots.
+        let w = reg.counter_vec("peer.tx", 8);
+        assert_eq!(w.len(), 8);
+        assert_eq!(w.get(1), 7);
+        assert_eq!(w.total(), 8);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_le_inclusive() {
+        // Exactly on a bound lands in that bucket; just above moves
+        // to the next one; zero/negative/NaN clamp to bucket 0.
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(-3.0), 0);
+        assert_eq!(Histogram::bucket_index(f64::NAN), 0);
+        assert_eq!(Histogram::bucket_index(bucket_bound(0)), 0);
+        assert_eq!(Histogram::bucket_index(bucket_bound(1)), 1);
+        for i in 0..NBUCKETS {
+            assert_eq!(Histogram::bucket_index(bucket_bound(i)), i);
+            if i + 1 < NBUCKETS {
+                assert_eq!(
+                    Histogram::bucket_index(bucket_bound(i) * 1.0001),
+                    i + 1
+                );
+            }
+        }
+        assert_eq!(
+            Histogram::bucket_index(bucket_bound(NBUCKETS - 1) * 2.0),
+            NBUCKETS
+        );
+    }
+
+    #[test]
+    fn histogram_summary_stats_are_exact() {
+        let reg = Registry::new();
+        let h = reg.histogram("t");
+        for v in [0.5, 1.5, 2.0, 8.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 12.0).abs() < 1e-9);
+        assert!((h.mean() - 3.0).abs() < 1e-9);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 8.0);
+        assert_eq!(h.quantile(1.0), h.max().max(bucket_bound(13)));
+        assert!(h.quantile(0.25) >= 0.5);
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_across_thread_counts() {
+        // The same logical workload recorded under 1, 2 and 8 threads
+        // must produce identical counter snapshots, histogram bucket
+        // vectors and min/max — the order-independence contract.
+        let mut renders = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let reg = std::sync::Arc::new(Registry::new());
+            let per = 240 / threads;
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    let reg = reg.clone();
+                    s.spawn(move || {
+                        let c = reg.counter("evt");
+                        let h = reg.histogram("lat");
+                        let v = reg.counter_vec("peer", 8);
+                        for i in 0..per {
+                            let k = t * per + i;
+                            c.fetch_add(1, Ordering::Relaxed);
+                            h.observe((k % 37) as f64 * 0.25);
+                            v.incr(k % 8, 1);
+                        }
+                    });
+                }
+            });
+            renders.push(reg.prometheus());
+        }
+        assert_eq!(renders[0], renders[1]);
+        assert_eq!(renders[0], renders[2]);
+        assert!(renders[0].contains("evt 240"));
+    }
+
+    #[test]
+    fn prometheus_and_json_expose_everything() {
+        let reg = Registry::new();
+        reg.incr("net.frames_sent", 3);
+        reg.counter_vec("net.peer.tx", 2).incr(0, 1);
+        reg.histogram("period.wall_ms").observe(4.0);
+        let prom = reg.prometheus();
+        assert!(prom.contains("net_frames_sent 3"));
+        assert!(prom.contains("net_peer_tx{idx=\"0\"} 1"));
+        assert!(prom.contains("period_wall_ms_count 1"));
+        assert!(prom.contains("le=\"+Inf\""));
+        let js = reg.to_json();
+        assert_eq!(
+            js.get("counters")
+                .unwrap()
+                .get("net.frames_sent")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            3.0
+        );
+        assert_eq!(
+            js.get("histograms")
+                .unwrap()
+                .get("period.wall_ms")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+    }
+}

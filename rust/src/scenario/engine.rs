@@ -44,6 +44,7 @@ use crate::net::{
     TcpTransport, Transport, TransportKind, UdpTransport,
 };
 use crate::metrics::{Metrics, Table};
+use crate::obs::Obs;
 use crate::scenario::dynamics::DynamicLatency;
 use crate::scenario::spec::ScenarioSpec;
 use crate::topology::{
@@ -143,6 +144,10 @@ pub struct ScenarioReport {
     pub rows: Vec<PeriodRow>,
     /// Counters + per-period series recorded during the run.
     pub metrics: Metrics,
+    /// The run's observability surface (registry + flight recorder) —
+    /// what `--obs-out` exports. Never consulted by [`Self::render`],
+    /// so rendered reports stay byte-deterministic.
+    pub obs: Option<Obs>,
 }
 
 impl ScenarioReport {
@@ -286,6 +291,10 @@ pub struct ScenarioEngine {
     /// landed in it (0 = off; `--churn-guard`). Applies to the
     /// centralized adaptive paths (in-process and transport-backed).
     pub churn_guard: u64,
+    /// Enable the span flight recorder for this run (`--obs-out` sets
+    /// it). Registry counters are always on; span recording is the
+    /// only opt-in part. Never changes reported values.
+    pub obs_record: bool,
 }
 
 /// Shard count a [`Topology::DgroSharded`] run falls back to when
@@ -303,11 +312,16 @@ fn replay_over<T: crate::net::Transport>(
     transport: T,
     trace: &crate::membership::events::EventTrace,
     horizon: f64,
+    record: bool,
     latency_at: &mut dyn FnMut(f64) -> Option<crate::latency::LatencyMatrix>,
-) -> Result<(crate::coordinator::CoordinatorReport, Metrics)> {
+) -> Result<(crate::coordinator::CoordinatorReport, Metrics, Obs)> {
     let mut co = NetCoordinator::new(cfg, w0, transport)?;
+    if record {
+        co.obs.rec.set_enabled(true);
+    }
     let rep = co.run_dynamic(trace, horizon, latency_at)?;
-    Ok((rep, co.metrics))
+    let obs = co.obs.clone();
+    Ok((rep, co.metrics, obs))
 }
 
 impl ScenarioEngine {
@@ -328,6 +342,7 @@ impl ScenarioEngine {
             dup_rate: 0.0,
             reorder_rate: 0.0,
             churn_guard: 0,
+            obs_record: false,
         })
     }
 
@@ -422,14 +437,18 @@ impl ScenarioEngine {
             prev_t = t;
             out
         };
-        let (rep, metrics) = if topology == Topology::DgroSharded {
+        let (rep, metrics, obs) = if topology == Topology::DgroSharded {
             let mut opts = ShardedConfig::new(self.effective_shards());
             opts.threads = self.threads.max(1);
             let mut co =
                 ShardedCoordinator::with_latency(cfg, dyn_w.at(0.0), opts)?;
+            if self.obs_record {
+                co.obs.rec.set_enabled(true);
+            }
             let rep =
                 co.run_dynamic(&trace, self.spec.horizon, &mut latency_at)?;
-            (rep, co.metrics)
+            let obs = co.obs.clone();
+            (rep, co.metrics, obs)
         } else if let Some(kind) = self.transport {
             // Transport-backed replay: same spec, same seed-derived
             // trace and latency view, but ρ comes from measured message
@@ -457,17 +476,38 @@ impl ScenarioEngine {
                 reorder_rate: self.reorder_rate,
                 seed: self.seed,
             };
+            let record = self.obs_record;
             if fault.active() {
                 let lossy = LossyTransport::new(base, fault);
-                replay_over(cfg, w0, lossy, &trace, horizon, &mut latency_at)?
+                replay_over(
+                    cfg,
+                    w0,
+                    lossy,
+                    &trace,
+                    horizon,
+                    record,
+                    &mut latency_at,
+                )?
             } else {
-                replay_over(cfg, w0, base, &trace, horizon, &mut latency_at)?
+                replay_over(
+                    cfg,
+                    w0,
+                    base,
+                    &trace,
+                    horizon,
+                    record,
+                    &mut latency_at,
+                )?
             }
         } else {
             let mut co = Coordinator::with_latency(cfg, dyn_w.at(0.0))?;
+            if self.obs_record {
+                co.obs.rec.set_enabled(true);
+            }
             let rep =
                 co.run_dynamic(&trace, self.spec.horizon, &mut latency_at)?;
-            (rep, co.metrics)
+            let obs = co.obs.clone();
+            (rep, co.metrics, obs)
         };
         let series = |name: &str| -> Vec<f64> {
             metrics
@@ -496,6 +536,7 @@ impl ScenarioEngine {
             seed: self.seed,
             rows,
             metrics,
+            obs: Some(obs),
         })
     }
 
@@ -533,7 +574,12 @@ impl ScenarioEngine {
         let edges: Vec<(u32, u32)> =
             g0.edges().iter().map(|&(u, v, _)| (u, v)).collect();
 
-        let pool = EvalPool::new(self.threads);
+        let obs = Obs::new();
+        if self.obs_record {
+            obs.rec.set_enabled(true);
+        }
+        let mut pool = EvalPool::new(self.threads);
+        pool.attach_obs(&obs);
         let mut membership = MembershipList::full(n);
         let mut metrics = Metrics::new();
         let mut rows = Vec::new();
@@ -645,6 +691,7 @@ impl ScenarioEngine {
             seed: self.seed,
             rows,
             metrics,
+            obs: Some(obs),
         })
     }
 }
