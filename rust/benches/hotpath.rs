@@ -11,6 +11,8 @@
 //!   * coordinator periods/s, centralized vs sharded (K=8)
 //!   * net coordinator frames/s over the sim and udp loopback
 //!     transports, plus probe-RTT overhead and sim-vs-udp diameter drift
+//!   * scale tier: certified diameter estimation on 10^4/10^5-node
+//!     circulant and random-geometric graphs (runs in quick mode too)
 //!
 //! Besides the stdout report, the run writes **BENCH_hotpath.json** to
 //! the working directory (repo root under `cargo bench`): the
@@ -36,8 +38,11 @@ use dgro::scenario::{
     ChurnSpec, ScenarioEngine, ScenarioReport, ScenarioSpec, Topology,
 };
 use dgro::sim::broadcast::broadcast_times;
+use dgro::topology::circulant::Circulant;
 use dgro::topology::genetic::{self, GaConfig};
-use dgro::topology::{paper_k, random_ring};
+use dgro::topology::{
+    geometric_radius, paper_k, random_geometric, random_ring,
+};
 use dgro::util::json::Json;
 use dgro::util::rng::Rng;
 use dgro::util::stats::Summary;
@@ -552,6 +557,77 @@ fn main() -> anyhow::Result<()> {
         ("enabled_over_disabled_ratio", Json::num(obs_ratio)),
     ]);
 
+    // --- Scale tier: certified diameter estimates at 10^4–10^5 nodes. ---
+    // Dense LatencyMatrix paths stop near 10^3 (n² f32 cells); this
+    // tier builds sparse graphs directly — the circulant family, whose
+    // hop diameter is known in closed form, and the irregular
+    // random-geometric family — and times `diameter_est` at the
+    // default sketch budget. bench_gate floors the 10^5 estimation
+    // throughputs; the tier runs in quick mode too so CI tracks it.
+    let scale_budget = 16usize;
+    let mut scale_rows = Vec::new();
+    let fin = |x: f32| if x.is_finite() { f64::from(x) } else { -1.0 };
+    for &sn in &[10_000usize, 100_000] {
+        let t0 = std::time::Instant::now();
+        let circ = Circulant::power_two(sn);
+        let cg = circ.unit_graph();
+        let c_build = t0.elapsed().as_secs_f64();
+        let exact_hops = circ.hop_diameter() as f64;
+        let t0 = std::time::Instant::now();
+        let ce = pool.diameter_est(&cg, &[], scale_budget);
+        let c_est = t0.elapsed().as_secs_f64().max(1e-9);
+        assert!(
+            f64::from(ce.lower) <= exact_hops + 1e-6
+                && exact_hops <= f64::from(ce.upper) + 1e-6,
+            "circulant n={sn}: exact {exact_hops} outside [{}, {}]",
+            ce.lower,
+            ce.upper
+        );
+        report(
+            &format!("scale circulant n={sn} T={threads}"),
+            &[c_est],
+            Some(("nodes", sn as f64)),
+        );
+        scale_rows.push(Json::obj(vec![
+            ("family", Json::str("circulant")),
+            ("n", Json::num(sn as f64)),
+            ("m", Json::num(cg.m() as f64)),
+            ("build_ms", Json::num(c_build * 1e3)),
+            ("est_ms", Json::num(c_est * 1e3)),
+            ("est_nodes_per_s", Json::num(sn as f64 / c_est)),
+            ("lower", Json::num(fin(ce.lower))),
+            ("upper", Json::num(fin(ce.upper))),
+            ("exact_hops", Json::num(exact_hops)),
+            ("gap_pct", Json::num(ce.gap_pct())),
+            ("sweeps", Json::num(ce.sweeps as f64)),
+        ]));
+
+        let mut srng = Rng::new(0x5CA1E + sn as u64);
+        let t0 = std::time::Instant::now();
+        let rg = random_geometric(sn, geometric_radius(sn), &mut srng);
+        let r_build = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let re = pool.diameter_est(&rg, &[], scale_budget);
+        let r_est = t0.elapsed().as_secs_f64().max(1e-9);
+        report(
+            &format!("scale geometric n={sn} T={threads}"),
+            &[r_est],
+            Some(("nodes", sn as f64)),
+        );
+        scale_rows.push(Json::obj(vec![
+            ("family", Json::str("geometric")),
+            ("n", Json::num(sn as f64)),
+            ("m", Json::num(rg.m() as f64)),
+            ("build_ms", Json::num(r_build * 1e3)),
+            ("est_ms", Json::num(r_est * 1e3)),
+            ("est_nodes_per_s", Json::num(sn as f64 / r_est)),
+            ("lower", Json::num(fin(re.lower))),
+            ("upper", Json::num(fin(re.upper))),
+            ("gap_pct", Json::num(re.gap_pct())),
+            ("sweeps", Json::num(re.sweeps as f64)),
+        ]));
+    }
+
     // --- Parallel construction. -----------------------------------------
     for m in [1usize, 8, 32] {
         let mut prng = Rng::new(3);
@@ -580,6 +656,7 @@ fn main() -> anyhow::Result<()> {
         ("sharded", sharded_json),
         ("net", net_json),
         ("obs", obs_json),
+        ("scale", Json::arr(scale_rows)),
     ]);
     std::fs::write("BENCH_hotpath.json", out.to_string())?;
     println!("wrote BENCH_hotpath.json (threads={threads} quick={quick})");

@@ -12,8 +12,9 @@
 //!
 //! The gated metrics are *throughputs* (higher is better), chosen for
 //! stability in quick mode: scenario-engine periods/s (both evaluation
-//! strategies), batched diameter-eval throughput, GA evaluations/s and
-//! the sim-transport frame rate.
+//! strategies), batched diameter-eval throughput, GA evaluations/s,
+//! the sim-transport frame rate, the observability overhead ratio and
+//! the 10^5-node scale-tier estimation throughputs.
 
 use anyhow::{Context, Result};
 
@@ -66,7 +67,29 @@ fn obs_overhead_ratio(root: &Json) -> Result<f64> {
     root.get("obs")?.get("enabled_over_disabled_ratio")?.as_f64()
 }
 
-const METRICS: [MetricDef; 6] = [
+fn scale_nodes_per_s(root: &Json, family: &str) -> Result<f64> {
+    // The 10^5 row of the requested family — the largest tier is the
+    // one whose regression matters.
+    let rows = root.get("scale")?.as_arr()?;
+    for row in rows {
+        if row.get("family")?.as_str()? == family
+            && row.get("n")?.as_f64()? == 100_000.0
+        {
+            return row.get("est_nodes_per_s")?.as_f64();
+        }
+    }
+    anyhow::bail!("no 1e5 {family} row in the scale table")
+}
+
+fn scale_circulant(root: &Json) -> Result<f64> {
+    scale_nodes_per_s(root, "circulant")
+}
+
+fn scale_geometric(root: &Json) -> Result<f64> {
+    scale_nodes_per_s(root, "geometric")
+}
+
+const METRICS: [MetricDef; 8] = [
     MetricDef {
         name: "scenario_incremental_periods_per_s",
         read: scenario_incremental,
@@ -90,6 +113,14 @@ const METRICS: [MetricDef; 6] = [
     MetricDef {
         name: "obs_enabled_over_disabled",
         read: obs_overhead_ratio,
+    },
+    MetricDef {
+        name: "scale_circulant_1e5_nodes_per_s",
+        read: scale_circulant,
+    },
+    MetricDef {
+        name: "scale_geometric_1e5_nodes_per_s",
+        read: scale_geometric,
     },
 ];
 
@@ -245,6 +276,27 @@ mod tests {
                     Json::num(scale),
                 )]),
             ),
+            (
+                "scale",
+                Json::arr(vec![
+                    Json::obj(vec![
+                        ("family", Json::str("circulant")),
+                        ("n", Json::num(100_000.0)),
+                        (
+                            "est_nodes_per_s",
+                            Json::num(250_000.0 * scale),
+                        ),
+                    ]),
+                    Json::obj(vec![
+                        ("family", Json::str("geometric")),
+                        ("n", Json::num(100_000.0)),
+                        (
+                            "est_nodes_per_s",
+                            Json::num(150_000.0 * scale),
+                        ),
+                    ]),
+                ]),
+            ),
         ])
     }
 
@@ -277,7 +329,7 @@ mod tests {
         let out =
             compare(&parsed, &report(1.0), DEFAULT_TOLERANCE).unwrap();
         assert!(out.passed());
-        assert_eq!(out.rows.len(), 6);
+        assert_eq!(out.rows.len(), 8);
         for r in out.rows {
             assert!((r.ratio - 1.0).abs() < 1e-9, "{}: {}", r.name, r.ratio);
         }

@@ -45,8 +45,8 @@ use crate::coordinator::CoordinatorReport;
 use crate::dgro::parallel::partition;
 use crate::dgro::select::{decide, materialize, RingChoice, SelectConfig};
 use crate::gossip::measure::{measure, MeasureConfig};
-use crate::graph::eval::EvalPool;
-use crate::graph::Graph;
+use crate::graph::eval::{CertifyConfig, DiameterEst, EvalPool};
+use crate::graph::{diameter, Graph};
 use crate::latency::LatencyMatrix;
 use crate::membership::events::{EventTrace, MembershipEvent};
 use crate::membership::list::{MemberState, MembershipList};
@@ -69,15 +69,22 @@ pub struct ShardedConfig {
     /// re-anchoring (1 = pure lowest-latency stitching, no
     /// certified-diameter refinement).
     pub anchor_candidates: usize,
+    /// Certification policy for the reported overlay/alive diameters
+    /// and the re-anchoring refinement. Ring-swap decisions never
+    /// consult a diameter, so every mode produces identical swap
+    /// sequences — only the reported values (and their cost) differ.
+    pub certify: CertifyConfig,
 }
 
 impl ShardedConfig {
-    /// K shards, serial, with the default refinement budget.
+    /// K shards, serial, with the default refinement budget and exact
+    /// certification.
     pub fn new(shards: usize) -> ShardedConfig {
         ShardedConfig {
             shards,
             threads: 1,
             anchor_candidates: 3,
+            certify: CertifyConfig::exact(),
         }
     }
 }
@@ -249,6 +256,9 @@ impl ShardedCoordinator {
         }
         if opts.shards == 0 {
             bail!("shards must be >= 1");
+        }
+        if let Err(e) = opts.certify.validate() {
+            bail!("{e}");
         }
         if cfg.nodes / opts.shards < 3 {
             bail!(
@@ -508,9 +518,11 @@ impl ShardedCoordinator {
     /// overlay never strands a partition. When
     /// [`ShardedConfig::anchor_candidates`] > 1, one coordinate-descent
     /// pass then re-picks each anchor among its candidates to minimize
-    /// the certified alive-overlay diameter
-    /// ([`EvalPool::diameter_with_seeds`], warm-started from the
-    /// previous evaluation's landmarks).
+    /// the certified alive-overlay diameter, warm-started from the
+    /// previous evaluation's landmarks
+    /// ([`EvalPool::diameter_with_seeds`] when certifying exactly,
+    /// the budgeted [`EvalPool::diameter_est`] upper envelope
+    /// otherwise).
     ///
     /// Staleness is per shard: only boundaries incident to a shard that
     /// saw a membership change or ring swap since the last stitch are
@@ -603,10 +615,24 @@ impl ShardedCoordinator {
                     anchors[bi] = cand;
                     let mut g = base.clone();
                     self.add_alive_anchors(&mut g, &anchors, &alive);
-                    let (d, lm) = self
-                        .pool
-                        .diameter_with_seeds(&g, &self.alive_landmarks);
-                    self.alive_landmarks = lm;
+                    // Candidate ranking is a relative comparison, so
+                    // the non-exact modes rank by the budgeted upper
+                    // envelope instead of converging every trial.
+                    let d = if self.opts.certify.is_exact() {
+                        let (d, lm) = self
+                            .pool
+                            .diameter_with_seeds(&g, &self.alive_landmarks);
+                        self.alive_landmarks = lm;
+                        d
+                    } else {
+                        let est = self.pool.diameter_est(
+                            &g,
+                            &self.alive_landmarks,
+                            self.opts.certify.budget,
+                        );
+                        self.alive_landmarks = est.landmarks;
+                        est.upper
+                    };
                     if d < best.0 {
                         best = (d, cand);
                     }
@@ -694,30 +720,91 @@ impl ShardedCoordinator {
         self.run_dynamic(trace, horizon, |_| None)
     }
 
+    /// Certified diameter of `g` under [`ShardedConfig::certify`],
+    /// warm-starting from (and refreshing) the landmark cache selected
+    /// by `alive`. Exact mode converges the bounding algorithm;
+    /// sketch/hybrid spend `certify.budget` sweeps and report the
+    /// certified upper envelope, with hybrid additionally pinning the
+    /// interval against the exact oracle on every
+    /// [`CertifyConfig::oracle_period`] evaluation `idx` (and
+    /// reporting the exact value there).
+    fn certified_diameter(
+        &mut self,
+        g: &Graph,
+        alive: bool,
+        idx: u64,
+    ) -> Result<f32> {
+        let cert = self.opts.certify;
+        if cert.is_exact() {
+            let (d, lm) = if alive {
+                self.pool.diameter_with_seeds(g, &self.alive_landmarks)
+            } else {
+                self.pool.diameter_with_seeds(g, &self.full_landmarks)
+            };
+            if alive {
+                self.alive_landmarks = lm;
+            } else {
+                self.full_landmarks = lm;
+            }
+            return Ok(d);
+        }
+        let est = if alive {
+            self.pool.diameter_est(g, &self.alive_landmarks, cert.budget)
+        } else {
+            self.pool.diameter_est(g, &self.full_landmarks, cert.budget)
+        };
+        let DiameterEst { lower, upper, landmarks, .. } = est;
+        if alive {
+            self.alive_landmarks = landmarks;
+        } else {
+            self.full_landmarks = landmarks;
+        }
+        self.metrics.observe("eval.est_lower", f64::from(lower));
+        self.metrics.observe("eval.est_upper", f64::from(upper));
+        if cert.oracle_period(idx) {
+            self.metrics.incr("eval.oracle_checks", 1);
+            let exact = diameter::diameter(g);
+            let tol = 1e-3 * exact.max(1.0);
+            if lower > exact + tol || exact > upper + tol {
+                bail!(
+                    "hybrid oracle at evaluation {idx}: exact {exact} \
+                     outside certified [{lower}, {upper}]"
+                );
+            }
+            return Ok(exact);
+        }
+        Ok(upper)
+    }
+
     /// Run with a time-varying latency view — the scenario-engine entry
     /// point, interface-compatible with
     /// [`Coordinator::run_dynamic`](super::Coordinator::run_dynamic):
     /// per period the metrics registry records `overlay.diameter`,
     /// `overlay.rho` (mean of the partition-local ρ's), `overlay.alive`,
     /// `overlay.alive_diameter`, `rings.swaps_per_period` and
-    /// `shard.anchor_links`. Reported diameters are *certified* — the
+    /// `shard.anchor_links`. Reported diameters follow
+    /// [`ShardedConfig::certify`]: exact mode converges the
     /// warm-started bounding algorithm of
-    /// [`EvalPool::diameter_with_seeds`], exact within its ~1e-6
-    /// certification tolerance.
+    /// [`EvalPool::diameter_with_seeds`] (~1e-6 certification
+    /// tolerance); sketch reports the budgeted certified upper
+    /// envelope; hybrid additionally pins the interval against the
+    /// exact oracle every `oracle_every`-th evaluation. Ring-swap
+    /// decisions never consult a diameter, so all modes produce
+    /// identical swap sequences.
     pub fn run_dynamic(
         &mut self,
         trace: &EventTrace,
         horizon: f64,
         mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
     ) -> Result<CoordinatorReport> {
-        let (d0, lm0) =
-            self.pool.diameter_with_seeds(&self.overlay(), &[]);
-        self.full_landmarks = lm0;
-        let initial_diameter = d0;
+        let g0 = self.overlay();
+        let initial_diameter = self.certified_diameter(&g0, false, 0)?;
+        drop(g0);
         let mut timeline = Vec::new();
         let mut total_swaps = 0u64;
         let mut t = 0.0;
         let mut ev_idx = 0;
+        let mut eval_idx = 1u64;
         let mut alive_d = 0.0f64;
         let mut alive_d_fresh = false;
         while t < horizon {
@@ -741,10 +828,9 @@ impl ShardedCoordinator {
                 self.re_anchor();
                 alive_d_fresh = false;
             }
-            let (d, lm) = self
-                .pool
-                .diameter_with_seeds(&self.overlay(), &self.full_landmarks);
-            self.full_landmarks = lm;
+            let g_full = self.overlay();
+            let d = self.certified_diameter(&g_full, false, eval_idx)?;
+            drop(g_full);
             self.metrics.observe("overlay.diameter", d as f64);
             self.metrics.observe("overlay.rho", rho);
             let alive_cnt = self.alive_count();
@@ -753,12 +839,10 @@ impl ShardedCoordinator {
             if alive_cnt == self.len() {
                 alive_d = d as f64;
             } else if !alive_d_fresh {
-                let (ad, alm) = self.pool.diameter_with_seeds(
-                    &self.alive_overlay(),
-                    &self.alive_landmarks,
+                let g_alive = self.alive_overlay();
+                alive_d = f64::from(
+                    self.certified_diameter(&g_alive, true, eval_idx)?,
                 );
-                self.alive_landmarks = alm;
-                alive_d = ad as f64;
             }
             alive_d_fresh = true;
             self.metrics.observe("overlay.alive", alive_cnt as f64);
@@ -769,6 +853,7 @@ impl ShardedCoordinator {
                 .observe("shard.anchor_links", self.anchors.len() as f64);
             self.metrics.incr("membership.events_applied", applied);
             timeline.push((t, rho, d));
+            eval_idx += 1;
         }
         Ok(CoordinatorReport {
             final_diameter: timeline

@@ -117,8 +117,23 @@ pub struct Csr {
 
 impl Csr {
     /// Build the CSR from an adjacency-list graph.
+    ///
+    /// Node ids and edge offsets are `u32` end-to-end — the compact
+    /// layout that keeps a 10^6-node overlay's evaluation state in RAM
+    /// (12 bytes per directed edge, 4 per node). Panics if `n` or the
+    /// directed edge count exceeds `u32::MAX`; every evaluation path
+    /// funnels through here, so the guard is checked exactly once.
     pub fn build(g: &Graph) -> Csr {
         let n = g.n();
+        assert!(
+            u32::try_from(n).is_ok(),
+            "CSR node ids are u32: graph has {n} nodes"
+        );
+        assert!(
+            u32::try_from(2 * g.m()).is_ok(),
+            "CSR offsets are u32: graph has {} undirected edges",
+            g.m()
+        );
         let mut offsets = Vec::with_capacity(n + 1);
         let mut targets = Vec::with_capacity(2 * g.m());
         let mut weights = Vec::with_capacity(2 * g.m());
@@ -135,6 +150,15 @@ impl Csr {
             targets,
             weights,
         }
+    }
+
+    /// Resident size of the flattened arrays in bytes — the dominant
+    /// term of the evaluation memory model (docs/SCENARIOS.md §Scaling
+    /// & certification); folded into `eval.peak_scratch_bytes`.
+    pub fn bytes(&self) -> usize {
+        4 * self.offsets.len()
+            + 4 * self.targets.len()
+            + 4 * self.weights.len()
     }
 
     #[inline]

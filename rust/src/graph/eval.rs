@@ -18,6 +18,10 @@
 //!     each round's SSSP sweeps run in parallel, optionally warm-started
 //!     from landmark nodes (the scenario engine feeds the previous
 //!     period's certifying sources back in).
+//!   * [`EvalPool::diameter_est`] — the same bounding sweep stopped at a
+//!     landmark budget: a certified `[lower, upper]` diameter interval
+//!     for overlays too large to certify exactly every period (the
+//!     `--certify hybrid|sketch` scale tier, docs/SCENARIOS.md).
 //!   * [`EvalPool::diameter_batch`] — a whole candidate population
 //!     evaluated concurrently, one graph per task, via
 //!     [`crate::par::scoped_map`].
@@ -26,13 +30,17 @@
 //! bit-identical to their serial counterparts (same per-task algorithm;
 //! threads only partition independent work). The bounding diameter's
 //! sweep *schedule* is fixed at [`ROUND_WIDTH`] sources per round
-//! regardless of pool width, so its certified value is bit-identical
-//! across thread counts and machines — `threads` only bounds how many
-//! of a round's sweeps run concurrently — and agrees with the serial
-//! `diameter()` within the certification tolerance (~1e-6 of the
-//! scale). `rust/tests/proptests.rs` pins all of this across thread
-//! counts {1, 2, 8}, and `rust/benches/hotpath.rs` records the
-//! serial-vs-parallel trajectory in `BENCH_hotpath.json`.
+//! regardless of pool width, so its certified value — and the budgeted
+//! estimator's `[lower, upper]` interval — is bit-identical across
+//! thread counts and machines; `threads` only bounds how many of a
+//! round's sweeps run concurrently. The exact value agrees with the
+//! serial `diameter()` within the certification tolerance (~1e-6 of
+//! the scale), and the interval always brackets it: `lower` is a
+//! realized eccentricity, `upper` dominates every member's eccentricity
+//! bound. `rust/tests/proptests.rs` pins all of this across thread
+//! counts {1, 2, 8} and landmark budgets {4, 16, 64}, and
+//! `rust/benches/hotpath.rs` records the serial-vs-parallel and
+//! scale-tier trajectories in `BENCH_hotpath.json`.
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -59,6 +67,128 @@ pub const MAX_LANDMARKS: usize = 4;
 /// serial one-at-a-time heuristic.
 pub const ROUND_WIDTH: usize = 4;
 
+/// How scenario-period diameters are certified (`--certify`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CertifyMode {
+    /// Run the Takes–Kosters sweep to convergence every evaluation —
+    /// the reported diameter is exact (the pre-scale-tier behavior).
+    Exact,
+    /// Budgeted estimates every evaluation, plus the exact oracle on
+    /// every k-th one; the oracle value is reported on those periods
+    /// and must land inside the estimator's `[lower, upper]` interval.
+    Hybrid,
+    /// Budgeted estimates only: report the certified upper bound and
+    /// never pay for convergence (the 10^5+-node tier).
+    Sketch,
+}
+
+impl CertifyMode {
+    /// Parse a `--certify` value.
+    pub fn parse(s: &str) -> Option<CertifyMode> {
+        match s {
+            "exact" => Some(CertifyMode::Exact),
+            "hybrid" => Some(CertifyMode::Hybrid),
+            "sketch" => Some(CertifyMode::Sketch),
+            _ => None,
+        }
+    }
+
+    /// The CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CertifyMode::Exact => "exact",
+            CertifyMode::Hybrid => "hybrid",
+            CertifyMode::Sketch => "sketch",
+        }
+    }
+}
+
+/// Certification policy: mode plus the estimator knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CertifyConfig {
+    /// Exact, hybrid or sketch (see [`CertifyMode`]).
+    pub mode: CertifyMode,
+    /// Landmark budget: SSSP sweeps per estimate (`--landmarks`).
+    pub budget: usize,
+    /// Hybrid cadence: run the exact oracle on every k-th evaluation
+    /// (`--oracle-every`). Ignored by exact and sketch modes.
+    pub oracle_every: usize,
+}
+
+impl CertifyConfig {
+    /// The default exact policy (estimator knobs at their defaults so
+    /// switching just the mode behaves sensibly).
+    pub fn exact() -> CertifyConfig {
+        CertifyConfig {
+            mode: CertifyMode::Exact,
+            budget: 16,
+            oracle_every: 8,
+        }
+    }
+
+    /// True when every evaluation runs to convergence.
+    pub fn is_exact(&self) -> bool {
+        self.mode == CertifyMode::Exact
+    }
+
+    /// Whether evaluation number `idx` (0-based) is a hybrid oracle
+    /// period: exact certification plus a bracket check.
+    pub fn oracle_period(&self, idx: u64) -> bool {
+        self.mode == CertifyMode::Hybrid
+            && idx % self.oracle_every.max(1) as u64 == 0
+    }
+
+    /// Reject nonsensical knob values before a run starts.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.budget == 0 {
+            return Err("--landmarks must be >= 1".into());
+        }
+        if self.oracle_every == 0 {
+            return Err("--oracle-every must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for CertifyConfig {
+    fn default() -> CertifyConfig {
+        CertifyConfig::exact()
+    }
+}
+
+/// A certified diameter interval from a budgeted bounding sweep.
+///
+/// Invariant (pinned by rust/tests/proptests.rs): the exact diameter
+/// `D` of the largest component satisfies `lower <= D <= upper`.
+/// `lower` is the largest realized lower bound, `upper` the largest
+/// surviving per-member eccentricity upper bound; both are pure
+/// functions of `(graph, seeds, budget)` — thread-count invariant.
+#[derive(Clone, Debug)]
+pub struct DiameterEst {
+    /// Certified lower bound (a realized eccentricity; exact mode
+    /// converges to the diameter itself).
+    pub lower: f32,
+    /// Certified upper bound (max member eccentricity bound; collapses
+    /// to `lower` within ~1e-6 once the sweep converges).
+    pub upper: f32,
+    /// Up to [`MAX_LANDMARKS`] swept sources with the largest
+    /// eccentricities — the next call's warm-start seeds.
+    pub landmarks: Vec<u32>,
+    /// SSSP sources actually swept (<= the requested budget).
+    pub sweeps: usize,
+}
+
+impl DiameterEst {
+    /// `upper - lower` as a percentage of `upper` (0 when converged or
+    /// the graph is degenerate) — the `eval.est_gap_pct` metric.
+    pub fn gap_pct(&self) -> f64 {
+        if self.upper <= 0.0 || !self.upper.is_finite() {
+            return 0.0;
+        }
+        100.0 * f64::from(self.upper - self.lower) / f64::from(self.upper)
+    }
+}
+
 /// Reusable per-worker Dijkstra state (checked out of [`EvalPool`] for
 /// the duration of one worker's run, returned afterwards).
 #[derive(Default)]
@@ -66,14 +196,53 @@ struct DijkstraScratch {
     heap: BinaryHeap<std::cmp::Reverse<u64>>,
 }
 
+/// Arena for one bounding-diameter run: the per-round distance block
+/// and the per-node bound arrays. Checked out per call and returned,
+/// so a pool evaluating a slowly-changing overlay sizes these once per
+/// epoch instead of reallocating ~(ROUND_WIDTH + 2) * n floats every
+/// period.
+#[derive(Default)]
+struct EvalArena {
+    batch_dist: Vec<f32>,
+    ecc_lo: Vec<f32>,
+    ecc_hi: Vec<f32>,
+    member_mask: Vec<bool>,
+}
+
+impl EvalArena {
+    /// Resize for an n-node graph and a `width`-sweep round, resetting
+    /// values. Capacity is retained across calls (the arena reuse).
+    fn reset(&mut self, n: usize, width: usize) {
+        self.batch_dist.clear();
+        self.batch_dist.resize(width * n, INF);
+        self.ecc_lo.clear();
+        self.ecc_lo.resize(n, 0.0);
+        self.ecc_hi.clear();
+        self.ecc_hi.resize(n, f32::INFINITY);
+        self.member_mask.clear();
+        self.member_mask.resize(n, false);
+    }
+
+    /// Logical footprint in bytes for the current (n, width) — a pure
+    /// function of the sizing, so `eval.peak_scratch_bytes` stays
+    /// deterministic across runs and thread counts.
+    fn bytes(&self) -> usize {
+        4 * self.batch_dist.len()
+            + 4 * self.ecc_lo.len()
+            + 4 * self.ecc_hi.len()
+            + self.member_mask.len()
+    }
+}
+
 /// A fixed-width evaluation pool: `threads` workers, recycled scratch.
 ///
 /// The pool itself is cheap (no OS threads are parked; workers are
 /// scoped per call) — construct one near the work loop and reuse it so
-/// the scratch heaps stay warm.
+/// the scratch heaps and bound arenas stay warm.
 pub struct EvalPool {
     threads: usize,
     scratch: Mutex<Vec<DijkstraScratch>>,
+    arena: Mutex<Vec<EvalArena>>,
     /// `eval.sweeps` registry counter (None until
     /// [`EvalPool::attach_obs`]): SSSP sources processed by the
     /// bounding algorithm.
@@ -81,6 +250,13 @@ pub struct EvalPool {
     /// `eval.warm_hits` registry counter: warm-start landmarks that
     /// were still live candidates when their round started.
     obs_warm_hits: Option<Arc<AtomicU64>>,
+    /// `eval.peak_scratch_bytes` registry counter: high-water mark of
+    /// CSR + arena bytes across evaluations (monotone max).
+    obs_peak_scratch: Option<Arc<AtomicU64>>,
+    /// `eval.est_gap_pct` registry histogram: estimator interval width
+    /// as a percentage of the upper bound, one sample per
+    /// [`EvalPool::diameter_est`] call.
+    obs_est_gap: Option<Arc<crate::obs::registry::Histogram>>,
 }
 
 impl EvalPool {
@@ -89,19 +265,28 @@ impl EvalPool {
         EvalPool {
             threads: threads.max(1),
             scratch: Mutex::new(Vec::new()),
+            arena: Mutex::new(Vec::new()),
             obs_sweeps: None,
             obs_warm_hits: None,
+            obs_peak_scratch: None,
+            obs_est_gap: None,
         }
     }
 
     /// Route sweep accounting into `obs`: `eval.sweeps` counts every
-    /// SSSP source the bounding algorithm processes,
-    /// `eval.warm_hits` counts warm-start landmarks that paid off
-    /// (their hit rate is the warm-start efficiency). Counters are
-    /// atomic, so attached pools stay shareable across workers.
+    /// SSSP source the bounding algorithm processes, `eval.warm_hits`
+    /// counts warm-start landmarks that paid off (their hit rate is
+    /// the warm-start efficiency), `eval.peak_scratch_bytes` tracks
+    /// the evaluation-state high-water mark (CSR + bound arena), and
+    /// `eval.est_gap_pct` histograms the estimator's certified
+    /// interval width. Counters are atomic, so attached pools stay
+    /// shareable across workers.
     pub fn attach_obs(&mut self, obs: &crate::obs::Obs) {
         self.obs_sweeps = Some(obs.reg.counter("eval.sweeps"));
         self.obs_warm_hits = Some(obs.reg.counter("eval.warm_hits"));
+        self.obs_peak_scratch =
+            Some(obs.reg.counter("eval.peak_scratch_bytes"));
+        self.obs_est_gap = Some(obs.reg.histogram("eval.est_gap_pct"));
     }
 
     /// One worker: bit-for-bit the serial algorithms, same scratch reuse.
@@ -127,6 +312,14 @@ impl EvalPool {
 
     fn checkin(&self, s: DijkstraScratch) {
         self.scratch.lock().unwrap().push(s);
+    }
+
+    fn checkout_arena(&self) -> EvalArena {
+        self.arena.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn checkin_arena(&self, a: EvalArena) {
+        self.arena.lock().unwrap().push(a);
     }
 
     /// All-pairs shortest paths, sources striped across the pool.
@@ -192,23 +385,72 @@ impl EvalPool {
         g: &Graph,
         seeds: &[u32],
     ) -> (f32, Vec<u32>) {
+        let est = self.bound_diameter(g, seeds, usize::MAX);
+        (est.lower, est.landmarks)
+    }
+
+    /// Certified diameter interval under a landmark budget: the same
+    /// bounding sweep as [`EvalPool::diameter_with_seeds`], stopped
+    /// after at most `budget` SSSP sources (clamped to ≥ 1). The exact
+    /// diameter always lies in `[lower, upper]`; with a large enough
+    /// budget the interval collapses (within ~1e-6) and the call IS
+    /// the exact certification. Cost is `O(budget * (n + m) log n)`
+    /// regardless of how slowly the exact sweep would converge — the
+    /// knob that makes 10^5–10^6-node evaluation affordable.
+    pub fn diameter_est(
+        &self,
+        g: &Graph,
+        seeds: &[u32],
+        budget: usize,
+    ) -> DiameterEst {
+        let est = self.bound_diameter(g, seeds, budget.max(1));
+        if let Some(h) = &self.obs_est_gap {
+            h.observe(est.gap_pct());
+        }
+        est
+    }
+
+    /// The bounding sweep. `budget` caps how many SSSP sources are
+    /// processed (`usize::MAX` = run to convergence). The schedule is
+    /// a pure function of `(graph, seeds, budget)`.
+    fn bound_diameter(
+        &self,
+        g: &Graph,
+        seeds: &[u32],
+        budget: usize,
+    ) -> DiameterEst {
         let n = g.n();
+        let degenerate = DiameterEst {
+            lower: 0.0,
+            upper: 0.0,
+            landmarks: Vec::new(),
+            sweeps: 0,
+        };
         if n == 0 || g.m() == 0 {
-            return (0.0, Vec::new());
+            return degenerate;
         }
         let members = components::largest(&components::components(g));
         if members.len() < 2 {
-            return (0.0, Vec::new());
+            return degenerate;
         }
 
         let csr = Csr::build(g);
         // The schedule width is fixed (see [`ROUND_WIDTH`]); the pool
         // width only decides how many sweeps run concurrently.
         let width = ROUND_WIDTH.min(members.len()).max(1);
-        // One distance row per in-flight sweep, reused every round.
-        let mut batch_dist = vec![INF; width * n];
+        let mut ar = self.checkout_arena();
+        ar.reset(n, width);
+        if let Some(c) = &self.obs_peak_scratch {
+            let bytes = (csr.bytes() + ar.bytes()) as u64;
+            c.fetch_max(bytes, Ordering::Relaxed);
+        }
+        let EvalArena {
+            batch_dist,
+            ecc_lo,
+            ecc_hi,
+            member_mask,
+        } = &mut ar;
 
-        let mut member_mask = vec![false; n];
         for &u in &members {
             member_mask[u as usize] = true;
         }
@@ -224,19 +466,19 @@ impl EvalPool {
         }
         seed_queue.reverse(); // consumed by pop() in caller order
 
-        let mut ecc_lo = vec![0.0f32; n];
-        let mut ecc_hi = vec![f32::INFINITY; n];
         let mut cand: Vec<u32> = members.clone();
         let mut lb = 0.0f32;
         let mut pick_hi = true;
         // (source, exact eccentricity) of every processed sweep.
         let mut processed: Vec<(u32, f32)> = Vec::new();
 
-        while !cand.is_empty() {
+        while !cand.is_empty() && processed.len() < budget {
             // Assemble the round: landmarks first, then the serial
-            // algorithm's alternating max-upper / max-lower picks.
-            let mut batch: Vec<u32> = Vec::with_capacity(width);
-            while batch.len() < width {
+            // algorithm's alternating max-upper / max-lower picks. The
+            // budget clamps the final round, never reorders it.
+            let round = width.min(budget - processed.len());
+            let mut batch: Vec<u32> = Vec::with_capacity(round);
+            while batch.len() < round {
                 let src = if let Some(s) = seed_queue.pop() {
                     match cand.iter().position(|&u| u == s) {
                         Some(i) => {
@@ -329,6 +571,10 @@ impl EvalPool {
                 if ecc_v > lb {
                     lb = ecc_v;
                 }
+                // The swept source's eccentricity is exact; pin its
+                // bounds so the upper envelope below sees it.
+                ecc_lo[v as usize] = ecc_v;
+                ecc_hi[v as usize] = ecc_v;
                 processed.push((v, ecc_v));
                 cand.retain(|&u| {
                     let u = u as usize;
@@ -351,10 +597,31 @@ impl EvalPool {
             }
         }
 
+        // Certified upper envelope: every member's eccentricity is
+        // dominated by its `ecc_hi` (exact for swept sources), so the
+        // max over members dominates the diameter. At convergence
+        // every non-swept member was pruned at `<= lb + 1e-6`, so the
+        // interval collapses.
+        let mut ub = lb;
+        for &u in &members {
+            let hi = ecc_hi[u as usize];
+            if hi > ub {
+                ub = hi;
+            }
+        }
+        let sweeps = processed.len();
+
         // Keep the far-out sources as next-call landmarks.
         processed.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         processed.truncate(MAX_LANDMARKS);
-        (lb, processed.into_iter().map(|(v, _)| v).collect())
+        let landmarks = processed.into_iter().map(|(v, _)| v).collect();
+        self.checkin_arena(ar);
+        DiameterEst {
+            lower: lb,
+            upper: ub,
+            landmarks,
+            sweeps,
+        }
     }
 
     /// Diameter of every graph in a candidate population, one task per
@@ -433,6 +700,75 @@ mod tests {
     }
 
     #[test]
+    fn diameter_est_brackets_and_converges() {
+        for trial in 0..4 {
+            let n = 24 + 17 * trial;
+            let g = overlay(n, 0xE57 + trial as u64);
+            let exact = diameter::diameter(&g);
+            let pool = EvalPool::new(4);
+            let mut prev_gap = f32::INFINITY;
+            for budget in [1, 4, 16, 4096] {
+                let est = pool.diameter_est(&g, &[], budget);
+                assert!(
+                    est.lower <= exact + 1e-3 * exact.max(1.0)
+                        && exact <= est.upper + 1e-3 * exact.max(1.0),
+                    "n={n} budget={budget}: [{}, {}] vs {exact}",
+                    est.lower,
+                    est.upper
+                );
+                assert!(est.sweeps <= budget);
+                assert!(est.lower <= est.upper);
+                // More budget never loosens the certified width by
+                // more than fp noise (the schedule prefix is shared).
+                let gap = est.upper - est.lower;
+                assert!(gap <= prev_gap + 1e-4, "budget={budget}");
+                prev_gap = gap;
+            }
+            // A generous budget converges to the exact value.
+            let est = pool.diameter_est(&g, &[], 4096);
+            assert!(est.upper - est.lower <= 1e-5);
+            assert!((est.lower - exact).abs() <= 1e-3 * exact.max(1.0));
+        }
+    }
+
+    #[test]
+    fn diameter_est_is_thread_invariant() {
+        let g = overlay(64, 0xBEEF);
+        let reference = EvalPool::new(1).diameter_est(&g, &[], 8);
+        for threads in [2, 8] {
+            let est = EvalPool::new(threads).diameter_est(&g, &[], 8);
+            assert_eq!(est.lower.to_bits(), reference.lower.to_bits());
+            assert_eq!(est.upper.to_bits(), reference.upper.to_bits());
+            assert_eq!(est.landmarks, reference.landmarks);
+            assert_eq!(est.sweeps, reference.sweeps);
+        }
+    }
+
+    #[test]
+    fn certify_config_parses_and_validates() {
+        assert_eq!(CertifyMode::parse("exact"), Some(CertifyMode::Exact));
+        assert_eq!(CertifyMode::parse("hybrid"), Some(CertifyMode::Hybrid));
+        assert_eq!(CertifyMode::parse("sketch"), Some(CertifyMode::Sketch));
+        assert_eq!(CertifyMode::parse("bogus"), None);
+        let modes =
+            [CertifyMode::Exact, CertifyMode::Hybrid, CertifyMode::Sketch];
+        for m in modes {
+            assert_eq!(CertifyMode::parse(m.name()), Some(m));
+        }
+        let mut c = CertifyConfig::exact();
+        assert!(c.validate().is_ok() && c.is_exact());
+        c.mode = CertifyMode::Hybrid;
+        c.oracle_every = 3;
+        assert!(c.oracle_period(0) && !c.oracle_period(1));
+        assert!(c.oracle_period(3) && !c.oracle_period(4));
+        c.budget = 0;
+        assert!(c.validate().is_err());
+        c.budget = 4;
+        c.oracle_every = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
     fn diameter_batch_matches_per_graph_serial() {
         let gs: Vec<Graph> =
             (0..7).map(|i| overlay(20 + i, 100 + i as u64)).collect();
@@ -454,6 +790,9 @@ mod tests {
         assert_eq!(pool.diameter_par(&edgeless), 0.0);
         assert_eq!(pool.diameter_with_seeds(&edgeless, &[1, 2]).0, 0.0);
         assert!(pool.diameter_batch(&[]).is_empty());
+        let est = pool.diameter_est(&edgeless, &[], 4);
+        assert_eq!((est.lower, est.upper), (0.0, 0.0));
+        assert_eq!(est.gap_pct(), 0.0);
         // Disconnected: largest component rules, same as serial.
         let g = Graph::from_weighted_edges(
             6,

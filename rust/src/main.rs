@@ -16,6 +16,8 @@
 //!   dgro scenario list
 //!   dgro scenario run --name flash-crowd --topology dgro --seed 7
 //!   dgro scenario run --name churn-storm --topology sharded --shards 8
+//!   dgro scenario run --name anchor-storm --topology sharded \
+//!       --certify hybrid --landmarks 16 --oracle-every 4
 //!   dgro scenario run --name anchor-storm --transport udp --seed 0
 //!   dgro scenario run --name anchor-storm --transport tcp --loss-rate 0.05
 //!   dgro scenario compare --shards 8 --out reports
@@ -311,9 +313,31 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
     )
     .flag("name", "flash-crowd", "catalog scenario (dgro scenario list)")
     .flag("spec", "", "path to a JSON ScenarioSpec (overrides --name)")
-    .flag("topology", "dgro", "dgro|sharded|chord|rapid|perigee|random")
+    .flag(
+        "topology",
+        "dgro",
+        "dgro|sharded|chord|rapid|perigee|random|circulant",
+    )
     .flag("seed", "7", "rng seed (same seed => byte-identical report)")
     .flag("period", "250", "adaptation/measurement period (sim-ms)")
+    .flag(
+        "certify",
+        "exact",
+        "diameter certification for sharded and static-baseline runs: \
+         exact|hybrid|sketch (docs/SCENARIOS.md, 'Scaling & \
+         certification')",
+    )
+    .flag(
+        "landmarks",
+        "16",
+        "sketch/hybrid: landmark sweep budget per diameter evaluation",
+    )
+    .flag(
+        "oracle-every",
+        "8",
+        "hybrid: pin the certified interval against the exact oracle \
+         every k-th evaluation",
+    )
     .flag(
         "shards",
         "0",
@@ -425,6 +449,19 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             engine.threads = threads;
             engine.incremental = !a.switch("rebuild");
             engine.shards = shards;
+            let cname = a.get("certify");
+            let mode = dgro::graph::eval::CertifyMode::parse(cname)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--certify must be exact|hybrid|sketch, \
+                         got '{cname}'"
+                    )
+                })?;
+            engine.certify = dgro::graph::eval::CertifyConfig {
+                mode,
+                budget: a.get_usize("landmarks")?,
+                oracle_every: a.get_usize("oracle-every")?,
+            };
             if !a.get("transport").is_empty() {
                 engine.transport =
                     Some(dgro::net::TransportKind::parse(a.get("transport"))?);
@@ -481,6 +518,12 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             if !a.get("obs-out").is_empty() {
                 anyhow::bail!(
                     "--obs-out applies to 'scenario run' only"
+                );
+            }
+            if a.get("certify") != "exact" {
+                anyhow::bail!(
+                    "--certify applies to 'scenario run' only; compare \
+                     always certifies exactly"
                 );
             }
             let mut topologies: Vec<scenario::Topology> =
@@ -745,9 +788,21 @@ fn cmd_obs(raw: &[String]) -> Result<()> {
             Ok(())
         }
         Some("top") => {
-            let p = obs_path(arg(1, "timeline path")?, "timeline.jsonl");
+            let root = arg(1, "timeline path")?;
+            let p = obs_path(root, "timeline.jsonl");
             let n = a.get_usize("slowest")?;
             print!("{}", dgro::obs::top_slowest(&p, n)?);
+            // Estimator health rides along whenever the sibling
+            // snapshot recorded sketch/hybrid evaluations.
+            let snap = obs_path(root, "snapshot.json");
+            let snap = if snap == p {
+                p.parent()
+                    .map(|d| d.join("snapshot.json"))
+                    .unwrap_or(snap)
+            } else {
+                snap
+            };
+            print!("{}", dgro::obs::estimator_summary(&snap)?);
             Ok(())
         }
         other => anyhow::bail!(

@@ -275,6 +275,50 @@ pub fn top_slowest(path: &Path, n: usize) -> Result<String> {
     Ok(out)
 }
 
+/// Estimator health lines for `dgro obs top`: the certified-gap
+/// histogram (`eval.est_gap_pct`) and the peak scratch footprint
+/// (`eval.peak_scratch_bytes`) from a `snapshot.json`. Returns an
+/// empty string when the snapshot is missing or records no estimator
+/// activity, so callers can append it unconditionally.
+pub fn estimator_summary(path: &Path) -> Result<String> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Ok(String::new());
+    };
+    let root = json::parse(&text)?;
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    if let Some(h) = root
+        .opt("histograms")
+        .and_then(|hs| hs.opt("eval.est_gap_pct"))
+    {
+        let count = h.get("count")?.as_f64()?;
+        if count > 0.0 {
+            let mean = h.get("sum")?.as_f64()? / count;
+            let _ = writeln!(
+                out,
+                "estimator gap: n={} mean={mean:.2}% max={:.2}% \
+                 (upper-lower as % of upper)",
+                count as u64,
+                h.get("max")?.as_f64()?
+            );
+        }
+    }
+    if let Some(c) = root
+        .opt("counters")
+        .and_then(|cs| cs.opt("eval.peak_scratch_bytes"))
+    {
+        let bytes = c.as_f64()?;
+        if bytes > 0.0 {
+            let _ = writeln!(
+                out,
+                "estimator peak scratch: {:.2} MiB",
+                bytes / (1024.0 * 1024.0)
+            );
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,6 +372,32 @@ mod tests {
         .unwrap();
         assert!(diff.contains("gossip.messages"));
         assert!(diff.contains("12 -> 15"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn estimator_summary_reads_snapshot_or_stays_silent() {
+        let obs = Obs::new();
+        obs.reg.histogram("eval.est_gap_pct").observe(4.0);
+        obs.reg.histogram("eval.est_gap_pct").observe(8.0);
+        let c = obs.reg.counter("eval.peak_scratch_bytes");
+        c.fetch_max(3 << 20, std::sync::atomic::Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "dgro-obs-est-{}",
+            std::process::id()
+        ));
+        obs.write_dir(&dir, true).unwrap();
+        let s = estimator_summary(&dir.join("snapshot.json")).unwrap();
+        assert!(s.contains("n=2 mean=6.00% max=8.00%"), "{s}");
+        assert!(s.contains("peak scratch: 3.00 MiB"), "{s}");
+        // Missing files and estimator-free snapshots render nothing.
+        assert!(estimator_summary(&dir.join("no.json")).unwrap().is_empty());
+        let quiet = Obs::new();
+        quiet.reg.incr("gossip.messages", 1);
+        let dir2 = dir.join("b");
+        quiet.write_dir(&dir2, true).unwrap();
+        let s2 = estimator_summary(&dir2.join("snapshot.json")).unwrap();
+        assert!(s2.is_empty(), "{s2}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

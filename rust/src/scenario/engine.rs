@@ -35,7 +35,7 @@ use anyhow::{bail, Result};
 use crate::config::Config;
 use crate::coordinator::{Coordinator, ShardedConfig, ShardedCoordinator};
 use crate::gossip::measure::{measure, MeasureConfig};
-use crate::graph::eval::EvalPool;
+use crate::graph::eval::{CertifyConfig, EvalPool};
 use crate::graph::{diameter, Graph};
 use crate::latency::Model;
 use crate::membership::list::{MemberState, MembershipList};
@@ -48,7 +48,8 @@ use crate::obs::Obs;
 use crate::scenario::dynamics::DynamicLatency;
 use crate::scenario::spec::ScenarioSpec;
 use crate::topology::{
-    chord::Chord, kring, paper_k, perigee, random_ring, rapid::Rapid,
+    chord::Chord, circulant::Circulant, kring, paper_k, perigee,
+    random_ring, rapid::Rapid,
 };
 use crate::util::rng::Rng;
 
@@ -70,17 +71,22 @@ pub enum Topology {
     Perigee,
     /// Static K random rings (consistent hashing).
     RandomKRing,
+    /// Power-of-two circulant C_n({1, 2, 4, …}): the closed-form
+    /// low-diameter construction (Huang et al., arXiv:2201.01342) —
+    /// the scale tier's known-diameter reference baseline.
+    Circulant,
 }
 
 impl Topology {
     /// The default comparison panel (the sharded coordinator is opt-in
     /// via `--shards`, so it is not part of the panel).
-    pub const ALL: [Topology; 5] = [
+    pub const ALL: [Topology; 6] = [
         Topology::Dgro,
         Topology::Chord,
         Topology::Rapid,
         Topology::Perigee,
         Topology::RandomKRing,
+        Topology::Circulant,
     ];
 
     /// Parse a CLI topology name.
@@ -92,9 +98,10 @@ impl Topology {
             "rapid" => Ok(Topology::Rapid),
             "perigee" => Ok(Topology::Perigee),
             "random" | "kring" => Ok(Topology::RandomKRing),
+            "circulant" => Ok(Topology::Circulant),
             other => bail!(
                 "unknown topology '{other}' \
-                 (dgro|sharded|chord|rapid|perigee|random)"
+                 (dgro|sharded|chord|rapid|perigee|random|circulant)"
             ),
         }
     }
@@ -108,6 +115,7 @@ impl Topology {
             Topology::Rapid => "rapid",
             Topology::Perigee => "perigee",
             Topology::RandomKRing => "random",
+            Topology::Circulant => "circulant",
         }
     }
 }
@@ -295,6 +303,14 @@ pub struct ScenarioEngine {
     /// it). Registry counters are always on; span recording is the
     /// only opt-in part. Never changes reported values.
     pub obs_record: bool,
+    /// How per-period diameters are certified (`--certify`,
+    /// `--landmarks`, `--oracle-every`): exact certification every
+    /// period (the default), budgeted estimates with a periodic exact
+    /// oracle (`hybrid`), or budgeted estimates only (`sketch`).
+    /// Applies to the static baselines and the sharded coordinator;
+    /// the centralized adaptive paths always certify exactly
+    /// (docs/SCENARIOS.md §Scaling & certification).
+    pub certify: CertifyConfig,
 }
 
 /// Shard count a [`Topology::DgroSharded`] run falls back to when
@@ -343,6 +359,7 @@ impl ScenarioEngine {
             reorder_rate: 0.0,
             churn_guard: 0,
             obs_record: false,
+            certify: CertifyConfig::exact(),
         })
     }
 
@@ -407,6 +424,17 @@ impl ScenarioEngine {
                 );
             }
         }
+        if let Err(e) = self.certify.validate() {
+            bail!("{e}");
+        }
+        if !self.certify.is_exact() && topology == Topology::Dgro {
+            bail!(
+                "--certify {} applies to sharded and static-baseline \
+                 topologies (the centralized coordinator always \
+                 certifies exactly)",
+                self.certify.mode.name()
+            );
+        }
         match topology {
             Topology::Dgro | Topology::DgroSharded => {
                 self.run_adaptive(topology)
@@ -440,6 +468,7 @@ impl ScenarioEngine {
         let (rep, metrics, obs) = if topology == Topology::DgroSharded {
             let mut opts = ShardedConfig::new(self.effective_shards());
             opts.threads = self.threads.max(1);
+            opts.certify = self.certify;
             let mut co =
                 ShardedCoordinator::with_latency(cfg, dyn_w.at(0.0), opts)?;
             if self.obs_record {
@@ -567,6 +596,9 @@ impl ScenarioEngine {
                 kring::random_krings(n, paper_k(n), &mut rng)
                     .to_graph(&w0)
             }
+            // Deterministic by construction (no RNG draw): the
+            // closed-form known-diameter reference for scale runs.
+            Topology::Circulant => Circulant::power_two(n).to_graph(&w0),
             Topology::Dgro | Topology::DgroSharded => {
                 bail!("dgro runs on the adaptive path")
             }
@@ -597,6 +629,10 @@ impl ScenarioEngine {
         let mut prev_alive: Option<HashSet<u32>> = None;
         let mut landmarks: Vec<u32> = Vec::new();
         let mut d = 0.0f64;
+        // Certification counter: hybrid's oracle cadence is indexed by
+        // *evaluation* (periods where the alive overlay moved), so a
+        // quiet stretch does not starve the oracle of fresh checks.
+        let mut eval_idx = 0u64;
         while t < self.spec.horizon {
             t += period;
             let mut latency_changed = false;
@@ -661,7 +697,40 @@ impl ScenarioEngine {
             metrics.incr("gossip.messages", stats.messages as u64);
             if alive_stale {
                 let ga = g_alive.as_ref().expect("g_alive built");
-                d = if self.incremental {
+                d = if !self.certify.is_exact() {
+                    // Budgeted certified interval; report the upper
+                    // bound (conservative) or, on hybrid oracle
+                    // periods, the exact value after checking it lies
+                    // inside the interval.
+                    let est = pool.diameter_est(
+                        ga,
+                        &landmarks,
+                        self.certify.budget,
+                    );
+                    landmarks = est.landmarks.clone();
+                    metrics
+                        .observe("eval.est_lower", f64::from(est.lower));
+                    metrics
+                        .observe("eval.est_upper", f64::from(est.upper));
+                    if self.certify.oracle_period(eval_idx) {
+                        metrics.incr("eval.oracle_checks", 1);
+                        let exact = diameter::diameter(ga);
+                        let tol = 1e-3 * exact.max(1.0);
+                        if est.lower > exact + tol
+                            || exact > est.upper + tol
+                        {
+                            bail!(
+                                "hybrid oracle at t={t}: exact {exact} \
+                                 outside certified [{}, {}]",
+                                est.lower,
+                                est.upper
+                            );
+                        }
+                        f64::from(exact)
+                    } else {
+                        f64::from(est.upper)
+                    }
+                } else if self.incremental {
                     let (dd, lm) =
                         pool.diameter_with_seeds(ga, &landmarks);
                     landmarks = lm;
@@ -669,6 +738,7 @@ impl ScenarioEngine {
                 } else {
                     diameter::diameter(ga) as f64
                 };
+                eval_idx += 1;
             }
             // else: neither weights nor alive mask moved — the alive
             // sub-overlay is byte-identical, so `d` carries over.
@@ -826,5 +896,64 @@ mod tests {
         for spec in catalog() {
             ScenarioEngine::new(spec, 1).unwrap();
         }
+    }
+
+    #[test]
+    fn circulant_baseline_runs_statically() {
+        let engine = ScenarioEngine::new(tiny_spec(), 5).unwrap();
+        let rep = engine.run(Topology::Circulant).unwrap();
+        assert_eq!(rep.rows.len(), 4);
+        assert_eq!(rep.total_swaps(), 0);
+        for r in &rep.rows {
+            assert!(r.diameter.is_finite() && r.diameter > 0.0);
+        }
+        // Deterministic by construction: byte-identical re-run.
+        let again = engine.run(Topology::Circulant).unwrap();
+        assert_eq!(rep.render(), again.render());
+    }
+
+    #[test]
+    fn certify_modes_validate_and_bracket_on_the_static_path() {
+        use crate::graph::eval::CertifyMode;
+        let mut engine = ScenarioEngine::new(tiny_spec(), 5).unwrap();
+        let exact = engine.run(Topology::Chord).unwrap();
+        // Hybrid with an every-evaluation oracle: every reported
+        // diameter IS the oracle value, pinned inside the estimator's
+        // own bounds (the run errors out otherwise).
+        engine.certify.mode = CertifyMode::Hybrid;
+        engine.certify.oracle_every = 1;
+        engine.certify.budget = 4;
+        let hybrid = engine.run(Topology::Chord).unwrap();
+        assert_eq!(exact.rows.len(), hybrid.rows.len());
+        for (e, h) in exact.rows.iter().zip(&hybrid.rows) {
+            assert_eq!(e.t, h.t);
+            assert_eq!(e.alive, h.alive);
+            assert!(
+                (e.diameter - h.diameter).abs()
+                    <= 1e-3 * e.diameter.max(1.0),
+                "t={}: {} vs {}",
+                e.t,
+                e.diameter,
+                h.diameter
+            );
+        }
+        // Sketch reports the certified upper bound: never below exact
+        // by more than the certification tolerance.
+        engine.certify.mode = CertifyMode::Sketch;
+        let sketch = engine.run(Topology::Chord).unwrap();
+        for (e, s) in exact.rows.iter().zip(&sketch.rows) {
+            assert!(
+                s.diameter >= e.diameter - 1e-3 * e.diameter.max(1.0),
+                "t={}: sketch {} below exact {}",
+                e.t,
+                s.diameter,
+                e.diameter
+            );
+        }
+        // Validation: bad knobs and unsupported topologies reject.
+        engine.certify.budget = 0;
+        assert!(engine.run(Topology::Chord).is_err());
+        engine.certify.budget = 4;
+        assert!(engine.run(Topology::Dgro).is_err());
     }
 }

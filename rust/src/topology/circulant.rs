@@ -1,0 +1,237 @@
+//! Circulant overlays C_n(S) — the closed-form low-diameter family
+//! (Huang et al., arXiv:2201.01342) used as the scale tier's
+//! known-diameter reference and synthetic workload.
+//!
+//! A circulant graph connects node `u` to `(u ± s) mod n` for every
+//! generator `s ∈ S`. Its structure is vertex-transitive, so the
+//! unit-weight (hop) diameter is a pure function of `(n, S)` and is
+//! computable in O(n·|S|) by a BFS over the residues — no Dijkstra
+//! over an n×n latency matrix required. That gives the scenario
+//! engine's `Topology::Circulant` baseline and the hotpath bench's
+//! 10^4–10^5-node tier an exact ground truth to pin the
+//! [`crate::graph::eval::EvalPool::diameter_est`] interval against:
+//!
+//!   * `C_n({1})` is the n-cycle with diameter `⌊n/2⌋`
+//!     ([`Circulant::cycle_hop_diameter`], closed form).
+//!   * `C_n({1, 2, 4, …, 2^k})` ([`Circulant::power_two`]) reaches any
+//!     residue greedily in at most ~2·log2(n) hops — the same degree
+//!     budget as the paper's K-ring overlays ([`super::paper_k`]).
+
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+
+/// A circulant graph C_n(S): node `u` links to `(u ± s) mod n`, s ∈ S.
+#[derive(Clone, Debug)]
+pub struct Circulant {
+    n: usize,
+    gens: Vec<u32>,
+}
+
+impl Circulant {
+    /// Build C_n(S). Generators are deduplicated, reduced to the
+    /// canonical range `1..=n/2`, and sorted; out-of-range or zero
+    /// generators are dropped. Panics if `n < 3` or no generator
+    /// survives (the overlay would be edgeless).
+    pub fn new(n: usize, gens: &[u32]) -> Circulant {
+        assert!(n >= 3, "circulant needs n >= 3, got {n}");
+        let mut keep: Vec<u32> = gens
+            .iter()
+            .map(|&s| {
+                let s = (s as usize) % n;
+                // ±s and ±(n−s) induce the same chord set.
+                s.min(n - s) as u32
+            })
+            .filter(|&s| s > 0)
+            .collect();
+        keep.sort_unstable();
+        keep.dedup();
+        assert!(
+            !keep.is_empty(),
+            "circulant C_{n}(S) needs at least one nonzero generator"
+        );
+        Circulant { n, gens: keep }
+    }
+
+    /// The power-of-two circulant C_n({1, 2, 4, …}) with generators up
+    /// to n/2 — per-node degree ~2·log2(n), hop diameter O(log n).
+    /// This is the scale tier's standard low-diameter construction.
+    pub fn power_two(n: usize) -> Circulant {
+        let mut gens = Vec::new();
+        let mut s = 1u64;
+        while s as usize <= n / 2 {
+            gens.push(s as u32);
+            s *= 2;
+        }
+        if gens.is_empty() {
+            gens.push(1);
+        }
+        Circulant::new(n, &gens)
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The canonical generator set (sorted, in `1..=n/2`).
+    pub fn generators(&self) -> &[u32] {
+        &self.gens
+    }
+
+    /// The chord list: every `(u, (u + s) mod n)` with `u < target`
+    /// normalization, deduplicated by construction (generators are
+    /// canonical). `s = n/2` chords are emitted once.
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let n = self.n;
+        let mut out = Vec::new();
+        for &s in &self.gens {
+            let s = s as usize;
+            // For s = n/2 (n even), u and (u + s) pair up exactly once.
+            let span = if 2 * s == n { n / 2 } else { n };
+            for u in 0..span {
+                let v = (u + s) % n;
+                out.push((u.min(v) as u32, u.max(v) as u32));
+            }
+        }
+        out
+    }
+
+    /// The overlay with physical latency weights.
+    pub fn to_graph(&self, w: &LatencyMatrix) -> Graph {
+        self.graph_with(|u, v| w.get(u as usize, v as usize))
+    }
+
+    /// The overlay with a synthetic per-edge weight function — how the
+    /// scale tier builds 10^5-node graphs without materializing an n²
+    /// latency matrix.
+    pub fn graph_with(
+        &self,
+        mut weight: impl FnMut(u32, u32) -> f32,
+    ) -> Graph {
+        let mut g = Graph::empty(self.n);
+        for (u, v) in self.edges() {
+            g.add_edge(u as usize, v as usize, weight(u, v));
+        }
+        g
+    }
+
+    /// The unit-weight overlay (every chord costs 1), whose diameter
+    /// equals [`Circulant::hop_diameter`].
+    pub fn unit_graph(&self) -> Graph {
+        self.graph_with(|_, _| 1.0)
+    }
+
+    /// Exact hop diameter from the circulant structure: BFS over the
+    /// residues 0..n stepping ±s per generator. O(n·|S|) — the
+    /// closed-form-grade ground truth the scale tier certifies
+    /// estimator intervals against (vertex-transitivity makes the
+    /// eccentricity of residue 0 the diameter).
+    pub fn hop_diameter(&self) -> usize {
+        let n = self.n;
+        let mut dist = vec![usize::MAX; n];
+        let mut frontier = vec![0usize];
+        dist[0] = 0;
+        let mut hops = 0;
+        let mut far = 0;
+        while !frontier.is_empty() {
+            hops += 1;
+            let mut next = Vec::new();
+            for &u in &frontier {
+                for &s in &self.gens {
+                    let s = s as usize;
+                    for v in [(u + s) % n, (u + n - s) % n] {
+                        if dist[v] == usize::MAX {
+                            dist[v] = hops;
+                            far = hops;
+                            next.push(v);
+                        }
+                    }
+                }
+            }
+            frontier = next;
+        }
+        far
+    }
+
+    /// Closed form for the plain cycle C_n({1}): `⌊n/2⌋`.
+    pub fn cycle_hop_diameter(n: usize) -> usize {
+        n / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{components, diameter};
+    use crate::latency::Model;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cycle_matches_closed_form() {
+        for n in [3usize, 4, 9, 16, 101] {
+            let c = Circulant::new(n, &[1]);
+            assert_eq!(c.hop_diameter(), Circulant::cycle_hop_diameter(n));
+            // The unit-weight graph diameter agrees with the formula.
+            let d = diameter::diameter(&c.unit_graph());
+            assert_eq!(d as usize, n / 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn hop_diameter_matches_graph_diameter() {
+        for (n, gens) in [
+            (12usize, vec![1u32, 3]),
+            (30, vec![2, 7]),
+            (64, vec![1, 8, 31]),
+        ] {
+            let c = Circulant::new(n, &gens);
+            let g = c.unit_graph();
+            if components::is_connected(&g) {
+                let d = diameter::diameter(&g) as usize;
+                assert_eq!(c.hop_diameter(), d, "C_{n}({gens:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn power_two_is_logarithmic_and_connected() {
+        for n in [8usize, 64, 100, 1000] {
+            let c = Circulant::power_two(n);
+            let g = c.unit_graph();
+            assert!(components::is_connected(&g));
+            let bound = 2 * (n as f64).log2().ceil() as usize + 1;
+            assert!(
+                c.hop_diameter() <= bound,
+                "n={n}: {} > {bound}",
+                c.hop_diameter()
+            );
+            // Degree budget ~2 per generator.
+            assert!(g.max_degree() <= 2 * c.generators().len());
+        }
+    }
+
+    #[test]
+    fn generators_canonicalized() {
+        // 9 ≡ −3 (mod 12), duplicates and zeros drop out.
+        let c = Circulant::new(12, &[3, 9, 0, 3, 15]);
+        assert_eq!(c.generators(), &[3]);
+        // s = n/2 emits each chord once.
+        let half = Circulant::new(8, &[4]);
+        assert_eq!(half.edges().len(), 4);
+        let g = half.unit_graph();
+        assert_eq!(g.m(), 4);
+    }
+
+    #[test]
+    fn latency_weighted_graph_uses_matrix() {
+        let mut rng = Rng::new(5);
+        let w = Model::Uniform.sample(16, &mut rng);
+        let g = Circulant::power_two(16).to_graph(&w);
+        assert!(components::is_connected(&g));
+        for u in 0..16 {
+            for &(v, wt) in g.neighbors(u) {
+                assert_eq!(wt, w.get(u, v as usize));
+            }
+        }
+    }
+}

@@ -4,12 +4,14 @@
 //! benchmark, and K-ring composition.
 
 pub mod chord;
+pub mod circulant;
 pub mod genetic;
 pub mod kring;
 pub mod perigee;
 pub mod rapid;
 
 use crate::graph::ring::Ring;
+use crate::graph::Graph;
 use crate::latency::LatencyMatrix;
 use crate::util::rng::Rng;
 
@@ -53,6 +55,62 @@ pub fn shortest_ring(w: &LatencyMatrix, start: usize) -> Ring {
 /// connections (§III-A), i.e. a K-ring overlay with K = max(1, log2 N).
 pub fn paper_k(n: usize) -> usize {
     ((n as f64).log2().floor() as usize).max(1)
+}
+
+/// The standard connectivity-threshold radius for [`random_geometric`]:
+/// `sqrt(c · ln n / n)` with c = 1.5/π, comfortably above the sharp
+/// threshold `ln n / (π n)` so seeded instances are connected with
+/// overwhelming probability at the scale-tier sizes.
+pub fn geometric_radius(n: usize) -> f32 {
+    let n = n.max(2) as f64;
+    (1.5 * n.ln() / (std::f64::consts::PI * n)).sqrt() as f32
+}
+
+/// A random-geometric graph: `n` seeded points in the unit square,
+/// every pair within `radius` linked with its Euclidean distance as
+/// the edge weight. Built with grid bucketing (cell = radius, 3×3
+/// neighborhood scan), so construction is O(n + m) and never touches
+/// an n×n matrix — the scale tier's irregular counterpart to the
+/// structured [`circulant::Circulant`] family.
+pub fn random_geometric(n: usize, radius: f32, rng: &mut Rng) -> Graph {
+    let pts: Vec<(f32, f32)> =
+        (0..n).map(|_| (rng.f64() as f32, rng.f64() as f32)).collect();
+    let mut g = Graph::empty(n);
+    if n == 0 || radius <= 0.0 {
+        return g;
+    }
+    // Finer than ~sqrt(n) cells buys nothing and risks a huge bin
+    // table when the radius is tiny; clamping down keeps cell width
+    // >= radius, which the 3x3 scan's correctness relies on.
+    let max_cells = ((n as f64).sqrt().ceil() as usize).max(1);
+    let cells = ((1.0 / radius).floor() as usize).clamp(1, max_cells);
+    let cell_of =
+        |p: f32| -> usize { ((p * cells as f32) as usize).min(cells - 1) };
+    let mut bins: Vec<Vec<u32>> = vec![Vec::new(); cells * cells];
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        bins[cell_of(y) * cells + cell_of(x)].push(i as u32);
+    }
+    let r2 = radius * radius;
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        let (cx, cy) = (cell_of(x), cell_of(y));
+        for gy in cy.saturating_sub(1)..=(cy + 1).min(cells - 1) {
+            for gx in cx.saturating_sub(1)..=(cx + 1).min(cells - 1) {
+                for &j in &bins[gy * cells + gx] {
+                    // Each unordered pair once, in deterministic order.
+                    if (j as usize) <= i {
+                        continue;
+                    }
+                    let (px, py) = pts[j as usize];
+                    let (dx, dy) = (px - x, py - y);
+                    let d2 = dx * dx + dy * dy;
+                    if d2 <= r2 {
+                        g.add_edge(i, j as usize, d2.sqrt());
+                    }
+                }
+            }
+        }
+    }
+    g
 }
 
 #[cfg(test)]
@@ -103,5 +161,53 @@ mod tests {
         assert_eq!(paper_k(50), 5);
         assert_eq!(paper_k(64), 6);
         assert_eq!(paper_k(1000), 9);
+    }
+
+    #[test]
+    fn random_geometric_matches_brute_force() {
+        // Grid bucketing must produce exactly the all-pairs edge set.
+        for seed in [1u64, 2, 3] {
+            let n = 120;
+            let r = geometric_radius(n);
+            let g = random_geometric(n, r, &mut Rng::new(seed));
+            // Rebuild the same points (same seed draws) and compare.
+            let mut rng = Rng::new(seed);
+            let pts: Vec<(f32, f32)> = (0..n)
+                .map(|_| (rng.f64() as f32, rng.f64() as f32))
+                .collect();
+            let mut brute = 0usize;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let (dx, dy) =
+                        (pts[j].0 - pts[i].0, pts[j].1 - pts[i].1);
+                    if dx * dx + dy * dy <= r * r {
+                        brute += 1;
+                        let hit = g
+                            .neighbors(i)
+                            .iter()
+                            .any(|&(v, _)| v as usize == j);
+                        assert!(hit, "missing edge ({i}, {j})");
+                    }
+                }
+            }
+            assert_eq!(g.m(), brute, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn random_geometric_is_deterministic_and_mostly_connected() {
+        let n = 400;
+        let r = geometric_radius(n);
+        let a = random_geometric(n, r, &mut Rng::new(9));
+        let b = random_geometric(n, r, &mut Rng::new(9));
+        assert_eq!(a.m(), b.m());
+        // The threshold radius keeps the bulk of the nodes in one
+        // component (full connectivity is asymptotic, not certain).
+        let labels = crate::graph::components::components(&a);
+        let giant = crate::graph::components::largest(&labels);
+        assert!(giant.len() >= (n * 9) / 10, "giant = {}", giant.len());
+        // Degenerate inputs.
+        assert_eq!(random_geometric(0, r, &mut Rng::new(1)).n(), 0);
+        assert_eq!(random_geometric(5, 0.0, &mut Rng::new(1)).m(), 0);
     }
 }

@@ -137,6 +137,68 @@ fn prop_parallel_eval_matches_serial_across_thread_counts() {
 }
 
 #[test]
+fn prop_diameter_est_brackets_exact_across_budgets_and_threads() {
+    // The certified estimator's interval must contain the exact
+    // Takes–Kosters diameter at every landmark budget, and be a pure
+    // function of (graph, seeds, budget): pool width changes the
+    // schedule, never the certified bounds.
+    forall(
+        "diameter_est bracketing",
+        PropConfig::default().cases(8).seed(0xD1A),
+        |rng| {
+            let n = 16 + rng.index(1009); // up to 1024 nodes
+            let w = random_model(rng).sample(n, rng);
+            let g = kring::random_krings(n, paper_k(n), rng).to_graph(&w);
+            let exact = diameter::diameter(&g) as f64;
+            let tol = 1e-3 * exact.max(1.0);
+            for &budget in &[4usize, 16, 64] {
+                let reference =
+                    EvalPool::new(1).diameter_est(&g, &[], budget);
+                for &threads in &[2usize, 8] {
+                    let est = EvalPool::new(threads)
+                        .diameter_est(&g, &[], budget);
+                    let a = (
+                        est.lower.to_bits(),
+                        est.upper.to_bits(),
+                        &est.landmarks,
+                        est.sweeps,
+                    );
+                    let b = (
+                        reference.lower.to_bits(),
+                        reference.upper.to_bits(),
+                        &reference.landmarks,
+                        reference.sweeps,
+                    );
+                    ensure(
+                        a == b,
+                        format!("T={threads} b={budget} drifted"),
+                    )?;
+                }
+                ensure(
+                    f64::from(reference.lower) <= exact + tol,
+                    format!(
+                        "b={budget}: lower {} > exact {exact}",
+                        reference.lower
+                    ),
+                )?;
+                ensure(
+                    exact <= f64::from(reference.upper) + tol,
+                    format!(
+                        "b={budget}: exact {exact} > upper {}",
+                        reference.upper
+                    ),
+                )?;
+                ensure(
+                    reference.sweeps <= budget,
+                    "estimator overspent its sweep budget",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_apsp_triangle_inequality_and_symmetry() {
     forall("apsp metric axioms", PropConfig::default().cases(25), |rng| {
         let n = 5 + rng.index(30);

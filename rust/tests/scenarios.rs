@@ -2,6 +2,7 @@
 //! runs end-to-end, the acceptance workload is byte-deterministic, and
 //! `compare` produces the DGRO-vs-baselines diameter-under-churn table.
 
+use dgro::graph::eval::{CertifyConfig, CertifyMode};
 use dgro::scenario::compare::compare;
 use dgro::scenario::dynamics::LatencyEffect;
 use dgro::scenario::engine::{ScenarioEngine, ScenarioReport, Topology};
@@ -211,6 +212,40 @@ fn compare_tabulates_dgro_vs_baselines_across_the_catalog() {
     // including when the cross product fans out across threads.
     let again = compare(&specs, &topologies, 11, 250.0, 4).unwrap();
     assert_eq!(rendered, again.render());
+}
+
+#[test]
+fn hybrid_oracle_brackets_the_catalog_on_static_and_sharded_paths() {
+    // With oracle_every = 1 every diameter evaluation is re-checked
+    // against the exact value and the run bails on any bracket
+    // violation — so a clean pass over the catalog IS the acceptance
+    // proof that the certified interval always contains the truth.
+    let hybrid = CertifyConfig {
+        mode: CertifyMode::Hybrid,
+        budget: 4,
+        oracle_every: 1,
+    };
+    for spec in catalog() {
+        let mut engine = ScenarioEngine::new(spec.clone(), 5).unwrap();
+        engine.certify = hybrid;
+        let rep = engine.run(Topology::Chord).unwrap();
+        check_invariants(&rep, spec.nodes, spec.horizon);
+        assert!(
+            rep.metrics.counter("eval.oracle_checks") > 0,
+            "{}: the oracle never ran",
+            spec.name
+        );
+    }
+    // One sharded pass rides along (the K-sweep parity runs live in
+    // sharded.rs).
+    let spec = find("anchor-storm").unwrap();
+    let (nodes, horizon) = (spec.nodes, spec.horizon);
+    let mut engine = ScenarioEngine::new(spec, 5).unwrap();
+    engine.shards = 4;
+    engine.certify = hybrid;
+    let rep = engine.run(Topology::DgroSharded).unwrap();
+    check_invariants(&rep, nodes, horizon);
+    assert!(rep.metrics.counter("eval.oracle_checks") > 0);
 }
 
 #[test]

@@ -7,6 +7,7 @@
 
 use dgro::config::Config;
 use dgro::coordinator::{ShardedConfig, ShardedCoordinator};
+use dgro::graph::eval::{CertifyConfig, CertifyMode};
 use dgro::graph::{components, Graph};
 use dgro::membership::events::MembershipEvent;
 use dgro::prop::{ensure, forall, Config as PropConfig};
@@ -83,6 +84,64 @@ fn sharded_runs_are_deterministic_and_thread_invariant() {
     // A different seed draws different churn.
     let d = run_sharded(4, 8, 1);
     assert_ne!(a.render(), d.render());
+}
+
+fn run_certified(
+    shards: usize,
+    threads: usize,
+    certify: CertifyConfig,
+) -> ScenarioReport {
+    let spec = dgro::scenario::find("anchor-storm").unwrap();
+    let mut engine = ScenarioEngine::new(spec, 11).unwrap();
+    engine.shards = shards;
+    engine.threads = threads;
+    engine.certify = certify;
+    engine.run(Topology::DgroSharded).unwrap()
+}
+
+#[test]
+fn hybrid_certification_preserves_swap_decisions_on_anchor_storm() {
+    // Ring-swap decisions never consult a diameter, so sketch-certified
+    // runs must reproduce the exact-mode swap sequence bit-for-bit at
+    // every K — the acceptance pin behind `--certify hybrid`.
+    let hybrid = CertifyConfig {
+        mode: CertifyMode::Hybrid,
+        budget: 8,
+        oracle_every: 4,
+    };
+    for k in [1usize, 4, 8] {
+        let exact = run_certified(k, 1, CertifyConfig::exact());
+        let est = run_certified(k, 1, hybrid);
+        assert_eq!(exact.rows.len(), est.rows.len(), "K={k}");
+        for (a, b) in exact.rows.iter().zip(&est.rows) {
+            assert_eq!(a.swaps, b.swaps, "K={k} t={}", a.t);
+            assert_eq!(a.alive, b.alive, "K={k} t={}", a.t);
+            // Hybrid reports the certified upper envelope (or the
+            // oracle value), which never undercuts the exact diameter
+            // by more than the convergence tolerance.
+            assert!(
+                b.diameter >= a.diameter - 1e-3 * a.diameter.max(1.0),
+                "K={k} t={}: hybrid {} under exact {}",
+                a.t,
+                b.diameter,
+                a.diameter
+            );
+        }
+    }
+}
+
+#[test]
+fn hybrid_sharded_runs_are_thread_invariant() {
+    let hybrid = CertifyConfig {
+        mode: CertifyMode::Hybrid,
+        budget: 8,
+        oracle_every: 4,
+    };
+    let a = run_certified(4, 1, hybrid);
+    let b = run_certified(4, 4, hybrid);
+    assert_eq!(a.render(), b.render(), "thread count changed the run");
+    let c = run_certified(4, 1, hybrid);
+    assert_eq!(a.render(), c.render(), "same-seed runs differ");
 }
 
 #[test]
