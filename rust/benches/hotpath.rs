@@ -13,6 +13,8 @@
 //!     transports, plus probe-RTT overhead and sim-vs-udp diameter drift
 //!   * scale tier: certified diameter estimation on 10^4/10^5-node
 //!     circulant and random-geometric graphs (runs in quick mode too)
+//!   * traffic tier: greedy routing + FIFO queueing throughput and p99
+//!     end-to-end latency over a static K-ring (docs/TRAFFIC.md)
 //!
 //! Besides the stdout report, the run writes **BENCH_hotpath.json** to
 //! the working directory (repo root under `cargo bench`): the
@@ -628,6 +630,57 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // --- Traffic plane: routed requests/s over a static K-ring. ---------
+    // Isolates the traffic subsystem (greedy routing + FIFO queueing +
+    // retry bookkeeping) from the scenario engine's diameter sweeps: a
+    // fixed K-ring world, the default 2·10^5 req/s open-loop workload.
+    // bench_gate floors req/s and ceilings the p99 latency.
+    let t_nodes = if quick { 128 } else { 256 };
+    let mut t_rng = Rng::new(0x7AFF);
+    let tw = Model::Fabric.sample(t_nodes, &mut t_rng);
+    let tg = dgro::topology::kring::random_krings(
+        t_nodes,
+        paper_k(t_nodes),
+        &mut t_rng,
+    )
+    .to_graph(&tw);
+    let t_alive: Vec<u32> = (0..t_nodes as u32).collect();
+    let mut t_cfg = dgro::traffic::TrafficConfig::default();
+    t_cfg.rate = 200_000.0;
+    let t_periods = if quick { 4 } else { 8 };
+    let t0 = std::time::Instant::now();
+    let mut t_sim =
+        dgro::traffic::TrafficSim::new(t_nodes, 7, t_cfg, threads);
+    for p in 1..=t_periods {
+        t_sim.on_period(p as f64 * 250.0, &tg, &tw, &t_alive);
+    }
+    let (t_rep, _) = t_sim.finish("bench-traffic", "random", 7);
+    let t_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    report(
+        &format!("traffic route+queue n={t_nodes} T={threads}"),
+        &[t_wall],
+        Some(("reqs", t_rep.offered as f64)),
+    );
+    println!(
+        "traffic p50 {:.3} ms p99 {:.3} ms success {:.4} stretch {:.3}",
+        t_rep.p50_ms,
+        t_rep.p99_ms,
+        t_rep.success_rate(),
+        t_rep.mean_stretch
+    );
+    let traffic_json = Json::obj(vec![
+        ("n", Json::num(t_nodes as f64)),
+        ("periods", Json::num(t_periods as f64)),
+        ("offered", Json::num(t_rep.offered as f64)),
+        ("delivered", Json::num(t_rep.delivered as f64)),
+        ("wall_ms", Json::num(t_wall * 1e3)),
+        ("req_per_s", Json::num(t_rep.offered as f64 / t_wall)),
+        ("p50_ms", Json::num(t_rep.p50_ms)),
+        ("p99_ms", Json::num(t_rep.p99_ms)),
+        ("success_rate", Json::num(t_rep.success_rate())),
+        ("mean_stretch", Json::num(t_rep.mean_stretch)),
+    ]);
+
     // --- Parallel construction. -----------------------------------------
     for m in [1usize, 8, 32] {
         let mut prng = Rng::new(3);
@@ -657,6 +710,7 @@ fn main() -> anyhow::Result<()> {
         ("net", net_json),
         ("obs", obs_json),
         ("scale", Json::arr(scale_rows)),
+        ("traffic", traffic_json),
     ]);
     std::fs::write("BENCH_hotpath.json", out.to_string())?;
     println!("wrote BENCH_hotpath.json (threads={threads} quick={quick})");

@@ -10,11 +10,14 @@
 //! floor. Refresh the floor deliberately with
 //! `bench_gate --update` after a justified perf change.
 //!
-//! The gated metrics are *throughputs* (higher is better), chosen for
-//! stability in quick mode: scenario-engine periods/s (both evaluation
-//! strategies), batched diameter-eval throughput, GA evaluations/s,
-//! the sim-transport frame rate, the observability overhead ratio and
-//! the 10^5-node scale-tier estimation throughputs.
+//! The gated metrics are mostly *throughputs* (higher is better),
+//! chosen for stability in quick mode: scenario-engine periods/s (both
+//! evaluation strategies), batched diameter-eval throughput, GA
+//! evaluations/s, the sim-transport frame rate, the observability
+//! overhead ratio, the 10^5-node scale-tier estimation throughputs and
+//! the traffic-plane routed-request rate. The traffic p99 end-to-end
+//! latency is the one *inverted* metric — lower is better, so its
+//! baseline acts as a ceiling rather than a floor.
 
 use anyhow::{Context, Result};
 
@@ -25,10 +28,13 @@ use crate::util::json::Json;
 pub const DEFAULT_TOLERANCE: f64 = 0.20;
 
 /// One gated metric: its flat name in `BENCH_baseline.json` and how to
-/// read the current value out of `BENCH_hotpath.json`.
+/// read the current value out of `BENCH_hotpath.json`. `invert` marks
+/// lower-is-better metrics (latencies): their gate ratio is
+/// `baseline / current`, so the committed value is a ceiling.
 struct MetricDef {
     name: &'static str,
     read: fn(&Json) -> Result<f64>,
+    invert: bool,
 }
 
 fn scenario_incremental(root: &Json) -> Result<f64> {
@@ -89,38 +95,64 @@ fn scale_geometric(root: &Json) -> Result<f64> {
     scale_nodes_per_s(root, "geometric")
 }
 
-const METRICS: [MetricDef; 8] = [
+fn traffic_req_per_s(root: &Json) -> Result<f64> {
+    root.get("traffic")?.get("req_per_s")?.as_f64()
+}
+
+fn traffic_p99_ms(root: &Json) -> Result<f64> {
+    root.get("traffic")?.get("p99_ms")?.as_f64()
+}
+
+const METRICS: [MetricDef; 10] = [
     MetricDef {
         name: "scenario_incremental_periods_per_s",
         read: scenario_incremental,
+        invert: false,
     },
     MetricDef {
         name: "scenario_rebuild_periods_per_s",
         read: scenario_rebuild,
+        invert: false,
     },
     MetricDef {
         name: "diameter_batch_graphs_per_s",
         read: diameter_batch_throughput,
+        invert: false,
     },
     MetricDef {
         name: "ga_par_evals_per_s",
         read: ga_throughput,
+        invert: false,
     },
     MetricDef {
         name: "net_sim_frames_per_s",
         read: net_sim_frames,
+        invert: false,
     },
     MetricDef {
         name: "obs_enabled_over_disabled",
         read: obs_overhead_ratio,
+        invert: false,
     },
     MetricDef {
         name: "scale_circulant_1e5_nodes_per_s",
         read: scale_circulant,
+        invert: false,
     },
     MetricDef {
         name: "scale_geometric_1e5_nodes_per_s",
         read: scale_geometric,
+        invert: false,
+    },
+    MetricDef {
+        name: "traffic_req_per_s",
+        read: traffic_req_per_s,
+        invert: false,
+    },
+    MetricDef {
+        name: "traffic_p99_ms",
+        read: traffic_p99_ms,
+        invert: true,
     },
 ];
 
@@ -133,7 +165,9 @@ pub struct GateRow {
     pub baseline: f64,
     /// Value from the fresh bench report.
     pub current: f64,
-    /// `current / baseline` (1.0 = parity, < 1 - tolerance = fail).
+    /// `current / baseline` — or `baseline / current` for inverted
+    /// (lower-is-better) metrics (1.0 = parity, < 1 - tolerance =
+    /// fail).
     pub ratio: f64,
     /// Whether this metric clears the gate.
     pub ok: bool,
@@ -201,14 +235,30 @@ pub fn compare(
 ) -> Result<GateOutcome> {
     let floors = baseline.get("metrics")?;
     let mut rows = Vec::new();
-    for (name, current) in extract(report)? {
+    for m in &METRICS {
+        let current = (m.read)(report)
+            .with_context(|| format!("reading metric {}", m.name))?;
         let floor = floors
-            .get(name)
-            .with_context(|| format!("baseline missing metric {name}"))?
+            .get(m.name)
+            .with_context(|| {
+                format!("baseline missing metric {}", m.name)
+            })?
             .as_f64()?;
-        let ratio = if floor > 0.0 { current / floor } else { 1.0 };
+        let ratio = if m.invert {
+            // Lower is better: the committed value is a ceiling and
+            // the ratio degrades as `current` grows past it.
+            if current > 0.0 {
+                floor / current
+            } else {
+                1.0
+            }
+        } else if floor > 0.0 {
+            current / floor
+        } else {
+            1.0
+        };
         rows.push(GateRow {
-            name,
+            name: m.name,
             baseline: floor,
             current,
             ratio,
@@ -297,6 +347,16 @@ mod tests {
                     ]),
                 ]),
             ),
+            (
+                // `p99_ms` is inverted: a slowdown (scale < 1) must
+                // *raise* the latency for the gate to read it as a
+                // regression, hence the division.
+                "traffic",
+                Json::obj(vec![
+                    ("req_per_s", Json::num(500_000.0 * scale)),
+                    ("p99_ms", Json::num(50.0 / scale)),
+                ]),
+            ),
         ])
     }
 
@@ -329,10 +389,37 @@ mod tests {
         let out =
             compare(&parsed, &report(1.0), DEFAULT_TOLERANCE).unwrap();
         assert!(out.passed());
-        assert_eq!(out.rows.len(), 8);
+        assert_eq!(out.rows.len(), 10);
         for r in out.rows {
             assert!((r.ratio - 1.0).abs() < 1e-9, "{}: {}", r.name, r.ratio);
         }
+    }
+
+    #[test]
+    fn inverted_latency_metric_gates_as_a_ceiling() {
+        let baseline = baseline_from(&report(1.0)).unwrap();
+        // A slowdown *raises* p99; the inverted ratio must fall below
+        // the tolerance exactly like a throughput drop would.
+        let out = compare(&baseline, &report(0.75), DEFAULT_TOLERANCE)
+            .unwrap();
+        let row = out
+            .rows
+            .iter()
+            .find(|r| r.name == "traffic_p99_ms")
+            .unwrap();
+        assert!(row.current > row.baseline, "slowdown raises p99");
+        assert!((row.ratio - 0.75).abs() < 1e-9, "{}", row.ratio);
+        assert!(!row.ok);
+        // A speedup lowers p99 and passes with ratio > 1.
+        let out = compare(&baseline, &report(1.4), DEFAULT_TOLERANCE)
+            .unwrap();
+        let row = out
+            .rows
+            .iter()
+            .find(|r| r.name == "traffic_p99_ms")
+            .unwrap();
+        assert!(row.current < row.baseline);
+        assert!(row.ratio > 1.0 && row.ok);
     }
 
     #[test]

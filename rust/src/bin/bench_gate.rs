@@ -78,6 +78,34 @@ fn run() -> Result<bool> {
     let floors = load(&baseline)?;
     let outcome = gate::compare(&floors, &report, tolerance)?;
     print!("{}", outcome.render());
+    // Per-commit trend artifact: the same verdict rows in machine
+    // shape, uploaded by CI next to BENCH_hotpath.json so the
+    // baseline-tightening flow can chart ratio drift across commits.
+    let rows = outcome
+        .rows
+        .iter()
+        .map(|r| {
+            json::Json::obj(vec![
+                ("name", json::Json::str(r.name)),
+                ("baseline", json::Json::num(r.baseline)),
+                ("current", json::Json::num(r.current)),
+                ("ratio", json::Json::num(r.ratio)),
+                ("ok", json::Json::num(if r.ok { 1.0 } else { 0.0 })),
+            ])
+        })
+        .collect();
+    let trend = json::Json::obj(vec![
+        ("bench", json::Json::str("hotpath-trend")),
+        ("tolerance", json::Json::num(outcome.tolerance)),
+        (
+            "passed",
+            json::Json::num(if outcome.passed() { 1.0 } else { 0.0 }),
+        ),
+        ("rows", json::Json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_trend.json", trend.to_string())
+        .context("writing BENCH_trend.json")?;
+    println!("wrote BENCH_trend.json");
     Ok(outcome.passed())
 }
 

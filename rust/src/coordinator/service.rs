@@ -403,7 +403,23 @@ impl Coordinator {
         &mut self,
         trace: &EventTrace,
         horizon: f64,
+        latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+    ) -> Result<CoordinatorReport> {
+        self.run_dynamic_observed(trace, horizon, latency_at, None)
+    }
+
+    /// [`Coordinator::run_dynamic`] with a per-period overlay observer:
+    /// after each period's adaptation the callback receives the alive
+    /// sub-overlay, the current latency view and the sorted alive list
+    /// — the hook the traffic plane
+    /// ([`TrafficSim`](crate::traffic::TrafficSim)) consumes. `None`
+    /// is byte-identical to [`Coordinator::run_dynamic`].
+    pub fn run_dynamic_observed(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
         mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+        mut observer: Option<crate::traffic::OverlayObserver<'_>>,
     ) -> Result<CoordinatorReport> {
         let initial_diameter = diameter::diameter(&self.overlay());
         let mut timeline = Vec::new();
@@ -458,6 +474,13 @@ impl Coordinator {
             );
             swaps0 = swaps_now;
             timeline.push((t, rho, d));
+            if let Some(f) = observer.as_mut() {
+                let ga = self.alive_overlay();
+                let mut alive: Vec<u32> =
+                    self.membership.alive().collect();
+                alive.sort_unstable();
+                f(t, &ga, &self.w, &alive);
+            }
             period_wall
                 .observe(period_wall0.elapsed().as_secs_f64() * 1e3);
             p_span.finish(&self.obs.rec, t);

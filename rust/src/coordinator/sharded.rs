@@ -795,7 +795,23 @@ impl ShardedCoordinator {
         &mut self,
         trace: &EventTrace,
         horizon: f64,
+        latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+    ) -> Result<CoordinatorReport> {
+        self.run_dynamic_observed(trace, horizon, latency_at, None)
+    }
+
+    /// [`ShardedCoordinator::run_dynamic`] with a per-period overlay
+    /// observer: after each period the callback receives the stitched
+    /// alive sub-overlay (shard rings + anchor links), the current
+    /// latency view and the sorted alive list — the traffic-plane
+    /// hook. `None` is byte-identical to
+    /// [`ShardedCoordinator::run_dynamic`].
+    pub fn run_dynamic_observed(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
         mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+        mut observer: Option<crate::traffic::OverlayObserver<'_>>,
     ) -> Result<CoordinatorReport> {
         let g0 = self.overlay();
         let initial_diameter = self.certified_diameter(&g0, false, 0)?;
@@ -853,6 +869,13 @@ impl ShardedCoordinator {
                 .observe("shard.anchor_links", self.anchors.len() as f64);
             self.metrics.incr("membership.events_applied", applied);
             timeline.push((t, rho, d));
+            if let Some(f) = observer.as_mut() {
+                let ga = self.alive_overlay();
+                let mut alive: Vec<u32> =
+                    self.alive_set().into_iter().collect();
+                alive.sort_unstable();
+                f(t, &ga, &self.w, &alive);
+            }
             eval_idx += 1;
         }
         Ok(CoordinatorReport {

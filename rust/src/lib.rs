@@ -68,4 +68,5 @@ pub mod runtime;
 pub mod scenario;
 pub mod sim;
 pub mod topology;
+pub mod traffic;
 pub mod util;

@@ -5,6 +5,7 @@
 //!   serve     run the coordinator over a churn trace (adaptive loop)
 //!   measure   Algorithm-3 gossip measurement + ρ for a topology
 //!   scenario  deterministic churn + dynamic-latency workloads
+//!   traffic   route simulated application requests over the overlay
 //!   net       run the coordinator over a real transport (UDP loopback)
 //!   obs       inspect --obs-out artifacts (dump | diff | top)
 //!   figures   regenerate paper figures (CSV under reports/)
@@ -21,7 +22,10 @@
 //!   dgro scenario run --name anchor-storm --transport udp --seed 0
 //!   dgro scenario run --name anchor-storm --transport tcp --loss-rate 0.05
 //!   dgro scenario compare --shards 8 --out reports
+//!   dgro scenario compare --certify hybrid --landmarks 16 --quick
 //!   dgro scenario run --name flash-crowd --obs-out obs/a
+//!   dgro traffic run --name steady-state --topology dgro --rate 200000
+//!   dgro traffic compare --quick --seed 7 --out reports
 //!   dgro net demo --nodes 16 --transport tcp
 //!   dgro obs top obs/a --slowest 10
 //!   dgro figures --fig 21 --quick
@@ -71,6 +75,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "measure" => cmd_measure(rest),
         "scenario" => cmd_scenario(rest),
+        "traffic" => cmd_traffic(rest),
         "net" => cmd_net(rest),
         "obs" => cmd_obs(rest),
         "figures" => cmd_figures(rest),
@@ -95,6 +100,7 @@ fn print_help() {
          \x20 serve     run the adaptive coordinator over a churn trace\n\
          \x20 measure   gossip latency measurement + rho for a topology\n\
          \x20 scenario  churn + dynamic-latency workloads (list|run|compare)\n\
+         \x20 traffic   route simulated requests over the overlay (run|compare)\n\
          \x20 net       coordinator over a real transport (demo)\n\
          \x20 obs       inspect --obs-out artifacts (dump|diff|top)\n\
          \x20 figures   regenerate paper figures (CSV under reports/)\n\
@@ -323,9 +329,10 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
     .flag(
         "certify",
         "exact",
-        "diameter certification for sharded and static-baseline runs: \
-         exact|hybrid|sketch (docs/SCENARIOS.md, 'Scaling & \
-         certification')",
+        "diameter certification for sharded and static-baseline \
+         evaluations, on run and compare alike: exact|hybrid|sketch \
+         (docs/SCENARIOS.md, 'Scaling & certification'; the dgro \
+         compare column always certifies exactly)",
     )
     .flag(
         "landmarks",
@@ -449,19 +456,7 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             engine.threads = threads;
             engine.incremental = !a.switch("rebuild");
             engine.shards = shards;
-            let cname = a.get("certify");
-            let mode = dgro::graph::eval::CertifyMode::parse(cname)
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "--certify must be exact|hybrid|sketch, \
-                         got '{cname}'"
-                    )
-                })?;
-            engine.certify = dgro::graph::eval::CertifyConfig {
-                mode,
-                budget: a.get_usize("landmarks")?,
-                oracle_every: a.get_usize("oracle-every")?,
-            };
+            engine.certify = parse_certify(&a)?;
             if !a.get("transport").is_empty() {
                 engine.transport =
                     Some(dgro::net::TransportKind::parse(a.get("transport"))?);
@@ -520,12 +515,6 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                     "--obs-out applies to 'scenario run' only"
                 );
             }
-            if a.get("certify") != "exact" {
-                anyhow::bail!(
-                    "--certify applies to 'scenario run' only; compare \
-                     always certifies exactly"
-                );
-            }
             let mut topologies: Vec<scenario::Topology> =
                 if a.switch("quick") {
                     vec![
@@ -541,6 +530,8 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                 // the extra column shares every seed/trace/latency draw.
                 topologies.push(scenario::Topology::DgroSharded);
             }
+            // Non-exact modes apply PR 7's upper-envelope semantics to
+            // the static/sharded columns; the dgro column stays exact.
             let rep = scenario::compare_opts(
                 &scenario::catalog(),
                 &topologies,
@@ -549,6 +540,8 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                     period,
                     threads,
                     shards,
+                    certify: parse_certify(&a)?,
+                    ..scenario::CompareOpts::default()
                 },
             )?;
             print!("{}", rep.render());
@@ -565,6 +558,281 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
         }
         other => anyhow::bail!(
             "unknown scenario action '{other}' (list | run | compare)\n\n{}",
+            cmd.usage()
+        ),
+    }
+}
+
+/// Shared `--certify/--landmarks/--oracle-every` parsing for the
+/// scenario and traffic subcommands.
+fn parse_certify(
+    a: &dgro::cli::Args,
+) -> Result<dgro::graph::eval::CertifyConfig> {
+    let cname = a.get("certify");
+    let mode =
+        dgro::graph::eval::CertifyMode::parse(cname).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--certify must be exact|hybrid|sketch, got '{cname}'"
+            )
+        })?;
+    Ok(dgro::graph::eval::CertifyConfig {
+        mode,
+        budget: a.get_usize("landmarks")?,
+        oracle_every: a.get_usize("oracle-every")?,
+    })
+}
+
+/// Traffic-plane knobs shared by `traffic run` and `traffic compare`.
+fn parse_traffic_cfg(
+    a: &dgro::cli::Args,
+) -> Result<dgro::traffic::TrafficConfig> {
+    Ok(dgro::traffic::TrafficConfig {
+        rate: a.get_f64("rate")?,
+        capacity: a.get_f64("capacity")?,
+        timeout_ms: a.get_f64("timeout-ms")?,
+        retries: a.get_u64("retries")? as u32,
+        pool: a.get_usize("pool")?,
+        stretch_samples: a.get_usize("stretch-samples")?,
+        seed: a.get_u64("traffic-seed")?,
+    })
+}
+
+fn cmd_traffic(raw: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "traffic",
+        "route simulated application requests over the evolving \
+         overlay; actions: run | compare (docs/TRAFFIC.md)",
+    )
+    .flag("name", "flash-crowd", "catalog scenario (dgro scenario list)")
+    .flag("spec", "", "path to a JSON ScenarioSpec (overrides --name)")
+    .flag(
+        "topology",
+        "dgro",
+        "run: dgro|sharded|chord|rapid|perigee|random|circulant",
+    )
+    .flag("seed", "7", "rng seed (same seed => byte-identical report)")
+    .flag("period", "250", "adaptation/measurement period (sim-ms)")
+    .flag(
+        "rate",
+        "200000",
+        "offered load, requests per sim-second across the cluster",
+    )
+    .flag(
+        "capacity",
+        "8000",
+        "per-node service capacity, requests per sim-second",
+    )
+    .flag(
+        "timeout-ms",
+        "40",
+        "session timeout before a retry (sim-ms)",
+    )
+    .flag(
+        "retries",
+        "2",
+        "bounded retries per session (0 = fail on first timeout)",
+    )
+    .flag("pool", "4", "round-robin destination-pool size per source")
+    .flag(
+        "stretch-samples",
+        "8",
+        "stretch samples per period (each costs one Dijkstra)",
+    )
+    .flag("traffic-seed", "0", "extra seed for the workload stream")
+    .flag(
+        "certify",
+        "exact",
+        "compare: per-topology diameter certification exact|hybrid|\
+         sketch (the dgro column always certifies exactly)",
+    )
+    .flag(
+        "landmarks",
+        "16",
+        "sketch/hybrid: landmark sweep budget per diameter evaluation",
+    )
+    .flag(
+        "oracle-every",
+        "8",
+        "hybrid: pin the certified interval against the exact oracle \
+         every k-th evaluation",
+    )
+    .flag(
+        "shards",
+        "0",
+        "partition count for the sharded coordinator: run --topology \
+         sharded uses it (0 = engine default), compare > 1 appends a \
+         'sharded' column to the panel",
+    )
+    .flag(
+        "threads",
+        "0",
+        "worker threads for routing fan-out, static-baseline \
+         evaluation and the compare cross product (0 = all cores)",
+    )
+    .flag(
+        "transport",
+        "",
+        "run: drive the dgro topology over a message-level transport: \
+         sim|udp|tcp (empty = in-process coordinator)",
+    )
+    .flag(
+        "time-scale",
+        "0.05",
+        "udp/tcp transports: real-ms of shaped delay per sim-ms",
+    )
+    .flag(
+        "loss-rate",
+        "0",
+        "transport runs: seeded per-frame drop probability in [0, 1)",
+    )
+    .flag(
+        "dup-rate",
+        "0",
+        "transport runs: seeded per-frame duplication probability in \
+         [0, 1)",
+    )
+    .flag(
+        "reorder-rate",
+        "0",
+        "transport runs: seeded per-frame reorder probability in [0, 1)",
+    )
+    .flag("out", "", "also write CSV tables under this directory")
+    .flag(
+        "obs-out",
+        "",
+        "run: write the traffic obs surface (request-latency \
+         histogram, per-node load vector, timeout/retry counters) \
+         under this directory",
+    )
+    .flag(
+        "log-level",
+        "",
+        "override log verbosity: error|warn|info|debug|trace \
+         (empty = honor DGRO_LOG)",
+    )
+    .switch("quick", "compare against the trimmed baseline panel");
+    let a = cmd.parse(raw)?;
+    apply_log_level(a.get("log-level"))?;
+    let action =
+        a.positional.first().map(|s| s.as_str()).unwrap_or("run");
+    let seed = a.get_u64("seed")?;
+    let period = a.get_f64("period")?;
+    if !(period > 0.0) {
+        anyhow::bail!("--period must be > 0, got {period}");
+    }
+    let threads = match a.get_usize("threads")? {
+        0 => dgro::graph::eval::EvalPool::default_threads(),
+        t => t,
+    };
+    let shards = a.get_usize("shards")?;
+    let tcfg = parse_traffic_cfg(&a)?;
+    match action {
+        "run" => {
+            let spec = if a.get("spec").is_empty() {
+                scenario::find(a.get("name"))?
+            } else {
+                scenario::ScenarioSpec::load(a.get("spec"))?
+            };
+            let topology = scenario::Topology::parse(a.get("topology"))?;
+            let mut engine = scenario::ScenarioEngine::new(spec, seed)?;
+            engine.period = period;
+            engine.threads = threads;
+            engine.shards = shards;
+            engine.certify = parse_certify(&a)?;
+            if !a.get("transport").is_empty() {
+                engine.transport = Some(dgro::net::TransportKind::parse(
+                    a.get("transport"),
+                )?);
+            }
+            engine.time_scale = a.get_f64("time-scale")?;
+            engine.loss_rate = a.get_f64("loss-rate")?;
+            engine.dup_rate = a.get_f64("dup-rate")?;
+            engine.reorder_rate = a.get_f64("reorder-rate")?;
+            let (report, traffic, obs) =
+                engine.run_traffic(topology, tcfg)?;
+            print!("{}", report.render());
+            println!();
+            print!("{}", traffic.render());
+            if !a.get("out").is_empty() {
+                runner::emit(
+                    &[
+                        report.table(),
+                        traffic.table(),
+                        traffic.summary_table(),
+                    ],
+                    a.get("out"),
+                )?;
+            }
+            let obs_out = a.get("obs-out");
+            if !obs_out.is_empty() {
+                let sim_only = matches!(
+                    engine.transport,
+                    None | Some(dgro::net::TransportKind::Sim)
+                );
+                obs.write_dir(Path::new(obs_out), sim_only)?;
+                log_info!("traffic obs artifacts written to {obs_out}");
+            }
+            Ok(())
+        }
+        "compare" => {
+            if !a.get("transport").is_empty() {
+                anyhow::bail!(
+                    "--transport applies to 'traffic run' only; \
+                     compare always uses the in-process coordinators"
+                );
+            }
+            if a.get_f64("loss-rate")? != 0.0
+                || a.get_f64("dup-rate")? != 0.0
+                || a.get_f64("reorder-rate")? != 0.0
+            {
+                anyhow::bail!(
+                    "--loss-rate/--dup-rate/--reorder-rate apply to \
+                     transport-backed 'traffic run' only"
+                );
+            }
+            let mut topologies: Vec<scenario::Topology> =
+                if a.switch("quick") {
+                    vec![
+                        scenario::Topology::Dgro,
+                        scenario::Topology::Chord,
+                        scenario::Topology::Rapid,
+                    ]
+                } else {
+                    scenario::Topology::ALL.to_vec()
+                };
+            if shards > 1 {
+                topologies.push(scenario::Topology::DgroSharded);
+            }
+            let rep = scenario::compare_opts(
+                &scenario::catalog(),
+                &topologies,
+                seed,
+                scenario::CompareOpts {
+                    period,
+                    threads,
+                    shards,
+                    certify: parse_certify(&a)?,
+                    traffic: Some(tcfg),
+                },
+            )?;
+            print!("{}", rep.render());
+            if a.get("out").is_empty() {
+                for t in &rep.traffic_tables {
+                    println!("\n{}", t.to_markdown());
+                }
+            } else {
+                let mut tables = vec![rep.summary.clone()];
+                if let Some(ts) = &rep.traffic_summary {
+                    tables.push(ts.clone());
+                }
+                tables.extend(rep.timelines.iter().cloned());
+                tables.extend(rep.traffic_tables.iter().cloned());
+                runner::emit(&tables, a.get("out"))?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown traffic action '{other}' (run | compare)\n\n{}",
             cmd.usage()
         ),
     }

@@ -798,7 +798,23 @@ impl<T: Transport> NetCoordinator<T> {
         &mut self,
         trace: &EventTrace,
         horizon: f64,
+        latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+    ) -> Result<CoordinatorReport> {
+        self.run_dynamic_observed(trace, horizon, latency_at, None)
+    }
+
+    /// [`NetCoordinator::run_dynamic`] with a per-period overlay
+    /// observer — the traffic-plane hook, identical in contract to
+    /// [`Coordinator::run_dynamic_observed`](crate::coordinator::Coordinator::run_dynamic_observed).
+    /// The observer sees the coordinator's oracle view of the alive
+    /// overlay, so traffic reports stay byte-deterministic even when
+    /// the transport injects loss.
+    pub fn run_dynamic_observed(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
         mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+        mut observer: Option<crate::traffic::OverlayObserver<'_>>,
     ) -> Result<CoordinatorReport> {
         let initial_diameter = diameter::diameter(&self.overlay());
         let mut timeline = Vec::new();
@@ -932,6 +948,13 @@ impl<T: Transport> NetCoordinator<T> {
             );
             swaps0 = swaps_now;
             timeline.push((t, rho, d));
+            if let Some(f) = observer.as_mut() {
+                let ga = self.alive_overlay();
+                let mut alive: Vec<u32> =
+                    self.membership.alive().collect();
+                alive.sort_unstable();
+                f(t, &ga, &self.w, &alive);
+            }
 
             // Close the loop: every member hears the period summary.
             self.begin_phase();

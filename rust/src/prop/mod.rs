@@ -17,6 +17,10 @@
 //! });
 //! ```
 
+pub mod overlay;
+
+pub use overlay::{connected_over, OverlayCase};
+
 use crate::util::rng::Rng;
 
 /// Knobs for a property run.
@@ -74,6 +78,74 @@ pub fn forall(
     }
 }
 
+/// Greedily minimize a failing case: repeatedly take the first
+/// one-step-smaller candidate (from `shrink`) that still fails, until
+/// no candidate fails or `max_evals` property evaluations were spent.
+/// Returns the smallest failing case reached (always still failing).
+pub fn shrink_case<C: Clone>(
+    start: C,
+    shrink: impl Fn(&C) -> Vec<C>,
+    fails: &mut impl FnMut(&C) -> bool,
+    max_evals: usize,
+) -> C {
+    let mut current = start;
+    let mut evals = 0usize;
+    'outer: loop {
+        for cand in shrink(&current) {
+            if evals >= max_evals {
+                break 'outer;
+            }
+            evals += 1;
+            if fails(&cand) {
+                current = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    current
+}
+
+/// [`forall`] with shrinking: cases come from an explicit generator
+/// and a failing case is minimized via [`shrink_case`] before the
+/// panic, so the report shows the smallest (`Debug`-printed) input
+/// that still violates the property — plus the replay seed for the
+/// original draw.
+pub fn forall_shrunk<C: Clone + std::fmt::Debug>(
+    name: &str,
+    config: Config,
+    mut generate: impl FnMut(&mut Rng) -> C,
+    shrink: impl Fn(&C) -> Vec<C>,
+    mut prop: impl FnMut(&C) -> Result<(), String>,
+) {
+    for case in 0..config.cases {
+        let case_seed = config
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let drawn = generate(&mut rng);
+        if prop(&drawn).is_ok() {
+            continue;
+        }
+        let minimal = shrink_case(
+            drawn,
+            &shrink,
+            &mut |c: &C| prop(c).is_err(),
+            10_000,
+        );
+        let msg = prop(&minimal)
+            .err()
+            .unwrap_or_else(|| "shrunk case stopped failing".into());
+        panic!(
+            "property '{name}' failed at case {case}/{} \
+             (replay seed: {case_seed:#x}): {msg}\n\
+             shrunk case: {minimal:?}",
+            config.cases
+        );
+    }
+}
+
 /// Assert-style helper for property bodies.
 pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
     if cond {
@@ -127,6 +199,51 @@ mod tests {
             Ok(())
         });
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn passing_shrunk_property_runs_all_cases() {
+        let mut count = 0;
+        forall_shrunk(
+            "small ints pass",
+            Config::default().cases(12),
+            |rng| rng.index(100),
+            |&n| if n > 0 { vec![n - 1, n / 2] } else { vec![] },
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk case: 10")]
+    fn failing_shrunk_property_reports_the_minimal_case() {
+        // Fails for n >= 10; greedy shrinking must land exactly on 10.
+        forall_shrunk(
+            "ints below ten",
+            Config::default().cases(64),
+            |rng| rng.index(1000),
+            |&n| if n > 0 { vec![n - 1, n / 2] } else { vec![] },
+            |&n| ensure(n < 10, format!("{n} >= 10")),
+        );
+    }
+
+    #[test]
+    fn shrink_case_respects_the_eval_budget() {
+        let mut evals = 0usize;
+        let out = shrink_case(
+            1_000_000usize,
+            |&n| if n > 0 { vec![n - 1] } else { vec![] },
+            &mut |_| {
+                evals += 1;
+                true
+            },
+            5,
+        );
+        assert_eq!(evals, 5);
+        assert_eq!(out, 1_000_000 - 5);
     }
 
     #[test]

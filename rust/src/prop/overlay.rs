@@ -1,0 +1,269 @@
+//! Shrinkable random-overlay cases for the routing property tests.
+//!
+//! [`OverlayCase`] is a connected alive sub-overlay drawn at random:
+//! a universe of `n` nodes, an alive subset (≥ 2 nodes), a ring over
+//! the alive set plus random chords, and a seed that derives a
+//! *metric* latency matrix (nodes embedded in the plane, weights =
+//! Euclidean distance). The metric embedding matters: with the
+//! triangle inequality, a direct edge is itself a shortest path, so
+//! the stretch-equality-on-neighbors property is structural rather
+//! than probabilistic.
+//!
+//! Cases shrink ([`OverlayCase::shrinks`]) by dropping alive nodes or
+//! edges while preserving the generator invariant (alive ≥ 2,
+//! connected over the alive set), so [`super::forall_shrunk`] reports
+//! a minimal failing overlay instead of a 500-node haystack.
+
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+use crate::util::rng::Rng;
+
+/// splitmix64 finalizer: one u64 in, one well-mixed u64 out.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// Deterministic coordinate of `node` along `axis`, in [0, 100).
+fn coord(seed: u64, node: usize, axis: u64) -> f64 {
+    let x = mix(
+        seed ^ (node as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)
+            ^ axis.wrapping_mul(0x2545_F491_4F6C_DD1D),
+    );
+    (x >> 11) as f64 / (1u64 << 53) as f64 * 100.0
+}
+
+/// A randomly drawn, shrinkable overlay: universe, alive subset,
+/// undirected alive-to-alive edge list, and the metric seed.
+#[derive(Clone, Debug)]
+pub struct OverlayCase {
+    /// Universe size (node ids are `0..n`).
+    pub n: usize,
+    /// Alive node ids, sorted, at least 2.
+    pub alive: Vec<u32>,
+    /// Undirected edges between alive nodes, `(min, max)` normalized.
+    pub edges: Vec<(u32, u32)>,
+    /// Seed for the planar embedding behind [`OverlayCase::metric`].
+    pub seed: u64,
+}
+
+impl OverlayCase {
+    /// Draw a connected overlay with universe size in `[2, max_n]`.
+    pub fn arbitrary(rng: &mut Rng, max_n: usize) -> OverlayCase {
+        let max_n = max_n.max(2);
+        let n = 2 + rng.index(max_n - 1);
+        let alive_count = 2 + rng.index(n - 1);
+        let mut perm = rng.permutation(n);
+        perm.truncate(alive_count);
+        // Base ring over the (shuffled) alive nodes keeps the overlay
+        // connected by construction; chords add shortcuts.
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        let push = |edges: &mut Vec<(u32, u32)>, a: u32, b: u32| {
+            if a == b {
+                return;
+            }
+            let e = (a.min(b), a.max(b));
+            if !edges.contains(&e) {
+                edges.push(e);
+            }
+        };
+        for i in 0..alive_count {
+            let a = perm[i];
+            let b = perm[(i + 1) % alive_count];
+            push(&mut edges, a, b);
+        }
+        for _ in 0..rng.index(alive_count + 1) {
+            let a = perm[rng.index(alive_count)];
+            let b = perm[rng.index(alive_count)];
+            push(&mut edges, a, b);
+        }
+        let mut alive = perm;
+        alive.sort_unstable();
+        OverlayCase {
+            n,
+            alive,
+            edges,
+            seed: rng.next_u64(),
+        }
+    }
+
+    /// The metric: Euclidean distance between seeded planar points
+    /// (zero on the diagonal). Satisfies the triangle inequality.
+    pub fn metric(&self) -> LatencyMatrix {
+        let seed = self.seed;
+        LatencyMatrix::from_fn(self.n, move |u, v| {
+            if u == v {
+                return 0.0;
+            }
+            let dx = coord(seed, u, 0) - coord(seed, v, 0);
+            let dy = coord(seed, u, 1) - coord(seed, v, 1);
+            (dx * dx + dy * dy).sqrt() as f32
+        })
+    }
+
+    /// Materialize the alive overlay graph (over the full universe —
+    /// dead nodes exist but have no edges) and its metric.
+    pub fn graph(&self) -> (Graph, LatencyMatrix) {
+        let w = self.metric();
+        let mut g = Graph::empty(self.n);
+        for &(u, v) in &self.edges {
+            g.add_edge(u as usize, v as usize, w.get(u as usize, v as usize));
+        }
+        (g, w)
+    }
+
+    /// Whether the alive set is connected under the edge list.
+    pub fn is_connected(&self) -> bool {
+        connected_over(&self.alive, &self.edges)
+    }
+
+    /// One-step smaller candidate cases, each preserving the generator
+    /// invariant (alive ≥ 2, connected over alive). Node drops come
+    /// first so shrinking reduces the overlay before thinning edges.
+    pub fn shrinks(&self) -> Vec<OverlayCase> {
+        let mut out = Vec::new();
+        if self.alive.len() > 2 {
+            for (i, &dead) in self.alive.iter().enumerate() {
+                let mut c = self.clone();
+                c.alive.remove(i);
+                c.edges.retain(|&(u, v)| u != dead && v != dead);
+                if c.is_connected() {
+                    out.push(c);
+                }
+            }
+        }
+        for i in 0..self.edges.len() {
+            let mut c = self.clone();
+            c.edges.remove(i);
+            if c.is_connected() {
+                out.push(c);
+            }
+        }
+        // Tighten the universe once nothing above it is alive.
+        let top = self.alive.last().map_or(0, |&a| a as usize + 1);
+        if top < self.n {
+            let mut c = self.clone();
+            c.n = top;
+            out.push(c);
+        }
+        out
+    }
+}
+
+/// BFS connectivity of `alive` under the undirected `edges` list
+/// (edges touching non-alive nodes are ignored).
+pub fn connected_over(alive: &[u32], edges: &[(u32, u32)]) -> bool {
+    if alive.len() <= 1 {
+        return !alive.is_empty();
+    }
+    let idx = |x: u32| alive.binary_search(&x).ok();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); alive.len()];
+    for &(u, v) in edges {
+        if let (Some(a), Some(b)) = (idx(u), idx(v)) {
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+    }
+    let mut seen = vec![false; alive.len()];
+    let mut queue = vec![0usize];
+    seen[0] = true;
+    let mut reached = 1;
+    while let Some(a) = queue.pop() {
+        for &b in &adj[a] {
+            if !seen[b] {
+                seen[b] = true;
+                reached += 1;
+                queue.push(b);
+            }
+        }
+    }
+    reached == alive.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::shrink_case;
+
+    #[test]
+    fn arbitrary_cases_are_connected_and_well_formed() {
+        let mut rng = Rng::new(0xCA5E);
+        for _ in 0..64 {
+            let c = OverlayCase::arbitrary(&mut rng, 64);
+            assert!(c.alive.len() >= 2);
+            assert!(c.alive.windows(2).all(|w| w[0] < w[1]));
+            assert!(c.is_connected(), "generator must emit connected overlays");
+            for &(u, v) in &c.edges {
+                assert!(u < v, "edges must be normalized");
+                assert!(c.alive.binary_search(&u).is_ok());
+                assert!(c.alive.binary_search(&v).is_ok());
+            }
+            let (g, w) = c.graph();
+            assert_eq!(g.n(), c.n);
+            assert_eq!(g.m(), c.edges.len());
+            assert_eq!(w.n(), c.n);
+        }
+    }
+
+    #[test]
+    fn metric_satisfies_triangle_inequality_on_samples() {
+        let c = OverlayCase {
+            n: 12,
+            alive: (0..12).collect(),
+            edges: vec![],
+            seed: 99,
+        };
+        let w = c.metric();
+        for u in 0..12 {
+            for v in 0..12 {
+                assert_eq!(w.get(u, v), w.get(v, u));
+                for k in 0..12 {
+                    assert!(
+                        w.get(u, v) <= w.get(u, k) + w.get(k, v) + 1e-3,
+                        "triangle violated at ({u},{k},{v})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shrinks_preserve_the_invariant_and_reduce() {
+        let mut rng = Rng::new(7);
+        let c = OverlayCase::arbitrary(&mut rng, 48);
+        for s in c.shrinks() {
+            assert!(s.alive.len() >= 2);
+            assert!(s.is_connected());
+            assert!(
+                s.alive.len() < c.alive.len()
+                    || s.edges.len() < c.edges.len()
+                    || s.n < c.n,
+                "every shrink candidate must be strictly smaller"
+            );
+        }
+    }
+
+    #[test]
+    fn shrinking_finds_the_minimal_failing_overlay() {
+        // Property: "fewer than 4 alive nodes". The minimal failing
+        // case has exactly 4 alive nodes and a spanning tree (3 edges).
+        let mut rng = Rng::new(0xBEEF);
+        let start = loop {
+            let c = OverlayCase::arbitrary(&mut rng, 64);
+            if c.alive.len() >= 6 {
+                break c;
+            }
+        };
+        let mut fails = |c: &OverlayCase| c.alive.len() >= 4;
+        let minimal =
+            shrink_case(start, |c| c.shrinks(), &mut fails, 100_000);
+        assert_eq!(minimal.alive.len(), 4);
+        assert_eq!(minimal.edges.len(), 3);
+        assert_eq!(minimal.n, *minimal.alive.last().unwrap() as usize + 1);
+    }
+}

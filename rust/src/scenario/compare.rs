@@ -2,14 +2,25 @@
 //! conditions (one seed → one base latency draw + one churn trace per
 //! scenario, shared by all topologies) and tabulate diameter-under-churn
 //! — the DGRO-vs-baselines view the paper's static figures cannot show.
+//!
+//! With [`CompareOpts::traffic`] set, every run also drives the traffic
+//! plane ([`crate::traffic`]) over the evolving overlay and the report
+//! grows p99-latency and greedy-stretch columns next to diameter — the
+//! Papillon-style "is the low diameter actually routable?" view.
+//! [`CompareOpts::certify`] selects the per-topology certification mode
+//! (PR 7 upper-envelope semantics for `hybrid`/`sketch`); the
+//! centralized DGRO column always certifies exactly, since its adaptive
+//! path steers on true diameters.
 
 use std::fmt::Write as _;
 
 use anyhow::Result;
 
+use crate::graph::eval::CertifyConfig;
 use crate::metrics::Table;
 use crate::scenario::engine::{ScenarioEngine, ScenarioReport, Topology};
 use crate::scenario::spec::ScenarioSpec;
+use crate::traffic::{TrafficConfig, TrafficReport};
 
 /// Output of [`compare`].
 #[derive(Clone, Debug)]
@@ -24,6 +35,13 @@ pub struct CompareReport {
     /// One table per scenario: per-period alive-overlay diameter for
     /// every topology.
     pub timelines: Vec<Table>,
+    /// Traffic summary (rows `[scenario_index, p99_ms and mean_stretch
+    /// per topology…]`) when [`CompareOpts::traffic`] was set.
+    pub traffic_summary: Option<Table>,
+    /// One traffic detail table per scenario (row per topology:
+    /// success rate, p50/p99, stretch, load imbalance, failure counts)
+    /// when traffic was enabled; empty otherwise.
+    pub traffic_tables: Vec<Table>,
 }
 
 impl CompareReport {
@@ -48,6 +66,32 @@ impl CompareReport {
             }
             let _ = writeln!(out, "|");
         }
+        if let Some(ts) = &self.traffic_summary {
+            let _ = writeln!(out);
+            let _ = writeln!(out, "traffic: p99 latency (ms) / stretch");
+            let _ = write!(out, "| scenario          ");
+            for t in &self.topologies {
+                let _ = write!(out, "| {:>16} ", t.name());
+            }
+            let _ = writeln!(out, "|");
+            let _ = write!(out, "|---");
+            for _ in &self.topologies {
+                let _ = write!(out, "|---");
+            }
+            let _ = writeln!(out, "|");
+            for (i, name) in self.scenarios.iter().enumerate() {
+                let _ = write!(out, "| {name:<17} ");
+                for j in 0..self.topologies.len() {
+                    let _ = write!(
+                        out,
+                        "| {:8.3} /{:6.3} ",
+                        ts.rows[i][1 + 2 * j],
+                        ts.rows[i][2 + 2 * j]
+                    );
+                }
+                let _ = writeln!(out, "|");
+            }
+        }
         out
     }
 }
@@ -67,6 +111,15 @@ pub struct CompareOpts {
     /// Partition count for [`Topology::DgroSharded`] columns (ignored
     /// by every other topology; 0 resolves to the engine default).
     pub shards: usize,
+    /// Per-topology diameter certification (`--certify`). Non-exact
+    /// modes apply PR 7's upper-envelope semantics to the static and
+    /// sharded columns; the centralized DGRO column is always forced
+    /// to exact (its adaptive path steers on true diameters).
+    pub certify: CertifyConfig,
+    /// When set, every run also drives the traffic plane and the
+    /// report grows p99/stretch columns plus per-scenario traffic
+    /// detail tables.
+    pub traffic: Option<TrafficConfig>,
 }
 
 impl Default for CompareOpts {
@@ -75,7 +128,20 @@ impl Default for CompareOpts {
             period: DEFAULT_PERIOD_MS,
             threads: 1,
             shards: 0,
+            certify: CertifyConfig::exact(),
+            traffic: None,
         }
+    }
+}
+
+/// The certification a given topology column actually runs under:
+/// centralized DGRO is pinned to exact, everything else follows the
+/// caller's choice.
+fn effective_certify(certify: CertifyConfig, topo: Topology) -> CertifyConfig {
+    if topo == Topology::Dgro {
+        CertifyConfig::exact()
+    } else {
+        certify
     }
 }
 
@@ -102,7 +168,7 @@ pub fn compare(
         CompareOpts {
             period,
             threads,
-            shards: 0,
+            ..CompareOpts::default()
         },
     )
 }
@@ -120,6 +186,8 @@ pub fn compare_opts(
         period,
         threads,
         shards,
+        certify,
+        traffic,
     } = opts;
     assert!(!specs.is_empty() && !topologies.is_empty());
     let mut header: Vec<String> = vec!["scenario".to_string()];
@@ -130,6 +198,19 @@ pub fn compare_opts(
         &header_refs,
     );
 
+    let mut traffic_summary: Option<Table> = traffic.map(|_| {
+        let mut th: Vec<String> = vec!["scenario".to_string()];
+        for t in topologies {
+            th.push(format!("{}_p99_ms", t.name()));
+            th.push(format!("{}_stretch", t.name()));
+        }
+        let th_refs: Vec<&str> = th.iter().map(|s| s.as_str()).collect();
+        Table::new(
+            "Scenario compare: traffic p99 latency and greedy stretch",
+            &th_refs,
+        )
+    });
+    let mut traffic_tables = Vec::new();
     let mut timelines = Vec::with_capacity(specs.len());
     let mut names = Vec::with_capacity(specs.len());
     for (si, spec) in specs.iter().enumerate() {
@@ -139,36 +220,84 @@ pub fn compare_opts(
         // are identical to the serial order. Threads beyond the
         // topology fan-out go to each engine's own evaluation pool.
         let inner_threads = (threads / topologies.len()).max(1);
-        let runs: Vec<ScenarioReport> = if threads > 1 {
+        type Run = (ScenarioReport, Option<TrafficReport>);
+        let one_run = |topo: Topology,
+                       engine_threads: usize|
+         -> Result<Run> {
+            let mut engine = ScenarioEngine::new(spec.clone(), seed)?;
+            engine.period = period;
+            engine.threads = engine_threads;
+            engine.shards = shards;
+            engine.certify = effective_certify(certify, topo);
+            match traffic {
+                Some(tcfg) => {
+                    let (rep, traf, _obs) =
+                        engine.run_traffic(topo, tcfg)?;
+                    Ok((rep, Some(traf)))
+                }
+                None => Ok((engine.run(topo)?, None)),
+            }
+        };
+        let runs: Vec<Run> = if threads > 1 {
             crate::par::scoped_map(
                 topologies.to_vec(),
                 threads,
-                |_, topo| -> Result<ScenarioReport> {
-                    let mut engine =
-                        ScenarioEngine::new(spec.clone(), seed)?;
-                    engine.period = period;
-                    engine.threads = inner_threads;
-                    engine.shards = shards;
-                    engine.run(topo)
-                },
+                |_, topo| one_run(topo, inner_threads),
             )
             .into_iter()
             .collect::<Result<Vec<_>>>()?
         } else {
-            let mut engine = ScenarioEngine::new(spec.clone(), seed)?;
-            engine.period = period;
-            engine.shards = shards;
             let mut v = Vec::with_capacity(topologies.len());
             for &topo in topologies {
-                v.push(engine.run(topo)?);
+                v.push(one_run(topo, 1)?);
             }
             v
         };
         let mut row = vec![si as f64];
-        for rep in &runs {
+        for (rep, _) in &runs {
             row.push(rep.mean_diameter());
         }
         summary.row(row);
+        if traffic.is_some() {
+            let mut trow = vec![si as f64];
+            let mut tt = Table::new(
+                &format!("Scenario {}: traffic", spec.name),
+                &[
+                    "topology_idx",
+                    "success_rate",
+                    "p50_ms",
+                    "p99_ms",
+                    "mean_stretch",
+                    "max_stretch",
+                    "load_imbalance",
+                    "timeouts",
+                    "retries",
+                    "routing_failures",
+                ],
+            );
+            for (ti, (_, traf)) in runs.iter().enumerate() {
+                let tr = traf.as_ref().expect("traffic enabled");
+                trow.push(tr.p99_ms);
+                trow.push(tr.mean_stretch);
+                tt.row(vec![
+                    ti as f64,
+                    tr.success_rate(),
+                    tr.p50_ms,
+                    tr.p99_ms,
+                    tr.mean_stretch,
+                    tr.max_stretch,
+                    tr.load_imbalance(),
+                    tr.timeouts as f64,
+                    tr.retries as f64,
+                    tr.routing_failures as f64,
+                ]);
+            }
+            traffic_summary
+                .as_mut()
+                .expect("traffic summary allocated")
+                .row(trow);
+            traffic_tables.push(tt);
+        }
 
         let mut tl_header: Vec<String> = vec!["t_ms".to_string()];
         tl_header.extend(topologies.iter().map(|t| t.name().to_string()));
@@ -179,9 +308,9 @@ pub fn compare_opts(
             &tl_refs,
         );
         // Every run shares the spec's horizon/period, so rows align.
-        for p in 0..runs[0].rows.len() {
-            let mut cells = vec![runs[0].rows[p].t];
-            for run in &runs {
+        for p in 0..runs[0].0.rows.len() {
+            let mut cells = vec![runs[0].0.rows[p].t];
+            for (run, _) in &runs {
                 cells.push(
                     run.rows.get(p).map(|r| r.diameter).unwrap_or(0.0),
                 );
@@ -196,6 +325,8 @@ pub fn compare_opts(
         topologies: topologies.to_vec(),
         summary,
         timelines,
+        traffic_summary,
+        traffic_tables,
     })
 }
 
@@ -258,6 +389,87 @@ mod tests {
         // Deterministic like every other column.
         let r2 = compare_opts(&specs, &topos, 5, opts).unwrap();
         assert_eq!(r1.render(), r2.render());
+    }
+
+    #[test]
+    fn traffic_columns_ride_the_cross_product() {
+        let specs = vec![mini("a")];
+        let topos = [Topology::Dgro, Topology::Chord];
+        let mut tcfg = TrafficConfig::default();
+        tcfg.rate = 20_000.0;
+        let opts = CompareOpts {
+            traffic: Some(tcfg),
+            ..CompareOpts::default()
+        };
+        let r1 = compare_opts(&specs, &topos, 7, opts).unwrap();
+        let ts = r1.traffic_summary.as_ref().unwrap();
+        assert_eq!(ts.rows.len(), 1);
+        assert_eq!(ts.rows[0].len(), 1 + 2 * topos.len());
+        assert_eq!(r1.traffic_tables.len(), 1);
+        for j in 0..topos.len() {
+            let stretch = ts.rows[0][2 + 2 * j];
+            assert!(
+                stretch == 0.0 || stretch >= 1.0,
+                "stretch must be ≥ 1 when sampled, got {stretch}"
+            );
+        }
+        assert!(r1.render().contains("traffic: p99"));
+        // Deterministic, including across thread counts.
+        let r2 = compare_opts(&specs, &topos, 7, opts).unwrap();
+        assert_eq!(r1.render(), r2.render());
+        let rp = compare_opts(
+            &specs,
+            &topos,
+            7,
+            CompareOpts {
+                threads: 4,
+                ..opts
+            },
+        )
+        .unwrap();
+        assert_eq!(r1.render(), rp.render());
+        for (a, b) in r1.traffic_tables.iter().zip(&rp.traffic_tables) {
+            assert_eq!(a.to_csv(), b.to_csv());
+        }
+    }
+
+    #[test]
+    fn hybrid_certification_is_allowed_on_compare() {
+        use crate::graph::eval::CertifyMode;
+        let specs = vec![mini("a")];
+        let topos = [Topology::Dgro, Topology::Chord, Topology::Rapid];
+        let exact =
+            compare_opts(&specs, &topos, 11, CompareOpts::default())
+                .unwrap();
+        let mut certify = CertifyConfig::exact();
+        certify.mode = CertifyMode::Hybrid;
+        certify.budget = 8;
+        certify.oracle_every = 4;
+        let hybrid = compare_opts(
+            &specs,
+            &topos,
+            11,
+            CompareOpts {
+                certify,
+                ..CompareOpts::default()
+            },
+        )
+        .unwrap();
+        for (er, hr) in
+            exact.summary.rows.iter().zip(&hybrid.summary.rows)
+        {
+            assert_eq!(er[1], hr[1], "dgro column stays exact");
+            // Upper-envelope semantics: non-exact columns report
+            // conservative (≥ exact) mean diameters.
+            for j in 2..er.len() {
+                assert!(
+                    hr[j] >= er[j] - 1e-9,
+                    "upper envelope violated: {} < {}",
+                    hr[j],
+                    er[j]
+                );
+            }
+        }
     }
 
     #[test]

@@ -51,6 +51,9 @@ use crate::topology::{
     chord::Chord, circulant::Circulant, kring, paper_k, perigee,
     random_ring, rapid::Rapid,
 };
+use crate::traffic::{
+    OverlayObserver, TrafficConfig, TrafficReport, TrafficSim,
+};
 use crate::util::rng::Rng;
 
 /// Which overlay a scenario drives.
@@ -330,12 +333,14 @@ fn replay_over<T: crate::net::Transport>(
     horizon: f64,
     record: bool,
     latency_at: &mut dyn FnMut(f64) -> Option<crate::latency::LatencyMatrix>,
+    observer: Option<OverlayObserver<'_>>,
 ) -> Result<(crate::coordinator::CoordinatorReport, Metrics, Obs)> {
     let mut co = NetCoordinator::new(cfg, w0, transport)?;
     if record {
         co.obs.rec.set_enabled(true);
     }
-    let rep = co.run_dynamic(trace, horizon, latency_at)?;
+    let rep =
+        co.run_dynamic_observed(trace, horizon, latency_at, observer)?;
     let obs = co.obs.clone();
     Ok((rep, co.metrics, obs))
 }
@@ -402,6 +407,47 @@ impl ScenarioEngine {
     /// everything else replays the periods over a statically built
     /// overlay.
     pub fn run(&self, topology: Topology) -> Result<ScenarioReport> {
+        self.run_observed(topology, None)
+    }
+
+    /// Run the spec against one topology while a traffic plane rides
+    /// along: each period's alive overlay feeds a
+    /// [`TrafficSim`], and the resulting [`TrafficReport`] (p50/p99
+    /// end-to-end latency, success rate, per-node load, greedy-routing
+    /// stretch) comes back next to the diameter report. Deterministic
+    /// like [`ScenarioEngine::run`]: same seed → byte-identical
+    /// reports, across worker thread counts.
+    pub fn run_traffic(
+        &self,
+        topology: Topology,
+        tcfg: TrafficConfig,
+    ) -> Result<(ScenarioReport, TrafficReport, Obs)> {
+        tcfg.validate()?;
+        let mut sim = TrafficSim::new(
+            self.spec.nodes,
+            self.seed,
+            tcfg,
+            self.threads.max(1),
+        );
+        let rep = {
+            let mut feed = |t: f64,
+                            g: &Graph,
+                            w: &crate::latency::LatencyMatrix,
+                            alive: &[u32]| {
+                sim.on_period(t, g, w, alive)
+            };
+            self.run_observed(topology, Some(&mut feed))?
+        };
+        let (traffic, obs) =
+            sim.finish(&self.spec.name, topology.name(), self.seed);
+        Ok((rep, traffic, obs))
+    }
+
+    fn run_observed(
+        &self,
+        topology: Topology,
+        observer: Option<OverlayObserver<'_>>,
+    ) -> Result<ScenarioReport> {
         if self.transport.is_some() && topology != Topology::Dgro {
             bail!(
                 "--transport runs support --topology dgro only \
@@ -437,16 +483,20 @@ impl ScenarioEngine {
         }
         match topology {
             Topology::Dgro | Topology::DgroSharded => {
-                self.run_adaptive(topology)
+                self.run_adaptive(topology, observer)
             }
-            t => self.run_static(t),
+            t => self.run_static(t, observer),
         }
     }
 
     /// DGRO path: the coordinator's own event loop (centralized or
     /// sharded, per `topology`), fed the generated trace and the
     /// time-varying latency view.
-    fn run_adaptive(&self, topology: Topology) -> Result<ScenarioReport> {
+    fn run_adaptive(
+        &self,
+        topology: Topology,
+        observer: Option<OverlayObserver<'_>>,
+    ) -> Result<ScenarioReport> {
         let (dyn_w, trace) = self.setting()?;
         let mut cfg = Config::default();
         cfg.nodes = self.spec.nodes;
@@ -474,8 +524,12 @@ impl ScenarioEngine {
             if self.obs_record {
                 co.obs.rec.set_enabled(true);
             }
-            let rep =
-                co.run_dynamic(&trace, self.spec.horizon, &mut latency_at)?;
+            let rep = co.run_dynamic_observed(
+                &trace,
+                self.spec.horizon,
+                &mut latency_at,
+                observer,
+            )?;
             let obs = co.obs.clone();
             (rep, co.metrics, obs)
         } else if let Some(kind) = self.transport {
@@ -516,6 +570,7 @@ impl ScenarioEngine {
                     horizon,
                     record,
                     &mut latency_at,
+                    observer,
                 )?
             } else {
                 replay_over(
@@ -526,6 +581,7 @@ impl ScenarioEngine {
                     horizon,
                     record,
                     &mut latency_at,
+                    observer,
                 )?
             }
         } else {
@@ -533,8 +589,12 @@ impl ScenarioEngine {
             if self.obs_record {
                 co.obs.rec.set_enabled(true);
             }
-            let rep =
-                co.run_dynamic(&trace, self.spec.horizon, &mut latency_at)?;
+            let rep = co.run_dynamic_observed(
+                &trace,
+                self.spec.horizon,
+                &mut latency_at,
+                observer,
+            )?;
             let obs = co.obs.clone();
             (rep, co.metrics, obs)
         };
@@ -573,7 +633,11 @@ impl ScenarioEngine {
     /// then replay the same periods — membership events restrict the
     /// alive sub-overlay, latency updates re-weight the fixed edges —
     /// without any re-wiring.
-    fn run_static(&self, topology: Topology) -> Result<ScenarioReport> {
+    fn run_static(
+        &self,
+        topology: Topology,
+        mut observer: Option<OverlayObserver<'_>>,
+    ) -> Result<ScenarioReport> {
         let (dyn_w, trace) = self.setting()?;
         let n = self.spec.nodes;
         // The t = 0 view, like the adaptive path's with_latency seed —
@@ -742,6 +806,12 @@ impl ScenarioEngine {
             }
             // else: neither weights nor alive mask moved — the alive
             // sub-overlay is byte-identical, so `d` carries over.
+            if let Some(f) = observer.as_mut() {
+                let mut alive: Vec<u32> =
+                    alive_set.iter().copied().collect();
+                alive.sort_unstable();
+                f(t, g_alive.as_ref().expect("g_alive built"), &w, &alive);
+            }
             let alive_count = alive_set.len();
             prev_alive = Some(alive_set);
             metrics.observe("overlay.alive_diameter", d);

@@ -1,0 +1,153 @@
+//! Service-traffic plane: simulated application requests routed *over*
+//! the overlay the coordinator maintains.
+//!
+//! The paper optimizes overlay **diameter**, but what a member of the
+//! integrated research infrastructure actually feels is end-to-end
+//! request latency: a request enters at some node, greedily hops the
+//! ring/chord/anchor edges toward its destination, queues for service
+//! capacity, and either completes or times out and retries. Papillon
+//! (PAPERS.md) makes the case sharply — a low-diameter ring that greedy
+//! routing cannot exploit is a worse product — so this module measures
+//! the *routable* quality of every topology the scenario engine knows:
+//!
+//! * [`route`] — greedy next-hop routing over the alive overlay: each
+//!   node forwards to the live neighbor (ring successors + K-ring
+//!   chords + shard anchors) closest to the destination in the latency
+//!   metric, delivering directly when the destination itself is a
+//!   neighbor. A visited-set guarantees termination within `n` hops.
+//! * [`workload`] — a seeded open-loop generator: `rate` requests per
+//!   sim-second (10^5–10^6 in scaled sim time), sources uniform over
+//!   the alive list, destinations cycling round-robin pools.
+//! * [`sim`] — per-node FIFO service capacity, session timeouts with
+//!   bounded retries, and the [`sim::TrafficReport`]: p50/p99
+//!   end-to-end latency, success rate, per-node load, and the
+//!   Papillon-style greedy-routing **stretch** (greedy path latency ÷
+//!   shortest-path latency) reported next to diameter.
+//!
+//! Everything is a pure function of `(overlay timeline, seed, config)`:
+//! reports are byte-identical across repeated runs and across worker
+//! thread counts (`rust/tests/traffic.rs` pins T ∈ {1,2,8}, including
+//! under `LossyTransport`), and the routing invariants — termination,
+//! never visiting a dead node, stretch ≥ 1 — are property-tested on
+//! arbitrary connected overlays with shrinking
+//! (`rust/tests/proptests.rs`).
+//!
+//! Entry points: [`ScenarioEngine::run_traffic`] drives a scenario and
+//! feeds each period's alive overlay to a [`sim::TrafficSim`];
+//! `dgro traffic run|compare` is the CLI face; `scenario::compare`
+//! grows stretch/p99 columns when traffic is enabled.
+//!
+//! [`ScenarioEngine::run_traffic`]: crate::scenario::ScenarioEngine::run_traffic
+
+use anyhow::{bail, Result};
+
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+
+pub mod route;
+pub mod sim;
+pub mod workload;
+
+pub use route::{greedy_route, RouteScratch, RouteSummary};
+pub use sim::{TrafficPeriod, TrafficReport, TrafficSim};
+pub use workload::{DestPools, Request};
+
+/// Per-period overlay observer threaded through the coordinator event
+/// loops: `(sim_time_ms, alive_overlay, latency_matrix, sorted_alive)`.
+/// The graph is the alive sub-overlay (faulty nodes do not relay) with
+/// edges weighted by the *current* latency view; `sorted_alive` lists
+/// the alive node ids ascending.
+pub type OverlayObserver<'a> =
+    &'a mut dyn FnMut(f64, &Graph, &LatencyMatrix, &[u32]);
+
+/// Knobs of the traffic plane: workload intensity, per-node service
+/// capacity, session timeout/retry policy, and stretch sampling.
+/// `Default` models a moderately loaded fabric (2·10^5 req/s across
+/// the cluster — the middle of the 10^5–10^6 design band).
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficConfig {
+    /// Open-loop arrival rate, requests per sim-second across the
+    /// whole cluster (scaled sim time).
+    pub rate: f64,
+    /// Per-node service capacity, requests per sim-second (service
+    /// time is its reciprocal; FIFO queue in front).
+    pub capacity: f64,
+    /// Session timeout, sim-ms: a request whose queue wait would
+    /// exceed this aborts and retries on the next pool destination.
+    pub timeout_ms: f64,
+    /// Bounded retries per session (0 = fail on first timeout).
+    pub retries: u32,
+    /// Round-robin destination-pool size per source node.
+    pub pool: usize,
+    /// Sampled requests per period for the stretch metric (each sample
+    /// costs one Dijkstra on the alive overlay).
+    pub stretch_samples: usize,
+    /// Extra seed mixed into the workload stream (the scenario seed is
+    /// mixed in too, so the same scenario at two seeds differs).
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> TrafficConfig {
+        TrafficConfig {
+            rate: 200_000.0,
+            capacity: 8_000.0,
+            timeout_ms: 40.0,
+            retries: 2,
+            pool: 4,
+            stretch_samples: 8,
+            seed: 0,
+        }
+    }
+}
+
+impl TrafficConfig {
+    /// Reject non-physical configurations with a CLI-grade message.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.rate > 0.0) || !self.rate.is_finite() {
+            bail!("--rate must be a positive req/s, got {}", self.rate);
+        }
+        if !(self.capacity > 0.0) || !self.capacity.is_finite() {
+            bail!(
+                "--capacity must be a positive req/s per node, got {}",
+                self.capacity
+            );
+        }
+        if !(self.timeout_ms > 0.0) || !self.timeout_ms.is_finite() {
+            bail!(
+                "--timeout-ms must be positive, got {}",
+                self.timeout_ms
+            );
+        }
+        if self.pool == 0 {
+            bail!("--pool must be at least 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_validates() {
+        TrafficConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_configs_are_rejected() {
+        let mut c = TrafficConfig::default();
+        c.rate = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = TrafficConfig::default();
+        c.capacity = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = TrafficConfig::default();
+        c.timeout_ms = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = TrafficConfig::default();
+        c.pool = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Greedy next-hop routing over the alive overlay.
+//!
+//! The forwarding rule every node applies, with nothing but its live
+//! neighbor set (ring successors + K-ring chords + shard anchors) and
+//! the latency metric:
+//!
+//! 1. If the destination itself is a live neighbor, deliver over that
+//!    edge (one hop, no estimate beats the real thing).
+//! 2. Otherwise forward to the unvisited live neighbor `v` minimizing
+//!    `w(v, dst)`, breaking ties toward the lower node id.
+//! 3. If every live neighbor was already visited, the request is
+//!    stuck: report a routing failure (the session layer retries on a
+//!    different destination).
+//!
+//! The visited set makes two invariants structural, and the proptests
+//! in `rust/tests/proptests.rs` pin them on arbitrary connected
+//! overlays: every route terminates within `n` hops (each hop claims a
+//! new node), and a route over the alive sub-overlay can never touch a
+//! dead node (dead nodes have no edges there). Delivered routes
+//! satisfy stretch ≥ 1 by definition — the greedy path is *a* path, so
+//! its latency is bounded below by the shortest one.
+
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+
+/// Reusable per-worker scratch for [`greedy_route`]: a visited mask
+/// sized to the universe plus the list of touched cells, so repeated
+/// routes reset O(path) state instead of O(n).
+pub struct RouteScratch {
+    visited: Vec<bool>,
+    touched: Vec<u32>,
+}
+
+impl RouteScratch {
+    /// Scratch for graphs of `n` nodes.
+    pub fn new(n: usize) -> RouteScratch {
+        RouteScratch {
+            visited: vec![false; n],
+            touched: Vec::new(),
+        }
+    }
+
+    fn mark(&mut self, v: u32) {
+        if !self.visited[v as usize] {
+            self.visited[v as usize] = true;
+            self.touched.push(v);
+        }
+    }
+
+    fn clear(&mut self) {
+        for &v in &self.touched {
+            self.visited[v as usize] = false;
+        }
+        self.touched.clear();
+    }
+}
+
+/// Outcome of one greedy route attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RouteSummary {
+    /// Whether the request reached its destination.
+    pub delivered: bool,
+    /// Overlay hops taken (0 when `src == dst`).
+    pub hops: u32,
+    /// Sum of traversed edge latencies, sim-ms.
+    pub latency_ms: f64,
+}
+
+/// Route one request greedily from `src` toward `dst` over `g` (the
+/// alive overlay), using `w` as the distance metric. `path`, when
+/// given, receives the full node sequence including `src` (cleared
+/// first) — the proptests use it to check the alive/edge invariants.
+/// The scratch is reset on return, so one instance serves any number
+/// of sequential routes.
+pub fn greedy_route(
+    g: &Graph,
+    w: &LatencyMatrix,
+    src: u32,
+    dst: u32,
+    scratch: &mut RouteScratch,
+    mut path: Option<&mut Vec<u32>>,
+) -> RouteSummary {
+    if let Some(p) = path.as_deref_mut() {
+        p.clear();
+        p.push(src);
+    }
+    let mut out = RouteSummary {
+        delivered: false,
+        hops: 0,
+        latency_ms: 0.0,
+    };
+    if src == dst {
+        out.delivered = true;
+        return out;
+    }
+    let mut cur = src;
+    scratch.mark(src);
+    loop {
+        let mut direct: Option<f32> = None;
+        // (metric to dst, node id, edge latency) of the best next hop.
+        let mut best: Option<(f32, u32, f32)> = None;
+        for &(v, wt) in g.neighbors(cur as usize) {
+            if v == dst {
+                direct = Some(wt);
+                break;
+            }
+            if scratch.visited[v as usize] {
+                continue;
+            }
+            let key = w.get(v as usize, dst as usize);
+            let better = match best {
+                None => true,
+                Some((bk, bv, _)) => {
+                    key < bk || (key == bk && v < bv)
+                }
+            };
+            if better {
+                best = Some((key, v, wt));
+            }
+        }
+        if let Some(wt) = direct {
+            out.hops += 1;
+            out.latency_ms += f64::from(wt);
+            out.delivered = true;
+            if let Some(p) = path.as_deref_mut() {
+                p.push(dst);
+            }
+            break;
+        }
+        match best {
+            // Stuck: every live neighbor already visited (or none).
+            None => break,
+            Some((_, v, wt)) => {
+                out.hops += 1;
+                out.latency_ms += f64::from(wt);
+                cur = v;
+                scratch.mark(v);
+                if let Some(p) = path.as_deref_mut() {
+                    p.push(v);
+                }
+            }
+        }
+    }
+    scratch.clear();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Uniform metric: w(u, v) = |u - v| (a line embeds exactly).
+    fn line_metric(n: usize) -> LatencyMatrix {
+        LatencyMatrix::from_fn(n, |u, v| {
+            (u as f32 - v as f32).abs()
+        })
+    }
+
+    #[test]
+    fn direct_neighbor_delivers_in_one_hop() {
+        let g = Graph::from_weighted_edges(3, &[(0, 1, 5.0), (1, 2, 1.0)]);
+        let w = line_metric(3);
+        let mut s = RouteScratch::new(3);
+        let r = greedy_route(&g, &w, 0, 1, &mut s, None);
+        assert!(r.delivered);
+        assert_eq!(r.hops, 1);
+        assert_eq!(r.latency_ms, 5.0);
+    }
+
+    #[test]
+    fn line_routes_end_to_end_and_sums_latency() {
+        let g = Graph::from_weighted_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)],
+        );
+        let w = line_metric(4);
+        let mut s = RouteScratch::new(4);
+        let mut path = Vec::new();
+        let r = greedy_route(&g, &w, 0, 3, &mut s, Some(&mut path));
+        assert!(r.delivered);
+        assert_eq!(r.hops, 3);
+        assert_eq!(r.latency_ms, 6.0);
+        assert_eq!(path, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn unreachable_destination_fails_within_n_hops() {
+        // 0-1 component, 2-3 component: 0 -> 3 must fail, not spin.
+        let g = Graph::from_weighted_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        let w = line_metric(4);
+        let mut s = RouteScratch::new(4);
+        let r = greedy_route(&g, &w, 0, 3, &mut s, None);
+        assert!(!r.delivered);
+        assert!(r.hops <= 4);
+    }
+
+    #[test]
+    fn self_route_is_free() {
+        let g = Graph::from_weighted_edges(2, &[(0, 1, 1.0)]);
+        let w = line_metric(2);
+        let mut s = RouteScratch::new(2);
+        let r = greedy_route(&g, &w, 1, 1, &mut s, None);
+        assert!(r.delivered);
+        assert_eq!(r.hops, 0);
+        assert_eq!(r.latency_ms, 0.0);
+    }
+
+    #[test]
+    fn scratch_resets_between_routes() {
+        let g = Graph::from_weighted_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)],
+        );
+        let w = line_metric(4);
+        let mut s = RouteScratch::new(4);
+        let a = greedy_route(&g, &w, 0, 3, &mut s, None);
+        let b = greedy_route(&g, &w, 0, 3, &mut s, None);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,671 @@
+//! The traffic simulator: queueing, timeouts, retries, and the report.
+//!
+//! [`TrafficSim`] is a streaming consumer of per-period overlay
+//! snapshots (fed by [`ScenarioEngine::run_traffic`] through an
+//! [`OverlayObserver`]): each period it generates the open-loop
+//! arrivals for the window, routes them greedily over the alive
+//! overlay, then applies per-node FIFO service capacity in arrival
+//! order. A request whose queue wait would exceed the session timeout
+//! — or whose route got stuck — retries on the next round-robin pool
+//! destination, up to the configured retry bound, paying one timeout
+//! of latency per failed attempt.
+//!
+//! Determinism contract (pinned by `rust/tests/traffic.rs`): the
+//! report is a pure function of `(overlay timeline, seed, config)`.
+//! The only parallel stage is routing, which fans request chunks over
+//! [`par::scoped_map`] and reassembles results in input order; the
+//! queueing pass is serial over a fully ordered sequence
+//! (arrival time, then request index), so worker thread count never
+//! changes a byte of the output.
+//!
+//! [`ScenarioEngine::run_traffic`]: crate::scenario::ScenarioEngine::run_traffic
+//! [`OverlayObserver`]: super::OverlayObserver
+
+use std::fmt::Write as _;
+
+use crate::graph::apsp;
+use crate::graph::Graph;
+use crate::latency::LatencyMatrix;
+use crate::metrics::Table;
+use crate::obs::Obs;
+use crate::par;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+use super::route::{greedy_route, RouteScratch, RouteSummary};
+use super::workload::{generate, DestPools, Request};
+use super::TrafficConfig;
+
+/// Per-period traffic aggregates (one row per adaptation period,
+/// aligned with the scenario report's period rows).
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficPeriod {
+    /// Period end, sim-ms.
+    pub t: f64,
+    /// Requests generated in the window.
+    pub offered: u64,
+    /// Requests that completed service.
+    pub delivered: u64,
+    /// Attempts abandoned because the queue wait exceeded the timeout.
+    pub timeouts: u64,
+    /// Retry attempts issued.
+    pub retries: u64,
+    /// Attempts whose greedy route got stuck or hit a dead component.
+    pub routing_failures: u64,
+    /// Median end-to-end latency of delivered requests, sim-ms.
+    pub p50_ms: f64,
+    /// 99th-percentile end-to-end latency, sim-ms.
+    pub p99_ms: f64,
+    /// Mean greedy-routing stretch over the period's samples (0 when
+    /// no sample was taken).
+    pub mean_stretch: f64,
+}
+
+/// Full traffic report for one `(scenario, topology, seed)` run.
+#[derive(Clone, Debug)]
+pub struct TrafficReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Topology name (CLI spelling).
+    pub topology: String,
+    /// Scenario seed.
+    pub seed: u64,
+    /// Per-period rows, aligned with the scenario report.
+    pub periods: Vec<TrafficPeriod>,
+    /// Total requests generated.
+    pub offered: u64,
+    /// Total requests that completed service.
+    pub delivered: u64,
+    /// Total timed-out attempts.
+    pub timeouts: u64,
+    /// Total retry attempts issued.
+    pub retries: u64,
+    /// Total routing failures.
+    pub routing_failures: u64,
+    /// Median end-to-end latency over every delivered request, sim-ms.
+    pub p50_ms: f64,
+    /// 99th-percentile end-to-end latency, sim-ms.
+    pub p99_ms: f64,
+    /// Mean greedy-routing stretch over every sample (≥ 1 whenever at
+    /// least one sample was taken).
+    pub mean_stretch: f64,
+    /// Worst sampled stretch.
+    pub max_stretch: f64,
+    /// Requests serviced per node (the per-node load vector; also
+    /// exported as the `traffic.node_load` counter-vec).
+    pub node_load: Vec<u64>,
+}
+
+impl TrafficReport {
+    /// Delivered ÷ offered (1.0 for an empty run).
+    pub fn success_rate(&self) -> f64 {
+        if self.offered == 0 {
+            1.0
+        } else {
+            self.delivered as f64 / self.offered as f64
+        }
+    }
+
+    /// Peak-to-mean per-node load over nodes that serviced at least
+    /// one request (1.0 = perfectly balanced; 0 for an empty run).
+    pub fn load_imbalance(&self) -> f64 {
+        let loaded: Vec<f64> = self
+            .node_load
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| c as f64)
+            .collect();
+        if loaded.is_empty() {
+            return 0.0;
+        }
+        let mean = loaded.iter().sum::<f64>() / loaded.len() as f64;
+        let max = loaded.iter().cloned().fold(0.0f64, f64::max);
+        max / mean
+    }
+
+    /// Per-period table (CSV-able artifact).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "traffic {} {} seed={}",
+                self.scenario, self.topology, self.seed
+            ),
+            &[
+                "t_ms",
+                "offered",
+                "delivered",
+                "timeouts",
+                "retries",
+                "routing_failures",
+                "p50_ms",
+                "p99_ms",
+                "mean_stretch",
+            ],
+        );
+        for p in &self.periods {
+            t.row(vec![
+                p.t,
+                p.offered as f64,
+                p.delivered as f64,
+                p.timeouts as f64,
+                p.retries as f64,
+                p.routing_failures as f64,
+                p.p50_ms,
+                p.p99_ms,
+                p.mean_stretch,
+            ]);
+        }
+        t
+    }
+
+    /// One-row totals table (CSV-able artifact).
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "traffic summary {} {} seed={}",
+                self.scenario, self.topology, self.seed
+            ),
+            &[
+                "offered",
+                "delivered",
+                "success_rate",
+                "p50_ms",
+                "p99_ms",
+                "mean_stretch",
+                "max_stretch",
+                "load_imbalance",
+                "timeouts",
+                "retries",
+                "routing_failures",
+            ],
+        );
+        t.row(vec![
+            self.offered as f64,
+            self.delivered as f64,
+            self.success_rate(),
+            self.p50_ms,
+            self.p99_ms,
+            self.mean_stretch,
+            self.max_stretch,
+            self.load_imbalance(),
+            self.timeouts as f64,
+            self.retries as f64,
+            self.routing_failures as f64,
+        ]);
+        t
+    }
+
+    /// Deterministic human-readable rendering — the byte-determinism
+    /// pins compare this string across runs and thread counts.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "traffic {} topology={} seed={}",
+            self.scenario, self.topology, self.seed
+        );
+        let _ = writeln!(
+            out,
+            "  offered {}  delivered {}  success {:.4}  \
+             timeouts {}  retries {}  routing_failures {}",
+            self.offered,
+            self.delivered,
+            self.success_rate(),
+            self.timeouts,
+            self.retries,
+            self.routing_failures
+        );
+        let _ = writeln!(
+            out,
+            "  latency p50 {:.3} ms  p99 {:.3} ms  stretch mean {:.4} \
+             max {:.4}  load max/mean {:.3}",
+            self.p50_ms,
+            self.p99_ms,
+            self.mean_stretch,
+            self.max_stretch,
+            self.load_imbalance()
+        );
+        for p in &self.periods {
+            let _ = writeln!(
+                out,
+                "  t={:8.1}  offered {:>8}  delivered {:>8}  \
+                 p50 {:>9.3}  p99 {:>9.3}  stretch {:.4}  \
+                 to {:>6}  rt {:>6}  rf {:>6}",
+                p.t,
+                p.offered,
+                p.delivered,
+                p.p50_ms,
+                p.p99_ms,
+                p.mean_stretch,
+                p.timeouts,
+                p.retries,
+                p.routing_failures
+            );
+        }
+        out
+    }
+
+    /// Machine-readable totals (the CI artifact payload).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::str(&self.scenario)),
+            ("topology", Json::str(&self.topology)),
+            ("seed", Json::num(self.seed as f64)),
+            ("offered", Json::num(self.offered as f64)),
+            ("delivered", Json::num(self.delivered as f64)),
+            ("success_rate", Json::num(self.success_rate())),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("mean_stretch", Json::num(self.mean_stretch)),
+            ("max_stretch", Json::num(self.max_stretch)),
+            ("load_imbalance", Json::num(self.load_imbalance())),
+            ("timeouts", Json::num(self.timeouts as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            (
+                "routing_failures",
+                Json::num(self.routing_failures as f64),
+            ),
+            ("periods", Json::num(self.periods.len() as f64)),
+        ])
+    }
+}
+
+/// Streaming traffic simulator: feed one period at a time via
+/// [`TrafficSim::on_period`], then [`TrafficSim::finish`].
+pub struct TrafficSim {
+    cfg: TrafficConfig,
+    threads: usize,
+    rng: Rng,
+    pools: DestPools,
+    /// Earliest time each node's server is free again, sim-ms.
+    next_free: Vec<f64>,
+    node_load: Vec<u64>,
+    latencies: Vec<f64>,
+    stretch_sum: f64,
+    stretch_count: u64,
+    stretch_max: f64,
+    periods: Vec<TrafficPeriod>,
+    prev_t: f64,
+    offered: u64,
+    delivered: u64,
+    timeouts: u64,
+    retries: u64,
+    routing_failures: u64,
+    obs: Obs,
+}
+
+impl TrafficSim {
+    /// A simulator over a universe of `n` nodes. `seed` is the
+    /// scenario seed (mixed with [`TrafficConfig::seed`] into a
+    /// dedicated workload stream); `threads` caps the routing fan-out.
+    pub fn new(
+        n: usize,
+        seed: u64,
+        cfg: TrafficConfig,
+        threads: usize,
+    ) -> TrafficSim {
+        let obs = Obs::new();
+        // Pre-register the per-node load vector so snapshots always
+        // carry it, even for an all-idle run.
+        obs.reg.counter_vec("traffic.node_load", n);
+        TrafficSim {
+            threads: threads.max(1),
+            rng: Rng::new(seed ^ cfg.seed ^ 0x7AFF_1C5E_ED01),
+            pools: DestPools::new(n, cfg.pool),
+            next_free: vec![0.0; n],
+            node_load: vec![0; n],
+            latencies: Vec::new(),
+            stretch_sum: 0.0,
+            stretch_count: 0,
+            stretch_max: 0.0,
+            periods: Vec::new(),
+            prev_t: 0.0,
+            offered: 0,
+            delivered: 0,
+            timeouts: 0,
+            retries: 0,
+            routing_failures: 0,
+            obs,
+            cfg,
+        }
+    }
+
+    /// The observability surface (request-latency histogram, per-node
+    /// load counter-vec, timeout/retry counters).
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
+    /// Simulate the window `(prev_t, t]` over this period's alive
+    /// overlay. `alive` must be the sorted alive node ids; `g` the
+    /// alive sub-overlay weighted by the current latency view `w`.
+    pub fn on_period(
+        &mut self,
+        t: f64,
+        g: &Graph,
+        w: &LatencyMatrix,
+        alive: &[u32],
+    ) {
+        let t_prev = self.prev_t;
+        self.prev_t = t;
+        let reqs = generate(
+            self.cfg.rate,
+            t_prev,
+            t,
+            alive,
+            &mut self.pools,
+            &mut self.rng,
+        );
+        let offered = reqs.len() as u64;
+        self.offered += offered;
+        self.obs.reg.incr("traffic.offered", offered);
+
+        let service_ms = 1000.0 / self.cfg.capacity;
+        let latency_hist =
+            self.obs.reg.histogram("traffic.request_latency_ms");
+        let load_vec =
+            self.obs.reg.counter_vec("traffic.node_load", g.n());
+        let mut period_lat: Vec<f64> = Vec::with_capacity(reqs.len());
+        let mut stretches: Vec<f64> = Vec::new();
+        let (mut p_deliv, mut p_to, mut p_rt, mut p_rf) =
+            (0u64, 0u64, 0u64, 0u64);
+
+        let mut attempt = 0u32;
+        let mut round = reqs;
+        while !round.is_empty() {
+            let outcomes = route_all(g, w, &round, self.threads);
+            if attempt == 0 {
+                self.sample_stretch(g, &round, &outcomes, &mut stretches);
+            }
+            // Serial queueing pass in deterministic arrival order.
+            let mut order: Vec<usize> = (0..round.len()).collect();
+            order.sort_by(|&a, &b| {
+                let ta = round[a].t_gen + outcomes[a].latency_ms;
+                let tb = round[b].t_gen + outcomes[b].latency_ms;
+                ta.partial_cmp(&tb).unwrap().then(a.cmp(&b))
+            });
+            let mut retry: Vec<Request> = Vec::new();
+            for idx in order {
+                let r = round[idx];
+                let o = outcomes[idx];
+                if !o.delivered {
+                    p_rf += 1;
+                    retry.push(r);
+                    continue;
+                }
+                let dst = r.dst as usize;
+                let arrival = r.t_gen + o.latency_ms;
+                let wait = (self.next_free[dst] - arrival).max(0.0);
+                if wait > self.cfg.timeout_ms {
+                    p_to += 1;
+                    retry.push(r);
+                    continue;
+                }
+                let done = arrival + wait + service_ms;
+                self.next_free[dst] = done;
+                self.node_load[dst] += 1;
+                load_vec.incr(dst, 1);
+                let e2e = done - r.t0;
+                latency_hist.observe(e2e);
+                period_lat.push(e2e);
+                p_deliv += 1;
+            }
+            if retry.is_empty() || attempt >= self.cfg.retries {
+                break;
+            }
+            // Each abandoned attempt costs one session timeout before
+            // the client re-issues against the next pool destination.
+            attempt += 1;
+            round = retry
+                .into_iter()
+                .map(|r| {
+                    let t_gen = r.t_gen + self.cfg.timeout_ms;
+                    Request {
+                        t0: r.t0,
+                        t_gen,
+                        src: r.src,
+                        dst: self.pools.next(r.src, alive),
+                        attempt,
+                    }
+                })
+                .collect();
+            p_rt += round.len() as u64;
+        }
+
+        self.delivered += p_deliv;
+        self.timeouts += p_to;
+        self.retries += p_rt;
+        self.routing_failures += p_rf;
+        self.obs.reg.incr("traffic.delivered", p_deliv);
+        self.obs.reg.incr("traffic.timeouts", p_to);
+        self.obs.reg.incr("traffic.retries", p_rt);
+        self.obs.reg.incr("traffic.routing_failures", p_rf);
+
+        let s = Summary::of(&period_lat);
+        let mean_stretch = if stretches.is_empty() {
+            0.0
+        } else {
+            stretches.iter().sum::<f64>() / stretches.len() as f64
+        };
+        for &x in &stretches {
+            self.stretch_sum += x;
+            self.stretch_count += 1;
+            self.stretch_max = self.stretch_max.max(x);
+        }
+        self.latencies.extend_from_slice(&period_lat);
+        self.periods.push(TrafficPeriod {
+            t,
+            offered,
+            delivered: p_deliv,
+            timeouts: p_to,
+            retries: p_rt,
+            routing_failures: p_rf,
+            p50_ms: s.p50,
+            p99_ms: s.p99,
+            mean_stretch,
+        });
+    }
+
+    /// Stride-sample first-attempt requests and measure greedy stretch
+    /// against the shortest path on the alive overlay (one Dijkstra per
+    /// distinct sampled source, cached within the period).
+    fn sample_stretch(
+        &mut self,
+        g: &Graph,
+        round: &[Request],
+        outcomes: &[RouteSummary],
+        stretches: &mut Vec<f64>,
+    ) {
+        let k = self.cfg.stretch_samples.max(1);
+        let stride = (round.len() / k).max(1);
+        let mut dist_cache: std::collections::BTreeMap<u32, Vec<f32>> =
+            std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < round.len() {
+            let r = round[i];
+            let o = outcomes[i];
+            i += stride;
+            if !o.delivered || r.src == r.dst {
+                continue;
+            }
+            let dist = dist_cache
+                .entry(r.src)
+                .or_insert_with(|| apsp::dijkstra(g, r.src as usize));
+            let d = f64::from(dist[r.dst as usize]);
+            if d.is_finite() && d > 0.0 {
+                stretches.push(o.latency_ms / d);
+            }
+        }
+    }
+
+    /// Close the run and produce the report (consumes the simulator).
+    /// Returns the [`Obs`] alongside so callers can export snapshots.
+    pub fn finish(
+        self,
+        scenario: &str,
+        topology: &str,
+        seed: u64,
+    ) -> (TrafficReport, Obs) {
+        let s = Summary::of(&self.latencies);
+        let mean_stretch = if self.stretch_count == 0 {
+            0.0
+        } else {
+            self.stretch_sum / self.stretch_count as f64
+        };
+        (
+            TrafficReport {
+                scenario: scenario.to_string(),
+                topology: topology.to_string(),
+                seed,
+                periods: self.periods,
+                offered: self.offered,
+                delivered: self.delivered,
+                timeouts: self.timeouts,
+                retries: self.retries,
+                routing_failures: self.routing_failures,
+                p50_ms: s.p50,
+                p99_ms: s.p99,
+                mean_stretch,
+                max_stretch: self.stretch_max,
+                node_load: self.node_load,
+            },
+            self.obs,
+        )
+    }
+}
+
+/// Route a batch: serial below the fan-out threshold, otherwise
+/// chunked over the worker pool. Chunk boundaries never change a
+/// result — every request routes independently and results come back
+/// in input order — so thread count is invisible in the output.
+fn route_all(
+    g: &Graph,
+    w: &LatencyMatrix,
+    reqs: &[Request],
+    threads: usize,
+) -> Vec<RouteSummary> {
+    let n = g.n();
+    if threads <= 1 || reqs.len() < 512 {
+        let mut scratch = RouteScratch::new(n);
+        return reqs
+            .iter()
+            .map(|r| {
+                greedy_route(g, w, r.src, r.dst, &mut scratch, None)
+            })
+            .collect();
+    }
+    let chunk = reqs.len().div_ceil(threads * 4).max(1);
+    let slices: Vec<&[Request]> = reqs.chunks(chunk).collect();
+    par::scoped_map(slices, threads, |_, slice| {
+        let mut scratch = RouteScratch::new(n);
+        slice
+            .iter()
+            .map(|r| {
+                greedy_route(g, w, r.src, r.dst, &mut scratch, None)
+            })
+            .collect::<Vec<RouteSummary>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{kring, paper_k};
+
+    fn ring_world(n: usize, seed: u64) -> (Graph, LatencyMatrix, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let w = crate::latency::Model::Uniform.sample(n, &mut rng);
+        let g = kring::random_krings(n, paper_k(n), &mut rng).to_graph(&w);
+        (g, w, (0..n as u32).collect())
+    }
+
+    fn run_once(threads: usize) -> (TrafficReport, Obs) {
+        let (g, w, alive) = ring_world(48, 11);
+        let mut sim =
+            TrafficSim::new(48, 5, TrafficConfig::default(), threads);
+        for p in 1..=4 {
+            sim.on_period(p as f64 * 250.0, &g, &w, &alive);
+        }
+        sim.finish("unit", "kring", 5)
+    }
+
+    #[test]
+    fn simulator_delivers_and_reports() {
+        let (rep, obs) = run_once(1);
+        assert!(rep.offered > 0);
+        assert!(rep.success_rate() > 0.9, "{}", rep.success_rate());
+        assert!(rep.p99_ms >= rep.p50_ms);
+        assert!(rep.mean_stretch >= 1.0);
+        assert!(rep.max_stretch >= rep.mean_stretch);
+        assert_eq!(
+            rep.node_load.iter().sum::<u64>(),
+            rep.delivered,
+            "every delivered request is serviced exactly once"
+        );
+        assert_eq!(obs.reg.get("traffic.delivered"), rep.delivered);
+        assert_eq!(
+            obs.reg.counter_vec("traffic.node_load", 48).total(),
+            rep.delivered
+        );
+        assert_eq!(rep.periods.len(), 4);
+    }
+
+    #[test]
+    fn report_is_thread_invariant_and_repeatable() {
+        let (a, _) = run_once(1);
+        let (b, _) = run_once(2);
+        let (c, _) = run_once(8);
+        let (d, _) = run_once(1);
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.render(), c.render());
+        assert_eq!(a.render(), d.render());
+        assert_eq!(a.table().to_csv(), c.table().to_csv());
+        assert_eq!(
+            a.summary_table().to_csv(),
+            c.summary_table().to_csv()
+        );
+        assert_eq!(a.to_json().to_string(), c.to_json().to_string());
+    }
+
+    #[test]
+    fn saturation_times_out_and_retries() {
+        let (g, w, alive) = ring_world(16, 3);
+        let mut cfg = TrafficConfig::default();
+        cfg.rate = 100_000.0;
+        cfg.capacity = 50.0; // 20 ms service: instant saturation
+        cfg.timeout_ms = 5.0;
+        cfg.retries = 1;
+        let mut sim = TrafficSim::new(16, 1, cfg, 1);
+        sim.on_period(250.0, &g, &w, &alive);
+        let (rep, _) = sim.finish("sat", "kring", 1);
+        assert!(rep.timeouts > 0, "saturated run must time out");
+        assert!(rep.retries > 0);
+        assert!(rep.success_rate() < 1.0);
+    }
+
+    #[test]
+    fn empty_overlay_is_all_failures() {
+        // Two alive nodes, no edges: everything is a routing failure.
+        let g = Graph::empty(4);
+        let w = LatencyMatrix::from_fn(4, |u, v| {
+            if u == v {
+                0.0
+            } else {
+                1.0
+            }
+        });
+        let mut cfg = TrafficConfig::default();
+        cfg.rate = 4_000.0;
+        cfg.retries = 0;
+        let mut sim = TrafficSim::new(4, 9, cfg, 1);
+        sim.on_period(250.0, &g, &w, &[0, 1]);
+        let (rep, _) = sim.finish("dead", "none", 9);
+        assert_eq!(rep.delivered, 0);
+        assert!(rep.routing_failures > 0);
+        assert_eq!(rep.success_rate(), 0.0);
+    }
+}

@@ -385,3 +385,97 @@ fn prop_gossip_measurement_converges_to_exact_averages() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// Traffic-plane routing invariants (PR 8): greedy routing over
+// arbitrary connected alive overlays, with shrinking to a minimal
+// counterexample on failure (docs/TRAFFIC.md §routing).
+
+#[test]
+fn prop_greedy_routing_terminates_avoids_dead_nodes_and_bounds_stretch() {
+    use dgro::prop::{forall_shrunk, OverlayCase};
+    use dgro::traffic::{greedy_route, RouteScratch};
+    forall_shrunk(
+        "greedy routing invariants",
+        PropConfig::default().cases(48).seed(0x7AFF_2026),
+        |rng| OverlayCase::arbitrary(rng, 512),
+        |c| c.shrinks(),
+        |c| {
+            let (g, w) = c.graph();
+            let mut scratch = RouteScratch::new(g.n());
+            let mut path = Vec::new();
+            // A deterministic batch of (src, dst) pairs per case.
+            let mut pick = Rng::new(c.seed ^ 0x51AC_ED);
+            for _ in 0..8 {
+                let src = c.alive[pick.index(c.alive.len())];
+                let dst = c.alive[pick.index(c.alive.len())];
+                let s = greedy_route(
+                    &g,
+                    &w,
+                    src,
+                    dst,
+                    &mut scratch,
+                    Some(&mut path),
+                );
+                // Termination: each hop claims an unvisited node, so a
+                // route can never take more hops than there are alive
+                // nodes.
+                ensure(
+                    (s.hops as usize) <= c.alive.len(),
+                    format!("{} hops > {} alive", s.hops, c.alive.len()),
+                )?;
+                // The path stays on the alive overlay: every node is
+                // alive, every step is a real edge of the alive graph.
+                for &v in &path {
+                    ensure(
+                        c.alive.binary_search(&v).is_ok(),
+                        format!("dead node {v} on path"),
+                    )?;
+                }
+                let mut walked = 0.0_f64;
+                for hop in path.windows(2) {
+                    ensure(
+                        g.has_edge(hop[0] as usize, hop[1] as usize),
+                        format!("phantom edge {}-{}", hop[0], hop[1]),
+                    )?;
+                    walked += f64::from(
+                        w.get(hop[0] as usize, hop[1] as usize),
+                    );
+                }
+                ensure_close(walked, s.latency_ms, 1e-3)?;
+                if s.delivered {
+                    ensure(
+                        path.last() == Some(&dst),
+                        "delivered route must end at dst",
+                    )?;
+                    // Stretch >= 1: the greedy path is a path, so its
+                    // latency is bounded below by the shortest one.
+                    let dist = f64::from(
+                        apsp::dijkstra(&g, src as usize)[dst as usize],
+                    );
+                    ensure(
+                        s.latency_ms + 1e-3 >= dist,
+                        format!(
+                            "greedy {} below shortest {dist}",
+                            s.latency_ms
+                        ),
+                    )?;
+                }
+                if src != dst && g.has_edge(src as usize, dst as usize) {
+                    // Direct neighbors deliver in one hop, and in the
+                    // metric embedding that edge IS a shortest path:
+                    // stretch == 1 exactly.
+                    ensure(
+                        s.delivered && s.hops == 1,
+                        format!("direct {src}->{dst} took {} hops", s.hops),
+                    )?;
+                    let dist = f64::from(
+                        apsp::dijkstra(&g, src as usize)[dst as usize],
+                    );
+                    ensure_close(s.latency_ms, dist, 1e-3)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -215,6 +215,76 @@ fn compare_tabulates_dgro_vs_baselines_across_the_catalog() {
 }
 
 #[test]
+fn hybrid_compare_reproduces_the_exact_mode_ranking() {
+    // Regression pin for the compare-path certification gate: compare
+    // used to reject --certify hybrid|sketch outright. Now the panel
+    // accepts them (the centralized DGRO column is forced back to
+    // exact — its adaptive loop steers on true diameters). At
+    // oracle_every = 1 every hybrid evaluation reports the oracle's
+    // exact value after the bracket check, so the catalog ranking —
+    // and the mean-diameter cells themselves — must match exact mode
+    // bit for bit.
+    use dgro::scenario::compare::{compare_opts, CompareOpts};
+    let specs = catalog();
+    let topologies =
+        [Topology::Dgro, Topology::Chord, Topology::Circulant];
+    let exact = compare_opts(
+        &specs,
+        &topologies,
+        11,
+        CompareOpts {
+            threads: 4,
+            ..CompareOpts::default()
+        },
+    )
+    .unwrap();
+    let hybrid = compare_opts(
+        &specs,
+        &topologies,
+        11,
+        CompareOpts {
+            threads: 4,
+            certify: CertifyConfig {
+                mode: CertifyMode::Hybrid,
+                budget: 8,
+                oracle_every: 1,
+            },
+            ..CompareOpts::default()
+        },
+    )
+    .unwrap();
+    let rank = |row: &[f64]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (1..row.len()).collect();
+        idx.sort_by(|&a, &b| {
+            row[a].partial_cmp(&row[b]).unwrap().then(a.cmp(&b))
+        });
+        idx
+    };
+    assert_eq!(exact.summary.rows.len(), specs.len());
+    for (i, (e, h)) in exact
+        .summary
+        .rows
+        .iter()
+        .zip(&hybrid.summary.rows)
+        .enumerate()
+    {
+        assert_eq!(
+            rank(e),
+            rank(h),
+            "{}: hybrid flipped the topology ranking",
+            specs[i].name
+        );
+        for (j, (ec, hc)) in e.iter().zip(h.iter()).enumerate() {
+            assert!(
+                (ec - hc).abs() < 1e-9,
+                "{}: column {j} drifted ({ec} vs {hc})",
+                specs[i].name
+            );
+        }
+    }
+}
+
+#[test]
 fn hybrid_oracle_brackets_the_catalog_on_static_and_sharded_paths() {
     // With oracle_every = 1 every diameter evaluation is re-checked
     // against the exact value and the run bails on any bracket

@@ -1,0 +1,149 @@
+//! Integration pins for the traffic plane (docs/TRAFFIC.md): the
+//! workload rides the scenario engine's overlay timeline, and the
+//! report is byte-deterministic — a pure function of
+//! `(scenario, topology, seed, config)` — across repeated runs and
+//! worker thread counts, on the in-process coordinator and on the
+//! lossy sim transport alike.
+
+use dgro::graph::eval::{CertifyConfig, CertifyMode};
+use dgro::net::TransportKind;
+use dgro::scenario::engine::{ScenarioEngine, Topology};
+use dgro::scenario::spec::{ChurnSpec, ScenarioSpec};
+use dgro::traffic::{TrafficConfig, TrafficReport};
+
+fn mini_spec() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "traffic-mini".into(),
+        about: "small churny world for the traffic determinism pins".into(),
+        nodes: 24,
+        initial_alive: 22,
+        model: "uniform".into(),
+        horizon: 750.0,
+        churn: vec![ChurnSpec::Poisson { rate: 0.004 }],
+        latency: vec![],
+    }
+}
+
+fn tcfg() -> TrafficConfig {
+    let mut c = TrafficConfig::default();
+    // ~10k requests per 250 ms period on a 24-node world: enough to
+    // exercise queueing and the parallel routing fan-out, small enough
+    // to keep the suite fast.
+    c.rate = 40_000.0;
+    c
+}
+
+/// One full run; returns the pair of deterministic renderings plus the
+/// traffic report for structural checks.
+fn run(
+    topology: Topology,
+    threads: usize,
+    lossy: bool,
+) -> (String, String, TrafficReport) {
+    let mut engine = ScenarioEngine::new(mini_spec(), 21).unwrap();
+    engine.threads = threads;
+    if topology == Topology::DgroSharded {
+        engine.shards = 2;
+    }
+    if lossy {
+        engine.transport = Some(TransportKind::Sim);
+        engine.loss_rate = 0.05;
+    }
+    let (rep, traffic, _obs) =
+        engine.run_traffic(topology, tcfg()).unwrap();
+    (rep.render(), traffic.render(), traffic)
+}
+
+#[test]
+fn traffic_rides_the_timeline_and_aligns_periods() {
+    let mut engine = ScenarioEngine::new(mini_spec(), 21).unwrap();
+    engine.threads = 2;
+    let (rep, traffic, obs) =
+        engine.run_traffic(Topology::Dgro, tcfg()).unwrap();
+    assert_eq!(
+        traffic.periods.len(),
+        rep.rows.len(),
+        "one traffic row per adaptation period"
+    );
+    for (tp, pr) in traffic.periods.iter().zip(&rep.rows) {
+        assert_eq!(tp.t, pr.t, "traffic rows align with scenario rows");
+    }
+    assert!(traffic.offered > 0);
+    assert!(traffic.success_rate() > 0.5, "{}", traffic.success_rate());
+    assert!(traffic.mean_stretch >= 1.0, "{}", traffic.mean_stretch);
+    assert!(traffic.max_stretch >= traffic.mean_stretch);
+    assert_eq!(traffic.node_load.len(), 24);
+    assert_eq!(
+        traffic.node_load.iter().sum::<u64>(),
+        traffic.delivered
+    );
+    // The obs surface carries the same totals.
+    assert_eq!(obs.reg.get("traffic.offered"), traffic.offered);
+    assert_eq!(obs.reg.get("traffic.delivered"), traffic.delivered);
+    assert_eq!(
+        obs.reg.counter_vec("traffic.node_load", 24).total(),
+        traffic.delivered
+    );
+}
+
+#[test]
+fn same_seed_produces_byte_identical_reports() {
+    let (sa, ta, ra) = run(Topology::Dgro, 2, false);
+    let (sb, tb, rb) = run(Topology::Dgro, 2, false);
+    assert_eq!(sa, sb);
+    assert_eq!(ta, tb);
+    assert_eq!(ra.to_json().to_string(), rb.to_json().to_string());
+    assert_eq!(ra.table().to_csv(), rb.table().to_csv());
+}
+
+#[test]
+fn worker_thread_count_is_invisible_in_the_report() {
+    let (s1, t1, _) = run(Topology::Dgro, 1, false);
+    for threads in [2usize, 8] {
+        let (s, t, _) = run(Topology::Dgro, threads, false);
+        assert_eq!(s1, s, "scenario report drifted at T={threads}");
+        assert_eq!(t1, t, "traffic report drifted at T={threads}");
+    }
+}
+
+#[test]
+fn sharded_coordinator_carries_traffic_deterministically() {
+    let (s1, t1, rep) = run(Topology::DgroSharded, 1, false);
+    assert!(rep.offered > 0);
+    assert!(rep.success_rate() > 0.5, "{}", rep.success_rate());
+    for threads in [2usize, 8] {
+        let (s, t, _) = run(Topology::DgroSharded, threads, false);
+        assert_eq!(s1, s, "sharded scenario drifted at T={threads}");
+        assert_eq!(t1, t, "sharded traffic drifted at T={threads}");
+    }
+}
+
+#[test]
+fn lossy_sim_transport_stays_byte_deterministic() {
+    // 5% seeded frame loss on the sim transport: the overlay timeline
+    // differs from the in-process run, but it is still a pure function
+    // of the seed — and so is the traffic report riding on it.
+    let (s1, t1, rep) = run(Topology::Dgro, 1, true);
+    assert!(rep.offered > 0);
+    for threads in [1usize, 2, 8] {
+        let (s, t, _) = run(Topology::Dgro, threads, true);
+        assert_eq!(s1, s, "lossy scenario drifted at T={threads}");
+        assert_eq!(t1, t, "lossy traffic drifted at T={threads}");
+    }
+}
+
+#[test]
+fn hybrid_certification_composes_with_traffic() {
+    let mut engine = ScenarioEngine::new(mini_spec(), 21).unwrap();
+    engine.threads = 2;
+    engine.certify = CertifyConfig {
+        mode: CertifyMode::Hybrid,
+        budget: 8,
+        oracle_every: 4,
+    };
+    let (rep, traffic, _obs) =
+        engine.run_traffic(Topology::Chord, tcfg()).unwrap();
+    assert_eq!(traffic.periods.len(), rep.rows.len());
+    assert!(traffic.offered > 0);
+    assert!(traffic.mean_stretch >= 1.0);
+}
