@@ -15,6 +15,8 @@
 //!     circulant and random-geometric graphs (runs in quick mode too)
 //!   * traffic tier: greedy routing + FIFO queueing throughput and p99
 //!     end-to-end latency over a static K-ring (docs/TRAFFIC.md)
+//!   * observability tier: span recording on/off and causal-trace
+//!     stamping on/off throughput ratios (docs/OBSERVABILITY.md)
 //!
 //! Besides the stdout report, the run writes **BENCH_hotpath.json** to
 //! the working directory (repo root under `cargo bench`): the
@@ -559,6 +561,52 @@ fn main() -> anyhow::Result<()> {
         ("enabled_over_disabled_ratio", Json::num(obs_ratio)),
     ]);
 
+    // --- Causal-tracing overhead: wire trace context on vs off. ----------
+    // Transport-backed sim replay with the recorder enabled in BOTH
+    // runs, so the only delta is what --trace-sample 1 adds: the
+    // 16-byte wire context, span-id derivation, and per-delivery span
+    // records. bench_gate floors the throughput ratio so trace
+    // stamping on the frame hot path cannot silently regress.
+    let tr_nodes = 64usize;
+    let tr_spec = ScenarioSpec {
+        name: "bench-trace".into(),
+        about: "causal-tracing-overhead workload".into(),
+        nodes: tr_nodes,
+        initial_alive: tr_nodes,
+        model: "uniform".into(),
+        horizon: 1000.0,
+        churn: vec![ChurnSpec::Poisson { rate: 0.001 }],
+        latency: vec![],
+    };
+    let mut tr_off = ScenarioEngine::new(tr_spec.clone(), 7)?;
+    tr_off.transport = Some(dgro::net::TransportKind::Sim);
+    tr_off.obs_record = true;
+    let mut tr_on = ScenarioEngine::new(tr_spec, 7)?;
+    tr_on.transport = Some(dgro::net::TransportKind::Sim);
+    tr_on.obs_record = true;
+    tr_on.trace_sample = 1;
+    let tr_iters = if quick { 2 } else { 3 };
+    let troff_t = time_iters(0, tr_iters, || {
+        tr_off.run(Topology::Dgro).expect("trace-off run");
+    });
+    let tron_t = time_iters(0, tr_iters, || {
+        tr_on.run(Topology::Dgro).expect("trace-on run");
+    });
+    let (troffm, tronm) = (mean_s(&troff_t), mean_s(&tron_t));
+    let trace_ratio = troffm / tronm;
+    println!(
+        "trace stamping off {:.2} ms, on {:.2} ms \
+         (enabled/disabled throughput {trace_ratio:.3})",
+        troffm * 1e3,
+        tronm * 1e3
+    );
+    let trace_json = Json::obj(vec![
+        ("n", Json::num(tr_nodes as f64)),
+        ("disabled_ms", Json::num(troffm * 1e3)),
+        ("enabled_ms", Json::num(tronm * 1e3)),
+        ("enabled_over_disabled_ratio", Json::num(trace_ratio)),
+    ]);
+
     // --- Scale tier: certified diameter estimates at 10^4–10^5 nodes. ---
     // Dense LatencyMatrix paths stop near 10^3 (n² f32 cells); this
     // tier builds sparse graphs directly — the circulant family, whose
@@ -709,6 +757,7 @@ fn main() -> anyhow::Result<()> {
         ("sharded", sharded_json),
         ("net", net_json),
         ("obs", obs_json),
+        ("trace", trace_json),
         ("scale", Json::arr(scale_rows)),
         ("traffic", traffic_json),
     ]);

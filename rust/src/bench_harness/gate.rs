@@ -14,8 +14,9 @@
 //! chosen for stability in quick mode: scenario-engine periods/s (both
 //! evaluation strategies), batched diameter-eval throughput, GA
 //! evaluations/s, the sim-transport frame rate, the observability
-//! overhead ratio, the 10^5-node scale-tier estimation throughputs and
-//! the traffic-plane routed-request rate. The traffic p99 end-to-end
+//! overhead ratio, the causal-trace stamping ratio, the 10^5-node
+//! scale-tier estimation throughputs and the traffic-plane
+//! routed-request rate. The traffic p99 end-to-end
 //! latency is the one *inverted* metric — lower is better, so its
 //! baseline acts as a ceiling rather than a floor.
 
@@ -73,6 +74,14 @@ fn obs_overhead_ratio(root: &Json) -> Result<f64> {
     root.get("obs")?.get("enabled_over_disabled_ratio")?.as_f64()
 }
 
+fn trace_overhead_ratio(root: &Json) -> Result<f64> {
+    // Transport-backed throughput with causal-trace stamping enabled
+    // over disabled (wire context + span-id derivation + deliver
+    // spans). Floored so trace stamping on the frame hot path cannot
+    // silently regress.
+    root.get("trace")?.get("enabled_over_disabled_ratio")?.as_f64()
+}
+
 fn scale_nodes_per_s(root: &Json, family: &str) -> Result<f64> {
     // The 10^5 row of the requested family — the largest tier is the
     // one whose regression matters.
@@ -103,7 +112,7 @@ fn traffic_p99_ms(root: &Json) -> Result<f64> {
     root.get("traffic")?.get("p99_ms")?.as_f64()
 }
 
-const METRICS: [MetricDef; 10] = [
+const METRICS: [MetricDef; 11] = [
     MetricDef {
         name: "scenario_incremental_periods_per_s",
         read: scenario_incremental,
@@ -132,6 +141,11 @@ const METRICS: [MetricDef; 10] = [
     MetricDef {
         name: "obs_enabled_over_disabled",
         read: obs_overhead_ratio,
+        invert: false,
+    },
+    MetricDef {
+        name: "trace_enabled_over_disabled",
+        read: trace_overhead_ratio,
         invert: false,
     },
     MetricDef {
@@ -327,6 +341,13 @@ mod tests {
                 )]),
             ),
             (
+                "trace",
+                Json::obj(vec![(
+                    "enabled_over_disabled_ratio",
+                    Json::num(0.9 * scale),
+                )]),
+            ),
+            (
                 "scale",
                 Json::arr(vec![
                     Json::obj(vec![
@@ -389,7 +410,7 @@ mod tests {
         let out =
             compare(&parsed, &report(1.0), DEFAULT_TOLERANCE).unwrap();
         assert!(out.passed());
-        assert_eq!(out.rows.len(), 10);
+        assert_eq!(out.rows.len(), 11);
         for r in out.rows {
             assert!((r.ratio - 1.0).abs() < 1e-9, "{}: {}", r.name, r.ratio);
         }

@@ -7,7 +7,8 @@
 //!   scenario  deterministic churn + dynamic-latency workloads
 //!   traffic   route simulated application requests over the overlay
 //!   net       run the coordinator over a real transport (UDP loopback)
-//!   obs       inspect --obs-out artifacts (dump | diff | top)
+//!   obs       inspect --obs-out artifacts
+//!             (dump | diff | top | trace | critical | health)
 //!   figures   regenerate paper figures (CSV under reports/)
 //!   config    print the default config JSON
 //!
@@ -27,7 +28,11 @@
 //!   dgro traffic run --name steady-state --topology dgro --rate 200000
 //!   dgro traffic compare --quick --seed 7 --out reports
 //!   dgro net demo --nodes 16 --transport tcp
+//!   dgro scenario run --name anchor-storm --transport sim \
+//!       --obs-out obs/a --trace-sample 1
 //!   dgro obs top obs/a --slowest 10
+//!   dgro obs critical obs/a --period 2
+//!   dgro obs health obs/a
 //!   dgro figures --fig 21 --quick
 //!   dgro figures --all
 
@@ -102,7 +107,8 @@ fn print_help() {
          \x20 scenario  churn + dynamic-latency workloads (list|run|compare)\n\
          \x20 traffic   route simulated requests over the overlay (run|compare)\n\
          \x20 net       coordinator over a real transport (demo)\n\
-         \x20 obs       inspect --obs-out artifacts (dump|diff|top)\n\
+         \x20 obs       inspect --obs-out artifacts \
+         (dump|diff|top|trace|critical|health)\n\
          \x20 figures   regenerate paper figures (CSV under reports/)\n\
          \x20 config    print the default config JSON\n\
          \n\
@@ -395,12 +401,20 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
         "skip ring swaps in periods with more than this many membership \
          events (0 = off; centralized dgro paths only)",
     )
+    .flag(
+        "trace-sample",
+        "0",
+        "transport runs: causal-trace sampling stride (0 = tracing \
+         off; s >= 1 stamps every frame with trace context and \
+         records deliver spans on nodes with id % s == 0)",
+    )
     .flag("out", "", "also write CSV tables under this directory")
     .flag(
         "obs-out",
         "",
-        "run: write snapshot.json, metrics.prom and timeline.jsonl \
-         under this directory (enables span recording)",
+        "run: write snapshot.json, metrics.prom, timeline.jsonl, \
+         traces.jsonl and health.json under this directory (enables \
+         span recording)",
     )
     .flag(
         "log-level",
@@ -466,6 +480,7 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             engine.dup_rate = a.get_f64("dup-rate")?;
             engine.reorder_rate = a.get_f64("reorder-rate")?;
             engine.churn_guard = a.get_u64("churn-guard")?;
+            engine.trace_sample = a.get_usize("trace-sample")?;
             let obs_out = a.get("obs-out");
             engine.obs_record = !obs_out.is_empty();
             let report = engine.run(topology)?;
@@ -508,6 +523,12 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                 anyhow::bail!(
                     "--churn-guard applies to 'scenario run' only; \
                      compare runs every topology unguarded"
+                );
+            }
+            if a.get_usize("trace-sample")? != 0 {
+                anyhow::bail!(
+                    "--trace-sample applies to transport-backed \
+                     'scenario run' only"
                 );
             }
             if !a.get("obs-out").is_empty() {
@@ -594,6 +615,7 @@ fn parse_traffic_cfg(
         pool: a.get_usize("pool")?,
         stretch_samples: a.get_usize("stretch-samples")?,
         seed: a.get_u64("traffic-seed")?,
+        trace_sample: a.get_usize("trace-sample")?,
     })
 }
 
@@ -639,6 +661,14 @@ fn cmd_traffic(raw: &[String]) -> Result<()> {
         "stretch samples per period (each costs one Dijkstra)",
     )
     .flag("traffic-seed", "0", "extra seed for the workload stream")
+    .flag(
+        "trace-sample",
+        "0",
+        "request-trace sampling stride (0 = off; s >= 1 records the \
+         full attempt history of every request with id % s == 0, \
+         exported as traces.jsonl under --obs-out); transport-backed \
+         runs also stamp frames with causal trace context",
+    )
     .flag(
         "certify",
         "exact",
@@ -748,6 +778,7 @@ fn cmd_traffic(raw: &[String]) -> Result<()> {
             engine.loss_rate = a.get_f64("loss-rate")?;
             engine.dup_rate = a.get_f64("dup-rate")?;
             engine.reorder_rate = a.get_f64("reorder-rate")?;
+            engine.trace_sample = tcfg.trace_sample;
             let (report, traffic, obs) =
                 engine.run_traffic(topology, tcfg)?;
             print!("{}", report.render());
@@ -769,7 +800,24 @@ fn cmd_traffic(raw: &[String]) -> Result<()> {
                     engine.transport,
                     None | Some(dgro::net::TransportKind::Sim)
                 );
-                obs.write_dir(Path::new(obs_out), sim_only)?;
+                let dir = Path::new(obs_out);
+                obs.write_dir(dir, sim_only)?;
+                // The traffic plane owns richer versions of two
+                // artifacts: sampled per-request hop traces and an
+                // SLO-aware health digest (p99 / success-rate checks
+                // next to the fabric counters).
+                std::fs::write(
+                    dir.join("traces.jsonl"),
+                    traffic.traces_jsonl(),
+                )?;
+                std::fs::write(
+                    dir.join("health.json"),
+                    dgro::obs::health_json(
+                        &obs.reg.to_json(),
+                        Some(&traffic.slo()),
+                    )
+                    .to_string(),
+                )?;
                 log_info!("traffic obs artifacts written to {obs_out}");
             }
             Ok(())
@@ -846,8 +894,16 @@ fn cmd_net(raw: &[String]) -> Result<()> {
     .flag(
         "obs-out",
         "",
-        "write snapshot.json, metrics.prom and timeline.jsonl under \
-         this directory (enables span recording)",
+        "write snapshot.json, metrics.prom, timeline.jsonl, \
+         traces.jsonl and health.json under this directory (enables \
+         span recording)",
+    )
+    .flag(
+        "trace-sample",
+        "0",
+        "causal-trace sampling stride (0 = tracing off; s >= 1 stamps \
+         every frame and records deliver spans on nodes with \
+         id % s == 0)",
     )
     .flag("transport", "udp", "message transport: sim|udp|tcp")
     .flag("horizon", "1000", "sim-time horizon (ms)")
@@ -946,6 +1002,7 @@ fn cmd_net(raw: &[String]) -> Result<()> {
         seed: cfg.seed,
     };
     let obs_out = a.get("obs-out");
+    let trace_sample = a.get_usize("trace-sample")?;
     let sim_only = kind == dgro::net::TransportKind::Sim;
     if fault.active() {
         net_demo_run(
@@ -955,13 +1012,24 @@ fn cmd_net(raw: &[String]) -> Result<()> {
             &trace,
             horizon,
             obs_out,
+            trace_sample,
             sim_only,
         )
     } else {
-        net_demo_run(cfg, w, base, &trace, horizon, obs_out, sim_only)
+        net_demo_run(
+            cfg,
+            w,
+            base,
+            &trace,
+            horizon,
+            obs_out,
+            trace_sample,
+            sim_only,
+        )
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn net_demo_run<T: dgro::net::Transport>(
     cfg: Config,
     w: dgro::latency::LatencyMatrix,
@@ -969,6 +1037,7 @@ fn net_demo_run<T: dgro::net::Transport>(
     trace: &EventTrace,
     horizon: f64,
     obs_out: &str,
+    trace_sample: usize,
     sim_only: bool,
 ) -> Result<()> {
     let t0 = std::time::Instant::now();
@@ -976,6 +1045,7 @@ fn net_demo_run<T: dgro::net::Transport>(
     if !obs_out.is_empty() {
         co.obs.rec.set_enabled(true);
     }
+    co.trace_sample = trace_sample;
     let show = co.cfg.nodes.min(3);
     for node in 0..show {
         println!("node {node} @ {}", co.addr(node as u32));
@@ -1029,9 +1099,16 @@ fn cmd_obs(raw: &[String]) -> Result<()> {
     let cmd = Command::new(
         "obs",
         "inspect --obs-out artifacts; actions: dump <dir> | \
-         diff <a> <b> | top <dir>",
+         diff <a> <b> | top <dir> | trace <dir> | critical <dir> | \
+         health <dir>",
     )
-    .flag("slowest", "10", "top: how many spans to list");
+    .flag("slowest", "10", "top: how many spans to list")
+    .flag(
+        "period",
+        "",
+        "trace|critical: only the trace of this adaptation period \
+         (empty = every trace in the timeline)",
+    );
     let a = cmd.parse(raw)?;
     let action = a.positional.first().map(|s| s.as_str());
     let arg = |i: usize, what: &str| -> Result<&str> {
@@ -1073,12 +1150,81 @@ fn cmd_obs(raw: &[String]) -> Result<()> {
             print!("{}", dgro::obs::estimator_summary(&snap)?);
             Ok(())
         }
+        Some("trace") => {
+            let forest = obs_forest(arg(1, "timeline path")?)?;
+            for t in obs_select(&forest, a.get("period"))? {
+                print!("{}", t.render_tree());
+            }
+            Ok(())
+        }
+        Some("critical") => {
+            // One line per causal trace: the sim-time critical path
+            // (longest root-to-leaf chain) and its length — the answer
+            // to "what did this period's latency consist of".
+            let forest = obs_forest(arg(1, "timeline path")?)?;
+            for t in obs_select(&forest, a.get("period"))? {
+                let (chain, ms) = t.critical_chain();
+                let period = t
+                    .period()
+                    .map(|p| p.to_string())
+                    .unwrap_or_else(|| "-".into());
+                println!(
+                    "period {period} critical_ms {ms:.3}  {chain}"
+                );
+            }
+            Ok(())
+        }
+        Some("health") => {
+            let p = obs_path(arg(1, "health path")?, "health.json");
+            let text = std::fs::read_to_string(&p).map_err(|e| {
+                anyhow::anyhow!("reading {}: {e}", p.display())
+            })?;
+            let health = dgro::util::json::parse(&text)?;
+            print!("{}", dgro::obs::health::render(&health));
+            Ok(())
+        }
         other => anyhow::bail!(
-            "unknown obs action '{}' (dump | diff | top)\n\n{}",
+            "unknown obs action '{}' (dump | diff | top | trace | \
+             critical | health)\n\n{}",
             other.unwrap_or(""),
             cmd.usage()
         ),
     }
+}
+
+/// Load a `timeline.jsonl` (directory or direct path) and assemble its
+/// traced spans into the causal forest.
+fn obs_forest(root: &str) -> Result<dgro::obs::Forest> {
+    let p = obs_path(root, "timeline.jsonl");
+    let text = std::fs::read_to_string(&p).map_err(|e| {
+        anyhow::anyhow!("reading {}: {e}", p.display())
+    })?;
+    let spans = dgro::obs::trace::parse_jsonl(&text)?;
+    Ok(dgro::obs::trace::assemble(&spans))
+}
+
+/// Apply the `--period` filter to an assembled forest; erroring out
+/// (rather than printing nothing) when the selection is empty keeps
+/// smoke scripts honest about missing traces.
+fn obs_select<'f>(
+    forest: &'f dgro::obs::Forest,
+    period: &str,
+) -> Result<Vec<&'f dgro::obs::trace::Trace>> {
+    let picked: Vec<&dgro::obs::trace::Trace> = if period.is_empty() {
+        forest.traces.iter().collect()
+    } else {
+        let p: u64 = period.parse().map_err(|_| {
+            anyhow::anyhow!("--period must be an integer, got '{period}'")
+        })?;
+        forest.by_period(p).into_iter().collect()
+    };
+    if picked.is_empty() {
+        anyhow::bail!(
+            "no traced spans matched (was the run made with \
+             --trace-sample >= 1?)"
+        );
+    }
+    Ok(picked)
 }
 
 fn cmd_figures(raw: &[String]) -> Result<()> {

@@ -40,6 +40,23 @@
 //! conservative idle cap to a deadline two shaped link delays past the
 //! phase start, keeping lossy runs fast.
 //!
+//! **Causal tracing (wire v3).** With a non-zero
+//! [`NetCoordinator::trace_sample`] every period gets a deterministic
+//! trace id derived from `(seed, period)` (see [`crate::obs::trace`]);
+//! frames carry a trace context (`trace`, `parent` span) and the
+//! flight recorder captures the cross-node causal chain: the period
+//! root span, the measurement span, one span per probe transmission
+//! (`probe` for first tries, `retx` for retransmissions — recorded
+//! even when the transmission times out, so a retry's parent always
+//! resolves), the gossip span, swap/report barriers, and — on nodes
+//! whose id is a multiple of the sampling stride — `deliver` spans
+//! stitching receipt back to the sender's span. Ping replies echo the
+//! incoming context (parented under the ping's delivery span when one
+//! was recorded), so a pong's delivery closes the loop
+//! sender → delivery → reply. All ids are derived from seed + period +
+//! site, never from wall clocks: seeded sim runs export byte-identical
+//! `traces.jsonl` at any thread count.
+//!
 //! Reported diameters are evaluated against the coordinator's oracle
 //! latency view (exactly like the sim path) so transports are comparable
 //! — what the transport changes is the *measured* inputs to ρ and hence
@@ -70,6 +87,7 @@ use crate::membership::list::{MemberState, MembershipList};
 use crate::metrics::Metrics;
 use crate::net::transport::{Delivery, Transport};
 use crate::net::wire::Message;
+use crate::obs::trace::{span_id, trace_id, TraceCtx};
 use crate::obs::{Histogram, Obs, Registry};
 use crate::topology::kring::KRing;
 use crate::topology::random_ring;
@@ -128,6 +146,13 @@ struct PendingProbe {
     target: u32,
     sent_at_ms: f64,
     global: bool,
+    /// This transmission's causal span id (0 when tracing is off).
+    span: u64,
+    /// Span the transmission hangs under: the measurement span for
+    /// first tries, the prior transmission's span for retries.
+    parent: u64,
+    /// Transmission round (0 = first try, ≥ 1 = retransmission).
+    attempt: u32,
 }
 
 /// FNV-1a over (src, dst, frame bytes): the per-phase key duplicate
@@ -248,6 +273,20 @@ pub struct NetCoordinator<T: Transport> {
     /// Largest shaped link delay of the current latency view (sim-ms),
     /// the unit of the lossy write-off deadline.
     max_w_ms: f64,
+    /// Causal-trace sampling stride: 0 disables tracing (frames carry
+    /// no context, byte-compatible with untraced runs); `s ≥ 1` traces
+    /// every period and additionally records `deliver` spans on nodes
+    /// whose id is a multiple of `s`.
+    pub trace_sample: usize,
+    /// Current period's trace id (0 while untraced).
+    trace: u64,
+    /// Current period's root span id.
+    span_period: u64,
+    /// Current period's measurement span id.
+    span_measure: u64,
+    /// Trace context stamped on every outgoing frame by
+    /// [`Self::send`] (`None` = send untraced).
+    tctx: Option<TraceCtx>,
 }
 
 impl<T: Transport> NetCoordinator<T> {
@@ -310,6 +349,11 @@ impl<T: Transport> NetCoordinator<T> {
             epoch: 0,
             seen: HashSet::new(),
             max_w_ms: max_delay_ms(&w),
+            trace_sample: 0,
+            trace: 0,
+            span_period: 0,
+            span_measure: 0,
+            tctx: None,
             rng,
             krings,
             w,
@@ -354,8 +398,14 @@ impl<T: Transport> NetCoordinator<T> {
         self.nodes.iter().map(|a| a.last_report).collect()
     }
 
+    /// Whether causal tracing is on for this run.
+    fn tracing(&self) -> bool {
+        self.trace_sample > 0
+    }
+
     fn send(&mut self, src: u32, dst: u32, msg: &Message) -> Result<()> {
-        self.transport.send(src, dst, &msg.encode(self.epoch))?;
+        self.transport
+            .send(src, dst, &msg.encode_traced(self.epoch, self.tctx))?;
         self.in_flight += 1;
         Ok(())
     }
@@ -422,13 +472,13 @@ impl<T: Transport> NetCoordinator<T> {
             .rec
             .is_enabled()
             .then(std::time::Instant::now);
-        let decoded = Message::decode(&d.frame);
+        let decoded = Message::decode_traced(&d.frame);
         if let Some(t0) = decode_t0 {
             self.hot
                 .decode_us
                 .observe(t0.elapsed().as_secs_f64() * 1e6);
         }
-        let (epoch, msg) = match decoded {
+        let (epoch, ctx, msg) = match decoded {
             Ok(x) => x,
             Err(_) => {
                 self.hot.decode_errors.fetch_add(1, Ordering::Relaxed);
@@ -442,13 +492,38 @@ impl<T: Transport> NetCoordinator<T> {
             self.hot.stale_frames.fetch_add(1, Ordering::Relaxed);
             return Ok(());
         }
-        if !self.seen.insert(frame_key(d.src, node, &d.frame)) {
+        let key = frame_key(d.src, node, &d.frame);
+        if !self.seen.insert(key) {
             // Duplicate delivery: the first copy already consumed the
             // barrier slot and mutated state.
             self.hot.dup_frames.fetch_add(1, Ordering::Relaxed);
             return Ok(());
         }
         self.in_flight = self.in_flight.saturating_sub(1);
+        // A sampled receive: stitch this delivery under the sender's
+        // span. The frame key salts the span id — it hashes the whole
+        // frame (sender, receiver, epoch, context, payload), which
+        // within a phase is unique per accepted delivery.
+        let mut deliver_span = 0u64;
+        if let Some(c) = ctx {
+            if self.obs.rec.is_enabled()
+                && self.trace_sample > 0
+                && node as usize % self.trace_sample == 0
+            {
+                deliver_span =
+                    span_id(c.trace, "deliver", node as u64, key);
+                self.obs.rec.record_traced(
+                    "deliver",
+                    node as u64,
+                    d.at_ms,
+                    0.0,
+                    0.0,
+                    c.trace,
+                    deliver_span,
+                    c.parent,
+                );
+            }
+        }
         match msg {
             Message::Ping { seq } => {
                 if self.alive_cache.contains(&node) {
@@ -458,17 +533,44 @@ impl<T: Transport> NetCoordinator<T> {
                     // measured round trip.
                     let hold_ms =
                         (self.transport.now_ms() - d.at_ms).max(0.0);
-                    self.send(
+                    // The pong echoes the ping's trace, parented under
+                    // this delivery when one was recorded (falling
+                    // back to the ping's own span otherwise), so the
+                    // prober sees sender → delivery → reply.
+                    let saved = self.tctx;
+                    self.tctx = ctx.map(|c| TraceCtx {
+                        trace: c.trace,
+                        parent: if deliver_span != 0 {
+                            deliver_span
+                        } else {
+                            c.parent
+                        },
+                    });
+                    let sent = self.send(
                         node,
                         d.src,
                         &Message::Pong { seq, hold_ms },
-                    )?;
+                    );
+                    self.tctx = saved;
+                    sent?;
                 }
             }
             Message::Pong { seq, hold_ms } => {
                 let at_ms = d.at_ms;
                 let actor = &mut self.nodes[node as usize];
                 if let Some(p) = actor.pending.remove(&seq) {
+                    if p.span != 0 {
+                        self.obs.rec.record_traced(
+                            if p.attempt == 0 { "probe" } else { "retx" },
+                            p.target as u64,
+                            p.sent_at_ms,
+                            (at_ms - p.sent_at_ms).max(0.0),
+                            0.0,
+                            self.trace,
+                            p.span,
+                            p.parent,
+                        );
+                    }
                     let one_way =
                         ((at_ms - p.sent_at_ms - hold_ms) / 2.0).max(0.0);
                     let truth =
@@ -590,18 +692,27 @@ impl<T: Transport> NetCoordinator<T> {
         // RNG stream in a fixed order, so the initial probe plan is
         // identical on every transport; only the measured RTTs (and any
         // loss-driven retransmits) differ.
-        let mut plans: Vec<Vec<(u32, bool)>> = vec![Vec::new(); n];
+        // The third plan field is the span the next transmission hangs
+        // under: the measurement span for first tries, the prior
+        // attempt's span once a probe is retried.
+        let mut plans: Vec<Vec<(u32, bool, u64)>> = vec![Vec::new(); n];
         for &u in &alive {
             self.nodes[u as usize].probe = ProbeAccum::default();
             self.nodes[u as usize].pending.clear();
             let neigh = &neigh_alive[u as usize];
+            let parent = self.span_measure;
             let actor = &mut self.nodes[u as usize];
-            let mut plan: Vec<(u32, bool)> = Vec::with_capacity(2 * k);
+            let mut plan: Vec<(u32, bool, u64)> =
+                Vec::with_capacity(2 * k);
             for _ in 0..k {
                 if neigh.is_empty() {
                     break;
                 }
-                plan.push((neigh[actor.rng.index(neigh.len())], false));
+                plan.push((
+                    neigh[actor.rng.index(neigh.len())],
+                    false,
+                    parent,
+                ));
             }
             for _ in 0..k {
                 let tgt = loop {
@@ -613,7 +724,7 @@ impl<T: Transport> NetCoordinator<T> {
                 if !self.alive_cache.contains(&tgt) {
                     continue; // dead peers cannot answer probes
                 }
-                plan.push((tgt, true));
+                plan.push((tgt, true, parent));
             }
             plans[u as usize] = plan;
         }
@@ -635,36 +746,86 @@ impl<T: Transport> NetCoordinator<T> {
             self.begin_phase();
             for &u in &alive {
                 let plan = std::mem::take(&mut plans[u as usize]);
-                for (tgt, global) in plan {
+                for (tgt, global, parent) in plan {
                     let seq = self.nodes[u as usize].fresh_seq();
                     let sent_at_ms = self.transport.now_ms();
+                    // Sequence numbers never repeat on a node, so the
+                    // (prober, seq) salt gives every transmission —
+                    // retries included — its own span id.
+                    let span = if self.tracing() {
+                        span_id(
+                            self.trace,
+                            "probe",
+                            tgt as u64,
+                            ((u as u64) << 32) | seq as u64,
+                        )
+                    } else {
+                        0
+                    };
                     self.nodes[u as usize].pending.insert(
                         seq,
                         PendingProbe {
                             target: tgt,
                             sent_at_ms,
                             global,
+                            span,
+                            parent,
+                            attempt: attempt as u32,
                         },
                     );
+                    self.tctx = (span != 0).then_some(TraceCtx {
+                        trace: self.trace,
+                        parent: span,
+                    });
                     self.send(u, tgt, &Message::Ping { seq })?;
                 }
             }
+            self.tctx = None;
             self.collect()?;
             // Whatever is still pending lost its ping or its pong:
             // queue it for the next transmission round (the drain order
             // is keyed by sequence number so retries are deterministic
             // for a deterministic fault pattern).
+            let drain_ms = self.transport.now_ms();
             for &u in &alive {
-                let actor = &mut self.nodes[u as usize];
-                if actor.pending.is_empty() {
+                if self.nodes[u as usize].pending.is_empty() {
                     continue;
                 }
-                let mut retry: Vec<(u32, PendingProbe)> =
-                    actor.pending.drain().collect();
+                let mut retry: Vec<(u32, PendingProbe)> = self.nodes
+                    [u as usize]
+                    .pending
+                    .drain()
+                    .collect();
                 retry.sort_by_key(|&(seq, _)| seq);
                 plans[u as usize] = retry
                     .into_iter()
-                    .map(|(_, p)| (p.target, p.global))
+                    .map(|(_, p)| {
+                        // A timed-out transmission still records its
+                        // span (its duration is the write-off wait),
+                        // so the retry it parents never dangles.
+                        if p.span != 0 {
+                            self.obs.rec.record_traced(
+                                if p.attempt == 0 {
+                                    "probe"
+                                } else {
+                                    "retx"
+                                },
+                                p.target as u64,
+                                p.sent_at_ms,
+                                (drain_ms - p.sent_at_ms).max(0.0),
+                                0.0,
+                                self.trace,
+                                p.span,
+                                p.parent,
+                            );
+                        }
+                        let parent = if p.span != 0 {
+                            p.span
+                        } else {
+                            self.span_measure
+                        };
+                        (p.target, p.global, parent)
+                    })
                     .collect();
             }
         }
@@ -706,12 +867,22 @@ impl<T: Transport> NetCoordinator<T> {
         // retransmitted: push-sum reads out as the mass-weighted ratio
         // below, so lost mass widens variance without biasing the
         // weighted average (loss-weighted merging).
+        let g_sid = if self.tracing() {
+            span_id(self.trace, "gossip", self.epoch as u64, 0)
+        } else {
+            0
+        };
         let g_span = self
             .obs
             .rec
-            .start("gossip", self.epoch as u64, self.transport.now_ms());
+            .start("gossip", self.epoch as u64, self.transport.now_ms())
+            .traced(self.trace, g_sid, self.span_measure);
         for _ in 0..self.cfg.gossip_rounds {
             self.begin_phase();
+            self.tctx = (g_sid != 0).then_some(TraceCtx {
+                trace: self.trace,
+                parent: g_sid,
+            });
             for &u in &alive {
                 let neigh = &neigh_alive[u as usize];
                 if neigh.is_empty() {
@@ -736,6 +907,7 @@ impl<T: Transport> NetCoordinator<T> {
                     },
                 )?;
             }
+            self.tctx = None;
             self.collect()?;
             for &u in &alive {
                 let actor = &mut self.nodes[u as usize];
@@ -827,12 +999,17 @@ impl<T: Transport> NetCoordinator<T> {
         while t < horizon {
             t += self.cfg.adapt_period_ms;
             period += 1;
+            if self.tracing() {
+                self.trace = trace_id(self.cfg.seed, period as usize);
+                self.span_period =
+                    span_id(self.trace, "period", period as u64, 0);
+            }
             let period_wall0 = std::time::Instant::now();
-            let p_span = self.obs.rec.start(
-                "period",
-                period as u64,
-                self.transport.now_ms(),
-            );
+            let p_span = self
+                .obs
+                .rec
+                .start("period", period as u64, self.transport.now_ms())
+                .traced(self.trace, self.span_period, 0);
             if let Some(w) = latency_at(t) {
                 if w.n() != self.w.n() {
                     bail!(
@@ -851,6 +1028,10 @@ impl<T: Transport> NetCoordinator<T> {
             // collection phase: stragglers must not leak into the
             // measurement barrier).
             self.begin_phase();
+            self.tctx = self.tracing().then_some(TraceCtx {
+                trace: self.trace,
+                parent: self.span_period,
+            });
             let mut applied = 0u64;
             while ev_idx < trace.events.len()
                 && trace.events[ev_idx].time() <= t
@@ -867,25 +1048,35 @@ impl<T: Transport> NetCoordinator<T> {
                 ev_idx += 1;
                 applied += 1;
             }
+            self.tctx = None;
             self.collect()?;
 
             // Measure over the wire, decide, maybe swap.
-            let m_span = self.obs.rec.start(
-                "measure",
-                period as u64,
-                self.transport.now_ms(),
-            );
+            if self.tracing() {
+                self.span_measure =
+                    span_id(self.trace, "measure", period as u64, 0);
+            }
+            let m_span = self
+                .obs
+                .rec
+                .start("measure", period as u64, self.transport.now_ms())
+                .traced(self.trace, self.span_measure, self.span_period);
             let stats = self.measure_net()?;
             m_span.finish(&self.obs.rec, self.transport.now_ms());
             self.obs
                 .reg
                 .incr("gossip.messages", stats.messages as u64);
             let rho = stats.rho();
-            let d_span = self.obs.rec.start(
-                "decide",
-                period as u64,
-                self.transport.now_ms(),
-            );
+            let d_sid = if self.tracing() {
+                span_id(self.trace, "decide", period as u64, 0)
+            } else {
+                0
+            };
+            let d_span = self
+                .obs
+                .rec
+                .start("decide", period as u64, self.transport.now_ms())
+                .traced(self.trace, d_sid, self.span_period);
             let choice = decide(
                 &stats,
                 SelectConfig {
@@ -907,19 +1098,33 @@ impl<T: Transport> NetCoordinator<T> {
                         choice,
                         &mut self.rng,
                     ) {
-                        let s_span = self.obs.rec.start(
-                            "swap",
-                            period as u64,
-                            self.transport.now_ms(),
-                        );
+                        let sw_sid = if self.tracing() {
+                            span_id(self.trace, "swap", period as u64, 0)
+                        } else {
+                            0
+                        };
+                        let s_span = self
+                            .obs
+                            .rec
+                            .start(
+                                "swap",
+                                period as u64,
+                                self.transport.now_ms(),
+                            )
+                            .traced(self.trace, sw_sid, self.span_period);
                         self.hot
                             .rings_swapped
                             .fetch_add(1, Ordering::Relaxed);
                         self.begin_phase();
+                        self.tctx = (sw_sid != 0).then_some(TraceCtx {
+                            trace: self.trace,
+                            parent: sw_sid,
+                        });
                         self.broadcast(&Message::RingSwap {
                             slot: slot as u32,
                             order,
                         })?;
+                        self.tctx = None;
                         self.collect()?;
                         s_span
                             .finish(&self.obs.rec, self.transport.now_ms());
@@ -958,6 +1163,10 @@ impl<T: Transport> NetCoordinator<T> {
 
             // Close the loop: every member hears the period summary.
             self.begin_phase();
+            self.tctx = self.tracing().then_some(TraceCtx {
+                trace: self.trace,
+                parent: self.span_period,
+            });
             self.broadcast(&Message::Report {
                 period,
                 t_ms: t,
@@ -966,6 +1175,7 @@ impl<T: Transport> NetCoordinator<T> {
                 alive: alive_cnt as u32,
                 swaps: (swaps_now - initial_swaps) as u32,
             })?;
+            self.tctx = None;
             self.collect()?;
             self.hot
                 .period_wall
@@ -1204,5 +1414,82 @@ mod tests {
         let rep = co.run(&trace, 250.0).unwrap();
         assert_eq!(rep.swaps, 0, "guarded period must not swap");
         assert_eq!(co.metrics.counter("rings.guard_skips"), 1);
+    }
+
+    #[test]
+    fn traced_lossy_run_exports_an_orphan_free_causal_forest() {
+        use crate::net::lossy::{LossyConfig, LossyTransport};
+        use crate::obs::trace;
+
+        let run = || {
+            let w = sample(24, 9);
+            let transport = LossyTransport::new(
+                SimTransport::new(w.clone()),
+                LossyConfig::drops(0.15, 42),
+            );
+            let mut co =
+                NetCoordinator::new(cfg(24), w, transport).unwrap();
+            co.trace_sample = 1;
+            co.obs.rec.set_enabled(true);
+            co.run(&EventTrace::default(), 1000.0).unwrap();
+            co.obs.rec.export_jsonl(true).unwrap()
+        };
+        let timeline = run();
+        assert_eq!(timeline, run(), "traced timeline must be stable");
+
+        let spans = trace::parse_jsonl(&timeline).unwrap();
+        let forest = trace::assemble(&spans);
+        assert_eq!(forest.traces.len(), 4, "one trace per period");
+        let mut kinds: HashSet<String> = HashSet::new();
+        for tr in &forest.traces {
+            // The acceptance bar: every probe/gossip/swap/deliver span
+            // hangs off a recorded parent — nothing dangles, even with
+            // 15% frame loss forcing retransmissions.
+            assert!(
+                tr.orphans.is_empty(),
+                "period {:?} has orphans:\n{}",
+                tr.period(),
+                tr.render_tree()
+            );
+            assert_eq!(tr.roots.len(), 1, "one period root per trace");
+            assert!(tr.period().is_some());
+            let (chain, ms) = tr.critical_chain();
+            assert!(chain.starts_with("period["), "{chain}");
+            assert!(chain.contains(" -> "), "{chain}");
+            assert!(ms > 0.0, "critical path has sim-time extent");
+            for s in &tr.spans {
+                kinds.insert(s.kind.clone());
+            }
+        }
+        for k in ["period", "measure", "probe", "gossip", "deliver"] {
+            assert!(kinds.contains(k), "missing span kind {k}");
+        }
+        // Loss over thousands of frames: some probes were retried, and
+        // their retx spans chained back to the timed-out attempt
+        // (otherwise they would have shown up as orphans above).
+        assert!(kinds.contains("retx"), "lossy run must record retx");
+    }
+
+    #[test]
+    fn untraced_runs_stamp_no_trace_context() {
+        let w = sample(12, 3);
+        let mut co = NetCoordinator::new(
+            cfg(12),
+            w.clone(),
+            SimTransport::new(w),
+        )
+        .unwrap();
+        co.obs.rec.set_enabled(true);
+        co.run(&EventTrace::default(), 250.0).unwrap();
+        let timeline = co.obs.rec.export_jsonl(true).unwrap();
+        assert!(!timeline.is_empty());
+        assert!(
+            !timeline.contains("\"trace\""),
+            "trace_sample = 0 must leave spans untraced"
+        );
+        assert!(
+            !timeline.contains("\"deliver\""),
+            "deliver spans only exist under tracing"
+        );
     }
 }

@@ -3,11 +3,12 @@
 //! and coordinator reports (docs/TRANSPORT.md has the byte-level table).
 //!
 //! Every frame starts with a version byte ([`WIRE_VERSION`]), a 32-bit
-//! **epoch tag** and a tag byte; integers are little-endian, floats are
-//! IEEE-754 bit patterns. Decoding is strict: unknown versions, unknown
-//! tags, truncated frames and trailing bytes are all hard errors — a
-//! membership protocol that silently mis-parses a frame corrupts views
-//! on every node downstream, so the boundary rejects instead.
+//! **epoch tag**, a flags byte and a tag byte; integers are
+//! little-endian, floats are IEEE-754 bit patterns. Decoding is strict:
+//! unknown versions, unknown flags, unknown tags, truncated frames and
+//! trailing bytes are all hard errors — a membership protocol that
+//! silently mis-parses a frame corrupts views on every node downstream,
+//! so the boundary rejects instead.
 //!
 //! The epoch is the loss-hardening half of the contract (wire v2): the
 //! coordinator stamps every frame with the collection phase it belongs
@@ -17,18 +18,36 @@
 //! then delivered late would perturb a *later* phase's delivery count —
 //! the cascade documented (and previously only documented) in
 //! docs/TRANSPORT.md.
+//!
+//! Wire v3 adds the flags byte and, when [`FLAG_TRACE`] is set, a
+//! 16-byte trace context ([`TraceCtx`]: trace id + parent span id,
+//! both u64 LE) between the flags and tag bytes — how a causal trace
+//! stitches sender → delivery → reply spans across nodes (see
+//! [`crate::obs::trace`]). Untraced frames pay exactly one extra byte
+//! over v2. v1/v2 frames are rejected with a distinct "legacy" error
+//! so mixed-version fleets fail diagnosably.
 
 use anyhow::{bail, Result};
 
 use crate::membership::events::MembershipEvent;
+use crate::obs::trace::TraceCtx;
 
 /// Current wire version. Bump on any incompatible layout change; peers
 /// reject frames whose version byte differs. v2 added the 32-bit epoch
-/// tag between the version and tag bytes.
-pub const WIRE_VERSION: u8 = 2;
+/// tag between the version and tag bytes; v3 added the flags byte and
+/// the optional trace context.
+pub const WIRE_VERSION: u8 = 3;
 
-/// Byte length of the frame header: version, epoch, tag.
-pub const HEADER_LEN: usize = 1 + 4 + 1;
+/// Byte length of the minimal frame header: version, epoch, flags, tag
+/// (a [`FLAG_TRACE`] frame carries [`TRACE_CTX_LEN`] more).
+pub const HEADER_LEN: usize = 1 + 4 + 1 + 1;
+
+/// Flags bit: the header carries a 16-byte trace context between the
+/// flags and tag bytes.
+pub const FLAG_TRACE: u8 = 1;
+
+/// Byte length of the optional trace context (trace id + parent span).
+pub const TRACE_CTX_LEN: usize = 8 + 8;
 
 /// One protocol message. The transport moves opaque frames; this enum is
 /// the typed layer on top.
@@ -165,21 +184,46 @@ impl<'a> Reader<'a> {
 }
 
 impl Message {
-    /// Encode into a framed byte vector
-    /// (version + epoch + tag + payload).
+    /// Encode into a framed byte vector without trace context
+    /// (version + epoch + flags + tag + payload).
     pub fn encode(&self, epoch: u32) -> Vec<u8> {
-        let mut out = Vec::with_capacity(24);
+        self.encode_traced(epoch, None)
+    }
+
+    /// Encode into a framed byte vector, optionally carrying a trace
+    /// context (version + epoch + flags \[+ trace ctx\] + tag +
+    /// payload).
+    pub fn encode_traced(
+        &self,
+        epoch: u32,
+        ctx: Option<TraceCtx>,
+    ) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + TRACE_CTX_LEN);
         out.push(WIRE_VERSION);
         out.extend_from_slice(&epoch.to_le_bytes());
+        match ctx {
+            Some(c) => {
+                out.push(FLAG_TRACE);
+                out.extend_from_slice(&c.trace.to_le_bytes());
+                out.extend_from_slice(&c.parent.to_le_bytes());
+            }
+            None => out.push(0),
+        }
+        self.write_body(&mut out);
+        out
+    }
+
+    /// Append the tag byte and payload.
+    fn write_body(&self, out: &mut Vec<u8>) {
         match self {
             Message::Ping { seq } => {
                 out.push(TAG_PING);
-                put_u32(&mut out, *seq);
+                put_u32(out, *seq);
             }
             Message::Pong { seq, hold_ms } => {
                 out.push(TAG_PONG);
-                put_u32(&mut out, *seq);
-                put_f64(&mut out, *hold_ms);
+                put_u32(out, *seq);
+                put_f64(out, *hold_ms);
             }
             Message::GossipPush {
                 local,
@@ -190,7 +234,7 @@ impl Message {
             } => {
                 out.push(TAG_GOSSIP);
                 for x in [local, global, min, m, ml] {
-                    put_f64(&mut out, *x);
+                    put_f64(out, *x);
                 }
             }
             Message::Membership { event } => {
@@ -207,15 +251,15 @@ impl Message {
                     }
                 };
                 out.push(kind);
-                put_f64(&mut out, time);
-                put_u32(&mut out, node);
+                put_f64(out, time);
+                put_u32(out, node);
             }
             Message::RingSwap { slot, order } => {
                 out.push(TAG_RINGSWAP);
-                put_u32(&mut out, *slot);
-                put_u32(&mut out, order.len() as u32);
+                put_u32(out, *slot);
+                put_u32(out, order.len() as u32);
                 for &v in order {
-                    put_u32(&mut out, v);
+                    put_u32(out, v);
                 }
             }
             Message::Report {
@@ -227,38 +271,18 @@ impl Message {
                 swaps,
             } => {
                 out.push(TAG_REPORT);
-                put_u32(&mut out, *period);
-                put_f64(&mut out, *t_ms);
-                put_f64(&mut out, *rho);
-                put_f64(&mut out, *diameter);
-                put_u32(&mut out, *alive);
-                put_u32(&mut out, *swaps);
+                put_u32(out, *period);
+                put_f64(out, *t_ms);
+                put_f64(out, *rho);
+                put_f64(out, *diameter);
+                put_u32(out, *alive);
+                put_u32(out, *swaps);
             }
         }
-        out
     }
 
-    /// Decode a framed byte vector into `(epoch, message)`. Rejects
-    /// unknown versions and tags, truncated frames and trailing bytes;
-    /// the caller decides what to do with the epoch (the coordinator
-    /// drops cross-epoch stragglers — see [`Message::decode_expect`]).
-    pub fn decode(frame: &[u8]) -> Result<(u32, Message)> {
-        if frame.len() < HEADER_LEN {
-            bail!("frame too short ({} bytes)", frame.len());
-        }
-        if frame[0] != WIRE_VERSION {
-            bail!(
-                "unknown wire version {} (speaking {})",
-                frame[0],
-                WIRE_VERSION
-            );
-        }
-        let epoch = u32::from_le_bytes(frame[1..5].try_into().unwrap());
-        let tag = frame[5];
-        let mut r = Reader {
-            buf: &frame[HEADER_LEN..],
-            pos: 0,
-        };
+    /// Decode the tag byte and payload from `r`.
+    fn read_body(tag: u8, r: &mut Reader<'_>) -> Result<Message> {
         let msg = match tag {
             TAG_PING => Message::Ping { seq: r.u32()? },
             TAG_PONG => Message::Pong {
@@ -309,8 +333,71 @@ impl Message {
             },
             other => bail!("unknown message tag {other}"),
         };
-        r.done()?;
+        Ok(msg)
+    }
+
+    /// Decode a framed byte vector into `(epoch, message)`, dropping
+    /// any trace context. Rejects unknown versions, flags and tags,
+    /// truncated frames and trailing bytes; the caller decides what to
+    /// do with the epoch (the coordinator drops cross-epoch stragglers
+    /// — see [`Message::decode_expect`]).
+    pub fn decode(frame: &[u8]) -> Result<(u32, Message)> {
+        let (epoch, _ctx, msg) = Message::decode_traced(frame)?;
         Ok((epoch, msg))
+    }
+
+    /// Decode a framed byte vector into `(epoch, trace context,
+    /// message)`. Same strictness as [`Message::decode`]; legacy
+    /// (v1/v2) frames, unknown flag bits and a declared-but-truncated
+    /// trace context each get a distinct error.
+    pub fn decode_traced(
+        frame: &[u8],
+    ) -> Result<(u32, Option<TraceCtx>, Message)> {
+        if frame.len() < HEADER_LEN {
+            bail!("frame too short ({} bytes)", frame.len());
+        }
+        let version = frame[0];
+        if version != WIRE_VERSION {
+            if (1..WIRE_VERSION).contains(&version) {
+                bail!(
+                    "legacy wire version {version} (speaking \
+                     {WIRE_VERSION}); upgrade the peer"
+                );
+            }
+            bail!(
+                "unknown wire version {version} (speaking {})",
+                WIRE_VERSION
+            );
+        }
+        let epoch = u32::from_le_bytes(frame[1..5].try_into().unwrap());
+        let flags = frame[5];
+        if flags & !FLAG_TRACE != 0 {
+            bail!("unknown header flags {flags:#04x}");
+        }
+        let (ctx, tag_at) = if flags & FLAG_TRACE != 0 {
+            if frame.len() < HEADER_LEN + TRACE_CTX_LEN {
+                bail!(
+                    "truncated trace context: need {TRACE_CTX_LEN} \
+                     bytes, have {}",
+                    frame.len() - HEADER_LEN
+                );
+            }
+            let trace =
+                u64::from_le_bytes(frame[6..14].try_into().unwrap());
+            let parent =
+                u64::from_le_bytes(frame[14..22].try_into().unwrap());
+            (Some(TraceCtx { trace, parent }), 6 + TRACE_CTX_LEN)
+        } else {
+            (None, 6)
+        };
+        let tag = frame[tag_at];
+        let mut r = Reader {
+            buf: &frame[tag_at + 1..],
+            pos: 0,
+        };
+        let msg = Message::read_body(tag, &mut r)?;
+        r.done()?;
+        Ok((epoch, ctx, msg))
     }
 
     /// Strict epoch-checked decode: like [`Message::decode`], but a
@@ -329,6 +416,8 @@ impl Message {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop::{forall, Config};
+    use crate::util::rng::Rng;
 
     fn samples() -> Vec<Message> {
         vec![
@@ -376,6 +465,20 @@ mod tests {
         ]
     }
 
+    fn sample_ctxs() -> Vec<Option<TraceCtx>> {
+        vec![
+            None,
+            Some(TraceCtx {
+                trace: 1,
+                parent: 1,
+            }),
+            Some(TraceCtx {
+                trace: 0xDEAD_BEEF_CAFE_F00D,
+                parent: u64::MAX,
+            }),
+        ]
+    }
+
     #[test]
     fn every_variant_round_trips() {
         for msg in samples() {
@@ -391,16 +494,109 @@ mod tests {
     }
 
     #[test]
+    fn traced_variants_round_trip_and_plain_decode_ignores_ctx() {
+        for msg in samples() {
+            for ctx in sample_ctxs() {
+                let bytes = msg.encode_traced(9, ctx);
+                let (e, back_ctx, back) =
+                    Message::decode_traced(&bytes)
+                        .unwrap_or_else(|e| panic!("{msg:?}: {e}"));
+                assert_eq!(e, 9);
+                assert_eq!(back_ctx, ctx);
+                assert_eq!(back, msg);
+                // The ctx-agnostic decode accepts the same frame.
+                let (e2, back2) = Message::decode(&bytes).unwrap();
+                assert_eq!((e2, back2), (9, msg.clone()));
+                // Untraced encode is the v3 frame with flags 0.
+                if ctx.is_none() {
+                    assert_eq!(bytes, msg.encode(9));
+                    assert_eq!(bytes[5], 0);
+                } else {
+                    assert_eq!(bytes[5], FLAG_TRACE);
+                    assert_eq!(
+                        bytes.len(),
+                        msg.encode(9).len() + TRACE_CTX_LEN
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn unknown_version_is_rejected() {
         let mut bytes = Message::Ping { seq: 1 }.encode(0);
         bytes[0] = WIRE_VERSION + 1;
         let err = Message::decode(&bytes).unwrap_err().to_string();
-        assert!(err.contains("version"), "{err}");
+        assert!(err.contains("unknown wire version"), "{err}");
+    }
+
+    #[test]
+    fn legacy_versions_get_a_distinct_error() {
+        // A well-formed v2 frame: version, epoch, tag, ping payload.
+        let mut v2 = vec![2u8];
+        v2.extend_from_slice(&7u32.to_le_bytes());
+        v2.push(0); // TAG_PING
+        v2.extend_from_slice(&1u32.to_le_bytes());
+        let err = Message::decode(&v2).unwrap_err().to_string();
+        assert!(err.contains("legacy wire version 2"), "{err}");
+        let mut v1 = v2.clone();
+        v1[0] = 1;
+        let err = Message::decode(&v1).unwrap_err().to_string();
+        assert!(err.contains("legacy wire version 1"), "{err}");
+        // Version 0 and future versions are "unknown", not legacy.
+        let mut v0 = v2.clone();
+        v0[0] = 0;
+        let err = Message::decode(&v0).unwrap_err().to_string();
+        assert!(err.contains("unknown wire version"), "{err}");
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let mut bytes = Message::Ping { seq: 1 }.encode(0);
+        bytes[5] = 0x02;
+        let err = Message::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unknown header flags"), "{err}");
+        bytes[5] = 0xFF;
+        let err = Message::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unknown header flags"), "{err}");
+    }
+
+    #[test]
+    fn truncated_trace_context_is_a_distinct_error() {
+        let ctx = Some(TraceCtx {
+            trace: 42,
+            parent: 43,
+        });
+        let bytes = Message::Ping { seq: 5 }.encode_traced(1, ctx);
+        assert_eq!(bytes.len(), HEADER_LEN + TRACE_CTX_LEN + 4);
+        for cut in HEADER_LEN..HEADER_LEN + TRACE_CTX_LEN {
+            let err = Message::decode(&bytes[..cut])
+                .unwrap_err()
+                .to_string();
+            assert!(
+                err.contains("truncated trace context"),
+                "cut {cut}: {err}"
+            );
+        }
+        // Shorter still is a plain short-frame error...
+        let err =
+            Message::decode(&bytes[..3]).unwrap_err().to_string();
+        assert!(err.contains("frame too short"), "{err}");
+        // ...and cutting into the payload is a body truncation.
+        let cut = HEADER_LEN + TRACE_CTX_LEN + 2;
+        let err = Message::decode(&bytes[..cut])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated frame"), "{err}");
     }
 
     #[test]
     fn unknown_tag_is_rejected() {
-        let bytes = vec![WIRE_VERSION, 0, 0, 0, 0, 200, 0, 0, 0, 0];
+        let mut bytes = vec![WIRE_VERSION];
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.push(0); // flags
+        bytes.push(200); // tag
+        bytes.extend_from_slice(&[0, 0, 0, 0]);
         let err = Message::decode(&bytes).unwrap_err().to_string();
         assert!(err.contains("tag"), "{err}");
     }
@@ -452,5 +648,131 @@ mod tests {
         let at = HEADER_LEN + 4;
         bytes[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(Message::decode(&bytes).is_err());
+    }
+
+    fn arbitrary_message(rng: &mut Rng) -> Message {
+        match rng.index(6) {
+            0 => Message::Ping {
+                seq: rng.next_u64() as u32,
+            },
+            1 => Message::Pong {
+                seq: rng.next_u64() as u32,
+                hold_ms: rng.uniform(0.0, 1e6),
+            },
+            2 => Message::GossipPush {
+                local: rng.uniform(-1e9, 1e9),
+                global: rng.uniform(-1e9, 1e9),
+                min: rng.uniform(0.0, 1e9),
+                m: rng.uniform(0.0, 2.0),
+                ml: rng.uniform(0.0, 2.0),
+            },
+            3 => {
+                let time = rng.uniform(0.0, 1e7);
+                let node = rng.next_u64() as u32;
+                let event = match rng.index(3) {
+                    0 => MembershipEvent::Join { time, node },
+                    1 => MembershipEvent::Leave { time, node },
+                    _ => MembershipEvent::Crash { time, node },
+                };
+                Message::Membership { event }
+            }
+            4 => {
+                let n = rng.index(33);
+                Message::RingSwap {
+                    slot: rng.index(8) as u32,
+                    order: (0..n)
+                        .map(|_| rng.next_u64() as u32)
+                        .collect(),
+                }
+            }
+            _ => Message::Report {
+                period: rng.next_u64() as u32,
+                t_ms: rng.uniform(0.0, 1e7),
+                rho: rng.f64(),
+                diameter: rng.uniform(0.0, 1e4),
+                alive: rng.next_u64() as u32,
+                swaps: rng.next_u64() as u32,
+            },
+        }
+    }
+
+    fn arbitrary_ctx(rng: &mut Rng) -> Option<TraceCtx> {
+        if rng.chance(0.5) {
+            Some(TraceCtx {
+                trace: rng.next_u64() | 1,
+                parent: rng.next_u64() | 1,
+            })
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn prop_arbitrary_frames_round_trip_both_paths() {
+        forall(
+            "wire v3 round trip",
+            Config::default().cases(256).seed(0x31E0),
+            |rng| {
+                let msg = arbitrary_message(rng);
+                let epoch = rng.next_u64() as u32;
+                let ctx = arbitrary_ctx(rng);
+                let bytes = msg.encode_traced(epoch, ctx);
+                let (e, c, back) = Message::decode_traced(&bytes)
+                    .map_err(|e| e.to_string())?;
+                if (e, c, &back) != (epoch, ctx, &msg) {
+                    return Err(format!(
+                        "round trip mismatch: {msg:?} -> {back:?}"
+                    ));
+                }
+                let m2 = Message::decode_expect(&bytes, epoch)
+                    .map_err(|e| e.to_string())?;
+                if m2 != msg {
+                    return Err("decode_expect mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_every_strict_prefix_is_rejected() {
+        forall(
+            "wire v3 prefixes fail",
+            Config::default().cases(128).seed(0x31E1),
+            |rng| {
+                let msg = arbitrary_message(rng);
+                let ctx = arbitrary_ctx(rng);
+                let bytes =
+                    msg.encode_traced(rng.next_u64() as u32, ctx);
+                for cut in 0..bytes.len() {
+                    if Message::decode(&bytes[..cut]).is_ok() {
+                        return Err(format!(
+                            "accepted a {cut}-byte prefix of {msg:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_decode_never_panics_on_random_bytes() {
+        forall(
+            "wire v3 fuzz decode is total",
+            Config::default().cases(512).seed(0x31E2),
+            |rng| {
+                let n = rng.index(64);
+                let mut bytes: Vec<u8> =
+                    (0..n).map(|_| rng.next_u64() as u8).collect();
+                // Half the cases keep a valid version byte so the
+                // deeper header/body paths get fuzzed too.
+                if !bytes.is_empty() && rng.chance(0.5) {
+                    bytes[0] = WIRE_VERSION;
+                }
+                let _ = Message::decode_traced(&bytes);
+                Ok(())
+            },
+        );
     }
 }

@@ -1,0 +1,262 @@
+//! `health.json` SLO digest: pass/fail verdicts over a run's
+//! registry snapshot (frame-loss hygiene, estimator gap, churn-guard
+//! pressure) plus, when a traffic run supplies one, the user-facing
+//! p99 / success-rate SLOs.
+//!
+//! The digest reads a *snapshot* [`Json`] (the exact object written
+//! to `snapshot.json`) rather than the live registry, so producing it
+//! never registers counters and cannot perturb the byte-deterministic
+//! snapshot it sits next to.
+
+use crate::util::json::Json;
+
+/// Ceiling on stale (cross-epoch) frames per frame sent.
+pub const MAX_STALE_RATE: f64 = 0.05;
+/// Ceiling on duplicate deliveries per frame sent.
+pub const MAX_DUP_RATE: f64 = 0.05;
+/// Ceiling on probe retransmissions per frame sent.
+pub const MAX_RETX_RATE: f64 = 0.10;
+/// Ceiling on written-off (lost) frames per frame sent.
+pub const MAX_LOST_RATE: f64 = 0.10;
+/// Ceiling on the worst certified-estimate gap (% of upper bound).
+pub const MAX_EST_GAP_PCT: f64 = 30.0;
+/// Ceiling on churn-guard swap suppressions per run.
+pub const MAX_GUARD_SKIPS: f64 = 8.0;
+/// Ceiling on traffic p99 end-to-end latency (sim ms).
+pub const MAX_P99_MS: f64 = 250.0;
+/// Floor on traffic delivery success rate.
+pub const MIN_SUCCESS_RATE: f64 = 0.995;
+
+/// User-facing traffic SLO inputs, taken from a
+/// [`TrafficReport`](crate::traffic::TrafficReport).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrafficSlo {
+    /// p99 end-to-end request latency (sim ms).
+    pub p99_ms: f64,
+    /// Delivered / offered.
+    pub success_rate: f64,
+}
+
+fn counter(snapshot: &Json, name: &str) -> f64 {
+    snapshot
+        .opt("counters")
+        .and_then(|c| c.opt(name))
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or(0.0)
+}
+
+fn hist_max(snapshot: &Json, name: &str) -> Option<f64> {
+    let h = snapshot.opt("histograms")?.opt(name)?;
+    let count = h.opt("count")?.as_f64().ok()?;
+    if count > 0.0 {
+        h.opt("max")?.as_f64().ok()
+    } else {
+        None
+    }
+}
+
+/// One check: `value` against `threshold` — a ceiling by default, a
+/// floor (`value >= threshold`) when `floor` is set.
+fn check(value: f64, threshold: f64, floor: bool) -> (bool, Json) {
+    let pass = if floor {
+        value >= threshold
+    } else {
+        value <= threshold
+    };
+    (
+        pass,
+        Json::obj(vec![
+            ("pass", Json::Bool(pass)),
+            ("threshold", Json::num(threshold)),
+            ("value", Json::num(value)),
+        ]),
+    )
+}
+
+/// Build the `health.json` digest from a registry snapshot and an
+/// optional traffic SLO. Frame-hygiene rates are computed against
+/// `net.frames_sent`; with no frames sent they are 0 and pass
+/// trivially. The estimator-gap check only appears when the run
+/// recorded estimator activity. Overall `verdict` is `"pass"` iff
+/// every present check passes.
+pub fn health_json(snapshot: &Json, traffic: Option<&TrafficSlo>) -> Json {
+    let sent = counter(snapshot, "net.frames_sent");
+    let rate = |name: &str| {
+        if sent > 0.0 {
+            counter(snapshot, name) / sent
+        } else {
+            0.0
+        }
+    };
+    let mut all_pass = true;
+    let mut checks: Vec<(&str, Json)> = Vec::new();
+    let mut push = |checks: &mut Vec<(&'static str, Json)>,
+                    name: &'static str,
+                    value: f64,
+                    threshold: f64,
+                    floor: bool| {
+        let (pass, js) = check(value, threshold, floor);
+        all_pass &= pass;
+        checks.push((name, js));
+    };
+    push(
+        &mut checks,
+        "dup_rate",
+        rate("net.dup_frames"),
+        MAX_DUP_RATE,
+        false,
+    );
+    if let Some(gap) = hist_max(snapshot, "eval.est_gap_pct") {
+        push(&mut checks, "est_gap_pct", gap, MAX_EST_GAP_PCT, false);
+    }
+    push(
+        &mut checks,
+        "guard_skips",
+        counter(snapshot, "rings.guard_skips"),
+        MAX_GUARD_SKIPS,
+        false,
+    );
+    push(
+        &mut checks,
+        "lost_rate",
+        rate("net.frames_lost"),
+        MAX_LOST_RATE,
+        false,
+    );
+    push(
+        &mut checks,
+        "retx_rate",
+        rate("net.probe_retx"),
+        MAX_RETX_RATE,
+        false,
+    );
+    push(
+        &mut checks,
+        "stale_rate",
+        rate("net.stale_frames"),
+        MAX_STALE_RATE,
+        false,
+    );
+    if let Some(slo) = traffic {
+        push(&mut checks, "traffic_p99_ms", slo.p99_ms, MAX_P99_MS, false);
+        push(
+            &mut checks,
+            "traffic_success_rate",
+            slo.success_rate,
+            MIN_SUCCESS_RATE,
+            true,
+        );
+    }
+    Json::obj(vec![
+        ("checks", Json::obj(checks)),
+        ("frames_sent", Json::num(sent)),
+        (
+            "verdict",
+            Json::str(if all_pass { "pass" } else { "fail" }),
+        ),
+    ])
+}
+
+/// Render a health digest as aligned text, one check per line.
+pub fn render(health: &Json) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let verdict = health
+        .opt("verdict")
+        .and_then(|v| v.as_str().ok())
+        .unwrap_or("?");
+    let _ = writeln!(out, "health: {verdict}");
+    if let Some(checks) = health.opt("checks").and_then(|c| c.as_obj().ok())
+    {
+        for (name, c) in checks {
+            let pass = c
+                .opt("pass")
+                .and_then(|p| p.as_bool().ok())
+                .unwrap_or(false);
+            let value = c
+                .opt("value")
+                .and_then(|v| v.as_f64().ok())
+                .unwrap_or(f64::NAN);
+            let thr = c
+                .opt("threshold")
+                .and_then(|v| v.as_f64().ok())
+                .unwrap_or(f64::NAN);
+            let _ = writeln!(
+                out,
+                "  {:<4} {name:<22} value={value:<12.4} \
+                 threshold={thr:.4}",
+                if pass { "ok" } else { "FAIL" },
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Obs;
+
+    #[test]
+    fn clean_run_passes_and_skips_absent_checks() {
+        let obs = Obs::new();
+        obs.reg.incr("net.frames_sent", 100);
+        obs.reg.incr("net.stale_frames", 1);
+        let h = health_json(&obs.reg.to_json(), None);
+        assert_eq!(h.get("verdict").unwrap().as_str().unwrap(), "pass");
+        let checks = h.get("checks").unwrap();
+        assert!(checks.opt("stale_rate").is_some());
+        assert!(checks.opt("est_gap_pct").is_none(), "no estimator ran");
+        assert!(checks.opt("traffic_p99_ms").is_none(), "no traffic");
+        let v = checks.get("stale_rate").unwrap();
+        assert_eq!(v.get("value").unwrap().as_f64().unwrap(), 0.01);
+        assert!(v.get("pass").unwrap().as_bool().unwrap());
+        let text = render(&h);
+        assert!(text.contains("health: pass"), "{text}");
+        assert!(text.contains("stale_rate"), "{text}");
+    }
+
+    #[test]
+    fn violations_flip_the_verdict() {
+        let obs = Obs::new();
+        obs.reg.incr("net.frames_sent", 100);
+        obs.reg.incr("net.frames_lost", 50);
+        let h = health_json(&obs.reg.to_json(), None);
+        assert_eq!(h.get("verdict").unwrap().as_str().unwrap(), "fail");
+        let lost = h.get("checks").unwrap().get("lost_rate").unwrap();
+        assert!(!lost.get("pass").unwrap().as_bool().unwrap());
+        assert!(render(&h).contains("FAIL lost_rate"));
+    }
+
+    #[test]
+    fn traffic_slo_checks_both_directions() {
+        let snap = Json::obj(vec![]);
+        let good = TrafficSlo {
+            p99_ms: 12.0,
+            success_rate: 1.0,
+        };
+        let h = health_json(&snap, Some(&good));
+        assert_eq!(h.get("verdict").unwrap().as_str().unwrap(), "pass");
+        let slow = TrafficSlo {
+            p99_ms: 900.0,
+            success_rate: 0.5,
+        };
+        let h = health_json(&snap, Some(&slow));
+        assert_eq!(h.get("verdict").unwrap().as_str().unwrap(), "fail");
+        let checks = h.get("checks").unwrap();
+        assert!(!checks
+            .get("traffic_p99_ms")
+            .unwrap()
+            .get("pass")
+            .unwrap()
+            .as_bool()
+            .unwrap());
+        assert!(!checks
+            .get("traffic_success_rate")
+            .unwrap()
+            .get("pass")
+            .unwrap()
+            .as_bool()
+            .unwrap());
+    }
+}

@@ -17,20 +17,26 @@
 //! byte-determinism pins; wall-time histograms stay registry-only.
 //!
 //! Artifacts: [`Obs::write_dir`] emits `snapshot.json`,
-//! `metrics.prom` and `timeline.jsonl` into `--obs-out DIR`; the
-//! `dgro obs` subcommand (`dump`, `diff`, `top`) reads them back.
-//! Formats are documented in `docs/OBSERVABILITY.md`.
+//! `metrics.prom`, `timeline.jsonl`, `traces.jsonl` (assembled
+//! causal-trace summaries) and `health.json` (SLO digest) into
+//! `--obs-out DIR`; the `dgro obs` subcommand (`dump`, `diff`,
+//! `top`, `trace`, `critical`, `health`) reads them back. Formats
+//! are documented in `docs/OBSERVABILITY.md`.
 
+pub mod health;
 pub mod recorder;
 pub mod registry;
+pub mod trace;
 
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+pub use health::{health_json, TrafficSlo};
 pub use recorder::{Recorder, Span, SpanTimer, DEFAULT_CAPACITY};
 pub use registry::{bucket_bound, CounterVec, Histogram, Registry};
+pub use trace::{span_id, trace_id, Forest, SpanRec, TraceCtx};
 
 use crate::metrics::Metrics;
 use crate::util::json::{self, Json};
@@ -96,10 +102,14 @@ impl Obs {
         Json::Obj(root)
     }
 
-    /// Write the artifact triple into `dir` (created if missing):
-    /// `snapshot.json`, `metrics.prom`, `timeline.jsonl`. With
-    /// `sim_only` the timeline omits wall-clock fields and is
-    /// byte-deterministic for seeded sim runs.
+    /// Write the artifact set into `dir` (created if missing):
+    /// `snapshot.json`, `metrics.prom`, `timeline.jsonl`,
+    /// `traces.jsonl` (one summary line per assembled causal trace)
+    /// and `health.json` (SLO digest over the snapshot). With
+    /// `sim_only` the timeline omits wall-clock fields and every
+    /// artifact is byte-deterministic for seeded sim runs; a
+    /// recorder-ring overflow fails the sim-only export loudly
+    /// instead of silently voiding that contract.
     pub fn write_dir(&self, dir: &Path, sim_only: bool) -> Result<()> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating {}", dir.display()))?;
@@ -110,7 +120,17 @@ impl Obs {
         std::fs::write(dir.join("metrics.prom"), self.reg.prometheus())?;
         std::fs::write(
             dir.join("timeline.jsonl"),
-            self.rec.export_jsonl(sim_only),
+            self.rec.export_jsonl(sim_only)?,
+        )?;
+        let spans: Vec<SpanRec> =
+            self.rec.spans().iter().map(SpanRec::from).collect();
+        std::fs::write(
+            dir.join("traces.jsonl"),
+            trace::assemble(&spans).summary_jsonl(),
+        )?;
+        std::fs::write(
+            dir.join("health.json"),
+            health_json(&self.reg.to_json(), None).to_string(),
         )?;
         Ok(())
     }
@@ -239,6 +259,10 @@ pub fn top_slowest(path: &Path, n: usize) -> Result<String> {
     let mut rows: Vec<(f64, f64, f64, String, u64)> = Vec::new();
     for line in text.lines().filter(|l| !l.trim().is_empty()) {
         let js = json::parse(line)?;
+        if js.opt("kind").is_none() {
+            // Annotation header (e.g. ring-overflow note), not a span.
+            continue;
+        }
         let dur = js.get("dur_ms")?.as_f64()?;
         let wall = js
             .opt("wall_ms")
@@ -355,6 +379,14 @@ mod tests {
         assert!(dump.contains("period.wall_ms"));
         let top = top_slowest(&dir.join("timeline.jsonl"), 1).unwrap();
         assert!(top.contains("period"), "slowest span wins: {top}");
+        // The causal artifacts ride along: untraced spans assemble
+        // into no traces, and a loss-free run passes its SLOs.
+        let traces =
+            std::fs::read_to_string(dir.join("traces.jsonl")).unwrap();
+        assert!(traces.is_empty(), "{traces}");
+        let health =
+            std::fs::read_to_string(dir.join("health.json")).unwrap();
+        assert!(health.contains("\"verdict\":\"pass\""), "{health}");
         // A second identical run diffs clean against itself...
         let snap = dir.join("snapshot.json");
         let same = diff_snapshots(&snap, &snap).unwrap();
@@ -372,6 +404,44 @@ mod tests {
         .unwrap();
         assert!(diff.contains("gossip.messages"));
         assert!(diff.contains("12 -> 15"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn traced_artifacts_round_trip_and_tooling_skips_annotations() {
+        let obs = Obs::recording();
+        let t = trace::trace_id(0, 1);
+        let root = trace::span_id(t, "period", 1, 0);
+        let m = trace::span_id(t, "measure", 1, 0);
+        obs.rec
+            .record_traced("period", 1, 0.0, 100.0, 1.0, t, root, 0);
+        obs.rec
+            .record_traced("measure", 1, 0.0, 80.0, 1.0, t, m, root);
+        let dir = std::env::temp_dir().join(format!(
+            "dgro-obs-traced-{}",
+            std::process::id()
+        ));
+        obs.write_dir(&dir, true).unwrap();
+        let traces =
+            std::fs::read_to_string(dir.join("traces.jsonl")).unwrap();
+        assert_eq!(traces.lines().count(), 1);
+        assert!(traces.contains("period[1] -> measure[1]"), "{traces}");
+        assert!(traces.contains("\"orphans\":0"), "{traces}");
+        // The timeline parses back into the same assembled summary.
+        let timeline =
+            std::fs::read_to_string(dir.join("timeline.jsonl")).unwrap();
+        let spans = trace::parse_jsonl(&timeline).unwrap();
+        assert_eq!(trace::assemble(&spans).summary_jsonl(), traces);
+        // Annotation headers are skipped by the span tooling.
+        let p = dir.join("wall.jsonl");
+        std::fs::write(
+            &p,
+            "{\"annotation\":\"x\",\"dropped\":2}\n\
+             {\"dur_ms\":1,\"id\":0,\"kind\":\"period\",\"t_ms\":0}\n",
+        )
+        .unwrap();
+        let top = top_slowest(&p, 5).unwrap();
+        assert!(top.contains("period"), "{top}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,19 +1,29 @@
 //! The span-based flight recorder: scoped spans (`period`, `measure`,
-//! `gossip`, `decide`, `swap`, `reanchor`, `dial`) carrying sim-time
-//! and wall-time into a bounded ring buffer, exported as JSONL.
+//! `gossip`, `decide`, `swap`, `reanchor`, `dial`, `probe`, `retx`,
+//! `deliver`) carrying sim-time and wall-time into a bounded ring
+//! buffer, exported as JSONL.
 //!
 //! Determinism contract: the sim-only export (`export_jsonl(true)`)
 //! contains only sim-clock fields and is sorted by a total order on
-//! `(t_ms, kind, id, dur_ms)`, so two seeded runs over the sim
+//! `(t_ms, kind, id, dur_ms, span)`, so two seeded runs over the sim
 //! transport — at any thread count — export byte-identical timelines
 //! as long as the buffer never overflows. Overflow evicts the oldest
 //! span in *arrival* order (which is scheduling-dependent), so
-//! `dropped() > 0` voids the determinism guarantee; size the capacity
-//! for the run instead.
+//! `dropped() > 0` voids the determinism guarantee; the sim-only
+//! export **fails loudly** in that case instead of emitting a
+//! scheduling-dependent timeline, and the wall export annotates its
+//! header. Size the capacity for the run.
+//!
+//! Spans optionally carry causal identity — a trace id, their own
+//! span id and a parent span id (see [`crate::obs::trace`] for the
+//! deterministic derivation). All three are 0 on untraced spans and
+//! are exported as 16-digit hex strings when present.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+use anyhow::Result;
 
 use crate::util::json::Json;
 
@@ -25,7 +35,7 @@ pub const DEFAULT_CAPACITY: usize = 65_536;
 #[derive(Clone, Debug, PartialEq)]
 pub struct Span {
     /// Span kind (`period`, `measure`, `gossip`, `decide`, `swap`,
-    /// `reanchor`, `dial`).
+    /// `reanchor`, `dial`, `probe`, `retx`, `deliver`).
     pub kind: &'static str,
     /// Discriminator within a kind: period index, shard index, peer
     /// index — whatever the recording site counts by.
@@ -37,6 +47,12 @@ pub struct Span {
     pub dur_ms: f64,
     /// Wall-clock duration (ms); excluded from deterministic exports.
     pub wall_ms: f64,
+    /// Trace id (0 = untraced).
+    pub trace: u64,
+    /// This span's causal id (0 = untraced).
+    pub span: u64,
+    /// Parent span id (0 = root or untraced).
+    pub parent: u64,
 }
 
 struct Inner {
@@ -78,7 +94,7 @@ impl Recorder {
         self.enabled.load(Ordering::Relaxed)
     }
 
-    /// Record one finished span (no-op while disabled).
+    /// Record one finished untraced span (no-op while disabled).
     pub fn record(
         &self,
         kind: &'static str,
@@ -86,6 +102,23 @@ impl Recorder {
         t_ms: f64,
         dur_ms: f64,
         wall_ms: f64,
+    ) {
+        self.record_traced(kind, id, t_ms, dur_ms, wall_ms, 0, 0, 0);
+    }
+
+    /// Record one finished span with causal identity (no-op while
+    /// disabled). `trace`/`span`/`parent` of 0 mean untraced / root.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_traced(
+        &self,
+        kind: &'static str,
+        id: u64,
+        t_ms: f64,
+        dur_ms: f64,
+        wall_ms: f64,
+        trace: u64,
+        span: u64,
+        parent: u64,
     ) {
         if !self.is_enabled() {
             return;
@@ -96,6 +129,9 @@ impl Recorder {
             t_ms,
             dur_ms,
             wall_ms,
+            trace,
+            span,
+            parent,
         };
         let mut inner = self.inner.lock().unwrap();
         if inner.spans.len() < self.cap {
@@ -109,7 +145,8 @@ impl Recorder {
     }
 
     /// Start a span at sim-time `t_ms`; finish it with
-    /// [`SpanTimer::finish`] once the end sim-time is known.
+    /// [`SpanTimer::finish`] once the end sim-time is known. Attach
+    /// causal identity with [`SpanTimer::traced`].
     pub fn start(
         &self,
         kind: &'static str,
@@ -121,6 +158,9 @@ impl Recorder {
             id,
             t_ms,
             wall0: Instant::now(),
+            trace: 0,
+            span: 0,
+            parent: 0,
         }
     }
 
@@ -148,15 +188,44 @@ impl Recorder {
                 .then_with(|| a.kind.cmp(b.kind))
                 .then_with(|| a.id.cmp(&b.id))
                 .then_with(|| a.dur_ms.total_cmp(&b.dur_ms))
+                .then_with(|| a.span.cmp(&b.span))
         });
         spans
     }
 
     /// JSONL timeline export, one span per line, sorted. With
     /// `sim_only` the wall field is omitted and the output is
-    /// byte-deterministic for seeded sim runs (see module docs).
-    pub fn export_jsonl(&self, sim_only: bool) -> String {
+    /// byte-deterministic for seeded sim runs (see module docs) —
+    /// unless the ring overflowed, in which case the timeline is
+    /// scheduling-dependent and this **returns an error** instead of
+    /// silently voiding the contract. The wall export tolerates
+    /// overflow but leads with an annotation line (no `kind` field;
+    /// readers skip it) recording the drop count.
+    pub fn export_jsonl(&self, sim_only: bool) -> Result<String> {
+        let dropped = self.dropped();
+        if sim_only && dropped > 0 {
+            anyhow::bail!(
+                "recorder ring overflowed ({dropped} spans dropped in \
+                 arrival order): the sim-only timeline would be \
+                 scheduling-dependent; raise the recorder capacity \
+                 (DEFAULT_CAPACITY={DEFAULT_CAPACITY}) or record \
+                 fewer spans (e.g. a sparser --trace-sample)"
+            );
+        }
         let mut out = String::new();
+        if dropped > 0 {
+            out.push_str(
+                &Json::obj(vec![
+                    (
+                        "annotation",
+                        Json::str("ring overflow: timeline truncated"),
+                    ),
+                    ("dropped", Json::num(dropped as f64)),
+                ])
+                .to_string(),
+            );
+            out.push('\n');
+        }
         for s in self.spans() {
             let mut fields = vec![
                 ("dur_ms", Json::num(s.dur_ms)),
@@ -164,13 +233,27 @@ impl Recorder {
                 ("kind", Json::str(s.kind)),
                 ("t_ms", Json::num(s.t_ms)),
             ];
+            if s.trace != 0 {
+                if s.parent != 0 {
+                    fields.push((
+                        "parent",
+                        Json::str(&format!("{:016x}", s.parent)),
+                    ));
+                }
+                fields
+                    .push(("span", Json::str(&format!("{:016x}", s.span))));
+                fields.push((
+                    "trace",
+                    Json::str(&format!("{:016x}", s.trace)),
+                ));
+            }
             if !sim_only {
                 fields.push(("wall_ms", Json::num(s.wall_ms)));
             }
             out.push_str(&Json::obj(fields).to_string());
             out.push('\n');
         }
-        out
+        Ok(out)
     }
 }
 
@@ -181,17 +264,31 @@ pub struct SpanTimer {
     id: u64,
     t_ms: f64,
     wall0: Instant,
+    trace: u64,
+    span: u64,
+    parent: u64,
 }
 
 impl SpanTimer {
+    /// Attach causal identity to the in-flight span (builder-style).
+    pub fn traced(mut self, trace: u64, span: u64, parent: u64) -> Self {
+        self.trace = trace;
+        self.span = span;
+        self.parent = parent;
+        self
+    }
+
     /// Close the span at sim-time `end_ms` and record it.
     pub fn finish(self, rec: &Recorder, end_ms: f64) {
-        rec.record(
+        rec.record_traced(
             self.kind,
             self.id,
             self.t_ms,
             (end_ms - self.t_ms).max(0.0),
             self.wall0.elapsed().as_secs_f64() * 1e3,
+            self.trace,
+            self.span,
+            self.parent,
         );
     }
 }
@@ -231,14 +328,14 @@ mod tests {
         rec.record("swap", 2, 500.0, 0.0, 3.0);
         rec.record("measure", 0, 250.0, 40.0, 9.0);
         rec.record("decide", 1, 250.0, 0.0, 1.0);
-        let sim = rec.export_jsonl(true);
+        let sim = rec.export_jsonl(true).unwrap();
         let lines: Vec<&str> = sim.lines().collect();
         assert_eq!(lines.len(), 3);
-        assert!(lines[0].contains("\"kind\": \"decide\""));
-        assert!(lines[1].contains("\"kind\": \"measure\""));
-        assert!(lines[2].contains("\"kind\": \"swap\""));
+        assert!(lines[0].contains("\"kind\":\"decide\""), "{sim}");
+        assert!(lines[1].contains("\"kind\":\"measure\""), "{sim}");
+        assert!(lines[2].contains("\"kind\":\"swap\""), "{sim}");
         assert!(!sim.contains("wall_ms"));
-        assert!(rec.export_jsonl(false).contains("wall_ms"));
+        assert!(rec.export_jsonl(false).unwrap().contains("wall_ms"));
     }
 
     #[test]
@@ -252,5 +349,55 @@ mod tests {
         assert_eq!(spans[0].kind, "gossip");
         assert_eq!(spans[0].dur_ms, 40.0);
         assert!(spans[0].wall_ms >= 0.0);
+    }
+
+    #[test]
+    fn traced_spans_export_hex_ids_and_sort_stably() {
+        let rec = Recorder::new(8);
+        rec.set_enabled(true);
+        rec.record_traced("probe", 7, 1.0, 2.0, 0.1, 0xc, 0xb, 0xa);
+        rec.record_traced("probe", 7, 1.0, 2.0, 0.1, 0xc, 0x9, 0xa);
+        let t = rec.start("swap", 1, 5.0).traced(0xc, 0xd, 0);
+        t.finish(&rec, 6.0);
+        let sim = rec.export_jsonl(true).unwrap();
+        let lines: Vec<&str> = sim.lines().collect();
+        assert_eq!(lines.len(), 3);
+        // Identical (t, kind, id, dur) probes tie-break on span id.
+        assert!(lines[0].contains("\"span\":\"0000000000000009\""));
+        assert!(lines[1].contains("\"span\":\"000000000000000b\""));
+        assert!(lines[0].contains("\"parent\":\"000000000000000a\""));
+        assert!(lines[0].contains("\"trace\":\"000000000000000c\""));
+        // Root spans omit the parent field entirely.
+        assert!(lines[2].contains("\"span\":\"000000000000000d\""));
+        assert!(!lines[2].contains("parent"), "{sim}");
+        // Untraced spans carry no trace fields at all.
+        rec.record("decide", 0, 9.0, 0.0, 0.0);
+        let sim = rec.export_jsonl(true).unwrap();
+        let decide = sim
+            .lines()
+            .find(|l| l.contains("decide"))
+            .unwrap();
+        assert!(!decide.contains("trace"), "{decide}");
+    }
+
+    #[test]
+    fn overflow_fails_sim_export_and_annotates_wall_export() {
+        let rec = Recorder::new(2);
+        rec.set_enabled(true);
+        for i in 0..5 {
+            rec.record("measure", i, i as f64, 1.0, 0.5);
+        }
+        assert_eq!(rec.dropped(), 3);
+        // The deterministic export refuses to lie.
+        let err = rec.export_jsonl(true).unwrap_err().to_string();
+        assert!(err.contains("3 spans dropped"), "{err}");
+        assert!(err.contains("scheduling-dependent"), "{err}");
+        // The wall export leads with a kind-less annotation line.
+        let wall = rec.export_jsonl(false).unwrap();
+        let first = wall.lines().next().unwrap();
+        assert!(first.contains("\"annotation\""), "{wall}");
+        assert!(first.contains("\"dropped\":3"), "{wall}");
+        assert!(!first.contains("\"kind\""), "{wall}");
+        assert_eq!(wall.lines().count(), 3, "2 spans + annotation");
     }
 }

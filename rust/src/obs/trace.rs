@@ -1,0 +1,529 @@
+//! Causal tracing on top of the flight [`Recorder`]: deterministic
+//! trace/span id derivation, cross-node trace assembly into a causal
+//! DAG, sim-time critical-path extraction, and text renderers.
+//!
+//! Determinism contract: every id is derived by hashing **seeded sim
+//! inputs only** — the run seed, the period index, a site string and
+//! site-chosen words (peer id, probe sequence, attempt). No wall
+//! clock, no allocation order, no thread id ever feeds the hash, so a
+//! seeded sim run produces byte-identical ids at any thread count.
+//! Ids are `u64`; the value `0` is reserved to mean "none" (untraced
+//! span / no parent) and is never returned by [`derive`].
+//!
+//! Ids are exported as 16-digit zero-padded hex strings because the
+//! JSON substrate stores numbers as `f64` (exact only to 2^53).
+//!
+//! [`Recorder`]: super::Recorder
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::recorder::Span;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Derive a deterministic 64-bit id from a seed, a site string and a
+/// sequence of site-chosen words (FNV-1a over the concatenation).
+/// Never returns 0 — that value is reserved for "none".
+pub fn derive(seed: u64, site: &str, words: &[u64]) -> u64 {
+    let mut h = FNV_OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    eat(&seed.to_le_bytes());
+    eat(site.as_bytes());
+    for w in words {
+        eat(&w.to_le_bytes());
+    }
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+/// The trace id for one adaptation period of a seeded run.
+pub fn trace_id(seed: u64, period: usize) -> u64 {
+    derive(seed, "trace", &[period as u64])
+}
+
+/// A span id within `trace`, keyed by the span kind, its
+/// discriminator `id` and a site-chosen `salt` (attempt/sequence
+/// word) that separates otherwise-identical spans.
+pub fn span_id(trace: u64, kind: &str, id: u64, salt: u64) -> u64 {
+    derive(trace, kind, &[id, salt])
+}
+
+/// Trace context carried on a wire frame: the period's trace id and
+/// the sender-side span the delivery belongs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Trace id (never 0 on the wire).
+    pub trace: u64,
+    /// Parent span id on the sending side (never 0 on the wire).
+    pub parent: u64,
+}
+
+/// An owned span record, as assembled from the recorder or parsed
+/// back from a `timeline.jsonl` export.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRec {
+    /// Span kind (`period`, `probe`, `retx`, `deliver`, ...).
+    pub kind: String,
+    /// Discriminator within the kind (period index, peer id, ...).
+    pub id: u64,
+    /// Sim-time start (ms).
+    pub t_ms: f64,
+    /// Sim-time duration (ms).
+    pub dur_ms: f64,
+    /// Trace id (0 = untraced).
+    pub trace: u64,
+    /// This span's id (0 = untraced).
+    pub span: u64,
+    /// Parent span id (0 = root).
+    pub parent: u64,
+}
+
+impl From<&Span> for SpanRec {
+    fn from(s: &Span) -> SpanRec {
+        SpanRec {
+            kind: s.kind.to_string(),
+            id: s.id,
+            t_ms: s.t_ms,
+            dur_ms: s.dur_ms,
+            trace: s.trace,
+            span: s.span,
+            parent: s.parent,
+        }
+    }
+}
+
+fn hex_field(js: &Json, key: &str) -> Result<u64> {
+    match js.opt(key) {
+        None => Ok(0),
+        Some(v) => {
+            let s = v.as_str()?;
+            u64::from_str_radix(s, 16)
+                .with_context(|| format!("bad hex id in '{key}': {s}"))
+        }
+    }
+}
+
+/// Parse a `timeline.jsonl` export back into span records. Blank
+/// lines and annotation headers (lines without a `kind` field) are
+/// skipped; trace/span/parent hex fields default to 0 when absent.
+pub fn parse_jsonl(text: &str) -> Result<Vec<SpanRec>> {
+    let mut out = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let js = json::parse(line)?;
+        let Some(kind) = js.opt("kind") else {
+            continue;
+        };
+        out.push(SpanRec {
+            kind: kind.as_str()?.to_string(),
+            id: js.get("id")?.as_f64()? as u64,
+            t_ms: js.get("t_ms")?.as_f64()?,
+            dur_ms: js.get("dur_ms")?.as_f64()?,
+            trace: hex_field(&js, "trace")?,
+            span: hex_field(&js, "span")?,
+            parent: hex_field(&js, "parent")?,
+        });
+    }
+    Ok(out)
+}
+
+/// One assembled causal trace: the spans of a single trace id, sorted
+/// by the deterministic `(t_ms, kind, id, span)` order, with parent
+/// links resolved into a child index.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// The trace id shared by every span below.
+    pub trace: u64,
+    /// Spans in deterministic order.
+    pub spans: Vec<SpanRec>,
+    /// `children[i]` lists the indices whose parent is `spans[i]`.
+    pub children: Vec<Vec<usize>>,
+    /// Indices of spans with no parent (`parent == 0`).
+    pub roots: Vec<usize>,
+    /// Indices whose parent id resolves to no recorded span.
+    pub orphans: Vec<usize>,
+}
+
+impl Trace {
+    /// The period index, when the trace has a `period` root span.
+    pub fn period(&self) -> Option<u64> {
+        self.roots
+            .iter()
+            .map(|&i| &self.spans[i])
+            .find(|s| s.kind == "period")
+            .map(|s| s.id)
+    }
+
+    /// Render the causal tree as indented text, one span per line.
+    /// Orphans (unresolvable parents) are listed in a trailing
+    /// section so broken stitching is visible, not silent.
+    pub fn render_tree(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace {:016x}  spans {}  roots {}  orphans {}",
+            self.trace,
+            self.spans.len(),
+            self.roots.len(),
+            self.orphans.len()
+        );
+        let mut visited = vec![false; self.spans.len()];
+        let mut stack: Vec<(usize, usize)> =
+            self.roots.iter().rev().map(|&i| (i, 1)).collect();
+        while let Some((i, depth)) = stack.pop() {
+            if std::mem::replace(&mut visited[i], true) {
+                continue;
+            }
+            let s = &self.spans[i];
+            let _ = writeln!(
+                out,
+                "{:indent$}{}[{}] t={:.3} dur={:.3}",
+                "",
+                s.kind,
+                s.id,
+                s.t_ms,
+                s.dur_ms,
+                indent = depth * 2
+            );
+            for &c in self.children[i].iter().rev() {
+                stack.push((c, depth + 1));
+            }
+        }
+        for &i in &self.orphans {
+            let s = &self.spans[i];
+            let _ = writeln!(
+                out,
+                "  orphan {}[{}] t={:.3} dur={:.3} parent={:016x}",
+                s.kind, s.id, s.t_ms, s.dur_ms, s.parent
+            );
+        }
+        out
+    }
+
+    /// The sim-time critical path: starting from the root whose
+    /// subtree ends latest, repeatedly descend into the child with
+    /// the latest end time (`t_ms + dur_ms`; ties break to the first
+    /// child in deterministic order). Returns span indices, root
+    /// first. Empty when the trace has no roots.
+    pub fn critical_path(&self) -> Vec<usize> {
+        // end[i] = latest end time in the subtree rooted at i,
+        // computed iteratively (post-order) to stay cycle-safe.
+        let n = self.spans.len();
+        let end_of = |i: usize| self.spans[i].t_ms + self.spans[i].dur_ms;
+        let mut sub_end: Vec<f64> = (0..n).map(end_of).collect();
+        let mut state = vec![0u8; n]; // 0=new 1=open 2=done
+        for &r in &self.roots {
+            let mut stack = vec![r];
+            while let Some(&i) = stack.last() {
+                match state[i] {
+                    0 => {
+                        state[i] = 1;
+                        for &c in &self.children[i] {
+                            if state[c] == 0 {
+                                stack.push(c);
+                            }
+                        }
+                    }
+                    _ => {
+                        stack.pop();
+                        if state[i] == 1 {
+                            state[i] = 2;
+                            for &c in &self.children[i] {
+                                if sub_end[c] > sub_end[i] {
+                                    sub_end[i] = sub_end[c];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let Some(&start) = self.roots.iter().max_by(|&&a, &&b| {
+            sub_end[a]
+                .total_cmp(&sub_end[b])
+                .then(std::cmp::Ordering::Greater) // tie: keep first
+        }) else {
+            return Vec::new();
+        };
+        let mut path = vec![start];
+        let mut seen = vec![false; n];
+        seen[start] = true;
+        let mut cur = start;
+        loop {
+            let mut best: Option<usize> = None;
+            for &c in &self.children[cur] {
+                if seen[c] {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => sub_end[c] > sub_end[b],
+                };
+                if better {
+                    best = Some(c);
+                }
+            }
+            match best {
+                Some(c) => {
+                    seen[c] = true;
+                    path.push(c);
+                    cur = c;
+                }
+                None => break,
+            }
+        }
+        path
+    }
+
+    /// The critical path as a `kind[id] -> kind[id] -> ...` chain
+    /// plus its sim-time extent (root start to leaf end) in ms.
+    pub fn critical_chain(&self) -> (String, f64) {
+        let path = self.critical_path();
+        if path.is_empty() {
+            return (String::new(), 0.0);
+        }
+        let chain = path
+            .iter()
+            .map(|&i| {
+                let s = &self.spans[i];
+                format!("{}[{}]", s.kind, s.id)
+            })
+            .collect::<Vec<_>>()
+            .join(" -> ");
+        let first = &self.spans[path[0]];
+        let last = &self.spans[*path.last().unwrap()];
+        let extent = (last.t_ms + last.dur_ms - first.t_ms).max(0.0);
+        (chain, extent)
+    }
+}
+
+/// All traces assembled from one span set, sorted by (period, trace
+/// id) so output order is deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct Forest {
+    /// Assembled traces in deterministic order.
+    pub traces: Vec<Trace>,
+}
+
+impl Forest {
+    /// The trace whose root period span carries `period`, if any.
+    pub fn by_period(&self, period: u64) -> Option<&Trace> {
+        self.traces.iter().find(|t| t.period() == Some(period))
+    }
+
+    /// One summary line per trace: the critical chain, its sim-time
+    /// extent, and the span/root/orphan counts. Deterministic.
+    pub fn summary_jsonl(&self) -> String {
+        let mut out = String::new();
+        for t in &self.traces {
+            let (chain, crit_ms) = t.critical_chain();
+            let mut fields = vec![
+                ("critical", Json::str(&chain)),
+                ("critical_ms", Json::num(crit_ms)),
+                ("orphans", Json::num(t.orphans.len() as f64)),
+            ];
+            if let Some(p) = t.period() {
+                fields.push(("period", Json::num(p as f64)));
+            }
+            fields.push(("roots", Json::num(t.roots.len() as f64)));
+            fields.push(("spans", Json::num(t.spans.len() as f64)));
+            fields.push(("trace", Json::str(&format!("{:016x}", t.trace))));
+            out.push_str(&Json::obj(fields).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Assemble traced spans (`trace != 0`) into causal trees, one
+/// [`Trace`] per distinct trace id. Untraced spans are ignored.
+/// Within a trace, spans sort by `(t_ms, kind, id, span)`; parent
+/// ids resolve to the *first* span with that id in sorted order, and
+/// self-parent edges are dropped (both keep assembly total even on
+/// corrupt input).
+pub fn assemble(spans: &[SpanRec]) -> Forest {
+    let mut by_trace: BTreeMap<u64, Vec<SpanRec>> = BTreeMap::new();
+    for s in spans {
+        if s.trace != 0 {
+            by_trace.entry(s.trace).or_default().push(s.clone());
+        }
+    }
+    let mut traces = Vec::with_capacity(by_trace.len());
+    for (trace, mut spans) in by_trace {
+        spans.sort_by(|a, b| {
+            a.t_ms
+                .total_cmp(&b.t_ms)
+                .then_with(|| a.kind.cmp(&b.kind))
+                .then_with(|| a.id.cmp(&b.id))
+                .then_with(|| a.span.cmp(&b.span))
+        });
+        let mut index: BTreeMap<u64, usize> = BTreeMap::new();
+        for (i, s) in spans.iter().enumerate() {
+            if s.span != 0 {
+                index.entry(s.span).or_insert(i);
+            }
+        }
+        let mut children = vec![Vec::new(); spans.len()];
+        let mut roots = Vec::new();
+        let mut orphans = Vec::new();
+        for (i, s) in spans.iter().enumerate() {
+            if s.parent == 0 {
+                roots.push(i);
+            } else {
+                match index.get(&s.parent) {
+                    Some(&p) if p != i => children[p].push(i),
+                    _ => orphans.push(i),
+                }
+            }
+        }
+        traces.push(Trace {
+            trace,
+            spans,
+            children,
+            roots,
+            orphans,
+        });
+    }
+    traces.sort_by_key(|t| (t.period().unwrap_or(u64::MAX), t.trace));
+    Forest { traces }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(
+        kind: &str,
+        id: u64,
+        t: f64,
+        dur: f64,
+        trace: u64,
+        span: u64,
+        parent: u64,
+    ) -> SpanRec {
+        SpanRec {
+            kind: kind.to_string(),
+            id,
+            t_ms: t,
+            dur_ms: dur,
+            trace,
+            span,
+            parent,
+        }
+    }
+
+    #[test]
+    fn derive_is_deterministic_and_never_zero() {
+        assert_eq!(derive(7, "trace", &[3]), derive(7, "trace", &[3]));
+        assert_ne!(derive(7, "trace", &[3]), derive(7, "trace", &[4]));
+        assert_ne!(derive(7, "trace", &[3]), derive(8, "trace", &[3]));
+        assert_ne!(derive(7, "probe", &[3]), derive(7, "trace", &[3]));
+        // Word boundaries matter: [1,2] vs [2,1] differ.
+        assert_ne!(derive(0, "x", &[1, 2]), derive(0, "x", &[2, 1]));
+        for i in 0..512 {
+            assert_ne!(derive(i, "probe", &[i, i]), 0);
+        }
+    }
+
+    #[test]
+    fn assemble_builds_trees_and_flags_orphans() {
+        let t = trace_id(0, 3);
+        let root = span_id(t, "period", 3, 0);
+        let m = span_id(t, "measure", 3, 0);
+        let p = span_id(t, "probe", 17, 5);
+        let spans = vec![
+            rec("period", 3, 0.0, 250.0, t, root, 0),
+            rec("measure", 3, 0.0, 80.0, t, m, root),
+            rec("probe", 17, 1.0, 12.0, t, p, m),
+            rec("deliver", 9, 5.0, 0.0, t, span_id(t, "deliver", 9, 1), 42),
+            rec("decide", 0, 0.0, 0.0, 0, 0, 0), // untraced: ignored
+        ];
+        let forest = assemble(&spans);
+        assert_eq!(forest.traces.len(), 1);
+        let tr = &forest.traces[0];
+        assert_eq!(tr.spans.len(), 4);
+        assert_eq!(tr.roots.len(), 1);
+        assert_eq!(tr.orphans.len(), 1, "parent 42 resolves nowhere");
+        assert_eq!(tr.period(), Some(3));
+        assert!(forest.by_period(3).is_some());
+        assert!(forest.by_period(4).is_none());
+        let tree = tr.render_tree();
+        assert!(tree.contains("period[3]"), "{tree}");
+        assert!(tree.contains("orphan deliver[9]"), "{tree}");
+    }
+
+    #[test]
+    fn critical_path_picks_latest_ending_chain() {
+        let t = 1u64;
+        let spans = vec![
+            rec("period", 0, 0.0, 100.0, t, 10, 0),
+            rec("measure", 0, 0.0, 90.0, t, 20, 10),
+            rec("probe", 1, 1.0, 5.0, t, 30, 20),
+            rec("probe", 2, 1.0, 60.0, t, 40, 20),
+            rec("retx", 2, 70.0, 19.0, t, 50, 40),
+            rec("swap", 0, 95.0, 2.0, t, 60, 10),
+        ];
+        let forest = assemble(&spans);
+        let tr = &forest.traces[0];
+        let (chain, ms) = tr.critical_chain();
+        assert_eq!(
+            chain,
+            "period[0] -> measure[0] -> probe[2] -> retx[2]"
+        );
+        assert!((ms - 100.0).abs() < 1e-9, "{ms}");
+        let summary = forest.summary_jsonl();
+        assert!(summary.contains("\"critical_ms\":100"), "{summary}");
+        assert!(summary.contains("retx[2]"), "{summary}");
+    }
+
+    #[test]
+    fn jsonl_round_trips_hex_ids_and_skips_annotations() {
+        let line = concat!(
+            "{\"annotation\": \"wall export\"}\n",
+            "{\"dur_ms\": 2, \"id\": 17, \"kind\": \"probe\", ",
+            "\"parent\": \"00000000000000aa\", ",
+            "\"span\": \"00000000000000bb\", \"t_ms\": 1, ",
+            "\"trace\": \"00000000000000cc\"}\n",
+            "{\"dur_ms\": 0, \"id\": 1, \"kind\": \"decide\", ",
+            "\"t_ms\": 3}\n"
+        );
+        let spans = parse_jsonl(line).unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].parent, 0xaa);
+        assert_eq!(spans[0].span, 0xbb);
+        assert_eq!(spans[0].trace, 0xcc);
+        assert_eq!(spans[1].trace, 0, "absent ids default to none");
+        assert!(parse_jsonl("{\"kind\": \"x\", \"id\": 0, \
+                 \"t_ms\": 0, \"dur_ms\": 0, \"span\": \"zz\"}")
+            .is_err());
+    }
+
+    #[test]
+    fn assembly_survives_self_parent_cycles() {
+        let spans = vec![
+            rec("a", 0, 0.0, 1.0, 9, 5, 5), // self-parent
+            rec("b", 1, 0.0, 1.0, 9, 6, 7),
+            rec("c", 2, 0.0, 1.0, 9, 7, 6), // 6 <-> 7 cycle
+        ];
+        let forest = assemble(&spans);
+        let tr = &forest.traces[0];
+        assert!(tr.roots.is_empty());
+        assert_eq!(tr.orphans, vec![0], "self-edge dropped to orphan");
+        // No roots: rendering and critical path stay total.
+        assert!(tr.critical_path().is_empty());
+        let _ = tr.render_tree();
+    }
+}

@@ -306,6 +306,15 @@ pub struct ScenarioEngine {
     /// it). Registry counters are always on; span recording is the
     /// only opt-in part. Never changes reported values.
     pub obs_record: bool,
+    /// Causal-trace sampling stride for transport-backed runs
+    /// (`--trace-sample`): 0 (the default) disables tracing entirely —
+    /// frames carry no trace context and the wire bytes are identical
+    /// to an untraced build. `s ≥ 1` stamps every frame with the
+    /// period's trace context and records a deliver span on every
+    /// node whose id is a multiple of `s` (1 = all nodes). Ignored by
+    /// the in-process paths, which exchange no frames. Never changes
+    /// reported values.
+    pub trace_sample: usize,
     /// How per-period diameters are certified (`--certify`,
     /// `--landmarks`, `--oracle-every`): exact certification every
     /// period (the default), budgeted estimates with a periodic exact
@@ -325,6 +334,7 @@ pub const DEFAULT_SHARDS: usize = 4;
 /// [`NetCoordinator`] over `transport` and run the trace — shared by
 /// the sim and udp arms of the adaptive path so the replay call can
 /// never diverge between them.
+#[allow(clippy::too_many_arguments)]
 fn replay_over<T: crate::net::Transport>(
     cfg: Config,
     w0: crate::latency::LatencyMatrix,
@@ -332,6 +342,7 @@ fn replay_over<T: crate::net::Transport>(
     trace: &crate::membership::events::EventTrace,
     horizon: f64,
     record: bool,
+    trace_sample: usize,
     latency_at: &mut dyn FnMut(f64) -> Option<crate::latency::LatencyMatrix>,
     observer: Option<OverlayObserver<'_>>,
 ) -> Result<(crate::coordinator::CoordinatorReport, Metrics, Obs)> {
@@ -339,6 +350,7 @@ fn replay_over<T: crate::net::Transport>(
     if record {
         co.obs.rec.set_enabled(true);
     }
+    co.trace_sample = trace_sample;
     let rep =
         co.run_dynamic_observed(trace, horizon, latency_at, observer)?;
     let obs = co.obs.clone();
@@ -364,6 +376,7 @@ impl ScenarioEngine {
             reorder_rate: 0.0,
             churn_guard: 0,
             obs_record: false,
+            trace_sample: 0,
             certify: CertifyConfig::exact(),
         })
     }
@@ -569,6 +582,7 @@ impl ScenarioEngine {
                     &trace,
                     horizon,
                     record,
+                    self.trace_sample,
                     &mut latency_at,
                     observer,
                 )?
@@ -580,6 +594,7 @@ impl ScenarioEngine {
                     &trace,
                     horizon,
                     record,
+                    self.trace_sample,
                     &mut latency_at,
                     observer,
                 )?
@@ -934,6 +949,37 @@ mod tests {
         assert!(engine.run(Topology::Chord).is_err());
         engine.shards = 2;
         assert!(engine.run(Topology::DgroSharded).is_err());
+    }
+
+    #[test]
+    fn traced_transport_run_exports_a_causal_timeline() {
+        use crate::obs::trace;
+        let run = || {
+            let mut engine =
+                ScenarioEngine::new(tiny_spec(), 5).unwrap();
+            engine.transport = Some(TransportKind::Sim);
+            engine.obs_record = true;
+            engine.trace_sample = 1;
+            let rep = engine.run(Topology::Dgro).unwrap();
+            rep.obs.unwrap().rec.export_jsonl(true).unwrap()
+        };
+        let timeline = run();
+        assert_eq!(timeline, run(), "traced replay must be stable");
+        let spans = trace::parse_jsonl(&timeline).unwrap();
+        let forest = trace::assemble(&spans);
+        assert_eq!(forest.traces.len(), 4, "one trace per period");
+        for t in &forest.traces {
+            assert!(t.orphans.is_empty(), "orphans: {:?}", t.orphans);
+            assert!(!t.critical_chain().0.is_empty());
+        }
+        // trace_sample = 0 leaves the timeline trace-free.
+        let mut off = ScenarioEngine::new(tiny_spec(), 5).unwrap();
+        off.transport = Some(TransportKind::Sim);
+        off.obs_record = true;
+        let rep = off.run(Topology::Dgro).unwrap();
+        let plain =
+            rep.obs.unwrap().rec.export_jsonl(true).unwrap();
+        assert!(!plain.contains("\"trace\""));
     }
 
     #[test]

@@ -49,7 +49,7 @@ pub mod sim;
 pub mod workload;
 
 pub use route::{greedy_route, RouteScratch, RouteSummary};
-pub use sim::{TrafficPeriod, TrafficReport, TrafficSim};
+pub use sim::{RequestTrace, TrafficPeriod, TrafficReport, TrafficSim};
 pub use workload::{DestPools, Request};
 
 /// Per-period overlay observer threaded through the coordinator event
@@ -85,6 +85,11 @@ pub struct TrafficConfig {
     /// Extra seed mixed into the workload stream (the scenario seed is
     /// mixed in too, so the same scenario at two seeds differs).
     pub seed: u64,
+    /// Per-request hop-trace sampling stride: 0 = no request traces;
+    /// `s ≥ 1` records the full attempt history (queue wait, per-hop
+    /// latencies, outcome) of every request whose id is a multiple of
+    /// `s`, exported as `traces.jsonl`.
+    pub trace_sample: usize,
 }
 
 impl Default for TrafficConfig {
@@ -97,6 +102,7 @@ impl Default for TrafficConfig {
             pool: 4,
             stretch_samples: 8,
             seed: 0,
+            trace_sample: 0,
         }
     }
 }

@@ -27,7 +27,8 @@ use crate::graph::apsp;
 use crate::graph::Graph;
 use crate::latency::LatencyMatrix;
 use crate::metrics::Table;
-use crate::obs::Obs;
+use crate::obs::trace::{derive, span_id};
+use crate::obs::{Obs, TrafficSlo};
 use crate::par;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -60,6 +61,36 @@ pub struct TrafficPeriod {
     /// Mean greedy-routing stretch over the period's samples (0 when
     /// no sample was taken).
     pub mean_stretch: f64,
+}
+
+/// One sampled request attempt for `traces.jsonl`: the hop-level
+/// story of request → queue wait → per-hop latency →
+/// deliver/timeout/retry. Rows exist only for requests whose id is a
+/// multiple of [`TrafficConfig::trace_sample`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestTrace {
+    /// Request id — stable across the run, the sampling key.
+    pub req: u64,
+    /// Attempt index (0 = first try; retries chain under it).
+    pub attempt: u32,
+    /// Session start, sim-ms.
+    pub t0: f64,
+    /// This attempt's issue time, sim-ms.
+    pub t_gen: f64,
+    /// Source node.
+    pub src: u32,
+    /// Destination node of this attempt.
+    pub dst: u32,
+    /// `"delivered"`, `"timeout"` or `"routing-failure"`.
+    pub outcome: &'static str,
+    /// Queue wait at the destination, sim-ms (0 unless routed).
+    pub queue_ms: f64,
+    /// End-to-end session latency, sim-ms (0 unless delivered).
+    pub e2e_ms: f64,
+    /// Overlay hops the greedy route took.
+    pub hops: u32,
+    /// Per-hop edge latencies along the greedy path, sim-ms.
+    pub hop_ms: Vec<f64>,
 }
 
 /// Full traffic report for one `(scenario, topology, seed)` run.
@@ -95,6 +126,9 @@ pub struct TrafficReport {
     /// Requests serviced per node (the per-node load vector; also
     /// exported as the `traffic.node_load` counter-vec).
     pub node_load: Vec<u64>,
+    /// Sampled per-request hop traces (empty unless
+    /// [`TrafficConfig::trace_sample`] ≥ 1).
+    pub traces: Vec<RequestTrace>,
 }
 
 impl TrafficReport {
@@ -246,6 +280,80 @@ impl TrafficReport {
         out
     }
 
+    /// The SLO inputs the `health.json` digest consumes.
+    pub fn slo(&self) -> TrafficSlo {
+        TrafficSlo {
+            p99_ms: self.p99_ms,
+            success_rate: self.success_rate(),
+        }
+    }
+
+    /// Sampled request traces as JSONL, sorted by (request, attempt).
+    /// Trace/span ids derive from the scenario seed and the request id
+    /// (see [`crate::obs::trace`]) — never from wall clocks — so the
+    /// export is byte-deterministic at any thread count. Each retry
+    /// attempt is parented under the prior attempt's span, and the
+    /// rows carry `kind`/`id`/`t_ms`/`dur_ms` so
+    /// [`parse_jsonl`](crate::obs::trace::parse_jsonl) +
+    /// [`assemble`](crate::obs::trace::assemble) build per-request
+    /// causal chains from this file directly.
+    pub fn traces_jsonl(&self) -> String {
+        let mut rows: Vec<&RequestTrace> = self.traces.iter().collect();
+        rows.sort_by_key(|r| (r.req, r.attempt));
+        let mut out = String::new();
+        for r in rows {
+            let trace = derive(self.seed, "traffic", &[r.req]);
+            let span =
+                span_id(trace, "attempt", r.attempt as u64, r.req);
+            // Sim-time extent of this attempt: session latency for a
+            // delivery, the abandoning queue wait otherwise.
+            let dur = if r.outcome == "delivered" {
+                (r.e2e_ms - (r.t_gen - r.t0)).max(0.0)
+            } else {
+                r.queue_ms
+            };
+            let mut fields = vec![
+                ("attempt", Json::num(r.attempt as f64)),
+                ("dst", Json::num(r.dst as f64)),
+                ("dur_ms", Json::num(dur)),
+                ("e2e_ms", Json::num(r.e2e_ms)),
+                ("hop_ms", Json::f64s(&r.hop_ms)),
+                ("hops", Json::num(r.hops as f64)),
+                (
+                    "kind",
+                    Json::str(if r.attempt == 0 {
+                        "request"
+                    } else {
+                        "retry"
+                    }),
+                ),
+                ("id", Json::num(r.req as f64)),
+                ("outcome", Json::str(r.outcome)),
+                ("queue_ms", Json::num(r.queue_ms)),
+                ("span", Json::str(&format!("{span:016x}"))),
+                ("src", Json::num(r.src as f64)),
+                ("t0", Json::num(r.t0)),
+                ("t_ms", Json::num(r.t_gen)),
+                ("trace", Json::str(&format!("{trace:016x}"))),
+            ];
+            if r.attempt > 0 {
+                let parent = span_id(
+                    trace,
+                    "attempt",
+                    (r.attempt - 1) as u64,
+                    r.req,
+                );
+                fields.push((
+                    "parent",
+                    Json::str(&format!("{parent:016x}")),
+                ));
+            }
+            out.push_str(&Json::obj(fields).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
     /// Machine-readable totals (the CI artifact payload).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -292,6 +400,10 @@ pub struct TrafficSim {
     timeouts: u64,
     retries: u64,
     routing_failures: u64,
+    /// Next request id (monotone across periods — the sampling key).
+    req_seq: u64,
+    /// Accumulated sampled attempt rows.
+    trace_rows: Vec<RequestTrace>,
     obs: Obs,
 }
 
@@ -326,6 +438,8 @@ impl TrafficSim {
             timeouts: 0,
             retries: 0,
             routing_failures: 0,
+            req_seq: 0,
+            trace_rows: Vec::new(),
             obs,
             cfg,
         }
@@ -358,6 +472,14 @@ impl TrafficSim {
             &mut self.rng,
         );
         let offered = reqs.len() as u64;
+        // Request ids are assigned in generation order, monotone
+        // across periods, so the trace-sampling predicate
+        // `id % trace_sample == 0` picks the same sessions on every
+        // run and at every thread count.
+        let mut ids: Vec<u64> =
+            (self.req_seq..self.req_seq + offered).collect();
+        self.req_seq += offered;
+        let stride = self.cfg.trace_sample as u64;
         self.offered += offered;
         self.obs.reg.incr("traffic.offered", offered);
 
@@ -371,6 +493,8 @@ impl TrafficSim {
         let (mut p_deliv, mut p_to, mut p_rt, mut p_rf) =
             (0u64, 0u64, 0u64, 0u64);
 
+        let mut trace_scratch = RouteScratch::new(g.n());
+        let mut trace_path: Vec<u32> = Vec::new();
         let mut attempt = 0u32;
         let mut round = reqs;
         while !round.is_empty() {
@@ -386,12 +510,28 @@ impl TrafficSim {
                 ta.partial_cmp(&tb).unwrap().then(a.cmp(&b))
             });
             let mut retry: Vec<Request> = Vec::new();
+            let mut retry_ids: Vec<u64> = Vec::new();
             for idx in order {
                 let r = round[idx];
                 let o = outcomes[idx];
+                let traced = stride > 0 && ids[idx] % stride == 0;
                 if !o.delivered {
                     p_rf += 1;
+                    if traced {
+                        self.push_trace(
+                            g,
+                            w,
+                            ids[idx],
+                            &r,
+                            "routing-failure",
+                            0.0,
+                            0.0,
+                            &mut trace_scratch,
+                            &mut trace_path,
+                        );
+                    }
                     retry.push(r);
+                    retry_ids.push(ids[idx]);
                     continue;
                 }
                 let dst = r.dst as usize;
@@ -399,7 +539,21 @@ impl TrafficSim {
                 let wait = (self.next_free[dst] - arrival).max(0.0);
                 if wait > self.cfg.timeout_ms {
                     p_to += 1;
+                    if traced {
+                        self.push_trace(
+                            g,
+                            w,
+                            ids[idx],
+                            &r,
+                            "timeout",
+                            wait,
+                            0.0,
+                            &mut trace_scratch,
+                            &mut trace_path,
+                        );
+                    }
                     retry.push(r);
+                    retry_ids.push(ids[idx]);
                     continue;
                 }
                 let done = arrival + wait + service_ms;
@@ -410,6 +564,19 @@ impl TrafficSim {
                 latency_hist.observe(e2e);
                 period_lat.push(e2e);
                 p_deliv += 1;
+                if traced {
+                    self.push_trace(
+                        g,
+                        w,
+                        ids[idx],
+                        &r,
+                        "delivered",
+                        wait,
+                        e2e,
+                        &mut trace_scratch,
+                        &mut trace_path,
+                    );
+                }
             }
             if retry.is_empty() || attempt >= self.cfg.retries {
                 break;
@@ -430,6 +597,7 @@ impl TrafficSim {
                     }
                 })
                 .collect();
+            ids = retry_ids;
             p_rt += round.len() as u64;
         }
 
@@ -499,6 +667,43 @@ impl TrafficSim {
         }
     }
 
+    /// Record one sampled attempt row. Routing is a pure function of
+    /// `(g, w, src, dst)`, so re-running the route serially with path
+    /// capture reproduces exactly the hops the batched (possibly
+    /// parallel) pass took — the trace stays thread-invariant.
+    #[allow(clippy::too_many_arguments)]
+    fn push_trace(
+        &mut self,
+        g: &Graph,
+        w: &LatencyMatrix,
+        req: u64,
+        r: &Request,
+        outcome: &'static str,
+        queue_ms: f64,
+        e2e_ms: f64,
+        scratch: &mut RouteScratch,
+        path: &mut Vec<u32>,
+    ) {
+        let o = greedy_route(g, w, r.src, r.dst, scratch, Some(path));
+        let hop_ms: Vec<f64> = path
+            .windows(2)
+            .map(|e| f64::from(w.get(e[0] as usize, e[1] as usize)))
+            .collect();
+        self.trace_rows.push(RequestTrace {
+            req,
+            attempt: r.attempt,
+            t0: r.t0,
+            t_gen: r.t_gen,
+            src: r.src,
+            dst: r.dst,
+            outcome,
+            queue_ms,
+            e2e_ms,
+            hops: o.hops,
+            hop_ms,
+        });
+    }
+
     /// Close the run and produce the report (consumes the simulator).
     /// Returns the [`Obs`] alongside so callers can export snapshots.
     pub fn finish(
@@ -529,6 +734,7 @@ impl TrafficSim {
                 mean_stretch,
                 max_stretch: self.stretch_max,
                 node_load: self.node_load,
+                traces: self.trace_rows,
             },
             self.obs,
         )
@@ -645,6 +851,58 @@ mod tests {
         assert!(rep.timeouts > 0, "saturated run must time out");
         assert!(rep.retries > 0);
         assert!(rep.success_rate() < 1.0);
+    }
+
+    #[test]
+    fn sampled_request_traces_chain_attempts_and_assemble() {
+        let (g, w, alive) = ring_world(16, 3);
+        let mut cfg = TrafficConfig::default();
+        cfg.rate = 100_000.0;
+        cfg.capacity = 50.0; // saturated: timeouts force retries
+        cfg.timeout_ms = 5.0;
+        cfg.retries = 1;
+        cfg.trace_sample = 7;
+        let mut sim = TrafficSim::new(16, 1, cfg, 1);
+        sim.on_period(250.0, &g, &w, &alive);
+        let (rep, _) = sim.finish("sat", "kring", 1);
+        assert!(!rep.traces.is_empty(), "sampling must record rows");
+        for r in &rep.traces {
+            assert_eq!(r.req % 7, 0, "only sampled ids are traced");
+            assert_eq!(
+                r.hop_ms.len() as u32,
+                r.hops,
+                "one latency per hop"
+            );
+        }
+        assert!(
+            rep.traces.iter().any(|r| r.attempt > 0),
+            "a saturated run must trace retry attempts"
+        );
+        // The JSONL rows assemble into per-request causal chains:
+        // every retry resolves to its prior attempt, no orphans.
+        let jsonl = rep.traces_jsonl();
+        let spans = crate::obs::trace::parse_jsonl(&jsonl).unwrap();
+        let forest = crate::obs::trace::assemble(&spans);
+        assert!(!forest.traces.is_empty());
+        for tr in &forest.traces {
+            assert!(tr.orphans.is_empty(), "{}", tr.render_tree());
+            assert_eq!(tr.roots.len(), 1, "one root attempt per request");
+        }
+        // Byte-determinism: an 8-thread repeat exports identically.
+        let mut sim2 = TrafficSim::new(16, 1, cfg, 8);
+        sim2.on_period(250.0, &g, &w, &alive);
+        let (rep2, _) = sim2.finish("sat", "kring", 1);
+        assert_eq!(jsonl, rep2.traces_jsonl());
+    }
+
+    #[test]
+    fn trace_sampling_off_records_nothing_and_slo_matches() {
+        let (rep, _) = run_once(1);
+        assert!(rep.traces.is_empty(), "trace_sample = 0 is off");
+        assert_eq!(rep.traces_jsonl(), "");
+        let slo = rep.slo();
+        assert_eq!(slo.p99_ms, rep.p99_ms);
+        assert_eq!(slo.success_rate, rep.success_rate());
     }
 
     #[test]

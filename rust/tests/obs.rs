@@ -9,12 +9,21 @@
 //! * the loss-hardening counters (`net.stale_frames`,
 //!   `net.dup_frames`, `net.probe_retx`, `net.frames_lost`) flow
 //!   end-to-end from a seeded [`LossyTransport`]-backed replay into
-//!   both the registry and the synced [`Metrics`] view.
+//!   both the registry and the synced [`Metrics`] view;
+//! * the combined artifact set (timeline + causal traces + request
+//!   traces + health digest) of sharded × traffic and lossy
+//!   traced-transport × traffic runs is byte-identical across repeats
+//!   and worker thread counts, with zero trace orphans and a
+//!   reproducible critical path.
+
+#![allow(clippy::field_reassign_with_default)] // config-mutation idiom
 
 use dgro::net::TransportKind;
+use dgro::obs::{health_json, trace};
 use dgro::scenario::{
     ChurnSpec, ScenarioEngine, ScenarioReport, ScenarioSpec, Topology,
 };
+use dgro::traffic::TrafficConfig;
 
 fn obs_spec(horizon: f64) -> ScenarioSpec {
     ScenarioSpec {
@@ -40,8 +49,8 @@ fn sim_run(seed: u64) -> ScenarioReport {
 fn sim_timeline_jsonl_is_byte_identical_across_runs() {
     let a = sim_run(0);
     let b = sim_run(0);
-    let ja = a.obs.as_ref().unwrap().rec.export_jsonl(true);
-    let jb = b.obs.as_ref().unwrap().rec.export_jsonl(true);
+    let ja = a.obs.as_ref().unwrap().rec.export_jsonl(true).unwrap();
+    let jb = b.obs.as_ref().unwrap().rec.export_jsonl(true).unwrap();
     assert!(!ja.is_empty(), "a recording run must capture spans");
     assert_eq!(ja, jb, "sim timelines must be byte-identical");
     // The adaptive loop's span vocabulary is present...
@@ -59,7 +68,7 @@ fn sim_timeline_jsonl_is_byte_identical_across_runs() {
     // A different seed records a different timeline (the pin is not
     // comparing empty or constant strings).
     let c = sim_run(1);
-    let jc = c.obs.as_ref().unwrap().rec.export_jsonl(true);
+    let jc = c.obs.as_ref().unwrap().rec.export_jsonl(true).unwrap();
     assert_ne!(ja, jc, "seeds 0 and 1 produced identical timelines");
 }
 
@@ -74,7 +83,7 @@ fn sharded_obs_exports_are_thread_count_invariant() {
         let rep = engine.run(Topology::DgroSharded).unwrap();
         let obs = rep.obs.as_ref().unwrap();
         (
-            obs.rec.export_jsonl(true),
+            obs.rec.export_jsonl(true).unwrap(),
             obs.reg.counters_snapshot(),
             rep.render(),
         )
@@ -136,4 +145,105 @@ fn lossy_replay_counters_reach_registry_and_synced_metrics() {
     assert!(retx > 0, "lost probes must be retransmitted");
     assert!(dup > 0, "25% duplication tripped no dedup filter");
     assert!(stale > 0, "no straggler was rejected by its epoch tag");
+}
+
+// The deterministic artifact surface of one run: the sim timeline, the
+// plain counters, the sampled request traces and the SLO-aware health
+// digest. snapshot.json / metrics.prom are deliberately absent — their
+// histograms carry wall-clock instruments (period wall time, decode
+// µs) that no two processes reproduce.
+type ArtifactSet =
+    (String, Vec<(String, u64)>, String, String);
+
+#[test]
+fn sharded_traffic_combined_artifacts_are_thread_invariant() {
+    let run = |threads: usize| -> ArtifactSet {
+        let mut engine =
+            ScenarioEngine::new(obs_spec(2000.0), 3).unwrap();
+        engine.shards = 4;
+        engine.threads = threads;
+        engine.obs_record = true;
+        let mut tcfg = TrafficConfig::default();
+        tcfg.rate = 20_000.0;
+        tcfg.trace_sample = 5;
+        let (rep, traffic, tobs) = engine
+            .run_traffic(Topology::DgroSharded, tcfg)
+            .unwrap();
+        let obs = rep.obs.as_ref().unwrap();
+        (
+            obs.rec.export_jsonl(true).unwrap(),
+            obs.reg.counters_snapshot(),
+            traffic.traces_jsonl(),
+            health_json(&tobs.reg.to_json(), Some(&traffic.slo()))
+                .to_string(),
+        )
+    };
+    let base = run(1);
+    assert!(!base.2.is_empty(), "sampling must record request traces");
+    assert!(base.3.contains("\"checks\""), "health digest is empty");
+    assert_eq!(base, run(1), "repeat run diverged");
+    for threads in [2usize, 8] {
+        assert_eq!(base, run(threads), "artifacts differ at T={threads}");
+    }
+}
+
+#[test]
+fn traced_lossy_traffic_run_is_reproducible_and_orphan_free() {
+    // The PR's acceptance scenario: seeded sim transport with 5% loss,
+    // full causal tracing, sampled request traces. Every artifact and
+    // the extracted critical path must be byte-identical across
+    // repeats and worker thread counts, and the assembled causal
+    // forest must contain no orphan spans.
+    let run = |threads: usize| -> (ArtifactSet, String) {
+        let mut engine =
+            ScenarioEngine::new(obs_spec(1000.0), 5).unwrap();
+        engine.threads = threads;
+        engine.transport = Some(TransportKind::Sim);
+        engine.loss_rate = 0.05;
+        engine.obs_record = true;
+        engine.trace_sample = 1;
+        let mut tcfg = TrafficConfig::default();
+        tcfg.rate = 20_000.0;
+        tcfg.trace_sample = 3;
+        let (rep, traffic, tobs) =
+            engine.run_traffic(Topology::Dgro, tcfg).unwrap();
+        let obs = rep.obs.as_ref().unwrap();
+        let timeline = obs.rec.export_jsonl(true).unwrap();
+        let spans = trace::parse_jsonl(&timeline).unwrap();
+        let forest = trace::assemble(&spans);
+        assert_eq!(forest.traces.len(), 4, "one trace per period");
+        let mut critical = String::new();
+        for t in &forest.traces {
+            assert!(
+                t.orphans.is_empty(),
+                "orphan spans at T={threads}: {:?}",
+                t.orphans
+            );
+            assert!(
+                t.spans.iter().any(|s| s.kind == "deliver"),
+                "no cross-node deliver span was captured"
+            );
+            let (chain, ms) = t.critical_chain();
+            assert!(chain.contains(" -> "), "degenerate chain {chain}");
+            critical.push_str(&format!("{chain} {ms:.3}\n"));
+        }
+        let set = (
+            timeline,
+            obs.reg.counters_snapshot(),
+            traffic.traces_jsonl(),
+            health_json(&tobs.reg.to_json(), Some(&traffic.slo()))
+                .to_string(),
+        );
+        (set, critical)
+    };
+    let base = run(1);
+    assert!(!base.0 .2.is_empty(), "no request traces were sampled");
+    assert_eq!(base, run(1), "repeat run diverged");
+    for threads in [2usize, 8] {
+        assert_eq!(
+            base,
+            run(threads),
+            "artifacts or critical path differ at T={threads}"
+        );
+    }
 }
