@@ -299,9 +299,9 @@ fn main() -> anyhow::Result<()> {
         latency: vec![],
     };
     let mut rebuild = ScenarioEngine::new(spec.clone(), 7)?;
-    rebuild.incremental = false;
+    rebuild.opts.incremental = false;
     let mut incremental = ScenarioEngine::new(spec, 7)?;
-    incremental.threads = threads;
+    incremental.opts.threads = threads;
     let scen_iters = if quick { 2 } else { 3 };
     // Keep the last timed run of each engine for the equivalence diff
     // instead of paying for an extra untimed run.
@@ -362,10 +362,10 @@ fn main() -> anyhow::Result<()> {
         latency: vec![],
     };
     let mut central = ScenarioEngine::new(sh_spec.clone(), 7)?;
-    central.threads = threads;
+    central.opts.threads = threads;
     let mut shard_eng = ScenarioEngine::new(sh_spec, 7)?;
-    shard_eng.threads = threads;
-    shard_eng.shards = shard_k;
+    shard_eng.opts.threads = threads;
+    shard_eng.opts.shards = shard_k;
     let sh_iters = if quick { 1 } else { 2 };
     let mut rep_c: Option<ScenarioReport> = None;
     let mut rep_s: Option<ScenarioReport> = None;
@@ -479,6 +479,27 @@ fn main() -> anyhow::Result<()> {
         &[tcp_wall],
         Some(("frames", tcp_frames as f64)),
     );
+    // Coordinator-free runner over the same world/trace: adaptation
+    // periods per second of the full per-peer protocol (membership
+    // flood, push-sum measurement, two-phase swaps, ring anti-entropy).
+    // bench_gate floors `decentralized_periods_per_s`.
+    let t0 = std::time::Instant::now();
+    let mut dec_co = dgro::coordinator::DecentralizedRunner::new(
+        ncfg.clone(),
+        nw.clone(),
+        dgro::net::SimTransport::new(nw.clone()),
+    )?;
+    let rep_dec = {
+        use dgro::coordinator::{AdaptiveRunner, RunOptions};
+        dec_co.run_with(&net_trace, net_horizon, RunOptions::new())?
+    };
+    let dec_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let dec_frames = dec_co.frames_sent();
+    report(
+        &format!("decentralized runner sim n={net_nodes}"),
+        &[dec_wall],
+        Some(("frames", dec_frames as f64)),
+    );
     // Probe overhead: how far measured one-way RTT/2 strays from the
     // shaped matrix latency (0 on sim by construction).
     let rtt_overhead =
@@ -510,6 +531,11 @@ fn main() -> anyhow::Result<()> {
         ("tcp_frames", Json::num(tcp_frames as f64)),
         ("tcp_frames_per_s", Json::num(tcp_frames as f64 / tcp_wall)),
         (
+            "decentralized_periods_per_s",
+            Json::num(rep_dec.timeline.len() as f64 / dec_wall),
+        ),
+        ("decentralized_frames", Json::num(dec_frames as f64)),
+        (
             "tcp_stale_frames",
             Json::num(tcp_co.metrics.counter("net.stale_frames") as f64),
         ),
@@ -535,10 +561,10 @@ fn main() -> anyhow::Result<()> {
         latency: vec![],
     };
     let mut obs_off = ScenarioEngine::new(obs_spec.clone(), 7)?;
-    obs_off.threads = threads;
+    obs_off.opts.threads = threads;
     let mut obs_on = ScenarioEngine::new(obs_spec, 7)?;
-    obs_on.threads = threads;
-    obs_on.obs_record = true;
+    obs_on.opts.threads = threads;
+    obs_on.opts.obs_record = true;
     let obs_iters = if quick { 2 } else { 3 };
     let off_t = time_iters(0, obs_iters, || {
         obs_off.run(Topology::Dgro).expect("obs-off run");
@@ -579,12 +605,12 @@ fn main() -> anyhow::Result<()> {
         latency: vec![],
     };
     let mut tr_off = ScenarioEngine::new(tr_spec.clone(), 7)?;
-    tr_off.transport = Some(dgro::net::TransportKind::Sim);
-    tr_off.obs_record = true;
+    tr_off.opts.transport = Some(dgro::net::TransportKind::Sim);
+    tr_off.opts.obs_record = true;
     let mut tr_on = ScenarioEngine::new(tr_spec, 7)?;
-    tr_on.transport = Some(dgro::net::TransportKind::Sim);
-    tr_on.obs_record = true;
-    tr_on.trace_sample = 1;
+    tr_on.opts.transport = Some(dgro::net::TransportKind::Sim);
+    tr_on.opts.obs_record = true;
+    tr_on.opts.trace_sample = 1;
     let tr_iters = if quick { 2 } else { 3 };
     let troff_t = time_iters(0, tr_iters, || {
         tr_off.run(Topology::Dgro).expect("trace-off run");

@@ -54,11 +54,11 @@ pub fn run_opts(opts: FigureOpts) -> Result<Vec<Table>> {
     let spec = parity_spec(n, horizon);
     let run = |kind: TransportKind, loss: f64| -> Result<ScenarioReport> {
         let mut engine = ScenarioEngine::new(spec.clone(), 0)?;
-        engine.transport = Some(kind);
-        engine.loss_rate = loss;
+        engine.opts.transport = Some(kind);
+        engine.opts.loss_rate = loss;
         // Compress wall time harder than the interactive default so
         // three real-socket replays plus the sweep fit CI budgets.
-        engine.time_scale = 0.02;
+        engine.opts.time_scale = 0.02;
         engine.run(Topology::Dgro)
     };
 

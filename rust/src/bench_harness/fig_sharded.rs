@@ -56,8 +56,8 @@ pub fn run_opts(opts: FigureOpts) -> Result<Vec<Table>> {
             continue; // shard below the 3-member ring minimum
         }
         let mut engine = ScenarioEngine::new(spec.clone(), 7)?;
-        engine.threads = opts.resolve_threads();
-        engine.shards = k;
+        engine.opts.threads = opts.resolve_threads();
+        engine.opts.shards = k;
         let topology = if k == 1 {
             Topology::Dgro
         } else {

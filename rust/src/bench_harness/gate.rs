@@ -67,6 +67,14 @@ fn net_sim_frames(root: &Json) -> Result<f64> {
     root.get("net")?.get("sim_frames_per_s")?.as_f64()
 }
 
+fn decentralized_periods(root: &Json) -> Result<f64> {
+    // Adaptation periods per second of the coordinator-free runner's
+    // full per-peer event loop over the sim transport — floored so
+    // protocol chatter creep (extra floods, sync rounds, probe retx)
+    // fails the gate.
+    root.get("net")?.get("decentralized_periods_per_s")?.as_f64()
+}
+
 fn obs_overhead_ratio(root: &Json) -> Result<f64> {
     // Throughput with span recording enabled over disabled (1.0 = free
     // instrumentation). Floored like every other metric, so recording
@@ -112,7 +120,7 @@ fn traffic_p99_ms(root: &Json) -> Result<f64> {
     root.get("traffic")?.get("p99_ms")?.as_f64()
 }
 
-const METRICS: [MetricDef; 11] = [
+const METRICS: [MetricDef; 12] = [
     MetricDef {
         name: "scenario_incremental_periods_per_s",
         read: scenario_incremental,
@@ -136,6 +144,11 @@ const METRICS: [MetricDef; 11] = [
     MetricDef {
         name: "net_sim_frames_per_s",
         read: net_sim_frames,
+        invert: false,
+    },
+    MetricDef {
+        name: "decentralized_periods_per_s",
+        read: decentralized_periods,
         invert: false,
     },
     MetricDef {
@@ -328,10 +341,16 @@ mod tests {
             ),
             (
                 "net",
-                Json::obj(vec![(
-                    "sim_frames_per_s",
-                    Json::num(50_000.0 * scale),
-                )]),
+                Json::obj(vec![
+                    (
+                        "sim_frames_per_s",
+                        Json::num(50_000.0 * scale),
+                    ),
+                    (
+                        "decentralized_periods_per_s",
+                        Json::num(8.0 * scale),
+                    ),
+                ]),
             ),
             (
                 "obs",
@@ -410,7 +429,7 @@ mod tests {
         let out =
             compare(&parsed, &report(1.0), DEFAULT_TOLERANCE).unwrap();
         assert!(out.passed());
-        assert_eq!(out.rows.len(), 11);
+        assert_eq!(out.rows.len(), 12);
         for r in out.rows {
             assert!((r.ratio - 1.0).abs() < 1e-9, "{}: {}", r.name, r.ratio);
         }

@@ -1,0 +1,1565 @@
+//! The [`DecentralizedRunner`]: coordinator-free DGRO. Every node runs
+//! its own Algorithm-3 loop (docs/DECENTRALIZED.md); the runner object
+//! is only the *physical world* — it pumps the transport, powers peers
+//! on and off per the oracle trace, and evaluates the reported
+//! diameters against the oracle latency view, exactly like the
+//! [`NetCoordinator`](crate::net::NetCoordinator) does for its actors.
+//! No protocol state lives outside the peers:
+//!
+//! 1. **Membership (SWIM merge rule).** Lifecycle news travels as
+//!    [`Message::MemberUpdate`] records folded through
+//!    [`MembershipList::apply`] — higher incarnation wins, ties break
+//!    on state rank. A node announces its own join/leave; a crash is
+//!    announced by the lowest-id live peer (the stand-in for a SWIM
+//!    failure detector, which is out of scope here). Records flood
+//!    along each receiver's *own* ring-neighbor view and are
+//!    re-forwarded only when the merge advanced the view, so the flood
+//!    self-quenches; origins re-send for [`PROBE_RETX`] extra epochs
+//!    to ride out frame loss.
+//! 2. **Measurement.** The message-level Algorithm 3 of the net
+//!    coordinator, run peer-locally: RTT probes against the peer's own
+//!    view of alive neighbors and alive random targets, then push-sum
+//!    gossip rounds — each peer reads out its *own* mass-weighted ρ.
+//!    Peers whose probe mass was lost entirely sit the period out
+//!    (no ρ, no proposal) instead of acting on a biased estimate.
+//! 3. **Two-phase ring swap.** A peer whose ρ leaves the Keep band —
+//!    and that beats all its overlay neighbors under the shared
+//!    per-period priority hash (a coordinator-free independent-set
+//!    gate; without it a fully-out-of-band overlay would deadlock on
+//!    self-locked grants) —
+//!    proposes: it materializes a candidate ring, picks the replacement
+//!    slot from its own view, and sends [`Message::SwapPropose`] to the
+//!    slot ring's alive predecessor and successor (walking past peers
+//!    its view says are dead). A responder grants at most **one**
+//!    proposal per period ([`Message::SwapAck`]); a proposer locks its
+//!    own grant when proposing. Full grants commit: the proposer
+//!    installs the ring under version `(period, proposer)` and floods
+//!    [`Message::SwapCommit`]. Receivers install a commit only when its
+//!    version is newer (higher period wins, ties break toward the
+//!    lower proposer id). Every commit carries a full permutation, so
+//!    any subset of commits applied in any order leaves every ring a
+//!    valid cycle — concurrent swaps cannot tear the ring, they can
+//!    only lose the version race.
+//! 4. **Anti-entropy.** After the swap phase, peers exchange
+//!    [`Message::RingDigest`] frames (per-slot versions) with their
+//!    ring neighbors; a receiver holding a newer version pushes the
+//!    corresponding commit back. Rounds repeat until
+//!    [`SYNC_QUIET_ROUNDS`] consecutive rounds repair nothing, so a
+//!    commit dropped by a lossy link is re-delivered hop by hop before
+//!    the period closes.
+//!
+//! **Reporting.** The per-period series are the shared ones
+//! ([`record_period`]): the overlay is read from the lowest-id live
+//! peer (the *witness*), diameters are evaluated on the oracle latency
+//! view, and the reported ρ is the mean of the live peers' own
+//! estimates — so `scenario compare` columns line up with the other
+//! runners. Like every runner, frames to powered-off peers are
+//! discarded by the world (counted as `net.dead_drops`), never
+//! processed.
+//!
+//! Determinism: peers are iterated in ascending id everywhere, gossip
+//! merges sort by sender, probe retries drain in sequence order — on
+//! [`SimTransport`](crate::net::transport::SimTransport) a seeded run
+//! is byte-identical at any thread count (there are no threads here at
+//! all).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::coordinator::runner::{
+    reject_non_exact_certify, AdaptiveRunner, RunOptions,
+};
+use crate::coordinator::service::{alive_overlay_graph, record_period};
+use crate::coordinator::CoordinatorReport;
+use crate::dgro::select::{
+    decide, materialize, RingChoice, SelectConfig,
+};
+use crate::gossip::measure::GossipStats;
+use crate::graph::diameter;
+use crate::graph::ring::Ring;
+use crate::latency::LatencyMatrix;
+use crate::membership::events::{EventTrace, MembershipEvent};
+use crate::membership::list::{MemberState, MembershipList};
+use crate::metrics::Metrics;
+use crate::net::runner::{
+    frame_key, max_delay_ms, ObsHandles, PendingProbe, ProbeAccum,
+    MAX_IDLE_SWEEPS, POLL_MS, PROBE_RETX,
+};
+use crate::net::transport::{Delivery, Transport};
+use crate::net::wire::Message;
+use crate::obs::trace::{span_id, trace_id, TraceCtx};
+use crate::obs::Obs;
+use crate::topology::kring::KRing;
+use crate::topology::random_ring;
+use crate::util::rng::Rng;
+
+/// Upper bound on anti-entropy digest rounds per period (a backstop;
+/// quiescence normally ends the loop much earlier).
+const SYNC_ROUNDS_CAP: usize = 16;
+
+/// Consecutive repair-free digest rounds before ring anti-entropy
+/// declares the views converged for the period.
+const SYNC_QUIET_ROUNDS: usize = 2;
+
+/// `a` supersedes `b` under the swap version order: higher period
+/// wins; within a period the lower proposer id wins. Boot rings carry
+/// version `(0, 0)` and periods start at 1, so every commit supersedes
+/// boot state.
+fn ver_newer(a: (u32, u32), b: (u32, u32)) -> bool {
+    a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+/// Shared per-period proposal priority: a deterministic hash of
+/// `(seed, period, id)` every peer can compute for every other peer
+/// from the deployment configuration alone. A peer proposes only when
+/// it beats all its overlay neighbors, so proposers form an
+/// independent set — without this, a period in which *every* peer
+/// leaves the Keep band (the usual state right after boot) would
+/// self-lock every grant and no swap could ever commit.
+fn swap_prio(seed: u64, period: u32, id: u32) -> u64 {
+    crate::obs::trace::derive(
+        seed,
+        "swap-prio",
+        &[period as u64, id as u64],
+    )
+}
+
+/// Walk `order` from `me` in both directions to the nearest members
+/// `alive` contains (skipping `me` itself). Returns the deduplicated
+/// neighbor pair — one entry when predecessor and successor coincide,
+/// empty when the view holds no other alive member on this ring.
+fn alive_ring_neighbors(
+    order: &[u32],
+    me: u32,
+    alive: &HashSet<u32>,
+) -> Vec<u32> {
+    let n = order.len();
+    let Some(pos) = order.iter().position(|&v| v == me) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for dir in [n - 1, 1usize] {
+        let mut i = pos;
+        for _ in 1..n {
+            i = (i + dir) % n;
+            let v = order[i];
+            if v != me && alive.contains(&v) {
+                out.push(v);
+                break;
+            }
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Circumference of a visit order under `w` — the ring-randomness
+/// proxy the slot chooser shares with
+/// [`swap_slot`](crate::coordinator::service::swap_slot) (random rings
+/// are long, nearest-neighbour rings short).
+fn order_len(order: &[u32], w: &LatencyMatrix) -> f32 {
+    let n = order.len();
+    let mut len = 0.0f32;
+    for i in 0..n {
+        len += w.get(order[i] as usize, order[(i + 1) % n] as usize);
+    }
+    len
+}
+
+/// An in-flight two-phase swap proposal on its proposer.
+struct Proposal {
+    slot: usize,
+    seq: u32,
+    order: Vec<u32>,
+    acks: usize,
+    quorum: usize,
+}
+
+/// One peer's entire protocol state: everything it knows, it learned
+/// from its boot configuration or from frames on the transport.
+struct Peer {
+    id: u32,
+    /// Physically powered on (the world's truth, not a view).
+    up: bool,
+    rng: Rng,
+    /// This peer's own membership view (SWIM merge rule).
+    membership: MembershipList,
+    /// This peer's own copy of the K ring visit orders.
+    rings: Vec<Vec<u32>>,
+    /// Per-slot swap version `(period, proposer)`; boot is `(0, 0)`.
+    ring_ver: Vec<(u32, u32)>,
+    next_seq: u32,
+    pending: HashMap<u32, PendingProbe>,
+    probe: ProbeAccum,
+    /// Push-sum accumulator: local, global, min, m, ml.
+    acc: [f64; 5],
+    /// Incoming pushes for the current gossip round, keyed by sender.
+    gossip_in: Vec<(u32, [f64; 5])>,
+    /// This period's own ρ estimate (valid only when `has_rho`).
+    rho: f64,
+    has_rho: bool,
+    /// Whether this peer's single per-period swap grant is taken.
+    granted: bool,
+    prop: Option<Proposal>,
+    /// Membership records that advanced this peer's view this period
+    /// (its churn-guard signal).
+    events_seen: u64,
+}
+
+impl Peer {
+    fn fresh_seq(&mut self) -> u32 {
+        let s = self.next_seq;
+        self.next_seq = self.next_seq.wrapping_add(1);
+        s
+    }
+
+    /// The peer's own view of its alive set.
+    fn alive_view(&self) -> HashSet<u32> {
+        self.membership.alive().collect()
+    }
+
+    /// Alive overlay neighbors per this peer's own rings and own
+    /// membership view: the walked predecessor/successor on every
+    /// ring, sorted and deduplicated.
+    fn overlay_neighbors(&self) -> Vec<u32> {
+        let alive = self.alive_view();
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            out.extend(alive_ring_neighbors(ring, self.id, &alive));
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// Coordinator-free DGRO over a [`Transport`]. Construct with
+/// [`DecentralizedRunner::new`], then drive through
+/// [`AdaptiveRunner::run_with`] like every other runner.
+pub struct DecentralizedRunner<T: Transport> {
+    /// Shared runtime configuration (nodes, ε, gossip knobs,
+    /// churn guard, adaptation period).
+    pub cfg: Config,
+    /// Oracle latency view: shapes the transport's per-link delays and
+    /// evaluates reported diameters. Never consulted for ρ.
+    pub w: LatencyMatrix,
+    /// Oracle membership (fed by the trace) — reporting only; peers
+    /// keep their own views.
+    pub membership: MembershipList,
+    /// Counters + per-period series (same names as the coordinators).
+    pub metrics: Metrics,
+    /// This run's observability surface.
+    pub obs: Obs,
+    /// Causal-trace sampling stride (same contract as
+    /// [`NetCoordinator::trace_sample`](crate::net::NetCoordinator::trace_sample)).
+    pub trace_sample: usize,
+    hot: ObsHandles,
+    dead_drops: Arc<AtomicU64>,
+    peers: Vec<Peer>,
+    transport: T,
+    in_flight: usize,
+    epoch: u32,
+    seen: HashSet<u64>,
+    max_w_ms: f64,
+    /// Ring repairs applied since the counter was last reset (the
+    /// anti-entropy quiescence signal).
+    repairs: u64,
+    trace: u64,
+    span_period: u64,
+    tctx: Option<TraceCtx>,
+}
+
+impl<T: Transport> DecentralizedRunner<T> {
+    /// Boot `cfg.nodes` peers over `transport` with identical ring
+    /// state (the deployment configuration), one RNG stream per peer.
+    pub fn new(
+        cfg: Config,
+        w: LatencyMatrix,
+        transport: T,
+    ) -> Result<Self> {
+        let mut transport = transport;
+        cfg.validate()?;
+        if w.n() != cfg.nodes {
+            bail!(
+                "latency matrix has {} nodes but cfg.nodes = {}",
+                w.n(),
+                cfg.nodes
+            );
+        }
+        if transport.n() != cfg.nodes {
+            bail!(
+                "transport has {} endpoints but cfg.nodes = {}",
+                transport.n(),
+                cfg.nodes
+            );
+        }
+        let k = cfg.effective_k();
+        let mut rng = Rng::new(cfg.seed);
+        let boot_rings: Vec<Vec<u32>> = (0..k)
+            .map(|_| random_ring(cfg.nodes, &mut rng).order().to_vec())
+            .collect();
+        let peers = (0..cfg.nodes as u32)
+            .map(|id| Peer {
+                id,
+                up: true,
+                rng: rng.fork(0xDECE_0000 + id as u64),
+                membership: MembershipList::full(cfg.nodes),
+                rings: boot_rings.clone(),
+                ring_ver: vec![(0, 0); k],
+                next_seq: 0,
+                pending: HashMap::new(),
+                probe: ProbeAccum::default(),
+                acc: [0.0; 5],
+                gossip_in: Vec::new(),
+                rho: 0.5,
+                has_rho: false,
+                granted: false,
+                prop: None,
+                events_seen: 0,
+            })
+            .collect();
+        let obs = Obs::new();
+        transport.attach_obs(&obs);
+        let hot = ObsHandles::new(&obs.reg);
+        let dead_drops = obs.reg.counter("net.dead_drops");
+        Ok(DecentralizedRunner {
+            membership: MembershipList::full(cfg.nodes),
+            metrics: Metrics::new(),
+            obs,
+            hot,
+            dead_drops,
+            peers,
+            transport,
+            in_flight: 0,
+            epoch: 0,
+            seen: HashSet::new(),
+            max_w_ms: max_delay_ms(&w),
+            repairs: 0,
+            trace_sample: 0,
+            trace: 0,
+            span_period: 0,
+            tctx: None,
+            w,
+            cfg,
+        })
+    }
+
+    /// The underlying transport's name ("sim" / "udp" / ...).
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Total frames the transport carried so far.
+    pub fn frames_sent(&self) -> u64 {
+        self.transport.frames_sent()
+    }
+
+    /// Ids of the peers the world currently has powered on.
+    pub fn up_nodes(&self) -> Vec<u32> {
+        self.peers
+            .iter()
+            .filter(|p| p.up)
+            .map(|p| p.id)
+            .collect()
+    }
+
+    /// Per-peer membership snapshots (what each peer *believes*).
+    pub fn node_views(&self) -> Vec<Vec<(u32, MemberState, u64)>> {
+        self.peers.iter().map(|p| p.membership.snapshot()).collect()
+    }
+
+    /// Per-peer ring views (K visit orders each), for convergence and
+    /// ring-strand tests.
+    pub fn ring_views(&self) -> Vec<Vec<Vec<u32>>> {
+        self.peers.iter().map(|p| p.rings.clone()).collect()
+    }
+
+    /// Per-peer per-slot swap versions.
+    pub fn ring_versions(&self) -> Vec<Vec<(u32, u32)>> {
+        self.peers.iter().map(|p| p.ring_ver.clone()).collect()
+    }
+
+    fn tracing(&self) -> bool {
+        self.trace_sample > 0
+    }
+
+    /// Open a new collection phase (same epoch discipline as the net
+    /// coordinator: stragglers from written-off phases are rejected by
+    /// their stale epoch tag).
+    fn begin_phase(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        self.seen.clear();
+        self.in_flight = 0;
+    }
+
+    fn send(&mut self, src: u32, dst: u32, msg: &Message) -> Result<()> {
+        self.transport
+            .send(src, dst, &msg.encode_traced(self.epoch, self.tctx))?;
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    /// The lowest-id live peer — whose state the reporting plane reads
+    /// (falling back to peer 0's frozen state when nobody is up).
+    fn witness(&self) -> usize {
+        self.peers.iter().position(|p| p.up).unwrap_or(0)
+    }
+
+    /// The witness's rings as a validated [`KRing`] for oracle-side
+    /// diameter evaluation.
+    fn witness_krings(&self) -> Result<KRing> {
+        let p = &self.peers[self.witness()];
+        let rings = p
+            .rings
+            .iter()
+            .map(|o| Ring::new(o.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(KRing::new(rings))
+    }
+
+    /// Pump deliveries round-robin until every in-flight frame landed
+    /// or the write-off policy fires — the same two policies as the
+    /// net coordinator (idle cap on faithful transports, deadline on
+    /// transports that declare loss).
+    fn collect(&mut self) -> Result<u64> {
+        let n = self.cfg.nodes as u32;
+        let lossy = self.transport.loss_hint() > 0.0;
+        let start_ms = self.transport.now_ms();
+        let budget_ms = 2.0 * self.max_w_ms + 8.0 * POLL_MS;
+        let mut idle = 0usize;
+        while self.in_flight > 0 {
+            let mut any = false;
+            for node in 0..n {
+                while let Some(d) = self.transport.recv(node, POLL_MS) {
+                    any = true;
+                    self.on_delivery(node, d)?;
+                }
+            }
+            if any {
+                idle = 0;
+                continue;
+            }
+            idle += 1;
+            if lossy {
+                if self.transport.now_ms() - start_ms > budget_ms {
+                    break;
+                }
+            } else if idle >= MAX_IDLE_SWEEPS {
+                break;
+            }
+        }
+        let lost = self.in_flight as u64;
+        if lost > 0 {
+            self.hot.frames_lost.fetch_add(lost, Ordering::Relaxed);
+            self.in_flight = 0;
+        }
+        Ok(lost)
+    }
+}
+
+impl<T: Transport> DecentralizedRunner<T> {
+    /// Handle one delivered frame at `node`. Decode, check the frame
+    /// epoch, filter duplicates, discard frames addressed to
+    /// powered-off peers (`net.dead_drops` — the world drops them so a
+    /// barrier never stalls on a dead receiver), then dispatch.
+    fn on_delivery(&mut self, node: u32, d: Delivery) -> Result<()> {
+        if d.src as usize >= self.cfg.nodes || d.src == node {
+            self.hot.decode_errors.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        let (epoch, ctx, msg) = match Message::decode_traced(&d.frame)
+        {
+            Ok(x) => x,
+            Err(_) => {
+                self.hot.decode_errors.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+        };
+        if epoch != self.epoch {
+            self.hot.stale_frames.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        let key = frame_key(d.src, node, &d.frame);
+        if !self.seen.insert(key) {
+            self.hot.dup_frames.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        self.in_flight = self.in_flight.saturating_sub(1);
+        if !self.peers[node as usize].up {
+            self.dead_drops.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        // A sampled receive: stitch this delivery under the sender's
+        // span (phase-granular on this runner — frames carry the
+        // originating phase span as parent).
+        let mut deliver_span = 0u64;
+        if let Some(c) = ctx {
+            if self.obs.rec.is_enabled()
+                && self.trace_sample > 0
+                && node as usize % self.trace_sample == 0
+            {
+                deliver_span =
+                    span_id(c.trace, "deliver", node as u64, key);
+                self.obs.rec.record_traced(
+                    "deliver",
+                    node as u64,
+                    d.at_ms,
+                    0.0,
+                    0.0,
+                    c.trace,
+                    deliver_span,
+                    c.parent,
+                );
+            }
+        }
+        // Replies and forwards echo the incoming context, parented
+        // under the delivery span when one was recorded.
+        let reply_ctx = ctx.map(|c| TraceCtx {
+            trace: c.trace,
+            parent: if deliver_span != 0 { deliver_span } else { c.parent },
+        });
+        match msg {
+            Message::Ping { seq } => {
+                let hold_ms =
+                    (self.transport.now_ms() - d.at_ms).max(0.0);
+                let saved = self.tctx;
+                self.tctx = reply_ctx;
+                let sent = self.send(
+                    node,
+                    d.src,
+                    &Message::Pong { seq, hold_ms },
+                );
+                self.tctx = saved;
+                sent?;
+            }
+            Message::Pong { seq, hold_ms } => {
+                let at_ms = d.at_ms;
+                let peer = &mut self.peers[node as usize];
+                if let Some(p) = peer.pending.remove(&seq) {
+                    let one_way = ((at_ms - p.sent_at_ms - hold_ms)
+                        / 2.0)
+                        .max(0.0);
+                    let truth = self
+                        .w
+                        .get(node as usize, p.target as usize)
+                        as f64;
+                    self.hot.rtt_err.observe((one_way - truth).abs());
+                    if p.global {
+                        peer.probe.global_sum += one_way;
+                        peer.probe.global_cnt += 1;
+                        if peer.probe.global_cnt == 1
+                            || one_way < peer.probe.min
+                        {
+                            peer.probe.min = one_way;
+                        }
+                    } else {
+                        peer.probe.local_sum += one_way;
+                        peer.probe.local_cnt += 1;
+                    }
+                }
+            }
+            Message::GossipPush {
+                local,
+                global,
+                min,
+                m,
+                ml,
+            } => {
+                self.peers[node as usize]
+                    .gossip_in
+                    .push((d.src, [local, global, min, m, ml]));
+            }
+            Message::MemberUpdate {
+                node: subject,
+                state,
+                incarnation,
+                time,
+            } => {
+                let peer = &mut self.peers[node as usize];
+                let changed = peer
+                    .membership
+                    .apply(subject, state, incarnation, time);
+                if changed {
+                    peer.events_seen += 1;
+                    // Re-forward along this peer's own neighbor view;
+                    // the changed-guard quenches the flood.
+                    let targets: Vec<u32> = self.peers[node as usize]
+                        .overlay_neighbors()
+                        .into_iter()
+                        .filter(|&v| v != d.src)
+                        .collect();
+                    let fwd = Message::MemberUpdate {
+                        node: subject,
+                        state,
+                        incarnation,
+                        time,
+                    };
+                    let saved = self.tctx;
+                    self.tctx = reply_ctx;
+                    for dst in targets {
+                        self.send(node, dst, &fwd)?;
+                    }
+                    self.tctx = saved;
+                }
+            }
+            Message::SwapPropose { slot, seq, order } => {
+                let peer = &mut self.peers[node as usize];
+                let accept = (slot as usize) < peer.rings.len()
+                    && order.len() == self.cfg.nodes
+                    && !peer.granted;
+                if accept {
+                    peer.granted = true;
+                }
+                let saved = self.tctx;
+                self.tctx = reply_ctx;
+                let sent = self.send(
+                    node,
+                    d.src,
+                    &Message::SwapAck { seq, accept },
+                );
+                self.tctx = saved;
+                sent?;
+            }
+            Message::SwapAck { seq, accept } => {
+                if let Some(p) =
+                    self.peers[node as usize].prop.as_mut()
+                {
+                    if p.seq == seq && accept {
+                        p.acks += 1;
+                    }
+                }
+            }
+            Message::SwapCommit {
+                slot,
+                period,
+                proposer,
+                order,
+            } => {
+                self.apply_commit(node, slot, period, proposer, order);
+            }
+            Message::RingDigest { versions } => {
+                let peer = &self.peers[node as usize];
+                if versions.len() != peer.ring_ver.len() {
+                    return Ok(());
+                }
+                // Push back the commits the sender is missing.
+                let mut pushes = Vec::new();
+                for (s, (&mine, &theirs)) in peer
+                    .ring_ver
+                    .iter()
+                    .zip(versions.iter())
+                    .enumerate()
+                {
+                    if ver_newer(mine, theirs) {
+                        pushes.push(Message::SwapCommit {
+                            slot: s as u32,
+                            period: mine.0,
+                            proposer: mine.1,
+                            order: peer.rings[s].clone(),
+                        });
+                    }
+                }
+                let saved = self.tctx;
+                self.tctx = reply_ctx;
+                for m in pushes {
+                    self.send(node, d.src, &m)?;
+                }
+                self.tctx = saved;
+            }
+            // Centralized-protocol frames have no meaning here.
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Install a committed ring at `node` iff its `(period, proposer)`
+    /// version supersedes what the peer holds.
+    fn apply_commit(
+        &mut self,
+        node: u32,
+        slot: u32,
+        period: u32,
+        proposer: u32,
+        order: Vec<u32>,
+    ) {
+        let peer = &mut self.peers[node as usize];
+        let s = slot as usize;
+        if s >= peer.rings.len() || order.len() != peer.rings[s].len()
+        {
+            return;
+        }
+        if ver_newer((period, proposer), peer.ring_ver[s]) {
+            peer.rings[s] = order;
+            peer.ring_ver[s] = (period, proposer);
+            self.repairs += 1;
+        }
+    }
+}
+
+impl<T: Transport> DecentralizedRunner<T> {
+    /// Peer-local Algorithm-3 measurement: RTT probes (with the
+    /// [`PROBE_RETX`] retransmission budget), then push-sum gossip —
+    /// but each peer plans against its *own* membership view and reads
+    /// out its *own* mass-weighted ρ into [`Peer::rho`].
+    fn measure_local(&mut self) -> Result<()> {
+        let n = self.cfg.nodes;
+        let k = self.cfg.gossip_samples.max(1);
+        let ups: Vec<u32> = self.up_nodes();
+        for p in &mut self.peers {
+            p.has_rho = false;
+        }
+        if ups.len() < 2 {
+            return Ok(());
+        }
+        // Views are frozen for the whole measurement: precompute each
+        // live peer's walked alive-neighbor list and alive view once.
+        let neigh: Vec<Vec<u32>> = (0..n as u32)
+            .map(|u| {
+                if !self.peers[u as usize].up {
+                    return Vec::new();
+                }
+                self.peers[u as usize].overlay_neighbors()
+            })
+            .collect();
+        let views: Vec<HashSet<u32>> = (0..n)
+            .map(|u| {
+                if self.peers[u].up {
+                    self.peers[u].alive_view()
+                } else {
+                    HashSet::new()
+                }
+            })
+            .collect();
+
+        // Phase 1 — RTT probes, planned from each peer's own RNG in a
+        // fixed order (deterministic across transports).
+        let mut plans: Vec<Vec<(u32, bool)>> = vec![Vec::new(); n];
+        for &u in &ups {
+            let peer = &mut self.peers[u as usize];
+            peer.probe = ProbeAccum::default();
+            peer.pending.clear();
+            let mut plan: Vec<(u32, bool)> =
+                Vec::with_capacity(2 * k);
+            for _ in 0..k {
+                if neigh[u as usize].is_empty() {
+                    break;
+                }
+                let list = &neigh[u as usize];
+                plan.push((list[peer.rng.index(list.len())], false));
+            }
+            for _ in 0..k {
+                let tgt = loop {
+                    let v = peer.rng.index(n) as u32;
+                    if v != u {
+                        break v;
+                    }
+                };
+                if !views[u as usize].contains(&tgt) {
+                    continue; // own view says it cannot answer
+                }
+                plan.push((tgt, true));
+            }
+            plans[u as usize] = plan;
+        }
+        for attempt in 0..=PROBE_RETX {
+            if plans.iter().all(|p| p.is_empty()) {
+                break;
+            }
+            if attempt > 0 {
+                let outstanding: u64 =
+                    plans.iter().map(|p| p.len() as u64).sum();
+                self.hot
+                    .probe_retx
+                    .fetch_add(outstanding, Ordering::Relaxed);
+            }
+            self.begin_phase();
+            for &u in &ups {
+                let plan = std::mem::take(&mut plans[u as usize]);
+                for (tgt, global) in plan {
+                    let seq = self.peers[u as usize].fresh_seq();
+                    let sent_at_ms = self.transport.now_ms();
+                    self.peers[u as usize].pending.insert(
+                        seq,
+                        PendingProbe {
+                            target: tgt,
+                            sent_at_ms,
+                            global,
+                            span: 0,
+                            parent: 0,
+                            attempt: attempt as u32,
+                        },
+                    );
+                    self.send(u, tgt, &Message::Ping { seq })?;
+                }
+            }
+            self.collect()?;
+            // Unanswered probes queue for the next round in sequence
+            // order (deterministic for a deterministic fault pattern).
+            for &u in &ups {
+                if self.peers[u as usize].pending.is_empty() {
+                    continue;
+                }
+                let mut retry: Vec<(u32, PendingProbe)> = self.peers
+                    [u as usize]
+                    .pending
+                    .drain()
+                    .collect();
+                retry.sort_by_key(|&(seq, _)| seq);
+                plans[u as usize] = retry
+                    .into_iter()
+                    .map(|(_, p)| (p.target, p.global))
+                    .collect();
+            }
+        }
+
+        // Seed push-sum accumulators (zero mass for sample kinds the
+        // peer never measured, so lost probes cannot bias averages).
+        for &u in &ups {
+            let peer = &mut self.peers[u as usize];
+            let p = &peer.probe;
+            let has_local = p.local_cnt > 0;
+            let has_global = p.global_cnt > 0;
+            peer.acc = [
+                if has_local {
+                    p.local_sum / p.local_cnt as f64
+                } else {
+                    0.0
+                },
+                if has_global {
+                    p.global_sum / p.global_cnt as f64
+                } else {
+                    0.0
+                },
+                if has_global { p.min } else { 0.0 },
+                if has_global { 1.0 } else { 0.0 },
+                if has_local { 1.0 } else { 0.0 },
+            ];
+        }
+
+        // Phase 2 — push-sum rounds, barriered per epoch, merged in
+        // ascending sender order. Lost pushes are never retransmitted:
+        // the mass-weighted readout absorbs them.
+        for _ in 0..self.cfg.gossip_rounds {
+            self.begin_phase();
+            for &u in &ups {
+                let list = &neigh[u as usize];
+                if list.is_empty() {
+                    continue;
+                }
+                let peer = &mut self.peers[u as usize];
+                let v = list[peer.rng.index(list.len())];
+                let mut half = [0.0; 5];
+                for (h, a) in
+                    half.iter_mut().zip(peer.acc.iter_mut())
+                {
+                    *a /= 2.0;
+                    *h = *a;
+                }
+                self.send(
+                    u,
+                    v,
+                    &Message::GossipPush {
+                        local: half[0],
+                        global: half[1],
+                        min: half[2],
+                        m: half[3],
+                        ml: half[4],
+                    },
+                )?;
+            }
+            self.collect()?;
+            for &u in &ups {
+                let peer = &mut self.peers[u as usize];
+                let mut incoming =
+                    std::mem::take(&mut peer.gossip_in);
+                incoming.sort_by_key(|&(src, _)| src);
+                for (_, vals) in incoming {
+                    for (a, x) in
+                        peer.acc.iter_mut().zip(vals.iter())
+                    {
+                        *a += x;
+                    }
+                }
+            }
+        }
+
+        // Peer-local readout: each live peer computes its own ρ from
+        // its own mass-weighted averages; zero-mass peers sit out.
+        for &u in &ups {
+            let peer = &mut self.peers[u as usize];
+            let a = &peer.acc;
+            if a[3] > 1e-9 && a[4] > 1e-9 {
+                let stats = GossipStats {
+                    local: a[0] / a[4],
+                    global: a[1] / a[3],
+                    min: a[2] / a[3],
+                    messages: 0,
+                };
+                peer.rho = stats.rho();
+                peer.has_rho = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// The two-phase swap agreement for one period: propose to the
+    /// affected ring neighbors, collect grants, commit full grants
+    /// under `(period, proposer)` versions.
+    fn swap_phase(&mut self, period: u32) -> Result<()> {
+        let n = self.cfg.nodes;
+        let ups: Vec<u32> = self.up_nodes();
+        // Decide per peer, plan proposals ascending.
+        let mut proposers: Vec<u32> = Vec::new();
+        for &u in &ups {
+            let guard = self.cfg.churn_guard > 0
+                && self.peers[u as usize].events_seen
+                    > self.cfg.churn_guard;
+            let peer = &mut self.peers[u as usize];
+            if !peer.has_rho {
+                continue;
+            }
+            let stats = GossipStats {
+                local: peer.rho,
+                global: 1.0,
+                min: 0.0,
+                messages: 0,
+            };
+            let choice = decide(
+                &stats,
+                SelectConfig {
+                    epsilon: self.cfg.epsilon,
+                },
+            );
+            if choice == RingChoice::Keep {
+                continue;
+            }
+            if guard {
+                self.obs.reg.incr("rings.guard_skips", 1);
+                continue;
+            }
+            // Liveness gate: propose only when this peer's shared
+            // priority hash beats all its overlay neighbors', so
+            // responders are never proposers themselves (see
+            // [`swap_prio`]).
+            let my_prio = swap_prio(self.cfg.seed, period, u);
+            let eligible = self.peers[u as usize]
+                .overlay_neighbors()
+                .iter()
+                .all(|&v| my_prio < swap_prio(self.cfg.seed, period, v));
+            if !eligible {
+                continue;
+            }
+            // Materialize the candidate against the oracle view (the
+            // same fidelity shortcut the net coordinator takes) and
+            // pick the slot from this peer's own rings.
+            let start = self.peers[u as usize].rng.index(n);
+            let Some(ring) = materialize(
+                choice,
+                &self.w,
+                start,
+                &mut self.peers[u as usize].rng,
+            ) else {
+                continue;
+            };
+            let peer = &self.peers[u as usize];
+            let lengths: Vec<f32> = peer
+                .rings
+                .iter()
+                .map(|o| order_len(o, &self.w))
+                .collect();
+            let mut slot = 0usize;
+            for (i, &len) in lengths.iter().enumerate() {
+                let better = match choice {
+                    RingChoice::Shortest => len > lengths[slot],
+                    _ => len < lengths[slot],
+                };
+                if better {
+                    slot = i;
+                }
+            }
+            let alive = peer.alive_view();
+            let targets =
+                alive_ring_neighbors(&peer.rings[slot], u, &alive);
+            let quorum = targets.len();
+            let peer = &mut self.peers[u as usize];
+            // Self-lock the proposer's own per-period grant so
+            // concurrent neighbors cannot be granted by it.
+            peer.granted = true;
+            let seq = peer.fresh_seq();
+            peer.prop = Some(Proposal {
+                slot,
+                seq,
+                order: ring.order().to_vec(),
+                acks: 0,
+                quorum,
+            });
+            proposers.push(u);
+        }
+        if proposers.is_empty() {
+            return Ok(());
+        }
+
+        // Phase 1: propose to the affected ring neighbors, barriered;
+        // responders grant or refuse within the same phase.
+        self.begin_phase();
+        self.tctx = self.tracing().then_some(TraceCtx {
+            trace: self.trace,
+            parent: self.span_period,
+        });
+        for &u in &proposers {
+            let peer = &self.peers[u as usize];
+            let Some(prop) = peer.prop.as_ref() else { continue };
+            let msg = Message::SwapPropose {
+                slot: prop.slot as u32,
+                seq: prop.seq,
+                order: prop.order.clone(),
+            };
+            let alive = peer.alive_view();
+            let targets = alive_ring_neighbors(
+                &peer.rings[prop.slot],
+                u,
+                &alive,
+            );
+            for dst in targets {
+                self.send(u, dst, &msg)?;
+            }
+        }
+        self.tctx = None;
+        self.collect()?;
+
+        // Phase 2: fully granted proposers install and flood commits.
+        let mut committed = false;
+        self.begin_phase();
+        self.tctx = self.tracing().then_some(TraceCtx {
+            trace: self.trace,
+            parent: self.span_period,
+        });
+        for &u in &proposers {
+            let peer = &mut self.peers[u as usize];
+            let Some(prop) = peer.prop.take() else { continue };
+            if prop.acks < prop.quorum {
+                continue;
+            }
+            peer.rings[prop.slot] = prop.order.clone();
+            peer.ring_ver[prop.slot] = (period, u);
+            self.hot.rings_swapped.fetch_add(1, Ordering::Relaxed);
+            committed = true;
+            let msg = Message::SwapCommit {
+                slot: prop.slot as u32,
+                period,
+                proposer: u,
+                order: prop.order,
+            };
+            let mut targets: Vec<u32> = self.peers[u as usize]
+                .alive_view()
+                .into_iter()
+                .filter(|&v| v != u)
+                .collect();
+            targets.sort_unstable();
+            for dst in targets {
+                self.send(u, dst, &msg)?;
+            }
+        }
+        self.tctx = None;
+        if committed {
+            self.collect()?;
+        } else {
+            // No commits flew; close the (empty) phase barrier.
+            self.in_flight = 0;
+        }
+        Ok(())
+    }
+
+    /// Ring anti-entropy: digest rounds between ring neighbors until
+    /// [`SYNC_QUIET_ROUNDS`] consecutive rounds repair nothing (cap
+    /// [`SYNC_ROUNDS_CAP`]), so commits dropped by a lossy link are
+    /// re-delivered hop by hop.
+    fn sync_rings(&mut self) -> Result<()> {
+        let ups: Vec<u32> = self.up_nodes();
+        if ups.len() < 2 {
+            return Ok(());
+        }
+        let mut quiet = 0usize;
+        for _ in 0..SYNC_ROUNDS_CAP {
+            self.repairs = 0;
+            self.begin_phase();
+            self.tctx = self.tracing().then_some(TraceCtx {
+                trace: self.trace,
+                parent: self.span_period,
+            });
+            for &u in &ups {
+                let msg = Message::RingDigest {
+                    versions: self.peers[u as usize].ring_ver.clone(),
+                };
+                let targets =
+                    self.peers[u as usize].overlay_neighbors();
+                for dst in targets {
+                    self.send(u, dst, &msg)?;
+                }
+            }
+            self.tctx = None;
+            self.collect()?;
+            if self.repairs == 0 {
+                quiet += 1;
+                if quiet >= SYNC_QUIET_ROUNDS {
+                    break;
+                }
+            } else {
+                quiet = 0;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<T: Transport> DecentralizedRunner<T> {
+    /// Fold this period's oracle trace events into the world (power
+    /// peers on/off) and return the per-origin [`Message::MemberUpdate`]
+    /// records the protocol will flood, plus the peers that power down
+    /// *after* announcing (graceful leaves).
+    fn originate_events(
+        &mut self,
+        trace: &EventTrace,
+        ev_idx: &mut usize,
+        t: f64,
+    ) -> (Vec<(u32, Message)>, Vec<usize>, u64) {
+        let mut origins: Vec<(u32, Message)> = Vec::new();
+        let mut leavers: Vec<usize> = Vec::new();
+        let mut applied = 0u64;
+        while *ev_idx < trace.events.len()
+            && trace.events[*ev_idx].time() <= t
+        {
+            let ev = trace.events[*ev_idx];
+            self.membership.apply_trace_event(&ev);
+            *ev_idx += 1;
+            applied += 1;
+            let subject = ev.node() as usize;
+            match ev {
+                MembershipEvent::Join { time, node } => {
+                    self.obs.reg.incr("membership.joins", 1);
+                    // The subject announces itself: apply locally
+                    // (bumping the incarnation — the refutation rule),
+                    // power on, flood the resulting record.
+                    self.peers[subject].up = true;
+                    self.peers[subject]
+                        .membership
+                        .apply_trace_event(&ev);
+                    self.peers[subject].events_seen += 1;
+                    let inc = self.peers[subject]
+                        .membership
+                        .get(node)
+                        .map(|m| m.incarnation)
+                        .unwrap_or(0);
+                    origins.push((
+                        node,
+                        Message::MemberUpdate {
+                            node,
+                            state: MemberState::Alive,
+                            incarnation: inc,
+                            time,
+                        },
+                    ));
+                }
+                MembershipEvent::Leave { time, node } => {
+                    self.obs.reg.incr("membership.leaves", 1);
+                    if self.peers[subject].up {
+                        // Graceful: announce, then power down after
+                        // the flood phases.
+                        self.peers[subject]
+                            .membership
+                            .apply_trace_event(&ev);
+                        self.peers[subject].events_seen += 1;
+                        let inc = self.peers[subject]
+                            .membership
+                            .get(node)
+                            .map(|m| m.incarnation)
+                            .unwrap_or(0);
+                        origins.push((
+                            node,
+                            Message::MemberUpdate {
+                                node,
+                                state: MemberState::Left,
+                                incarnation: inc,
+                                time,
+                            },
+                        ));
+                        leavers.push(subject);
+                    } else if let Some((det, inc)) =
+                        self.detector_for(node, time, MemberState::Left)
+                    {
+                        origins.push((
+                            det,
+                            Message::MemberUpdate {
+                                node,
+                                state: MemberState::Left,
+                                incarnation: inc,
+                                time,
+                            },
+                        ));
+                    }
+                }
+                MembershipEvent::Crash { time, node } => {
+                    self.obs.reg.incr("membership.crashes", 1);
+                    // The subject cannot announce: the lowest-id live
+                    // peer plays failure detector (SWIM stand-in).
+                    self.peers[subject].up = false;
+                    if let Some((det, inc)) = self.detector_for(
+                        node,
+                        time,
+                        MemberState::Faulty,
+                    ) {
+                        origins.push((
+                            det,
+                            Message::MemberUpdate {
+                                node,
+                                state: MemberState::Faulty,
+                                incarnation: inc,
+                                time,
+                            },
+                        ));
+                    }
+                }
+            }
+        }
+        (origins, leavers, applied)
+    }
+
+    /// The lowest-id live peer other than `subject` applies the
+    /// detection locally and becomes the record's origin; returns
+    /// `(detector, incarnation)` or `None` when nobody is left to
+    /// detect.
+    fn detector_for(
+        &mut self,
+        subject: u32,
+        time: f64,
+        state: MemberState,
+    ) -> Option<(u32, u64)> {
+        let det = self
+            .peers
+            .iter()
+            .position(|p| p.up && p.id != subject)? as u32;
+        let peer = &mut self.peers[det as usize];
+        let inc = peer
+            .membership
+            .get(subject)
+            .map(|m| m.incarnation)
+            .unwrap_or(0);
+        if peer.membership.apply(subject, state, inc, time) {
+            peer.events_seen += 1;
+        }
+        Some((det, inc))
+    }
+}
+
+impl<T: Transport> AdaptiveRunner for DecentralizedRunner<T> {
+    fn kind(&self) -> &'static str {
+        "decentralized"
+    }
+
+    /// The coordinator-free event loop: per period, originate and
+    /// flood membership news, run the peer-local measurement, run the
+    /// two-phase swap agreement, anti-entropy the ring views, then
+    /// record the shared per-period series from the witness peer.
+    /// Latency updates reshape the transport; a non-exact
+    /// [`RunOptions::certify`] override is rejected.
+    fn run_with(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+        mut opts: RunOptions<'_>,
+    ) -> Result<CoordinatorReport> {
+        reject_non_exact_certify(self.kind(), opts.certify)?;
+        if let Some(g) = opts.churn_guard {
+            self.cfg.churn_guard = g;
+        }
+        if opts.record {
+            self.obs.rec.set_enabled(true);
+        }
+        if opts.trace_sample > 0 {
+            self.trace_sample = opts.trace_sample;
+        }
+        let mut latency_at = opts.take_latency();
+        let mut observer = opts.observer;
+        let initial_diameter =
+            diameter::diameter(&self.witness_krings()?.to_graph(&self.w));
+        let mut timeline = Vec::new();
+        let frames_start = self.transport.frames_sent();
+        let initial_swaps =
+            self.hot.rings_swapped.load(Ordering::Relaxed);
+        let mut swaps0 = initial_swaps;
+        let mut t = 0.0;
+        let mut ev_idx = 0usize;
+        let mut period = 0u32;
+        while t < horizon {
+            t += self.cfg.adapt_period_ms;
+            period += 1;
+            if self.tracing() {
+                self.trace = trace_id(self.cfg.seed, period as usize);
+                self.span_period =
+                    span_id(self.trace, "period", period as u64, 0);
+            }
+            let period_wall0 = std::time::Instant::now();
+            let p_span = self
+                .obs
+                .rec
+                .start("period", period as u64, self.transport.now_ms())
+                .traced(self.trace, self.span_period, 0);
+            if let Some(w) = latency_at(t) {
+                if w.n() != self.w.n() {
+                    bail!(
+                        "latency update has {} nodes, overlay has {}",
+                        w.n(),
+                        self.w.n()
+                    );
+                }
+                self.transport.set_latency(&w)?;
+                self.max_w_ms = max_delay_ms(&w);
+                self.w = w;
+                self.obs.reg.incr("latency.updates", 1);
+            }
+            // Per-period protocol state resets.
+            for p in &mut self.peers {
+                p.granted = false;
+                p.prop = None;
+                p.events_seen = 0;
+            }
+            // Membership: originate this period's events and flood
+            // them; origins re-send for PROBE_RETX extra epochs (the
+            // per-phase dup filter makes re-sends idempotent, the
+            // changed-guard quenches the forwarding).
+            let (origins, leavers, applied) =
+                self.originate_events(trace, &mut ev_idx, t);
+            if !origins.is_empty() {
+                for _round in 0..=PROBE_RETX {
+                    self.begin_phase();
+                    self.tctx = self.tracing().then_some(TraceCtx {
+                        trace: self.trace,
+                        parent: self.span_period,
+                    });
+                    for (src, msg) in &origins {
+                        if !self.peers[*src as usize].up {
+                            continue;
+                        }
+                        let targets = self.peers[*src as usize]
+                            .overlay_neighbors();
+                        for dst in targets {
+                            self.send(*src, dst, msg)?;
+                        }
+                    }
+                    self.tctx = None;
+                    self.collect()?;
+                }
+            }
+            for l in leavers {
+                self.peers[l].up = false;
+            }
+
+            // Measure (peer-local ρ), then the swap agreement and the
+            // ring anti-entropy pass.
+            let m_span = self
+                .obs
+                .rec
+                .start("measure", period as u64, self.transport.now_ms())
+                .traced(
+                    self.trace,
+                    span_id(self.trace, "measure", period as u64, 0),
+                    self.span_period,
+                );
+            let frames0 = self.transport.frames_sent();
+            self.tctx = self.tracing().then_some(TraceCtx {
+                trace: self.trace,
+                parent: self.span_period,
+            });
+            self.measure_local()?;
+            self.tctx = None;
+            m_span.finish(&self.obs.rec, self.transport.now_ms());
+            self.obs.reg.incr(
+                "gossip.messages",
+                self.transport.frames_sent() - frames0,
+            );
+            self.swap_phase(period)?;
+            self.sync_rings()?;
+
+            // Report from the witness peer, evaluated on the oracle
+            // view — the shared per-period series.
+            let kr = self.witness_krings()?;
+            let d = diameter::diameter(&kr.to_graph(&self.w));
+            let alive_cnt =
+                self.membership.count_state(MemberState::Alive);
+            let alive_d = if alive_cnt == self.membership.len() {
+                d
+            } else {
+                diameter::diameter(&alive_overlay_graph(
+                    &kr,
+                    &self.w,
+                    &self.membership,
+                ))
+            };
+            let mut rho_sum = 0.0;
+            let mut rho_cnt = 0usize;
+            for p in &self.peers {
+                if p.up && p.has_rho {
+                    rho_sum += p.rho;
+                    rho_cnt += 1;
+                }
+            }
+            let rho = if rho_cnt > 0 {
+                rho_sum / rho_cnt as f64
+            } else {
+                0.5
+            };
+            let swaps_now =
+                self.hot.rings_swapped.load(Ordering::Relaxed);
+            record_period(
+                &mut self.metrics,
+                d,
+                rho,
+                alive_cnt,
+                alive_d,
+                swaps_now - swaps0,
+                applied,
+            );
+            swaps0 = swaps_now;
+            timeline.push((t, rho, d));
+            if let Some(f) = observer.as_mut() {
+                let ga =
+                    alive_overlay_graph(&kr, &self.w, &self.membership);
+                let mut alive: Vec<u32> =
+                    self.membership.alive().collect();
+                alive.sort_unstable();
+                f(t, &ga, &self.w, &alive);
+            }
+            self.hot
+                .period_wall
+                .observe(period_wall0.elapsed().as_secs_f64() * 1e3);
+            p_span.finish(&self.obs.rec, self.transport.now_ms());
+        }
+        self.obs.reg.incr(
+            "net.frames_sent",
+            self.transport.frames_sent() - frames_start,
+        );
+        crate::obs::sync_counters(&self.obs.reg, &mut self.metrics);
+        Ok(CoordinatorReport {
+            final_diameter: timeline
+                .last()
+                .map(|&(_, _, d)| d)
+                .unwrap_or(initial_diameter),
+            initial_diameter,
+            swaps: (swaps0 - initial_swaps) as usize,
+            alive: self.membership.count_state(MemberState::Alive),
+            timeline,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::eval::{CertifyConfig, CertifyMode};
+    use crate::latency::Model;
+    use crate::net::transport::SimTransport;
+
+    fn cfg(nodes: usize, seed: u64) -> Config {
+        Config {
+            nodes,
+            seed,
+            k: 2,
+            model: "fabric".to_string(),
+            gossip_rounds: 8,
+            adapt_period_ms: 250.0,
+            ..Config::default()
+        }
+    }
+
+    fn world(n: usize, seed: u64) -> LatencyMatrix {
+        Model::Fabric.sample(n, &mut Rng::new(seed))
+    }
+
+    fn runner(
+        n: usize,
+        seed: u64,
+    ) -> DecentralizedRunner<SimTransport> {
+        let w = world(n, seed);
+        let t = SimTransport::new(w.clone());
+        DecentralizedRunner::new(cfg(n, seed), w, t).unwrap()
+    }
+
+    #[test]
+    fn converges_to_shared_valid_rings_on_sim() {
+        let mut co = runner(12, 11);
+        let rep = co
+            .run_with(&EventTrace::default(), 1000.0, RunOptions::new())
+            .unwrap();
+        assert_eq!(rep.timeline.len(), 4);
+        assert_eq!(rep.alive, 12);
+        // After quiescence every up peer holds identical, valid rings.
+        let views = co.ring_views();
+        let first = &views[0];
+        for v in &views {
+            assert_eq!(v, first, "ring views diverged");
+        }
+        for order in first {
+            Ring::new(order.clone()).unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn byte_deterministic_on_sim() {
+        let run = || {
+            let mut co = runner(10, 42);
+            let rep = co
+                .run_with(
+                    &EventTrace::default(),
+                    1250.0,
+                    RunOptions::new(),
+                )
+                .unwrap();
+            (rep.timeline, rep.swaps, co.ring_views())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn crash_is_detected_and_flooded() {
+        let mut co = runner(10, 5);
+        let trace = EventTrace {
+            events: vec![MembershipEvent::Crash { time: 300.0, node: 3 }],
+        };
+        let rep = co
+            .run_with(&trace, 1000.0, RunOptions::new())
+            .unwrap();
+        assert_eq!(rep.alive, 9);
+        assert!(!co.peers[3].up);
+        // Every surviving peer learned of the crash via the flood.
+        for p in co.peers.iter().filter(|p| p.up) {
+            assert_eq!(
+                p.membership.get(3).map(|m| m.state),
+                Some(MemberState::Faulty),
+                "peer {} missed the crash of node 3",
+                p.id
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_non_exact_certify() {
+        let mut co = runner(8, 1);
+        let sketch = CertifyConfig {
+            mode: CertifyMode::Sketch,
+            ..CertifyConfig::exact()
+        };
+        let err = co
+            .run_with(
+                &EventTrace::default(),
+                500.0,
+                RunOptions::new().certify(sketch),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("decentralized"));
+    }
+}

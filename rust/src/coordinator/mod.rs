@@ -1,12 +1,11 @@
-//! The membership coordinator — the long-running L3 service that ties
-//! DGRO together: it owns the overlay topology, reacts to membership
-//! events (join / leave / crash), runs periodic gossip latency
-//! measurements, and adapts the ring mix per the ρ rule (§V), rebuilding
-//! rings in parallel (§VI) when the overlay drifts.
+//! The membership coordinator layer — the long-running L3 service that
+//! ties DGRO together: it owns the overlay topology, reacts to
+//! membership events (join / leave / crash), runs periodic gossip
+//! latency measurements, and adapts the ring mix per the ρ rule (§V),
+//! rebuilding rings in parallel (§VI) when the overlay drifts.
 //!
-//! Two implementations share the same event-loop interface
-//! ([`CoordinatorReport`], [`MembershipEvent`](crate::membership::MembershipEvent)
-//! routing, `run`/`run_dynamic`):
+//! Four runners share one entry point — the [`AdaptiveRunner`] trait
+//! driven by a [`RunOptions`] builder (see [`runner`]):
 //!
 //! * [`Coordinator`] — the centralized service: one membership table,
 //!   one K-ring overlay over the whole universe.
@@ -15,9 +14,19 @@
 //!   construction and ρ-selection on its own sub-overlay, stitched by
 //!   inter-shard anchor links chosen to minimize the certified global
 //!   diameter (see [`sharded`]).
+//! * [`NetCoordinator`](crate::net::NetCoordinator) — the centralized
+//!   loop driven by framed messages over a real transport.
+//! * [`DecentralizedRunner`] — no coordinator at all: every node runs
+//!   its own Algorithm-3 loop over gossip-piggybacked membership and a
+//!   two-phase ring-swap agreement (see [`decentralized`] and
+//!   docs/DECENTRALIZED.md).
 
+pub mod decentralized;
+pub mod runner;
 pub mod service;
 pub mod sharded;
 
+pub use decentralized::DecentralizedRunner;
+pub use runner::{AdaptiveRunner, RunOptions};
 pub use service::{Coordinator, CoordinatorReport, ScorerKind};
 pub use sharded::{Shard, ShardedConfig, ShardedCoordinator};

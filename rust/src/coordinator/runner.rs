@@ -1,0 +1,215 @@
+//! The unified runner surface: one trait, one options builder, four
+//! adaptive runners.
+//!
+//! Before this module, each coordinator grew its own near-duplicate
+//! `run` / `run_dynamic` / `run_dynamic_observed` entry-point ladder,
+//! with the knobs (latency view, traffic observer, obs recording, trace
+//! sampling, churn guard, certification) plumbed as divergent positional
+//! parameters. [`RunOptions`] is the single builder for those knobs and
+//! [`AdaptiveRunner`] the single dispatch point, implemented by:
+//!
+//! * [`Coordinator`](super::Coordinator) — in-process centralized loop,
+//! * [`ShardedCoordinator`](super::ShardedCoordinator) — K partitions +
+//!   anchor stitch,
+//! * [`NetCoordinator`](crate::net::NetCoordinator) — centralized loop
+//!   driven by framed messages over a [`Transport`](crate::net::Transport),
+//! * [`DecentralizedRunner`](super::DecentralizedRunner) — no
+//!   coordinator at all; every node runs Algorithm 3 itself
+//!   (docs/DECENTRALIZED.md).
+//!
+//! A runner applies the options it supports and **rejects** (rather than
+//! silently ignores) options that contradict its contract — e.g. a
+//! non-exact [`CertifyConfig`] on the runners that always certify
+//! exactly. Options that are meaningless but harmless for a runner
+//! (trace sampling on the frameless in-process paths) are documented
+//! no-ops, so the scenario engine can set them uniformly.
+
+use anyhow::Result;
+
+use crate::graph::eval::CertifyConfig;
+use crate::latency::LatencyMatrix;
+use crate::membership::events::EventTrace;
+use crate::traffic::OverlayObserver;
+
+use super::CoordinatorReport;
+
+/// Per-run knobs shared by every [`AdaptiveRunner`]. Build with the
+/// chaining setters; the zero-argument default reproduces the classic
+/// `run(trace, horizon)` behavior on every runner.
+#[derive(Default)]
+pub struct RunOptions<'a> {
+    /// Time-varying latency view: before each adaptation period the
+    /// runner calls this with the period-end time and applies the
+    /// returned matrix (`None` = unchanged).
+    pub(crate) latency:
+        Option<Box<dyn FnMut(f64) -> Option<LatencyMatrix> + 'a>>,
+    /// Per-period overlay observer (the traffic-plane hook).
+    pub(crate) observer: Option<OverlayObserver<'a>>,
+    /// Enable the span flight recorder for the run.
+    pub(crate) record: bool,
+    /// Causal-trace sampling stride for frame-exchanging runners
+    /// (0 = untraced; see [`crate::net::NetCoordinator::trace_sample`]).
+    pub(crate) trace_sample: usize,
+    /// Override the runner's churn guard threshold for this run.
+    pub(crate) churn_guard: Option<u64>,
+    /// Override the runner's diameter certification policy for this
+    /// run (sharded coordinator only; the others certify exactly and
+    /// reject a non-exact override).
+    pub(crate) certify: Option<CertifyConfig>,
+}
+
+impl<'a> RunOptions<'a> {
+    /// Options equivalent to the classic `run(trace, horizon)` call.
+    pub fn new() -> RunOptions<'a> {
+        RunOptions::default()
+    }
+
+    /// Drive the run with a time-varying latency view.
+    pub fn latency(
+        mut self,
+        f: impl FnMut(f64) -> Option<LatencyMatrix> + 'a,
+    ) -> Self {
+        self.latency = Some(Box::new(f));
+        self
+    }
+
+    /// Attach a per-period overlay observer (alive sub-overlay, current
+    /// latency view, sorted alive list) — the traffic-plane hook.
+    pub fn observer(mut self, obs: OverlayObserver<'a>) -> Self {
+        self.observer = Some(obs);
+        self
+    }
+
+    /// Like [`RunOptions::observer`] but taking the `Option` the call
+    /// sites usually already hold.
+    pub fn maybe_observer(
+        mut self,
+        obs: Option<OverlayObserver<'a>>,
+    ) -> Self {
+        self.observer = obs;
+        self
+    }
+
+    /// Enable the span flight recorder for this run.
+    pub fn record(mut self, on: bool) -> Self {
+        self.record = on;
+        self
+    }
+
+    /// Set the causal-trace sampling stride (0 = untraced). A no-op on
+    /// runners that exchange no frames.
+    pub fn trace_sample(mut self, stride: usize) -> Self {
+        self.trace_sample = stride;
+        self
+    }
+
+    /// Override [`Config::churn_guard`](crate::config::Config::churn_guard)
+    /// for this run.
+    pub fn churn_guard(mut self, guard: u64) -> Self {
+        self.churn_guard = Some(guard);
+        self
+    }
+
+    /// Override the diameter certification policy for this run. Only
+    /// the sharded coordinator accepts a non-exact policy; the other
+    /// runners reject it at `run_with` time.
+    pub fn certify(mut self, certify: CertifyConfig) -> Self {
+        self.certify = Some(certify);
+        self
+    }
+
+    /// Unwrap the latency view into a callable (static `None` view when
+    /// unset). For runner implementations.
+    pub(crate) fn take_latency(
+        &mut self,
+    ) -> Box<dyn FnMut(f64) -> Option<LatencyMatrix> + 'a> {
+        self.latency.take().unwrap_or_else(|| Box::new(|_| None))
+    }
+}
+
+/// The one entry point every adaptive runner exposes: drive the
+/// Algorithm-3 loop over a membership trace for `horizon` sim-ms under
+/// the given [`RunOptions`]. Object-safe, so the scenario engine and
+/// CLI can hold `&mut dyn AdaptiveRunner` and dispatch uniformly.
+pub trait AdaptiveRunner {
+    /// Stable runner name for reports and error messages.
+    fn kind(&self) -> &'static str;
+
+    /// Run the adaptation loop. Equivalent legacy ladder:
+    /// `run` = default options, `run_dynamic` = `.latency(f)`,
+    /// `run_dynamic_observed` = `.latency(f).maybe_observer(o)`.
+    fn run_with(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+        opts: RunOptions<'_>,
+    ) -> Result<CoordinatorReport>;
+}
+
+/// Reject a non-exact certification override on runners whose loop
+/// certifies exactly by construction.
+pub(crate) fn reject_non_exact_certify(
+    kind: &str,
+    certify: Option<CertifyConfig>,
+) -> Result<()> {
+    if let Some(c) = certify {
+        c.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        if !c.is_exact() {
+            anyhow::bail!(
+                "the {kind} runner always certifies diameters exactly; \
+                 a {} policy only applies to the sharded coordinator \
+                 and the static baselines",
+                c.mode.name()
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::eval::CertifyMode;
+
+    #[test]
+    fn builder_chains_and_defaults_hold() {
+        let mut w_seen = 0usize;
+        let mut opts = RunOptions::new()
+            .record(true)
+            .trace_sample(4)
+            .churn_guard(3)
+            .certify(CertifyConfig::exact())
+            .latency(|_| {
+                w_seen += 1;
+                None
+            });
+        assert!(opts.record);
+        assert_eq!(opts.trace_sample, 4);
+        assert_eq!(opts.churn_guard, Some(3));
+        assert!(opts.certify.unwrap().is_exact());
+        let mut f = opts.take_latency();
+        assert!(f(1.0).is_none());
+        drop(f);
+        assert_eq!(w_seen, 1);
+        // Unset latency resolves to the static view.
+        let mut plain = RunOptions::new();
+        let mut f = plain.take_latency();
+        assert!(f(10.0).is_none());
+    }
+
+    #[test]
+    fn non_exact_certify_is_rejected_where_unsupported() {
+        assert!(reject_non_exact_certify("centralized", None).is_ok());
+        assert!(reject_non_exact_certify(
+            "centralized",
+            Some(CertifyConfig::exact())
+        )
+        .is_ok());
+        let mut sketch = CertifyConfig::exact();
+        sketch.mode = CertifyMode::Sketch;
+        let err = reject_non_exact_certify("net", Some(sketch))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("net runner"), "{err}");
+    }
+}

@@ -27,6 +27,8 @@ use crate::topology::kring::KRing;
 use crate::topology::random_ring;
 use crate::util::rng::Rng;
 
+use super::runner::{AdaptiveRunner, RunOptions};
+
 /// Which scorer backend the coordinator constructs rings with.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScorerKind {
@@ -385,42 +387,87 @@ impl Coordinator {
     }
 
     /// Run the coordinator over a membership trace for `horizon`
-    /// sim-time, adapting every `cfg.adapt_period_ms`.
+    /// sim-time, adapting every `cfg.adapt_period_ms`. Equivalent to
+    /// [`AdaptiveRunner::run_with`] under default [`RunOptions`].
     pub fn run(&mut self, trace: &EventTrace, horizon: f64) -> Result<CoordinatorReport> {
-        self.run_dynamic(trace, horizon, |_| None)
+        self.run_with(trace, horizon, RunOptions::new())
     }
 
-    /// Run over a membership trace with a *time-varying latency view*:
-    /// before each adaptation period, `latency_at(t)` may hand back an
-    /// updated matrix (None = unchanged since the last period). This is
-    /// the scenario-engine entry point; [`Coordinator::run`] is the
-    /// static special case. Per period the metrics registry records
-    /// `overlay.diameter` / `overlay.rho` (full overlay, as before) plus
-    /// `overlay.alive`, `overlay.alive_diameter` (faulty nodes do not
-    /// relay) and `rings.swaps_per_period`, so scenario runs are
-    /// comparable across topologies.
+    /// Deprecated spelling of `run_with(..., RunOptions::new()
+    /// .latency(latency_at))` — per-period latency updates are a
+    /// [`RunOptions`] knob now.
+    #[deprecated(
+        since = "0.10.0",
+        note = "use AdaptiveRunner::run_with with RunOptions::latency"
+    )]
     pub fn run_dynamic(
         &mut self,
         trace: &EventTrace,
         horizon: f64,
         latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
     ) -> Result<CoordinatorReport> {
-        self.run_dynamic_observed(trace, horizon, latency_at, None)
+        self.run_with(
+            trace,
+            horizon,
+            RunOptions::new().latency(latency_at),
+        )
     }
 
-    /// [`Coordinator::run_dynamic`] with a per-period overlay observer:
-    /// after each period's adaptation the callback receives the alive
-    /// sub-overlay, the current latency view and the sorted alive list
-    /// — the hook the traffic plane
-    /// ([`TrafficSim`](crate::traffic::TrafficSim)) consumes. `None`
-    /// is byte-identical to [`Coordinator::run_dynamic`].
+    /// Deprecated spelling of `run_with(..., RunOptions::new()
+    /// .latency(latency_at).maybe_observer(observer))`.
+    #[deprecated(
+        since = "0.10.0",
+        note = "use AdaptiveRunner::run_with with \
+                RunOptions::latency + RunOptions::observer"
+    )]
     pub fn run_dynamic_observed(
         &mut self,
         trace: &EventTrace,
         horizon: f64,
-        mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
-        mut observer: Option<crate::traffic::OverlayObserver<'_>>,
+        latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+        observer: Option<crate::traffic::OverlayObserver<'_>>,
     ) -> Result<CoordinatorReport> {
+        self.run_with(
+            trace,
+            horizon,
+            RunOptions::new()
+                .latency(latency_at)
+                .maybe_observer(observer),
+        )
+    }
+}
+
+impl AdaptiveRunner for Coordinator {
+    fn kind(&self) -> &'static str {
+        "centralized"
+    }
+
+    /// The centralized Algorithm-3 event loop. Per adaptation period:
+    /// apply the latency view, drain due membership events, measure ρ,
+    /// decide and (churn guard permitting) swap one ring, then record
+    /// `overlay.diameter` / `overlay.rho` / `overlay.alive` /
+    /// `overlay.alive_diameter` / `rings.swaps_per_period` so scenario
+    /// runs stay comparable across topologies. Exchanges no frames, so
+    /// [`RunOptions::trace_sample`] is a no-op here; a non-exact
+    /// [`RunOptions::certify`] override is rejected.
+    fn run_with(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+        mut opts: RunOptions<'_>,
+    ) -> Result<CoordinatorReport> {
+        super::runner::reject_non_exact_certify(
+            self.kind(),
+            opts.certify,
+        )?;
+        if let Some(g) = opts.churn_guard {
+            self.cfg.churn_guard = g;
+        }
+        if opts.record {
+            self.obs.rec.set_enabled(true);
+        }
+        let mut latency_at = opts.take_latency();
+        let mut observer = opts.observer;
         let initial_diameter = diameter::diameter(&self.overlay());
         let mut timeline = Vec::new();
         let initial_swaps = self.metrics.counter("rings.swapped");
@@ -578,15 +625,19 @@ mod tests {
         let mut co = Coordinator::new(cfg("uniform", 24)).unwrap();
         let base = co.w.clone();
         let rep = co
-            .run_dynamic(&EventTrace::default(), 500.0, |t| {
-                if t >= 300.0 {
-                    Some(LatencyMatrix::from_fn(base.n(), |u, v| {
-                        base.get(u, v) * 3.0
-                    }))
-                } else {
-                    None
-                }
-            })
+            .run_with(
+                &EventTrace::default(),
+                500.0,
+                RunOptions::new().latency(|t| {
+                    if t >= 300.0 {
+                        Some(LatencyMatrix::from_fn(base.n(), |u, v| {
+                            base.get(u, v) * 3.0
+                        }))
+                    } else {
+                        None
+                    }
+                }),
+            )
             .unwrap();
         // Periods fire at t = 100..=500; the view updates from t = 300.
         assert_eq!(co.metrics.counter("latency.updates"), 3);
@@ -638,6 +689,41 @@ mod tests {
             rep_free.swaps
         );
         assert_eq!(free.metrics.counter("rings.guard_skips"), 0);
+    }
+
+    #[test]
+    fn deprecated_shims_match_run_with() {
+        // The legacy ladder must stay byte-equivalent to the RunOptions
+        // spelling until it is removed.
+        let trace = EventTrace::default();
+        let mut a = Coordinator::new(cfg("fabric", 30)).unwrap();
+        let rep_a = a.run(&trace, 600.0).unwrap();
+        #[allow(deprecated)]
+        let rep_b = {
+            let mut b = Coordinator::new(cfg("fabric", 30)).unwrap();
+            b.run_dynamic_observed(&trace, 600.0, |_| None, None)
+                .unwrap()
+        };
+        assert_eq!(rep_a.timeline, rep_b.timeline);
+        assert_eq!(rep_a.swaps, rep_b.swaps);
+        assert_eq!(a.kind(), "centralized");
+    }
+
+    #[test]
+    fn non_exact_certify_override_is_rejected() {
+        use crate::graph::eval::{CertifyConfig, CertifyMode};
+        let mut co = Coordinator::new(cfg("uniform", 20)).unwrap();
+        let mut sketch = CertifyConfig::exact();
+        sketch.mode = CertifyMode::Sketch;
+        let err = co
+            .run_with(
+                &EventTrace::default(),
+                100.0,
+                RunOptions::new().certify(sketch),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("certifies diameters exactly"), "{err}");
     }
 
     #[test]

@@ -40,6 +40,7 @@ use std::collections::HashSet;
 use anyhow::{bail, Result};
 
 use crate::config::Config;
+use crate::coordinator::runner::{AdaptiveRunner, RunOptions};
 use crate::coordinator::service::swap_slot;
 use crate::coordinator::CoordinatorReport;
 use crate::dgro::parallel::partition;
@@ -711,13 +712,14 @@ impl ShardedCoordinator {
     }
 
     /// Run over a membership trace for `horizon` sim-time (static
-    /// latency), adapting every `cfg.adapt_period_ms`.
+    /// latency), adapting every `cfg.adapt_period_ms`. Equivalent to
+    /// [`AdaptiveRunner::run_with`] under default [`RunOptions`].
     pub fn run(
         &mut self,
         trace: &EventTrace,
         horizon: f64,
     ) -> Result<CoordinatorReport> {
-        self.run_dynamic(trace, horizon, |_| None)
+        self.run_with(trace, horizon, RunOptions::new())
     }
 
     /// Certified diameter of `g` under [`ShardedConfig::certify`],
@@ -791,13 +793,21 @@ impl ShardedCoordinator {
     /// exact oracle every `oracle_every`-th evaluation. Ring-swap
     /// decisions never consult a diameter, so all modes produce
     /// identical swap sequences.
+    #[deprecated(
+        since = "0.10.0",
+        note = "use AdaptiveRunner::run_with with RunOptions::latency"
+    )]
     pub fn run_dynamic(
         &mut self,
         trace: &EventTrace,
         horizon: f64,
         latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
     ) -> Result<CoordinatorReport> {
-        self.run_dynamic_observed(trace, horizon, latency_at, None)
+        self.run_with(
+            trace,
+            horizon,
+            RunOptions::new().latency(latency_at),
+        )
     }
 
     /// [`ShardedCoordinator::run_dynamic`] with a per-period overlay
@@ -806,13 +816,61 @@ impl ShardedCoordinator {
     /// latency view and the sorted alive list — the traffic-plane
     /// hook. `None` is byte-identical to
     /// [`ShardedCoordinator::run_dynamic`].
+    #[deprecated(
+        since = "0.10.0",
+        note = "use AdaptiveRunner::run_with with \
+                RunOptions::latency + RunOptions::observer"
+    )]
     pub fn run_dynamic_observed(
         &mut self,
         trace: &EventTrace,
         horizon: f64,
-        mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
-        mut observer: Option<crate::traffic::OverlayObserver<'_>>,
+        latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+        observer: Option<crate::traffic::OverlayObserver<'_>>,
     ) -> Result<CoordinatorReport> {
+        self.run_with(
+            trace,
+            horizon,
+            RunOptions::new()
+                .latency(latency_at)
+                .maybe_observer(observer),
+        )
+    }
+}
+
+impl AdaptiveRunner for ShardedCoordinator {
+    fn kind(&self) -> &'static str {
+        "sharded"
+    }
+
+    /// The sharded event loop: per period the metrics registry records
+    /// `overlay.diameter`, `overlay.rho` (mean of the partition-local
+    /// ρ's), `overlay.alive`, `overlay.alive_diameter`,
+    /// `rings.swaps_per_period` and `shard.anchor_links`. Reported
+    /// diameters follow [`ShardedConfig::certify`] — this is the one
+    /// runner that honors a non-exact [`RunOptions::certify`]
+    /// override. Exchanges no frames, so [`RunOptions::trace_sample`]
+    /// is a no-op here.
+    fn run_with(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+        mut opts: RunOptions<'_>,
+    ) -> Result<CoordinatorReport> {
+        if let Some(c) = opts.certify {
+            if let Err(e) = c.validate() {
+                bail!("{e}");
+            }
+            self.opts.certify = c;
+        }
+        if let Some(g) = opts.churn_guard {
+            self.cfg.churn_guard = g;
+        }
+        if opts.record {
+            self.obs.rec.set_enabled(true);
+        }
+        let mut latency_at = opts.take_latency();
+        let mut observer = opts.observer;
         let g0 = self.overlay();
         let initial_diameter = self.certified_diameter(&g0, false, 0)?;
         drop(g0);

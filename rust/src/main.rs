@@ -328,7 +328,8 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
     .flag(
         "topology",
         "dgro",
-        "dgro|sharded|chord|rapid|perigee|random|circulant",
+        "dgro|decentralized|sharded|chord|rapid|perigee|random|\
+         circulant",
     )
     .flag("seed", "7", "rng seed (same seed => byte-identical report)")
     .flag("period", "250", "adaptation/measurement period (sim-ms)")
@@ -404,9 +405,10 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
     .flag(
         "trace-sample",
         "0",
-        "transport runs: causal-trace sampling stride (0 = tracing \
-         off; s >= 1 stamps every frame with trace context and \
-         records deliver spans on nodes with id % s == 0)",
+        "causal-trace sampling stride (0 = tracing off; s >= 1 stamps \
+         every frame with trace context and records deliver spans on \
+         nodes with id % s == 0); on compare, traced cells export \
+         per-topology traces-<scenario>-<topology>.jsonl under --out",
     )
     .flag("out", "", "also write CSV tables under this directory")
     .flag(
@@ -466,23 +468,23 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
             };
             let topology = scenario::Topology::parse(a.get("topology"))?;
             let mut engine = scenario::ScenarioEngine::new(spec, seed)?;
-            engine.period = period;
-            engine.threads = threads;
-            engine.incremental = !a.switch("rebuild");
-            engine.shards = shards;
-            engine.certify = parse_certify(&a)?;
+            engine.opts.period = period;
+            engine.opts.threads = threads;
+            engine.opts.incremental = !a.switch("rebuild");
+            engine.opts.shards = shards;
+            engine.opts.certify = parse_certify(&a)?;
             if !a.get("transport").is_empty() {
-                engine.transport =
+                engine.opts.transport =
                     Some(dgro::net::TransportKind::parse(a.get("transport"))?);
             }
-            engine.time_scale = a.get_f64("time-scale")?;
-            engine.loss_rate = a.get_f64("loss-rate")?;
-            engine.dup_rate = a.get_f64("dup-rate")?;
-            engine.reorder_rate = a.get_f64("reorder-rate")?;
-            engine.churn_guard = a.get_u64("churn-guard")?;
-            engine.trace_sample = a.get_usize("trace-sample")?;
+            engine.opts.time_scale = a.get_f64("time-scale")?;
+            engine.opts.loss_rate = a.get_f64("loss-rate")?;
+            engine.opts.dup_rate = a.get_f64("dup-rate")?;
+            engine.opts.reorder_rate = a.get_f64("reorder-rate")?;
+            engine.opts.churn_guard = a.get_u64("churn-guard")?;
+            engine.opts.trace_sample = a.get_usize("trace-sample")?;
             let obs_out = a.get("obs-out");
-            engine.obs_record = !obs_out.is_empty();
+            engine.opts.obs_record = !obs_out.is_empty();
             let report = engine.run(topology)?;
             print!("{}", report.render());
             if !a.get("out").is_empty() {
@@ -493,7 +495,7 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                 // transport ran; sim / in-process runs export the
                 // byte-deterministic timeline.
                 let sim_only = matches!(
-                    engine.transport,
+                    engine.opts.transport,
                     None | Some(dgro::net::TransportKind::Sim)
                 );
                 if let Some(obs) = &report.obs {
@@ -523,12 +525,6 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                 anyhow::bail!(
                     "--churn-guard applies to 'scenario run' only; \
                      compare runs every topology unguarded"
-                );
-            }
-            if a.get_usize("trace-sample")? != 0 {
-                anyhow::bail!(
-                    "--trace-sample applies to transport-backed \
-                     'scenario run' only"
                 );
             }
             if !a.get("obs-out").is_empty() {
@@ -562,6 +558,7 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                     threads,
                     shards,
                     certify: parse_certify(&a)?,
+                    trace_sample: a.get_usize("trace-sample")?,
                     ..scenario::CompareOpts::default()
                 },
             )?;
@@ -570,10 +567,30 @@ fn cmd_scenario(raw: &[String]) -> Result<()> {
                 for t in &rep.timelines {
                     println!("\n{}", t.to_markdown());
                 }
+                if !rep.trace_exports.is_empty() {
+                    println!(
+                        "\n{} traced cells (pass --out DIR to export \
+                         per-topology traces-*.jsonl)",
+                        rep.trace_exports.len()
+                    );
+                }
             } else {
                 let mut tables = vec![rep.summary.clone()];
                 tables.extend(rep.timelines.iter().cloned());
                 runner::emit(&tables, a.get("out"))?;
+                let dir = Path::new(a.get("out"));
+                for (scenario, topo, jsonl) in &rep.trace_exports {
+                    let path = dir
+                        .join(format!("traces-{scenario}-{topo}.jsonl"));
+                    std::fs::write(&path, jsonl)?;
+                }
+                if !rep.trace_exports.is_empty() {
+                    log_info!(
+                        "{} per-topology trace timelines written to {}",
+                        rep.trace_exports.len(),
+                        a.get("out")
+                    );
+                }
             }
             Ok(())
         }
@@ -630,7 +647,8 @@ fn cmd_traffic(raw: &[String]) -> Result<()> {
     .flag(
         "topology",
         "dgro",
-        "run: dgro|sharded|chord|rapid|perigee|random|circulant",
+        "run: dgro|decentralized|sharded|chord|rapid|perigee|random|\
+         circulant",
     )
     .flag("seed", "7", "rng seed (same seed => byte-identical report)")
     .flag("period", "250", "adaptation/measurement period (sim-ms)")
@@ -765,20 +783,20 @@ fn cmd_traffic(raw: &[String]) -> Result<()> {
             };
             let topology = scenario::Topology::parse(a.get("topology"))?;
             let mut engine = scenario::ScenarioEngine::new(spec, seed)?;
-            engine.period = period;
-            engine.threads = threads;
-            engine.shards = shards;
-            engine.certify = parse_certify(&a)?;
+            engine.opts.period = period;
+            engine.opts.threads = threads;
+            engine.opts.shards = shards;
+            engine.opts.certify = parse_certify(&a)?;
             if !a.get("transport").is_empty() {
-                engine.transport = Some(dgro::net::TransportKind::parse(
+                engine.opts.transport = Some(dgro::net::TransportKind::parse(
                     a.get("transport"),
                 )?);
             }
-            engine.time_scale = a.get_f64("time-scale")?;
-            engine.loss_rate = a.get_f64("loss-rate")?;
-            engine.dup_rate = a.get_f64("dup-rate")?;
-            engine.reorder_rate = a.get_f64("reorder-rate")?;
-            engine.trace_sample = tcfg.trace_sample;
+            engine.opts.time_scale = a.get_f64("time-scale")?;
+            engine.opts.loss_rate = a.get_f64("loss-rate")?;
+            engine.opts.dup_rate = a.get_f64("dup-rate")?;
+            engine.opts.reorder_rate = a.get_f64("reorder-rate")?;
+            engine.opts.trace_sample = tcfg.trace_sample;
             let (report, traffic, obs) =
                 engine.run_traffic(topology, tcfg)?;
             print!("{}", report.render());
@@ -797,7 +815,7 @@ fn cmd_traffic(raw: &[String]) -> Result<()> {
             let obs_out = a.get("obs-out");
             if !obs_out.is_empty() {
                 let sim_only = matches!(
-                    engine.transport,
+                    engine.opts.transport,
                     None | Some(dgro::net::TransportKind::Sim)
                 );
                 let dir = Path::new(obs_out);

@@ -77,6 +77,7 @@ use crate::config::Config;
 use crate::coordinator::service::{
     alive_overlay_graph, execute_swap, record_period,
 };
+use crate::coordinator::runner::{AdaptiveRunner, RunOptions};
 use crate::coordinator::CoordinatorReport;
 use crate::dgro::select::{decide, RingChoice, SelectConfig};
 use crate::gossip::measure::GossipStats;
@@ -96,13 +97,13 @@ use crate::util::rng::Rng;
 /// Receive-poll granularity (sim-ms). Each empty poll advances the
 /// transport clock by this much; small enough to keep UDP wall time low,
 /// large enough that the sim path converges in few sweeps.
-const POLL_MS: f64 = 10.0;
+pub(crate) const POLL_MS: f64 = 10.0;
 
 /// Consecutive all-idle sweeps before a collection phase declares the
 /// outstanding frames lost on a *faithful* transport (spurious UDP
 /// drops; never reached on sim). Transports with a declared loss rate
 /// use the deadline-based write-off instead (see [`NetCoordinator`]).
-const MAX_IDLE_SWEEPS: usize = 50;
+pub(crate) const MAX_IDLE_SWEEPS: usize = 50;
 
 /// Extra transmission rounds granted to unanswered RTT probes before
 /// the sample is abandoned (each round is its own frame epoch, so a
@@ -113,20 +114,20 @@ pub const PROBE_RETX: usize = 2;
 /// Pre-resolved [`Registry`] handles for the runner's hot-path
 /// instruments: the delivery loop must not take the registry's
 /// name-map lock per frame.
-struct ObsHandles {
-    decode_errors: Arc<AtomicU64>,
-    stale_frames: Arc<AtomicU64>,
-    dup_frames: Arc<AtomicU64>,
-    probe_retx: Arc<AtomicU64>,
-    frames_lost: Arc<AtomicU64>,
-    rings_swapped: Arc<AtomicU64>,
-    rtt_err: Arc<Histogram>,
-    period_wall: Arc<Histogram>,
-    decode_us: Arc<Histogram>,
+pub(crate) struct ObsHandles {
+    pub(crate) decode_errors: Arc<AtomicU64>,
+    pub(crate) stale_frames: Arc<AtomicU64>,
+    pub(crate) dup_frames: Arc<AtomicU64>,
+    pub(crate) probe_retx: Arc<AtomicU64>,
+    pub(crate) frames_lost: Arc<AtomicU64>,
+    pub(crate) rings_swapped: Arc<AtomicU64>,
+    pub(crate) rtt_err: Arc<Histogram>,
+    pub(crate) period_wall: Arc<Histogram>,
+    pub(crate) decode_us: Arc<Histogram>,
 }
 
 impl ObsHandles {
-    fn new(reg: &Registry) -> ObsHandles {
+    pub(crate) fn new(reg: &Registry) -> ObsHandles {
         ObsHandles {
             decode_errors: reg.counter("net.decode_errors"),
             stale_frames: reg.counter("net.stale_frames"),
@@ -142,17 +143,17 @@ impl ObsHandles {
 }
 
 /// An in-flight RTT probe awaiting its pong.
-struct PendingProbe {
-    target: u32,
-    sent_at_ms: f64,
-    global: bool,
+pub(crate) struct PendingProbe {
+    pub(crate) target: u32,
+    pub(crate) sent_at_ms: f64,
+    pub(crate) global: bool,
     /// This transmission's causal span id (0 when tracing is off).
-    span: u64,
+    pub(crate) span: u64,
     /// Span the transmission hangs under: the measurement span for
     /// first tries, the prior transmission's span for retries.
-    parent: u64,
+    pub(crate) parent: u64,
     /// Transmission round (0 = first try, ≥ 1 = retransmission).
-    attempt: u32,
+    pub(crate) attempt: u32,
 }
 
 /// FNV-1a over (src, dst, frame bytes): the per-phase key duplicate
@@ -160,7 +161,7 @@ struct PendingProbe {
 /// legitimately sends two byte-identical frames on the same link
 /// (probes carry fresh sequence numbers, push-sum sends one frame per
 /// round per link, control frames are distinct events).
-fn frame_key(src: u32, dst: u32, frame: &[u8]) -> u64 {
+pub(crate) fn frame_key(src: u32, dst: u32, frame: &[u8]) -> u64 {
     const PRIME: u64 = 0x100_0000_01b3;
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for b in src
@@ -176,18 +177,18 @@ fn frame_key(src: u32, dst: u32, frame: &[u8]) -> u64 {
 
 /// Largest per-link shaped delay of `w` (sim-ms) — the unit the lossy
 /// write-off deadline is measured in.
-fn max_delay_ms(w: &LatencyMatrix) -> f64 {
+pub(crate) fn max_delay_ms(w: &LatencyMatrix) -> f64 {
     w.data().iter().fold(0.0f32, |a, &x| a.max(x)) as f64
 }
 
 /// Per-measurement accumulator of one node's probe samples.
 #[derive(Default)]
-struct ProbeAccum {
-    local_sum: f64,
-    local_cnt: usize,
-    global_sum: f64,
-    global_cnt: usize,
-    min: f64,
+pub(crate) struct ProbeAccum {
+    pub(crate) local_sum: f64,
+    pub(crate) local_cnt: usize,
+    pub(crate) global_sum: f64,
+    pub(crate) global_cnt: usize,
+    pub(crate) min: f64,
 }
 
 /// One node's protocol state: everything it knows, it learned from its
@@ -963,31 +964,95 @@ impl<T: Transport> NetCoordinator<T> {
     }
 
     /// Run over a membership trace with a time-varying latency view —
-    /// the transport-backed counterpart of
-    /// [`Coordinator::run_dynamic`](crate::coordinator::Coordinator::run_dynamic),
-    /// recording the same per-period series.
+    /// the transport-backed counterpart of the centralized
+    /// coordinator's deprecated ladder, recording the same per-period
+    /// series.
+    #[deprecated(
+        since = "0.10.0",
+        note = "use AdaptiveRunner::run_with with RunOptions::latency"
+    )]
     pub fn run_dynamic(
         &mut self,
         trace: &EventTrace,
         horizon: f64,
         latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
     ) -> Result<CoordinatorReport> {
-        self.run_dynamic_observed(trace, horizon, latency_at, None)
+        self.run_with(
+            trace,
+            horizon,
+            RunOptions::new().latency(latency_at),
+        )
     }
 
-    /// [`NetCoordinator::run_dynamic`] with a per-period overlay
-    /// observer — the traffic-plane hook, identical in contract to
-    /// [`Coordinator::run_dynamic_observed`](crate::coordinator::Coordinator::run_dynamic_observed).
-    /// The observer sees the coordinator's oracle view of the alive
-    /// overlay, so traffic reports stay byte-deterministic even when
-    /// the transport injects loss.
+    /// Deprecated spelling of `run_with(..., RunOptions::new()
+    /// .latency(latency_at).maybe_observer(observer))`.
+    #[deprecated(
+        since = "0.10.0",
+        note = "use AdaptiveRunner::run_with with \
+                RunOptions::latency + RunOptions::observer"
+    )]
     pub fn run_dynamic_observed(
         &mut self,
         trace: &EventTrace,
         horizon: f64,
-        mut latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
-        mut observer: Option<crate::traffic::OverlayObserver<'_>>,
+        latency_at: impl FnMut(f64) -> Option<LatencyMatrix>,
+        observer: Option<crate::traffic::OverlayObserver<'_>>,
     ) -> Result<CoordinatorReport> {
+        self.run_with(
+            trace,
+            horizon,
+            RunOptions::new()
+                .latency(latency_at)
+                .maybe_observer(observer),
+        )
+    }
+
+    /// Run over a static latency view (no dynamic effects). Equivalent
+    /// to [`AdaptiveRunner::run_with`] under default [`RunOptions`].
+    pub fn run(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+    ) -> Result<CoordinatorReport> {
+        self.run_with(trace, horizon, RunOptions::new())
+    }
+}
+
+impl<T: Transport> AdaptiveRunner for NetCoordinator<T> {
+    fn kind(&self) -> &'static str {
+        "net"
+    }
+
+    /// The message-level event loop: per period, disseminate membership
+    /// events (barriered), measure over the wire, decide, maybe swap
+    /// (broadcast + barrier), record the shared per-period series and
+    /// broadcast the period report. The observer sees the coordinator's
+    /// oracle view of the alive overlay, so traffic reports stay
+    /// byte-deterministic even when the transport injects loss.
+    /// [`RunOptions::trace_sample`] and [`RunOptions::record`] drive
+    /// the causal tracing plane; a non-exact [`RunOptions::certify`]
+    /// override is rejected.
+    fn run_with(
+        &mut self,
+        trace: &EventTrace,
+        horizon: f64,
+        mut opts: RunOptions<'_>,
+    ) -> Result<CoordinatorReport> {
+        crate::coordinator::runner::reject_non_exact_certify(
+            self.kind(),
+            opts.certify,
+        )?;
+        if let Some(g) = opts.churn_guard {
+            self.cfg.churn_guard = g;
+        }
+        if opts.record {
+            self.obs.rec.set_enabled(true);
+        }
+        if opts.trace_sample > 0 {
+            self.trace_sample = opts.trace_sample;
+        }
+        let mut latency_at = opts.take_latency();
+        let mut observer = opts.observer;
         let initial_diameter = diameter::diameter(&self.overlay());
         let mut timeline = Vec::new();
         let frames_start = self.transport.frames_sent();
@@ -1200,15 +1265,6 @@ impl<T: Transport> NetCoordinator<T> {
             alive: self.membership.count_state(MemberState::Alive),
             timeline,
         })
-    }
-
-    /// Run over a static latency view (no dynamic effects).
-    pub fn run(
-        &mut self,
-        trace: &EventTrace,
-        horizon: f64,
-    ) -> Result<CoordinatorReport> {
-        self.run_dynamic(trace, horizon, |_| None)
     }
 }
 

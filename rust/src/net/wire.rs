@@ -30,6 +30,7 @@
 use anyhow::{bail, Result};
 
 use crate::membership::events::MembershipEvent;
+use crate::membership::list::MemberState;
 use crate::obs::trace::TraceCtx;
 
 /// Current wire version. Bump on any incompatible layout change; peers
@@ -119,6 +120,64 @@ pub enum Message {
         /// Cumulative ring swaps.
         swaps: u32,
     },
+    /// One SWIM membership record, flooded peer-to-peer by the
+    /// decentralized runner (docs/DECENTRALIZED.md): receivers fold it
+    /// through [`MembershipList::apply`](crate::membership::list::MembershipList::apply)
+    /// and re-forward only when the merge actually advanced their view,
+    /// so the flood self-quenches.
+    MemberUpdate {
+        /// The member the record is about.
+        node: u32,
+        /// Reported lifecycle state.
+        state: MemberState,
+        /// SWIM incarnation (higher wins; ties break on state rank).
+        incarnation: u64,
+        /// Sim-time the record was produced.
+        time: f64,
+    },
+    /// Phase 1 of the decentralized two-phase ring swap: the proposer
+    /// asks the affected ring neighbors to lock the period's single
+    /// swap grant for `seq` before it may commit `order` into `slot`.
+    SwapPropose {
+        /// Ring slot the proposal would replace.
+        slot: u32,
+        /// Proposer-local sequence number echoed by the ack.
+        seq: u32,
+        /// The candidate ring's visit order (a permutation of `0..n`).
+        order: Vec<u32>,
+    },
+    /// Phase 1 reply: grant (or refuse) the proposal carrying `seq`.
+    /// A node grants at most one proposal per adaptation period.
+    SwapAck {
+        /// The echoed [`Message::SwapPropose`] sequence number.
+        seq: u32,
+        /// Whether the responder granted its period lock.
+        accept: bool,
+    },
+    /// Phase 2: a fully granted swap, flooded to the membership. The
+    /// `(period, proposer)` pair is the slot's version — receivers
+    /// apply the commit only when it is newer than what they hold
+    /// (higher period wins; ties break toward the lower proposer id),
+    /// so any subset of commits applied in any order converges.
+    SwapCommit {
+        /// Ring slot being replaced.
+        slot: u32,
+        /// Adaptation period the swap was granted in.
+        period: u32,
+        /// Node id that proposed (and won) the swap.
+        proposer: u32,
+        /// The committed ring's visit order (a permutation of `0..n`).
+        order: Vec<u32>,
+    },
+    /// Anti-entropy digest: the sender's per-slot ring versions
+    /// (`(period, proposer)` per K-ring slot, slot index implicit).
+    /// A receiver holding a newer version for any slot pushes the
+    /// corresponding [`Message::SwapCommit`] back, repairing peers
+    /// that missed a commit under loss.
+    RingDigest {
+        /// One `(period, proposer)` version per ring slot.
+        versions: Vec<(u32, u32)>,
+    },
 }
 
 const TAG_PING: u8 = 0;
@@ -127,12 +186,45 @@ const TAG_GOSSIP: u8 = 2;
 const TAG_MEMBERSHIP: u8 = 3;
 const TAG_RINGSWAP: u8 = 4;
 const TAG_REPORT: u8 = 5;
+const TAG_MEMBER_UPDATE: u8 = 6;
+const TAG_SWAP_PROPOSE: u8 = 7;
+const TAG_SWAP_ACK: u8 = 8;
+const TAG_SWAP_COMMIT: u8 = 9;
+const TAG_RING_DIGEST: u8 = 10;
 
 const EV_JOIN: u8 = 0;
 const EV_LEAVE: u8 = 1;
 const EV_CRASH: u8 = 2;
 
+const ST_ALIVE: u8 = 0;
+const ST_SUSPECT: u8 = 1;
+const ST_FAULTY: u8 = 2;
+const ST_LEFT: u8 = 3;
+
+fn state_byte(s: MemberState) -> u8 {
+    match s {
+        MemberState::Alive => ST_ALIVE,
+        MemberState::Suspect => ST_SUSPECT,
+        MemberState::Faulty => ST_FAULTY,
+        MemberState::Left => ST_LEFT,
+    }
+}
+
+fn byte_state(b: u8) -> Result<MemberState> {
+    Ok(match b {
+        ST_ALIVE => MemberState::Alive,
+        ST_SUSPECT => MemberState::Suspect,
+        ST_FAULTY => MemberState::Faulty,
+        ST_LEFT => MemberState::Left,
+        other => bail!("unknown member state {other}"),
+    })
+}
+
 fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
     out.extend_from_slice(&x.to_le_bytes());
 }
 
@@ -168,8 +260,28 @@ impl<'a> Reader<'a> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
     fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed u32 sequence (ring visit orders). Bounds the
+    /// declared length before allocating: a corrupt length must not
+    /// drive an OOM allocation; the body can hold at most `len` u32s
+    /// anyway.
+    fn read_order(&mut self) -> Result<Vec<u32>> {
+        let len = self.u32()? as usize;
+        if len > self.buf.len() / 4 + 1 {
+            bail!("ring order length {len} exceeds frame");
+        }
+        let mut order = Vec::with_capacity(len);
+        for _ in 0..len {
+            order.push(self.u32()?);
+        }
+        Ok(order)
     }
 
     fn done(&self) -> Result<()> {
@@ -278,6 +390,55 @@ impl Message {
                 put_u32(out, *alive);
                 put_u32(out, *swaps);
             }
+            Message::MemberUpdate {
+                node,
+                state,
+                incarnation,
+                time,
+            } => {
+                out.push(TAG_MEMBER_UPDATE);
+                put_u32(out, *node);
+                out.push(state_byte(*state));
+                put_u64(out, *incarnation);
+                put_f64(out, *time);
+            }
+            Message::SwapPropose { slot, seq, order } => {
+                out.push(TAG_SWAP_PROPOSE);
+                put_u32(out, *slot);
+                put_u32(out, *seq);
+                put_u32(out, order.len() as u32);
+                for &v in order {
+                    put_u32(out, v);
+                }
+            }
+            Message::SwapAck { seq, accept } => {
+                out.push(TAG_SWAP_ACK);
+                put_u32(out, *seq);
+                out.push(u8::from(*accept));
+            }
+            Message::SwapCommit {
+                slot,
+                period,
+                proposer,
+                order,
+            } => {
+                out.push(TAG_SWAP_COMMIT);
+                put_u32(out, *slot);
+                put_u32(out, *period);
+                put_u32(out, *proposer);
+                put_u32(out, order.len() as u32);
+                for &v in order {
+                    put_u32(out, v);
+                }
+            }
+            Message::RingDigest { versions } => {
+                out.push(TAG_RING_DIGEST);
+                put_u32(out, versions.len() as u32);
+                for &(period, proposer) in versions {
+                    put_u32(out, period);
+                    put_u32(out, proposer);
+                }
+            }
         }
     }
 
@@ -310,17 +471,7 @@ impl Message {
             }
             TAG_RINGSWAP => {
                 let slot = r.u32()?;
-                let len = r.u32()? as usize;
-                // Bound before allocating: a corrupt length must not
-                // drive an OOM allocation; the body can hold at most
-                // len u32s anyway.
-                if len > r.buf.len() / 4 + 1 {
-                    bail!("ring-swap length {len} exceeds frame");
-                }
-                let mut order = Vec::with_capacity(len);
-                for _ in 0..len {
-                    order.push(r.u32()?);
-                }
+                let order = r.read_order()?;
                 Message::RingSwap { slot, order }
             }
             TAG_REPORT => Message::Report {
@@ -331,6 +482,52 @@ impl Message {
                 alive: r.u32()?,
                 swaps: r.u32()?,
             },
+            TAG_MEMBER_UPDATE => Message::MemberUpdate {
+                node: r.u32()?,
+                state: byte_state(r.u8()?)?,
+                incarnation: r.u64()?,
+                time: r.f64()?,
+            },
+            TAG_SWAP_PROPOSE => {
+                let slot = r.u32()?;
+                let seq = r.u32()?;
+                let order = r.read_order()?;
+                Message::SwapPropose { slot, seq, order }
+            }
+            TAG_SWAP_ACK => {
+                let seq = r.u32()?;
+                let accept = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    other => bail!("bad swap-ack flag {other}"),
+                };
+                Message::SwapAck { seq, accept }
+            }
+            TAG_SWAP_COMMIT => {
+                let slot = r.u32()?;
+                let period = r.u32()?;
+                let proposer = r.u32()?;
+                let order = r.read_order()?;
+                Message::SwapCommit {
+                    slot,
+                    period,
+                    proposer,
+                    order,
+                }
+            }
+            TAG_RING_DIGEST => {
+                let len = r.u32()? as usize;
+                // Same pre-allocation bound as the ring orders: the
+                // body can hold at most len (u32, u32) pairs.
+                if len > r.buf.len() / 8 + 1 {
+                    bail!("ring-digest length {len} exceeds frame");
+                }
+                let mut versions = Vec::with_capacity(len);
+                for _ in 0..len {
+                    versions.push((r.u32()?, r.u32()?));
+                }
+                Message::RingDigest { versions }
+            }
             other => bail!("unknown message tag {other}"),
         };
         Ok(msg)
@@ -462,6 +659,41 @@ mod tests {
                 alive: 96,
                 swaps: 3,
             },
+            Message::MemberUpdate {
+                node: 12,
+                state: MemberState::Suspect,
+                incarnation: u64::MAX,
+                time: 750.25,
+            },
+            Message::MemberUpdate {
+                node: 0,
+                state: MemberState::Left,
+                incarnation: 0,
+                time: 0.0,
+            },
+            Message::SwapPropose {
+                slot: 1,
+                seq: 9,
+                order: vec![2, 0, 3, 1],
+            },
+            Message::SwapAck {
+                seq: 9,
+                accept: true,
+            },
+            Message::SwapAck {
+                seq: u32::MAX,
+                accept: false,
+            },
+            Message::SwapCommit {
+                slot: 0,
+                period: 17,
+                proposer: 5,
+                order: vec![1, 3, 0, 2],
+            },
+            Message::RingDigest {
+                versions: vec![(17, 5), (0, 0), (u32::MAX, 3)],
+            },
+            Message::RingDigest { versions: vec![] },
         ]
     }
 
@@ -650,8 +882,55 @@ mod tests {
         assert!(Message::decode(&bytes).is_err());
     }
 
+    #[test]
+    fn corrupt_digest_and_commit_lengths_do_not_allocate() {
+        let mut commit = Message::SwapCommit {
+            slot: 0,
+            period: 3,
+            proposer: 1,
+            order: vec![0, 1, 2],
+        }
+        .encode(0);
+        // Length sits past the header and the slot/period/proposer u32s.
+        let at = HEADER_LEN + 12;
+        commit[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Message::decode(&commit).is_err());
+
+        let mut digest = Message::RingDigest {
+            versions: vec![(1, 2)],
+        }
+        .encode(0);
+        let at = HEADER_LEN;
+        digest[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Message::decode(&digest).is_err());
+    }
+
+    #[test]
+    fn bad_member_state_and_ack_flag_are_rejected() {
+        let mut upd = Message::MemberUpdate {
+            node: 1,
+            state: MemberState::Alive,
+            incarnation: 2,
+            time: 3.0,
+        }
+        .encode(0);
+        // State byte sits past the header and the node u32.
+        upd[HEADER_LEN + 4] = 9;
+        let err = Message::decode(&upd).unwrap_err().to_string();
+        assert!(err.contains("unknown member state"), "{err}");
+
+        let mut ack = Message::SwapAck {
+            seq: 1,
+            accept: true,
+        }
+        .encode(0);
+        *ack.last_mut().unwrap() = 2;
+        let err = Message::decode(&ack).unwrap_err().to_string();
+        assert!(err.contains("bad swap-ack flag"), "{err}");
+    }
+
     fn arbitrary_message(rng: &mut Rng) -> Message {
-        match rng.index(6) {
+        match rng.index(11) {
             0 => Message::Ping {
                 seq: rng.next_u64() as u32,
             },
@@ -685,7 +964,7 @@ mod tests {
                         .collect(),
                 }
             }
-            _ => Message::Report {
+            5 => Message::Report {
                 period: rng.next_u64() as u32,
                 t_ms: rng.uniform(0.0, 1e7),
                 rho: rng.f64(),
@@ -693,6 +972,55 @@ mod tests {
                 alive: rng.next_u64() as u32,
                 swaps: rng.next_u64() as u32,
             },
+            6 => Message::MemberUpdate {
+                node: rng.next_u64() as u32,
+                state: match rng.index(4) {
+                    0 => MemberState::Alive,
+                    1 => MemberState::Suspect,
+                    2 => MemberState::Faulty,
+                    _ => MemberState::Left,
+                },
+                incarnation: rng.next_u64(),
+                time: rng.uniform(0.0, 1e7),
+            },
+            7 => {
+                let n = rng.index(33);
+                Message::SwapPropose {
+                    slot: rng.index(8) as u32,
+                    seq: rng.next_u64() as u32,
+                    order: (0..n)
+                        .map(|_| rng.next_u64() as u32)
+                        .collect(),
+                }
+            }
+            8 => Message::SwapAck {
+                seq: rng.next_u64() as u32,
+                accept: rng.chance(0.5),
+            },
+            9 => {
+                let n = rng.index(33);
+                Message::SwapCommit {
+                    slot: rng.index(8) as u32,
+                    period: rng.next_u64() as u32,
+                    proposer: rng.next_u64() as u32,
+                    order: (0..n)
+                        .map(|_| rng.next_u64() as u32)
+                        .collect(),
+                }
+            }
+            _ => {
+                let n = rng.index(9);
+                Message::RingDigest {
+                    versions: (0..n)
+                        .map(|_| {
+                            (
+                                rng.next_u64() as u32,
+                                rng.next_u64() as u32,
+                            )
+                        })
+                        .collect(),
+                }
+            }
         }
     }
 

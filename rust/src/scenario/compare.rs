@@ -10,7 +10,10 @@
 //! [`CompareOpts::certify`] selects the per-topology certification mode
 //! (PR 7 upper-envelope semantics for `hybrid`/`sketch`); the
 //! centralized DGRO column always certifies exactly, since its adaptive
-//! path steers on true diameters.
+//! path steers on true diameters. [`CompareOpts::trace_sample`] turns
+//! on causal tracing for every cell and collects per-(scenario,
+//! topology) `traces.jsonl` timelines in
+//! [`CompareReport::trace_exports`].
 
 use std::fmt::Write as _;
 
@@ -42,6 +45,13 @@ pub struct CompareReport {
     /// success rate, p50/p99, stretch, load imbalance, failure counts)
     /// when traffic was enabled; empty otherwise.
     pub traffic_tables: Vec<Table>,
+    /// Per-cell causal-trace timelines when
+    /// [`CompareOpts::trace_sample`] was non-zero: one
+    /// `(scenario, topology, traces.jsonl)` triple per (scenario,
+    /// topology) cell, in run order. The JSONL payload is the same
+    /// one-summary-line-per-trace format `--obs-out` writes; cells
+    /// whose runner exchanges no frames export an empty string.
+    pub trace_exports: Vec<(String, String, String)>,
 }
 
 impl CompareReport {
@@ -120,6 +130,15 @@ pub struct CompareOpts {
     /// report grows p99/stretch columns plus per-scenario traffic
     /// detail tables.
     pub traffic: Option<TrafficConfig>,
+    /// Causal-trace sampling stride (`--trace-sample`): 0 leaves
+    /// tracing off; `s >= 1` enables span recording on every cell and
+    /// stamps message-driven cells' frames with trace context, and the
+    /// report grows one `(scenario, topology, traces.jsonl)` export
+    /// per cell in [`CompareReport::trace_exports`]. In-process
+    /// columns exchange no frames, so their exports are empty — the
+    /// traced view is the transport-backed (`dgro`/`decentralized`)
+    /// cells'.
+    pub trace_sample: usize,
 }
 
 impl Default for CompareOpts {
@@ -130,6 +149,7 @@ impl Default for CompareOpts {
             shards: 0,
             certify: CertifyConfig::exact(),
             traffic: None,
+            trace_sample: 0,
         }
     }
 }
@@ -188,6 +208,7 @@ pub fn compare_opts(
         shards,
         certify,
         traffic,
+        trace_sample,
     } = opts;
     assert!(!specs.is_empty() && !topologies.is_empty());
     let mut header: Vec<String> = vec!["scenario".to_string()];
@@ -213,6 +234,7 @@ pub fn compare_opts(
     let mut traffic_tables = Vec::new();
     let mut timelines = Vec::with_capacity(specs.len());
     let mut names = Vec::with_capacity(specs.len());
+    let mut trace_exports = Vec::new();
     for (si, spec) in specs.iter().enumerate() {
         // One engine per (spec, topology) run so the cross product can
         // fan out; each run re-derives everything from (spec, seed) and
@@ -225,10 +247,12 @@ pub fn compare_opts(
                        engine_threads: usize|
          -> Result<Run> {
             let mut engine = ScenarioEngine::new(spec.clone(), seed)?;
-            engine.period = period;
-            engine.threads = engine_threads;
-            engine.shards = shards;
-            engine.certify = effective_certify(certify, topo);
+            engine.opts.period = period;
+            engine.opts.threads = engine_threads;
+            engine.opts.shards = shards;
+            engine.opts.certify = effective_certify(certify, topo);
+            engine.opts.trace_sample = trace_sample;
+            engine.opts.obs_record = trace_sample != 0;
             match traffic {
                 Some(tcfg) => {
                     let (rep, traf, _obs) =
@@ -258,6 +282,29 @@ pub fn compare_opts(
             row.push(rep.mean_diameter());
         }
         summary.row(row);
+        if trace_sample != 0 {
+            for (topo, (rep, _)) in topologies.iter().zip(&runs) {
+                let jsonl = rep
+                    .obs
+                    .as_ref()
+                    .map(|obs| {
+                        let spans: Vec<crate::obs::SpanRec> = obs
+                            .rec
+                            .spans()
+                            .iter()
+                            .map(crate::obs::SpanRec::from)
+                            .collect();
+                        crate::obs::trace::assemble(&spans)
+                            .summary_jsonl()
+                    })
+                    .unwrap_or_default();
+                trace_exports.push((
+                    spec.name.clone(),
+                    topo.name().to_string(),
+                    jsonl,
+                ));
+            }
+        }
         if traffic.is_some() {
             let mut trow = vec![si as f64];
             let mut tt = Table::new(
@@ -327,6 +374,7 @@ pub fn compare_opts(
         timelines,
         traffic_summary,
         traffic_tables,
+        trace_exports,
     })
 }
 
@@ -431,6 +479,40 @@ mod tests {
         for (a, b) in r1.traffic_tables.iter().zip(&rp.traffic_tables) {
             assert_eq!(a.to_csv(), b.to_csv());
         }
+    }
+
+    #[test]
+    fn trace_sample_threads_through_compare_cells() {
+        let specs = vec![mini("a")];
+        let topos = [Topology::Dgro, Topology::Decentralized];
+        let opts = CompareOpts {
+            trace_sample: 1,
+            ..CompareOpts::default()
+        };
+        let r1 = compare_opts(&specs, &topos, 13, opts).unwrap();
+        assert_eq!(r1.trace_exports.len(), topos.len());
+        assert_eq!(r1.trace_exports[0].0, "a");
+        assert_eq!(r1.trace_exports[0].1, "dgro");
+        assert_eq!(r1.trace_exports[1].1, "decentralized");
+        // The decentralized cell runs message-driven over the sim
+        // transport, so its frames carry trace context and assemble
+        // into at least one causal trace.
+        assert!(
+            !r1.trace_exports[1].2.is_empty(),
+            "decentralized cell must export assembled traces"
+        );
+        // Untraced compare keeps the report trace-free.
+        let off = compare_opts(
+            &specs,
+            &topos,
+            13,
+            CompareOpts::default(),
+        )
+        .unwrap();
+        assert!(off.trace_exports.is_empty());
+        // Byte-deterministic like every other compare artifact.
+        let r2 = compare_opts(&specs, &topos, 13, opts).unwrap();
+        assert_eq!(r1.trace_exports, r2.trace_exports);
     }
 
     #[test]

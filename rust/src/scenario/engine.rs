@@ -5,7 +5,7 @@
 //! under byte-identical conditions.
 //!
 //! * `Topology::Dgro` drives the real coordinator event loop
-//!   ([`Coordinator::run_dynamic`]) — membership events, ρ-adaptive ring
+//!   ([`AdaptiveRunner::run_with`]) — membership events, ρ-adaptive ring
 //!   swaps, time-varying latency view.
 //! * The static baselines (Chord / RAPID / Perigee / random K-ring)
 //!   build their overlay once over the full universe and never re-wire —
@@ -19,8 +19,8 @@
 //! threading): overlay graphs are rebuilt only when the latency matrix
 //! or the alive mask actually changed, unchanged periods reuse the
 //! previous diameter, and certification is warm-started and parallel
-//! ([`EvalPool`], sized by [`ScenarioEngine::threads`]). Set
-//! [`ScenarioEngine::incremental`] to `false` to force the from-scratch
+//! ([`EvalPool`], sized by [`EngineOpts::threads`]). Set
+//! [`EngineOpts::incremental`] to `false` to force the from-scratch
 //! per-period rebuild (the A/B baseline). Between the two paths the
 //! `t`/ρ/alive/swaps columns are bit-identical and diameters agree
 //! within the bounding algorithm's ~1e-6 certification tolerance (the
@@ -33,7 +33,10 @@ use std::fmt::Write as _;
 use anyhow::{bail, Result};
 
 use crate::config::Config;
-use crate::coordinator::{Coordinator, ShardedConfig, ShardedCoordinator};
+use crate::coordinator::{
+    AdaptiveRunner, Coordinator, DecentralizedRunner, RunOptions,
+    ShardedConfig, ShardedCoordinator,
+};
 use crate::gossip::measure::{measure, MeasureConfig};
 use crate::graph::eval::{CertifyConfig, EvalPool};
 use crate::graph::{diameter, Graph};
@@ -63,7 +66,7 @@ pub enum Topology {
     Dgro,
     /// The sharded DGRO coordinator: partition-local membership +
     /// anchor-stitched shards ([`ShardedCoordinator`]); shard count
-    /// comes from [`ScenarioEngine::shards`].
+    /// comes from [`EngineOpts::shards`].
     DgroSharded,
     /// Chord's finger-table overlay (latency-oblivious baseline).
     Chord,
@@ -78,6 +81,12 @@ pub enum Topology {
     /// low-diameter construction (Huang et al., arXiv:2201.01342) —
     /// the scale tier's known-diameter reference baseline.
     Circulant,
+    /// Coordinator-free DGRO ([`DecentralizedRunner`]): every node runs
+    /// its own Algorithm-3 loop over gossip-piggybacked membership and
+    /// a two-phase ring-swap agreement. Transport-backed by
+    /// construction (defaults to the sim backend when
+    /// [`EngineOpts::transport`] is unset).
+    Decentralized,
 }
 
 impl Topology {
@@ -102,9 +111,11 @@ impl Topology {
             "perigee" => Ok(Topology::Perigee),
             "random" | "kring" => Ok(Topology::RandomKRing),
             "circulant" => Ok(Topology::Circulant),
+            "decentralized" => Ok(Topology::Decentralized),
             other => bail!(
                 "unknown topology '{other}' \
-                 (dgro|sharded|chord|rapid|perigee|random|circulant)"
+                 (dgro|sharded|chord|rapid|perigee|random|circulant\
+                 |decentralized)"
             ),
         }
     }
@@ -119,6 +130,7 @@ impl Topology {
             Topology::Perigee => "perigee",
             Topology::RandomKRing => "random",
             Topology::Circulant => "circulant",
+            Topology::Decentralized => "decentralized",
         }
     }
 }
@@ -247,11 +259,14 @@ impl ScenarioReport {
     }
 }
 
-/// Runs a spec against topologies. Construction validates the spec once;
-/// `period` (default 250 sim-ms) is the adaptation/measurement cadence.
-pub struct ScenarioEngine {
-    spec: ScenarioSpec,
-    seed: u64,
+/// Every per-run knob of the scenario engine in one validated struct —
+/// shared by CLI parsing, tests and the `bench_harness` figures, so
+/// the next knob is added in exactly one place. The `Default` value
+/// reproduces the classic engine behavior: 250 ms period, serial
+/// evaluation, incremental static path, in-process coordinator, exact
+/// certification.
+#[derive(Clone, Debug)]
+pub struct EngineOpts {
     /// Adaptation/measurement cadence in sim-ms.
     pub period: f64,
     /// Worker threads for per-period diameter evaluation on the static
@@ -271,13 +286,15 @@ pub struct ScenarioEngine {
     /// sharding (one partition, no anchors — the parity baseline);
     /// other topologies ignore it entirely.
     pub shards: usize,
-    /// Transport backing [`Topology::Dgro`] runs. `None` (the default)
-    /// keeps the in-process coordinator — ρ inputs come straight from
-    /// latency-matrix lookups. `Some(kind)` replays the *same* trace
-    /// through the message-level [`NetCoordinator`]: Algorithm-3
-    /// measurements are driven by real framed messages and measured
-    /// RTTs over the chosen transport (`dgro scenario run --transport
-    /// sim|udp|tcp`). Only the centralized DGRO topology supports it.
+    /// Transport backing [`Topology::Dgro`] and
+    /// [`Topology::Decentralized`] runs. `None` (the default) keeps
+    /// the in-process coordinator for Dgro — ρ inputs come straight
+    /// from latency-matrix lookups — and resolves to the sim backend
+    /// for Decentralized (which is transport-backed by construction).
+    /// `Some(kind)` replays the *same* trace through the
+    /// message-level runner: Algorithm-3 measurements are driven by
+    /// real framed messages and measured RTTs over the chosen
+    /// transport (`dgro scenario run --transport sim|udp|tcp`).
     pub transport: Option<TransportKind>,
     /// Wall-time compression for the real-socket transports
     /// ([`TransportKind::Udp`] / [`TransportKind::Tcp`]): real
@@ -285,10 +302,10 @@ pub struct ScenarioEngine {
     /// ([`UdpTransport::DEFAULT_TIME_SCALE`] by default).
     pub time_scale: f64,
     /// Injected per-frame drop probability for transport-backed runs
-    /// (`--loss-rate`). When this or [`ScenarioEngine::dup_rate`] is
-    /// non-zero the chosen backend is wrapped in a seeded
-    /// [`LossyTransport`], so the fault pattern replays
-    /// deterministically for a fixed scenario seed.
+    /// (`--loss-rate`). When this, [`EngineOpts::dup_rate`] or
+    /// [`EngineOpts::reorder_rate`] is non-zero the chosen backend is
+    /// wrapped in a seeded [`LossyTransport`], so the fault pattern
+    /// replays deterministically for a fixed scenario seed.
     pub loss_rate: f64,
     /// Injected per-frame duplication probability for transport-backed
     /// runs (`--dup-rate`).
@@ -297,10 +314,11 @@ pub struct ScenarioEngine {
     /// runs (`--reorder-rate`): a hit frame is held back and released
     /// after the sender's next frame, swapping their wire order.
     pub reorder_rate: f64,
-    /// Churn-aware ρ guard forwarded to the coordinator: skip the
+    /// Churn-aware ρ guard forwarded to the runner: skip the
     /// period's ring swap when more than this many membership events
-    /// landed in it (0 = off; `--churn-guard`). Applies to the
-    /// centralized adaptive paths (in-process and transport-backed).
+    /// landed in it (0 = off; `--churn-guard`). Applies to every
+    /// adaptive path (on the decentralized runner each node counts the
+    /// membership news *it* applied this period).
     pub churn_guard: u64,
     /// Enable the span flight recorder for this run (`--obs-out` sets
     /// it). Registry counters are always on; span recording is the
@@ -320,51 +338,14 @@ pub struct ScenarioEngine {
     /// period (the default), budgeted estimates with a periodic exact
     /// oracle (`hybrid`), or budgeted estimates only (`sketch`).
     /// Applies to the static baselines and the sharded coordinator;
-    /// the centralized adaptive paths always certify exactly
+    /// the other adaptive paths always certify exactly
     /// (docs/SCENARIOS.md §Scaling & certification).
     pub certify: CertifyConfig,
 }
 
-/// Shard count a [`Topology::DgroSharded`] run falls back to when
-/// [`ScenarioEngine::shards`] was never set (`dgro scenario run
-/// --topology sharded` without `--shards`).
-pub const DEFAULT_SHARDS: usize = 4;
-
-/// Drive one transport-backed coordinator replay: construct the
-/// [`NetCoordinator`] over `transport` and run the trace — shared by
-/// the sim and udp arms of the adaptive path so the replay call can
-/// never diverge between them.
-#[allow(clippy::too_many_arguments)]
-fn replay_over<T: crate::net::Transport>(
-    cfg: Config,
-    w0: crate::latency::LatencyMatrix,
-    transport: T,
-    trace: &crate::membership::events::EventTrace,
-    horizon: f64,
-    record: bool,
-    trace_sample: usize,
-    latency_at: &mut dyn FnMut(f64) -> Option<crate::latency::LatencyMatrix>,
-    observer: Option<OverlayObserver<'_>>,
-) -> Result<(crate::coordinator::CoordinatorReport, Metrics, Obs)> {
-    let mut co = NetCoordinator::new(cfg, w0, transport)?;
-    if record {
-        co.obs.rec.set_enabled(true);
-    }
-    co.trace_sample = trace_sample;
-    let rep =
-        co.run_dynamic_observed(trace, horizon, latency_at, observer)?;
-    let obs = co.obs.clone();
-    Ok((rep, co.metrics, obs))
-}
-
-impl ScenarioEngine {
-    /// Validate the spec and wrap it with default knobs (250 ms period,
-    /// serial evaluation, incremental static path, centralized DGRO).
-    pub fn new(spec: ScenarioSpec, seed: u64) -> Result<ScenarioEngine> {
-        spec.validate()?;
-        Ok(ScenarioEngine {
-            spec,
-            seed,
+impl Default for EngineOpts {
+    fn default() -> EngineOpts {
+        EngineOpts {
             period: 250.0,
             threads: 1,
             incremental: true,
@@ -378,6 +359,68 @@ impl ScenarioEngine {
             obs_record: false,
             trace_sample: 0,
             certify: CertifyConfig::exact(),
+        }
+    }
+}
+
+impl EngineOpts {
+    /// Validate the topology-independent invariants: a positive finite
+    /// period, fault rates in `[0, 1)`, a positive time scale and a
+    /// well-formed certification policy. Topology-dependent rules
+    /// (which topologies accept a transport, who may certify
+    /// non-exactly) live in the engine's run path, which knows the
+    /// topology.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.period.is_finite() && self.period > 0.0) {
+            bail!("--period must be positive, got {}", self.period);
+        }
+        if !(self.time_scale.is_finite() && self.time_scale > 0.0) {
+            bail!(
+                "--time-scale must be positive, got {}",
+                self.time_scale
+            );
+        }
+        for (name, rate) in [
+            ("loss", self.loss_rate),
+            ("dup", self.dup_rate),
+            ("reorder", self.reorder_rate),
+        ] {
+            if !(0.0..1.0).contains(&rate) {
+                bail!("--{name}-rate must be in [0, 1), got {rate}");
+            }
+        }
+        if let Err(e) = self.certify.validate() {
+            bail!("{e}");
+        }
+        Ok(())
+    }
+}
+
+/// Runs a spec against topologies. Construction validates the spec
+/// once; the per-run knobs live in [`ScenarioEngine::opts`].
+pub struct ScenarioEngine {
+    spec: ScenarioSpec,
+    seed: u64,
+    /// Per-run knobs (period, threads, transport, fault rates, obs,
+    /// certification, …) — one validated struct shared with the CLI,
+    /// tests and bench harness.
+    pub opts: EngineOpts,
+}
+
+/// Shard count a [`Topology::DgroSharded`] run falls back to when
+/// [`EngineOpts::shards`] was never set (`dgro scenario run
+/// --topology sharded` without `--shards`).
+pub const DEFAULT_SHARDS: usize = 4;
+
+impl ScenarioEngine {
+    /// Validate the spec and wrap it with default knobs
+    /// ([`EngineOpts::default`]).
+    pub fn new(spec: ScenarioSpec, seed: u64) -> Result<ScenarioEngine> {
+        spec.validate()?;
+        Ok(ScenarioEngine {
+            spec,
+            seed,
+            opts: EngineOpts::default(),
         })
     }
 
@@ -388,8 +431,8 @@ impl ScenarioEngine {
 
     /// The partition count a [`Topology::DgroSharded`] run will use.
     pub fn effective_shards(&self) -> usize {
-        if self.shards >= 1 {
-            self.shards
+        if self.opts.shards >= 1 {
+            self.opts.shards
         } else {
             DEFAULT_SHARDS
         }
@@ -412,7 +455,7 @@ impl ScenarioEngine {
     }
 
     fn effective_period(&self) -> f64 {
-        self.period.min(self.spec.horizon)
+        self.opts.period.min(self.spec.horizon)
     }
 
     /// Run the spec against one topology. [`Topology::Dgro`] and
@@ -440,7 +483,7 @@ impl ScenarioEngine {
             self.spec.nodes,
             self.seed,
             tcfg,
-            self.threads.max(1),
+            self.opts.threads.max(1),
         );
         let rep = {
             let mut feed = |t: f64,
@@ -456,55 +499,98 @@ impl ScenarioEngine {
         Ok((rep, traffic, obs))
     }
 
+    /// Construct the boxed transport backend a message-driven run sits
+    /// on: the requested kind (sim when `kind` is `None`), wrapped in
+    /// the seeded [`LossyTransport`] decorator when any fault rate is
+    /// non-zero so the fault pattern replays deterministically.
+    fn build_backend(
+        &self,
+        kind: Option<TransportKind>,
+        w0: &crate::latency::LatencyMatrix,
+    ) -> Result<Box<dyn Transport>> {
+        let base: Box<dyn Transport> =
+            match kind.unwrap_or(TransportKind::Sim) {
+                TransportKind::Sim => {
+                    Box::new(SimTransport::new(w0.clone()))
+                }
+                TransportKind::Udp => Box::new(UdpTransport::bind(
+                    w0.clone(),
+                    self.opts.time_scale,
+                )?),
+                TransportKind::Tcp => Box::new(TcpTransport::bind(
+                    w0.clone(),
+                    self.opts.time_scale,
+                )?),
+            };
+        let fault = LossyConfig {
+            drop_rate: self.opts.loss_rate,
+            dup_rate: self.opts.dup_rate,
+            reorder_rate: self.opts.reorder_rate,
+            seed: self.seed,
+        };
+        Ok(if fault.active() {
+            Box::new(LossyTransport::new(base, fault))
+        } else {
+            base
+        })
+    }
+
     fn run_observed(
         &self,
         topology: Topology,
         observer: Option<OverlayObserver<'_>>,
     ) -> Result<ScenarioReport> {
-        if self.transport.is_some() && topology != Topology::Dgro {
+        self.opts.validate()?;
+        let message_driven = matches!(
+            topology,
+            Topology::Dgro | Topology::Decentralized
+        );
+        if self.opts.transport.is_some() && !message_driven {
             bail!(
-                "--transport runs support --topology dgro only \
-                 (got {})",
+                "--transport runs support --topology dgro or \
+                 decentralized only (got {})",
                 topology.name()
             );
         }
-        for (name, rate) in [
-            ("loss", self.loss_rate),
-            ("dup", self.dup_rate),
-            ("reorder", self.reorder_rate),
-        ] {
-            if !(0.0..1.0).contains(&rate) {
-                bail!("--{name}-rate must be in [0, 1), got {rate}");
-            }
-            if rate > 0.0 && self.transport.is_none() {
-                bail!(
-                    "--{name}-rate requires a transport-backed run \
-                     (--transport sim|udp|tcp)"
-                );
-            }
+        let fault_active = self.opts.loss_rate > 0.0
+            || self.opts.dup_rate > 0.0
+            || self.opts.reorder_rate > 0.0;
+        // Fault rates need framed messages to act on: an explicit
+        // transport, or the decentralized topology (transport-backed
+        // by construction, defaulting to sim).
+        if fault_active
+            && self.opts.transport.is_none()
+            && topology != Topology::Decentralized
+        {
+            bail!(
+                "--loss-rate/--dup-rate/--reorder-rate require a \
+                 transport-backed run (--transport sim|udp|tcp or \
+                 --topology decentralized)"
+            );
         }
-        if let Err(e) = self.certify.validate() {
-            bail!("{e}");
-        }
-        if !self.certify.is_exact() && topology == Topology::Dgro {
+        if !self.opts.certify.is_exact() && message_driven {
             bail!(
                 "--certify {} applies to sharded and static-baseline \
-                 topologies (the centralized coordinator always \
-                 certifies exactly)",
-                self.certify.mode.name()
+                 topologies (the {} runner always certifies exactly)",
+                self.opts.certify.mode.name(),
+                topology.name()
             );
         }
         match topology {
-            Topology::Dgro | Topology::DgroSharded => {
+            Topology::Dgro
+            | Topology::DgroSharded
+            | Topology::Decentralized => {
                 self.run_adaptive(topology, observer)
             }
             t => self.run_static(t, observer),
         }
     }
 
-    /// DGRO path: the coordinator's own event loop (centralized or
-    /// sharded, per `topology`), fed the generated trace and the
-    /// time-varying latency view.
+    /// Adaptive path: dispatch the spec's trace to one of the four
+    /// [`AdaptiveRunner`]s (centralized, sharded, transport-backed
+    /// net, decentralized) through the shared [`RunOptions`] surface —
+    /// the run call itself is identical across runners, only
+    /// construction differs.
     fn run_adaptive(
         &self,
         topology: Topology,
@@ -517,7 +603,8 @@ impl ScenarioEngine {
         cfg.seed = self.seed;
         cfg.scorer = "greedy".to_string();
         cfg.adapt_period_ms = self.effective_period();
-        cfg.churn_guard = self.churn_guard;
+        cfg.churn_guard = self.opts.churn_guard;
+        let horizon = self.spec.horizon;
         let mut prev_t = 0.0;
         let mut latency_at = |t: f64| {
             let out = if dyn_w.changes_within(prev_t, t) {
@@ -528,90 +615,83 @@ impl ScenarioEngine {
             prev_t = t;
             out
         };
-        let (rep, metrics, obs) = if topology == Topology::DgroSharded {
-            let mut opts = ShardedConfig::new(self.effective_shards());
-            opts.threads = self.threads.max(1);
-            opts.certify = self.certify;
-            let mut co =
-                ShardedCoordinator::with_latency(cfg, dyn_w.at(0.0), opts)?;
-            if self.obs_record {
-                co.obs.rec.set_enabled(true);
-            }
-            let rep = co.run_dynamic_observed(
-                &trace,
-                self.spec.horizon,
-                &mut latency_at,
-                observer,
-            )?;
-            let obs = co.obs.clone();
-            (rep, co.metrics, obs)
-        } else if let Some(kind) = self.transport {
-            // Transport-backed replay: same spec, same seed-derived
-            // trace and latency view, but ρ comes from measured message
-            // RTTs on the chosen transport (rust/tests/net.rs pins
-            // cross-transport parity on this path). Non-zero fault
-            // rates wrap the backend in the seeded loss decorator.
-            let w0 = dyn_w.at(0.0);
-            let horizon = self.spec.horizon;
-            let base: Box<dyn Transport> = match kind {
-                TransportKind::Sim => {
-                    Box::new(SimTransport::new(w0.clone()))
-                }
-                TransportKind::Udp => Box::new(UdpTransport::bind(
-                    w0.clone(),
-                    self.time_scale,
-                )?),
-                TransportKind::Tcp => Box::new(TcpTransport::bind(
-                    w0.clone(),
-                    self.time_scale,
-                )?),
-            };
-            let fault = LossyConfig {
-                drop_rate: self.loss_rate,
-                dup_rate: self.dup_rate,
-                reorder_rate: self.reorder_rate,
-                seed: self.seed,
-            };
-            let record = self.obs_record;
-            if fault.active() {
-                let lossy = LossyTransport::new(base, fault);
-                replay_over(
+        let run_opts = || {
+            RunOptions::new()
+                .record(self.opts.obs_record)
+                .trace_sample(self.opts.trace_sample)
+        };
+        let (rep, metrics, obs) = match topology {
+            Topology::DgroSharded => {
+                let mut sopts =
+                    ShardedConfig::new(self.effective_shards());
+                sopts.threads = self.opts.threads.max(1);
+                sopts.certify = self.opts.certify;
+                let mut co = ShardedCoordinator::with_latency(
                     cfg,
-                    w0,
-                    lossy,
+                    dyn_w.at(0.0),
+                    sopts,
+                )?;
+                let rep = co.run_with(
                     &trace,
                     horizon,
-                    record,
-                    self.trace_sample,
-                    &mut latency_at,
-                    observer,
-                )?
-            } else {
-                replay_over(
-                    cfg,
-                    w0,
-                    base,
+                    run_opts()
+                        .latency(&mut latency_at)
+                        .maybe_observer(observer),
+                )?;
+                let obs = co.obs.clone();
+                (rep, co.metrics, obs)
+            }
+            Topology::Decentralized => {
+                // Coordinator-free: every node runs its own loop over
+                // framed messages; the engine only supplies the
+                // backend (sim unless --transport says otherwise).
+                let w0 = dyn_w.at(0.0);
+                let backend =
+                    self.build_backend(self.opts.transport, &w0)?;
+                let mut co = DecentralizedRunner::new(cfg, w0, backend)?;
+                let rep = co.run_with(
                     &trace,
                     horizon,
-                    record,
-                    self.trace_sample,
-                    &mut latency_at,
-                    observer,
-                )?
+                    run_opts()
+                        .latency(&mut latency_at)
+                        .maybe_observer(observer),
+                )?;
+                let obs = co.obs.clone();
+                (rep, co.metrics, obs)
             }
-        } else {
-            let mut co = Coordinator::with_latency(cfg, dyn_w.at(0.0))?;
-            if self.obs_record {
-                co.obs.rec.set_enabled(true);
+            Topology::Dgro if self.opts.transport.is_some() => {
+                // Transport-backed replay: same spec, same seed-derived
+                // trace and latency view, but ρ comes from measured
+                // message RTTs on the chosen transport
+                // (rust/tests/net.rs pins cross-transport parity on
+                // this path).
+                let w0 = dyn_w.at(0.0);
+                let backend =
+                    self.build_backend(self.opts.transport, &w0)?;
+                let mut co = NetCoordinator::new(cfg, w0, backend)?;
+                let rep = co.run_with(
+                    &trace,
+                    horizon,
+                    run_opts()
+                        .latency(&mut latency_at)
+                        .maybe_observer(observer),
+                )?;
+                let obs = co.obs.clone();
+                (rep, co.metrics, obs)
             }
-            let rep = co.run_dynamic_observed(
-                &trace,
-                self.spec.horizon,
-                &mut latency_at,
-                observer,
-            )?;
-            let obs = co.obs.clone();
-            (rep, co.metrics, obs)
+            _ => {
+                let mut co =
+                    Coordinator::with_latency(cfg, dyn_w.at(0.0))?;
+                let rep = co.run_with(
+                    &trace,
+                    horizon,
+                    run_opts()
+                        .latency(&mut latency_at)
+                        .maybe_observer(observer),
+                )?;
+                let obs = co.obs.clone();
+                (rep, co.metrics, obs)
+            }
         };
         let series = |name: &str| -> Vec<f64> {
             metrics
@@ -678,7 +758,9 @@ impl ScenarioEngine {
             // Deterministic by construction (no RNG draw): the
             // closed-form known-diameter reference for scale runs.
             Topology::Circulant => Circulant::power_two(n).to_graph(&w0),
-            Topology::Dgro | Topology::DgroSharded => {
+            Topology::Dgro
+            | Topology::DgroSharded
+            | Topology::Decentralized => {
                 bail!("dgro runs on the adaptive path")
             }
         };
@@ -686,10 +768,10 @@ impl ScenarioEngine {
             g0.edges().iter().map(|&(u, v, _)| (u, v)).collect();
 
         let obs = Obs::new();
-        if self.obs_record {
+        if self.opts.obs_record {
             obs.rec.set_enabled(true);
         }
-        let mut pool = EvalPool::new(self.threads);
+        let mut pool = EvalPool::new(self.opts.threads);
         pool.attach_obs(&obs);
         let mut membership = MembershipList::full(n);
         let mut metrics = Metrics::new();
@@ -739,7 +821,7 @@ impl ScenarioEngine {
             // overlay with current weights (adapt_once uses overlay(),
             // crashed nodes included) — while the reported diameter is
             // over the alive sub-overlay (faulty nodes do not relay).
-            if !self.incremental || latency_changed || g_full.is_none() {
+            if !self.opts.incremental || latency_changed || g_full.is_none() {
                 let mut g = Graph::empty(n);
                 for &(u, v) in &edges {
                     g.add_edge(
@@ -750,7 +832,7 @@ impl ScenarioEngine {
                 }
                 g_full = Some(g);
             }
-            let alive_stale = !self.incremental
+            let alive_stale = !self.opts.incremental
                 || latency_changed
                 || alive_changed
                 || g_alive.is_none();
@@ -776,7 +858,7 @@ impl ScenarioEngine {
             metrics.incr("gossip.messages", stats.messages as u64);
             if alive_stale {
                 let ga = g_alive.as_ref().expect("g_alive built");
-                d = if !self.certify.is_exact() {
+                d = if !self.opts.certify.is_exact() {
                     // Budgeted certified interval; report the upper
                     // bound (conservative) or, on hybrid oracle
                     // periods, the exact value after checking it lies
@@ -784,14 +866,14 @@ impl ScenarioEngine {
                     let est = pool.diameter_est(
                         ga,
                         &landmarks,
-                        self.certify.budget,
+                        self.opts.certify.budget,
                     );
                     landmarks = est.landmarks.clone();
                     metrics
                         .observe("eval.est_lower", f64::from(est.lower));
                     metrics
                         .observe("eval.est_upper", f64::from(est.upper));
-                    if self.certify.oracle_period(eval_idx) {
+                    if self.opts.certify.oracle_period(eval_idx) {
                         metrics.incr("eval.oracle_checks", 1);
                         let exact = diameter::diameter(ga);
                         let tol = 1e-3 * exact.max(1.0);
@@ -809,7 +891,7 @@ impl ScenarioEngine {
                     } else {
                         f64::from(est.upper)
                     }
-                } else if self.incremental {
+                } else if self.opts.incremental {
                     let (dd, lm) =
                         pool.diameter_with_seeds(ga, &landmarks);
                     landmarks = lm;
@@ -903,11 +985,16 @@ mod tests {
         for t in Topology::ALL {
             assert_eq!(Topology::parse(t.name()).unwrap(), t);
         }
-        // The sharded coordinator is opt-in (not in ALL) but must still
-        // round-trip through the CLI name.
+        // The sharded coordinator and the decentralized runner are
+        // opt-in (not in ALL) but must still round-trip through the
+        // CLI names.
         assert_eq!(
             Topology::parse(Topology::DgroSharded.name()).unwrap(),
             Topology::DgroSharded
+        );
+        assert_eq!(
+            Topology::parse(Topology::Decentralized.name()).unwrap(),
+            Topology::Decentralized
         );
         assert!(Topology::parse("mesh").is_err());
     }
@@ -915,7 +1002,7 @@ mod tests {
     #[test]
     fn sharded_topology_runs_and_aligns_with_centralized() {
         let mut engine = ScenarioEngine::new(tiny_spec(), 5).unwrap();
-        engine.shards = 4;
+        engine.opts.shards = 4;
         assert_eq!(engine.effective_shards(), 4);
         let s = engine.run(Topology::DgroSharded).unwrap();
         let c = engine.run(Topology::Dgro).unwrap();
@@ -928,16 +1015,16 @@ mod tests {
         assert_eq!(s.topology.name(), "sharded");
         // Default resolution: only 0 falls back (1 is the valid
         // degenerate single-shard parity baseline).
-        engine.shards = 0;
+        engine.opts.shards = 0;
         assert_eq!(engine.effective_shards(), DEFAULT_SHARDS);
-        engine.shards = 1;
+        engine.opts.shards = 1;
         assert_eq!(engine.effective_shards(), 1);
     }
 
     #[test]
     fn transport_backed_run_covers_periods_and_rejects_baselines() {
         let mut engine = ScenarioEngine::new(tiny_spec(), 5).unwrap();
-        engine.transport = Some(TransportKind::Sim);
+        engine.opts.transport = Some(TransportKind::Sim);
         let rep = engine.run(Topology::Dgro).unwrap();
         assert_eq!(rep.rows.len(), 4);
         for r in &rep.rows {
@@ -947,7 +1034,7 @@ mod tests {
         }
         // Transports wrap the centralized coordinator only.
         assert!(engine.run(Topology::Chord).is_err());
-        engine.shards = 2;
+        engine.opts.shards = 2;
         assert!(engine.run(Topology::DgroSharded).is_err());
     }
 
@@ -957,9 +1044,9 @@ mod tests {
         let run = || {
             let mut engine =
                 ScenarioEngine::new(tiny_spec(), 5).unwrap();
-            engine.transport = Some(TransportKind::Sim);
-            engine.obs_record = true;
-            engine.trace_sample = 1;
+            engine.opts.transport = Some(TransportKind::Sim);
+            engine.opts.obs_record = true;
+            engine.opts.trace_sample = 1;
             let rep = engine.run(Topology::Dgro).unwrap();
             rep.obs.unwrap().rec.export_jsonl(true).unwrap()
         };
@@ -974,8 +1061,8 @@ mod tests {
         }
         // trace_sample = 0 leaves the timeline trace-free.
         let mut off = ScenarioEngine::new(tiny_spec(), 5).unwrap();
-        off.transport = Some(TransportKind::Sim);
-        off.obs_record = true;
+        off.opts.transport = Some(TransportKind::Sim);
+        off.opts.obs_record = true;
         let rep = off.run(Topology::Dgro).unwrap();
         let plain =
             rep.obs.unwrap().rec.export_jsonl(true).unwrap();
@@ -985,8 +1072,8 @@ mod tests {
     #[test]
     fn lossy_rates_validate_and_replay_deterministically() {
         let mut engine = ScenarioEngine::new(tiny_spec(), 5).unwrap();
-        engine.transport = Some(TransportKind::Sim);
-        engine.loss_rate = 0.1;
+        engine.opts.transport = Some(TransportKind::Sim);
+        engine.opts.loss_rate = 0.1;
         let a = engine.run(Topology::Dgro).unwrap();
         let b = engine.run(Topology::Dgro).unwrap();
         assert_eq!(
@@ -996,12 +1083,12 @@ mod tests {
         );
         // Fault rates without a transport-backed run are rejected.
         let mut bad = ScenarioEngine::new(tiny_spec(), 5).unwrap();
-        bad.loss_rate = 0.1;
+        bad.opts.loss_rate = 0.1;
         assert!(bad.run(Topology::Dgro).is_err());
         // Out-of-range rates are rejected.
         let mut oob = ScenarioEngine::new(tiny_spec(), 5).unwrap();
-        oob.transport = Some(TransportKind::Sim);
-        oob.dup_rate = 1.5;
+        oob.opts.transport = Some(TransportKind::Sim);
+        oob.opts.dup_rate = 1.5;
         assert!(oob.run(Topology::Dgro).is_err());
     }
 
@@ -1036,9 +1123,9 @@ mod tests {
         // Hybrid with an every-evaluation oracle: every reported
         // diameter IS the oracle value, pinned inside the estimator's
         // own bounds (the run errors out otherwise).
-        engine.certify.mode = CertifyMode::Hybrid;
-        engine.certify.oracle_every = 1;
-        engine.certify.budget = 4;
+        engine.opts.certify.mode = CertifyMode::Hybrid;
+        engine.opts.certify.oracle_every = 1;
+        engine.opts.certify.budget = 4;
         let hybrid = engine.run(Topology::Chord).unwrap();
         assert_eq!(exact.rows.len(), hybrid.rows.len());
         for (e, h) in exact.rows.iter().zip(&hybrid.rows) {
@@ -1055,7 +1142,7 @@ mod tests {
         }
         // Sketch reports the certified upper bound: never below exact
         // by more than the certification tolerance.
-        engine.certify.mode = CertifyMode::Sketch;
+        engine.opts.certify.mode = CertifyMode::Sketch;
         let sketch = engine.run(Topology::Chord).unwrap();
         for (e, s) in exact.rows.iter().zip(&sketch.rows) {
             assert!(
@@ -1067,9 +1154,9 @@ mod tests {
             );
         }
         // Validation: bad knobs and unsupported topologies reject.
-        engine.certify.budget = 0;
+        engine.opts.certify.budget = 0;
         assert!(engine.run(Topology::Chord).is_err());
-        engine.certify.budget = 4;
+        engine.opts.certify.budget = 4;
         assert!(engine.run(Topology::Dgro).is_err());
     }
 }

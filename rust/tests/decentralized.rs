@@ -1,0 +1,360 @@
+//! Integration tests for the coordinator-free decentralized runner:
+//!
+//! * the ring-strand property — concurrent epoch-tagged two-phase
+//!   swaps under a seeded [`LossyTransport`] (5–10% drop, plus dup and
+//!   reorder) never tear a ring: after quiescence every up peer holds
+//!   valid full-universe permutations, peers that adopted a slot's
+//!   winning version hold byte-identical orders, and every peer's
+//!   overlay stays connected over the actually-alive set;
+//! * determinism pins — the sim-backed decentralized scenario run is
+//!   byte-deterministic and invariant across evaluation-pool widths
+//!   T ∈ {1, 2, 8};
+//! * the acceptance pin — mean alive-overlay diameter across the
+//!   scenario catalog stays within 15% of the centralized coordinator
+//!   under identical specs, seeds and (trimmed) horizons;
+//! * the anchor-storm cell — the catalog's adversarial anchor storm
+//!   completes under 10% injected loss with zero ring strands.
+
+#![allow(clippy::field_reassign_with_default)] // config-mutation idiom
+
+use std::collections::HashSet;
+
+use dgro::config::Config;
+use dgro::coordinator::{AdaptiveRunner, DecentralizedRunner, RunOptions};
+use dgro::graph::ring::Ring;
+use dgro::latency::{LatencyMatrix, Model};
+use dgro::membership::events::{EventTrace, MembershipEvent};
+use dgro::net::{LossyConfig, LossyTransport, SimTransport, Transport};
+use dgro::prop::{ensure, forall, Config as PropConfig};
+use dgro::scenario::{catalog, find, ScenarioEngine, Topology};
+use dgro::util::rng::Rng;
+
+/// Swap-version ordering (mirrors the runner's commit rule): a higher
+/// period wins; within a period the *lowest* proposer id wins.
+fn ver_newer(a: (u32, u32), b: (u32, u32)) -> bool {
+    a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+/// Whether the alive-restricted overlay of one peer's K-ring view is
+/// connected: consecutive alive members along each ring (dead nodes
+/// skipped, ends wrapped) must link the whole alive set.
+fn alive_overlay_connected(
+    rings: &[Vec<u32>],
+    alive: &HashSet<u32>,
+) -> bool {
+    if alive.len() <= 1 {
+        return true;
+    }
+    let mut adj: Vec<Vec<u32>> = Vec::new();
+    let ids: Vec<u32> = {
+        let mut v: Vec<u32> = alive.iter().copied().collect();
+        v.sort_unstable();
+        v
+    };
+    let index =
+        |id: u32| ids.binary_search(&id).expect("alive id indexed");
+    adj.resize(ids.len(), Vec::new());
+    for order in rings {
+        let walk: Vec<u32> = order
+            .iter()
+            .copied()
+            .filter(|id| alive.contains(id))
+            .collect();
+        if walk.len() < 2 {
+            continue;
+        }
+        for i in 0..walk.len() {
+            let u = walk[i];
+            let v = walk[(i + 1) % walk.len()];
+            if u != v {
+                adj[index(u)].push(v);
+                adj[index(v)].push(u);
+            }
+        }
+    }
+    let mut seen = vec![false; ids.len()];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    let mut reached = 1usize;
+    while let Some(u) = stack.pop() {
+        for &v in &adj[u] {
+            let vi = index(v);
+            if !seen[vi] {
+                seen[vi] = true;
+                reached += 1;
+                stack.push(vi);
+            }
+        }
+    }
+    reached == ids.len()
+}
+
+/// The no-strand invariant over a finished runner: every up peer's
+/// every ring is a valid full-universe permutation, every slot's
+/// winning swap version maps to exactly one order across its adopters,
+/// and every up peer's own overlay view connects the alive set.
+fn assert_no_strand<T: Transport>(
+    co: &DecentralizedRunner<T>,
+) -> Result<(), String> {
+    let ups = co.up_nodes();
+    let alive: HashSet<u32> = ups.iter().copied().collect();
+    let views = co.ring_views();
+    let versions = co.ring_versions();
+    let k = versions[0].len();
+    for &u in &ups {
+        for (slot, order) in views[u as usize].iter().enumerate() {
+            Ring::new(order.clone())
+                .and_then(|r| r.validate().map(|_| r))
+                .map_err(|e| {
+                    format!("peer {u} slot {slot}: torn ring: {e}")
+                })?;
+        }
+        ensure(
+            alive_overlay_connected(&views[u as usize], &alive),
+            format!("peer {u}: alive overlay disconnected"),
+        )?;
+    }
+    for slot in 0..k {
+        let best = ups
+            .iter()
+            .map(|&u| versions[u as usize][slot])
+            .fold((0, 0), |acc, v| if ver_newer(v, acc) { v } else { acc });
+        let mut winner: Option<&Vec<u32>> = None;
+        for &u in &ups {
+            if versions[u as usize][slot] != best {
+                continue;
+            }
+            let order = &views[u as usize][slot];
+            match winner {
+                None => winner = Some(order),
+                Some(w) => ensure(
+                    w == order,
+                    format!(
+                        "slot {slot}: split-brain at version \
+                         {best:?} (peer {u} disagrees)"
+                    ),
+                )?,
+            }
+        }
+    }
+    Ok(())
+}
+
+fn fabric_world(n: usize, seed: u64) -> LatencyMatrix {
+    Model::Fabric.sample(n, &mut Rng::new(seed))
+}
+
+fn small_cfg(n: usize, seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.nodes = n;
+    cfg.k = 2;
+    cfg.seed = seed;
+    cfg.model = "fabric".into();
+    cfg.gossip_rounds = 6;
+    cfg.gossip_samples = 2;
+    cfg.adapt_period_ms = 250.0;
+    cfg
+}
+
+// ---------------------------------------------------------------------
+// Ring-strand property under seeded loss/dup/reorder.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_lossy_concurrent_swaps_never_strand_the_ring() {
+    forall(
+        "lossy two-phase swaps keep rings whole",
+        PropConfig::default().cases(6).seed(0xDECE_57A8),
+        |rng| {
+            let n = 8 + rng.index(9); // 8..=16
+            let seed = 1 + rng.next_u64() % 0xFFFF;
+            let cfg = small_cfg(n, seed);
+            let w = fabric_world(n, seed ^ 0x5EED);
+            let fault = LossyConfig {
+                drop_rate: rng.uniform(0.05, 0.10),
+                dup_rate: rng.uniform(0.0, 0.05),
+                reorder_rate: rng.uniform(0.0, 0.05),
+                seed: rng.next_u64(),
+            };
+            let lossy = LossyTransport::new(
+                SimTransport::new(w.clone()),
+                fault,
+            );
+            // Churn burst in the first kilosecond, then three quiet
+            // periods so the anti-entropy tail has room to settle.
+            let mut trace = EventTrace::default();
+            let crashed = rng.index(3.min(n - 4)) + 1;
+            for i in 0..crashed {
+                let node = (1 + i * 2) as u32;
+                let at = rng.uniform(200.0, 700.0);
+                trace.events.push(MembershipEvent::Crash {
+                    time: at,
+                    node,
+                });
+                if rng.chance(0.5) {
+                    trace.events.push(MembershipEvent::Join {
+                        time: at + rng.uniform(100.0, 250.0),
+                        node,
+                    });
+                }
+            }
+            trace.events.sort_by(|a, b| {
+                a.time().total_cmp(&b.time())
+            });
+            let mut co = DecentralizedRunner::new(cfg, w, lossy)
+                .map_err(|e| e.to_string())?;
+            co.run_with(&trace, 1750.0, RunOptions::new())
+                .map_err(|e| e.to_string())?;
+            assert_no_strand(&co)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Determinism and thread-invariance pins.
+// ---------------------------------------------------------------------
+
+fn mini_engine(threads: usize) -> ScenarioEngine {
+    let mut spec = find("flash-crowd").expect("catalog entry");
+    spec.nodes = 24;
+    spec.initial_alive = 16;
+    spec.horizon = 1250.0;
+    spec.churn = vec![dgro::scenario::ChurnSpec::FlashCrowd {
+        first: 16,
+        count: 8,
+        at: 400.0,
+        over: 300.0,
+    }];
+    let mut engine = ScenarioEngine::new(spec, 11).expect("engine");
+    engine.opts.threads = threads;
+    engine
+}
+
+#[test]
+fn decentralized_scenario_is_byte_deterministic() {
+    let r1 = mini_engine(1).run(Topology::Decentralized).unwrap();
+    let r2 = mini_engine(1).run(Topology::Decentralized).unwrap();
+    assert_eq!(r1.render(), r2.render());
+    assert!(!r1.rows.is_empty());
+    for row in &r1.rows {
+        assert!(row.diameter.is_finite() && row.diameter > 0.0);
+    }
+}
+
+#[test]
+fn decentralized_scenario_is_thread_invariant() {
+    let base = mini_engine(1).run(Topology::Decentralized).unwrap();
+    for threads in [2usize, 8] {
+        let rep =
+            mini_engine(threads).run(Topology::Decentralized).unwrap();
+        assert_eq!(
+            base.render(),
+            rep.render(),
+            "T={threads} must reproduce the T=1 report"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Diameter-gap acceptance pin vs the centralized coordinator.
+// ---------------------------------------------------------------------
+
+#[test]
+fn decentralized_diameter_tracks_centralized_within_bound() {
+    let mut central_sum = 0.0;
+    let mut dec_sum = 0.0;
+    for mut spec in catalog() {
+        spec.horizon = spec.horizon.min(1500.0);
+        let name = spec.name.clone();
+        let mean = |topology: Topology| -> f64 {
+            let engine =
+                ScenarioEngine::new(spec.clone(), 7).expect("engine");
+            let rep = engine.run(topology).expect("run");
+            assert!(!rep.rows.is_empty(), "{name}: empty report");
+            rep.rows.iter().map(|r| r.diameter).sum::<f64>()
+                / rep.rows.len() as f64
+        };
+        let central = mean(Topology::Dgro);
+        let dec = mean(Topology::Decentralized);
+        assert!(
+            central > 0.0 && dec > 0.0,
+            "{name}: degenerate diameters ({central}, {dec})"
+        );
+        // Per-scenario guard: the coordinator-free loop may trail the
+        // centralized one on any single adversarial spec, but never
+        // catastrophically.
+        assert!(
+            dec <= central * 1.5,
+            "{name}: decentralized mean alive-diameter {dec:.3} vs \
+             centralized {central:.3} exceeds the 1.5x guard"
+        );
+        central_sum += central;
+        dec_sum += dec;
+    }
+    // Catalog-level acceptance: within 15% of centralized overall.
+    assert!(
+        dec_sum <= central_sum * 1.15,
+        "catalog mean alive-diameter gap too large: decentralized \
+         {dec_sum:.3} vs centralized {central_sum:.3}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Anchor-storm under 10% loss: completes, zero ring strands.
+// ---------------------------------------------------------------------
+
+#[test]
+fn anchor_storm_under_loss_leaves_no_strands() {
+    let n = 24;
+    let seed = 23;
+    let cfg = small_cfg(n, seed);
+    let w = fabric_world(n, seed);
+    let lossy = LossyTransport::new(
+        SimTransport::new(w.clone()),
+        LossyConfig {
+            drop_rate: 0.10,
+            dup_rate: 0.03,
+            reorder_rate: 0.03,
+            seed: 0xA5C0,
+        },
+    );
+    // Three storm waves against fixed "anchor" ids with rejoins —
+    // the catalog shape, sized for a message-granularity run.
+    let mut trace = EventTrace::default();
+    for wave in 0..3u32 {
+        let at = 400.0 + 400.0 * wave as f64;
+        for a in 0..3u32 {
+            let node = 1 + a * 4;
+            trace.events.push(MembershipEvent::Crash {
+                time: at + a as f64,
+                node,
+            });
+            trace.events.push(MembershipEvent::Join {
+                time: at + 250.0 + a as f64,
+                node,
+            });
+        }
+    }
+    trace
+        .events
+        .sort_by(|a, b| a.time().total_cmp(&b.time()));
+    let mut co =
+        DecentralizedRunner::new(cfg, w, lossy).expect("runner");
+    let rep = co.run_with(&trace, 2000.0, RunOptions::new()).unwrap();
+    assert_eq!(rep.alive, n, "every anchor rejoined");
+    assert!(rep.final_diameter.is_finite() && rep.final_diameter > 0.0);
+    assert_no_strand(&co).unwrap();
+}
+
+#[test]
+fn anchor_storm_engine_cell_completes_under_loss() {
+    let mut spec = find("anchor-storm").expect("catalog entry");
+    spec.horizon = 1500.0;
+    let mut engine = ScenarioEngine::new(spec, 7).expect("engine");
+    engine.opts.loss_rate = 0.10;
+    let rep = engine.run(Topology::Decentralized).expect("run");
+    assert!(!rep.rows.is_empty());
+    for row in &rep.rows {
+        assert!(row.diameter.is_finite() && row.diameter > 0.0);
+    }
+}

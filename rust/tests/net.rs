@@ -248,8 +248,8 @@ fn replay(kind: TransportKind) -> ScenarioReport {
 
 fn replay_with(kind: TransportKind, loss: f64) -> ScenarioReport {
     let mut engine = ScenarioEngine::new(parity_spec(), 0).unwrap();
-    engine.transport = Some(kind);
-    engine.loss_rate = loss;
+    engine.opts.transport = Some(kind);
+    engine.opts.loss_rate = loss;
     engine.run(Topology::Dgro).unwrap()
 }
 
@@ -356,11 +356,11 @@ fn injected_loss_keeps_measurement_drift_bounded() {
 fn anchor_replay(kind: TransportKind, loss: f64) -> ScenarioReport {
     let spec = find("anchor-storm").unwrap();
     let mut engine = ScenarioEngine::new(spec, 0).unwrap();
-    engine.transport = Some(kind);
-    engine.loss_rate = loss;
+    engine.opts.transport = Some(kind);
+    engine.opts.loss_rate = loss;
     // Compress wall time so the real-socket replays fit the CI
     // net-smoke budget.
-    engine.time_scale = 0.01;
+    engine.opts.time_scale = 0.01;
     engine.run(Topology::Dgro).unwrap()
 }
 

@@ -40,8 +40,8 @@ fn obs_spec(horizon: f64) -> ScenarioSpec {
 
 fn sim_run(seed: u64) -> ScenarioReport {
     let mut engine = ScenarioEngine::new(obs_spec(1000.0), seed).unwrap();
-    engine.transport = Some(TransportKind::Sim);
-    engine.obs_record = true;
+    engine.opts.transport = Some(TransportKind::Sim);
+    engine.opts.obs_record = true;
     engine.run(Topology::Dgro).unwrap()
 }
 
@@ -77,9 +77,9 @@ fn sharded_obs_exports_are_thread_count_invariant() {
     let run = |threads: usize| {
         let mut engine =
             ScenarioEngine::new(obs_spec(2000.0), 3).unwrap();
-        engine.shards = 4;
-        engine.threads = threads;
-        engine.obs_record = true;
+        engine.opts.shards = 4;
+        engine.opts.threads = threads;
+        engine.opts.obs_record = true;
         let rep = engine.run(Topology::DgroSharded).unwrap();
         let obs = rep.obs.as_ref().unwrap();
         (
@@ -111,10 +111,10 @@ fn lossy_replay_counters_reach_registry_and_synced_metrics() {
     for seed in 0..3u64 {
         let mut engine =
             ScenarioEngine::new(obs_spec(2000.0), seed).unwrap();
-        engine.transport = Some(TransportKind::Sim);
-        engine.loss_rate = 0.08;
-        engine.dup_rate = 0.25;
-        engine.reorder_rate = 0.25;
+        engine.opts.transport = Some(TransportKind::Sim);
+        engine.opts.loss_rate = 0.08;
+        engine.opts.dup_rate = 0.25;
+        engine.opts.reorder_rate = 0.25;
         let rep = engine.run(Topology::Dgro).unwrap();
         let obs = rep.obs.as_ref().unwrap();
         for name in [
@@ -160,9 +160,9 @@ fn sharded_traffic_combined_artifacts_are_thread_invariant() {
     let run = |threads: usize| -> ArtifactSet {
         let mut engine =
             ScenarioEngine::new(obs_spec(2000.0), 3).unwrap();
-        engine.shards = 4;
-        engine.threads = threads;
-        engine.obs_record = true;
+        engine.opts.shards = 4;
+        engine.opts.threads = threads;
+        engine.opts.obs_record = true;
         let mut tcfg = TrafficConfig::default();
         tcfg.rate = 20_000.0;
         tcfg.trace_sample = 5;
@@ -197,11 +197,11 @@ fn traced_lossy_traffic_run_is_reproducible_and_orphan_free() {
     let run = |threads: usize| -> (ArtifactSet, String) {
         let mut engine =
             ScenarioEngine::new(obs_spec(1000.0), 5).unwrap();
-        engine.threads = threads;
-        engine.transport = Some(TransportKind::Sim);
-        engine.loss_rate = 0.05;
-        engine.obs_record = true;
-        engine.trace_sample = 1;
+        engine.opts.threads = threads;
+        engine.opts.transport = Some(TransportKind::Sim);
+        engine.opts.loss_rate = 0.05;
+        engine.opts.obs_record = true;
+        engine.opts.trace_sample = 1;
         let mut tcfg = TrafficConfig::default();
         tcfg.rate = 20_000.0;
         tcfg.trace_sample = 3;

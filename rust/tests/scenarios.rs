@@ -297,7 +297,7 @@ fn hybrid_oracle_brackets_the_catalog_on_static_and_sharded_paths() {
     };
     for spec in catalog() {
         let mut engine = ScenarioEngine::new(spec.clone(), 5).unwrap();
-        engine.certify = hybrid;
+        engine.opts.certify = hybrid;
         let rep = engine.run(Topology::Chord).unwrap();
         check_invariants(&rep, spec.nodes, spec.horizon);
         assert!(
@@ -311,8 +311,8 @@ fn hybrid_oracle_brackets_the_catalog_on_static_and_sharded_paths() {
     let spec = find("anchor-storm").unwrap();
     let (nodes, horizon) = (spec.nodes, spec.horizon);
     let mut engine = ScenarioEngine::new(spec, 5).unwrap();
-    engine.shards = 4;
-    engine.certify = hybrid;
+    engine.opts.shards = 4;
+    engine.opts.certify = hybrid;
     let rep = engine.run(Topology::DgroSharded).unwrap();
     check_invariants(&rep, nodes, horizon);
     assert!(rep.metrics.counter("eval.oracle_checks") > 0);
@@ -348,9 +348,9 @@ fn incremental_static_engine_matches_from_scratch_rebuild() {
     };
     for &threads in &[1usize, 4] {
         let mut inc = ScenarioEngine::new(spec.clone(), 13).unwrap();
-        inc.threads = threads;
+        inc.opts.threads = threads;
         let mut scratch = ScenarioEngine::new(spec.clone(), 13).unwrap();
-        scratch.incremental = false;
+        scratch.opts.incremental = false;
         for topo in [Topology::Chord, Topology::RandomKRing] {
             let a = inc.run(topo).unwrap();
             let b = scratch.run(topo).unwrap();

@@ -32,8 +32,8 @@ fn parity_spec() -> ScenarioSpec {
 
 fn run_sharded(shards: usize, seed: u64, threads: usize) -> ScenarioReport {
     let mut engine = ScenarioEngine::new(parity_spec(), seed).unwrap();
-    engine.shards = shards;
-    engine.threads = threads;
+    engine.opts.shards = shards;
+    engine.opts.threads = threads;
     engine.run(Topology::DgroSharded).unwrap()
 }
 
@@ -93,9 +93,9 @@ fn run_certified(
 ) -> ScenarioReport {
     let spec = dgro::scenario::find("anchor-storm").unwrap();
     let mut engine = ScenarioEngine::new(spec, 11).unwrap();
-    engine.shards = shards;
-    engine.threads = threads;
-    engine.certify = certify;
+    engine.opts.shards = shards;
+    engine.opts.threads = threads;
+    engine.opts.certify = certify;
     engine.run(Topology::DgroSharded).unwrap()
 }
 

@@ -41,13 +41,13 @@ fn run(
     lossy: bool,
 ) -> (String, String, TrafficReport) {
     let mut engine = ScenarioEngine::new(mini_spec(), 21).unwrap();
-    engine.threads = threads;
+    engine.opts.threads = threads;
     if topology == Topology::DgroSharded {
-        engine.shards = 2;
+        engine.opts.shards = 2;
     }
     if lossy {
-        engine.transport = Some(TransportKind::Sim);
-        engine.loss_rate = 0.05;
+        engine.opts.transport = Some(TransportKind::Sim);
+        engine.opts.loss_rate = 0.05;
     }
     let (rep, traffic, _obs) =
         engine.run_traffic(topology, tcfg()).unwrap();
@@ -57,7 +57,7 @@ fn run(
 #[test]
 fn traffic_rides_the_timeline_and_aligns_periods() {
     let mut engine = ScenarioEngine::new(mini_spec(), 21).unwrap();
-    engine.threads = 2;
+    engine.opts.threads = 2;
     let (rep, traffic, obs) =
         engine.run_traffic(Topology::Dgro, tcfg()).unwrap();
     assert_eq!(
@@ -135,8 +135,8 @@ fn lossy_sim_transport_stays_byte_deterministic() {
 #[test]
 fn hybrid_certification_composes_with_traffic() {
     let mut engine = ScenarioEngine::new(mini_spec(), 21).unwrap();
-    engine.threads = 2;
-    engine.certify = CertifyConfig {
+    engine.opts.threads = 2;
+    engine.opts.certify = CertifyConfig {
         mode: CertifyMode::Hybrid,
         budget: 8,
         oracle_every: 4,
